@@ -1,0 +1,66 @@
+//! Domain example: long-sequence reasoning on the ListOps task (the
+//! hierarchical workload the paper's LRA evaluation leads with).
+//!
+//! Trains the same 2-layer transformer with standard attention and with
+//! MiTA, then compares accuracy and wall-clock — the paper's core claim
+//! (Tab. 5) in one runnable binary. Also demonstrates the data substrate:
+//! prints a decoded sample expression with its ground-truth value.
+//!
+//! Run: `make artifacts && cargo run --release --example lra_listops [-- steps]`
+
+use anyhow::Result;
+use mita::data::lra;
+use mita::data::Split;
+use mita::harness::train_bundle;
+use mita::runtime::Runtime;
+
+fn decode_listops(tokens: &[i32]) -> String {
+    let mut s = String::new();
+    for &t in tokens {
+        match t {
+            0..=9 => s.push_str(&format!("{t} ")),
+            10 => s.push_str("[MAX "),
+            11 => s.push_str("[MIN "),
+            12 => s.push_str("[MED "),
+            13 => s.push_str("[SM "),
+            14 => s.push_str("] "),
+            _ => {}
+        }
+    }
+    s
+}
+
+fn main() -> Result<()> {
+    let steps = std::env::args().nth(1).map(|s| s.parse::<usize>()).transpose()?;
+
+    // Show what the task looks like (skip degenerate single-leaf samples).
+    let task = lra::by_name("listops", 256, 16, 1);
+    let (tokens, label) = (0..)
+        .map(|i| task.sample(Split::Train, i))
+        .find(|(t, _)| t.iter().filter(|&&x| x != 15).count() > 20)
+        .unwrap();
+    let expr = decode_listops(&tokens);
+    println!("sample expression (value = {label}):");
+    println!("  {}…\n", &expr[..expr.len().min(120)]);
+
+    let rt = Runtime::load("artifacts")?;
+    let mut results = Vec::new();
+    for method in ["standard", "mita"] {
+        let bundle = format!("t5_listops_{method}");
+        let (_t, oc) = train_bundle(&rt, &bundle, 0, steps, None)?;
+        println!(
+            "{method:8}  acc={:.3}  step={:.0}ms  total={:.1}s",
+            oc.eval.accuracy,
+            oc.mean_step_secs * 1e3,
+            oc.train_secs
+        );
+        results.push((method, oc));
+    }
+    let (std_oc, mita_oc) = (&results[0].1, &results[1].1);
+    println!(
+        "\nMiTA speedup: ×{:.2} wall-clock, accuracy Δ {:+.1} pts",
+        std_oc.mean_step_secs / mita_oc.mean_step_secs,
+        (mita_oc.eval.accuracy - std_oc.eval.accuracy) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the AOT runtime, trains the tiny `quickstart` bundle for a few
+//! steps, evaluates it, and classifies one image through the `predict`
+//! artifact — all from Rust, no Python on the path.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::Result;
+use mita::coordinator::Trainer;
+use mita::data::{BatchSource, Split};
+use mita::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::load("artifacts")?;
+    let bundle = "quickstart";
+    let spec = rt.manifest().bundle(bundle)?.clone();
+    println!(
+        "model: {} depth={} dim={} attention={} (m={}, k={})",
+        spec.model.task,
+        spec.model.depth,
+        spec.model.dim,
+        spec.model.attention.kind,
+        spec.model.attention.m,
+        spec.model.attention.k
+    );
+
+    // 1) Train for a handful of steps.
+    let source = BatchSource::for_bundle(&spec)?;
+    let mut trainer = Trainer::new(&rt, bundle, 0)?;
+    trainer.train(&source, 30, 10)?;
+    let ev = trainer.eval(&source, 4)?;
+    println!("after 30 steps: eval_loss={:.3} eval_acc={:.3}", ev.loss, ev.accuracy);
+
+    // 2) Single-batch prediction through the predict artifact.
+    let (x, y) = source.batch(Split::Val, 0)?;
+    let predict = rt.manifest().bundle_artifact(bundle, "predict")?;
+    let mut inputs = trainer.params()?;
+    inputs.push(x);
+    let outs = rt.run(predict, &inputs)?;
+    let preds = outs[0].argmax_last()?;
+    let correct = preds
+        .as_i32()?
+        .iter()
+        .zip(y.as_i32()?)
+        .filter(|(p, t)| p == t)
+        .count();
+    println!("predict batch: {}/{} correct", correct, y.len());
+
+    let stats = rt.stats();
+    println!(
+        "runtime: {} compiles ({:.2}s), {} executions ({:.3}s total)",
+        stats.compiles, stats.compile_secs, stats.executions, stats.execute_secs
+    );
+    Ok(())
+}

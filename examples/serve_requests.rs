@@ -1,0 +1,55 @@
+//! Serving example: run the dynamic-batching coordinator against a compiled
+//! `predict` artifact under open-loop load, then print the latency/
+//! throughput report — the Fig. 5 measurement path in miniature.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_requests
+//!       [-- <bundle> [requests] [rate]]`   (default: f5_mita_n1024)
+
+use anyhow::Result;
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::server::{serve, ServeConfig};
+use mita::coordinator::Engine;
+use mita::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bundle = args.first().map(|s| s.as_str()).unwrap_or("f5_mita_n1024").to_string();
+    let requests = args.get(1).map(|s| s.parse::<usize>()).transpose()?.unwrap_or(64);
+    let rate = args.get(2).map(|s| s.parse::<f64>()).transpose()?.unwrap_or(0.0);
+
+    let rt = Runtime::load("artifacts")?;
+    let spec = rt.manifest().bundle(&bundle)?.clone();
+    let predict = rt.manifest().bundle_artifact(&bundle, "predict")?.to_string();
+    let init = rt.manifest().bundle_artifact(&bundle, "init")?.to_string();
+    drop(rt);
+
+    println!(
+        "serving {bundle}: N={} attention={} batch={} ({} requests, rate={})",
+        spec.model.num_tokens(),
+        spec.model.attention.kind,
+        spec.train.batch_size,
+        requests,
+        if rate > 0.0 { format!("{rate}/s") } else { "closed-loop".into() }
+    );
+
+    let engine = Engine::spawn("artifacts".into(), vec![predict])?;
+    engine.handle().bind_init(&bundle, &init, 0, spec.param_count())?;
+    // Sweep two batching policies to show the latency/throughput trade-off.
+    for max_wait_ms in [1u64, 10u64] {
+        let cfg = ServeConfig {
+            bundle: bundle.clone(),
+            binding: bundle.clone(),
+            requests,
+            rate,
+            queue_cap: requests.max(64),
+            policy: BatchPolicy {
+                max_batch: spec.train.batch_size,
+                max_wait: std::time::Duration::from_millis(max_wait_ms),
+            },
+        };
+        let report = serve(&engine.handle(), &spec, &bundle, &cfg)?;
+        println!("max_wait={max_wait_ms}ms  {}", report.row());
+    }
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! End-to-end training driver (the DESIGN.md validation workload): train a
+//! MiTA transformer classifier on the synthetic image corpus for its full
+//! step budget, log the loss curve, evaluate, and save a checkpoint that
+//! the figure/table harness reuses.
+//!
+//! Run: `make artifacts && cargo run --release --example train_classifier
+//!       [-- <bundle> [steps]]`   (default bundle: t2_mita)
+
+use anyhow::Result;
+use mita::data::BatchSource;
+use mita::harness::{checkpoint_path, train_bundle};
+use mita::report::ascii_chart;
+use mita::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let bundle = args.first().map(|s| s.as_str()).unwrap_or("t2_mita").to_string();
+    let steps = args.get(1).map(|s| s.parse::<usize>()).transpose()?;
+
+    let rt = Runtime::load("artifacts")?;
+    let spec = rt.manifest().bundle(&bundle)?.clone();
+    println!(
+        "training {bundle}: {} tokens, attention={} m={} k={}, batch={} lr={}",
+        spec.model.num_tokens(),
+        spec.model.attention.kind,
+        spec.model.attention.m,
+        spec.model.attention.k,
+        spec.train.batch_size,
+        spec.train.lr
+    );
+
+    let (trainer, outcome) = train_bundle(&rt, &bundle, 0, steps, None)?;
+
+    println!("\nloss curve:");
+    println!("{}", ascii_chart(&[(&bundle, outcome.loss_curve.clone())], 64, 14));
+    println!(
+        "steps={} tail_loss={:.4} eval_loss={:.4} eval_acc={:.4} mean_step={:.1}ms total={:.1}s",
+        outcome.steps,
+        outcome.tail_loss,
+        outcome.eval.loss,
+        outcome.eval.accuracy,
+        outcome.mean_step_secs * 1e3,
+        outcome.train_secs
+    );
+
+    // Throughput accounting (examples/sec through the full train step).
+    let examples = outcome.steps * spec.train.batch_size;
+    println!(
+        "throughput: {:.1} examples/s ({} examples in {:.1}s)",
+        examples as f64 / outcome.train_secs,
+        examples,
+        outcome.train_secs
+    );
+
+    let ckpt = checkpoint_path(&bundle);
+    trainer.save_checkpoint(&ckpt)?;
+    println!("checkpoint: {}", ckpt.display());
+
+    // Baseline comparison on a held-out batch: majority-class accuracy.
+    let source = BatchSource::for_bundle(&spec)?;
+    let (_x, y) = source.batch(mita::data::Split::Val, 99)?;
+    let ys = y.as_i32()?;
+    let mut counts = std::collections::HashMap::new();
+    for &v in ys {
+        *counts.entry(v).or_insert(0usize) += 1;
+    }
+    let majority = counts.values().max().copied().unwrap_or(0) as f64 / ys.len() as f64;
+    println!(
+        "sanity: model acc {:.3} vs majority-class baseline {:.3}",
+        outcome.eval.accuracy, majority
+    );
+    Ok(())
+}

@@ -1,0 +1,294 @@
+"""AOT pipeline: lower every experiment bundle to HLO text + manifest.json.
+
+This is the only place Python runs — once, at build time (`make artifacts`).
+The Rust coordinator consumes artifacts/{name}.hlo.txt via the PJRT C API
+and artifacts/manifest.json for all shape/layout metadata.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every computation is exposed with a *flat* tensor signature so Rust can
+thread plain buffer lists:
+
+  init:        (seed i32[])                  -> P params + P mu + P nu + step
+  train_step:  (P params, P mu, P nu, step, x, y)
+                                             -> P params' + P mu' + P nu'
+                                                + step' + loss + correct
+  eval_step:   (P params, x, y)              -> loss + correct   (cls/lra)
+                                             -> loss + confusion (seg)
+  predict:     (P params, x)                 -> logits
+  analysis:    (P params, x)                 -> logits + topk_idx + assign
+
+P = number of parameter leaves; the flattened order (jax tree order) is
+recorded per-bundle in the manifest as `param_layout`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import re
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import ModelConfig, TrainConfig, config_to_dict
+from .specs import Bundle, all_bundles
+
+MANIFEST_VERSION = 2
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission.
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("uint32"): "u32",
+    jnp.dtype("bfloat16"): "bf16",
+}
+
+
+def _tensor_spec(x) -> Dict:
+    return {"shape": list(x.shape), "dtype": _DTYPE_NAMES[jnp.dtype(x.dtype)]}
+
+
+# ---------------------------------------------------------------------------
+# Flat-signature wrappers around model.py.
+# ---------------------------------------------------------------------------
+
+
+def param_template(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no computation)."""
+    return jax.eval_shape(lambda s: model.init_params(s, cfg), jnp.zeros((), jnp.int32))
+
+
+def param_layout(cfg: ModelConfig) -> List[Dict]:
+    tmpl = param_template(cfg)
+    leaves = jax.tree_util.tree_flatten_with_path(tmpl)[0]
+    out = []
+    for path, leaf in leaves:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append({"path": name, **_tensor_spec(leaf)})
+    return out
+
+
+def _batch_specs(cfg: ModelConfig, batch: int):
+    """(x_spec, y_spec) ShapeDtypeStructs for one batch."""
+    if cfg.task == "lra":
+        x = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+        y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    elif cfg.task == "seg_image":
+        h, w = cfg.image_hw
+        x = jax.ShapeDtypeStruct((batch, h, w, cfg.channels), jnp.float32)
+        y = jax.ShapeDtypeStruct((batch, cfg.num_tokens), jnp.int32)
+    else:
+        h, w = cfg.image_hw
+        x = jax.ShapeDtypeStruct((batch, h, w, cfg.channels), jnp.float32)
+        y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return x, y
+
+
+def build_fn(bundle: Bundle, which: str):
+    """Return (flat_fn, example_args) for one computation of a bundle."""
+    cfg, tcfg = bundle.model, bundle.train
+    tmpl = param_template(cfg)
+    flat_t, tdef = jax.tree_util.tree_flatten(tmpl)
+    p_n = len(flat_t)
+    x_spec, y_spec = _batch_specs(cfg, tcfg.batch_size)
+    step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if which == "init":
+
+        def fn(seed):
+            params = model.init_params(seed, cfg)
+            opt = model.init_opt_state(params)
+            return tuple(
+                jax.tree_util.tree_leaves(params)
+                + jax.tree_util.tree_leaves(opt["mu"])
+                + jax.tree_util.tree_leaves(opt["nu"])
+                + [opt["step"]]
+            )
+
+        return fn, [jax.ShapeDtypeStruct((), jnp.int32)]
+
+    if which == "train_step":
+        step_impl = model.train_step_seg if cfg.task == "seg_image" else model.train_step
+
+        def fn(*flat):
+            params = jax.tree_util.tree_unflatten(tdef, flat[:p_n])
+            mu = jax.tree_util.tree_unflatten(tdef, flat[p_n : 2 * p_n])
+            nu = jax.tree_util.tree_unflatten(tdef, flat[2 * p_n : 3 * p_n])
+            step = flat[3 * p_n]
+            x, y = flat[3 * p_n + 1], flat[3 * p_n + 2]
+            opt = {"mu": mu, "nu": nu, "step": step}
+            params2, opt2, loss, correct = step_impl(params, opt, x, y, cfg, tcfg)
+            return tuple(
+                jax.tree_util.tree_leaves(params2)
+                + jax.tree_util.tree_leaves(opt2["mu"])
+                + jax.tree_util.tree_leaves(opt2["nu"])
+                + [opt2["step"], loss, jnp.asarray(correct, jnp.int32)]
+            )
+
+        args = list(flat_t) * 3 + [step_spec, x_spec, y_spec]
+        return fn, args
+
+    if which == "eval_step":
+        eval_impl = model.eval_step_seg if cfg.task == "seg_image" else model.eval_step
+
+        def fn(*flat):
+            params = jax.tree_util.tree_unflatten(tdef, flat[:p_n])
+            x, y = flat[p_n], flat[p_n + 1]
+            loss, second = eval_impl(params, x, y, cfg)
+            if cfg.task == "seg_image":
+                return (loss, second)  # confusion f32[C, C]
+            return (loss, jnp.asarray(second, jnp.int32))
+
+        return fn, list(flat_t) + [x_spec, y_spec]
+
+    if which == "predict":
+
+        def fn(*flat):
+            params = jax.tree_util.tree_unflatten(tdef, flat[:p_n])
+            return (model.forward(params, flat[p_n], cfg),)
+
+        return fn, list(flat_t) + [x_spec]
+
+    if which == "analysis":
+        x_one = jax.ShapeDtypeStruct(x_spec.shape[1:], x_spec.dtype)
+
+        def fn(*flat):
+            params = jax.tree_util.tree_unflatten(tdef, flat[:p_n])
+            logits, idx, assign = model.analysis_forward(params, flat[p_n], cfg)
+            return (logits, idx, assign)
+
+        return fn, list(flat_t) + [x_one]
+
+    raise ValueError(f"unknown computation {which!r}")
+
+
+# ---------------------------------------------------------------------------
+# Emission + manifest.
+# ---------------------------------------------------------------------------
+
+
+def spec_hash(bundle: Bundle, which: str) -> str:
+    blob = json.dumps(
+        {
+            "model": config_to_dict(bundle.model),
+            "train": config_to_dict(bundle.train),
+            "which": which,
+            "jax": jax.__version__,
+            "v": MANIFEST_VERSION,
+        },
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def emit_bundle(bundle: Bundle, out_dir: Path, manifest: Dict, force: bool = False) -> int:
+    """Lower all computations of a bundle; returns number actually lowered."""
+    lowered_count = 0
+    arts = manifest.setdefault("artifacts", {})
+    bundles = manifest.setdefault("bundles", {})
+
+    bentry = {
+        "model": config_to_dict(bundle.model),
+        "train": config_to_dict(bundle.train),
+        "meta": bundle.meta,
+        "param_layout": param_layout(bundle.model),
+        "artifacts": {},
+    }
+
+    for which in bundle.emit:
+        name = f"{bundle.name}.{which}"
+        fname = f"{name}.hlo.txt"
+        h = spec_hash(bundle, which)
+        prev = arts.get(name)
+        bentry["artifacts"][which] = name
+        if not force and prev and prev.get("spec_hash") == h and (out_dir / fname).exists():
+            continue
+
+        t0 = time.time()
+        fn, args = build_fn(bundle, which)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        (out_dir / fname).write_text(text)
+
+        out_shapes = jax.eval_shape(fn, *args)
+        arts[name] = {
+            "file": fname,
+            "spec_hash": h,
+            "inputs": [_tensor_spec(a) for a in args],
+            "outputs": [_tensor_spec(o) for o in out_shapes],
+        }
+        lowered_count += 1
+        print(f"  lowered {name}  ({time.time() - t0:.1f}s, {len(text) / 1e6:.2f} MB)")
+
+    bundles[bundle.name] = bentry
+    return lowered_count
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="regex filter on bundle names")
+    ap.add_argument("--list", action="store_true", help="list bundles and exit")
+    ap.add_argument("--force", action="store_true", help="re-lower even if cached")
+    args = ap.parse_args(argv)
+
+    bundles = all_bundles()
+    if args.only:
+        rx = re.compile(args.only)
+        bundles = [b for b in bundles if rx.search(b.name)]
+
+    if args.list:
+        for b in bundles:
+            print(f"{b.name:28s} {b.model.task:10s} emit={','.join(b.emit)}")
+        print(f"{len(bundles)} bundles")
+        return
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest_path = out_dir / "manifest.json"
+    manifest = {"version": MANIFEST_VERSION}
+    if manifest_path.exists():
+        try:
+            old = json.loads(manifest_path.read_text())
+            if old.get("version") == MANIFEST_VERSION:
+                manifest = old
+        except json.JSONDecodeError:
+            pass
+
+    total = 0
+    t0 = time.time()
+    for i, b in enumerate(bundles):
+        print(f"[{i + 1}/{len(bundles)}] {b.name}")
+        total += emit_bundle(b, out_dir, manifest, force=args.force)
+        # Persist incrementally so an interrupted run resumes cleanly.
+        manifest_path.write_text(json.dumps(manifest, indent=1))
+    print(f"done: {total} computations lowered in {time.time() - t0:.0f}s -> {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

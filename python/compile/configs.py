@@ -1,0 +1,143 @@
+"""Shared configuration dataclasses for the MiTA compile path.
+
+These mirror the Rust-side `config` module (rust/src/config/): the AOT
+pipeline (aot.py) reads experiment specs, instantiates these configs, and
+records them in artifacts/manifest.json so the Rust coordinator knows the
+exact shapes/layouts of every compiled computation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+# Attention mechanism kinds. `mita_route` / `mita_compress` are the paper's
+# route-only / compress-only ablations (Tab. 6); `agent` is Agent Attention
+# (= MiTA compress-only with softmax routing weights); `linear` is
+# kernelized linear attention (Katharopoulos et al., 2020).
+ATTENTION_KINDS = (
+    "standard",
+    "mita",
+    "mita_route",
+    "mita_compress",
+    "agent",
+    "linear",
+)
+
+# Landmark-extraction strategies ablated in Tab. 6.
+LANDMARK_MODES = ("pool2d", "pool1d", "random", "learned")
+
+
+@dataclass(frozen=True)
+class AttentionConfig:
+    """Configuration of one attention mechanism instance.
+
+    Attributes:
+      kind: one of ATTENTION_KINDS.
+      m: number of landmark queries / fast-weight experts.
+      k: key-value pairs gathered per expert (expert width).
+      s: routed experts per query (paper uses s=1 throughout).
+      landmark: landmark extraction mode (Tab. 6 ablation).
+      cap_factor: per-expert query capacity multiplier for the static-shape
+        kernel path; capacity = ceil(N / m) * cap_factor. Queries overflowing
+        an expert's capacity fall back to the shared expert only.
+      use_pallas: route the forward through the Pallas kernel (inference
+        artifacts) instead of the fused-XLA reference math (training
+        artifacts — Pallas has no autodiff rule).
+    """
+
+    kind: str = "mita"
+    m: int = 25
+    k: int = 25
+    s: int = 1
+    landmark: str = "pool2d"
+    cap_factor: int = 2
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        assert self.kind in ATTENTION_KINDS, self.kind
+        assert self.landmark in LANDMARK_MODES, self.landmark
+        assert self.s >= 1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A transformer model for one of the paper's task families.
+
+    task:
+      "cls_image"  — ViT classifier over synthetic images (Tabs. 2/3/6/7).
+      "seg_image"  — ViT + linear seg head, per-patch labels (Tab. 4).
+      "lra"        — token-sequence classifier (Tab. 5 / Fig. 5).
+    """
+
+    task: str = "cls_image"
+    depth: int = 4
+    dim: int = 128
+    heads: int = 4
+    mlp_ratio: float = 4.0
+    num_classes: int = 10
+    attention: AttentionConfig = field(default_factory=AttentionConfig)
+    # image tasks
+    image_hw: Tuple[int, int] = (56, 56)
+    patch: int = 4
+    channels: int = 3
+    # lra tasks
+    seq_len: int = 1024
+    vocab: int = 32
+    pool: str = "mean"  # lra classifier pooling: "mean" | "cls"
+    # extra components from Tab. 2 footnotes
+    dwc: bool = False  # depth-wise conv on values (DWC variant)
+    gate: bool = False  # data-dependent output gating (Gate variant)
+
+    @property
+    def grid_hw(self) -> Tuple[int, int]:
+        return (self.image_hw[0] // self.patch, self.image_hw[1] // self.patch)
+
+    @property
+    def num_tokens(self) -> int:
+        if self.task == "lra":
+            return self.seq_len
+        gh, gw = self.grid_hw
+        return gh * gw
+
+    def __post_init__(self):
+        assert self.task in ("cls_image", "seg_image", "lra"), self.task
+        assert self.dim % self.heads == 0
+        if self.task != "lra":
+            assert self.image_hw[0] % self.patch == 0
+            assert self.image_hw[1] % self.patch == 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    """AdamW training hyperparameters baked into the train_step artifact."""
+
+    lr: float = 1e-3
+    weight_decay: float = 0.05
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    warmup_steps: int = 50
+    total_steps: int = 500  # cosine decay horizon
+    label_smoothing: float = 0.0
+    grad_clip: float = 1.0
+    batch_size: int = 32
+
+
+def config_to_dict(cfg) -> dict:
+    """Recursively convert a (nested) dataclass to a JSON-safe dict."""
+    return dataclasses.asdict(cfg)
+
+
+def config_id(model: ModelConfig, train: Optional[TrainConfig] = None) -> str:
+    """Stable short identifier for a config, used in artifact file names."""
+    import hashlib
+
+    blob = json.dumps(
+        {"model": config_to_dict(model), "train": config_to_dict(train) if train else None},
+        sort_keys=True,
+    )
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]

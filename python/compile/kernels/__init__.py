@@ -1,0 +1,8 @@
+"""L1 — Pallas kernels for MiTA and the standard-attention baseline.
+
+`ref` holds the pure-jnp oracles (also the differentiable training path);
+`mita` the MiTA kernel + dispatcher; `attention` the FlashAttention-style
+tiled baseline. Everything lowers with interpret=True (CPU PJRT target).
+"""
+
+from . import attention, mita, ref  # noqa: F401

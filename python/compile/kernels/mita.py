@@ -1,0 +1,314 @@
+"""Mixture-of-Top-k Attention (MiTA) — Pallas kernel + host wrapper.
+
+This is the TPU re-think of the paper's Algorithm 1 (which targets GPU
+varlen FlashAttention with ``cu_seqlens``):
+
+  * the per-expert gather (Alg. 1 line 7) is hoisted out of the kernel to
+    XLA ``take``, so the kernel streams *dense* ``[m, k, d]`` expert tensors
+    HBM→VMEM via BlockSpec (no random access inside the kernel);
+  * routing (line 13) sorts queries by expert assignment and packs them into
+    a static ``[m, cap, d]`` tensor (cap = per-expert query capacity), which
+    keeps the Pallas grid static — the TPU substitute for varlen batches;
+  * the shared-expert and routed-expert branches are fused inside one grid
+    step with the online-softmax recurrence (line 16), so each query sees a
+    single softmax over the concatenation [Q̃ | K^(e(q))] exactly as Eq. (10);
+  * queries that overflow their expert's capacity fall back to the
+    shared-expert-only output (computed densely, O(N·m)); with the default
+    cap_factor=2 the overflow rate is negligible (measured in tests) and the
+    kernel is *exact* vs kernels.ref.mita_attention_ref whenever no query
+    overflows.
+
+Only s=1 (one routed expert per query, the paper's setting) is supported on
+the kernel path; the reference implements general s.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _mita_kernel(qs_ref, ke_ref, ve_ref, qt_ref, vt_ref, o_ref, *, scale):
+    """One (expert, q_block) grid step.
+
+    qs_ref: [1, bq, d]  queries routed to this expert (packed, zero-padded)
+    ke_ref/ve_ref: [1, k, d]  this expert's top-k key/value pairs
+    qt_ref/vt_ref: [m, d]  landmark queries/values (the shared expert)
+    o_ref:  [1, bq, d]
+    """
+    q = qs_ref[0].astype(jnp.float32)  # [bq, d]
+    qt = qt_ref[...].astype(jnp.float32)  # [m, d]
+    vt = vt_ref[...].astype(jnp.float32)
+    ke = ke_ref[0].astype(jnp.float32)  # [k, d]
+    ve = ve_ref[0].astype(jnp.float32)
+
+    # Shared-expert branch: logits over the m landmark keys.
+    s1 = jnp.dot(q, qt.T, preferred_element_type=jnp.float32) * scale  # [bq, m]
+    m1 = s1.max(axis=-1)
+    p1 = jnp.exp(s1 - m1[:, None])
+    acc = jnp.dot(p1, vt, preferred_element_type=jnp.float32)  # [bq, d]
+    den = p1.sum(axis=-1)
+
+    # Routed-expert branch, combined via the online-softmax rescale.
+    s2 = jnp.dot(q, ke.T, preferred_element_type=jnp.float32) * scale  # [bq, k]
+    m2 = jnp.maximum(m1, s2.max(axis=-1))
+    alpha = jnp.exp(m1 - m2)
+    p2 = jnp.exp(s2 - m2[:, None])
+    acc = acc * alpha[:, None] + jnp.dot(p2, ve, preferred_element_type=jnp.float32)
+    den = den * alpha + p2.sum(axis=-1)
+
+    o_ref[0] = (acc / den[:, None]).astype(o_ref.dtype)
+
+
+def _capacity(n: int, m: int, cap_factor: int, block_q: int) -> int:
+    """Per-expert query capacity, rounded up to a block_q multiple."""
+    base = -(-n // m) * cap_factor
+    return -(-base // block_q) * block_q
+
+
+def mita_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_land: jax.Array,
+    kk: int,
+    *,
+    cap_factor: int = 2,
+    block_q: int = 64,
+    return_aux: bool = False,
+):
+    """MiTA for one head via the Pallas kernel. q,k,v: [N, d] -> [N, d].
+
+    q_land: [m, d] landmark queries (already extracted — see
+    ref.extract_landmarks). kk = expert width (top-k).
+    """
+    n, d = q.shape
+    m = q_land.shape[0]
+    scale = 1.0 / (d**0.5)
+    cap = _capacity(n, m, cap_factor, block_q)
+
+    # --- L2 prologue (fused by XLA, outside the kernel) -------------------
+    scores = ref.mita_scores(k, q_land)  # [N, m]
+    v_land = ref.mita_landmark_values(scores, v)  # [m, d]
+    idx = ref.mita_topk_indices(scores, kk)  # [m, kk]
+    ke = jnp.take(k, idx, axis=0)  # [m, kk, d]
+    ve = jnp.take(v, idx, axis=0)
+
+    e = jnp.argmax(q @ q_land.T, axis=-1)  # [N] expert assignment (s=1)
+    order = jnp.argsort(e, stable=True)
+    e_sorted = e[order]
+    counts = jnp.bincount(e, length=m)  # queries per expert
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n) - starts[e_sorted]  # position within expert
+    keep = rank < cap
+    slot = e_sorted * cap + jnp.minimum(rank, cap - 1)  # [N]
+    slot_safe = jnp.where(keep, slot, m * cap)  # overflow -> spare row
+
+    qs = (
+        jnp.zeros((m * cap + 1, d), q.dtype)
+        .at[slot_safe]
+        .set(q[order])[:-1]
+        .reshape(m, cap, d)
+    )
+
+    # --- Pallas kernel over the static (expert, q_block) grid -------------
+    kernel = functools.partial(_mita_kernel, scale=scale)
+    out_packed = pl.pallas_call(
+        kernel,
+        grid=(m, cap // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, kk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, kk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((m, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((m, d), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, cap, d), q.dtype),
+        interpret=True,
+    )(qs, ke, ve, q_land, v_land)
+
+    # --- Scatter back + shared-only fallback for overflow queries ---------
+    out_sorted = out_packed.reshape(m * cap, d)[slot]  # [N, d] (sorted order)
+    shared_only = (
+        jax.nn.softmax((q @ q_land.T) * scale, axis=-1) @ v_land
+    )  # [N, d] in original order
+    picked = jnp.where(keep[:, None], out_sorted, shared_only[order])
+    out = jnp.zeros_like(q).at[order].set(picked)
+
+    if return_aux:
+        overflow = n - keep.sum()
+        return out, {"overflow": overflow, "counts": counts, "idx": idx, "e": e}
+    return out
+
+
+def _mita_kernel_b(qs_ref, ke_ref, ve_ref, qt_ref, vt_ref, o_ref, *, scale):
+    """Batched-grid variant of [`_mita_kernel`]: landmark blocks are [1,m,d]
+    (selected per grid step via index_map `i // m`)."""
+    q = qs_ref[0].astype(jnp.float32)  # [bq, d]
+    qt = qt_ref[0].astype(jnp.float32)  # [m, d]
+    vt = vt_ref[0].astype(jnp.float32)
+    ke = ke_ref[0].astype(jnp.float32)  # [k, d]
+    ve = ve_ref[0].astype(jnp.float32)
+
+    s1 = jnp.dot(q, qt.T, preferred_element_type=jnp.float32) * scale
+    m1 = s1.max(axis=-1)
+    p1 = jnp.exp(s1 - m1[:, None])
+    acc = jnp.dot(p1, vt, preferred_element_type=jnp.float32)
+    den = p1.sum(axis=-1)
+
+    s2 = jnp.dot(q, ke.T, preferred_element_type=jnp.float32) * scale
+    m2 = jnp.maximum(m1, s2.max(axis=-1))
+    alpha = jnp.exp(m1 - m2)
+    p2 = jnp.exp(s2 - m2[:, None])
+    acc = acc * alpha[:, None] + jnp.dot(p2, ve, preferred_element_type=jnp.float32)
+    den = den * alpha + p2.sum(axis=-1)
+
+    o_ref[0] = (acc / den[:, None]).astype(o_ref.dtype)
+
+
+def mita_attention_pallas_b(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_land: jax.Array,
+    kk: int,
+    *,
+    cap_factor: int = 2,
+    block_q: int = 64,
+    return_aux: bool = False,
+):
+    """Batched MiTA Pallas path: q,k,v [G,N,d], q_land [G,m,d] -> [G,N,d].
+
+    Identical math to [`mita_attention_pallas`] but with batch and heads
+    merged into the leading G axis and every gather/scatter expressed as a
+    flat non-batched op — the AOT interchange (xla_extension 0.5.1) rejects
+    gathers with operand_batching_dims, so this path never vmaps them.
+    """
+    g, n, d = q.shape
+    m = q_land.shape[1]
+    scale = 1.0 / (d**0.5)
+    cap = _capacity(n, m, cap_factor, block_q)
+
+    # --- prologue (fused by XLA, outside the kernel) -----------------------
+    scores = ref.mita_scores_b(k, q_land)  # [G, N, m]
+    v_land = ref.mita_landmark_values_b(scores, v)  # [G, m, d]
+    idx = ref.mita_topk_indices_b(scores, kk)  # [G, m, kk]
+    ke = ref.gather_rows(k, idx)  # [G, m, kk, d]
+    ve = ref.gather_rows(v, idx)
+
+    e = jnp.argmax(jnp.einsum("gnd,gmd->gnm", q, q_land), axis=-1)  # [G, N]
+    # Rank within (g, expert) without take_along_axis: one-hot + cumsum.
+    onehot = (e[..., None] == jnp.arange(m)).astype(jnp.int32)  # [G, N, m]
+    cum = jnp.cumsum(onehot, axis=1) - onehot
+    rank = (cum * onehot).sum(axis=-1)  # [G, N]
+    keep = rank < cap
+    slot = jnp.arange(g, dtype=e.dtype)[:, None] * (m * cap) + e * cap + jnp.minimum(rank, cap - 1)
+    slot_safe = jnp.where(keep, slot, g * m * cap)  # overflow -> spare row
+
+    qs = (
+        jnp.zeros((g * m * cap + 1, d), q.dtype)
+        .at[slot_safe.reshape(-1)]
+        .set(q.reshape(-1, d))[:-1]
+        .reshape(g * m, cap, d)
+    )
+
+    kernel = functools.partial(_mita_kernel_b, scale=scale)
+    out_packed = pl.pallas_call(
+        kernel,
+        grid=(g * m, cap // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, kk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, kk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda i, j: (i // m, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda i, j: (i // m, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((g * m, cap, d), q.dtype),
+        interpret=True,
+    )(qs, ke.reshape(g * m, kk, d), ve.reshape(g * m, kk, d), q_land, v_land)
+
+    # --- scatter back + shared-only fallback -------------------------------
+    out_q = out_packed.reshape(g * m * cap, d)[slot.reshape(-1)].reshape(g, n, d)
+    shared_logits = jnp.einsum("gnd,gmd->gnm", q, q_land) * scale
+    shared_only = jnp.einsum("gnm,gmd->gnd", jax.nn.softmax(shared_logits, axis=-1), v_land)
+    out = jnp.where(keep[..., None], out_q, shared_only)
+
+    if return_aux:
+        overflow = (~keep).sum()
+        return out, {"overflow": overflow, "idx": idx, "e": e}
+    return out
+
+
+def mita_attention_b(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_land: jax.Array,
+    kk: int,
+    s: int = 1,
+    *,
+    use_pallas: bool = False,
+    include_shared: bool = True,
+    include_routed: bool = True,
+    cap_factor: int = 2,
+    block_q: int = 64,
+) -> jax.Array:
+    """Batched dispatching entry point used by the L2 model.
+
+    use_pallas=False (training artifacts): exact differentiable reference
+    math, fused by XLA. use_pallas=True (inference/serving artifacts): the
+    batched Pallas kernel path (s=1, shared+routed only).
+    """
+    if use_pallas and include_shared and include_routed and s == 1:
+        return mita_attention_pallas_b(
+            q, k, v, q_land, kk, cap_factor=cap_factor, block_q=block_q
+        )
+    return ref.mita_attention_ref_b(
+        q,
+        k,
+        v,
+        q_land,
+        kk,
+        s=s,
+        include_shared=include_shared,
+        include_routed=include_routed,
+    )
+
+
+def mita_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_land: jax.Array,
+    kk: int,
+    s: int = 1,
+    *,
+    use_pallas: bool = False,
+    include_shared: bool = True,
+    include_routed: bool = True,
+    cap_factor: int = 2,
+    block_q: int = 64,
+) -> jax.Array:
+    """Single-head entry point (tests / reference use)."""
+    if use_pallas and include_shared and include_routed and s == 1:
+        return mita_attention_pallas(
+            q, k, v, q_land, kk, cap_factor=cap_factor, block_q=block_q
+        )
+    return ref.mita_attention_ref(
+        q,
+        k,
+        v,
+        q_land,
+        kk,
+        s=s,
+        include_shared=include_shared,
+        include_routed=include_routed,
+    )

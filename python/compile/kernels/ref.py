@@ -1,0 +1,438 @@
+"""Pure-jnp reference oracles for every attention mechanism in the repo.
+
+These are the *exact* math of the paper, written with plain gathers and a
+single softmax — no capacity limits, no tiling, no Pallas. They serve three
+roles:
+
+  1. correctness oracle for the Pallas kernels (pytest + hypothesis),
+  2. the differentiable path used inside AOT-compiled train steps
+     (Pallas interpret-mode has no autodiff rule),
+  3. the semantics the Rust-side `mita` analysis module mirrors (routing,
+     top-k sets, overlap metrics for Figs. 3/4/8).
+
+All single-head functions take row-major `[N, d]` arrays; multi-head wrappers
+vmap over a leading `[H]` axis and batch wrappers over `[B, H]`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Full (standard) softmax attention — Eq. (1); the N-width fast-weight MLP.
+# ---------------------------------------------------------------------------
+
+
+def softmax_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Standard scaled-dot-product attention. q,k,v: [N, d] -> [N, d]."""
+    d = q.shape[-1]
+    logits = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    return jax.nn.softmax(logits, axis=-1) @ v
+
+
+# ---------------------------------------------------------------------------
+# Linear attention (Katharopoulos et al., 2020) — scaling by compression
+# into a single fast-weight linear layer.
+# ---------------------------------------------------------------------------
+
+
+def _elu1(x: jax.Array) -> jax.Array:
+    return jax.nn.elu(x) + 1.0
+
+
+def linear_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Kernelized linear attention with the elu+1 feature map. [N,d]->[N,d]."""
+    qf, kf = _elu1(q), _elu1(k)
+    kv = kf.T @ v  # [d, d] — the compressed fast weights
+    den = qf @ kf.sum(axis=0)  # [N]
+    return (qf @ kv) / (den[:, None] + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Landmark extraction (Sec. 3.2 + Tab. 6 ablation).
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_pool_matrix(n: int, m: int, dtype=jnp.float32) -> jax.Array:
+    """[m, n] averaging matrix of AdaptiveAvgPool1d(n -> m).
+
+    Element r belongs to window i iff floor(i*n/m) <= r < floor((i+1)*n/m)
+    — PyTorch's adaptive pooling windows (Alg. 1 line 2 uses
+    AdaptiveAvgPool). Built at trace time from static shapes.
+    """
+    assert 1 <= m <= n, (n, m)
+    r = jnp.arange(n)
+    lo = (jnp.arange(m) * n) // m
+    hi = ((jnp.arange(m) + 1) * n) // m
+    mask = (r[None, :] >= lo[:, None]) & (r[None, :] < hi[:, None])
+    mat = mask.astype(dtype)
+    return mat / mat.sum(axis=1, keepdims=True)
+
+
+def landmarks_pool2d(q: jax.Array, grid_hw: Tuple[int, int], m_hw: Tuple[int, int]) -> jax.Array:
+    """2-D adaptive average pooling of queries over the token grid.
+
+    q: [N, d] with N = H*W laid out row-major over the token grid.
+    Returns [m, d] with m = mh*mw (windows need not divide the grid —
+    adaptive windows as in AdaptiveAvgPool2d, e.g. N=196=14², m=25=5²).
+    """
+    h, w = grid_hw
+    mh, mw = m_hw
+    d = q.shape[-1]
+    ph = _adaptive_pool_matrix(h, mh, q.dtype)  # [mh, h]
+    pw = _adaptive_pool_matrix(w, mw, q.dtype)  # [mw, w]
+    x = q.reshape(h, w, d)
+    x = jnp.einsum("ih,hwd->iwd", ph, x)
+    x = jnp.einsum("jw,iwd->ijd", pw, x)
+    return x.reshape(mh * mw, d)
+
+
+def landmarks_pool1d(q: jax.Array, m: int) -> jax.Array:
+    """1-D adaptive average pooling. q: [N, d] -> [m, d]."""
+    p = _adaptive_pool_matrix(q.shape[0], m, q.dtype)
+    return p @ q
+
+
+def landmarks_random(q: jax.Array, m: int, seed: int = 0) -> jax.Array:
+    """Random (but fixed-seed, hence deterministic) query selection."""
+    n = q.shape[0]
+    idx = jax.random.permutation(jax.random.PRNGKey(seed), n)[:m]
+    return q[jnp.sort(idx)]
+
+
+def extract_landmarks(
+    q: jax.Array,
+    mode: str,
+    m: int,
+    grid_hw: Optional[Tuple[int, int]] = None,
+    learned: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Dispatch over the Tab. 6 landmark-extraction strategies."""
+    if mode == "pool2d":
+        assert grid_hw is not None
+        # Factor m into the most-square mh x mw window grid (mh <= mw).
+        mh = int(m**0.5)
+        while m % mh != 0:
+            mh -= 1
+        return landmarks_pool2d(q, grid_hw, (mh, m // mh))
+    if mode == "pool1d":
+        return landmarks_pool1d(q, m)
+    if mode == "random":
+        return landmarks_random(q, m)
+    if mode == "learned":
+        assert learned is not None and learned.shape[0] == m
+        return learned.astype(q.dtype)
+    raise ValueError(f"unknown landmark mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# MiTA internals — Eqs. (5)–(12) / Algorithm 1, exact (no capacity).
+# ---------------------------------------------------------------------------
+
+
+def mita_scores(k: jax.Array, q_land: jax.Array) -> jax.Array:
+    """Landmark scores S = K^T Q̃ / sqrt(d): [N, m] (Alg. 1 line 4)."""
+    d = k.shape[-1]
+    return (k @ q_land.T) / jnp.sqrt(jnp.asarray(d, k.dtype))
+
+
+def _topk_idx(x: jax.Array, kk: int) -> jax.Array:
+    """Indices of the k largest entries per row of x: [..., n] -> [..., k].
+
+    Implemented with argsort (lowers to the HLO `sort` op) instead of
+    jax.lax.top_k: jax >= 0.5 lowers top_k to the dedicated `topk` HLO
+    instruction whose text form (`largest=true`) the pinned xla_extension
+    0.5.1 parser rejects. Sort keeps the AOT interchange parseable.
+
+    The sort input is stop_gradient'ed: index selection is discrete (no
+    useful gradient), and sort's JVP permutes tangents with a batched
+    gather that the pinned interchange cannot express. Gradients still
+    flow through the gathered keys/values, as in MoBA/NSA.
+    """
+    return jnp.argsort(jax.lax.stop_gradient(-x), axis=-1)[..., :kk]
+
+
+def mita_topk_indices(scores: jax.Array, kk: int) -> jax.Array:
+    """Top-k key/value indices per expert (Eq. 7). scores: [N, m] -> [m, k]."""
+    return _topk_idx(scores.T, kk)  # [m, k]
+
+
+def mita_landmark_values(scores: jax.Array, v: jax.Array) -> jax.Array:
+    """Landmark values Ṽ via cross-attention (Eq. 8): ṽ_i = Atten(q̃_i, K, V).
+
+    scores: [N, m] (already scaled), v: [N, d] -> [m, d].
+    """
+    attn = jax.nn.softmax(scores, axis=0)  # softmax over N per landmark
+    return attn.T @ v
+
+
+def mita_routing(q: jax.Array, q_land: jax.Array, s: int = 1) -> jax.Array:
+    """Route each query to its top-s experts by logits Q^T Q̃: [N, s]."""
+    logits = q @ q_land.T  # [N, m]
+    if s == 1:
+        return jnp.argmax(logits, axis=-1)[:, None]
+    return _topk_idx(logits, s)
+
+
+def mita_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_land: jax.Array,
+    kk: int,
+    s: int = 1,
+    include_shared: bool = True,
+    include_routed: bool = True,
+) -> jax.Array:
+    """Exact MiTA (Eq. 10): one softmax over [Q̃ | K^(e_1(q)) | ... ] per query.
+
+    q,k,v: [N, d]; q_land: [m, d]. Returns [N, d].
+
+    include_shared/include_routed select the compress-only / route-only
+    ablations of Tab. 6 (at least one must be set).
+    """
+    assert include_shared or include_routed
+    n, d = q.shape
+    m = q_land.shape[0]
+    scale = jnp.sqrt(jnp.asarray(d, q.dtype))
+
+    scores = mita_scores(k, q_land)  # [N, m]
+    parts_k, parts_v = [], []
+
+    if include_shared:
+        v_land = mita_landmark_values(scores, v)  # [m, d]
+        parts_k.append(jnp.broadcast_to(q_land[None], (n, m, d)))
+        parts_v.append(jnp.broadcast_to(v_land[None], (n, m, d)))
+
+    if include_routed:
+        idx = mita_topk_indices(scores, kk)  # [m, kk]
+        ke = k[idx]  # [m, kk, d]
+        ve = v[idx]
+        e = mita_routing(q, q_land, s)  # [n, s]
+        # Gather each query's s routed experts and flatten: [n, s*kk, d].
+        parts_k.append(ke[e].reshape(n, s * kk, d))
+        parts_v.append(ve[e].reshape(n, s * kk, d))
+
+    k_star = jnp.concatenate(parts_k, axis=1)  # [n, m + s*kk, d]
+    v_star = jnp.concatenate(parts_v, axis=1)
+    logits = jnp.einsum("nd,npd->np", q, k_star) / scale
+    attn = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("np,npd->nd", attn, v_star)
+
+
+def agent_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, q_land: jax.Array
+) -> jax.Array:
+    """Agent Attention (Han et al., 2024): softmax(Q A^T) softmax(A K^T) V.
+
+    Differs from MiTA compress-only in that *both* softmaxes are standard
+    row softmaxes (agent tokens aggregate, then broadcast). [N,d]->[N,d].
+    """
+    d = q.shape[-1]
+    scale = jnp.sqrt(jnp.asarray(d, q.dtype))
+    agg = jax.nn.softmax((q_land @ k.T) / scale, axis=-1) @ v  # [m, d]
+    return jax.nn.softmax((q @ q_land.T) / scale, axis=-1) @ agg
+
+
+# ---------------------------------------------------------------------------
+# Online-softmax combine (Alg. 1 line 16) — reference used by kernel tests.
+# ---------------------------------------------------------------------------
+
+
+def online_softmax_combine(
+    o1: jax.Array, m1: jax.Array, l1: jax.Array, o2: jax.Array, m2: jax.Array, l2: jax.Array
+) -> jax.Array:
+    """Combine two partial attention results (outputs, row maxima, row sums).
+
+    Each (o, m, l) is an *unnormalized* partial softmax-attention over a
+    disjoint key set: o = sum_j exp(s_j - m) v_j, l = sum_j exp(s_j - m),
+    m = max_j s_j. Returns the exact attention output over the union.
+    """
+    mx = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - mx)[..., None]
+    a2 = jnp.exp(m2 - mx)[..., None]
+    num = o1 * a1 + o2 * a2
+    den = l1 * jnp.exp(m1 - mx) + l2 * jnp.exp(m2 - mx)
+    return num / den[..., None]
+
+
+def partial_softmax(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Unnormalized partial attention over one key set (for combine tests)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    mx = s.max(axis=-1)
+    p = jnp.exp(s - mx[:, None])
+    return p @ v, mx, p.sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Batched ("G-flat") implementations.
+#
+# The AOT interchange (xla_extension 0.5.1) cannot convert gathers/scatters
+# with `operand_batching_dims`, which is exactly what jax.vmap produces for
+# fancy indexing. The model therefore never vmaps over gather-bearing code:
+# batch and heads are merged into one leading axis G = B*H and every gather
+# is a *flat* row gather on a reshaped [G*N, d] operand (plain gather, no
+# batching dims). The single-head functions above remain the test oracles.
+# ---------------------------------------------------------------------------
+
+
+def gather_rows(x: jax.Array, idx: jax.Array) -> jax.Array:
+    """Batch-safe row gather: x [G, N, d], idx [G, ...] -> [G, ..., d].
+
+    Flattens to a single non-batched gather (old-HLO friendly).
+    """
+    g, n, d = x.shape
+    offsets = jnp.arange(g, dtype=idx.dtype).reshape((g,) + (1,) * (idx.ndim - 1))
+    flat = x.reshape(g * n, d)
+    return flat[(idx + offsets * n).reshape(-1)].reshape(idx.shape + (d,))
+
+
+def softmax_attention_b(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched standard attention: q,k,v [G, N, d] -> [G, N, d]."""
+    d = q.shape[-1]
+    logits = jnp.einsum("gnd,gpd->gnp", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    return jnp.einsum("gnp,gpd->gnd", jax.nn.softmax(logits, axis=-1), v)
+
+
+def linear_attention_b(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched linear attention: [G, N, d] -> [G, N, d]."""
+    qf, kf = _elu1(q), _elu1(k)
+    kv = jnp.einsum("gnd,gne->gde", kf, v)
+    den = jnp.einsum("gnd,gd->gn", qf, kf.sum(axis=1))
+    return jnp.einsum("gnd,gde->gne", qf, kv) / (den[..., None] + 1e-6)
+
+
+def agent_attention_b(
+    q: jax.Array, k: jax.Array, v: jax.Array, q_land: jax.Array
+) -> jax.Array:
+    """Batched Agent Attention: q,k,v [G,N,d], q_land [G,m,d] -> [G,N,d]."""
+    d = q.shape[-1]
+    scale = jnp.sqrt(jnp.asarray(d, q.dtype))
+    s1 = jnp.einsum("gmd,gnd->gmn", q_land, k) / scale
+    agg = jnp.einsum("gmn,gnd->gmd", jax.nn.softmax(s1, axis=-1), v)
+    s2 = jnp.einsum("gnd,gmd->gnm", q, q_land) / scale
+    return jnp.einsum("gnm,gmd->gnd", jax.nn.softmax(s2, axis=-1), agg)
+
+
+def mita_scores_b(k: jax.Array, q_land: jax.Array) -> jax.Array:
+    """Batched landmark scores: [G, N, m]."""
+    d = k.shape[-1]
+    return jnp.einsum("gnd,gmd->gnm", k, q_land) / jnp.sqrt(jnp.asarray(d, k.dtype))
+
+
+def mita_landmark_values_b(scores: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched landmark values Ṽ: scores [G,N,m], v [G,N,d] -> [G,m,d]."""
+    attn = jax.nn.softmax(scores, axis=1)  # softmax over N
+    return jnp.einsum("gnm,gnd->gmd", attn, v)
+
+
+def mita_topk_indices_b(scores: jax.Array, kk: int) -> jax.Array:
+    """Batched top-k per expert: scores [G,N,m] -> [G,m,kk] (sort-based)."""
+    return _topk_idx(scores.transpose(0, 2, 1), kk)
+
+
+def mita_routing_b(q: jax.Array, q_land: jax.Array, s: int = 1) -> jax.Array:
+    """Batched routing: [G, N, s] expert ids."""
+    logits = jnp.einsum("gnd,gmd->gnm", q, q_land)
+    if s == 1:
+        return jnp.argmax(logits, axis=-1)[..., None]
+    return _topk_idx(logits, s)
+
+
+def mita_attention_ref_b(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_land: jax.Array,
+    kk: int,
+    s: int = 1,
+    include_shared: bool = True,
+    include_routed: bool = True,
+) -> jax.Array:
+    """Batched exact MiTA (Eq. 10): q,k,v [G,N,d], q_land [G,m,d] -> [G,N,d].
+
+    §Perf note: the single softmax over the concatenation [Q̃ | K^(e(q))]
+    is computed as two branches fused by the online-softmax combine rather
+    than materializing the [G, N, m, d] broadcast of the shared expert —
+    the concat form allocates 2·G·N·m·d floats per layer (1 GiB at the
+    Fig. 5 N=4096 scale) for tensors whose contents are pure broadcasts.
+    The combine is exact (tested against the single-head concat oracle).
+    """
+    assert include_shared or include_routed
+    g, n, d = q.shape
+    scale = jnp.sqrt(jnp.asarray(d, q.dtype))
+
+    scores = mita_scores_b(k, q_land)  # [G, N, m]
+
+    acc = None  # unnormalized output, row max, row sum
+    if include_shared:
+        v_land = mita_landmark_values_b(scores, v)  # [G, m, d]
+        s_sh = jnp.einsum("gnd,gmd->gnm", q, q_land) / scale
+        m1 = s_sh.max(axis=-1)
+        p1 = jnp.exp(s_sh - m1[..., None])
+        o1 = jnp.einsum("gnm,gmd->gnd", p1, v_land)
+        acc = (o1, m1, p1.sum(axis=-1))
+
+    if include_routed:
+        idx = mita_topk_indices_b(scores, kk)  # [G, m, kk]
+        ke = gather_rows(k, idx)  # [G, m, kk, d]
+        ve = gather_rows(v, idx)
+        e = mita_routing_b(q, q_land, s)  # [G, n, s]
+        # Gather each query's routed experts: operand rows are experts.
+        ke_q = gather_rows(ke.reshape(g, m_of(q_land), kk * d), e).reshape(g, n, s * kk, d)
+        ve_q = gather_rows(ve.reshape(g, m_of(q_land), kk * d), e).reshape(g, n, s * kk, d)
+        s_rt = jnp.einsum("gnd,gnpd->gnp", q, ke_q) / scale
+        m2 = s_rt.max(axis=-1)
+        p2 = jnp.exp(s_rt - m2[..., None])
+        o2 = jnp.einsum("gnp,gnpd->gnd", p2, ve_q)
+        branch = (o2, m2, p2.sum(axis=-1))
+        if acc is None:
+            acc = branch
+        else:
+            o1, m1, l1 = acc
+            o2, m2, l2 = branch
+            mx = jnp.maximum(m1, m2)
+            a1 = jnp.exp(m1 - mx)[..., None]
+            a2 = jnp.exp(m2 - mx)[..., None]
+            acc = (
+                o1 * a1 + o2 * a2,
+                mx,
+                (l1 * jnp.exp(m1 - mx) + l2 * jnp.exp(m2 - mx)),
+            )
+
+    o, _, l = acc
+    return o / l[..., None]
+
+
+def m_of(q_land: jax.Array) -> int:
+    """Landmark count from a batched [G, m, d] landmark tensor."""
+    return q_land.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# Multi-head wrapper.
+# ---------------------------------------------------------------------------
+
+
+def split_heads(x: jax.Array, heads: int) -> jax.Array:
+    """[N, D] -> [H, N, D/H]."""
+    n, dd = x.shape
+    return x.reshape(n, heads, dd // heads).transpose(1, 0, 2)
+
+
+def merge_heads(x: jax.Array) -> jax.Array:
+    """[H, N, d] -> [N, H*d]."""
+    h, n, d = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * d)
+
+
+def multihead(fn, q: jax.Array, k: jax.Array, v: jax.Array, heads: int, **kwargs) -> jax.Array:
+    """Apply a single-head attention fn per head. q,k,v: [N, D] -> [N, D]."""
+    qs, ks, vs = (split_heads(x, heads) for x in (q, k, v))
+    out = jax.vmap(lambda a, b, c: fn(a, b, c, **kwargs))(qs, ks, vs)
+    return merge_heads(out)

@@ -1,0 +1,500 @@
+"""L2 — JAX model zoo: ViT classifier / segmenter and LRA sequence nets.
+
+Pure-functional (params are nested dicts of jnp arrays; no flax/optax — the
+image ships neither). Every computation that Rust needs is expressed as a
+jittable function of flat tensors:
+
+  * ``init_params(seed)``                       — parameter initialization
+  * ``forward(params, x)``                      — logits
+  * ``train_step(params, opt, x, y)``           — AdamW update + metrics
+  * ``eval_step(params, x, y)``                 — loss / correct / confusion
+
+Attention is pluggable via AttentionConfig.kind; all kinds share identical
+parameter shapes (the swap experiments of Fig. 9 / Tab. 7 rely on this),
+except landmark mode "learned" which adds a `landmarks` parameter.
+
+Training artifacts call the differentiable reference math
+(kernels.ref / kernels.mita with use_pallas=False); inference artifacts may
+route through the Pallas kernel (use_pallas=True).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import AttentionConfig, ModelConfig, TrainConfig
+from .kernels import attention as attn_kernel
+from .kernels import mita as mita_kernel
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization.
+# ---------------------------------------------------------------------------
+
+
+def _init_linear(key, din: int, dout: int, scale: float | None = None) -> Dict:
+    scale = scale if scale is not None else (2.0 / (din + dout)) ** 0.5
+    return {
+        "w": jax.random.normal(key, (din, dout), jnp.float32) * scale,
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def _init_layernorm(dim: int) -> Dict:
+    return {"g": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def _init_block(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    dim = cfg.dim
+    hidden = int(dim * cfg.mlp_ratio)
+    p = {
+        "ln1": _init_layernorm(dim),
+        "qkv": _init_linear(ks[0], dim, 3 * dim),
+        "proj": _init_linear(ks[1], dim, dim),
+        "ln2": _init_layernorm(dim),
+        "fc1": _init_linear(ks[2], dim, hidden),
+        "fc2": _init_linear(ks[3], hidden, dim),
+    }
+    if cfg.attention.landmark == "learned":
+        p["landmarks"] = jax.random.normal(ks[4], (cfg.attention.m, dim), jnp.float32) * 0.02
+    if cfg.dwc:
+        # Depth-wise 3x3 (image) / 3 (sequence) conv over values.
+        if cfg.task == "lra":
+            p["dwc"] = jax.random.normal(ks[5], (3, dim), jnp.float32) * 0.1
+        else:
+            p["dwc"] = jax.random.normal(ks[5], (3, 3, dim), jnp.float32) * 0.1
+    if cfg.gate:
+        p["gate"] = _init_linear(ks[6], dim, dim, scale=0.02)
+    return p
+
+
+def init_params(seed: jax.Array, cfg: ModelConfig) -> Dict:
+    """Initialize all model parameters from an int32 seed scalar (jittable)."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, cfg.depth + 4)
+    n = cfg.num_tokens
+    dim = cfg.dim
+    params: Dict = {
+        "blocks": {f"{i:02d}": _init_block(ks[i], cfg) for i in range(cfg.depth)},
+        "ln_f": _init_layernorm(dim),
+        "pos": jax.random.normal(ks[cfg.depth], (n, dim), jnp.float32) * 0.02,
+        "head": _init_linear(ks[cfg.depth + 1], dim, cfg.num_classes),
+    }
+    if cfg.task == "lra":
+        params["embed"] = jax.random.normal(ks[cfg.depth + 2], (cfg.vocab, dim), jnp.float32) * 0.02
+    else:
+        pdim = cfg.patch * cfg.patch * cfg.channels
+        params["patch"] = _init_linear(ks[cfg.depth + 2], pdim, dim)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces.
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(p: Dict, x: jax.Array) -> jax.Array:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def _linear(p: Dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]
+
+
+def _dwc(p: Dict, v: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Depth-wise conv over values on the token grid (Tab. 2 DWC variant).
+
+    v: [B, N, dim] -> [B, N, dim].
+    """
+    dim = cfg.dim
+    b = v.shape[0]
+    if cfg.task == "lra":
+        out = jax.lax.conv_general_dilated(
+            v,
+            p["dwc"][:, None, :],  # [3, 1, dim]
+            window_strides=(1,),
+            padding="SAME",
+            dimension_numbers=("NHC", "HIO", "NHC"),
+            feature_group_count=dim,
+        )
+        return out
+    gh, gw = cfg.grid_hw
+    x = v.reshape(b, gh, gw, dim)
+    out = jax.lax.conv_general_dilated(
+        x,
+        p["dwc"][:, :, None, :],  # [3, 3, 1, dim]
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=dim,
+    )
+    return out.reshape(b, gh * gw, dim)
+
+
+def _split_heads_b(x: jax.Array, heads: int) -> jax.Array:
+    """[B, N, D] -> [B*H, N, D/H] (the G-flat layout; see kernels/ref.py)."""
+    b, n, dd = x.shape
+    return x.reshape(b, n, heads, dd // heads).transpose(0, 2, 1, 3).reshape(b * heads, n, dd // heads)
+
+
+def _merge_heads_b(x: jax.Array, batch: int) -> jax.Array:
+    """[B*H, N, d] -> [B, N, H*d]."""
+    g, n, d = x.shape
+    heads = g // batch
+    return x.reshape(batch, heads, n, d).transpose(0, 2, 1, 3).reshape(batch, n, heads * d)
+
+
+def _head_landmarks_b(q_heads: jax.Array, p: Dict, cfg: ModelConfig, batch: int) -> jax.Array:
+    """Landmark queries per (batch, head): q_heads [G, N, d] -> [G, m, d].
+
+    Pooling strategies are expressed as constant matrices applied by einsum
+    (no gathers — the AOT interchange cannot convert batched gathers).
+    """
+    acfg = cfg.attention
+    heads = cfg.heads
+    g, n, d = q_heads.shape
+
+    if acfg.landmark == "learned":
+        per_head = ref.split_heads(p["landmarks"], heads)  # [H, m, d]
+        return jnp.tile(per_head, (batch, 1, 1))
+
+    if acfg.landmark == "pool2d" and cfg.task != "lra":
+        gh, gw = cfg.grid_hw
+        mh = int(acfg.m**0.5)
+        while acfg.m % mh != 0:
+            mh -= 1
+        mw = acfg.m // mh
+        ph = ref._adaptive_pool_matrix(gh, mh, q_heads.dtype)  # [mh, gh]
+        pw = ref._adaptive_pool_matrix(gw, mw, q_heads.dtype)  # [mw, gw]
+        x = q_heads.reshape(g, gh, gw, d)
+        x = jnp.einsum("ih,ghwd->giwd", ph, x)
+        x = jnp.einsum("jw,giwd->gijd", pw, x)
+        return x.reshape(g, mh * mw, d)
+
+    if acfg.landmark == "random":
+        # Fixed-seed random selection expressed as a constant 0/1 matrix.
+        import numpy as np
+
+        rng = np.random.default_rng(0)
+        sel_idx = np.sort(rng.permutation(n)[: acfg.m])
+        sel = np.zeros((acfg.m, n), dtype=np.float32)
+        sel[np.arange(acfg.m), sel_idx] = 1.0
+        return jnp.einsum("mn,gnd->gmd", jnp.asarray(sel, q_heads.dtype), q_heads)
+
+    # pool1d (also the fallback for pool2d on 1-D tasks).
+    pm = ref._adaptive_pool_matrix(n, acfg.m, q_heads.dtype)  # [m, n]
+    return jnp.einsum("mn,gnd->gmd", pm, q_heads)
+
+
+def _attention(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Token-mixing layer. x: [B, N, dim] -> [B, N, dim]."""
+    acfg = cfg.attention
+    heads = cfg.heads
+    b = x.shape[0]
+    qkv = _linear(p["qkv"], x)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    qs, ks, vs = (_split_heads_b(t, heads) for t in (q, k, v))  # [G, N, d]
+
+    kind = acfg.kind
+    if kind == "standard":
+        if acfg.use_pallas:
+            out = attn_kernel.flash_attention_b(qs, ks, vs)
+        else:
+            out = ref.softmax_attention_b(qs, ks, vs)
+    elif kind == "linear":
+        out = ref.linear_attention_b(qs, ks, vs)
+    else:
+        lands = _head_landmarks_b(qs, p, cfg, b)  # [G, m, d]
+        if kind == "agent":
+            out = ref.agent_attention_b(qs, ks, vs, lands)
+        else:
+            include_shared = kind in ("mita", "mita_compress")
+            include_routed = kind in ("mita", "mita_route")
+            out = mita_kernel.mita_attention_b(
+                qs,
+                ks,
+                vs,
+                lands,
+                kk=acfg.k,
+                s=acfg.s,
+                use_pallas=acfg.use_pallas,
+                include_shared=include_shared,
+                include_routed=include_routed,
+                cap_factor=acfg.cap_factor,
+            )
+
+    out = _merge_heads_b(out, b)
+    if cfg.dwc:
+        out = out + _dwc(p, v, cfg)
+    out = _linear(p["proj"], out)
+    if cfg.gate:
+        out = out * jax.nn.sigmoid(_linear(p["gate"], x))
+    return out
+
+
+def _mlp(p: Dict, x: jax.Array) -> jax.Array:
+    return _linear(p["fc2"], jax.nn.gelu(_linear(p["fc1"], x)))
+
+
+def _block(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = x + _attention(p, _layernorm(p["ln1"], x), cfg)
+    x = x + _mlp(p, _layernorm(p["ln2"], x))
+    return x
+
+
+def _patchify(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[B, H, W, C] images -> [B, N, patch*patch*C] flattened patches."""
+    b = x.shape[0]
+    h, w = cfg.image_hw
+    pp = cfg.patch
+    c = cfg.channels
+    x = x.reshape(b, h // pp, pp, w // pp, pp, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(b, (h // pp) * (w // pp), pp * pp * c)
+
+
+def _encode(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Batched encoder: input -> [B, N, dim] token features."""
+    if cfg.task == "lra":
+        tok = params["embed"][x]  # [B, N, dim] (unbatched-operand gather)
+    else:
+        tok = _linear(params["patch"], _patchify(x, cfg))
+    tok = tok + params["pos"]
+    for i in range(cfg.depth):
+        tok = _block(params["blocks"][f"{i:02d}"], tok, cfg)
+    return _layernorm(params["ln_f"], tok)
+
+
+def forward(params: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Batched forward. x: [B, ...] -> logits.
+
+    cls_image / lra -> [B, num_classes]; seg_image -> [B, N, num_classes].
+    """
+    tok = _encode(params, x, cfg)
+    if cfg.task == "seg_image":
+        return _linear(params["head"], tok)  # per-token logits
+    pooled = tok.mean(axis=1) if cfg.pool == "mean" else tok[:, 0]
+    return _linear(params["head"], pooled)
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics.
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, y: jax.Array, num_classes: int, smoothing: float) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, num_classes, dtype=logits.dtype)
+    if smoothing > 0:
+        onehot = onehot * (1 - smoothing) + smoothing / num_classes
+    return -(onehot * logp).sum(-1)
+
+
+def loss_fn(params: Dict, x: jax.Array, y: jax.Array, cfg: ModelConfig, smoothing: float = 0.0):
+    logits = forward(params, x, cfg)
+    loss = _xent(logits, y, cfg.num_classes, smoothing).mean()
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == y).sum()
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# AdamW (hand-rolled; no optax in the image).
+# ---------------------------------------------------------------------------
+
+
+def init_opt_state(params: Dict) -> Dict:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"mu": zeros, "nu": jax.tree.map(jnp.zeros_like, params), "step": jnp.zeros((), jnp.int32)}
+
+
+def _lr_schedule(step: jax.Array, tcfg: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(tcfg.warmup_steps, 1))
+    prog = jnp.clip((step - tcfg.warmup_steps) / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return tcfg.lr * warm * cos
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: (g.astype(jnp.float32) ** 2).sum(), tree))
+    return jnp.sqrt(jnp.asarray(leaves).sum())
+
+
+def train_step(
+    params: Dict,
+    opt: Dict,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+):
+    """One AdamW step. Returns (params', opt', loss, correct)."""
+    (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, x, y, cfg, tcfg.label_smoothing
+    )
+
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-6))
+    grads = jax.tree.map(lambda g: g * clip, grads)
+
+    step = opt["step"]
+    lr = _lr_schedule(step, tcfg)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - tcfg.beta1**t
+    bc2 = 1 - tcfg.beta2**t
+
+    def upd(p, g, mu, nu):
+        mu = tcfg.beta1 * mu + (1 - tcfg.beta1) * g
+        nu = tcfg.beta2 * nu + (1 - tcfg.beta2) * (g * g)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        newp = p - lr * (mhat / (jnp.sqrt(nhat) + tcfg.eps) + tcfg.weight_decay * p)
+        return newp, mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(opt["mu"])
+    flat_nu = jax.tree.leaves(opt["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+
+    params2 = jax.tree.unflatten(tdef, new_p)
+    opt2 = {
+        "mu": jax.tree.unflatten(tdef, new_mu),
+        "nu": jax.tree.unflatten(tdef, new_nu),
+        "step": step + 1,
+    }
+    return params2, opt2, loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Eval steps.
+# ---------------------------------------------------------------------------
+
+
+def eval_step(params: Dict, x: jax.Array, y: jax.Array, cfg: ModelConfig):
+    """Classification eval: (loss_sum, correct) over the batch."""
+    logits = forward(params, x, cfg)
+    loss = _xent(logits, y, cfg.num_classes, 0.0).sum()
+    correct = (jnp.argmax(logits, -1) == y).sum()
+    return loss, correct
+
+
+def eval_step_seg(params: Dict, x: jax.Array, y: jax.Array, cfg: ModelConfig):
+    """Segmentation eval: per-batch confusion matrix [C, C] (rows = truth).
+
+    Rust accumulates confusions across batches and derives mIoU — the
+    Tab. 4 metric.
+    """
+    logits = forward(params, x, cfg)  # [B, N, C]
+    pred = jnp.argmax(logits, -1).reshape(-1)
+    truth = y.reshape(-1)
+    c = cfg.num_classes
+    onehot_t = jax.nn.one_hot(truth, c, dtype=jnp.float32)
+    onehot_p = jax.nn.one_hot(pred, c, dtype=jnp.float32)
+    confusion = onehot_t.T @ onehot_p
+    loss = _xent(logits.reshape(-1, c), truth, c, 0.0).mean()
+    return loss, confusion
+
+
+def seg_loss_fn(params: Dict, x: jax.Array, y: jax.Array, cfg: ModelConfig, smoothing: float = 0.0):
+    logits = forward(params, x, cfg)  # [B, N, C]
+    c = cfg.num_classes
+    loss = _xent(logits.reshape(-1, c), y.reshape(-1), c, smoothing).mean()
+    correct = (jnp.argmax(logits, -1) == y).sum()
+    return loss, correct
+
+
+def train_step_seg(params, opt, x, y, cfg: ModelConfig, tcfg: TrainConfig):
+    """Segmentation train step (per-token CE)."""
+    (loss, correct), grads = jax.value_and_grad(seg_loss_fn, has_aux=True)(
+        params, x, y, cfg, tcfg.label_smoothing
+    )
+    # Re-use the classification updater by faking the loss closure: identical
+    # AdamW math, so we inline the same update here.
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-6))
+    grads = jax.tree.map(lambda g: g * clip, grads)
+    step = opt["step"]
+    lr = _lr_schedule(step, tcfg)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - tcfg.beta1**t
+    bc2 = 1 - tcfg.beta2**t
+
+    def upd(p, g, mu, nu):
+        mu = tcfg.beta1 * mu + (1 - tcfg.beta1) * g
+        nu = tcfg.beta2 * nu + (1 - tcfg.beta2) * (g * g)
+        newp = p - lr * ((mu / bc1) / (jnp.sqrt(nu / bc2) + tcfg.eps) + tcfg.weight_decay * p)
+        return newp, mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    triples = [
+        upd(p, g, mu, nu)
+        for p, g, mu, nu in zip(
+            flat_p, jax.tree.leaves(grads), jax.tree.leaves(opt["mu"]), jax.tree.leaves(opt["nu"])
+        )
+    ]
+    params2 = jax.tree.unflatten(tdef, [a for a, _, _ in triples])
+    opt2 = {
+        "mu": jax.tree.unflatten(tdef, [b for _, b, _ in triples]),
+        "nu": jax.tree.unflatten(tdef, [c for _, _, c in triples]),
+        "step": step + 1,
+    }
+    return params2, opt2, loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Analysis forward (Figs. 3/4/8): expose routing internals of every layer.
+# ---------------------------------------------------------------------------
+
+
+def analysis_forward(params: Dict, x: jax.Array, cfg: ModelConfig):
+    """Forward of one example returning per-layer MiTA internals.
+
+    x is a single unbatched example. Returns (logits, topk_idx
+    [depth, H, m, k] i32, assign [depth, H, N] i32) — everything Rust needs
+    to render Fig. 3/4 heatmaps and the Fig. 8 overlap metric.
+    """
+    acfg = cfg.attention
+    assert acfg.kind.startswith("mita")
+    heads = cfg.heads
+
+    xb = x[None]  # batch of 1
+    if cfg.task == "lra":
+        tok = params["embed"][xb]
+    else:
+        tok = _linear(params["patch"], _patchify(xb, cfg))
+    tok = tok + params["pos"]
+
+    idx_layers, assign_layers = [], []
+    for i in range(cfg.depth):
+        p = params["blocks"][f"{i:02d}"]
+        xin = _layernorm(p["ln1"], tok)
+        qkv = _linear(p["qkv"], xin)
+        q, k, _ = jnp.split(qkv, 3, axis=-1)
+        qs = _split_heads_b(q, heads)  # [H, N, d] (batch of 1)
+        ks_ = _split_heads_b(k, heads)
+        lands = _head_landmarks_b(qs, p, cfg, 1)  # [H, m, d]
+
+        scores = ref.mita_scores_b(ks_, lands)  # [H, N, m]
+        idx = ref.mita_topk_indices_b(scores, acfg.k)  # [H, m, k]
+        e = ref.mita_routing_b(qs, lands, 1)[..., 0]  # [H, N]
+        idx_layers.append(idx.astype(jnp.int32))
+        assign_layers.append(e.astype(jnp.int32))
+        tok = _block(p, tok, cfg)
+
+    tok = _layernorm(params["ln_f"], tok)
+    pooled = tok.mean(axis=1) if cfg.pool == "mean" else tok[:, 0]
+    logits = _linear(params["head"], pooled)[0]
+    return logits, jnp.stack(idx_layers), jnp.stack(assign_layers)

@@ -1,0 +1,139 @@
+"""L1 performance model: VMEM footprint + MXU utilization estimates for the
+Pallas kernels' BlockSpecs.
+
+interpret=True gives CPU-numpy timings that are NOT a TPU proxy, so the
+structural quantities below are what we optimize (DESIGN.md §7):
+
+  * VMEM bytes per grid step must fit the ~16 MiB/core budget (we target
+    <= 4 MiB to leave room for double buffering);
+  * MXU utilization is estimated from tile shapes: a [p, q] x [q, r] matmul
+    runs the 128x128 systolic array at efficiency
+    (p/ceil128(p)) * (q/ceil128(q)) * (r/ceil128(r)) — small tiles waste
+    lanes;
+  * arithmetic intensity (FLOPs / HBM bytes) tells whether a config is
+    memory- or compute-bound against the ~940 GB/s : 275 TFLOP/s (bf16)
+    roofline ratio of a TPU v4 core.
+
+`mita_kernel_report` / `flash_kernel_report` are consumed by
+tests/test_perf.py and quoted in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+F32 = 4
+MXU = 128  # systolic array edge
+VMEM_BUDGET = 16 * 2**20
+VMEM_TARGET = 4 * 2**20
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def mxu_efficiency(p: int, q: int, r: int) -> float:
+    """Fraction of MXU lanes doing useful work for a [p,q]x[q,r] matmul."""
+    return (p / _ceil_to(p, MXU)) * (q / _ceil_to(q, MXU)) * (r / _ceil_to(r, MXU))
+
+
+@dataclass
+class KernelReport:
+    name: str
+    vmem_bytes: int
+    flops: float
+    hbm_bytes: float
+    mxu_eff: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1.0)
+
+    @property
+    def fits_target(self) -> bool:
+        return self.vmem_bytes <= VMEM_TARGET
+
+    def as_dict(self) -> Dict:
+        return {
+            "name": self.name,
+            "vmem_bytes": self.vmem_bytes,
+            "vmem_mib": round(self.vmem_bytes / 2**20, 3),
+            "flops_per_step": self.flops,
+            "hbm_bytes_per_step": self.hbm_bytes,
+            "arithmetic_intensity": round(self.arithmetic_intensity, 2),
+            "mxu_eff": round(self.mxu_eff, 3),
+            "fits_4mib_target": self.fits_target,
+        }
+
+
+def mita_kernel_report(
+    n: int, d: int, m: int, kk: int, block_q: int = 64, cap_factor: int = 2, dtype_bytes: int = F32
+) -> KernelReport:
+    """One (expert, q_block) grid step of kernels/mita.py::_mita_kernel_b.
+
+    VMEM residents: q block [bq, d], expert kv 2x[kk, d], landmarks
+    2x[m, d], output [bq, d], plus f32 accumulators [bq, d] + 2x[bq].
+    """
+    bq = block_q
+    resid = (
+        bq * d  # q block
+        + 2 * kk * d  # ke, ve
+        + 2 * m * d  # qt, vt
+        + bq * d  # out
+    ) * dtype_bytes + (bq * d + 2 * bq) * F32  # accumulators are f32
+    # Two matmul pairs: [bq,d]x[d,m] + [bq,m]x[m,d]; [bq,d]x[d,kk] + [bq,kk]x[kk,d].
+    flops = 2.0 * bq * d * m * 2 + 2.0 * bq * d * kk * 2
+    # HBM traffic per step: stream q block + out; expert kv amortized over
+    # cap/bq steps of the same expert; landmarks amortized over whole grid.
+    steps_per_expert = max(_capacity(n, m, cap_factor, bq) // bq, 1)
+    hbm = (2 * bq * d + (2 * kk * d) / steps_per_expert) * dtype_bytes
+    # Utilization: weighted by FLOPs of each matmul shape.
+    e1 = mxu_efficiency(bq, d, m)
+    e2 = mxu_efficiency(bq, d, kk)
+    w1 = m / (m + kk)
+    eff = e1 * w1 + e2 * (1 - w1)
+    return KernelReport("mita", resid, flops, hbm, eff)
+
+
+def flash_kernel_report(n: int, d: int, block_q: int = 128, block_k: int = 128) -> KernelReport:
+    """One (q_block, k_block) grid step of kernels/attention.py."""
+    bq, bk = min(block_q, n), min(block_k, n)
+    resid = (bq * d + 2 * bk * d + bq * d) * F32 + (bq * d + 2 * bq) * F32
+    flops = 2.0 * bq * d * bk * 2
+    hbm = (2 * bk * d + (2 * bq * d) / max(n // bk, 1)) * F32
+    eff = mxu_efficiency(bq, d, bk)
+    return KernelReport("flash", resid, flops, hbm, eff)
+
+
+def _capacity(n: int, m: int, cap_factor: int, block_q: int) -> int:
+    base = -(-n // m) * cap_factor
+    return -(-base // block_q) * block_q
+
+
+def sweep_block_q(n: int, d: int, m: int, kk: int) -> Dict[int, Dict]:
+    """Block-size sweep used by the §Perf iteration log."""
+    return {bq: mita_kernel_report(n, d, m, kk, block_q=bq).as_dict() for bq in (8, 16, 32, 64, 128, 256)}
+
+
+def main() -> None:
+    import json
+
+    configs = [
+        ("paper ViT-T (N=196, d=64, m=k=25)", 196, 64, 25, 25),
+        ("repo image (N=64, d=16, m=k=16)", 64, 16, 16, 16),
+        ("repo LRA (N=512, d=32, m=k=32)", 512, 32, 32, 32),
+        ("fig5 large (N=4096, d=32, m=k=64)", 4096, 32, 64, 64),
+    ]
+    out = {}
+    for name, n, d, m, kk in configs:
+        out[name] = {
+            "mita": mita_kernel_report(n, d, m, kk).as_dict(),
+            "flash_baseline": flash_kernel_report(n, d).as_dict(),
+            "block_q_sweep": sweep_block_q(n, d, m, kk),
+        }
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

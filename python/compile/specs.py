@@ -1,0 +1,385 @@
+"""Experiment bundle registry — the single source of truth for every AOT
+artifact the Rust coordinator consumes.
+
+A *bundle* is one (model config, train config, batch shapes) tuple; aot.py
+lowers its computations (init / train_step / eval_step / predict /
+analysis) to HLO text and records everything in artifacts/manifest.json.
+The Rust table/figure binaries iterate bundles by name prefix (see
+DESIGN.md §5 experiment index).
+
+Scales are CPU-calibrated stand-ins for the paper's workloads (DESIGN.md §3
+substitutions): the synthetic-image corpus replaces ImageNet-1K/ADE20K and
+the synthetic LRA generators replace LRA — sequence geometry and the
+m/k/N ratios match the paper's settings.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+from .configs import AttentionConfig, ModelConfig, TrainConfig
+
+
+@dataclass(frozen=True)
+class Bundle:
+    """One experiment configuration to AOT-compile."""
+
+    name: str
+    model: ModelConfig
+    train: TrainConfig
+    # Which computations to emit for this bundle.
+    emit: Tuple[str, ...] = ("init", "train_step", "eval_step")
+    # Free-form metadata surfaced to Rust (steps, corpus params, table id).
+    meta: Dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Image-classification family (Tabs. 2/3/6/7, Figs. 9/10).
+#
+# Paper: DeiT-T on ImageNet-1K, N=196 tokens, m=k=25.  Here: 32x32x3
+# synthetic corpus, patch 4 -> N=64 tokens, m=k=16 — the attended-pairs
+# ratio (m+ks)/N = 32/64 = 0.5 mirrors moderate sparsity; m*k/N = 4 vs the
+# paper's 3.2.
+# ---------------------------------------------------------------------------
+
+IMG_HW = (32, 32)
+IMG_PATCH = 4
+IMG_CLASSES = 10
+IMG_DEPTH = 3
+IMG_DIM = 64
+IMG_HEADS = 4
+IMG_BATCH = 32
+
+IMG_TRAIN = TrainConfig(
+    lr=1e-3,
+    weight_decay=0.05,
+    warmup_steps=30,
+    total_steps=250,
+    label_smoothing=0.1,
+    batch_size=IMG_BATCH,
+)
+
+
+def _img_model(kind: str, m: int = 16, k: int = 16, landmark: str = "pool2d", **kw) -> ModelConfig:
+    return ModelConfig(
+        task="cls_image",
+        depth=IMG_DEPTH,
+        dim=IMG_DIM,
+        heads=IMG_HEADS,
+        num_classes=IMG_CLASSES,
+        image_hw=IMG_HW,
+        patch=IMG_PATCH,
+        channels=3,
+        attention=AttentionConfig(kind=kind, m=m, k=k, landmark=landmark),
+        **kw,
+    )
+
+
+def table2_bundles() -> List[Bundle]:
+    """Tab. 2 — from-scratch training, attention mechanism varied only."""
+    rows = [
+        ("std", _img_model("standard")),
+        ("linear", _img_model("linear")),
+        ("agent", _img_model("agent")),
+        ("mita", _img_model("mita")),
+        ("mita_dwc", _img_model("mita", dwc=True)),
+        ("mita_dwc_gate", _img_model("mita", dwc=True, gate=True)),
+    ]
+    meta = {"table": "2", "steps": IMG_TRAIN.total_steps, "eval_batches": 16}
+    return [
+        Bundle(name=f"t2_{tag}", model=mc, train=IMG_TRAIN, meta={**meta, "row": tag})
+        for tag, mc in rows
+    ]
+
+
+def table6_bundles() -> List[Bundle]:
+    """Tab. 6 — ablations: landmark mode, (m, k) grid, scaling strategies."""
+    rows: List[Tuple[str, ModelConfig]] = []
+    # Landmark extraction ablation (paper: random / learned / 1d / 2d pool).
+    for lm in ("random", "learned", "pool1d", "pool2d"):
+        rows.append((f"lm_{lm}", _img_model("mita", landmark=lm)))
+    # m x k grid (paper: {16,25,36}^2; ours {8,16,32}^2 around default 16).
+    for m in (8, 16, 32):
+        for k in (8, 16, 32):
+            rows.append((f"mk_{m}x{k}", _img_model("mita", m=m, k=k)))
+    # Scaling-strategy ablation.
+    rows.append(("route_only", _img_model("mita_route", k=32)))  # budget-matched
+    rows.append(("compress_only", _img_model("mita_compress", m=32)))
+    meta = {"table": "6", "steps": IMG_TRAIN.total_steps, "eval_batches": 16}
+    out = []
+    seen = set()
+    for tag, mc in rows:
+        if tag in seen:
+            continue
+        seen.add(tag)
+        out.append(Bundle(name=f"t6_{tag}", model=mc, train=IMG_TRAIN, meta={**meta, "row": tag}))
+    return out
+
+
+def table7_bundles() -> List[Bundle]:
+    """Tab. 7 — pretrain with standard attention, finetune with X.
+
+    The pretrain bundle is t2_std (re-used); finetune bundles share its
+    parameter layout, so Rust warm-starts them from the t2_std checkpoint.
+    """
+    ft_train = replace(IMG_TRAIN, lr=3e-4, warmup_steps=10, total_steps=100)
+    kinds = [("std", "standard"), ("linear", "linear"), ("agent", "agent"), ("mita", "mita")]
+    meta = {"table": "7", "steps": ft_train.total_steps, "warm_start": "t2_std", "eval_batches": 16}
+    return [
+        Bundle(name=f"t7_{tag}", model=_img_model(kind), train=ft_train, meta={**meta, "row": tag})
+        for tag, kind in kinds
+    ]
+
+
+def fig9_bundles() -> List[Bundle]:
+    """Fig. 9 — train-with-X / infer-with-Y swap matrix.
+
+    Training artifacts come from t2_*; this only adds eval_step artifacts
+    for each inference attention (same param layout), marked eval-only.
+    """
+    kinds = [("std", "standard"), ("agent", "agent"), ("mita", "mita")]
+    meta = {"figure": "9", "eval_batches": 16}
+    return [
+        Bundle(
+            name=f"f9_eval_{tag}",
+            model=_img_model(kind),
+            train=IMG_TRAIN,
+            emit=("eval_step",),
+            meta={**meta, "row": tag},
+        )
+        for tag, kind in kinds
+    ]
+
+
+def fig10_bundles() -> List[Bundle]:
+    """Fig. 10 — (m, k) generalization grid at inference, eval-only."""
+    grid = (4, 8, 16, 32)
+    meta = {"figure": "10", "eval_batches": 16, "trained_on": "t2_mita"}
+    out = []
+    for m in grid:
+        for k in grid:
+            out.append(
+                Bundle(
+                    name=f"f10_eval_m{m}k{k}",
+                    model=_img_model("mita", m=m, k=k),
+                    train=IMG_TRAIN,
+                    emit=("eval_step",),
+                    meta={**meta, "m": m, "k": k},
+                )
+            )
+    return out
+
+
+def analysis_bundles() -> List[Bundle]:
+    """Figs. 3/4/8 — routing internals of the trained t2_mita model."""
+    return [
+        Bundle(
+            name="fig_analysis_mita",
+            model=_img_model("mita"),
+            train=IMG_TRAIN,
+            emit=("analysis",),
+            meta={"figure": "3/4/8", "trained_on": "t2_mita"},
+        )
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Segmentation family (Tab. 4) — synthetic dense prediction.
+#
+# Paper: ADE20K at 512^2/640^2 -> N=1024/1600 tokens, m=k=49. Here: 64x64
+# images, patch 4 -> N=256 tokens, m=k=25; ▽ = backbone attention swapped
+# at eval time (we also train natively for the loss curve).
+# ---------------------------------------------------------------------------
+
+SEG_TRAIN = replace(IMG_TRAIN, total_steps=200, batch_size=16, label_smoothing=0.0)
+SEG_CLASSES = 8
+
+
+def _seg_model(kind: str, m: int = 25, k: int = 25) -> ModelConfig:
+    return ModelConfig(
+        task="seg_image",
+        depth=IMG_DEPTH,
+        dim=IMG_DIM,
+        heads=IMG_HEADS,
+        num_classes=SEG_CLASSES,
+        image_hw=(64, 64),
+        patch=4,
+        channels=3,
+        attention=AttentionConfig(kind=kind, m=m, k=k, landmark="pool2d"),
+    )
+
+
+def table4_bundles() -> List[Bundle]:
+    meta = {"table": "4", "steps": SEG_TRAIN.total_steps, "eval_batches": 16}
+    return [
+        Bundle(name="t4_std", model=_seg_model("standard"), train=SEG_TRAIN, meta={**meta, "row": "std"}),
+        Bundle(name="t4_mita", model=_seg_model("mita"), train=SEG_TRAIN, meta={**meta, "row": "mita"}),
+        # ▽ row: eval the std-trained params with MiTA attention.
+        Bundle(
+            name="t4_mita_swap",
+            model=_seg_model("mita"),
+            train=SEG_TRAIN,
+            emit=("eval_step",),
+            meta={**meta, "row": "mita_swap", "trained_on": "t4_std"},
+        ),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# LRA family (Tab. 5) — five synthetic long-sequence tasks.
+#
+# Paper lengths 1K-4K; ours 256-1024 (CPU), same relative geometry:
+# m=k chosen so m+ks << N.
+# ---------------------------------------------------------------------------
+
+LRA_TRAIN = TrainConfig(
+    lr=5e-4,
+    weight_decay=0.01,
+    warmup_steps=20,
+    total_steps=100,
+    batch_size=8,
+)
+
+# task -> (seq_len, vocab, classes, m=k)
+LRA_TASKS: Dict[str, Tuple[int, int, int, int]] = {
+    "listops": (256, 16, 10, 16),
+    "text": (512, 64, 2, 32),
+    "retrieval": (512, 64, 2, 32),
+    "image": (256, 32, 10, 16),
+    "pathfinder": (256, 4, 2, 16),
+}
+
+LRA_METHODS = ("standard", "mita", "mita_route", "agent", "linear")
+
+
+def _lra_model(task: str, kind: str) -> ModelConfig:
+    n, vocab, classes, mk = LRA_TASKS[task]
+    k = mk * 2 if kind == "mita_route" else mk  # route-only: budget-matched
+    return ModelConfig(
+        task="lra",
+        depth=2,
+        dim=64,
+        heads=2,
+        num_classes=classes,
+        seq_len=n,
+        vocab=vocab,
+        attention=AttentionConfig(kind=kind, m=mk, k=k, landmark="pool1d"),
+    )
+
+
+def table5_bundles() -> List[Bundle]:
+    out = []
+    for task in LRA_TASKS:
+        for kind in LRA_METHODS:
+            meta = {
+                "table": "5",
+                "task": task,
+                "method": kind,
+                "steps": LRA_TRAIN.total_steps,
+                "eval_batches": 16,
+            }
+            out.append(
+                Bundle(name=f"t5_{task}_{kind}", model=_lra_model(task, kind), train=LRA_TRAIN, meta=meta)
+            )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving / throughput family (Fig. 5) — forward-only artifacts.
+#
+# Paper: 3-layer transformer, d=128, N up to very long; batch tuned.
+# ---------------------------------------------------------------------------
+
+FIG5_LENS = (512, 1024, 2048, 4096)
+FIG5_BATCH = 2
+
+
+def _fig5_model(kind: str, n: int, use_pallas: bool = False) -> ModelConfig:
+    mk = 64
+    return ModelConfig(
+        task="lra",
+        depth=3,
+        dim=128,
+        heads=4,
+        num_classes=10,
+        seq_len=n,
+        vocab=64,
+        attention=AttentionConfig(kind=kind, m=mk, k=mk, landmark="pool1d", use_pallas=use_pallas),
+    )
+
+
+def fig5_bundles() -> List[Bundle]:
+    out = []
+    for n in FIG5_LENS:
+        for kind in ("standard", "mita"):
+            meta = {"figure": "5", "seq_len": n, "method": kind, "batch": FIG5_BATCH}
+            out.append(
+                Bundle(
+                    name=f"f5_{kind}_n{n}",
+                    model=_fig5_model(kind, n),
+                    train=LRA_TRAIN,
+                    emit=("init", "predict"),
+                    meta=meta,
+                )
+            )
+    # Pallas-kernel serving variants (exercises the L1 kernel on the
+    # request path at a moderate N).
+    for kind in ("standard", "mita"):
+        meta = {"figure": "5", "seq_len": 1024, "method": f"{kind}_pallas", "batch": FIG5_BATCH}
+        out.append(
+            Bundle(
+                name=f"f5_{kind}_pallas_n1024",
+                model=_fig5_model(kind, 1024, use_pallas=True),
+                train=LRA_TRAIN,
+                emit=("predict",),
+                meta=meta,
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Quickstart bundle — tiny, compiled fast; used by examples/quickstart.rs.
+# ---------------------------------------------------------------------------
+
+
+def quickstart_bundles() -> List[Bundle]:
+    mc = ModelConfig(
+        task="cls_image",
+        depth=2,
+        dim=64,
+        heads=4,
+        num_classes=10,
+        image_hw=(32, 32),
+        patch=8,
+        channels=3,
+        attention=AttentionConfig(kind="mita", m=4, k=4, landmark="pool2d"),
+    )
+    tc = replace(IMG_TRAIN, total_steps=80, warmup_steps=5, batch_size=16)
+    return [
+        Bundle(
+            name="quickstart",
+            model=mc,
+            train=tc,
+            emit=("init", "train_step", "eval_step", "predict"),
+            meta={"steps": 80, "eval_batches": 8, "noise_sigma": 0.1},
+        )
+    ]
+
+
+def all_bundles() -> List[Bundle]:
+    bundles: List[Bundle] = []
+    bundles += quickstart_bundles()
+    bundles += table2_bundles()
+    bundles += table4_bundles()
+    bundles += table5_bundles()
+    bundles += table6_bundles()
+    bundles += table7_bundles()
+    bundles += fig5_bundles()
+    bundles += fig9_bundles()
+    bundles += fig10_bundles()
+    bundles += analysis_bundles()
+    names = [b.name for b in bundles]
+    assert len(names) == len(set(names)), "duplicate bundle names"
+    return bundles

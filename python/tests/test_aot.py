@@ -1,0 +1,144 @@
+"""AOT pipeline tests: flat signatures, manifest consistency, HLO-text
+interchange validity (parseable header, no post-0.5.1 instructions)."""
+
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import AttentionConfig, ModelConfig, TrainConfig
+from compile.specs import Bundle, all_bundles
+
+
+def tiny_bundle():
+    mc = ModelConfig(
+        task="cls_image",
+        depth=1,
+        dim=32,
+        heads=2,
+        num_classes=4,
+        image_hw=(8, 8),
+        patch=4,
+        channels=1,
+        attention=AttentionConfig(kind="mita", m=2, k=2, landmark="pool2d"),
+    )
+    tc = TrainConfig(batch_size=2, warmup_steps=1, total_steps=4)
+    return Bundle(name="tiny", model=mc, train=tc, emit=("init", "train_step", "eval_step", "predict"))
+
+
+def test_bundle_registry_consistent():
+    bundles = all_bundles()
+    names = [b.name for b in bundles]
+    assert len(names) == len(set(names))
+    # Every referenced warm-start bundle exists.
+    byname = {b.name: b for b in bundles}
+    for b in bundles:
+        ws = b.meta.get("warm_start") or b.meta.get("trained_on")
+        if ws:
+            assert ws in byname, f"{b.name} references missing bundle {ws}"
+    # Swap-eval bundles share param layout with their training source.
+    for b in bundles:
+        src = b.meta.get("trained_on")
+        if src:
+            src_layout = aot.param_layout(byname[src].model)
+            assert aot.param_layout(b.model) == src_layout, (b.name, src)
+
+
+def test_flat_signatures_roundtrip():
+    b = tiny_bundle()
+    p_n = len(aot.param_layout(b.model))
+
+    init_fn, init_args = aot.build_fn(b, "init")
+    state = init_fn(jnp.int32(0))
+    assert len(state) == 3 * p_n + 1
+
+    train_fn, train_args = aot.build_fn(b, "train_step")
+    assert len(train_args) == 3 * p_n + 3
+    x = jnp.zeros((2, 8, 8, 1), jnp.float32)
+    y = jnp.zeros((2,), jnp.int32)
+    out = train_fn(*state[: 3 * p_n], state[3 * p_n], x, y)
+    assert len(out) == 3 * p_n + 3
+    loss, correct = float(out[-2]), int(out[-1])
+    assert np.isfinite(loss)
+    assert int(out[3 * p_n]) == 1  # step incremented
+
+    eval_fn, eval_args = aot.build_fn(b, "eval_step")
+    assert len(eval_args) == p_n + 2
+    loss, correct = eval_fn(*state[:p_n], x, y)
+    assert np.isfinite(float(loss))
+
+    pred_fn, pred_args = aot.build_fn(b, "predict")
+    (logits,) = pred_fn(*state[:p_n], x)
+    assert logits.shape == (2, 4)
+
+
+def test_hlo_text_is_legacy_parseable():
+    """The interchange contract: no `topk` instruction, no
+    operand_batching_dims-style gathers, parseable ENTRY header."""
+    b = tiny_bundle()
+    for which in ("init", "train_step", "eval_step", "predict"):
+        fn, fargs = aot.build_fn(b, which)
+        lowered = jax.jit(fn).lower(*fargs)
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text, which
+        assert re.search(r"\btopk\(", text) is None, f"{which} contains topk instruction"
+        assert "largest=" not in text, which
+        assert "operand_batching_dims" not in text, which
+
+
+def test_spec_hash_stability():
+    b = tiny_bundle()
+    h1 = aot.spec_hash(b, "train_step")
+    h2 = aot.spec_hash(b, "train_step")
+    assert h1 == h2
+    assert aot.spec_hash(b, "init") != h1
+
+
+def test_param_layout_paths_unique():
+    b = tiny_bundle()
+    layout = aot.param_layout(b.model)
+    paths = [p["path"] for p in layout]
+    assert len(paths) == len(set(paths))
+    for p in layout:
+        assert p["dtype"] in ("f32", "i32")
+
+
+def test_emit_bundle_and_manifest(tmp_path):
+    b = tiny_bundle()
+    manifest = {"version": aot.MANIFEST_VERSION}
+    n = aot.emit_bundle(b, tmp_path, manifest)
+    assert n == 4
+    # Cached second run lowers nothing.
+    assert aot.emit_bundle(b, tmp_path, manifest) == 0
+    entry = manifest["bundles"]["tiny"]
+    assert set(entry["artifacts"]) == {"init", "train_step", "eval_step", "predict"}
+    for name in entry["artifacts"].values():
+        art = manifest["artifacts"][name]
+        assert (tmp_path / art["file"]).exists()
+        assert art["inputs"] and art["outputs"]
+    # Manifest is valid JSON end-to-end.
+    text = json.dumps(manifest)
+    assert json.loads(text)["bundles"]["tiny"]["model"]["dim"] == 32
+
+
+def test_batch_specs_match_tasks():
+    b = tiny_bundle()
+    x, y = aot._batch_specs(b.model, 3)
+    assert x.shape == (3, 8, 8, 1) and y.shape == (3,)
+    lra = ModelConfig(
+        task="lra", depth=1, dim=32, heads=2, num_classes=2, seq_len=16, vocab=8,
+        attention=AttentionConfig(kind="mita", m=2, k=2, landmark="pool1d"),
+    )
+    x, y = aot._batch_specs(lra, 3)
+    assert x.shape == (3, 16) and x.dtype == jnp.int32
+    seg = ModelConfig(
+        task="seg_image", depth=1, dim=32, heads=2, num_classes=4, image_hw=(8, 8),
+        patch=4, channels=1,
+        attention=AttentionConfig(kind="mita", m=2, k=2, landmark="pool2d"),
+    )
+    x, y = aot._batch_specs(seg, 2)
+    assert y.shape == (2, 4)

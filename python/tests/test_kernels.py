@@ -1,0 +1,337 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+kernels.ref — the CORE correctness signal for the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as attn_kernel
+from compile.kernels import mita as mita_kernel
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+BF16_TOL = dict(rtol=8e-2, atol=8e-2)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def qkv(seed, n, d, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    return tuple(rand(jax.random.fold_in(key, i), (n, d), dtype) for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention kernel vs softmax oracle.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 49]),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_softmax(n_blocks, block, d, seed):
+    n = n_blocks * block
+    q, k, v = qkv(seed, n, d)
+    out = attn_kernel.flash_attention(q, k, v, block_q=block, block_k=block)
+    np.testing.assert_allclose(np.array(out), np.array(ref.softmax_attention(q, k, v)), **TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    g=st.integers(1, 6),
+    n=st.sampled_from([32, 64]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_batched_matches(g, n, d, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (rand(jax.random.fold_in(key, i), (g, n, d)) for i in range(3))
+    out = attn_kernel.flash_attention_b(q, k, v, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.array(out), np.array(ref.softmax_attention_b(q, k, v)), **TOL)
+
+
+def test_flash_attention_extreme_logits_stable():
+    # Large-magnitude queries stress the online-softmax rescaling.
+    q, k, v = qkv(0, 64, 16)
+    out = attn_kernel.flash_attention(q * 30.0, k * 30.0, v, block_q=16, block_k=16)
+    expect = ref.softmax_attention(q * 30.0, k * 30.0, v)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=1e-4, atol=1e-4)
+    assert np.isfinite(np.array(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# MiTA kernel vs exact reference.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 196, 256]),
+    d=st.sampled_from([8, 16, 32]),
+    m=st.sampled_from([4, 9, 16, 25]),
+    kk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mita_pallas_matches_ref(n, d, m, kk, seed):
+    q, k, v = qkv(seed, n, d)
+    q_land = ref.landmarks_pool1d(q, m)
+    expect = ref.mita_attention_ref(q, k, v, q_land, kk)
+    out, aux = mita_kernel.mita_attention_pallas(
+        q, k, v, q_land, kk, cap_factor=max(4, m), block_q=16, return_aux=True
+    )
+    # cap_factor is set high enough that no query overflows -> exact.
+    assert int(aux["overflow"]) == 0
+    np.testing.assert_allclose(np.array(out), np.array(expect), **TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    g=st.integers(1, 8),
+    n=st.sampled_from([64, 128]),
+    d=st.sampled_from([8, 16]),
+    m=st.sampled_from([8, 16]),
+    kk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mita_pallas_batched_matches_vmapped_ref(g, n, d, m, kk, seed):
+    key = jax.random.PRNGKey(seed)
+    q, k, v = (rand(jax.random.fold_in(key, i), (g, n, d)) for i in range(3))
+    q_land = jax.vmap(lambda x: ref.landmarks_pool1d(x, m))(q)
+    expect = jax.vmap(lambda a, b, c, l: ref.mita_attention_ref(a, b, c, l, kk))(q, k, v, q_land)
+    out = mita_kernel.mita_attention_pallas_b(q, k, v, q_land, kk, cap_factor=max(4, m), block_q=16)
+    np.testing.assert_allclose(np.array(out), np.array(expect), **TOL)
+
+
+def test_mita_batched_ref_matches_single():
+    g, n, d, m, kk = 5, 96, 16, 8, 8
+    key = jax.random.PRNGKey(3)
+    q, k, v = (rand(jax.random.fold_in(key, i), (g, n, d)) for i in range(3))
+    q_land = jax.vmap(lambda x: ref.landmarks_pool1d(x, m))(q)
+    for s in (1, 2):
+        b = ref.mita_attention_ref_b(q, k, v, q_land, kk, s=s)
+        single = jax.vmap(lambda a, c, e, l: ref.mita_attention_ref(a, c, e, l, kk, s=s))(
+            q, k, v, q_land
+        )
+        np.testing.assert_allclose(np.array(b), np.array(single), **TOL)
+
+
+def test_mita_overflow_fallback_is_shared_only():
+    """With cap_factor=1 some queries overflow; they must get the
+    compress-only output rather than garbage."""
+    n, d, m, kk = 128, 16, 4, 8
+    # Adversarial routing: all queries prefer one landmark.
+    key = jax.random.PRNGKey(7)
+    q = jnp.abs(rand(key, (n, d))) + 1.0  # positive -> same argmax direction
+    k = rand(jax.random.fold_in(key, 1), (n, d))
+    v = rand(jax.random.fold_in(key, 2), (n, d))
+    q_land = ref.landmarks_pool1d(q, m)
+    out, aux = mita_kernel.mita_attention_pallas(
+        q, k, v, q_land, kk, cap_factor=1, block_q=16, return_aux=True
+    )
+    overflow = int(aux["overflow"])
+    assert overflow > 0, "expected overflow under adversarial routing"
+    # Overflowed queries match the shared-only (compress-only) reference.
+    scores = ref.mita_scores(k, q_land)
+    v_land = ref.mita_landmark_values(scores, v)
+    shared = jax.nn.softmax((q @ q_land.T) / jnp.sqrt(jnp.float32(d)), axis=-1) @ v_land
+    # Identify overflowed queries by comparing against the exact reference.
+    exact = ref.mita_attention_ref(q, k, v, q_land, kk)
+    mismatch = ~np.isclose(np.array(out), np.array(exact), **TOL).all(axis=-1)
+    assert mismatch.sum() == overflow or mismatch.sum() <= overflow
+    np.testing.assert_allclose(
+        np.array(out)[mismatch], np.array(shared)[mismatch], **TOL
+    )
+
+
+def test_mita_equals_full_attention_when_m_k_cover_n():
+    """Paper Sec. A: MiTA recovers full attention as m, k -> N (the routed
+    expert alone covers every key-value pair)."""
+    n, d = 32, 8
+    q, k, v = qkv(11, n, d)
+    q_land = ref.landmarks_pool1d(q, 4)
+    out = ref.mita_attention_ref(q, k, v, q_land, kk=n, include_shared=False)
+    np.testing.assert_allclose(np.array(out), np.array(ref.softmax_attention(q, k, v)), **TOL)
+
+
+def test_mita_compress_only_equals_agent_attention():
+    """Compress-only MiTA == Agent Attention (both are softmax(QQ̃) Ṽ)."""
+    n, d, m = 64, 16, 8
+    q, k, v = qkv(13, n, d)
+    q_land = ref.landmarks_pool1d(q, m)
+    a = ref.mita_attention_ref(q, k, v, q_land, kk=4, include_routed=False)
+    b = ref.agent_attention(q, k, v, q_land)
+    np.testing.assert_allclose(np.array(a), np.array(b), **TOL)
+
+
+def test_mita_bf16_within_loose_tolerance():
+    """bf16 kernel vs bf16 reference. Comparing against an f32 reference is
+    ill-posed: bf16 score rounding can flip top-k *membership*, changing
+    the output structurally rather than numerically — so the oracle must
+    run at the same precision (same selections), and only the attention
+    arithmetic tolerance is under test."""
+    n, d, m, kk = 128, 16, 8, 8
+    q, k, v = qkv(17, n, d, jnp.bfloat16)
+    q_land = ref.landmarks_pool1d(q, m)
+    out = mita_kernel.mita_attention_pallas(q, k, v, q_land, kk, cap_factor=8, block_q=16)
+    expect = ref.mita_attention_ref(q, k, v, q_land, kk)
+    np.testing.assert_allclose(
+        np.array(out, dtype=np.float32), np.array(expect, dtype=np.float32), **BF16_TOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# Online softmax combine (Alg. 1 line 16).
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.integers(1, 32),
+    k1=st.integers(1, 32),
+    k2=st.integers(1, 32),
+    d=st.sampled_from([4, 16]),
+    scale=st.sampled_from([1.0, 10.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_online_softmax_combine_exact(n, k1, k2, d, scale, seed):
+    key = jax.random.PRNGKey(seed)
+    q = rand(jax.random.fold_in(key, 0), (n, d), scale=scale)
+    ka = rand(jax.random.fold_in(key, 1), (k1, d))
+    va = rand(jax.random.fold_in(key, 2), (k1, d))
+    kb = rand(jax.random.fold_in(key, 3), (k2, d))
+    vb = rand(jax.random.fold_in(key, 4), (k2, d))
+
+    o1, m1, l1 = ref.partial_softmax(q, ka, va)
+    o2, m2, l2 = ref.partial_softmax(q, kb, vb)
+    combined = ref.online_softmax_combine(o1, m1, l1, o2, m2, l2)
+    full = ref.softmax_attention(q, jnp.concatenate([ka, kb]), jnp.concatenate([va, vb]))
+    np.testing.assert_allclose(np.array(combined), np.array(full), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Landmark extraction.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(4, 256),
+    m_frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pool1d_preserves_global_mean(n, m_frac, seed):
+    m = max(1, int(n * m_frac))
+    q = rand(jax.random.PRNGKey(seed), (n, 8))
+    lands = ref.landmarks_pool1d(q, m)
+    assert lands.shape == (m, 8)
+    if n % m == 0:
+        # Equal windows -> pooled mean == global mean.
+        np.testing.assert_allclose(
+            np.array(lands.mean(0)), np.array(q.mean(0)), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_pool2d_nondivisible_grid():
+    # The paper's exact case: 14x14 grid, 5x5 landmarks.
+    q = rand(jax.random.PRNGKey(0), (196, 16))
+    lands = ref.extract_landmarks(q, "pool2d", 25, grid_hw=(14, 14))
+    assert lands.shape == (25, 16)
+    # Constant input -> constant landmarks.
+    const = ref.extract_landmarks(jnp.ones((196, 16)), "pool2d", 25, grid_hw=(14, 14))
+    np.testing.assert_allclose(np.array(const), 1.0, rtol=1e-6)
+
+
+def test_landmark_modes_shapes():
+    q = rand(jax.random.PRNGKey(1), (64, 16))
+    for mode, kwargs in [
+        ("pool1d", {}),
+        ("pool2d", {"grid_hw": (8, 8)}),
+        ("random", {}),
+        ("learned", {"learned": jnp.zeros((8, 16))}),
+    ]:
+        lands = ref.extract_landmarks(q, mode, 8, **kwargs)
+        assert lands.shape == (8, 16), mode
+
+
+def test_adaptive_pool_matrix_partition():
+    for n, m in [(14, 5), (196, 25), (7, 7), (64, 16), (10, 3)]:
+        p = np.array(ref._adaptive_pool_matrix(n, m))
+        np.testing.assert_allclose(p.sum(axis=1), 1.0, rtol=1e-6)
+        # Every column in exactly one window.
+        assert ((p > 0).sum(axis=0) == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Routing / top-k semantics.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(8, 128), m=st.integers(1, 8), kk=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_topk_indices_are_true_topk(n, m, kk, seed):
+    kk = min(kk, n)
+    scores = rand(jax.random.PRNGKey(seed), (n, m))
+    idx = np.array(ref.mita_topk_indices(scores, kk))
+    s = np.array(scores)
+    for i in range(m):
+        got = set(idx[i].tolist())
+        expect = set(np.argsort(-s[:, i])[:kk].tolist())
+        # Ties can differ; compare score multisets instead of indices.
+        np.testing.assert_allclose(
+            np.sort(s[list(got), i]), np.sort(s[list(expect), i]), rtol=1e-6
+        )
+
+
+def test_routing_argmax_in_range():
+    q, k, v = qkv(23, 64, 16)
+    q_land = ref.landmarks_pool1d(q, 8)
+    e = np.array(ref.mita_routing(q, q_land, 1))
+    assert e.shape == (64, 1)
+    assert (e >= 0).all() and (e < 8).all()
+    e2 = np.array(ref.mita_routing(q, q_land, 3))
+    assert e2.shape == (64, 3)
+    # Top-s experts are distinct per query.
+    for row in e2:
+        assert len(set(row.tolist())) == 3
+
+
+# ---------------------------------------------------------------------------
+# Gradients through MiTA (training path).
+# ---------------------------------------------------------------------------
+
+
+def test_mita_ref_is_differentiable():
+    g, n, d, m, kk = 2, 32, 8, 4, 4
+    key = jax.random.PRNGKey(29)
+    q, k, v = (rand(jax.random.fold_in(key, i), (g, n, d)) for i in range(3))
+    q_land = jax.vmap(lambda x: ref.landmarks_pool1d(x, m))(q)
+
+    def loss(q, k, v, q_land):
+        return (ref.mita_attention_ref_b(q, k, v, q_land, kk) ** 2).sum()
+
+    grads = jax.grad(loss, argnums=(0, 1, 2, 3))(q, k, v, q_land)
+    for gr in grads:
+        assert np.isfinite(np.array(gr)).all()
+    # Gradients w.r.t. values must be nonzero (values always contribute).
+    assert float(jnp.abs(grads[2]).sum()) > 0
+
+
+def test_gather_rows_matches_vmap_indexing():
+    g, n, d = 4, 16, 8
+    x = rand(jax.random.PRNGKey(31), (g, n, d))
+    idx = jax.random.randint(jax.random.PRNGKey(32), (g, 5), 0, n)
+    out = ref.gather_rows(x, idx)
+    expect = jax.vmap(lambda xi, ii: xi[ii])(x, idx)
+    np.testing.assert_allclose(np.array(out), np.array(expect), rtol=0, atol=0)

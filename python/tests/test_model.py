@@ -1,0 +1,205 @@
+"""L2 model tests: shapes, training dynamics, swap-compatibility."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import AttentionConfig, ModelConfig, TrainConfig
+from compile import model
+
+ALL_KINDS = ["standard", "linear", "agent", "mita", "mita_route", "mita_compress"]
+
+
+def img_cfg(kind="mita", **kw):
+    return ModelConfig(
+        task="cls_image",
+        depth=2,
+        dim=64,
+        heads=4,
+        num_classes=10,
+        image_hw=(16, 16),
+        patch=4,
+        channels=3,
+        attention=AttentionConfig(kind=kind, m=4, k=4, landmark="pool2d"),
+        **kw,
+    )
+
+
+def img_batch(b=4, cfg=None, seed=0):
+    cfg = cfg or img_cfg()
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, *cfg.image_hw, cfg.channels))
+    y = jax.random.randint(jax.random.PRNGKey(seed + 1), (b,), 0, cfg.num_classes)
+    return x, y
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_forward_shapes_all_kinds(kind):
+    cfg = img_cfg(kind)
+    params = model.init_params(jnp.int32(0), cfg)
+    x, _ = img_batch(3, cfg)
+    logits = model.forward(params, x, cfg)
+    assert logits.shape == (3, 10)
+    assert np.isfinite(np.array(logits)).all()
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_train_step_all_kinds(kind):
+    cfg = img_cfg(kind)
+    params = model.init_params(jnp.int32(0), cfg)
+    opt = model.init_opt_state(params)
+    x, y = img_batch(4, cfg)
+    p2, o2, loss, correct = model.train_step(params, opt, x, y, cfg, TrainConfig())
+    assert np.isfinite(float(loss))
+    assert 0 <= int(correct) <= 4
+    assert int(o2["step"]) == 1
+    # Parameters actually moved.
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+def test_param_layouts_identical_across_kinds():
+    """Fig. 9 / Tab. 7 swap experiments require identical parameter trees
+    for every non-learned-landmark attention kind."""
+    layouts = []
+    for kind in ALL_KINDS:
+        cfg = img_cfg(kind)
+        tmpl = jax.eval_shape(lambda s: model.init_params(s, cfg), jnp.zeros((), jnp.int32))
+        flat = jax.tree_util.tree_flatten_with_path(tmpl)[0]
+        layouts.append([(jax.tree_util.keystr(p), l.shape, l.dtype) for p, l in flat])
+    for other in layouts[1:]:
+        assert other == layouts[0]
+
+
+def test_learned_landmarks_add_param():
+    cfg = img_cfg("mita")
+    cfg_learned = ModelConfig(
+        **{**cfg.__dict__, "attention": AttentionConfig(kind="mita", m=4, k=4, landmark="learned")}
+    )
+    n_plain = len(jax.tree.leaves(model.init_params(jnp.int32(0), cfg)))
+    n_learned = len(jax.tree.leaves(model.init_params(jnp.int32(0), cfg_learned)))
+    assert n_learned == n_plain + cfg.depth
+
+
+def test_loss_decreases_on_fixed_batch():
+    """Overfit a single batch: loss after 25 steps must drop substantially."""
+    cfg = img_cfg("mita")
+    tcfg = TrainConfig(lr=3e-3, warmup_steps=2, total_steps=25, weight_decay=0.0)
+    params = model.init_params(jnp.int32(0), cfg)
+    opt = model.init_opt_state(params)
+    x, y = img_batch(8, cfg)
+    step = jax.jit(lambda p, o: model.train_step(p, o, x, y, cfg, tcfg))
+    first = None
+    for i in range(25):
+        params, opt, loss, _ = step(params, opt)
+        if i == 0:
+            first = float(loss)
+    assert float(loss) < first * 0.5, (first, float(loss))
+
+
+def test_lra_model_and_train():
+    cfg = ModelConfig(
+        task="lra",
+        depth=2,
+        dim=32,
+        heads=2,
+        num_classes=5,
+        seq_len=64,
+        vocab=16,
+        attention=AttentionConfig(kind="mita", m=8, k=8, landmark="pool1d"),
+    )
+    params = model.init_params(jnp.int32(0), cfg)
+    x = jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, 16)
+    y = jnp.array([0, 1, 2, 3], jnp.int32)
+    logits = model.forward(params, x, cfg)
+    assert logits.shape == (4, 5)
+    _, _, loss, _ = model.train_step(params, model.init_opt_state(params), x, y, cfg, TrainConfig())
+    assert np.isfinite(float(loss))
+
+
+def test_seg_model_confusion():
+    cfg = ModelConfig(
+        task="seg_image",
+        depth=2,
+        dim=32,
+        heads=2,
+        num_classes=6,
+        image_hw=(16, 16),
+        patch=4,
+        channels=3,
+        attention=AttentionConfig(kind="mita", m=4, k=4, landmark="pool2d"),
+    )
+    params = model.init_params(jnp.int32(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 16, 3))
+    y = jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, 6)
+    logits = model.forward(params, x, cfg)
+    assert logits.shape == (2, 16, 6)
+    loss, conf = model.eval_step_seg(params, x, y, cfg)
+    conf = np.array(conf)
+    assert conf.shape == (6, 6)
+    # Confusion sums to the number of evaluated tokens.
+    assert conf.sum() == 32
+    p2, o2, loss, correct = model.train_step_seg(
+        params, model.init_opt_state(params), x, y, cfg, TrainConfig()
+    )
+    assert np.isfinite(float(loss))
+
+
+def test_dwc_and_gate_variants():
+    for kw in [{"dwc": True}, {"gate": True}, {"dwc": True, "gate": True}]:
+        cfg = img_cfg("mita", **kw)
+        params = model.init_params(jnp.int32(0), cfg)
+        x, y = img_batch(2, cfg)
+        logits = model.forward(params, x, cfg)
+        assert logits.shape == (2, 10)
+        _, _, loss, _ = model.train_step(
+            params, model.init_opt_state(params), x, y, cfg, TrainConfig()
+        )
+        assert np.isfinite(float(loss))
+
+
+def test_pallas_forward_matches_ref_forward():
+    """use_pallas=True must agree with the reference forward (inference)."""
+    base = img_cfg("mita")
+    pallas_cfg = ModelConfig(
+        **{
+            **base.__dict__,
+            "attention": AttentionConfig(kind="mita", m=4, k=4, landmark="pool2d", use_pallas=True, cap_factor=4),
+        }
+    )
+    params = model.init_params(jnp.int32(0), base)
+    x, _ = img_batch(2, base)
+    a = model.forward(params, x, base)
+    b = model.forward(params, x, pallas_cfg)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-4)
+
+
+def test_analysis_forward_internals():
+    cfg = img_cfg("mita")
+    params = model.init_params(jnp.int32(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 16, 3))
+    logits, idx, assign = model.analysis_forward(params, x, cfg)
+    assert logits.shape == (10,)
+    assert idx.shape == (cfg.depth, cfg.heads, 4, 4)
+    assert assign.shape == (cfg.depth, cfg.heads, cfg.num_tokens)
+    assert (np.array(idx) >= 0).all() and (np.array(idx) < cfg.num_tokens).all()
+    assert (np.array(assign) >= 0).all() and (np.array(assign) < 4).all()
+
+
+def test_lr_schedule_warmup_and_decay():
+    tcfg = TrainConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(model._lr_schedule(jnp.int32(s), tcfg)) for s in [0, 5, 10, 50, 99]]
+    assert lrs[0] < lrs[1] < lrs[2]  # warmup rising
+    assert lrs[2] > lrs[3] > lrs[4]  # cosine decay
+    assert lrs[4] < 0.05
+
+
+def test_deterministic_init():
+    cfg = img_cfg("mita")
+    a = model.init_params(jnp.int32(42), cfg)
+    b = model.init_params(jnp.int32(42), cfg)
+    c = model.init_params(jnp.int32(43), cfg)
+    la, lb, lc = (jax.tree.leaves(t) for t in (a, b, c))
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.array(x), np.array(y))
+    assert any(not np.array_equal(np.array(x), np.array(y)) for x, y in zip(la, lc))

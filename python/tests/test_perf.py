@@ -1,0 +1,48 @@
+"""Structural performance-model tests (L1 §Perf invariants)."""
+
+import pytest
+
+from compile import perf
+
+
+def test_vmem_within_budget_for_all_experiment_configs():
+    for n, d, m, kk in [(196, 64, 25, 25), (64, 16, 16, 16), (512, 32, 32, 32), (4096, 32, 64, 64)]:
+        r = perf.mita_kernel_report(n, d, m, kk)
+        assert r.vmem_bytes <= perf.VMEM_TARGET, (n, d, m, kk, r.vmem_bytes)
+        assert r.fits_target
+
+
+def test_flash_kernel_vmem_scales_with_blocks():
+    small = perf.flash_kernel_report(1024, 64, block_q=64, block_k=64)
+    big = perf.flash_kernel_report(1024, 64, block_q=256, block_k=256)
+    assert big.vmem_bytes > small.vmem_bytes
+    assert big.vmem_bytes <= perf.VMEM_BUDGET
+
+
+def test_mxu_efficiency_bounds_and_monotonicity():
+    assert perf.mxu_efficiency(128, 128, 128) == 1.0
+    assert perf.mxu_efficiency(64, 128, 128) == 0.5
+    e_small = perf.mxu_efficiency(8, 8, 8)
+    e_mid = perf.mxu_efficiency(64, 64, 64)
+    assert 0 < e_small < e_mid < 1.0
+
+
+def test_bigger_block_q_improves_mxu_eff():
+    sweep = perf.sweep_block_q(512, 32, 32, 32)
+    assert sweep[128]["mxu_eff"] >= sweep[16]["mxu_eff"]
+    # But VMEM grows.
+    assert sweep[256]["vmem_bytes"] > sweep[16]["vmem_bytes"]
+
+
+def test_arithmetic_intensity_positive_and_finite():
+    r = perf.mita_kernel_report(512, 32, 32, 32)
+    assert r.arithmetic_intensity > 0
+    d = r.as_dict()
+    assert set(d) >= {"vmem_mib", "mxu_eff", "arithmetic_intensity"}
+
+
+def test_capacity_matches_rust_mirror():
+    # Must agree with rust/src/mita/routing.rs::capacity test vectors.
+    assert perf._capacity(196, 25, 2, 64) == 64
+    assert perf._capacity(1024, 16, 2, 64) == 128
+    assert perf._capacity(64, 16, 1, 8) == 8

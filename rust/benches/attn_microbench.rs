@@ -1,0 +1,63 @@
+//! Bench: Fig. 5 — forward latency of the 3-layer d=128 model, standard vs
+//! MiTA attention, across sequence lengths. Prints the per-N speedup series
+//! the paper plots. Requires `make artifacts`.
+
+use mita::data::{BatchSource, Split};
+use mita::flops;
+use mita::runtime::{Runtime, Tensor};
+use mita::util::bench::bench_for;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load("artifacts").expect("runtime");
+    println!("# attn_microbench (Fig. 5): predict latency, batch as compiled");
+
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    for name in rt.manifest().bundles_with_prefix("f5_standard_n") {
+        let n = rt.manifest().bundle(name).unwrap().model.num_tokens();
+        let mut lat = [0.0f64; 2];
+        for (slot, method) in ["standard", "mita"].iter().enumerate() {
+            let bundle = format!("f5_{method}_n{n}");
+            let Ok(spec) = rt.manifest().bundle(&bundle).map(Clone::clone) else { continue };
+            let predict = rt.manifest().bundle_artifact(&bundle, "predict").unwrap().to_string();
+            let source = BatchSource::for_bundle(&spec).expect("source");
+            let (x, _) = source.batch(Split::Val, 0).expect("batch");
+
+            // Build input list: init params + x.
+            let init = rt.manifest().bundle_artifact(&bundle, "init").unwrap();
+            let state = rt
+                .run_literals(init, &[Tensor::scalar_i32(0).to_literal().unwrap()])
+                .expect("init");
+            let p = spec.param_layout.len();
+            let params = &state[..p];
+            let xl = x.to_literal().unwrap();
+            let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+            inputs.push(&xl);
+
+            rt.warmup(&predict).unwrap();
+            let exe = rt.executable(&predict).unwrap();
+            let r = bench_for(&format!("{bundle} (fwd)"), 1, 2.0, || {
+                let out = exe.execute::<&xla::Literal>(&inputs).unwrap();
+                let _ = out[0][0].to_literal_sync().unwrap();
+            });
+            println!(
+                "{}  ({:.1} seqs/s, attn {}/ex)",
+                r.row(),
+                r.throughput(spec.train.batch_size as f64),
+                flops::gflops(flops::attention_flops(&spec.model))
+            );
+            lat[slot] = r.mean_secs;
+        }
+        if lat[0] > 0.0 && lat[1] > 0.0 {
+            rows.push((n, lat[0], lat[1]));
+        }
+    }
+
+    println!("\nN, standard_ms, mita_ms, speedup");
+    for (n, s, m) in rows {
+        println!("{n}, {:.2}, {:.2}, x{:.2}", s * 1e3, m * 1e3, s / m);
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench: synthetic data-generator throughput (the L3 substrate that must
+//! never bottleneck the train loop — compare against train_step times in
+//! benches/train_step.rs).
+
+use mita::data::images::{ImageCorpus, Split};
+use mita::data::lra;
+use mita::util::bench::bench;
+
+fn main() {
+    println!("# data_gen bench (items = examples/iteration)");
+
+    let corpus = ImageCorpus::new(32, 32, 3, 10, 8, 42);
+    let mut i = 0u64;
+    let r = bench("images 32x32x3 cls batch=32", 2, 20, || {
+        corpus.batch_cls(Split::Train, i * 32, 32).unwrap();
+        i += 1;
+    });
+    println!("{}  ({:.0} imgs/s)", r.row(), r.throughput(32.0));
+
+    let corpus64 = ImageCorpus::new(64, 64, 3, 10, 8, 42);
+    let mut i = 0u64;
+    let r = bench("images 64x64x3 seg batch=16", 2, 10, || {
+        corpus64.batch_seg(Split::Train, i * 16, 16, 4).unwrap();
+        i += 1;
+    });
+    println!("{}  ({:.0} imgs/s)", r.row(), r.throughput(16.0));
+
+    for (task, n, vocab) in [
+        ("listops", 256usize, 16usize),
+        ("text", 512, 64),
+        ("retrieval", 512, 64),
+        ("image", 256, 32),
+        ("pathfinder", 256, 4),
+    ] {
+        let t = lra::by_name(task, n, vocab, 7);
+        let mut i = 0u64;
+        let r = bench(&format!("lra {task} N={n} batch=8"), 2, 20, || {
+            lra::batch(t.as_ref(), Split::Train, i * 8, 8).unwrap();
+            i += 1;
+        });
+        println!("{}  ({:.0} seqs/s)", r.row(), r.throughput(8.0));
+    }
+}

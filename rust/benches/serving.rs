@@ -1,0 +1,64 @@
+//! Bench: L3 serving hot path — pure batching/packing overhead (no engine)
+//! plus an end-to-end batching-policy sweep over the quickstart predict
+//! artifact (throughput vs latency trade-off).
+
+use std::time::{Duration, Instant};
+
+use mita::coordinator::batcher::{BatchPolicy, Batcher, Flush};
+use mita::coordinator::server::{serve, ServeConfig};
+use mita::coordinator::Engine;
+use mita::runtime::Runtime;
+use mita::util::bench::bench;
+
+fn main() {
+    // Pure-L3 cost: batcher decision + take loop on a synthetic queue.
+    let policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_millis(5) };
+    let r = bench("batcher push+poll+take (1024 reqs)", 2, 50, || {
+        let mut b: Batcher<u32> = Batcher::new(policy);
+        let now = Instant::now();
+        for i in 0..1024u32 {
+            b.push(i, now);
+            if let Flush::Take(n) = b.poll(now) {
+                let _ = b.take(n);
+            }
+        }
+        while !b.is_empty() {
+            let n = b.len().min(policy.max_batch);
+            let _ = b.take(n);
+        }
+    });
+    println!("{}  ({:.0} reqs/s through policy)", r.row(), r.throughput(1024.0));
+
+    // End-to-end serving policy sweep (needs artifacts).
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP e2e: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load("artifacts").expect("runtime");
+    let spec = rt.manifest().bundle("quickstart").unwrap().clone();
+    let predict = rt.manifest().bundle_artifact("quickstart", "predict").unwrap().to_string();
+    drop(rt);
+    let engine = Engine::spawn("artifacts".into(), vec![predict]).expect("engine");
+    let rt2 = Runtime::load("artifacts").expect("runtime");
+    let init = rt2.manifest().bundle_artifact("quickstart", "init").unwrap().to_string();
+    drop(rt2);
+    engine.handle().bind_init("quickstart", &init, 0, spec.param_count()).expect("bind");
+
+    println!("\n# serving policy sweep (quickstart, closed loop, 128 reqs)");
+    for max_wait_ms in [0u64, 1, 5, 20] {
+        let cfg = ServeConfig {
+            bundle: "quickstart".into(),
+            binding: "quickstart".into(),
+            requests: 128,
+            rate: 0.0,
+            queue_cap: 256,
+            policy: BatchPolicy {
+                max_batch: spec.train.batch_size,
+                max_wait: Duration::from_millis(max_wait_ms),
+            },
+        };
+        let report = serve(&engine.handle(), &spec, "quickstart", &cfg).expect("serve");
+        println!("max_wait={max_wait_ms:2}ms  {}", report.row());
+    }
+    engine.shutdown();
+}

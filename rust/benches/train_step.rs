@@ -1,0 +1,43 @@
+//! Bench: AOT train-step latency per bundle — the Tab. 5 "training
+//! throughput" measurement isolated from data generation. Requires
+//! `make artifacts`.
+
+use mita::coordinator::Trainer;
+use mita::data::{BatchSource, Split};
+use mita::runtime::Runtime;
+use mita::util::bench::bench_for;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load("artifacts").expect("runtime");
+    println!("# train_step bench (one optimizer step, data prebuilt)");
+
+    for bundle in [
+        "quickstart",
+        "t2_std",
+        "t2_mita",
+        "t5_text_standard",
+        "t5_text_mita",
+        "t5_text_agent",
+        "t5_text_linear",
+    ] {
+        if rt.manifest().bundle(bundle).is_err() {
+            continue;
+        }
+        let spec = rt.manifest().bundle(bundle).unwrap().clone();
+        let source = BatchSource::for_bundle(&spec).expect("source");
+        let mut trainer = Trainer::new(&rt, bundle, 0).expect("init");
+        let (x, y) = source.batch(Split::Train, 0).expect("batch");
+        let r = bench_for(bundle, 2, 3.0, || {
+            trainer.step(x.clone(), y.clone()).expect("step");
+        });
+        println!(
+            "{}  ({:.1} examples/s)",
+            r.row(),
+            r.throughput(spec.train.batch_size as f64)
+        );
+    }
+}

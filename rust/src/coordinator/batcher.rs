@@ -1,0 +1,184 @@
+//! Dynamic batching policy — the serving-side heart of the coordinator.
+//!
+//! Requests arrive one at a time; the model artifact is compiled for a fixed
+//! batch size B. The batcher groups requests with a max-batch / max-wait
+//! policy (vLLM-style): flush when B requests are queued, or when the oldest
+//! queued request has waited `max_wait`, whichever comes first. Short
+//! batches are padded up to B (the pad fraction is tracked — it is the
+//! efficiency cost of latency-bounded batching).
+//!
+//! The policy is pure (no I/O, no clocks injected) so it is unit- and
+//! property-testable; `server.rs` drives it with real time.
+
+use std::time::{Duration, Instant};
+
+/// Flush policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard batch size of the compiled artifact.
+    pub max_batch: usize,
+    /// Max time the oldest request may wait before a forced flush.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// One queued item (generic payload + enqueue time).
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Decision returned by [`Batcher::poll`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Flush {
+    /// Not enough demand yet; check again in this duration (None = only on
+    /// new arrivals).
+    Wait(Option<Duration>),
+    /// Take this many items now.
+    Take(usize),
+}
+
+/// Accumulates pending requests and decides when to flush.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: Vec<Pending<T>>,
+    pub batches_emitted: u64,
+    pub items_emitted: u64,
+    pub padded_slots: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch > 0);
+        Batcher { policy, queue: Vec::new(), batches_emitted: 0, items_emitted: 0, padded_slots: 0 }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn push(&mut self, payload: T, now: Instant) {
+        self.queue.push(Pending { payload, enqueued: now });
+    }
+
+    /// Decide whether to flush at time `now`.
+    pub fn poll(&self, now: Instant) -> Flush {
+        if self.queue.is_empty() {
+            return Flush::Wait(None);
+        }
+        if self.queue.len() >= self.policy.max_batch {
+            return Flush::Take(self.policy.max_batch);
+        }
+        let oldest_age = now.duration_since(self.queue[0].enqueued);
+        if oldest_age >= self.policy.max_wait {
+            return Flush::Take(self.queue.len());
+        }
+        Flush::Wait(Some(self.policy.max_wait - oldest_age))
+    }
+
+    /// Remove and return the first `n` items (FIFO). Updates pad accounting
+    /// as if the batch were padded to `max_batch`.
+    pub fn take(&mut self, n: usize) -> Vec<Pending<T>> {
+        let n = n.min(self.queue.len());
+        let taken: Vec<Pending<T>> = self.queue.drain(..n).collect();
+        self.batches_emitted += 1;
+        self.items_emitted += taken.len() as u64;
+        self.padded_slots += (self.policy.max_batch - taken.len()) as u64;
+        taken
+    }
+
+    /// Fraction of executed slots wasted on padding so far.
+    pub fn pad_fraction(&self) -> f64 {
+        let total = self.items_emitted + self.padded_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(b: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy { max_batch: b, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn empty_queue_waits_forever() {
+        let b: Batcher<u32> = Batcher::new(policy(4, 10));
+        assert_eq!(b.poll(Instant::now()), Flush::Wait(None));
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let mut b = Batcher::new(policy(3, 1000));
+        let now = Instant::now();
+        for i in 0..3 {
+            b.push(i, now);
+        }
+        assert_eq!(b.poll(now), Flush::Take(3));
+    }
+
+    #[test]
+    fn timeout_flushes_partial() {
+        let mut b = Batcher::new(policy(8, 5));
+        let t0 = Instant::now();
+        b.push(1u32, t0);
+        b.push(2u32, t0);
+        // Before the deadline: wait with a bounded hint.
+        match b.poll(t0 + Duration::from_millis(1)) {
+            Flush::Wait(Some(d)) => assert!(d <= Duration::from_millis(4)),
+            other => panic!("expected bounded wait, got {other:?}"),
+        }
+        // Past the deadline: flush what we have.
+        assert_eq!(b.poll(t0 + Duration::from_millis(6)), Flush::Take(2));
+    }
+
+    #[test]
+    fn take_is_fifo_and_tracks_padding() {
+        let mut b = Batcher::new(policy(4, 5));
+        let now = Instant::now();
+        for i in 0..2 {
+            b.push(i, now);
+        }
+        let taken = b.take(2);
+        assert_eq!(taken.iter().map(|p| p.payload).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.batches_emitted, 1);
+        assert_eq!(b.items_emitted, 2);
+        assert_eq!(b.padded_slots, 2);
+        assert!((b.pad_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overfull_queue_emits_max_batch_only() {
+        let mut b = Batcher::new(policy(2, 5));
+        let now = Instant::now();
+        for i in 0..5 {
+            b.push(i, now);
+        }
+        assert_eq!(b.poll(now), Flush::Take(2));
+        let taken = b.take(2);
+        assert_eq!(taken.len(), 2);
+        assert_eq!(b.len(), 3);
+        // Still flushable right away.
+        assert_eq!(b.poll(now), Flush::Take(2));
+    }
+}

@@ -1,0 +1,153 @@
+//! Checkpointing: save/load flattened parameter lists.
+//!
+//! Pure binary format (no serde in the vendored crate set):
+//!   magic "MITACKPT" | u32 version | u32 tensor count |
+//!   per tensor: u8 dtype (0=f32, 1=i32) | u32 ndim | u64 dims... | raw LE data
+//!
+//! Used for Tab. 7 warm starts (pretrain standard → finetune MiTA) and for
+//! the analysis figures that re-load trained models.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 8] = b"MITACKPT";
+const VERSION: u32 = 1;
+
+/// Save tensors to `path` (atomic via rename).
+pub fn save(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for t in tensors {
+            let (tag, shape): (u8, &[usize]) = match t {
+                Tensor::F32 { shape, .. } => (0, shape),
+                Tensor::I32 { shape, .. } => (1, shape),
+            };
+            w.write_all(&[tag])?;
+            w.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for &x in data {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for &x in data {
+                        w.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming to {}", path.display()))?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Load tensors from `path`.
+pub fn load(path: &Path) -> Result<Vec<Tensor>> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading checkpoint magic")?;
+    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic in {}", path.display());
+    let version = read_u32(&mut r)?;
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let count = read_u32(&mut r)? as usize;
+    anyhow::ensure!(count < 1_000_000, "implausible tensor count {count}");
+
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag).with_context(|| format!("tensor {i} tag"))?;
+        let ndim = read_u32(&mut r)? as usize;
+        anyhow::ensure!(ndim <= 16, "implausible rank {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut raw = vec![0u8; n * 4];
+        r.read_exact(&mut raw).with_context(|| format!("tensor {i} data"))?;
+        let t = match tag[0] {
+            0 => Tensor::f32(
+                &shape,
+                raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )?,
+            1 => Tensor::i32(
+                &shape,
+                raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            )?,
+            other => bail!("unknown dtype tag {other}"),
+        };
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mita_ckpt_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let tensors = vec![
+            Tensor::f32(&[2, 3], vec![1.0, -2.0, 3.5, 0.0, 1e-8, -7.25]).unwrap(),
+            Tensor::i32(&[4], vec![1, -2, 3, 4]).unwrap(),
+            Tensor::scalar_i32(99),
+        ];
+        save(&path, &tensors).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(tensors, loaded);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("mita_ckpt_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join(format!("mita_ckpt_tr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        save(&path, &[Tensor::f32(&[8], vec![0.5; 8]).unwrap()]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,225 @@
+//! Engine thread: single-threaded owner of the PJRT [`Runtime`].
+//!
+//! PJRT handles are not `Send`, so the runtime lives on one dedicated OS
+//! thread; the frontend talks to it over an mpsc channel (std threads —
+//! the vendored crate set has no tokio). This is the same frontend/engine
+//! split as vLLM's router → engine core.
+//!
+//! Model parameters are *bound* once inside the engine (from an init
+//! artifact or a checkpoint) and referenced by key on each request, so the
+//! hot path converts only the batch tensor — never the weights.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Runtime, Tensor};
+
+/// Requests served by the engine thread.
+pub enum EngineRequest {
+    /// Execute `artifact` on `inputs`, optionally prefixed by a parameter
+    /// binding created earlier.
+    Run {
+        artifact: String,
+        binding: Option<String>,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    /// Create a binding by running a bundle's `init` artifact and keeping
+    /// its first `param_count` outputs (the parameters).
+    BindInit {
+        key: String,
+        init_artifact: String,
+        seed: i32,
+        param_count: usize,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    /// Create a binding from host tensors (e.g. a loaded checkpoint).
+    BindTensors { key: String, params: Vec<Tensor>, reply: mpsc::Sender<Result<()>> },
+    /// Stop the engine loop (makes `shutdown` safe even while other
+    /// EngineHandle clones are still alive).
+    Shutdown,
+}
+
+/// Handle for submitting jobs; cloneable across threads.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineRequest>,
+}
+
+impl EngineHandle {
+    fn submit<T>(&self, req: EngineRequest, rx: mpsc::Receiver<Result<T>>) -> Result<T> {
+        self.tx.send(req).map_err(|_| anyhow::anyhow!("engine thread terminated"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
+    }
+
+    /// Execute an artifact and block for the result.
+    pub fn run(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(
+            EngineRequest::Run { artifact: artifact.into(), binding: None, inputs, reply },
+            rx,
+        )
+    }
+
+    /// Execute an artifact with a parameter binding prefix.
+    pub fn run_bound(
+        &self,
+        artifact: &str,
+        binding: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(
+            EngineRequest::Run {
+                artifact: artifact.into(),
+                binding: Some(binding.into()),
+                inputs,
+                reply,
+            },
+            rx,
+        )
+    }
+
+    /// Bind parameters by running an init artifact inside the engine.
+    pub fn bind_init(
+        &self,
+        key: &str,
+        init_artifact: &str,
+        seed: i32,
+        param_count: usize,
+    ) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(
+            EngineRequest::BindInit {
+                key: key.into(),
+                init_artifact: init_artifact.into(),
+                seed,
+                param_count,
+                reply,
+            },
+            rx,
+        )
+    }
+
+    /// Bind parameters from host tensors (checkpoint weights).
+    pub fn bind_tensors(&self, key: &str, params: Vec<Tensor>) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(EngineRequest::BindTensors { key: key.into(), params, reply }, rx)
+    }
+}
+
+/// The running engine (join handle + submission side).
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine thread. `warmup` artifacts are compiled before any
+    /// job is served (keeps compiles off the latency path).
+    pub fn spawn(artifacts_dir: std::path::PathBuf, warmup: Vec<String>) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<EngineRequest>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let join = std::thread::Builder::new()
+            .name("mita-engine".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&artifacts_dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for art in &warmup {
+                    if let Err(e) = runtime.warmup(art) {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                }
+                let _ = ready_tx.send(Ok(()));
+
+                let mut bindings: HashMap<String, Vec<xla::Literal>> = HashMap::new();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        EngineRequest::Shutdown => break,
+                        EngineRequest::Run { artifact, binding, inputs, reply } => {
+                            let result = (|| -> Result<Vec<Tensor>> {
+                                let outs = match binding {
+                                    None => {
+                                        return runtime.run(&artifact, &inputs);
+                                    }
+                                    Some(key) => {
+                                        let params = bindings
+                                            .get(&key)
+                                            .with_context(|| format!("no binding {key:?}"))?;
+                                        runtime.run_hybrid(&artifact, params, &inputs)?
+                                    }
+                                };
+                                outs.iter().map(Tensor::from_literal).collect()
+                            })();
+                            let _ = reply.send(result);
+                        }
+                        EngineRequest::BindInit { key, init_artifact, seed, param_count, reply } => {
+                            let result = (|| -> Result<()> {
+                                let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
+                                let mut state =
+                                    runtime.run_literals(&init_artifact, &[seed_lit])?;
+                                anyhow::ensure!(
+                                    state.len() >= param_count,
+                                    "init returned {} < {param_count} outputs",
+                                    state.len()
+                                );
+                                state.truncate(param_count);
+                                bindings.insert(key, state);
+                                Ok(())
+                            })();
+                            let _ = reply.send(result);
+                        }
+                        EngineRequest::BindTensors { key, params, reply } => {
+                            let result = (|| -> Result<()> {
+                                let lits: Vec<xla::Literal> = params
+                                    .iter()
+                                    .map(Tensor::to_literal)
+                                    .collect::<Result<_>>()?;
+                                bindings.insert(key, lits);
+                                Ok(())
+                            })();
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        Ok(Engine { handle: EngineHandle { tx }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Shut down: signal the loop to stop and join the thread. Safe even
+    /// while other EngineHandle clones are alive (their later submissions
+    /// fail with "engine thread terminated").
+    pub fn shutdown(mut self) {
+        let _ = self.handle.tx.send(EngineRequest::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = self.handle.tx.send(EngineRequest::Shutdown);
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Serving/training metrics: streaming statistics, latency histograms,
+//! throughput meters, and the mIoU derivation used by Tab. 4.
+
+use std::time::{Duration, Instant};
+
+/// Welford streaming mean/variance.
+#[derive(Debug, Clone, Default)]
+pub struct Streaming {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Streaming {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Log-bucketed latency histogram (1us .. ~100s), exact count-based
+/// percentile queries over bucket midpoints.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [1us * GROWTH^i, 1us * GROWTH^(i+1))
+    buckets: Vec<u64>,
+    total: u64,
+    sum_secs: f64,
+    max_secs: f64,
+}
+
+const NBUCKETS: usize = 160;
+const GROWTH: f64 = 1.122_018_456_459_045; // 10^(1/20): 20 buckets per decade
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { buckets: vec![0; NBUCKETS], total: 0, sum_secs: 0.0, max_secs: 0.0 }
+    }
+
+    fn bucket_index(secs: f64) -> usize {
+        let micros = (secs * 1e6).max(1.0);
+        let idx = micros.log(GROWTH).floor() as isize;
+        idx.clamp(0, NBUCKETS as isize - 1) as usize
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        // Geometric midpoint of the bucket, in seconds.
+        GROWTH.powf(idx as f64 + 0.5) * 1e-6
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let secs = d.as_secs_f64();
+        self.buckets[Self::bucket_index(secs)] += 1;
+        self.total += 1;
+        self.sum_secs += secs;
+        self.max_secs = self.max_secs.max(secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_secs
+    }
+
+    /// Percentile in seconds (p in [0, 100]).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_value(i);
+            }
+        }
+        self.max_secs
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.total,
+            self.mean() * 1e3,
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.percentile(99.0) * 1e3,
+            self.max_secs * 1e3,
+        )
+    }
+}
+
+/// Items-per-second throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: u64,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Throughput { start: Instant::now(), items: 0 }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.items += n;
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn per_sec(&self) -> f64 {
+        let e = self.elapsed();
+        if e <= 0.0 {
+            0.0
+        } else {
+            self.items as f64 / e
+        }
+    }
+}
+
+/// Mean IoU from an accumulated confusion matrix (rows = ground truth).
+pub fn miou_from_confusion(confusion: &[f32], classes: usize) -> f64 {
+    assert_eq!(confusion.len(), classes * classes);
+    let mut ious = Vec::with_capacity(classes);
+    for c in 0..classes {
+        let tp = confusion[c * classes + c] as f64;
+        let row: f64 = (0..classes).map(|j| confusion[c * classes + j] as f64).sum();
+        let col: f64 = (0..classes).map(|i| confusion[i * classes + c] as f64).sum();
+        let union = row + col - tp;
+        if union > 0.0 {
+            ious.push(tp / union);
+        }
+    }
+    if ious.is_empty() {
+        0.0
+    } else {
+        ious.iter().sum::<f64>() / ious.len() as f64
+    }
+}
+
+/// Pixel accuracy from a confusion matrix.
+pub fn pixel_acc_from_confusion(confusion: &[f32], classes: usize) -> f64 {
+    let total: f64 = confusion.iter().map(|&x| x as f64).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    let correct: f64 = (0..classes).map(|c| confusion[c * classes + c] as f64).sum();
+    correct / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streaming_moments() {
+        let mut s = Streaming::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of uniform 1..1000us should be around 500us (bucketed).
+        assert!(p50 > 300e-6 && p50 < 800e-6, "p50={p50}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn histogram_extreme_values_clamped() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1));
+        h.record(Duration::from_secs(1000));
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) > 0.0);
+    }
+
+    #[test]
+    fn miou_perfect_and_degenerate() {
+        // Perfect 2-class confusion.
+        let conf = [5.0, 0.0, 0.0, 7.0];
+        assert!((miou_from_confusion(&conf, 2) - 1.0).abs() < 1e-12);
+        assert!((pixel_acc_from_confusion(&conf, 2) - 1.0).abs() < 1e-12);
+        // All wrong.
+        let conf = [0.0, 5.0, 7.0, 0.0];
+        assert_eq!(miou_from_confusion(&conf, 2), 0.0);
+        // Absent class ignored.
+        let conf = [4.0, 0.0, 0.0, 0.0];
+        assert!((miou_from_confusion(&conf, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = Throughput::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.items(), 15);
+        assert!(t.per_sec() > 0.0);
+    }
+}

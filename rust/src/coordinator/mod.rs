@@ -1,0 +1,21 @@
+//! L3 coordinator: everything that runs on the request path.
+//!
+//! - [`engine`]: dedicated thread owning the PJRT runtime (frontend/engine
+//!   split as in vLLM's router architecture).
+//! - [`batcher`]: pure dynamic-batching policy (max-batch / max-wait).
+//! - [`server`]: async serving loop + load generator + latency accounting.
+//! - [`trainer`]: AOT train-step driver with loss-curve tracking.
+//! - [`checkpoint`]: flat-parameter save/load.
+//! - [`metrics`]: histograms, streaming stats, mIoU.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+pub mod trainer;
+
+pub use batcher::{BatchPolicy, Batcher, Flush};
+pub use engine::{Engine, EngineHandle};
+pub use server::{serve, ServeConfig, ServeReport};
+pub use trainer::{eval_checkpoint, EvalResult, Trainer};

@@ -1,0 +1,269 @@
+//! Serving loop: open-loop load generator → bounded admission queue →
+//! dynamic batcher → engine thread → per-request latency accounting.
+//!
+//! This is the L3 system that measures the paper's Fig. 5 inference
+//! throughput: requests are single examples; the compiled `predict`
+//! artifact has a fixed batch size B, so the batcher packs/pads to B.
+//! Std threads + channels (no async runtime in the vendored crate set);
+//! the generator runs on its own thread, the batching loop on the caller's.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Flush};
+use crate::coordinator::engine::EngineHandle;
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::data::{BatchSource, Split};
+use crate::runtime::{BundleSpec, Tensor};
+
+/// Serving workload description.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bundle whose `predict` artifact serves requests.
+    pub bundle: String,
+    /// Engine parameter-binding key holding the model weights (created via
+    /// EngineHandle::bind_init / bind_tensors before serving).
+    pub binding: String,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Open-loop arrival rate (requests/second). 0 = closed loop (as fast
+    /// as the pipeline drains).
+    pub rate: f64,
+    /// Admission queue capacity (backpressure bound; overflow = rejected).
+    pub queue_cap: usize,
+    pub policy: BatchPolicy,
+}
+
+/// Aggregate serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub bundle: String,
+    pub completed: usize,
+    pub rejected: usize,
+    pub elapsed_secs: f64,
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub batches: u64,
+    pub pad_fraction: f64,
+}
+
+impl ServeReport {
+    pub fn row(&self) -> String {
+        format!(
+            "{:24} reqs={:5} rej={:4} thru={:8.1}/s mean={:7.2}ms p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms batches={:5} pad={:4.1}%",
+            self.bundle,
+            self.completed,
+            self.rejected,
+            self.throughput_rps,
+            self.mean_ms,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.batches,
+            self.pad_fraction * 100.0
+        )
+    }
+}
+
+struct Request {
+    /// Example index into the pre-generated input pool.
+    example: u64,
+    issued: Instant,
+}
+
+/// Extract example `j` of a batched tensor as a batch-1 tensor.
+pub(crate) fn slice_example(x: &Tensor, j: usize) -> Result<Tensor> {
+    let shape = x.shape();
+    let per = shape[1..].iter().product::<usize>();
+    let mut sub_shape = vec![1usize];
+    sub_shape.extend_from_slice(&shape[1..]);
+    match x {
+        Tensor::F32 { data, .. } => Tensor::f32(&sub_shape, data[j * per..(j + 1) * per].to_vec()),
+        Tensor::I32 { data, .. } => Tensor::i32(&sub_shape, data[j * per..(j + 1) * per].to_vec()),
+    }
+}
+
+/// Concatenate batch-1 example tensors (+ self-padding) to batch size B.
+pub(crate) fn pack_batch(examples: &[Tensor], b: usize) -> Result<Tensor> {
+    anyhow::ensure!(!examples.is_empty() && examples.len() <= b);
+    let first = &examples[0];
+    let mut shape = first.shape().to_vec();
+    shape[0] = b;
+    match first {
+        Tensor::F32 { data: d0, .. } => {
+            let per = d0.len();
+            let mut data = Vec::with_capacity(per * b);
+            for e in examples {
+                data.extend_from_slice(e.as_f32()?);
+            }
+            for _ in examples.len()..b {
+                data.extend_from_slice(d0); // pad with a copy of example 0
+            }
+            Tensor::f32(&shape, data)
+        }
+        Tensor::I32 { data: d0, .. } => {
+            let per = d0.len();
+            let mut data = Vec::with_capacity(per * b);
+            for e in examples {
+                data.extend_from_slice(e.as_i32()?);
+            }
+            for _ in examples.len()..b {
+                data.extend_from_slice(d0);
+            }
+            Tensor::i32(&shape, data)
+        }
+    }
+}
+
+/// Run the serving benchmark: generator thread → queue → batcher → engine.
+pub fn serve(
+    engine: &EngineHandle,
+    bundle: &BundleSpec,
+    bundle_name: &str,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let predict = bundle
+        .artifacts
+        .get("predict")
+        .with_context(|| format!("bundle {bundle_name} has no predict artifact"))?
+        .clone();
+    let source = BatchSource::for_bundle(bundle)?;
+    let b = bundle.train.batch_size;
+
+    // Pre-generate the client input pool from the val split.
+    let pool_batches = 4usize;
+    let mut pool: Vec<Tensor> = Vec::with_capacity(pool_batches * b);
+    for i in 0..pool_batches {
+        let (x, _) = source.batch(Split::Val, i as u64)?;
+        for j in 0..b {
+            pool.push(slice_example(&x, j)?);
+        }
+    }
+
+    // Bounded admission queue: a channel plus an explicit depth counter
+    // (std channels have no try_send-with-capacity; the counter enforces
+    // the backpressure bound).
+    let (tx, rx) = mpsc::channel::<Request>();
+    let depth = Arc::new(AtomicUsize::new(0));
+    let rejected = Arc::new(AtomicUsize::new(0));
+
+    let gen_depth = depth.clone();
+    let gen_rejected = rejected.clone();
+    let gen_requests = cfg.requests;
+    let rate = cfg.rate;
+    let queue_cap = cfg.queue_cap;
+    let generator = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        for i in 0..gen_requests {
+            if rate > 0.0 {
+                let due = t0 + Duration::from_secs_f64(i as f64 / rate);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+            }
+            if gen_depth.load(Ordering::Acquire) >= queue_cap {
+                gen_rejected.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            gen_depth.fetch_add(1, Ordering::AcqRel);
+            if tx.send(Request { example: i as u64, issued: Instant::now() }).is_err() {
+                break;
+            }
+        }
+        // Dropping tx closes the queue.
+    });
+
+    // ---- batching + dispatch loop (caller thread) -------------------------
+    let mut batcher: Batcher<Request> = Batcher::new(cfg.policy);
+    let mut hist = LatencyHistogram::new();
+    let mut completed = 0usize;
+    let t0 = Instant::now();
+    let mut open = true;
+
+    while open || !batcher.is_empty() {
+        match batcher.poll(Instant::now()) {
+            Flush::Take(n) => {
+                let taken = batcher.take(n);
+                depth.fetch_sub(taken.len(), Ordering::AcqRel);
+                let examples: Vec<Tensor> = taken
+                    .iter()
+                    .map(|p| pool[p.payload.example as usize % pool.len()].clone())
+                    .collect();
+                let batch = pack_batch(&examples, b)?;
+                let outs = engine.run_bound(&predict, &cfg.binding, vec![batch])?;
+                let finish = Instant::now();
+                let _preds = outs[0].argmax_last()?; // per-request responses
+                for p in taken {
+                    hist.record(finish.duration_since(p.payload.issued));
+                    completed += 1;
+                }
+            }
+            Flush::Wait(hint) => {
+                let timeout = hint.unwrap_or(Duration::from_millis(20));
+                match rx.recv_timeout(timeout) {
+                    Ok(req) => batcher.push(req, Instant::now()),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            }
+        }
+        // Opportunistically drain queued arrivals without blocking.
+        while let Ok(req) = rx.try_recv() {
+            batcher.push(req, Instant::now());
+        }
+    }
+
+    generator.join().map_err(|_| anyhow::anyhow!("generator thread panicked"))?;
+    let elapsed = t0.elapsed().as_secs_f64();
+    Ok(ServeReport {
+        bundle: bundle_name.to_string(),
+        completed,
+        rejected: rejected.load(Ordering::Relaxed),
+        elapsed_secs: elapsed,
+        throughput_rps: completed as f64 / elapsed,
+        mean_ms: hist.mean() * 1e3,
+        p50_ms: hist.percentile(50.0) * 1e3,
+        p95_ms: hist.percentile(95.0) * 1e3,
+        p99_ms: hist.percentile(99.0) * 1e3,
+        batches: batcher.batches_emitted,
+        pad_fraction: batcher.pad_fraction(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_batch_pads_with_first_example() {
+        let e1 = Tensor::f32(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let e2 = Tensor::f32(&[1, 2], vec![3.0, 4.0]).unwrap();
+        let packed = pack_batch(&[e1, e2], 4).unwrap();
+        assert_eq!(packed.shape(), &[4, 2]);
+        assert_eq!(packed.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0, 1.0, 2.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn pack_batch_rejects_oversize() {
+        let e = Tensor::f32(&[1, 1], vec![0.0]).unwrap();
+        assert!(pack_batch(&[e.clone(), e.clone(), e], 2).is_err());
+    }
+
+    #[test]
+    fn slice_example_roundtrip() {
+        let x = Tensor::i32(&[2, 3], vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let s = slice_example(&x, 1).unwrap();
+        assert_eq!(s.shape(), &[1, 3]);
+        assert_eq!(s.as_i32().unwrap(), &[4, 5, 6]);
+        let packed = pack_batch(&[s], 2).unwrap();
+        assert_eq!(packed.as_i32().unwrap(), &[4, 5, 6, 4, 5, 6]);
+    }
+}

@@ -1,0 +1,295 @@
+//! Training driver: runs a bundle's AOT `train_step` artifact in a loop,
+//! feeding batches from the bundle's synthetic data source, tracking the
+//! loss curve, and evaluating with the bundle's `eval_step`.
+//!
+//! The training state (params + AdamW moments + step counter) lives as a
+//! `Vec<xla::Literal>` threaded between executions — no Python, no pytrees;
+//! the manifest's `param_layout` defines the flat order.
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::metrics::{miou_from_confusion, pixel_acc_from_confusion, Streaming};
+use crate::data::{BatchSource, Split};
+use crate::runtime::{Runtime, Tensor};
+
+/// One recorded training step.
+#[derive(Debug, Clone)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub batch_acc: f64,
+    pub secs: f64,
+}
+
+/// Aggregate evaluation result.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub loss: f64,
+    /// Classification accuracy (cls/lra) or pixel accuracy (seg).
+    pub accuracy: f64,
+    /// mIoU for segmentation bundles, None otherwise.
+    pub miou: Option<f64>,
+    pub examples: usize,
+}
+
+/// Training/eval driver bound to one bundle.
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    bundle_name: String,
+    /// Flat state: P params, P mu, P nu, step (P = param_count).
+    state: Vec<xla::Literal>,
+    p_count: usize,
+    batch_size: usize,
+    is_seg: bool,
+    num_classes: usize,
+    pub history: Vec<StepRecord>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize from the bundle's `init` artifact with the given seed.
+    pub fn new(runtime: &'rt Runtime, bundle_name: &str, seed: i32) -> Result<Self> {
+        let bundle = runtime.manifest().bundle(bundle_name)?.clone();
+        let init_art = runtime.manifest().bundle_artifact(bundle_name, "init")?.to_string();
+        let state = runtime
+            .run_literals(&init_art, &[Tensor::scalar_i32(seed).to_literal()?])
+            .with_context(|| format!("init {bundle_name}"))?;
+        let p_count = bundle.param_count();
+        anyhow::ensure!(
+            state.len() == 3 * p_count + 1,
+            "init returned {} literals, expected {}",
+            state.len(),
+            3 * p_count + 1
+        );
+        Ok(Trainer {
+            runtime,
+            bundle_name: bundle_name.to_string(),
+            state,
+            p_count,
+            batch_size: bundle.train.batch_size,
+            is_seg: bundle.model.task == "seg_image",
+            num_classes: bundle.model.num_classes,
+            history: Vec::new(),
+        })
+    }
+
+    /// Initialize like [`Trainer::new`] but overwrite the parameters with a
+    /// checkpoint (optimizer moments stay zero) — the Tab. 7 warm start.
+    pub fn with_warm_start(
+        runtime: &'rt Runtime,
+        bundle_name: &str,
+        seed: i32,
+        params: &[Tensor],
+    ) -> Result<Self> {
+        let mut t = Self::new(runtime, bundle_name, seed)?;
+        anyhow::ensure!(
+            params.len() == t.p_count,
+            "warm start has {} tensors, bundle wants {}",
+            params.len(),
+            t.p_count
+        );
+        for (i, p) in params.iter().enumerate() {
+            t.state[i] = p.to_literal()?;
+        }
+        Ok(t)
+    }
+
+    pub fn bundle_name(&self) -> &str {
+        &self.bundle_name
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.p_count
+    }
+
+    /// Current parameters as host tensors (for checkpointing / swaps).
+    pub fn params(&self) -> Result<Vec<Tensor>> {
+        self.state[..self.p_count].iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        checkpoint::save(path, &self.params()?)
+    }
+
+    /// Run one training step on batch (x, y); returns (loss, batch accuracy).
+    pub fn step(&mut self, x: Tensor, y: Tensor) -> Result<(f64, f64)> {
+        let art = self.runtime.manifest().bundle_artifact(&self.bundle_name, "train_step")?;
+        let t0 = Instant::now();
+        let denom = if self.is_seg {
+            // per-token accuracy
+            y.len() as f64
+        } else {
+            self.batch_size as f64
+        };
+        let out = self.runtime.run_hybrid(art, &self.state, &[x, y])?;
+        anyhow::ensure!(
+            out.len() == 3 * self.p_count + 3,
+            "train_step returned {} outputs",
+            out.len()
+        );
+        let mut out = out;
+        let correct = Tensor::from_literal(&out.pop().unwrap())?.scalar()?;
+        let loss = Tensor::from_literal(&out.pop().unwrap())?.scalar()?;
+        self.state = out; // params' + mu' + nu' + step'
+        let rec = StepRecord {
+            step: self.history.len(),
+            loss,
+            batch_acc: correct / denom,
+            secs: t0.elapsed().as_secs_f64(),
+        };
+        self.history.push(rec);
+        Ok((loss, correct / denom))
+    }
+
+    /// Train for `steps` batches from the source's train split.
+    pub fn train(&mut self, source: &BatchSource, steps: usize, log_every: usize) -> Result<()> {
+        for i in 0..steps {
+            let (x, y) = source.batch(Split::Train, i as u64)?;
+            let (loss, acc) = self.step(x, y)?;
+            if log_every > 0 && (i + 1) % log_every == 0 {
+                eprintln!(
+                    "[{}] step {:4}/{} loss={:.4} batch_acc={:.3}",
+                    self.bundle_name,
+                    i + 1,
+                    steps,
+                    loss,
+                    acc
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate on `batches` val batches using this bundle's eval artifact.
+    pub fn eval(&self, source: &BatchSource, batches: usize) -> Result<EvalResult> {
+        self.eval_with(source, batches, &self.bundle_name)
+    }
+
+    /// Evaluate the *current parameters* under a different bundle's
+    /// eval_step (attention-swap experiments: Fig. 9 / Tab. 4 ▽ / Fig. 10).
+    /// The other bundle must share this bundle's param layout.
+    pub fn eval_with(
+        &self,
+        source: &BatchSource,
+        batches: usize,
+        eval_bundle: &str,
+    ) -> Result<EvalResult> {
+        let art = self.runtime.manifest().bundle_artifact(eval_bundle, "eval_step")?;
+        eval_params(
+            self.runtime,
+            art,
+            &self.state[..self.p_count],
+            source,
+            batches,
+            self.is_seg,
+            self.num_classes,
+        )
+    }
+
+    /// Mean training-step wall time (excluding the first, which compiles).
+    pub fn mean_step_secs(&self) -> f64 {
+        let mut s = Streaming::default();
+        for r in self.history.iter().skip(1) {
+            s.push(r.secs);
+        }
+        s.mean()
+    }
+
+    /// Final-quarter mean loss (robust "converged loss" summary).
+    pub fn tail_loss(&self) -> f64 {
+        let n = self.history.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let tail = &self.history[n - (n / 4).max(1)..];
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+}
+
+/// Evaluate a parameter list under an eval artifact (shared by Trainer and
+/// checkpoint-based flows).
+#[allow(clippy::too_many_arguments)]
+pub fn eval_params(
+    runtime: &Runtime,
+    eval_artifact: &str,
+    params: &[xla::Literal],
+    source: &BatchSource,
+    batches: usize,
+    is_seg: bool,
+    num_classes: usize,
+) -> Result<EvalResult> {
+    let mut total_loss = 0.0;
+    let mut total_correct = 0.0;
+    let mut examples = 0usize;
+    let mut confusion = vec![0f32; num_classes * num_classes];
+
+    for i in 0..batches {
+        let (x, y) = source.batch(Split::Val, i as u64)?;
+        let bsz = x.shape()[0];
+        let tokens = if is_seg { y.len() } else { bsz };
+        let out = runtime.run_hybrid(eval_artifact, params, &[x, y])?;
+        anyhow::ensure!(out.len() == 2, "eval_step returned {} outputs", out.len());
+        let loss = Tensor::from_literal(&out[0])?.scalar()?;
+        if is_seg {
+            let conf = Tensor::from_literal(&out[1])?;
+            let cd = conf.as_f32()?;
+            for (a, &b) in confusion.iter_mut().zip(cd) {
+                *a += b;
+            }
+            total_loss += loss * tokens as f64; // seg eval loss is a mean
+        } else {
+            let correct = Tensor::from_literal(&out[1])?.scalar()?;
+            total_correct += correct;
+            total_loss += loss; // cls eval loss is a sum
+        }
+        examples += tokens;
+    }
+
+    if is_seg {
+        Ok(EvalResult {
+            loss: total_loss / examples.max(1) as f64,
+            accuracy: pixel_acc_from_confusion(&confusion, num_classes),
+            miou: Some(miou_from_confusion(&confusion, num_classes)),
+            examples,
+        })
+    } else {
+        Ok(EvalResult {
+            loss: total_loss / examples.max(1) as f64,
+            accuracy: total_correct / examples.max(1) as f64,
+            miou: None,
+            examples,
+        })
+    }
+}
+
+/// Evaluate a checkpoint's params under any bundle's eval artifact.
+pub fn eval_checkpoint(
+    runtime: &Runtime,
+    ckpt_path: &std::path::Path,
+    eval_bundle: &str,
+    batches: usize,
+) -> Result<EvalResult> {
+    let bundle = runtime.manifest().bundle(eval_bundle)?.clone();
+    let params = checkpoint::load(ckpt_path)?;
+    anyhow::ensure!(
+        params.len() == bundle.param_count(),
+        "checkpoint has {} tensors, bundle wants {}",
+        params.len(),
+        bundle.param_count()
+    );
+    let lits: Vec<xla::Literal> =
+        params.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+    let art = runtime.manifest().bundle_artifact(eval_bundle, "eval_step")?;
+    let source = BatchSource::for_bundle(&bundle)?;
+    eval_params(
+        runtime,
+        art,
+        &lits,
+        &source,
+        batches,
+        bundle.model.task == "seg_image",
+        bundle.model.num_classes,
+    )
+}

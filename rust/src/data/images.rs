@@ -1,0 +1,322 @@
+//! Synthetic class-conditional image corpus — the ImageNet-1K / ADE20K
+//! stand-in (DESIGN.md §3 substitutions).
+//!
+//! Each class is a deterministic *prototype*: a set of Gaussian blobs with
+//! class-specific positions/scales/colors. A sample is its prototype under a
+//! random global translation (wrapping), per-blob jitter, brightness scaling
+//! and pixel noise — so classification requires recognizing the *global
+//! arrangement* of blobs (attention-relevant structure), not a single pixel.
+//!
+//! The same geometry yields dense labels: every pixel is labeled by the blob
+//! region that dominates it (background = class 0), giving the ADE20K-style
+//! per-patch segmentation targets of Tab. 4.
+
+use crate::data::rng::Rng;
+use crate::runtime::Tensor;
+use anyhow::Result;
+
+/// Dataset split (affects the derived RNG stream only).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+impl Split {
+    /// Stable stream id used to derive split-specific RNG streams.
+    pub fn stream_id(self) -> u64 {
+        match self {
+            Split::Train => 0,
+            Split::Val => 1,
+        }
+    }
+}
+
+/// One Gaussian blob of a class prototype.
+#[derive(Debug, Clone)]
+struct Blob {
+    cy: f32,
+    cx: f32,
+    sigma: f32,
+    color: [f32; 3],
+    /// Segmentation class this blob paints (1..seg_classes; 0 = background).
+    seg_class: i32,
+}
+
+/// Corpus configuration + deterministic prototypes.
+#[derive(Debug, Clone)]
+pub struct ImageCorpus {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub seg_classes: usize,
+    pub seed: u64,
+    /// Per-pixel additive Gaussian noise (difficulty knob; bundles may
+    /// override via meta "noise_sigma").
+    pub noise_sigma: f32,
+    blobs: Vec<Vec<Blob>>, // per class
+}
+
+pub const BLOBS_PER_CLASS: usize = 4;
+
+impl ImageCorpus {
+    pub fn new(
+        height: usize,
+        width: usize,
+        channels: usize,
+        num_classes: usize,
+        seg_classes: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(seg_classes >= 2, "need background + at least one class");
+        // A shared palette of blob appearances (color/scale) is drawn once;
+        // classes differ only in the *arrangement* of which palette entries
+        // sit where. This blocks single-pixel color shortcuts: telling
+        // classes apart requires relating multiple regions — the attention-
+        // relevant structure — and keeps accuracies off the ceiling.
+        let mut prng = Rng::derive(seed, &[0xA1E77E]);
+        let mut blobs = Vec::with_capacity(num_classes);
+        let palette: Vec<([f32; 3], f32)> = (0..BLOBS_PER_CLASS)
+            .map(|_| {
+                (
+                    [
+                        prng.range_f32(-1.0, 1.0),
+                        prng.range_f32(-1.0, 1.0),
+                        prng.range_f32(-1.0, 1.0),
+                    ],
+                    prng.range_f32(0.07, 0.13),
+                )
+            })
+            .collect();
+        for c in 0..num_classes {
+            let mut rng = Rng::derive(seed, &[0xB10B, c as u64]);
+            let mut cls = Vec::with_capacity(BLOBS_PER_CLASS);
+            for b in 0..BLOBS_PER_CLASS {
+                let (color, sigma) = palette[b];
+                cls.push(Blob {
+                    cy: rng.range_f32(0.15, 0.85),
+                    cx: rng.range_f32(0.15, 0.85),
+                    sigma,
+                    color,
+                    seg_class: 1 + ((c * BLOBS_PER_CLASS + b) % (seg_classes - 1)) as i32,
+                });
+            }
+            blobs.push(cls);
+        }
+        ImageCorpus {
+            height,
+            width,
+            channels,
+            num_classes,
+            seg_classes,
+            seed,
+            noise_sigma: 0.45,
+            blobs,
+        }
+    }
+
+    /// Override the noise level (returns self for builder-style use).
+    pub fn with_noise(mut self, sigma: f32) -> Self {
+        self.noise_sigma = sigma;
+        self
+    }
+
+    /// Deterministic label of sample `idx` (balanced round-robin + hash mix).
+    pub fn label(&self, split: Split, idx: u64) -> i32 {
+        let mut rng = Rng::derive(self.seed, &[0x1ABE1, split.stream_id(), idx]);
+        rng.below(self.num_classes) as i32
+    }
+
+    /// Render one sample: (pixels [H*W*C] row-major HWC, per-pixel seg labels).
+    pub fn render(&self, split: Split, idx: u64) -> (Vec<f32>, Vec<i32>, i32) {
+        let label = self.label(split, idx);
+        let mut rng = Rng::derive(self.seed, &[0x5A3B1E, split.stream_id(), idx]);
+        let (h, w, ch) = (self.height, self.width, self.channels);
+
+        // Global wrap-around translation + brightness; per-blob jitter.
+        let dy = rng.range_f32(-0.2, 0.2);
+        let dx = rng.range_f32(-0.2, 0.2);
+        let brightness = rng.range_f32(0.7, 1.3);
+        let noise_sigma = self.noise_sigma;
+
+        let proto = &self.blobs[label as usize];
+        let jitter: Vec<(f32, f32)> = proto
+            .iter()
+            .map(|_| (rng.range_f32(-0.04, 0.04), rng.range_f32(-0.04, 0.04)))
+            .collect();
+
+        let mut pixels = vec![0.0f32; h * w * ch];
+        let mut seg = vec![0i32; h * w];
+        for y in 0..h {
+            for x in 0..w {
+                let fy = (y as f32 + 0.5) / h as f32;
+                let fx = (x as f32 + 0.5) / w as f32;
+                let mut best_infl = 0.0f32;
+                let mut best_seg = 0i32;
+                let mut acc = [0.0f32; 3];
+                for (b, blob) in proto.iter().enumerate() {
+                    // Wrapping distance on the unit torus keeps translated
+                    // blobs whole.
+                    let mut ddy = (fy - (blob.cy + dy + jitter[b].0)).abs() % 1.0;
+                    let mut ddx = (fx - (blob.cx + dx + jitter[b].1)).abs() % 1.0;
+                    if ddy > 0.5 {
+                        ddy = 1.0 - ddy;
+                    }
+                    if ddx > 0.5 {
+                        ddx = 1.0 - ddx;
+                    }
+                    let d2 = ddy * ddy + ddx * ddx;
+                    let infl = (-d2 / (2.0 * blob.sigma * blob.sigma)).exp();
+                    for (a, &col) in acc.iter_mut().zip(blob.color.iter()) {
+                        *a += infl * col;
+                    }
+                    if infl > best_infl {
+                        best_infl = infl;
+                        best_seg = blob.seg_class;
+                    }
+                }
+                seg[y * w + x] = if best_infl > 0.3 { best_seg } else { 0 };
+                for c in 0..ch {
+                    let noise = rng.normal() as f32 * noise_sigma;
+                    pixels[(y * w + x) * ch + c] = acc[c.min(2)] * brightness + noise;
+                }
+            }
+        }
+        (pixels, seg, label)
+    }
+
+    /// Per-patch segmentation labels: majority pixel label within each patch.
+    pub fn patch_labels(&self, seg: &[i32], patch: usize) -> Vec<i32> {
+        let (h, w) = (self.height, self.width);
+        let (gh, gw) = (h / patch, w / patch);
+        let mut out = Vec::with_capacity(gh * gw);
+        for py in 0..gh {
+            for px in 0..gw {
+                let mut counts = vec![0usize; self.seg_classes];
+                for y in 0..patch {
+                    for x in 0..patch {
+                        let lbl = seg[(py * patch + y) * w + (px * patch + x)];
+                        counts[lbl as usize] += 1;
+                    }
+                }
+                let best = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, &c)| c)
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0);
+                out.push(best);
+            }
+        }
+        out
+    }
+
+    /// Classification batch: (x [B,H,W,C] f32, y [B] i32).
+    pub fn batch_cls(&self, split: Split, start: u64, batch: usize) -> Result<(Tensor, Tensor)> {
+        let (h, w, ch) = (self.height, self.width, self.channels);
+        let mut xs = Vec::with_capacity(batch * h * w * ch);
+        let mut ys = Vec::with_capacity(batch);
+        for i in 0..batch {
+            let (px, _, label) = self.render(split, start + i as u64);
+            xs.extend_from_slice(&px);
+            ys.push(label);
+        }
+        Ok((Tensor::f32(&[batch, h, w, ch], xs)?, Tensor::i32(&[batch], ys)?))
+    }
+
+    /// Segmentation batch: (x [B,H,W,C] f32, y [B, N] i32) with N = patches.
+    pub fn batch_seg(
+        &self,
+        split: Split,
+        start: u64,
+        batch: usize,
+        patch: usize,
+    ) -> Result<(Tensor, Tensor)> {
+        let (h, w, ch) = (self.height, self.width, self.channels);
+        let n = (h / patch) * (w / patch);
+        let mut xs = Vec::with_capacity(batch * h * w * ch);
+        let mut ys = Vec::with_capacity(batch * n);
+        for i in 0..batch {
+            let (px, seg, _) = self.render(split, start + i as u64);
+            xs.extend_from_slice(&px);
+            ys.extend_from_slice(&self.patch_labels(&seg, patch));
+        }
+        Ok((Tensor::f32(&[batch, h, w, ch], xs)?, Tensor::i32(&[batch, n], ys)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> ImageCorpus {
+        ImageCorpus::new(32, 32, 3, 10, 8, 42)
+    }
+
+    #[test]
+    fn deterministic_rendering() {
+        let c = corpus();
+        let (a, sa, la) = c.render(Split::Train, 7);
+        let (b, sb, lb) = c.render(Split::Train, 7);
+        assert_eq!(a, b);
+        assert_eq!(sa, sb);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let c = corpus();
+        let (a, _, _) = c.render(Split::Train, 7);
+        let (b, _, _) = c.render(Split::Val, 7);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_in_range_and_balanced() {
+        let c = corpus();
+        let mut counts = vec![0usize; 10];
+        for i in 0..1000 {
+            let l = c.label(Split::Train, i);
+            assert!((0..10).contains(&l));
+            counts[l as usize] += 1;
+        }
+        // Roughly balanced: each class within 3x of uniform.
+        for &cnt in &counts {
+            assert!(cnt > 30 && cnt < 300, "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn seg_labels_in_range() {
+        let c = corpus();
+        let (_, seg, _) = c.render(Split::Train, 3);
+        assert!(seg.iter().all(|&s| (0..8).contains(&s)));
+        // Some foreground must exist.
+        assert!(seg.iter().any(|&s| s > 0));
+        let patches = c.patch_labels(&seg, 4);
+        assert_eq!(patches.len(), 64);
+        assert!(patches.iter().all(|&s| (0..8).contains(&s)));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let c = corpus();
+        let (x, y) = c.batch_cls(Split::Train, 0, 4).unwrap();
+        assert_eq!(x.shape(), &[4, 32, 32, 3]);
+        assert_eq!(y.shape(), &[4]);
+        let (x, y) = c.batch_seg(Split::Val, 0, 2, 4).unwrap();
+        assert_eq!(x.shape(), &[2, 32, 32, 3]);
+        assert_eq!(y.shape(), &[2, 64]);
+    }
+
+    #[test]
+    fn pixel_stats_reasonable() {
+        let c = corpus();
+        let (px, _, _) = c.render(Split::Train, 0);
+        let mean = px.iter().sum::<f32>() / px.len() as f32;
+        let var = px.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / px.len() as f32;
+        assert!(mean.abs() < 1.0, "mean {mean}");
+        assert!(var > 0.01 && var < 4.0, "var {var}");
+    }
+}

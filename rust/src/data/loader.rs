@@ -1,0 +1,91 @@
+//! Bundle-driven batch source: reads a bundle's model config from the
+//! manifest and produces matching (x, y) batches from the right synthetic
+//! generator. This is the only glue between the manifest and `data/`.
+
+use anyhow::{bail, Result};
+
+use crate::data::images::{ImageCorpus, Split};
+use crate::data::lra::{self, SeqTask};
+use crate::runtime::{BundleSpec, Tensor};
+
+/// Default corpus seed; experiments may override via `with_seed`.
+pub const DEFAULT_SEED: u64 = 0xC0FFEE;
+
+/// A deterministic stream of batches for one bundle's task.
+pub struct BatchSource {
+    kind: SourceKind,
+    batch_size: usize,
+}
+
+enum SourceKind {
+    Cls { corpus: ImageCorpus },
+    Seg { corpus: ImageCorpus, patch: usize },
+    Lra { task: Box<dyn SeqTask> },
+}
+
+impl BatchSource {
+    /// Build the batch source matching a bundle's model config.
+    pub fn for_bundle(bundle: &BundleSpec) -> Result<Self> {
+        Self::for_bundle_seeded(bundle, DEFAULT_SEED)
+    }
+
+    pub fn for_bundle_seeded(bundle: &BundleSpec, seed: u64) -> Result<Self> {
+        let m = &bundle.model;
+        let batch_size = bundle.train.batch_size;
+        let noise = bundle
+            .meta
+            .get("noise_sigma")
+            .and_then(|v| v.as_f64().ok())
+            .unwrap_or(0.45) as f32;
+        let kind = match m.task.as_str() {
+            "cls_image" => SourceKind::Cls {
+                corpus: ImageCorpus::new(
+                    m.image_hw.0,
+                    m.image_hw.1,
+                    m.channels,
+                    m.num_classes,
+                    8,
+                    seed,
+                )
+                .with_noise(noise),
+            },
+            "seg_image" => SourceKind::Seg {
+                corpus: ImageCorpus::new(
+                    m.image_hw.0,
+                    m.image_hw.1,
+                    m.channels,
+                    // Classification classes unused for seg targets; the seg
+                    // label space must match num_classes.
+                    10,
+                    m.num_classes,
+                    seed,
+                ),
+                patch: m.patch,
+            },
+            "lra" => {
+                let task_name = bundle
+                    .meta_str("task")
+                    .unwrap_or("text");
+                SourceKind::Lra { task: lra::by_name(task_name, m.seq_len, m.vocab, seed) }
+            }
+            other => bail!("unknown task {other:?}"),
+        };
+        Ok(BatchSource { kind, batch_size })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    /// The `i`-th batch of a split (deterministic, random-access).
+    pub fn batch(&self, split: Split, i: u64) -> Result<(Tensor, Tensor)> {
+        let start = i * self.batch_size as u64;
+        match &self.kind {
+            SourceKind::Cls { corpus } => corpus.batch_cls(split, start, self.batch_size),
+            SourceKind::Seg { corpus, patch } => {
+                corpus.batch_seg(split, start, self.batch_size, *patch)
+            }
+            SourceKind::Lra { task } => lra::batch(task.as_ref(), split, start, self.batch_size),
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Sequence-image classification (LRA "Image" stand-in).
+//!
+//! A grayscale rendering of the synthetic blob corpus, flattened to a pixel
+//! sequence and quantized to token ids — the sCIFAR-style "classify an image
+//! you can only read as a 1-D stream" task.
+
+use crate::data::images::{ImageCorpus, Split};
+use crate::data::lra::SeqTask;
+use crate::data::rng::Rng;
+
+pub struct SeqImage {
+    side: usize,
+    vocab: usize,
+    corpus: ImageCorpus,
+}
+
+impl SeqImage {
+    pub fn new(seq_len: usize, vocab: usize, seed: u64) -> Self {
+        let side = (seq_len as f64).sqrt() as usize;
+        assert_eq!(side * side, seq_len, "seq_len must be a perfect square");
+        // Grayscale (1 channel), 10 classes like sCIFAR.
+        let corpus = ImageCorpus::new(side, side, 1, 10, 2, seed ^ 0x1A6E);
+        SeqImage { side, vocab, corpus }
+    }
+}
+
+impl SeqTask for SeqImage {
+    fn name(&self) -> &'static str {
+        "image"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.side * self.side
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn sample(&self, split: Split, idx: u64) -> (Vec<i32>, i32) {
+        let (pixels, _, label) = self.corpus.render(split, idx);
+        // Quantize pixel intensities (~[-2, 2]) into vocab bins; dithering
+        // noise is already in the render.
+        let v = self.vocab as f32;
+        let tokens = pixels
+            .iter()
+            .map(|&p| {
+                let unit = ((p + 2.0) / 4.0).clamp(0.0, 0.999);
+                (unit * v) as i32
+            })
+            .collect();
+        let _ = Rng::new(0); // (rng unused; kept for interface symmetry)
+        (tokens, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantization_in_vocab() {
+        let t = SeqImage::new(256, 32, 41);
+        let (tokens, label) = t.sample(Split::Train, 0);
+        assert_eq!(tokens.len(), 256);
+        assert!(tokens.iter().all(|&x| (0..32).contains(&x)));
+        assert!((0..10).contains(&label));
+    }
+
+    #[test]
+    fn uses_multiple_bins() {
+        let t = SeqImage::new(256, 32, 42);
+        let (tokens, _) = t.sample(Split::Train, 1);
+        let distinct: std::collections::HashSet<i32> = tokens.iter().copied().collect();
+        assert!(distinct.len() > 4, "only {} distinct bins", distinct.len());
+    }
+}

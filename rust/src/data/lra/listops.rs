@@ -1,0 +1,221 @@
+//! ListOps: hierarchical prefix-notation expressions over digits 0-9.
+//!
+//! Token vocabulary (16 = the LRA convention of fused open-brackets):
+//!   0..=9   digits
+//!   10..=13 `[MAX` `[MIN` `[MED` `[SM`
+//!   14      `]`
+//!   15      PAD
+//!
+//! The label is the expression's value (10-way classification). Ground
+//! truth is computed by the generator itself — solving the task requires
+//! modeling the full tree, the paper's long-range hierarchical benchmark.
+
+use crate::data::images::Split;
+use crate::data::lra::SeqTask;
+use crate::data::rng::Rng;
+
+pub const TOK_CLOSE: i32 = 14;
+pub const TOK_PAD: i32 = 15;
+pub const VOCAB: usize = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Op {
+    Max,
+    Min,
+    Med,
+    Sm,
+}
+
+impl Op {
+    fn token(self) -> i32 {
+        match self {
+            Op::Max => 10,
+            Op::Min => 11,
+            Op::Med => 12,
+            Op::Sm => 13,
+        }
+    }
+
+    fn apply(self, args: &[i32]) -> i32 {
+        debug_assert!(!args.is_empty());
+        match self {
+            Op::Max => *args.iter().max().unwrap(),
+            Op::Min => *args.iter().min().unwrap(),
+            Op::Med => {
+                let mut v = args.to_vec();
+                v.sort_unstable();
+                v[(v.len() - 1) / 2]
+            }
+            Op::Sm => args.iter().sum::<i32>() % 10,
+        }
+    }
+}
+
+pub struct ListOps {
+    seq_len: usize,
+    seed: u64,
+    max_depth: usize,
+    max_args: usize,
+}
+
+impl ListOps {
+    pub fn new(seq_len: usize, seed: u64) -> Self {
+        ListOps { seq_len, seed, max_depth: 4, max_args: 5 }
+    }
+
+    /// Recursively emit a subexpression; returns its value.
+    /// `budget` is the remaining token budget (mutated).
+    fn gen_expr(&self, rng: &mut Rng, depth: usize, budget: &mut usize, out: &mut Vec<i32>) -> i32 {
+        // A node costs at least 2 (open+close) + 2 children.
+        if depth >= self.max_depth || *budget < 6 || rng.coin(0.25) {
+            *budget -= 1;
+            let d = rng.below(10) as i32;
+            out.push(d);
+            return d;
+        }
+        let op = match rng.below(4) {
+            0 => Op::Max,
+            1 => Op::Min,
+            2 => Op::Med,
+            _ => Op::Sm,
+        };
+        out.push(op.token());
+        *budget -= 2; // open + close
+        let nargs = 2 + rng.below(self.max_args - 1);
+        let mut vals = Vec::with_capacity(nargs);
+        for _ in 0..nargs {
+            if *budget < 2 {
+                break;
+            }
+            vals.push(self.gen_expr(rng, depth + 1, budget, out));
+        }
+        if vals.is_empty() {
+            // Degenerate: ensure at least one argument.
+            *budget = budget.saturating_sub(1);
+            let d = rng.below(10) as i32;
+            out.push(d);
+            vals.push(d);
+        }
+        out.push(TOK_CLOSE);
+        op.apply(&vals)
+    }
+}
+
+impl SeqTask for ListOps {
+    fn name(&self) -> &'static str {
+        "listops"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        VOCAB
+    }
+
+    fn classes(&self) -> usize {
+        10
+    }
+
+    fn sample(&self, split: Split, idx: u64) -> (Vec<i32>, i32) {
+        let mut rng = Rng::derive(self.seed, &[0x115705, split.stream_id(), idx]);
+        let mut tokens = Vec::with_capacity(self.seq_len);
+        // Use most of the budget so sequences are genuinely long.
+        let mut budget = self.seq_len * 3 / 4;
+        let value = self.gen_expr(&mut rng, 0, &mut budget, &mut tokens);
+        tokens.truncate(self.seq_len);
+        while tokens.len() < self.seq_len {
+            tokens.push(TOK_PAD);
+        }
+        (tokens, value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_semantics() {
+        assert_eq!(Op::Max.apply(&[3, 9, 1]), 9);
+        assert_eq!(Op::Min.apply(&[3, 9, 1]), 1);
+        assert_eq!(Op::Med.apply(&[3, 9, 1]), 3);
+        assert_eq!(Op::Med.apply(&[1, 2, 3, 4]), 2); // floor median
+        assert_eq!(Op::Sm.apply(&[7, 8]), 5);
+    }
+
+    #[test]
+    fn expressions_are_balanced() {
+        let t = ListOps::new(256, 11);
+        for i in 0..50 {
+            let (tokens, label) = t.sample(Split::Train, i);
+            let mut depth = 0i32;
+            for &tok in &tokens {
+                match tok {
+                    10..=13 => depth += 1,
+                    TOK_CLOSE => {
+                        depth -= 1;
+                        assert!(depth >= 0, "unbalanced at sample {i}");
+                    }
+                    _ => {}
+                }
+            }
+            assert_eq!(depth, 0, "unclosed brackets in sample {i}");
+            assert!((0..10).contains(&label));
+        }
+    }
+
+    /// Independent stack evaluator must agree with the generator's label.
+    #[test]
+    fn independent_evaluator_agrees() {
+        fn eval(tokens: &[i32]) -> i32 {
+            let mut stack: Vec<(i32, Vec<i32>)> = vec![];
+            let mut top_args: Vec<i32> = vec![];
+            for &t in tokens {
+                match t {
+                    0..=9 => top_args.push(t),
+                    10..=13 => {
+                        stack.push((t, std::mem::take(&mut top_args)));
+                    }
+                    TOK_CLOSE => {
+                        let (op, saved) = stack.pop().unwrap();
+                        let val = match op {
+                            10 => *top_args.iter().max().unwrap(),
+                            11 => *top_args.iter().min().unwrap(),
+                            12 => {
+                                let mut v = top_args.clone();
+                                v.sort_unstable();
+                                v[(v.len() - 1) / 2]
+                            }
+                            _ => top_args.iter().sum::<i32>() % 10,
+                        };
+                        top_args = saved;
+                        top_args.push(val);
+                    }
+                    _ => {} // PAD
+                }
+            }
+            assert_eq!(top_args.len(), 1);
+            top_args[0]
+        }
+
+        let t = ListOps::new(256, 5);
+        for i in 0..100 {
+            let (tokens, label) = t.sample(Split::Val, i);
+            assert_eq!(eval(&tokens), label, "sample {i}");
+        }
+    }
+
+    #[test]
+    fn sequences_use_budget() {
+        let t = ListOps::new(256, 3);
+        let mut total_non_pad = 0usize;
+        for i in 0..20 {
+            let (tokens, _) = t.sample(Split::Train, i);
+            total_non_pad += tokens.iter().filter(|&&x| x != TOK_PAD).count();
+        }
+        // Average expression length should be a sizable fraction of seq_len.
+        assert!(total_non_pad / 20 > 40, "expressions too short: {}", total_non_pad / 20);
+    }
+}

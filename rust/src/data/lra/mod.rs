@@ -1,0 +1,113 @@
+//! Synthetic Long-Range-Arena-style tasks (Tab. 5 substrate).
+//!
+//! Each module generates one task with the same structure as its LRA
+//! counterpart (ListOps expression trees, byte-level text classification,
+//! document-pair retrieval, sequence-image classification, path
+//! connectivity), scaled to the CPU testbed (DESIGN.md §3).
+//!
+//! All tasks implement [`SeqTask`]: deterministic `(split, idx) -> sample`
+//! so any batch can be generated independently.
+
+pub mod image;
+pub mod listops;
+pub mod pathfinder;
+pub mod retrieval;
+pub mod text;
+
+use crate::data::images::Split;
+use crate::runtime::Tensor;
+use anyhow::Result;
+
+/// A sequence-classification task: token ids in [0, vocab), one label.
+pub trait SeqTask {
+    fn name(&self) -> &'static str;
+    fn seq_len(&self) -> usize;
+    fn vocab(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// Deterministic sample; `tokens.len() == seq_len` (padded).
+    fn sample(&self, split: Split, idx: u64) -> (Vec<i32>, i32);
+}
+
+/// Build a batch (x [B, N] i32, y [B] i32) from any task.
+pub fn batch(task: &dyn SeqTask, split: Split, start: u64, bsz: usize) -> Result<(Tensor, Tensor)> {
+    let n = task.seq_len();
+    let mut xs = Vec::with_capacity(bsz * n);
+    let mut ys = Vec::with_capacity(bsz);
+    for i in 0..bsz {
+        let (tokens, label) = task.sample(split, start + i as u64);
+        debug_assert_eq!(tokens.len(), n);
+        xs.extend_from_slice(&tokens);
+        ys.push(label);
+    }
+    Ok((Tensor::i32(&[bsz, n], xs)?, Tensor::i32(&[bsz], ys)?))
+}
+
+/// Instantiate the task matching a t5 bundle's (task name, seq_len, vocab).
+pub fn by_name(name: &str, seq_len: usize, vocab: usize, seed: u64) -> Box<dyn SeqTask> {
+    match name {
+        "listops" => Box::new(listops::ListOps::new(seq_len, seed)),
+        "text" => Box::new(text::TextTask::new(seq_len, vocab, seed)),
+        "retrieval" => Box::new(retrieval::Retrieval::new(seq_len, vocab, seed)),
+        "image" => Box::new(image::SeqImage::new(seq_len, vocab, seed)),
+        "pathfinder" => Box::new(pathfinder::Pathfinder::new(seq_len, seed)),
+        other => panic!("unknown LRA task {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_samples() {
+        let tasks: Vec<Box<dyn SeqTask>> = vec![
+            by_name("listops", 256, 16, 1),
+            by_name("text", 512, 64, 1),
+            by_name("retrieval", 512, 64, 1),
+            by_name("image", 256, 32, 1),
+            by_name("pathfinder", 256, 4, 1),
+        ];
+        for t in &tasks {
+            for idx in 0..20 {
+                let (tokens, label) = t.sample(Split::Train, idx);
+                assert_eq!(tokens.len(), t.seq_len(), "{}", t.name());
+                assert!(
+                    tokens.iter().all(|&x| (0..t.vocab() as i32).contains(&x)),
+                    "{} token out of vocab",
+                    t.name()
+                );
+                assert!((0..t.classes() as i32).contains(&label), "{}", t.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_are_deterministic_and_split_sensitive() {
+        let t = by_name("listops", 256, 16, 3);
+        assert_eq!(t.sample(Split::Train, 5), t.sample(Split::Train, 5));
+        assert_ne!(t.sample(Split::Train, 5).0, t.sample(Split::Val, 5).0);
+    }
+
+    #[test]
+    fn labels_are_roughly_balanced() {
+        for name in ["text", "retrieval", "pathfinder"] {
+            let t = by_name(name, 256, 64, 7);
+            let n = 400;
+            let pos: usize = (0..n)
+                .filter(|&i| t.sample(Split::Train, i).1 == 1)
+                .count();
+            assert!(
+                pos > n as usize / 4 && pos < 3 * n as usize / 4,
+                "{name}: {pos}/{n} positive"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let t = by_name("text", 512, 64, 1);
+        let (x, y) = batch(t.as_ref(), Split::Train, 0, 8).unwrap();
+        assert_eq!(x.shape(), &[8, 512]);
+        assert_eq!(y.shape(), &[8]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Document-pair retrieval (LRA "Retrieval" stand-in).
+//!
+//! Two documents are concatenated with a SEP token; the label is whether
+//! they share a *topic* (a small set of characteristic tokens each document
+//! repeats among noise). Matching requires comparing token statistics
+//! across the two halves — the cross-document long-range dependency of the
+//! original AAN task.
+
+use crate::data::images::Split;
+use crate::data::lra::SeqTask;
+use crate::data::rng::Rng;
+
+pub const TOK_PAD: i32 = 0;
+pub const TOK_SEP: i32 = 1;
+const TOPIC_SIZE: usize = 6;
+
+pub struct Retrieval {
+    seq_len: usize,
+    vocab: usize,
+    seed: u64,
+}
+
+impl Retrieval {
+    pub fn new(seq_len: usize, vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 32);
+        assert!(seq_len >= 32);
+        Retrieval { seq_len, vocab, seed }
+    }
+
+    /// Sample a topic: TOPIC_SIZE distinct word tokens (>= 2).
+    fn topic(&self, rng: &mut Rng) -> Vec<i32> {
+        rng.sample_distinct(self.vocab - 2, TOPIC_SIZE)
+            .into_iter()
+            .map(|x| (x + 2) as i32)
+            .collect()
+    }
+
+    /// Fill `out` with a document about `topic`: topic tokens at ~25%
+    /// density among uniform noise words.
+    fn write_doc(&self, rng: &mut Rng, topic: &[i32], out: &mut [i32]) {
+        for slot in out.iter_mut() {
+            *slot = if rng.coin(0.25) {
+                topic[rng.below(topic.len())]
+            } else {
+                (2 + rng.below(self.vocab - 2)) as i32
+            };
+        }
+    }
+}
+
+impl SeqTask for Retrieval {
+    fn name(&self) -> &'static str {
+        "retrieval"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn sample(&self, split: Split, idx: u64) -> (Vec<i32>, i32) {
+        let mut rng = Rng::derive(self.seed, &[0x8E78, split.stream_id(), idx]);
+        let label = rng.coin(0.5) as i32;
+        let half = (self.seq_len - 1) / 2;
+
+        let topic1 = self.topic(&mut rng);
+        let topic2 = if label == 1 {
+            topic1.clone()
+        } else {
+            // Disjoint topic: resample until no overlap (expected ~1 iter).
+            loop {
+                let t = self.topic(&mut rng);
+                if t.iter().all(|x| !topic1.contains(x)) {
+                    break t;
+                }
+            }
+        };
+
+        let mut tokens = vec![TOK_PAD; self.seq_len];
+        let (doc1, rest) = tokens.split_at_mut(half);
+        self.write_doc(&mut rng, &topic1, doc1);
+        rest[0] = TOK_SEP;
+        let doc2_len = half.min(rest.len() - 1);
+        self.write_doc(&mut rng, &topic2, &mut rest[1..1 + doc2_len]);
+        (tokens, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sep_present_and_halves_filled() {
+        let t = Retrieval::new(512, 64, 31);
+        let (tokens, _) = t.sample(Split::Train, 0);
+        let half = (512 - 1) / 2;
+        assert_eq!(tokens[half], TOK_SEP);
+        assert!(tokens[..half].iter().all(|&x| x >= 2));
+    }
+
+    #[test]
+    fn topic_overlap_tracks_label() {
+        let t = Retrieval::new(512, 64, 32);
+        let half = (512 - 1) / 2;
+        for i in 0..60 {
+            let (tokens, label) = t.sample(Split::Val, i);
+            // Estimate topics by token frequency in each half.
+            let freq = |xs: &[i32]| {
+                let mut f = std::collections::HashMap::new();
+                for &x in xs {
+                    if x >= 2 {
+                        *f.entry(x).or_insert(0usize) += 1;
+                    }
+                }
+                let mut v: Vec<(i32, usize)> = f.into_iter().collect();
+                v.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+                v.truncate(TOPIC_SIZE);
+                v.into_iter().map(|(t, _)| t).collect::<Vec<_>>()
+            };
+            let t1 = freq(&tokens[..half]);
+            let t2 = freq(&tokens[half + 1..]);
+            let overlap = t1.iter().filter(|x| t2.contains(x)).count();
+            if label == 1 {
+                assert!(overlap >= 3, "sample {i}: overlap {overlap} for positive");
+            } else {
+                assert!(overlap <= 2, "sample {i}: overlap {overlap} for negative");
+            }
+        }
+    }
+}

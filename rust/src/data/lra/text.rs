@@ -1,0 +1,118 @@
+//! Byte-level text classification (LRA "Text" stand-in).
+//!
+//! Documents are long streams of mostly-neutral word tokens with *signal*
+//! tokens from two disjoint sets sprinkled throughout. The label is which
+//! signal set dominates — solving it requires aggregating evidence spread
+//! over the whole sequence (no local shortcut), mirroring the byte-level
+//! IMDb task's long-range nature.
+
+use crate::data::images::Split;
+use crate::data::lra::SeqTask;
+use crate::data::rng::Rng;
+
+pub const TOK_PAD: i32 = 0;
+
+pub struct TextTask {
+    seq_len: usize,
+    vocab: usize,
+    seed: u64,
+    set_a: std::ops::Range<i32>,
+    set_b: std::ops::Range<i32>,
+}
+
+impl TextTask {
+    pub fn new(seq_len: usize, vocab: usize, seed: u64) -> Self {
+        assert!(vocab >= 24, "text task needs vocab >= 24");
+        TextTask { seq_len, vocab, seed, set_a: 1..9, set_b: 9..17 }
+    }
+}
+
+impl SeqTask for TextTask {
+    fn name(&self) -> &'static str {
+        "text"
+    }
+
+    fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn classes(&self) -> usize {
+        2
+    }
+
+    fn sample(&self, split: Split, idx: u64) -> (Vec<i32>, i32) {
+        let mut rng = Rng::derive(self.seed, &[0x7E87, split.stream_id(), idx]);
+        let label = rng.coin(0.5) as i32;
+        let len = self.seq_len - rng.below(self.seq_len / 5); // variable length
+
+        // Signal budget: the dominant set gets `base + margin` tokens, the
+        // other `base`; both scattered uniformly.
+        let base = 4 + rng.below(6);
+        let margin = 3 + rng.below(6);
+        let (n_dom, n_sub) = (base + margin, base);
+        let (dom, sub) = if label == 1 {
+            (self.set_a.clone(), self.set_b.clone())
+        } else {
+            (self.set_b.clone(), self.set_a.clone())
+        };
+
+        // Neutral filler with mild bigram structure (word pairs), so the
+        // model has non-signal statistics to latch onto — like real text.
+        let neutral_lo = 17;
+        let mut tokens = vec![TOK_PAD; self.seq_len];
+        let mut pos = 0usize;
+        while pos < len {
+            let w = neutral_lo + rng.below(self.vocab - neutral_lo as usize) as i32;
+            tokens[pos] = w;
+            pos += 1;
+            if pos < len && rng.coin(0.3) {
+                // Deterministic "collocation": follow w with its pair token.
+                let pair = neutral_lo
+                    + ((w as usize * 7 + 3) % (self.vocab - neutral_lo as usize)) as i32;
+                tokens[pos] = pair;
+                pos += 1;
+            }
+        }
+
+        // Scatter signal tokens at distinct random positions.
+        let slots = rng.sample_distinct(len, (n_dom + n_sub).min(len));
+        for (i, &p) in slots.iter().enumerate() {
+            let range = if i < n_dom { dom.clone() } else { sub.clone() };
+            let span = (range.end - range.start) as usize;
+            tokens[p] = range.start + rng.below(span) as i32;
+        }
+        (tokens, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn signal_counts_match_label() {
+        let t = TextTask::new(512, 64, 21);
+        for i in 0..100 {
+            let (tokens, label) = t.sample(Split::Train, i);
+            let a = tokens.iter().filter(|&&x| (1..9).contains(&x)).count();
+            let b = tokens.iter().filter(|&&x| (9..17).contains(&x)).count();
+            if label == 1 {
+                assert!(a > b, "sample {i}: a={a} b={b} label=1");
+            } else {
+                assert!(b > a, "sample {i}: a={a} b={b} label=0");
+            }
+        }
+    }
+
+    #[test]
+    fn mostly_neutral() {
+        let t = TextTask::new(512, 64, 22);
+        let (tokens, _) = t.sample(Split::Train, 0);
+        let signal = tokens.iter().filter(|&&x| (1..17).contains(&x)).count();
+        assert!(signal < 40, "too much signal: {signal}");
+    }
+}

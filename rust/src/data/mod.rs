@@ -1,0 +1,14 @@
+//! Synthetic data substrates (DESIGN.md §3 substitutions).
+//!
+//! - [`rng`]: deterministic splittable PRNG.
+//! - [`images`]: class-conditional blob corpus (ImageNet/ADE20K stand-in).
+//! - [`lra`]: five Long-Range-Arena-style sequence tasks.
+//! - [`loader`]: bundle-driven batch source used by the trainer.
+
+pub mod images;
+pub mod loader;
+pub mod lra;
+pub mod rng;
+
+pub use images::{ImageCorpus, Split};
+pub use loader::BatchSource;

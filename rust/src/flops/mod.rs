@@ -1,0 +1,205 @@
+//! Analytical FLOPs model — reproduces the FLOPs columns of Tabs. 2/3/4 and
+//! the complexity claims of Sec. 3.2 (O(N(m+ks)) vs O(N²)).
+//!
+//! Convention: 1 multiply-accumulate = 2 FLOPs; softmax/norm/activation
+//! costs are counted at 1 FLOP per element pass (they are negligible next
+//! to the matmuls, but included for honesty at small N).
+
+use crate::runtime::ModelCfg;
+
+/// FLOPs of one attention layer's token mixing for a single example,
+/// excluding the qkv/proj projections (those are shared across variants).
+pub fn attention_flops(cfg: &ModelCfg) -> f64 {
+    let n = cfg.num_tokens() as f64;
+    let d = (cfg.dim / cfg.heads) as f64;
+    let h = cfg.heads as f64;
+    let a = &cfg.attention;
+    let m = a.m as f64;
+    let k = a.k as f64;
+    let s = a.s as f64;
+
+    let per_head = match a.kind.as_str() {
+        "standard" => {
+            // QK^T + PV matmuls + softmax pass.
+            2.0 * n * n * d + 2.0 * n * n * d + 3.0 * n * n
+        }
+        "linear" => {
+            // K^T V (d x d fast weights) + Q (KV) + normalizer.
+            2.0 * n * d * d + 2.0 * n * d * d + 2.0 * n * d
+        }
+        "agent" | "mita_compress" => {
+            // A K^T + (softmax) A V  -> m-width summary; then Q A^T + PV.
+            2.0 * m * n * d + 2.0 * m * n * d + 3.0 * m * n
+                + 2.0 * n * m * d + 2.0 * n * m * d + 3.0 * n * m
+        }
+        "mita" | "mita_route" => {
+            // Landmark scores K Q̃^T (shared by Eq. 7 + Eq. 8).
+            let scores = 2.0 * n * m * d;
+            // Landmark values V^T softmax(S) (shared expert) — only if
+            // compression branch present.
+            let shared = if a.kind == "mita" { 2.0 * n * m * d + 2.0 * n * m } else { 0.0 };
+            // Routing logits Q Q̃^T.
+            let routing = 2.0 * n * m * d;
+            // Final attention over m + k*s pairs per query (routed-only
+            // variant attends to k*s pairs).
+            let attended = if a.kind == "mita" { m + k * s } else { k * s };
+            let attn = 2.0 * n * attended * d * 2.0 + 3.0 * n * attended;
+            // top-k selection ~ n log2(k) comparisons per expert column.
+            let topk = m * n * (k.log2().max(1.0));
+            scores + shared + routing + attn + topk
+        }
+        other => panic!("unknown attention kind {other:?}"),
+    };
+    per_head * h
+}
+
+/// FLOPs of one full forward pass for a single example.
+pub fn model_flops(cfg: &ModelCfg) -> f64 {
+    let n = cfg.num_tokens() as f64;
+    let dim = cfg.dim as f64;
+    let hidden = dim * cfg.mlp_ratio;
+    let depth = cfg.depth as f64;
+
+    // Embedding.
+    let embed = if cfg.task == "lra" {
+        n * dim // table lookup + pos add
+    } else {
+        let pdim = (cfg.patch * cfg.patch * cfg.channels) as f64;
+        2.0 * n * pdim * dim
+    };
+
+    // Per block: qkv (3 d²), proj (d²), mlp (2 d·hidden), 2 layernorms,
+    // + the attention mixing itself.
+    let per_block = 2.0 * n * dim * (3.0 * dim)
+        + 2.0 * n * dim * dim
+        + 2.0 * n * dim * hidden * 2.0
+        + 2.0 * 5.0 * n * dim
+        + attention_flops(cfg);
+    let head = 2.0 * dim * cfg.num_classes as f64 * if cfg.task == "seg_image" { n } else { 1.0 };
+
+    embed + depth * per_block + head
+}
+
+/// Parameter count of the model (mirrors model.init_params).
+pub fn param_count(cfg: &ModelCfg) -> usize {
+    let dim = cfg.dim;
+    let hidden = (dim as f64 * cfg.mlp_ratio) as usize;
+    let n = cfg.num_tokens();
+    let mut p = 0usize;
+    // Blocks.
+    let mut block = 0usize;
+    block += 2 * dim; // ln1
+    block += dim * 3 * dim + 3 * dim; // qkv
+    block += dim * dim + dim; // proj
+    block += 2 * dim; // ln2
+    block += dim * hidden + hidden; // fc1
+    block += hidden * dim + dim; // fc2
+    if cfg.attention.landmark == "learned" {
+        block += cfg.attention.m * dim;
+    }
+    if cfg.dwc {
+        block += if cfg.task == "lra" { 3 * dim } else { 9 * dim };
+    }
+    if cfg.gate {
+        block += dim * dim + dim;
+    }
+    p += cfg.depth * block;
+    p += 2 * dim; // ln_f
+    p += n * dim; // pos
+    p += dim * cfg.num_classes + cfg.num_classes; // head
+    if cfg.task == "lra" {
+        p += cfg.vocab * dim;
+    } else {
+        p += cfg.patch * cfg.patch * cfg.channels * dim + dim;
+    }
+    p
+}
+
+/// Human-readable GFLOPs.
+pub fn gflops(f: f64) -> String {
+    if f >= 1e9 {
+        format!("{:.2}G", f / 1e9)
+    } else {
+        format!("{:.1}M", f / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::AttentionCfg;
+
+    fn cfg(kind: &str, n_side: usize, m: usize, k: usize) -> ModelCfg {
+        ModelCfg {
+            task: "cls_image".into(),
+            depth: 3,
+            dim: 64,
+            heads: 4,
+            mlp_ratio: 4.0,
+            num_classes: 10,
+            attention: AttentionCfg {
+                kind: kind.into(),
+                m,
+                k,
+                s: 1,
+                landmark: "pool2d".into(),
+                cap_factor: 2,
+                use_pallas: false,
+            },
+            image_hw: (n_side * 4, n_side * 4),
+            patch: 4,
+            channels: 3,
+            seq_len: 1024,
+            vocab: 32,
+            pool: "mean".into(),
+            dwc: false,
+            gate: false,
+        }
+    }
+
+    #[test]
+    fn standard_is_quadratic_mita_is_linear() {
+        // Doubling the token count 4x (side 2x) should ~16x standard
+        // attention flops but only ~4x MiTA's.
+        let std_1 = attention_flops(&cfg("standard", 8, 16, 16));
+        let std_2 = attention_flops(&cfg("standard", 16, 16, 16));
+        let mita_1 = attention_flops(&cfg("mita", 8, 16, 16));
+        let mita_2 = attention_flops(&cfg("mita", 16, 16, 16));
+        let std_ratio = std_2 / std_1;
+        let mita_ratio = mita_2 / mita_1;
+        assert!(std_ratio > 14.0 && std_ratio < 18.0, "std ratio {std_ratio}");
+        assert!(mita_ratio > 3.5 && mita_ratio < 4.5, "mita ratio {mita_ratio}");
+    }
+
+    #[test]
+    fn mita_cheaper_than_standard_at_scale() {
+        // At N=1024 with m=k=32, MiTA must be far cheaper.
+        let c_std = cfg("standard", 32, 32, 32);
+        let c_mita = cfg("mita", 32, 32, 32);
+        assert!(attention_flops(&c_std) / attention_flops(&c_mita) > 4.0);
+    }
+
+    #[test]
+    fn route_only_cheaper_than_full_mita() {
+        let full = attention_flops(&cfg("mita", 16, 16, 16));
+        let route = attention_flops(&cfg("mita_route", 16, 16, 16));
+        assert!(route < full);
+    }
+
+    #[test]
+    fn param_count_matches_known_model() {
+        // Cross-checked against jax param tree of the quickstart config
+        // (depth 2, dim 64, heads 4, 16x16 img, patch 4, 10 classes).
+        let mut c = cfg("mita", 4, 4, 4);
+        c.depth = 2;
+        // blocks: 2*(128 + 12480 + 4160 + 128 + 16640 + 16448) = 99_968
+        // ln_f 128, pos 16*64=1024, head 650, patch 48*64+64=3136
+        assert_eq!(param_count(&c), 99_968 + 128 + 1024 + 650 + 3136);
+    }
+
+    #[test]
+    fn model_flops_dominated_by_blocks() {
+        let c = cfg("standard", 8, 16, 16);
+        assert!(model_flops(&c) > attention_flops(&c) * c.depth as f64);
+    }
+}

@@ -1,0 +1,251 @@
+//! Figure drivers (Figs. 3/4/5/8/9/10).
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::server::{serve, ServeConfig};
+use crate::coordinator::Engine;
+use crate::data::{BatchSource, ImageCorpus, Split};
+use crate::harness::train_or_load_checkpoint;
+use crate::mita::analysis;
+use crate::report::{ascii_chart, pct, speedup, Table};
+use crate::runtime::{Runtime, Tensor};
+
+/// Fig. 5 — inference throughput vs sequence length, standard vs MiTA,
+/// measured end-to-end through the dynamic-batching server.
+pub fn figure5(artifacts_dir: &std::path::Path, rt: &Runtime, requests: usize) -> Result<String> {
+    let lens: Vec<usize> = rt
+        .manifest()
+        .bundles_with_prefix("f5_standard_n")
+        .iter()
+        .map(|b| rt.manifest().bundle(b).unwrap().model.num_tokens())
+        .collect();
+
+    let mut out = Table::new(&["N", "standard req/s", "MiTA req/s", "speedup", "MiTA p95 ms"]);
+    let mut series_std = Vec::new();
+    let mut series_mita = Vec::new();
+
+    for &n in &lens {
+        let mut rps = std::collections::HashMap::new();
+        let mut p95 = 0.0;
+        for method in ["standard", "mita"] {
+            let bundle_name = format!("f5_{method}_n{n}");
+            let spec = rt.manifest().bundle(&bundle_name)?.clone();
+            let predict = rt.manifest().bundle_artifact(&bundle_name, "predict")?.to_string();
+            let init = rt.manifest().bundle_artifact(&bundle_name, "init")?.to_string();
+            let engine = Engine::spawn(artifacts_dir.to_path_buf(), vec![predict])?;
+            engine.handle().bind_init(&bundle_name, &init, 0, spec.param_count())?;
+            let cfg = ServeConfig {
+                bundle: bundle_name.clone(),
+                binding: bundle_name.clone(),
+                requests,
+                rate: 0.0, // closed loop: measures peak throughput
+                queue_cap: requests,
+                policy: BatchPolicy {
+                    max_batch: spec.train.batch_size,
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+            };
+            let report = serve(&engine.handle(), &spec, &bundle_name, &cfg)?;
+            eprintln!("[f5] {}", report.row());
+            rps.insert(method, report.throughput_rps);
+            if method == "mita" {
+                p95 = report.p95_ms;
+            }
+            engine.shutdown();
+        }
+        let s = rps["standard"];
+        let m = rps["mita"];
+        out.row(&[
+            n.to_string(),
+            format!("{s:.2}"),
+            format!("{m:.2}"),
+            speedup(m / s),
+            format!("{p95:.1}"),
+        ]);
+        series_std.push((n as f64, s));
+        series_mita.push((n as f64, m));
+    }
+
+    let chart = ascii_chart(&[("standard", series_std), ("mita", series_mita)], 60, 12);
+    let rendered = format!("## Figure 5 — inference throughput vs N\n{}\n{}", out.render(), chart);
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Run the analysis artifact on one image with a trained t2_mita model.
+fn run_analysis(rt: &Runtime, seed: i32) -> Result<(Vec<Tensor>, usize, usize, usize, usize, usize)> {
+    let params = train_or_load_checkpoint(rt, "t2_mita", seed)?;
+    let bundle = rt.manifest().bundle("fig_analysis_mita")?.clone();
+    anyhow::ensure!(
+        bundle.param_count() == params.len(),
+        "analysis bundle layout mismatch"
+    );
+    let m = bundle.model.attention.m;
+    let kk = bundle.model.attention.k;
+    let depth = bundle.model.depth;
+    let heads = bundle.model.heads;
+    let n = bundle.model.num_tokens();
+
+    let corpus = ImageCorpus::new(
+        bundle.model.image_hw.0,
+        bundle.model.image_hw.1,
+        bundle.model.channels,
+        bundle.model.num_classes,
+        8,
+        crate::data::loader::DEFAULT_SEED,
+    );
+    let (pixels, _, _) = corpus.render(Split::Val, 0);
+    let x = Tensor::f32(
+        &[bundle.model.image_hw.0, bundle.model.image_hw.1, bundle.model.channels],
+        pixels,
+    )?;
+
+    let mut inputs = params;
+    inputs.push(x);
+    let art = rt.manifest().bundle_artifact("fig_analysis_mita", "analysis")?;
+    let outs = rt.run(art, &inputs)?;
+    Ok((outs, depth, heads, m, kk, n))
+}
+
+/// Figs. 3/4 — expert key-value heatmaps + the token-pruning effect.
+pub fn figures34(rt: &Runtime, seed: i32) -> Result<String> {
+    let (outs, depth, heads, m, kk, n) = run_analysis(rt, seed)?;
+    let idx = outs[1].as_i32()?; // [depth, heads, m, kk]
+    let (gh, gw) = {
+        let b = rt.manifest().bundle("fig_analysis_mita")?;
+        b.model.grid_hw()
+    };
+
+    let mut rendered = String::from("## Figures 3/4 — expert selections + token pruning\n");
+    let mut fractions = Vec::new();
+    for layer in 0..depth {
+        // Aggregate selected tokens over heads (as the paper does).
+        let mut all: Vec<usize> = Vec::with_capacity(heads * m * kk);
+        for h in 0..heads {
+            let base = ((layer * heads) + h) * m * kk;
+            all.extend(idx[base..base + m * kk].iter().map(|&v| v as usize));
+        }
+        let frac = analysis::selected_token_fraction(&all, n);
+        fractions.push(frac);
+        let counts = analysis::selection_counts(&all, n);
+        rendered.push_str(&format!(
+            "\nlayer {layer}: {:.1}% of tokens selected by >=1 expert\n{}",
+            frac * 100.0,
+            analysis::ascii_heatmap(&counts, gh, gw)
+        ));
+    }
+    rendered.push_str("\nToken-pruning trend (selected fraction per layer): ");
+    rendered.push_str(
+        &fractions.iter().map(|f| format!("{:.2}", f)).collect::<Vec<_>>().join(" → "),
+    );
+    rendered.push('\n');
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Fig. 8 — layer-wise positional overlap (expert KV vs routed queries).
+pub fn figure8(rt: &Runtime, seed: i32) -> Result<String> {
+    let (outs, depth, heads, m, kk, n) = run_analysis(rt, seed)?;
+    let idx = outs[1].as_i32()?; // [depth, heads, m, kk]
+    let assign = outs[2].as_i32()?; // [depth, heads, n]
+
+    let mut out = Table::new(&["layer", "overlap mIoU"]);
+    let mut series = Vec::new();
+    for layer in 0..depth {
+        let mut per_head = Vec::new();
+        for h in 0..heads {
+            let ib = ((layer * heads) + h) * m * kk;
+            let ab = ((layer * heads) + h) * n;
+            let topk: Vec<usize> = idx[ib..ib + m * kk].iter().map(|&v| v as usize).collect();
+            let asg: Vec<usize> = assign[ab..ab + n].iter().map(|&v| v as usize).collect();
+            per_head.push(analysis::expert_query_overlap(&topk, &asg, m, kk));
+        }
+        let mean = per_head.iter().sum::<f64>() / per_head.len() as f64;
+        out.row(&[layer.to_string(), format!("{mean:.3}")]);
+        series.push((layer as f64, mean));
+    }
+    let chart = ascii_chart(&[("overlap", series)], 40, 8);
+    let rendered = format!(
+        "## Figure 8 — expert/query positional overlap (routing ≠ clustering)\n{}\n{}",
+        out.render(),
+        chart
+    );
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Fig. 9 — train-with-X / infer-with-Y attention swap matrix.
+pub fn figure9(rt: &Runtime, seed: i32) -> Result<String> {
+    let kinds = ["std", "agent", "mita"];
+    // Checkpoints come from the t2 bundles (same param layout across kinds).
+    let mut out = Table::new(&["train \\ infer", "std", "agent", "mita"]);
+    for train_kind in kinds {
+        let params = train_or_load_checkpoint(rt, &format!("t2_{train_kind}"), seed)?;
+        let lits: Vec<xla::Literal> =
+            params.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let mut cells = vec![train_kind.to_string()];
+        for infer_kind in kinds {
+            let eval_bundle = format!("f9_eval_{infer_kind}");
+            let spec = rt.manifest().bundle(&eval_bundle)?.clone();
+            let art = rt.manifest().bundle_artifact(&eval_bundle, "eval_step")?;
+            let source = BatchSource::for_bundle(&spec)?;
+            let ev = crate::coordinator::trainer::eval_params(
+                rt, art, &lits, &source, 16, false, spec.model.num_classes,
+            )?;
+            cells.push(pct(ev.accuracy));
+            eprintln!("[f9] train={train_kind} infer={infer_kind}: acc={:.3}", ev.accuracy);
+        }
+        out.row(&cells);
+    }
+    let rendered = format!("## Figure 9 — algorithmic generalization matrix\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Fig. 10 — inference (m, k) generalization grid for a trained MiTA model.
+pub fn figure10(rt: &Runtime, seed: i32) -> Result<String> {
+    let params = train_or_load_checkpoint(rt, "t2_mita", seed)?;
+    let lits: Vec<xla::Literal> = params.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+
+    // Discover the grid from the manifest.
+    let mut ms = std::collections::BTreeSet::new();
+    let mut ks = std::collections::BTreeSet::new();
+    for name in rt.manifest().bundles_with_prefix("f10_eval_") {
+        let b = rt.manifest().bundle(name)?;
+        ms.insert(b.model.attention.m);
+        ks.insert(b.model.attention.k);
+    }
+
+    let mut header = vec!["m \\ k".to_string()];
+    header.extend(ks.iter().map(|k| k.to_string()));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut out = Table::new(&header_refs);
+
+    for &m in &ms {
+        let mut cells = vec![m.to_string()];
+        for &k in &ks {
+            let bundle_name = format!("f10_eval_m{m}k{k}");
+            let spec = rt.manifest().bundle(&bundle_name)?.clone();
+            let art = rt.manifest().bundle_artifact(&bundle_name, "eval_step")?;
+            let source = BatchSource::for_bundle(&spec)?;
+            let ev = crate::coordinator::trainer::eval_params(
+                rt, art, &lits, &source, 16, false, spec.model.num_classes,
+            )?;
+            cells.push(pct(ev.accuracy));
+        }
+        out.row(&cells);
+        eprintln!("[f10] m={m} done");
+    }
+    let rendered = format!(
+        "## Figure 10 — (m, k) generalization of a model trained at m=k=16\n{}",
+        out.render()
+    );
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Loss-curve chart for a freshly trained bundle (E2E driver visual).
+pub fn loss_curve_chart(curve: &[(f64, f64)], name: &str) -> String {
+    ascii_chart(&[(name, curve.to_vec())], 60, 12)
+}

@@ -1,0 +1,178 @@
+//! Experiment harness: drivers that regenerate every table and figure of
+//! the paper (DESIGN.md §5 experiment index). Each `table*` / `figure*`
+//! function trains/evaluates the relevant bundles and prints rows in the
+//! paper's format; EXPERIMENTS.md records paper-vs-measured.
+
+pub mod figures;
+pub mod tables;
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{EvalResult, Trainer};
+use crate::data::BatchSource;
+use crate::runtime::Runtime;
+
+/// Outcome of training one bundle end-to-end.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    pub bundle: String,
+    pub eval: EvalResult,
+    pub tail_loss: f64,
+    pub mean_step_secs: f64,
+    pub train_secs: f64,
+    pub steps: usize,
+    /// (step, loss) curve, subsampled for reports.
+    pub loss_curve: Vec<(f64, f64)>,
+}
+
+/// Train a bundle (steps from its meta unless overridden) and evaluate.
+pub fn train_bundle<'rt>(
+    rt: &'rt Runtime,
+    bundle_name: &str,
+    seed: i32,
+    steps_override: Option<usize>,
+    warm_start: Option<&[crate::runtime::Tensor]>,
+) -> Result<(Trainer<'rt>, TrainOutcome)> {
+    let spec = rt.manifest().bundle(bundle_name)?.clone();
+    let steps = steps_override
+        .or_else(|| spec.meta_u64("steps").map(|s| s as usize))
+        .unwrap_or(spec.train.total_steps);
+    let eval_batches = spec.meta_u64("eval_batches").unwrap_or(16) as usize;
+    let source = BatchSource::for_bundle(&spec)?;
+
+    let mut trainer = match warm_start {
+        Some(params) => Trainer::with_warm_start(rt, bundle_name, seed, params)?,
+        None => Trainer::new(rt, bundle_name, seed)?,
+    };
+    let t0 = std::time::Instant::now();
+    trainer.train(&source, steps, 0)?;
+    let train_secs = t0.elapsed().as_secs_f64();
+    let eval = trainer.eval(&source, eval_batches)?;
+
+    let curve: Vec<(f64, f64)> = trainer
+        .history
+        .iter()
+        .step_by((steps / 50).max(1))
+        .map(|r| (r.step as f64, r.loss))
+        .collect();
+
+    let outcome = TrainOutcome {
+        bundle: bundle_name.to_string(),
+        eval,
+        tail_loss: trainer.tail_loss(),
+        mean_step_secs: trainer.mean_step_secs(),
+        train_secs,
+        steps,
+        loss_curve: curve,
+    };
+    Ok((trainer, outcome))
+}
+
+/// Checkpoint directory used by multi-stage experiments (t2 → t7/f9/f10).
+pub fn checkpoint_dir() -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("checkpoints");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+pub fn checkpoint_path(bundle: &str) -> std::path::PathBuf {
+    checkpoint_dir().join(format!("{bundle}.ckpt"))
+}
+
+/// Metrics sidecar path for a cached training outcome.
+pub fn metrics_path(bundle: &str) -> std::path::PathBuf {
+    checkpoint_dir().join(format!("{bundle}.metrics"))
+}
+
+fn save_outcome(bundle: &str, oc: &TrainOutcome) -> Result<()> {
+    let mut s = String::new();
+    use std::fmt::Write as _;
+    let _ = writeln!(s, "steps {}", oc.steps);
+    let _ = writeln!(s, "eval_loss {}", oc.eval.loss);
+    let _ = writeln!(s, "eval_acc {}", oc.eval.accuracy);
+    if let Some(m) = oc.eval.miou {
+        let _ = writeln!(s, "miou {m}");
+    }
+    let _ = writeln!(s, "examples {}", oc.eval.examples);
+    let _ = writeln!(s, "tail_loss {}", oc.tail_loss);
+    let _ = writeln!(s, "mean_step_secs {}", oc.mean_step_secs);
+    let _ = writeln!(s, "train_secs {}", oc.train_secs);
+    std::fs::write(metrics_path(bundle), s)?;
+    Ok(())
+}
+
+fn load_outcome(bundle: &str) -> Option<TrainOutcome> {
+    let text = std::fs::read_to_string(metrics_path(bundle)).ok()?;
+    let mut kv = std::collections::HashMap::new();
+    for line in text.lines() {
+        let (k, v) = line.split_once(' ')?;
+        kv.insert(k.to_string(), v.parse::<f64>().ok()?);
+    }
+    Some(TrainOutcome {
+        bundle: bundle.to_string(),
+        eval: EvalResult {
+            loss: *kv.get("eval_loss")?,
+            accuracy: *kv.get("eval_acc")?,
+            miou: kv.get("miou").copied(),
+            examples: *kv.get("examples")? as usize,
+        },
+        tail_loss: *kv.get("tail_loss")?,
+        mean_step_secs: *kv.get("mean_step_secs")?,
+        train_secs: *kv.get("train_secs")?,
+        steps: *kv.get("steps")? as usize,
+        loss_curve: Vec::new(),
+    })
+}
+
+/// Cached variant of [`train_bundle`]: if a checkpoint + metrics sidecar
+/// exist on disk (a previous run of the harness), reuse them instead of
+/// retraining — this makes `mita all` resumable after an interruption.
+pub fn train_bundle_cached(
+    rt: &Runtime,
+    bundle_name: &str,
+    seed: i32,
+    steps_override: Option<usize>,
+    warm_start: Option<&[crate::runtime::Tensor]>,
+) -> Result<TrainOutcome> {
+    let ckpt = checkpoint_path(bundle_name);
+    if ckpt.exists() {
+        if let Some(oc) = load_outcome(bundle_name) {
+            let want = rt.manifest().bundle(bundle_name)?.param_count();
+            let params = crate::coordinator::checkpoint::load(&ckpt)?;
+            if params.len() == want {
+                eprintln!("[harness] cached {bundle_name}: acc={:.3}", oc.eval.accuracy);
+                return Ok(oc);
+            }
+        }
+    }
+    let (trainer, outcome) = train_bundle(rt, bundle_name, seed, steps_override, warm_start)?;
+    trainer.save_checkpoint(&ckpt)?;
+    save_outcome(bundle_name, &outcome)?;
+    Ok(outcome)
+}
+
+/// Train a bundle once and cache its checkpoint on disk; reuse if present.
+pub fn train_or_load_checkpoint(
+    rt: &Runtime,
+    bundle_name: &str,
+    seed: i32,
+) -> Result<Vec<crate::runtime::Tensor>> {
+    let path = checkpoint_path(bundle_name);
+    if path.exists() {
+        let params = crate::coordinator::checkpoint::load(&path)?;
+        let want = rt.manifest().bundle(bundle_name)?.param_count();
+        if params.len() == want {
+            eprintln!("[harness] reusing checkpoint {}", path.display());
+            return Ok(params);
+        }
+        eprintln!("[harness] stale checkpoint {} (layout changed), retraining", path.display());
+    }
+    let (trainer, outcome) = train_bundle(rt, bundle_name, seed, None, None)?;
+    eprintln!(
+        "[harness] trained {bundle_name}: acc={:.3} loss={:.3} ({:.1}s)",
+        outcome.eval.accuracy, outcome.eval.loss, outcome.train_secs
+    );
+    trainer.save_checkpoint(&path)?;
+    save_outcome(bundle_name, &outcome)?;
+    trainer.params()
+}

@@ -1,0 +1,292 @@
+//! Table drivers (Tabs. 2–7). Every function prints the regenerated table
+//! in the paper's row format and returns the rendered string so binaries
+//! and tests can capture it.
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::eval_params;
+use crate::data::BatchSource;
+use crate::flops;
+use crate::harness::{train_bundle_cached, train_or_load_checkpoint};
+use crate::report::{pct, speedup, Table};
+use crate::runtime::{Runtime, Tensor};
+
+/// Common options for table drivers.
+#[derive(Debug, Clone, Default)]
+pub struct Opts {
+    /// Override per-bundle training steps (None = bundle meta).
+    pub steps: Option<usize>,
+    pub seed: i32,
+}
+
+fn acc_delta(acc: f64, baseline: Option<f64>) -> String {
+    match baseline {
+        Some(b) => format!("{} ({:+.1})", pct(acc), (acc - b) * 100.0),
+        None => pct(acc),
+    }
+}
+
+/// Tab. 2 — from-scratch image classification, attention varied only.
+pub fn table2(rt: &Runtime, opts: &Opts) -> Result<String> {
+    let rows = ["std", "linear", "agent", "mita", "mita_dwc", "mita_dwc_gate"];
+    let mut out = Table::new(&["Method", "#Params", "attn FLOPs/ex", "Acc. (%)", "tail loss"]);
+    let mut std_acc = None;
+
+    for row in rows {
+        let bundle = format!("t2_{row}");
+        let spec = rt.manifest().bundle(&bundle)?.clone();
+        // Checkpoint-cached: t7/f9/f10/figures reuse the weights, and an
+        // interrupted `mita all` resumes here without retraining.
+        let oc = train_bundle_cached(rt, &bundle, opts.seed, opts.steps, None)?;
+        if row == "std" {
+            std_acc = Some(oc.eval.accuracy);
+        }
+        out.row(&[
+            row.to_string(),
+            flops::param_count(&spec.model).to_string(),
+            flops::gflops(flops::attention_flops(&spec.model)),
+            acc_delta(oc.eval.accuracy, if row == "std" { None } else { std_acc }),
+            format!("{:.3}", oc.tail_loss),
+        ]);
+        eprintln!(
+            "[t2] {row}: acc={:.3} ({} steps, {:.2}s/step)",
+            oc.eval.accuracy, oc.steps, oc.mean_step_secs
+        );
+    }
+    let rendered = format!("## Table 2 — synthetic-image classification from scratch\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Tab. 3 — comparison table of efficient models (FLOPs/params/acc).
+///
+/// The paper's Tab. 3 compares against SOTA ViT variants we cannot
+/// reproduce (ViT-5 etc.); the substitution keeps its *shape*: best MiTA
+/// variants vs the standard/linear/agent baselines at equal parameter
+/// count, with the FLOPs column from the analytical model. Reuses the
+/// checkpoints produced by table2.
+pub fn table3(rt: &Runtime, opts: &Opts) -> Result<String> {
+    let rows =
+        [("std", "DeiT-equiv (standard)"), ("agent", "Agent-equiv"), ("linear", "Linear-equiv"),
+         ("mita", "MiTA"), ("mita_dwc", "MiTA^DWC"), ("mita_dwc_gate", "MiTA^DWC,Gate")];
+    let mut out = Table::new(&["Model", "#Params", "model FLOPs/ex", "Acc. (%)"]);
+    for (row, label) in rows {
+        let bundle = format!("t2_{row}");
+        let spec = rt.manifest().bundle(&bundle)?.clone();
+        let ckpt = crate::harness::checkpoint_path(&bundle);
+        let params = if ckpt.exists() {
+            crate::coordinator::checkpoint::load(&ckpt)?
+        } else {
+            train_or_load_checkpoint(rt, &bundle, opts.seed)?
+        };
+        let lits: Vec<xla::Literal> =
+            params.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let source = BatchSource::for_bundle(&spec)?;
+        let art = rt.manifest().bundle_artifact(&bundle, "eval_step")?;
+        let ev = eval_params(rt, art, &lits, &source, 16, false, spec.model.num_classes)?;
+        out.row(&[
+            label.to_string(),
+            flops::param_count(&spec.model).to_string(),
+            flops::gflops(flops::model_flops(&spec.model)),
+            pct(ev.accuracy),
+        ]);
+    }
+    let rendered = format!("## Table 3 — model-level comparison (substituted scope)\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Tab. 4 — dense prediction (segmentation): mIoU + FLOPs reduction.
+pub fn table4(rt: &Runtime, opts: &Opts) -> Result<String> {
+    let mut out = Table::new(&["Backbone", "FLOPs/ex", "mIoU (%)", "pixel acc (%)"]);
+
+    // Native standard backbone (checkpoint-cached).
+    let std_spec = rt.manifest().bundle("t4_std")?.clone();
+    let std_oc = train_bundle_cached(rt, "t4_std", opts.seed, opts.steps, None)?;
+    let std_flops = flops::model_flops(&std_spec.model);
+    out.row(&[
+        "ViT (standard attn)".into(),
+        flops::gflops(std_flops),
+        pct(std_oc.eval.miou.unwrap_or(0.0)),
+        pct(std_oc.eval.accuracy),
+    ]);
+
+    // ▽ row: std-trained params evaluated under MiTA attention.
+    let swap_spec = rt.manifest().bundle("t4_mita_swap")?.clone();
+    let source = BatchSource::for_bundle(&swap_spec)?;
+    let swap_art = rt.manifest().bundle_artifact("t4_mita_swap", "eval_step")?;
+    let std_params_host =
+        crate::coordinator::checkpoint::load(&crate::harness::checkpoint_path("t4_std"))?;
+    let std_params: Vec<xla::Literal> =
+        std_params_host.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+    let swap_ev = eval_params(rt, swap_art, &std_params, &source, 16, true, swap_spec.model.num_classes)?;
+    let mita_flops = flops::model_flops(&swap_spec.model);
+    out.row(&[
+        "MiTA-ViT ▽ (swapped)".into(),
+        format!("{} (↓{:.0}%)", flops::gflops(mita_flops), (1.0 - mita_flops / std_flops) * 100.0),
+        pct(swap_ev.miou.unwrap_or(0.0)),
+        pct(swap_ev.accuracy),
+    ]);
+
+    // Natively-trained MiTA backbone (the paper predicts this closes the gap).
+    let mita_oc = train_bundle_cached(rt, "t4_mita", opts.seed, opts.steps, None)?;
+    out.row(&[
+        "MiTA-ViT (native)".into(),
+        format!("{} (↓{:.0}%)", flops::gflops(mita_flops), (1.0 - mita_flops / std_flops) * 100.0),
+        pct(mita_oc.eval.miou.unwrap_or(0.0)),
+        pct(mita_oc.eval.accuracy),
+    ]);
+
+    let rendered = format!("## Table 4 — synthetic dense prediction (ADE20K stand-in)\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Tab. 5 — LRA: accuracy + training throughput per task.
+pub fn table5(rt: &Runtime, opts: &Opts) -> Result<String> {
+    let tasks = ["listops", "text", "retrieval", "image", "pathfinder"];
+    let methods = ["standard", "mita", "mita_route", "agent", "linear"];
+
+    let mut out_header = vec!["Method".to_string()];
+    for t in tasks {
+        out_header.push(format!("{t} acc/steps-s"));
+    }
+    out_header.push("Avg acc / tot hrs".into());
+    let header_refs: Vec<&str> = out_header.iter().map(|s| s.as_str()).collect();
+    let mut out = Table::new(&header_refs);
+
+    let mut std_time_total = 0.0f64;
+    let mut per_method_time = std::collections::HashMap::new();
+
+    for method in methods {
+        let mut cells = vec![method.to_string()];
+        let mut accs = Vec::new();
+        let mut total_secs = 0.0;
+        for task in tasks {
+            let bundle = format!("t5_{task}_{method}");
+            let oc = train_bundle_cached(rt, &bundle, opts.seed, opts.steps, None)?;
+            let steps_per_sec = if oc.mean_step_secs > 0.0 { 1.0 / oc.mean_step_secs } else { 0.0 };
+            cells.push(format!("{} / {:.1}", pct(oc.eval.accuracy), steps_per_sec));
+            accs.push(oc.eval.accuracy);
+            total_secs += oc.train_secs;
+            eprintln!(
+                "[t5] {task}/{method}: acc={:.3} {:.2}s/step",
+                oc.eval.accuracy, oc.mean_step_secs
+            );
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        if method == "standard" {
+            std_time_total = total_secs;
+            cells.push(format!("{} / {:.1}s", pct(avg), total_secs));
+        } else {
+            let save = 1.0 - total_secs / std_time_total;
+            cells.push(format!("{} / {:.1}s (↓{:.0}%)", pct(avg), total_secs, save * 100.0));
+        }
+        per_method_time.insert(method, total_secs);
+        out.row(&cells);
+    }
+
+    let rendered = format!("## Table 5 — synthetic LRA benchmark\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Tab. 6 — ablations: landmark extraction, (m,k), compression/routing.
+pub fn table6(rt: &Runtime, opts: &Opts) -> Result<String> {
+    let groups: &[(&str, &[&str])] = &[
+        ("Landmark extraction", &["lm_random", "lm_learned", "lm_pool1d", "lm_pool2d"]),
+        (
+            "m x k",
+            &[
+                "mk_8x8", "mk_8x16", "mk_8x32", "mk_16x8", "mk_16x16", "mk_16x32", "mk_32x8",
+                "mk_32x16", "mk_32x32",
+            ],
+        ),
+        ("Compression & routing", &["mk_16x16", "route_only", "compress_only"]),
+    ];
+    let mut out = Table::new(&["Group", "Setting", "Acc. (%)", "Δ vs default"]);
+    let mut results: std::collections::HashMap<String, f64> = Default::default();
+
+    // Train the default configuration first so every row's Δ is defined.
+    {
+        let oc = train_bundle_cached(rt, "t6_mk_16x16", opts.seed, opts.steps, None)?;
+        results.insert("t6_mk_16x16".to_string(), oc.eval.accuracy);
+    }
+
+    for (group, rows) in groups {
+        for row in rows.iter() {
+            let bundle = format!("t6_{row}");
+            let acc = if let Some(&a) = results.get(&bundle) {
+                a
+            } else {
+                let oc = train_bundle_cached(rt, &bundle, opts.seed, opts.steps, None)?;
+                eprintln!("[t6] {row}: acc={:.3}", oc.eval.accuracy);
+                results.insert(bundle.clone(), oc.eval.accuracy);
+                oc.eval.accuracy
+            };
+            let default = *results.get("t6_mk_16x16").unwrap_or(&acc);
+            out.row(&[
+                group.to_string(),
+                row.to_string(),
+                pct(acc),
+                if *row == "mk_16x16" || *row == "lm_pool2d" {
+                    "default".into()
+                } else {
+                    format!("{:+.1}", (acc - default) * 100.0)
+                },
+            ]);
+        }
+    }
+    let rendered = format!("## Table 6 — ablation study\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Tab. 7 — finetuning a standard-attention-pretrained model with each
+/// attention mechanism.
+pub fn table7(rt: &Runtime, opts: &Opts) -> Result<String> {
+    let pretrained = train_or_load_checkpoint(rt, "t2_std", opts.seed)?;
+    let rows = ["std", "linear", "agent", "mita"];
+    let mut out = Table::new(&["Finetune attention", "Acc. (%)", "Δ vs standard"]);
+    let mut std_acc = None;
+    for row in rows {
+        let bundle = format!("t7_{row}");
+        let oc = train_bundle_cached(rt, &bundle, opts.seed, opts.steps, Some(&pretrained))?;
+        if row == "std" {
+            std_acc = Some(oc.eval.accuracy);
+        }
+        let delta = match (row, std_acc) {
+            ("std", _) | (_, None) => "baseline".to_string(),
+            (_, Some(b)) => format!("{:+.1}", (oc.eval.accuracy - b) * 100.0),
+        };
+        out.row(&[row.to_string(), pct(oc.eval.accuracy), delta]);
+        eprintln!("[t7] {row}: acc={:.3}", oc.eval.accuracy);
+    }
+    let rendered =
+        format!("## Table 7 — finetuning pretrained standard-attn params\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}
+
+/// Complexity sanity table (Sec. 3.2): attention FLOPs scaling with N.
+pub fn complexity_table(rt: &Runtime) -> Result<String> {
+    let mut out = Table::new(&["N", "standard", "mita", "ratio"]);
+    for name in rt.manifest().bundles_with_prefix("f5_standard_n") {
+        let n = rt.manifest().bundle(name)?.model.num_tokens();
+        let mita_name = format!("f5_mita_n{n}");
+        if rt.manifest().bundle(&mita_name).is_err() {
+            continue;
+        }
+        let std_f = flops::attention_flops(&rt.manifest().bundle(name)?.model);
+        let mita_f = flops::attention_flops(&rt.manifest().bundle(&mita_name)?.model);
+        out.row(&[
+            n.to_string(),
+            flops::gflops(std_f),
+            flops::gflops(mita_f),
+            speedup(std_f / mita_f),
+        ]);
+    }
+    let rendered = format!("## Complexity (attention FLOPs vs N)\n{}", out.render());
+    println!("{rendered}");
+    Ok(rendered)
+}

@@ -1,0 +1,22 @@
+//! # MiTA — Mixture-of-Top-k Attention
+//!
+//! Rust coordinator of the three-layer reproduction of *"Mixture-of-Top-k
+//! Attention: Efficient Attention via Scalable Fast Weights"*:
+//!
+//! - **L1** (build time): Pallas kernels in `python/compile/kernels/`.
+//! - **L2** (build time): JAX models in `python/compile/model.py`, lowered
+//!   once to HLO text under `artifacts/`.
+//! - **L3** (this crate): loads + executes the artifacts via PJRT, owns the
+//!   serving loop, the training driver, data generation, metrics, and the
+//!   benchmark harness that regenerates every table/figure of the paper.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod coordinator;
+pub mod data;
+pub mod flops;
+pub mod harness;
+pub mod mita;
+pub mod report;
+pub mod runtime;
+pub mod util;

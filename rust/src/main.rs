@@ -1,0 +1,269 @@
+//! `mita` — the L3 coordinator CLI.
+//!
+//! ```text
+//! mita [--artifacts DIR] <command> [args]
+//!
+//! commands:
+//!   info [--prefix P]                 list bundles from the manifest
+//!   flops [--prefix P]                analytical FLOPs/params per bundle
+//!   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
+//!   eval <bundle> <checkpoint> [--batches N]
+//!   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W]
+//!   table2|table3|table4|table5|table6|table7 [--steps N] [--seed S]
+//!   figure5 [--requests N] | figure9 | figure10 | figures (3/4/8)
+//!   complexity                        FLOPs-vs-N scaling table
+//!   all [--steps N]                   every table + figure in sequence
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::{serve, Engine, ServeConfig, Trainer};
+use mita::data::BatchSource;
+use mita::flops;
+use mita::harness::tables::{self, Opts};
+use mita::harness::{figures, train_bundle};
+use mita::report::Table;
+use mita::runtime::Runtime;
+use mita::util::cli;
+
+const VALUED_FLAGS: &[&str] = &[
+    "artifacts",
+    "prefix",
+    "steps",
+    "seed",
+    "checkpoint",
+    "warm-start",
+    "batches",
+    "requests",
+    "rate",
+    "max-wait-ms",
+    "queue-cap",
+    "eval-batches",
+    "log-every",
+];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = cli::parse(&argv, VALUED_FLAGS)?;
+    let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let opts = Opts {
+        steps: args.flag("steps").map(|s| s.parse()).transpose()?,
+        seed: args.flag_parse("seed", 0i32)?,
+    };
+
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+        }
+        "info" => {
+            let rt = Runtime::load(&artifacts)?;
+            let mut t =
+                Table::new(&["bundle", "task", "attention", "N", "m", "k", "params", "artifacts"]);
+            for name in rt.manifest().bundles_with_prefix(&args.flag_or("prefix", "")) {
+                let b = rt.manifest().bundle(name)?;
+                let mut arts: Vec<&str> = b.artifacts.keys().map(|s| s.as_str()).collect();
+                arts.sort();
+                t.row(&[
+                    name.to_string(),
+                    b.model.task.clone(),
+                    b.model.attention.kind.clone(),
+                    b.model.num_tokens().to_string(),
+                    b.model.attention.m.to_string(),
+                    b.model.attention.k.to_string(),
+                    flops::param_count(&b.model).to_string(),
+                    arts.join(","),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "flops" => {
+            let rt = Runtime::load(&artifacts)?;
+            let mut t = Table::new(&["bundle", "kind", "N", "attn FLOPs", "model FLOPs", "params"]);
+            for name in rt.manifest().bundles_with_prefix(&args.flag_or("prefix", "")) {
+                let b = rt.manifest().bundle(name)?;
+                t.row(&[
+                    name.to_string(),
+                    b.model.attention.kind.clone(),
+                    b.model.num_tokens().to_string(),
+                    flops::gflops(flops::attention_flops(&b.model)),
+                    flops::gflops(flops::model_flops(&b.model)),
+                    flops::param_count(&b.model).to_string(),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "train" => {
+            let bundle = args.positional(0, "bundle")?.to_string();
+            let rt = Runtime::load(&artifacts)?;
+            let warm = match args.flag("warm-start") {
+                Some(p) => Some(mita::coordinator::checkpoint::load(std::path::Path::new(p))?),
+                None => None,
+            };
+            let (trainer, oc) =
+                train_bundle(&rt, &bundle, opts.seed, opts.steps, warm.as_deref())?;
+            println!(
+                "bundle={bundle} steps={} tail_loss={:.4} eval_loss={:.4} eval_acc={:.4}{} step_time={:.1}ms",
+                oc.steps,
+                oc.tail_loss,
+                oc.eval.loss,
+                oc.eval.accuracy,
+                oc.eval.miou.map(|m| format!(" miou={m:.4}")).unwrap_or_default(),
+                oc.mean_step_secs * 1e3,
+            );
+            println!("{}", figures::loss_curve_chart(&oc.loss_curve, &bundle));
+            if let Some(path) = args.flag("checkpoint") {
+                trainer.save_checkpoint(std::path::Path::new(path))?;
+                println!("checkpoint saved to {path}");
+            }
+        }
+        "eval" => {
+            let bundle = args.positional(0, "bundle")?.to_string();
+            let ckpt = PathBuf::from(args.positional(1, "checkpoint")?);
+            let rt = Runtime::load(&artifacts)?;
+            let ev = mita::coordinator::eval_checkpoint(
+                &rt,
+                &ckpt,
+                &bundle,
+                args.flag_parse("batches", 16usize)?,
+            )?;
+            println!(
+                "bundle={bundle} eval_loss={:.4} eval_acc={:.4}{} ({} examples)",
+                ev.loss,
+                ev.accuracy,
+                ev.miou.map(|m| format!(" miou={m:.4}")).unwrap_or_default(),
+                ev.examples
+            );
+        }
+        "serve" => {
+            let bundle = args.positional(0, "bundle")?.to_string();
+            let rt = Runtime::load(&artifacts)?;
+            let spec = rt.manifest().bundle(&bundle)?.clone();
+            let predict = rt.manifest().bundle_artifact(&bundle, "predict")?.to_string();
+            let init = rt.manifest().bundle_artifact(&bundle, "init").map(str::to_string);
+            drop(rt); // the engine thread owns its own runtime
+            let engine = Engine::spawn(artifacts.clone(), vec![predict])?;
+            // Bind weights: --checkpoint if given, else the init artifact.
+            match args.flag("checkpoint") {
+                Some(path) => {
+                    let params =
+                        mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
+                    engine.handle().bind_tensors(&bundle, params)?;
+                }
+                None => {
+                    engine.handle().bind_init(&bundle, &init?, 0, spec.param_count())?;
+                }
+            }
+            let cfg = ServeConfig {
+                bundle: bundle.clone(),
+                binding: bundle.clone(),
+                requests: args.flag_parse("requests", 256usize)?,
+                rate: args.flag_parse("rate", 0.0f64)?,
+                queue_cap: args.flag_parse("queue-cap", 128usize)?,
+                policy: BatchPolicy {
+                    max_batch: spec.train.batch_size,
+                    max_wait: std::time::Duration::from_millis(
+                        args.flag_parse("max-wait-ms", 5u64)?,
+                    ),
+                },
+            };
+            let report = serve(&engine.handle(), &spec, &bundle, &cfg)?;
+            println!("{}", report.row());
+            engine.shutdown();
+        }
+        "table2" => {
+            tables::table2(&Runtime::load(&artifacts)?, &opts)?;
+        }
+        "table3" => {
+            tables::table3(&Runtime::load(&artifacts)?, &opts)?;
+        }
+        "table4" => {
+            tables::table4(&Runtime::load(&artifacts)?, &opts)?;
+        }
+        "table5" => {
+            tables::table5(&Runtime::load(&artifacts)?, &opts)?;
+        }
+        "table6" => {
+            tables::table6(&Runtime::load(&artifacts)?, &opts)?;
+        }
+        "table7" => {
+            tables::table7(&Runtime::load(&artifacts)?, &opts)?;
+        }
+        "complexity" => {
+            tables::complexity_table(&Runtime::load(&artifacts)?)?;
+        }
+        "figure5" => {
+            let rt = Runtime::load(&artifacts)?;
+            figures::figure5(&artifacts, &rt, args.flag_parse("requests", 64usize)?)?;
+        }
+        "figure9" => {
+            figures::figure9(&Runtime::load(&artifacts)?, opts.seed)?;
+        }
+        "figure10" => {
+            figures::figure10(&Runtime::load(&artifacts)?, opts.seed)?;
+        }
+        "figures" => {
+            let rt = Runtime::load(&artifacts)?;
+            figures::figures34(&rt, opts.seed)?;
+            figures::figure8(&rt, opts.seed)?;
+        }
+        "all" => {
+            let rt = Runtime::load(&artifacts)?;
+            tables::table2(&rt, &opts)?;
+            tables::table3(&rt, &opts)?;
+            tables::table4(&rt, &opts)?;
+            tables::table5(&rt, &opts)?;
+            tables::table6(&rt, &opts)?;
+            tables::table7(&rt, &opts)?;
+            tables::complexity_table(&rt)?;
+            figures::figures34(&rt, opts.seed)?;
+            figures::figure8(&rt, opts.seed)?;
+            figures::figure9(&rt, opts.seed)?;
+            figures::figure10(&rt, opts.seed)?;
+            figures::figure5(&artifacts, &rt, args.flag_parse("requests", 64usize)?)?;
+        }
+        // Utility used by examples/tests to sanity-check one bundle quickly.
+        "quickcheck" => {
+            let rt = Runtime::load(&artifacts)?;
+            let bundle = args.flag_or("prefix", "quickstart");
+            let spec = rt.manifest().bundle(&bundle)?.clone();
+            let source = BatchSource::for_bundle(&spec)?;
+            let mut trainer = Trainer::new(&rt, &bundle, 0)?;
+            trainer.train(&source, 5, 1)?;
+            let ev = trainer.eval(&source, 2)?;
+            println!("quickcheck {bundle}: loss={:.3} acc={:.3}", ev.loss, ev.accuracy);
+        }
+        other => bail!("unknown command {other:?} (try `mita help`)"),
+    }
+    Ok(())
+}
+
+const HELP: &str = r#"mita — MiTA attention coordinator (rust + JAX/Pallas AOT)
+
+usage: mita [--artifacts DIR] <command> [args]
+
+inspection:
+  info [--prefix P]        list bundles from the manifest
+  flops [--prefix P]       analytical FLOPs/params per bundle
+  complexity               attention FLOPs scaling vs N
+
+single runs:
+  train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
+  eval <bundle> <checkpoint> [--batches N]
+  serve <bundle> [--requests N] [--rate R] [--max-wait-ms W] [--queue-cap C]
+
+paper reproduction (see DESIGN.md experiment index):
+  table2   from-scratch image classification (attention varied only)
+  table3   model-level comparison
+  table4   dense prediction (mIoU + FLOPs reduction)
+  table5   synthetic LRA benchmark (acc + train throughput)
+  table6   ablations (landmarks, m x k, compress/route)
+  table7   finetuning pretrained standard-attn params
+  figure5  inference throughput vs N (serving benchmark)
+  figure9  train-with-X / infer-with-Y generalization matrix
+  figure10 (m, k) generalization grid
+  figures  figures 3/4 (expert heatmaps) + 8 (overlap)
+  all      everything above in sequence
+"#;

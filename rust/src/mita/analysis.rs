@@ -1,0 +1,122 @@
+//! Analysis metrics over trained-model routing internals (the outputs of
+//! the `analysis` artifact: per-layer top-k indices and query→expert
+//! assignments).
+//!
+//! - [`expert_query_overlap`]: Fig. 8 — positional IoU between the key-value
+//!   pairs an expert gathers and the queries routed to it. Low overlap means
+//!   MiTA routes (information flows across regions) rather than clusters.
+//! - [`selected_token_fraction`]: Fig. 4 — fraction of tokens selected by at
+//!   least one expert; its decay over depth is the emergent token-pruning
+//!   effect.
+
+use std::collections::HashSet;
+
+/// Mean IoU between expert key-value positions and routed-query positions.
+///
+/// `topk`: `[m * kk]` token indices gathered per expert (expert-major).
+/// `assign`: `[n]` expert id per query. Experts with no routed queries are
+/// skipped (IoU undefined), matching the paper's per-expert average.
+pub fn expert_query_overlap(topk: &[usize], assign: &[usize], m: usize, kk: usize) -> f64 {
+    assert_eq!(topk.len(), m * kk);
+    let mut ious = Vec::with_capacity(m);
+    for e in 0..m {
+        let kv: HashSet<usize> = topk[e * kk..(e + 1) * kk].iter().copied().collect();
+        let queries: HashSet<usize> =
+            assign.iter().enumerate().filter(|&(_, &a)| a == e).map(|(i, _)| i).collect();
+        if queries.is_empty() {
+            continue;
+        }
+        let inter = kv.intersection(&queries).count();
+        let union = kv.union(&queries).count();
+        if union > 0 {
+            ious.push(inter as f64 / union as f64);
+        }
+    }
+    if ious.is_empty() {
+        0.0
+    } else {
+        ious.iter().sum::<f64>() / ious.len() as f64
+    }
+}
+
+/// Fraction of the n tokens selected by at least one expert's top-k set.
+pub fn selected_token_fraction(topk: &[usize], n: usize) -> f64 {
+    let distinct: HashSet<usize> = topk.iter().copied().collect();
+    distinct.len() as f64 / n as f64
+}
+
+/// Per-token selection counts (how many experts picked each token) — used
+/// to render the Fig. 4 heatmaps as ASCII/PGM.
+pub fn selection_counts(topk: &[usize], n: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; n];
+    for &t in topk {
+        assert!(t < n, "token index {t} out of range {n}");
+        counts[t] += 1;
+    }
+    counts
+}
+
+/// Render a token-grid heatmap as ASCII art (row-major `gh x gw` grid).
+pub fn ascii_heatmap(counts: &[usize], gh: usize, gw: usize) -> String {
+    assert_eq!(counts.len(), gh * gw);
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    let ramp = [' ', '.', ':', '+', '*', '#', '@'];
+    let mut out = String::with_capacity(gh * (gw + 1));
+    for y in 0..gh {
+        for x in 0..gw {
+            let v = counts[y * gw + x];
+            let idx = (v * (ramp.len() - 1) + max / 2) / max;
+            out.push(ramp[idx.min(ramp.len() - 1)]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_identical_sets_is_one() {
+        // m=1 expert picks tokens {0,1}; queries 0 and 1 route to it; queries
+        // beyond n=2 don't exist.
+        let topk = vec![0, 1];
+        let assign = vec![0, 0];
+        assert!((expert_query_overlap(&topk, &assign, 1, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_disjoint_sets_is_zero() {
+        let topk = vec![2, 3];
+        let assign = vec![0, 0, 1, 1]; // queries 0,1 -> expert0; 2,3 -> expert1
+        let topk2 = vec![2, 3, 0, 1]; // e0 gathers {2,3}, e1 gathers {0,1}
+        assert_eq!(expert_query_overlap(&topk2, &assign, 2, 2), 0.0);
+        let _ = topk;
+    }
+
+    #[test]
+    fn empty_experts_skipped() {
+        let topk = vec![0, 1, 2, 3];
+        let assign = vec![0, 0]; // expert 1 gets no queries
+        let v = expert_query_overlap(&topk, &assign, 2, 2);
+        assert!((v - 1.0).abs() < 1e-12); // only expert 0 counted: {0,1} vs {0,1}
+    }
+
+    #[test]
+    fn selected_fraction_counts_distinct() {
+        let topk = vec![0, 0, 1, 1]; // experts overlap on tokens 0/1
+        assert!((selected_token_fraction(&topk, 4) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn selection_counts_and_heatmap() {
+        let topk = vec![0, 1, 1, 3];
+        let counts = selection_counts(&topk, 4);
+        assert_eq!(counts, vec![1, 2, 0, 1]);
+        let art = ascii_heatmap(&counts, 2, 2);
+        assert_eq!(art.lines().count(), 2);
+        // Max-count cell uses the densest glyph.
+        assert!(art.contains('@'));
+    }
+}

@@ -1,0 +1,17 @@
+//! Pure-Rust mirror of the MiTA routing math (kernels/ref.py) plus the
+//! analysis metrics behind Figs. 3/4/8.
+//!
+//! The Rust side never recomputes attention itself on the request path —
+//! that is the AOT artifacts' job — but the coordinator needs the routing
+//! semantics for (a) analysis of trained models (overlap mIoU, token
+//! pruning), and (b) property tests of the invariants the Pallas kernel's
+//! host packing relies on.
+
+pub mod analysis;
+pub mod routing;
+
+pub use analysis::{expert_query_overlap, selected_token_fraction};
+pub use routing::{
+    adaptive_pool_matrix, capacity, landmarks_pool1d, pack_by_expert, route_argmax, scores,
+    topk_indices, PackResult,
+};

@@ -1,0 +1,224 @@
+//! MiTA routing primitives: landmark pooling, landmark scores, top-k expert
+//! construction, argmax routing, and the capacity packing used by the
+//! Pallas kernel's host wrapper (mita.py) — re-implemented in Rust so the
+//! invariants can be property-tested without a Python runtime.
+//!
+//! Matrix convention: row-major `[n, d]` slices, matching kernels/ref.py.
+
+/// `[m, n]` adaptive average-pooling matrix (PyTorch AdaptiveAvgPool1d
+/// windows): element r belongs to window i iff
+/// `floor(i*n/m) <= r < floor((i+1)*n/m)`.
+pub fn adaptive_pool_matrix(n: usize, m: usize) -> Vec<f32> {
+    assert!(m >= 1 && m <= n);
+    let mut mat = vec![0.0f32; m * n];
+    for i in 0..m {
+        let lo = i * n / m;
+        let hi = (i + 1) * n / m;
+        let w = 1.0 / (hi - lo) as f32;
+        for r in lo..hi {
+            mat[i * n + r] = w;
+        }
+    }
+    mat
+}
+
+/// 1-D adaptive-average-pooled landmarks: q `[n, d]` -> `[m, d]`.
+pub fn landmarks_pool1d(q: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    assert_eq!(q.len(), n * d);
+    let p = adaptive_pool_matrix(n, m);
+    let mut out = vec![0.0f32; m * d];
+    for i in 0..m {
+        for r in 0..n {
+            let w = p[i * n + r];
+            if w != 0.0 {
+                for c in 0..d {
+                    out[i * d + c] += w * q[r * d + c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Landmark scores S = K Q̃ᵀ / sqrt(d): `[n, m]` (Alg. 1 line 4).
+pub fn scores(k: &[f32], q_land: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
+    assert_eq!(k.len(), n * d);
+    assert_eq!(q_land.len(), m * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = vec![0.0f32; n * m];
+    for r in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                acc += k[r * d + c] * q_land[i * d + c];
+            }
+            s[r * m + i] = acc * scale;
+        }
+    }
+    s
+}
+
+/// Top-k row indices per expert column (Eq. 7): returns `[m, kk]` indices,
+/// each column's picks sorted by descending score (ties: lower index first).
+pub fn topk_indices(s: &[f32], n: usize, m: usize, kk: usize) -> Vec<usize> {
+    assert!(kk <= n);
+    let mut out = Vec::with_capacity(m * kk);
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    for i in 0..m {
+        order.clear();
+        order.extend(0..n);
+        order.sort_by(|&a, &b| {
+            s[b * m + i]
+                .partial_cmp(&s[a * m + i])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        out.extend_from_slice(&order[..kk]);
+    }
+    out
+}
+
+/// Argmax routing e(q) over logits Q Q̃ᵀ (s = 1): `[n]` expert ids.
+pub fn route_argmax(q: &[f32], q_land: &[f32], n: usize, d: usize, m: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(n);
+    for r in 0..n {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for i in 0..m {
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                acc += q[r * d + c] * q_land[i * d + c];
+            }
+            if acc > best_v {
+                best_v = acc;
+                best = i;
+            }
+        }
+        out.push(best);
+    }
+    out
+}
+
+/// Per-expert query capacity as used by the kernel host wrapper:
+/// `ceil(ceil(n/m) * cap_factor / block_q) * block_q`.
+pub fn capacity(n: usize, m: usize, cap_factor: usize, block_q: usize) -> usize {
+    let base = n.div_ceil(m) * cap_factor;
+    base.div_ceil(block_q) * block_q
+}
+
+/// Result of packing queries into per-expert slots (mirrors mita.py).
+#[derive(Debug, Clone)]
+pub struct PackResult {
+    /// slot[q] = expert * cap + rank, or None if the query overflowed.
+    pub slot: Vec<Option<usize>>,
+    pub cap: usize,
+    pub overflow: usize,
+    /// queries per expert (before capacity truncation).
+    pub counts: Vec<usize>,
+}
+
+/// Pack queries by expert assignment with bounded capacity — the static-
+/// shape substitute for varlen batching (DESIGN.md §6).
+pub fn pack_by_expert(assign: &[usize], m: usize, cap: usize) -> PackResult {
+    let n = assign.len();
+    let mut counts = vec![0usize; m];
+    for &e in assign {
+        assert!(e < m, "expert id {e} out of range {m}");
+        counts[e] += 1;
+    }
+    let mut next = vec![0usize; m];
+    let mut slot = Vec::with_capacity(n);
+    let mut overflow = 0usize;
+    // Stable iteration order mirrors jnp.argsort(e, stable) + rank-within-
+    // expert: queries keep arrival order within their expert.
+    for &e in assign {
+        let r = next[e];
+        next[e] += 1;
+        if r < cap {
+            slot.push(Some(e * cap + r));
+        } else {
+            slot.push(None);
+            overflow += 1;
+        }
+    }
+    PackResult { slot, cap, overflow, counts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_matrix_rows_sum_to_one() {
+        for (n, m) in [(10, 3), (196, 25), (7, 7), (64, 16)] {
+            let p = adaptive_pool_matrix(n, m);
+            for i in 0..m {
+                let s: f32 = (0..n).map(|r| p[i * n + r]).sum();
+                assert!((s - 1.0).abs() < 1e-5, "n={n} m={m} row {i} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_windows_partition() {
+        let (n, m) = (14, 5); // the paper's non-divisible case
+        let p = adaptive_pool_matrix(n, m);
+        // Every column has exactly one nonzero entry.
+        for r in 0..n {
+            let nz = (0..m).filter(|&i| p[i * n + r] != 0.0).count();
+            assert_eq!(nz, 1, "element {r} in {nz} windows");
+        }
+    }
+
+    #[test]
+    fn landmarks_of_constant_input() {
+        let (n, d, m) = (12, 3, 4);
+        let q = vec![2.5f32; n * d];
+        let l = landmarks_pool1d(&q, n, d, m);
+        assert!(l.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn topk_picks_highest() {
+        // n=4 keys, m=1 expert, scores 0.1, 0.9, 0.5, 0.7 -> top2 = [1, 3]
+        let s = vec![0.1f32, 0.9, 0.5, 0.7];
+        let idx = topk_indices(&s, 4, 1, 2);
+        assert_eq!(idx, vec![1, 3]);
+    }
+
+    #[test]
+    fn route_argmax_basic() {
+        // d=1: q = [1, -1], landmarks = [1, -1] -> q0 -> e0, q1 -> e1.
+        let q = vec![1.0f32, -1.0];
+        let l = vec![1.0f32, -1.0];
+        assert_eq!(route_argmax(&q, &l, 2, 1, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn capacity_rounding() {
+        assert_eq!(capacity(196, 25, 2, 64), 64); // ceil(8*2/64)*64
+        assert_eq!(capacity(1024, 16, 2, 64), 128);
+        assert_eq!(capacity(64, 16, 1, 8), 8);
+    }
+
+    #[test]
+    fn pack_no_overflow_when_cap_large() {
+        let assign = vec![0, 1, 0, 2, 1, 0];
+        let r = pack_by_expert(&assign, 3, 4);
+        assert_eq!(r.overflow, 0);
+        assert_eq!(r.counts, vec![3, 2, 1]);
+        // Slots within an expert are consecutive ranks in arrival order.
+        assert_eq!(r.slot[0], Some(0)); // e0 rank0
+        assert_eq!(r.slot[2], Some(1)); // e0 rank1
+        assert_eq!(r.slot[5], Some(2)); // e0 rank2
+        assert_eq!(r.slot[1], Some(4)); // e1 rank0 (1*4+0)
+    }
+
+    #[test]
+    fn pack_overflow_counted() {
+        let assign = vec![0; 10];
+        let r = pack_by_expert(&assign, 2, 4);
+        assert_eq!(r.overflow, 6);
+        assert_eq!(r.slot.iter().filter(|s| s.is_some()).count(), 4);
+    }
+}

@@ -1,0 +1,148 @@
+//! Markdown table/figure rendering for the experiment binaries — every
+//! table binary prints rows in the paper's format plus a `paper:` column
+//! annotation so EXPERIMENTS.md diffs are mechanical.
+
+use std::fmt::Write as _;
+
+/// Simple aligned markdown table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize], out: &mut String| {
+            out.push('|');
+            for i in 0..ncols {
+                let _ = write!(out, " {:width$} |", cells[i], width = widths[i]);
+            }
+            out.push('\n');
+        };
+        line(&self.header, &widths, &mut out);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{:-<width$}|", "", width = w + 2);
+        }
+        out.push('\n');
+        for row in &self.rows {
+            line(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+/// Format a ratio as the paper's "×N.N" speedup notation.
+pub fn speedup(x: f64) -> String {
+    format!("×{x:.1}")
+}
+
+/// Format an accuracy fraction as percent.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+/// An ASCII line chart (for loss curves / Fig. 5 series in the terminal).
+pub fn ascii_chart(series: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    if series.is_empty() || series.iter().all(|(_, pts)| pts.is_empty()) {
+        return String::from("(no data)\n");
+    }
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|(_, p)| p.iter().copied()).collect();
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['*', 'o', '+', 'x', '#', '%'];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for &(x, y) in pts {
+            let cx = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "y: [{ymin:.3}, {ymax:.3}]  x: [{xmin:.1}, {xmax:.1}]");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} = {}", marks[si % marks.len()], name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Method", "Acc"]);
+        t.row_strs(&["standard", "58.2"]);
+        t.row_strs(&["mita", "58.9"]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Method"));
+        assert!(lines[2].contains("standard"));
+        // All lines equal width.
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only one"]);
+    }
+
+    #[test]
+    fn chart_handles_degenerate_input() {
+        assert!(ascii_chart(&[], 10, 5).contains("no data"));
+        let s = ascii_chart(&[("flat", vec![(0.0, 1.0), (1.0, 1.0)])], 20, 5);
+        assert!(s.contains('*'));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(speedup(4.06), "×4.1");
+        assert_eq!(pct(0.589), "58.9");
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them on the CPU
+//! client, caches executables, and runs them with `Tensor` I/O.
+//!
+//! Python never runs here — this is the self-contained request path.
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+/// Compile/run statistics (surfaced by `mita info` and the benches).
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_secs: f64,
+    pub executions: usize,
+    pub execute_secs: f64,
+}
+
+/// The PJRT-backed runtime. Single-threaded by design (PJRT handles are not
+/// `Send`); the serving coordinator owns one `Runtime` inside a dedicated
+/// engine thread (see coordinator::engine).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load manifest + create the CPU PJRT client. `dir` is `artifacts/`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn artifact_spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
+    /// Get (compiling + caching on first use) an executable by artifact name.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compiles += 1;
+            st.compile_secs += t0.elapsed().as_secs_f64();
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (warm the cache off the hot path).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Run an artifact on literal inputs, returning the flattened outputs.
+    ///
+    /// AOT computations are lowered with `return_tuple=True`, so PJRT yields
+    /// a single tuple buffer which we decompose into element literals.
+    pub fn run_literals(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {name}: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        let parts = lit
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))?;
+        Ok(parts)
+    }
+
+    /// Run an artifact with `Tensor` I/O (validated against the manifest).
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            t.check_spec(s).with_context(|| format!("{name} input {i}"))?;
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let outs = self.run_literals(name, &lits)?;
+        outs.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Run with mixed literal state + tensor batch inputs (train loop hot
+    /// path: parameters stay as literals between steps, only the batch is
+    /// freshly converted).
+    pub fn run_hybrid(
+        &self,
+        name: &str,
+        state: &[xla::Literal],
+        batch: &[Tensor],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(state.len() + batch.len());
+        // Literals are opaque handles; cloning copies host data. To avoid
+        // that we pass borrowed literals — execute takes Borrow<Literal>.
+        // Build a reference vector instead.
+        let mut refs: Vec<&xla::Literal> = state.iter().collect();
+        for t in batch {
+            lits.push(t.to_literal()?);
+        }
+        refs.extend(lits.iter());
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {name}: {e:?}"))?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        lit.decompose_tuple().map_err(|e| anyhow::anyhow!("decompose {name}: {e:?}"))
+    }
+}

@@ -1,0 +1,409 @@
+//! Schema of `artifacts/manifest.json` — the contract between the Python
+//! AOT pipeline (python/compile/aot.py) and the Rust coordinator.
+//!
+//! The manifest records, per *bundle* (one experiment configuration), the
+//! model/train configs, the flattened parameter layout, and the artifact
+//! names of each lowered computation; and per *artifact*, the HLO text file
+//! plus exact input/output tensor specs. Parsed with util::json (the build
+//! environment has no serde).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Tensor dtype names used throughout the manifest (`_DTYPE_NAMES` in aot.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    Bf16,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "bf16" => DType::Bf16,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+}
+
+/// Shape + dtype of one tensor crossing the Rust⇄XLA boundary.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(v.get("dtype")?.as_str()?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered computation (an `.hlo.txt` file).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub spec_hash: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Attention mechanism configuration (mirrors configs.AttentionConfig).
+#[derive(Debug, Clone)]
+pub struct AttentionCfg {
+    pub kind: String,
+    pub m: usize,
+    pub k: usize,
+    pub s: usize,
+    pub landmark: String,
+    pub cap_factor: usize,
+    pub use_pallas: bool,
+}
+
+/// Model configuration (mirrors configs.ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub task: String,
+    pub depth: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub mlp_ratio: f64,
+    pub num_classes: usize,
+    pub attention: AttentionCfg,
+    pub image_hw: (usize, usize),
+    pub patch: usize,
+    pub channels: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub pool: String,
+    pub dwc: bool,
+    pub gate: bool,
+}
+
+impl ModelCfg {
+    /// Token count seen by the transformer (N in the paper).
+    pub fn num_tokens(&self) -> usize {
+        if self.task == "lra" {
+            self.seq_len
+        } else {
+            (self.image_hw.0 / self.patch) * (self.image_hw.1 / self.patch)
+        }
+    }
+
+    pub fn grid_hw(&self) -> (usize, usize) {
+        (self.image_hw.0 / self.patch, self.image_hw.1 / self.patch)
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let a = v.get("attention")?;
+        let hw = v.get("image_hw")?.as_arr()?;
+        anyhow::ensure!(hw.len() == 2, "image_hw must have 2 entries");
+        Ok(ModelCfg {
+            task: v.get("task")?.as_str()?.to_string(),
+            depth: v.get("depth")?.as_usize()?,
+            dim: v.get("dim")?.as_usize()?,
+            heads: v.get("heads")?.as_usize()?,
+            mlp_ratio: v.get("mlp_ratio")?.as_f64()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            attention: AttentionCfg {
+                kind: a.get("kind")?.as_str()?.to_string(),
+                m: a.get("m")?.as_usize()?,
+                k: a.get("k")?.as_usize()?,
+                s: a.get("s")?.as_usize()?,
+                landmark: a.get("landmark")?.as_str()?.to_string(),
+                cap_factor: a.get("cap_factor")?.as_usize()?,
+                use_pallas: a.get("use_pallas")?.as_bool()?,
+            },
+            image_hw: (hw[0].as_usize()?, hw[1].as_usize()?),
+            patch: v.get("patch")?.as_usize()?,
+            channels: v.get("channels")?.as_usize()?,
+            seq_len: v.get("seq_len")?.as_usize()?,
+            vocab: v.get("vocab")?.as_usize()?,
+            pool: v.get("pool")?.as_str()?.to_string(),
+            dwc: v.get("dwc")?.as_bool()?,
+            gate: v.get("gate")?.as_bool()?,
+        })
+    }
+}
+
+/// Training hyperparameters (mirrors configs.TrainConfig).
+#[derive(Debug, Clone)]
+pub struct TrainCfg {
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+    pub label_smoothing: f64,
+    pub grad_clip: f64,
+    pub batch_size: usize,
+}
+
+impl TrainCfg {
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(TrainCfg {
+            lr: v.get("lr")?.as_f64()?,
+            weight_decay: v.get("weight_decay")?.as_f64()?,
+            beta1: v.get("beta1")?.as_f64()?,
+            beta2: v.get("beta2")?.as_f64()?,
+            eps: v.get("eps")?.as_f64()?,
+            warmup_steps: v.get("warmup_steps")?.as_usize()?,
+            total_steps: v.get("total_steps")?.as_usize()?,
+            label_smoothing: v.get("label_smoothing")?.as_f64()?,
+            grad_clip: v.get("grad_clip")?.as_f64()?,
+            batch_size: v.get("batch_size")?.as_usize()?,
+        })
+    }
+}
+
+/// One flattened parameter leaf (jax tree order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub path: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One experiment bundle.
+#[derive(Debug, Clone)]
+pub struct BundleSpec {
+    pub model: ModelCfg,
+    pub train: TrainCfg,
+    pub meta: HashMap<String, Value>,
+    pub param_layout: Vec<ParamSpec>,
+    /// computation name ("init", "train_step", ...) -> artifact name.
+    pub artifacts: HashMap<String, String>,
+}
+
+impl BundleSpec {
+    /// Number of parameter leaves (P in aot.py's flat signatures).
+    pub fn param_count(&self) -> usize {
+        self.param_layout.len()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str().ok())
+    }
+
+    pub fn meta_u64(&self, key: &str) -> Option<u64> {
+        self.meta.get(key).and_then(|v| v.as_f64().ok()).map(|f| f as u64)
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let param_layout = v
+            .get("param_layout")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    path: p.get("path")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    dtype: DType::parse(p.get("dtype")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = HashMap::new();
+        for (k, val) in v.get("artifacts")?.as_obj()? {
+            artifacts.insert(k.clone(), val.as_str()?.to_string());
+        }
+        let meta = match v.opt("meta") {
+            Some(m) => m.as_obj()?.clone(),
+            None => HashMap::new(),
+        };
+        Ok(BundleSpec {
+            model: ModelCfg::from_json(v.get("model")?)?,
+            train: TrainCfg::from_json(v.get("train")?)?,
+            meta,
+            param_layout,
+            artifacts,
+        })
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: usize,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub bundles: HashMap<String, BundleSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Value::parse(text).context("parsing manifest.json")?;
+        let version = v.get("version")?.as_usize()?;
+        anyhow::ensure!(version == 2, "unsupported manifest version {version}");
+
+        let mut artifacts = HashMap::new();
+        for (name, av) in v.get("artifacts")?.as_obj()? {
+            let spec = ArtifactSpec {
+                file: av.get("file")?.as_str()?.to_string(),
+                spec_hash: av.get("spec_hash")?.as_str()?.to_string(),
+                inputs: av
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: av
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            artifacts.insert(name.clone(), spec);
+        }
+
+        let mut bundles = HashMap::new();
+        for (name, bv) in v.get("bundles")?.as_obj()? {
+            bundles.insert(
+                name.clone(),
+                BundleSpec::from_json(bv).with_context(|| format!("bundle {name:?}"))?,
+            );
+        }
+        Ok(Manifest { version, artifacts, bundles })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn bundle(&self, name: &str) -> Result<&BundleSpec> {
+        self.bundles
+            .get(name)
+            .with_context(|| format!("bundle {name:?} not in manifest (run `make artifacts`)"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    /// Artifact name of a bundle's computation, e.g. ("t2_std", "train_step").
+    pub fn bundle_artifact(&self, bundle: &str, which: &str) -> Result<&str> {
+        let b = self.bundle(bundle)?;
+        b.artifacts
+            .get(which)
+            .map(|s| s.as_str())
+            .with_context(|| format!("bundle {bundle:?} has no {which:?} artifact"))
+    }
+
+    /// All bundle names with a given prefix, sorted (experiment iteration).
+    pub fn bundles_with_prefix(&self, prefix: &str) -> Vec<&str> {
+        let mut v: Vec<&str> = self
+            .bundles
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(|s| s.as_str())
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"{
+        "version": 2,
+        "artifacts": {
+            "q.init": {
+                "file": "q.init.hlo.txt", "spec_hash": "ab",
+                "inputs": [{"shape": [], "dtype": "i32"}],
+                "outputs": [{"shape": [4, 4], "dtype": "f32"}]
+            }
+        },
+        "bundles": {
+            "q": {
+                "model": {
+                    "task": "cls_image", "depth": 2, "dim": 64, "heads": 4,
+                    "mlp_ratio": 4.0, "num_classes": 10,
+                    "attention": {"kind": "mita", "m": 4, "k": 4, "s": 1,
+                                  "landmark": "pool2d", "cap_factor": 2,
+                                  "use_pallas": false},
+                    "image_hw": [16, 16], "patch": 4, "channels": 3,
+                    "seq_len": 1024, "vocab": 32, "pool": "mean",
+                    "dwc": false, "gate": false
+                },
+                "train": {
+                    "lr": 0.001, "weight_decay": 0.05, "beta1": 0.9,
+                    "beta2": 0.999, "eps": 1e-8, "warmup_steps": 5,
+                    "total_steps": 60, "label_smoothing": 0.1,
+                    "grad_clip": 1.0, "batch_size": 16
+                },
+                "meta": {"steps": 60, "row": "std"},
+                "param_layout": [{"path": "pos", "shape": [16, 64], "dtype": "f32"}],
+                "artifacts": {"init": "q.init"}
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parse_minimal_manifest() {
+        let m = Manifest::parse(MINIMAL).unwrap();
+        assert_eq!(m.version, 2);
+        let b = m.bundle("q").unwrap();
+        assert_eq!(b.model.num_tokens(), 16);
+        assert_eq!(b.param_count(), 1);
+        assert_eq!(b.meta_u64("steps"), Some(60));
+        assert_eq!(b.meta_str("row"), Some("std"));
+        assert_eq!(m.bundle_artifact("q", "init").unwrap(), "q.init");
+        let art = m.artifact("q.init").unwrap();
+        assert_eq!(art.inputs[0].dtype, DType::I32);
+        assert_eq!(art.outputs[0].elements(), 16);
+        assert!(m.bundle("nope").is_err());
+        assert_eq!(m.bundles_with_prefix("q"), vec!["q"]);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = MINIMAL.replacen("\"version\": 2", "\"version\": 1", 1);
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn dtype_parse_rejects_unknown() {
+        assert!(DType::parse("f64").is_err());
+        assert_eq!(DType::parse("f32").unwrap().size_bytes(), 4);
+        assert_eq!(DType::parse("bf16").unwrap().size_bytes(), 2);
+    }
+}

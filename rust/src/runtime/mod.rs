@@ -1,0 +1,15 @@
+//! Runtime layer: manifest-driven loading and execution of AOT-compiled
+//! XLA artifacts through the PJRT C API (the `xla` crate).
+//!
+//! - [`manifest`]: schema of `artifacts/manifest.json` (the Python⇄Rust
+//!   contract).
+//! - [`tensor`]: host tensors ⇄ `xla::Literal`.
+//! - [`client`]: the [`Runtime`] — compile cache + execution.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Runtime, RuntimeStats};
+pub use manifest::{ArtifactSpec, BundleSpec, DType, Manifest, ModelCfg, TensorSpec, TrainCfg};
+pub use tensor::Tensor;

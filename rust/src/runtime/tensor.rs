@@ -1,0 +1,214 @@
+//! Host-side tensor type bridging Rust data and XLA `Literal`s.
+//!
+//! The coordinator's data generators produce `Tensor`s; the runtime converts
+//! them to `xla::Literal` on the way into an executable and back on the way
+//! out. Only the dtypes that cross the AOT boundary are supported (f32/i32).
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(data.len() == n, "shape {shape:?} wants {n} elems, got {}", data.len());
+        Ok(Tensor::F32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        anyhow::ensure!(data.len() == n, "shape {shape:?} wants {n} elems, got {}", data.len());
+        Ok(Tensor::I32 { shape: shape.to_vec(), data })
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Result<Self> {
+        let n = spec.elements();
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::F32 { shape: spec.shape.clone(), data: vec![0.0; n] },
+            DType::I32 => Tensor::I32 { shape: spec.shape.clone(), data: vec![0; n] },
+            other => bail!("unsupported dtype {other:?}"),
+        })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Extract the single element of a scalar tensor as f64.
+    pub fn scalar(&self) -> Result<f64> {
+        anyhow::ensure!(self.len() == 1, "scalar() on tensor of {} elems", self.len());
+        Ok(match self {
+            Tensor::F32 { data, .. } => data[0] as f64,
+            Tensor::I32 { data, .. } => data[0] as f64,
+        })
+    }
+
+    /// Check this tensor against a manifest spec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<()> {
+        anyhow::ensure!(
+            self.shape() == spec.shape.as_slice() && self.dtype() == spec.dtype,
+            "tensor {:?}{:?} does not match spec {:?}{:?}",
+            self.dtype(),
+            self.shape(),
+            spec.dtype,
+            spec.shape
+        );
+        Ok(())
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Convert from an XLA literal (f32/s32 only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                Tensor::f32(&dims, data)
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                Tensor::i32(&dims, data)
+            }
+            other => bail!("unsupported literal type {other:?}"),
+        }
+    }
+
+    /// Mean of an f32 tensor (convenience for metrics).
+    pub fn mean(&self) -> Result<f64> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(!d.is_empty(), "mean of empty tensor");
+        Ok(d.iter().map(|&x| x as f64).sum::<f64>() / d.len() as f64)
+    }
+
+    /// Argmax over the last axis; returns i32 indices of shape[:-1].
+    pub fn argmax_last(&self) -> Result<Tensor> {
+        let d = self.as_f32()?;
+        let shape = self.shape();
+        anyhow::ensure!(!shape.is_empty(), "argmax on scalar");
+        let last = *shape.last().context("empty shape")?;
+        let rows = d.len() / last;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &d[r * last..(r + 1) * last];
+            let mut best = 0usize;
+            for (i, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = i;
+                }
+            }
+            out.push(best as i32);
+        }
+        Tensor::i32(&shape[..shape.len() - 1], out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_shapes() {
+        let t = Tensor::f32(&[2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert!((t.mean().unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::f32(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(&[4], vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_i32(7);
+        assert_eq!(t.scalar().unwrap(), 7.0);
+        assert_eq!(t.shape(), &[] as &[usize]);
+    }
+
+    #[test]
+    fn argmax_last_works() {
+        let t = Tensor::f32(&[2, 3], vec![0.1, 0.9, 0.3, 5.0, -1.0, 2.0]).unwrap();
+        let am = t.argmax_last().unwrap();
+        assert_eq!(am.as_i32().unwrap(), &[1, 0]);
+    }
+
+    #[test]
+    fn check_spec_matches() {
+        let t = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
+        let ok = TensorSpec { shape: vec![2, 2], dtype: DType::F32 };
+        let bad = TensorSpec { shape: vec![4], dtype: DType::F32 };
+        assert!(t.check_spec(&ok).is_ok());
+        assert!(t.check_spec(&bad).is_err());
+    }
+
+    #[test]
+    fn zeros_from_spec() {
+        let spec = TensorSpec { shape: vec![3, 2], dtype: DType::I32 };
+        let t = Tensor::zeros(&spec).unwrap();
+        assert_eq!(t.as_i32().unwrap(), &[0; 6]);
+    }
+}

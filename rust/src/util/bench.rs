@@ -1,0 +1,126 @@
+//! Timing harness for the `cargo bench` binaries (criterion substitute).
+//!
+//! Measures wall-clock over warmup + timed iterations and reports
+//! mean/std/min plus derived throughput. Single-core deterministic
+//! environment ⇒ simple statistics suffice.
+
+use std::time::Instant;
+
+use crate::coordinator::metrics::Streaming;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:40} iters={:4} mean={:10.3}ms std={:8.3}ms min={:10.3}ms",
+            self.name,
+            self.iters,
+            self.mean_secs * 1e3,
+            self.std_secs * 1e3,
+            self.min_secs * 1e3
+        )
+    }
+
+    /// Items/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean_secs <= 0.0 {
+            0.0
+        } else {
+            items_per_iter / self.mean_secs
+        }
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and collect timing stats.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Streaming::default();
+    let mut min = f64::INFINITY;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        s.push(dt);
+        min = min.min(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_secs: s.mean(),
+        std_secs: s.std(),
+        min_secs: min,
+    }
+}
+
+/// Time-budgeted variant: run until `budget_secs` elapses (at least once).
+pub fn bench_for<F: FnMut()>(name: &str, warmup: usize, budget_secs: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Streaming::default();
+    let mut min = f64::INFINITY;
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        s.push(dt);
+        min = min.min(dt);
+        if start.elapsed().as_secs_f64() >= budget_secs {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: s.count() as usize,
+        mean_secs: s.mean(),
+        std_secs: s.std(),
+        min_secs: min,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let r = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_secs >= 0.0);
+        assert!(r.min_secs <= r.mean_secs + 1e-9);
+    }
+
+    #[test]
+    fn bench_for_runs_at_least_once() {
+        let mut n = 0;
+        let r = bench_for("noop", 0, 0.0, || n += 1);
+        assert!(n >= 1);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn throughput_derivation() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_secs: 0.5,
+            std_secs: 0.0,
+            min_secs: 0.5,
+        };
+        assert!((r.throughput(10.0) - 20.0).abs() < 1e-12);
+    }
+}

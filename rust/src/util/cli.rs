@@ -1,0 +1,109 @@
+//! Tiny argv parser (std-only clap substitute).
+//!
+//! Grammar: `mita [--global-flag v] <subcommand> [positionals] [--flag v]
+//! [--switch]`. Flags may appear anywhere after the subcommand; `--flag=v`
+//! and `--flag v` are both accepted.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+/// Flag names that take a value (everything else with `--` is a switch).
+pub fn parse(argv: &[String], valued: &[&str]) -> Result<Args> {
+    let mut out = Args::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if valued.contains(&name) {
+                i += 1;
+                let v = argv.get(i).with_context(|| format!("--{name} needs a value"))?;
+                out.flags.insert(name.to_string(), v.clone());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        } else if out.subcommand.is_empty() {
+            out.subcommand = a.clone();
+        } else {
+            out.positionals.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|e| anyhow::anyhow!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn positional(&self, i: usize, what: &str) -> Result<&str> {
+        match self.positionals.get(i) {
+            Some(s) => Ok(s.as_str()),
+            None => bail!("missing required argument <{what}>"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_positionals() {
+        let a = parse(&v(&["train", "t2_std", "--steps", "100", "--verbose", "--lr=0.1"]), &["steps"])
+            .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.positional(0, "bundle").unwrap(), "t2_std");
+        assert_eq!(a.flag("steps"), Some("100"));
+        assert_eq!(a.flag("lr"), Some("0.1"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.flag_parse("steps", 0usize).unwrap(), 100);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&v(&["train", "--steps"]), &["steps"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&v(&["info"]), &[]).unwrap();
+        assert_eq!(a.flag_or("prefix", ""), "");
+        assert_eq!(a.flag_parse("batches", 16usize).unwrap(), 16);
+        assert!(a.positional(0, "x").is_err());
+    }
+}

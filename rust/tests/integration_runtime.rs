@@ -1,0 +1,212 @@
+//! Integration tests over the AOT runtime: require `make artifacts` to have
+//! run (they skip with a loud note otherwise, so `cargo test` works in a
+//! fresh checkout).
+
+use mita::coordinator::{checkpoint, Trainer};
+use mita::data::{BatchSource, Split};
+use mita::runtime::{Runtime, Tensor};
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("runtime load"))
+}
+
+#[test]
+fn manifest_loads_and_has_all_experiments() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    for bundle in [
+        "quickstart",
+        "t2_std",
+        "t2_mita",
+        "t4_std",
+        "t4_mita_swap",
+        "t5_listops_standard",
+        "t5_pathfinder_mita",
+        "t6_mk_16x16",
+        "t7_mita",
+        "f5_standard_n1024",
+        "f9_eval_agent",
+        "f10_eval_m8k8",
+        "fig_analysis_mita",
+    ] {
+        assert!(m.bundle(bundle).is_ok(), "missing bundle {bundle}");
+    }
+    // Artifact files exist on disk.
+    for (name, art) in &m.artifacts {
+        assert!(
+            std::path::Path::new("artifacts").join(&art.file).exists(),
+            "missing file for {name}"
+        );
+    }
+}
+
+#[test]
+fn init_layout_matches_manifest() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("quickstart").unwrap().clone();
+    let trainer = Trainer::new(&rt, "quickstart", 7).unwrap();
+    let params = trainer.params().unwrap();
+    assert_eq!(params.len(), bundle.param_count());
+    for (t, spec) in params.iter().zip(&bundle.param_layout) {
+        assert_eq!(t.shape(), spec.shape.as_slice(), "param {}", spec.path);
+    }
+}
+
+#[test]
+fn quickstart_trains_and_loss_decreases() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("quickstart").unwrap().clone();
+    let source = BatchSource::for_bundle(&bundle).unwrap();
+    let mut trainer = Trainer::new(&rt, "quickstart", 0).unwrap();
+    trainer.train(&source, 60, 0).unwrap();
+    let first = trainer.history[0].loss;
+    let tail = trainer.tail_loss();
+    assert!(
+        tail < first * 0.7,
+        "loss did not decrease: first={first:.3} tail={tail:.3}"
+    );
+    let ev = trainer.eval(&source, 4).unwrap();
+    assert!(ev.accuracy > 0.2, "eval acc {:.3} not above chance", ev.accuracy);
+}
+
+#[test]
+fn deterministic_init_and_step() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("quickstart").unwrap().clone();
+    let source = BatchSource::for_bundle(&bundle).unwrap();
+    let mut a = Trainer::new(&rt, "quickstart", 123).unwrap();
+    let mut b = Trainer::new(&rt, "quickstart", 123).unwrap();
+    let (xa, ya) = source.batch(Split::Train, 0).unwrap();
+    let (xb, yb) = source.batch(Split::Train, 0).unwrap();
+    assert_eq!(xa, xb);
+    let (la, _) = a.step(xa, ya).unwrap();
+    let (lb, _) = b.step(xb, yb).unwrap();
+    assert_eq!(la, lb, "same seed + batch must give identical loss");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("quickstart").unwrap().clone();
+    let source = BatchSource::for_bundle(&bundle).unwrap();
+    let mut trainer = Trainer::new(&rt, "quickstart", 1).unwrap();
+    trainer.train(&source, 10, 0).unwrap();
+    let ev1 = trainer.eval(&source, 2).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("mita_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("q.ckpt");
+    trainer.save_checkpoint(&path).unwrap();
+
+    let ev2 = mita::coordinator::eval_checkpoint(&rt, &path, "quickstart", 2).unwrap();
+    assert!((ev1.loss - ev2.loss).abs() < 1e-5, "{} vs {}", ev1.loss, ev2.loss);
+    assert_eq!(ev1.accuracy, ev2.accuracy);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_start_resumes_from_params() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("quickstart").unwrap().clone();
+    let source = BatchSource::for_bundle(&bundle).unwrap();
+    let mut base = Trainer::new(&rt, "quickstart", 2).unwrap();
+    base.train(&source, 15, 0).unwrap();
+    let params = base.params().unwrap();
+    let warm = Trainer::with_warm_start(&rt, "quickstart", 99, &params).unwrap();
+    // Warm-started trainer evaluates identically to the source params.
+    let ev_base = base.eval(&source, 2).unwrap();
+    let ev_warm = warm.eval(&source, 2).unwrap();
+    assert!((ev_base.loss - ev_warm.loss).abs() < 1e-5);
+}
+
+#[test]
+fn predict_artifact_runs_and_shapes_match() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("quickstart").unwrap().clone();
+    let source = BatchSource::for_bundle(&bundle).unwrap();
+    let trainer = Trainer::new(&rt, "quickstart", 3).unwrap();
+    let (x, _) = source.batch(Split::Val, 0).unwrap();
+    let mut inputs = trainer.params().unwrap();
+    inputs.push(x);
+    let art = rt.manifest().bundle_artifact("quickstart", "predict").unwrap();
+    let outs = rt.run(art, &inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(
+        outs[0].shape(),
+        &[bundle.train.batch_size, bundle.model.num_classes]
+    );
+    let preds = outs[0].argmax_last().unwrap();
+    assert!(preds.as_i32().unwrap().iter().all(|&p| p >= 0 && p < 10));
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let art = rt.manifest().bundle_artifact("quickstart", "init").unwrap();
+    // Wrong input count.
+    assert!(rt.run(art, &[]).is_err());
+    // Wrong dtype/shape.
+    let bad = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
+    assert!(rt.run(art, &[bad]).is_err());
+}
+
+#[test]
+fn attention_swap_eval_works() {
+    // Fig. 9 mechanics: params trained under one bundle evaluated under
+    // another with identical layout.
+    let Some(rt) = runtime() else { return };
+    let t2 = rt.manifest().bundle("t2_std").unwrap().clone();
+    let f9 = rt.manifest().bundle("f9_eval_mita").unwrap().clone();
+    assert_eq!(t2.param_count(), f9.param_count());
+    let trainer = Trainer::new(&rt, "t2_std", 5).unwrap();
+    let source = BatchSource::for_bundle(&f9).unwrap();
+    let ev = trainer.eval_with(&source, 1, "f9_eval_mita").unwrap();
+    assert!(ev.loss.is_finite());
+}
+
+#[test]
+fn seg_bundle_eval_produces_confusion_miou() {
+    let Some(rt) = runtime() else { return };
+    let bundle = rt.manifest().bundle("t4_std").unwrap().clone();
+    let source = BatchSource::for_bundle(&bundle).unwrap();
+    let trainer = Trainer::new(&rt, "t4_std", 0).unwrap();
+    let ev = trainer.eval(&source, 1).unwrap();
+    let miou = ev.miou.expect("seg eval must report miou");
+    assert!((0.0..=1.0).contains(&miou));
+    assert!((0.0..=1.0).contains(&ev.accuracy));
+}
+
+#[test]
+fn checkpoint_format_rejects_layout_mismatch() {
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join(format!("mita_it2_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.ckpt");
+    checkpoint::save(&path, &[Tensor::scalar_f32(1.0)]).unwrap();
+    // quickstart wants dozens of params; one tensor must be rejected.
+    assert!(mita::coordinator::eval_checkpoint(&rt, &path, "quickstart", 1).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn loader_batches_match_manifest_specs_for_every_bundle() {
+    // The data substrate and the AOT artifacts must agree on batch shapes
+    // for every training bundle in the manifest — the contract that makes
+    // `mita all` safe to run unattended.
+    let Some(rt) = runtime() else { return };
+    for name in rt.manifest().bundles_with_prefix("") {
+        let bundle = rt.manifest().bundle(name).unwrap().clone();
+        let Some(train_art) = bundle.artifacts.get("train_step") else { continue };
+        let spec = rt.manifest().artifact(train_art).unwrap().clone();
+        let source = BatchSource::for_bundle(&bundle).expect(name);
+        let (x, y) = source.batch(Split::Train, 0).expect(name);
+        let p = bundle.param_count();
+        // train_step inputs: 3P params + step + x + y.
+        x.check_spec(&spec.inputs[3 * p + 1]).unwrap_or_else(|e| panic!("{name} x: {e}"));
+        y.check_spec(&spec.inputs[3 * p + 2]).unwrap_or_else(|e| panic!("{name} y: {e}"));
+    }
+}

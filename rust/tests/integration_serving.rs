@@ -1,0 +1,124 @@
+//! Integration tests over the serving stack (engine thread + batcher +
+//! server loop). Skip when artifacts are missing.
+
+use std::time::Duration;
+
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::server::{serve, ServeConfig};
+use mita::coordinator::Engine;
+use mita::runtime::Runtime;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn engine_runs_jobs_and_shuts_down() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load("artifacts").unwrap();
+    let art = rt.manifest().bundle_artifact("quickstart", "init").unwrap().to_string();
+    drop(rt);
+
+    let engine = Engine::spawn("artifacts".into(), vec![art.clone()]).unwrap();
+    let handle = engine.handle();
+    let out = handle
+        .run(&art, vec![mita::runtime::Tensor::scalar_i32(0)])
+        .unwrap();
+    assert!(!out.is_empty());
+    // Concurrent submissions from two threads.
+    let h2 = engine.handle();
+    let art2 = art.clone();
+    let t = std::thread::spawn(move || {
+        h2.run(&art2, vec![mita::runtime::Tensor::scalar_i32(1)]).unwrap().len()
+    });
+    let n1 = handle.run(&art, vec![mita::runtime::Tensor::scalar_i32(2)]).unwrap().len();
+    let n2 = t.join().unwrap();
+    assert_eq!(n1, n2);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_reports_unknown_artifact() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::spawn("artifacts".into(), vec![]).unwrap();
+    let err = engine.handle().run("no_such_artifact", vec![]);
+    assert!(err.is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn closed_loop_serving_completes_all_requests() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load("artifacts").unwrap();
+    let spec = rt.manifest().bundle("quickstart").unwrap().clone();
+    let predict = rt.manifest().bundle_artifact("quickstart", "predict").unwrap().to_string();
+    drop(rt);
+
+    let engine = Engine::spawn("artifacts".into(), vec![predict]).unwrap();
+    let rt2 = Runtime::load("artifacts").unwrap();
+    let init = rt2.manifest().bundle_artifact("quickstart", "init").unwrap().to_string();
+    drop(rt2);
+    engine.handle().bind_init("quickstart", &init, 0, spec.param_count()).unwrap();
+    let cfg = ServeConfig {
+        bundle: "quickstart".into(),
+        binding: "quickstart".into(),
+        requests: 40,
+        rate: 0.0,
+        queue_cap: 64,
+        policy: BatchPolicy {
+            max_batch: spec.train.batch_size,
+            max_wait: Duration::from_millis(2),
+        },
+    };
+    let report = serve(&engine.handle(), &spec, "quickstart", &cfg).unwrap();
+    assert_eq!(report.completed, 40);
+    assert_eq!(report.rejected, 0);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p50_ms <= report.p99_ms + 1e-9);
+    assert!(report.batches >= (40 / spec.train.batch_size) as u64);
+    engine.shutdown();
+}
+
+#[test]
+fn open_loop_backpressure_rejects_under_overload() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::load("artifacts").unwrap();
+    let spec = rt.manifest().bundle("quickstart").unwrap().clone();
+    let predict = rt.manifest().bundle_artifact("quickstart", "predict").unwrap().to_string();
+    drop(rt);
+
+    let engine = Engine::spawn("artifacts".into(), vec![predict]).unwrap();
+    let rt2 = Runtime::load("artifacts").unwrap();
+    let init = rt2.manifest().bundle_artifact("quickstart", "init").unwrap().to_string();
+    drop(rt2);
+    engine.handle().bind_init("quickstart", &init, 0, spec.param_count()).unwrap();
+    // Tiny queue + absurd arrival rate -> rejections must occur, yet the
+    // server must still complete what it admitted.
+    let cfg = ServeConfig {
+        bundle: "quickstart".into(),
+        binding: "quickstart".into(),
+        requests: 200,
+        rate: 100_000.0,
+        queue_cap: 4,
+        policy: BatchPolicy {
+            max_batch: spec.train.batch_size,
+            max_wait: Duration::from_millis(1),
+        },
+    };
+    let report = serve(&engine.handle(), &spec, "quickstart", &cfg).unwrap();
+    assert_eq!(report.completed + report.rejected, 200);
+    assert!(report.completed > 0);
+    engine.shutdown();
+}

@@ -1,0 +1,385 @@
+//! Property tests (seeded, via util::prop) on coordinator invariants:
+//! routing/packing, batching policy, metrics, and the online-softmax
+//! combine the MiTA kernel relies on.
+
+use std::time::{Duration, Instant};
+
+use mita::coordinator::batcher::{BatchPolicy, Batcher, Flush};
+use mita::coordinator::metrics::LatencyHistogram;
+use mita::mita::routing::{
+    adaptive_pool_matrix, capacity, pack_by_expert, route_argmax, scores, topk_indices,
+};
+use mita::util::prop::run_prop;
+
+// ---------------------------------------------------------------------------
+// Routing invariants (must mirror kernels/ref.py semantics).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_pool_matrix_is_partition_of_unity() {
+    run_prop(200, |g| {
+        let n = g.usize_in(1, 300);
+        let m = g.usize_in(1, n);
+        let p = adaptive_pool_matrix(n, m);
+        for i in 0..m {
+            let row: f32 = (0..n).map(|r| p[i * n + r]).sum();
+            assert!((row - 1.0).abs() < 1e-4, "row {i} sums {row}");
+        }
+        for r in 0..n {
+            let owners = (0..m).filter(|&i| p[i * n + r] != 0.0).count();
+            assert_eq!(owners, 1, "col {r} in {owners} windows (n={n}, m={m})");
+        }
+    });
+}
+
+#[test]
+fn prop_topk_indices_are_maximal_and_distinct() {
+    run_prop(120, |g| {
+        let n = g.usize_in(2, 64);
+        let m = g.usize_in(1, 8);
+        let kk = g.usize_in(1, n);
+        let s = g.vec_f32(n * m, -10.0, 10.0);
+        let idx = topk_indices(&s, n, m, kk);
+        assert_eq!(idx.len(), m * kk);
+        for e in 0..m {
+            let picks = &idx[e * kk..(e + 1) * kk];
+            // Distinct and in range.
+            let mut sorted = picks.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), kk);
+            assert!(picks.iter().all(|&p| p < n));
+            // Every non-picked score <= the minimum picked score.
+            let min_picked = picks
+                .iter()
+                .map(|&p| s[p * m + e])
+                .fold(f32::INFINITY, f32::min);
+            for r in 0..n {
+                if !picks.contains(&r) {
+                    assert!(
+                        s[r * m + e] <= min_picked + 1e-6,
+                        "expert {e}: unpicked {r} beats picked min"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_routing_is_argmax() {
+    run_prop(100, |g| {
+        let n = g.usize_in(1, 48);
+        let m = g.usize_in(1, 8);
+        let d = g.usize_in(1, 16);
+        let q = g.vec_f32(n * d, -2.0, 2.0);
+        let lands = g.vec_f32(m * d, -2.0, 2.0);
+        let e = route_argmax(&q, &lands, n, d, m);
+        assert_eq!(e.len(), n);
+        // Verify against brute force via scores (scores() computes K·Q̃ᵀ with
+        // 1/sqrt(d) scaling, which preserves argmax).
+        let s = scores(&q, &lands, n, d, m);
+        for r in 0..n {
+            let best = (0..m)
+                .max_by(|&a, &b| s[r * m + a].partial_cmp(&s[r * m + b]).unwrap())
+                .unwrap();
+            assert!(
+                (s[r * m + e[r]] - s[r * m + best]).abs() < 1e-5,
+                "row {r}: {} vs {}",
+                e[r],
+                best
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_pack_by_expert_invariants() {
+    run_prop(200, |g| {
+        let n = g.usize_in(1, 200);
+        let m = g.usize_in(1, 16);
+        let cap_factor = g.usize_in(1, 3);
+        let block_q = [8, 16, 64][g.usize_in(0, 2)];
+        let cap = capacity(n, m, cap_factor, block_q);
+        assert!(cap % block_q == 0 && cap >= 1);
+
+        let assign = g.vec_usize_below(n, m);
+        let r = pack_by_expert(&assign, m, cap);
+
+        // Counts are exact.
+        let mut counts = vec![0usize; m];
+        for &e in &assign {
+            counts[e] += 1;
+        }
+        assert_eq!(r.counts, counts);
+
+        // Overflow = sum over experts of max(0, count - cap).
+        let expect_overflow: usize = counts.iter().map(|&c| c.saturating_sub(cap)).sum();
+        assert_eq!(r.overflow, expect_overflow);
+
+        // Kept slots are unique and consistent with their expert's range.
+        let mut seen = std::collections::HashSet::new();
+        for (q, slot) in r.slot.iter().enumerate() {
+            if let Some(s) = slot {
+                assert!(seen.insert(*s), "duplicate slot {s}");
+                let e = assign[q];
+                assert!(*s >= e * cap && *s < (e + 1) * cap, "slot outside expert range");
+            }
+        }
+        assert_eq!(seen.len(), n - r.overflow);
+    });
+}
+
+#[test]
+fn prop_capacity_bounds_mean_load() {
+    run_prop(100, |g| {
+        let n = g.usize_in(1, 4096);
+        let m = g.usize_in(1, 64);
+        let cap = capacity(n, m, 2, 64);
+        // cap must hold at least 2x the mean per-expert load.
+        assert!(cap * m >= 2 * n || cap >= n, "n={n} m={m} cap={cap}");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Online-softmax combine (f64 reference, mirrors kernel math).
+// ---------------------------------------------------------------------------
+
+fn softmax_attention_1q(scores: &[f64], values: &[f64], d: usize) -> Vec<f64> {
+    let mx = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ps: Vec<f64> = scores.iter().map(|s| (s - mx).exp()).collect();
+    let den: f64 = ps.iter().sum();
+    let mut out = vec![0.0; d];
+    for (j, p) in ps.iter().enumerate() {
+        for c in 0..d {
+            out[c] += p * values[j * d + c];
+        }
+    }
+    out.iter().map(|x| x / den).collect()
+}
+
+fn partial(scores: &[f64], values: &[f64], d: usize) -> (Vec<f64>, f64, f64) {
+    let mx = scores.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ps: Vec<f64> = scores.iter().map(|s| (s - mx).exp()).collect();
+    let l: f64 = ps.iter().sum();
+    let mut o = vec![0.0; d];
+    for (j, p) in ps.iter().enumerate() {
+        for c in 0..d {
+            o[c] += p * values[j * d + c];
+        }
+    }
+    (o, mx, l)
+}
+
+#[test]
+fn prop_online_softmax_combine_is_exact() {
+    run_prop(200, |g| {
+        let k1 = g.usize_in(1, 24);
+        let k2 = g.usize_in(1, 24);
+        let d = g.usize_in(1, 8);
+        let scale = [1.0f32, 30.0][g.usize_in(0, 1)] as f64;
+        let s1: Vec<f64> = (0..k1).map(|_| g.f32_in(-3.0, 3.0) as f64 * scale).collect();
+        let s2: Vec<f64> = (0..k2).map(|_| g.f32_in(-3.0, 3.0) as f64 * scale).collect();
+        let v1: Vec<f64> = (0..k1 * d).map(|_| g.f32_in(-2.0, 2.0) as f64).collect();
+        let v2: Vec<f64> = (0..k2 * d).map(|_| g.f32_in(-2.0, 2.0) as f64).collect();
+
+        let (o1, m1, l1) = partial(&s1, &v1, d);
+        let (o2, m2, l2) = partial(&s2, &v2, d);
+        // Combine (Alg. 1 line 16).
+        let mx = m1.max(m2);
+        let a1 = (m1 - mx).exp();
+        let a2 = (m2 - mx).exp();
+        let den = l1 * a1 + l2 * a2;
+        let combined: Vec<f64> =
+            (0..d).map(|c| (o1[c] * a1 + o2[c] * a2) / den).collect();
+
+        let mut full_s = s1.clone();
+        full_s.extend_from_slice(&s2);
+        let mut full_v = v1.clone();
+        full_v.extend_from_slice(&v2);
+        let expect = softmax_attention_1q(&full_s, &full_v, d);
+        for c in 0..d {
+            assert!(
+                (combined[c] - expect[c]).abs() < 1e-9 * (1.0 + expect[c].abs()),
+                "dim {c}: {} vs {}",
+                combined[c],
+                expect[c]
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Batcher policy invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_exceeds_max_batch_and_stays_fifo() {
+    run_prop(150, |g| {
+        let max_batch = g.usize_in(1, 16);
+        let policy =
+            BatchPolicy { max_batch, max_wait: Duration::from_millis(g.usize_in(1, 20) as u64) };
+        let mut b: Batcher<usize> = Batcher::new(policy);
+        let now = Instant::now();
+        let n = g.usize_in(0, 64);
+        for i in 0..n {
+            b.push(i, now);
+        }
+        let mut emitted: Vec<usize> = Vec::new();
+        loop {
+            match b.poll(now + policy.max_wait + Duration::from_millis(1)) {
+                Flush::Take(k) => {
+                    assert!(k <= max_batch);
+                    assert!(k > 0);
+                    emitted.extend(b.take(k).into_iter().map(|p| p.payload));
+                }
+                Flush::Wait(_) => break,
+            }
+        }
+        // All items emitted exactly once, in order.
+        assert_eq!(emitted, (0..n).collect::<Vec<_>>());
+        assert_eq!(b.items_emitted as usize, n);
+        // Pad accounting: total slots = batches * max_batch.
+        assert_eq!(
+            b.items_emitted + b.padded_slots,
+            b.batches_emitted * max_batch as u64
+        );
+    });
+}
+
+#[test]
+fn prop_batcher_respects_deadline() {
+    run_prop(100, |g| {
+        let wait_ms = g.usize_in(1, 50) as u64;
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(wait_ms) };
+        let mut b: Batcher<u8> = Batcher::new(policy);
+        let t0 = Instant::now();
+        b.push(0, t0);
+        // Just before the deadline: must wait, with a hint <= remaining.
+        let before = t0 + Duration::from_millis(wait_ms.saturating_sub(1));
+        match b.poll(before) {
+            Flush::Wait(Some(hint)) => assert!(hint <= Duration::from_millis(wait_ms)),
+            Flush::Wait(None) => panic!("queue is non-empty: hint expected"),
+            Flush::Take(_) => {} // deadline arithmetic can round; taking early is allowed only at the boundary
+        }
+        // At/after the deadline: must flush.
+        match b.poll(t0 + Duration::from_millis(wait_ms + 1)) {
+            Flush::Take(1) => {}
+            other => panic!("expected flush after deadline, got {other:?}"),
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Metrics invariants.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_histogram_percentiles_monotone_and_bounded() {
+    run_prop(100, |g| {
+        let mut h = LatencyHistogram::new();
+        let n = g.usize_in(1, 500);
+        let mut max_us = 0u64;
+        for _ in 0..n {
+            let us = g.usize_in(1, 10_000_000) as u64;
+            max_us = max_us.max(us);
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), n as u64);
+        let mut prev = 0.0;
+        for p in [1.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+            let v = h.percentile(p);
+            assert!(v >= prev, "p{p} {v} < {prev}");
+            prev = v;
+        }
+        // p100 within a bucket width of the true max.
+        let p100 = h.percentile(100.0);
+        assert!(p100 <= (max_us as f64 * 1e-6) * 1.13 + 2e-6, "{p100} vs {max_us}us");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON parser fuzz (structure-preserving roundtrips).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_parses_generated_documents() {
+    use mita::util::json::Value;
+    run_prop(150, |g| {
+        // Build a random JSON document bottom-up (depth <= 3).
+        fn gen(g: &mut mita::util::prop::Gen, depth: usize) -> String {
+            match if depth == 0 { g.usize_in(0, 2) } else { g.usize_in(0, 4) } {
+                0 => format!("{}", g.f32_in(-1e4, 1e4)),
+                1 => format!("\"s{}\"", g.usize_in(0, 999)),
+                2 => ["true", "false", "null"][g.usize_in(0, 2)].to_string(),
+                3 => {
+                    let n = g.usize_in(0, 4);
+                    let items: Vec<String> = (0..n).map(|_| gen(g, depth - 1)).collect();
+                    format!("[{}]", items.join(","))
+                }
+                _ => {
+                    let n = g.usize_in(0, 4);
+                    let items: Vec<String> =
+                        (0..n).map(|i| format!("\"k{i}\":{}", gen(g, depth - 1))).collect();
+                    format!("{{{}}}", items.join(","))
+                }
+            }
+        }
+        let doc = gen(g, 3);
+        let parsed = Value::parse(&doc).unwrap_or_else(|e| panic!("doc {doc}: {e}"));
+        // Objects keep all their keys.
+        if let Value::Obj(map) = &parsed {
+            for k in map.keys() {
+                assert!(doc.contains(&format!("\"{k}\"")));
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Capacity ablation (DESIGN.md §6): overflow rate under realistic routing.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overflow_rate_small_under_gaussianish_routing() {
+    // Routing distributions from random continuous features are uneven but
+    // not adversarial; cap_factor=2 must keep the shared-expert fallback
+    // rate low (the kernel-vs-ref accuracy argument relies on this).
+    use mita::data::rng::Rng;
+    let mut total_q = 0usize;
+    let mut total_overflow = 0usize;
+    for trial in 0..20 {
+        let (n, d, m) = (256, 16, 16);
+        let mut rng = Rng::derive(0xAB1A7E, &[trial]);
+        let mut normal = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| rng.normal() as f32).collect()
+        };
+        let q = normal(n * d);
+        let lands = mita::mita::routing::landmarks_pool1d(&q, n, d, m);
+        let assign = mita::mita::routing::route_argmax(&q, &lands, n, d, m);
+        let cap = mita::mita::routing::capacity(n, m, 2, 16);
+        let pack = mita::mita::routing::pack_by_expert(&assign, m, cap);
+        total_q += n;
+        total_overflow += pack.overflow;
+    }
+    let rate = total_overflow as f64 / total_q as f64;
+    assert!(rate < 0.05, "overflow rate {rate:.3} exceeds 5% at cap_factor=2");
+}
+
+#[test]
+fn overflow_vanishes_as_cap_factor_grows() {
+    use mita::data::rng::Rng;
+    let (n, d, m) = (256, 8, 8);
+    let mut rng = Rng::new(99);
+    let q: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let lands = mita::mita::routing::landmarks_pool1d(&q, n, d, m);
+    let assign = mita::mita::routing::route_argmax(&q, &lands, n, d, m);
+    let mut prev = usize::MAX;
+    for cf in [1usize, 2, 4, 8] {
+        let cap = mita::mita::routing::capacity(n, m, cf, 16);
+        let o = mita::mita::routing::pack_by_expert(&assign, m, cap).overflow;
+        assert!(o <= prev, "overflow not monotone in cap_factor");
+        prev = o;
+    }
+    assert_eq!(prev, 0, "cap_factor=8 must eliminate overflow");
+}

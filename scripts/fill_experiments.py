@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Transcribe `mita all` output into EXPERIMENTS.md placeholders.
+
+Usage: python scripts/fill_experiments.py /tmp/mita_results.log
+Idempotent: placeholders are HTML comments that survive filling (each block
+is written between its marker and the next section).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+MARKERS = {
+    "T2": "## Table 2",
+    "T3": "## Table 3",
+    "T4": "## Table 4",
+    "T5": "## Table 5",
+    "T6": "## Table 6",
+    "T7": "## Table 7",
+    "F5": "## Figure 5",
+    "F34": "## Figures 3/4",
+    "F8": "## Figure 8",
+    "F9": "## Figure 9",
+    "F10": "## Figure 10",
+    "CPLX": "## Complexity",
+}
+
+
+def extract_blocks(log: str):
+    """Split the run log into sections keyed by their '## ...' headers."""
+    blocks = {}
+    current_key, current = None, []
+    for line in log.splitlines():
+        matched = None
+        for key, header in MARKERS.items():
+            if line.startswith(header):
+                matched = key
+                break
+        if matched:
+            if current_key:
+                blocks[current_key] = "\n".join(current).strip()
+            current_key, current = matched, []
+        elif current_key is not None:
+            # Drop harness chatter / PJRT log noise inside a section.
+            if (
+                line.startswith("[")
+                or line.startswith("SCHEDULE_DONE")
+                or line.startswith("EXIT")
+                or "TfrtCpuClient" in line
+            ):
+                continue
+            current.append(line)
+    if current_key:
+        blocks[current_key] = "\n".join(current).strip()
+    return blocks
+
+
+def main():
+    log_path = sys.argv[1] if len(sys.argv) > 1 else "/tmp/mita_results.log"
+    log = Path(log_path).read_text()
+    blocks = extract_blocks(log)
+
+    exp_path = Path(__file__).resolve().parent.parent / "EXPERIMENTS.md"
+    text = exp_path.read_text()
+    filled = 0
+    for key, content in blocks.items():
+        marker = f"<!-- {key} -->"
+        if marker in text and content:
+            text = text.replace(marker, f"{marker}\n\n```\n{content}\n```", 1)
+            filled += 1
+    exp_path.write_text(text)
+    print(f"filled {filled} sections from {log_path}: {sorted(blocks)}")
+
+
+if __name__ == "__main__":
+    main()
