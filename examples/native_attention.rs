@@ -1,0 +1,82 @@
+//! Native-backend quickstart: the smallest end-to-end use of the pure-Rust
+//! MiTA attention path. Unlike the other examples this needs **no**
+//! `make artifacts`, no Python, and no PJRT closure — it runs anywhere.
+//!
+//! 1. Calls the kernels directly: dense vs MiTA forward on one sequence,
+//!    with a degenerate-parity check (m = k = n ⇒ identical outputs).
+//! 2. Spawns the coordinator engine over `BackendSpec::Native` and drives
+//!    the dynamic-batching serving loop against it.
+//!
+//! Run: `cargo run --release --example native_attention [-- n dim heads]`
+
+use std::time::Instant;
+
+use anyhow::Result;
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::server::{serve_native, NativeServeConfig};
+use mita::coordinator::Engine;
+use mita::data::rng::Rng;
+use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
+use mita::runtime::{BackendSpec, NativeAttnConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n = args.first().map(|s| s.parse::<usize>()).transpose()?.unwrap_or(512);
+    let dim = args.get(1).map(|s| s.parse::<usize>()).transpose()?.unwrap_or(64);
+    let heads = args.get(2).map(|s| s.parse::<usize>()).transpose()?.unwrap_or(4);
+
+    let mut rng = Rng::new(7);
+    let mut gen = |len: usize| (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect::<Vec<f32>>();
+    let (q, k, v) = (gen(n * dim), gen(n * dim), gen(n * dim));
+
+    // 1) Direct kernel calls: parity on the degenerate config, then timing
+    //    of the real MiTA configuration against the dense baseline.
+    let pn = n.min(96);
+    let sub = pn * dim;
+    let pcfg = MitaKernelConfig { m: pn, k: pn, cap_factor: 2, block_q: 8 };
+    let mut a = vec![0.0f32; sub];
+    let mut b = vec![0.0f32; sub];
+    mita_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &pcfg, &mut a);
+    dense_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &mut b);
+    let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+    println!("degenerate parity (n={pn}): max|mita - dense| = {max_diff:.2e}");
+
+    let cfg = MitaKernelConfig::for_seq(n);
+    let mut out = vec![0.0f32; n * dim];
+    let t0 = Instant::now();
+    let overflow = mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut out);
+    let mita_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    dense_attention_mh(&q, &k, &v, n, heads, dim, &mut out);
+    let dense_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "n={n} dim={dim} heads={heads} (m={}, k={}): mita={mita_ms:.2}ms dense={dense_ms:.2}ms \
+         (x{:.2}), overflow {overflow}/{}",
+        cfg.m,
+        cfg.k,
+        dense_ms / mita_ms,
+        n * heads
+    );
+
+    // 2) The same kernels behind the engine + dynamic batcher.
+    let attn = NativeAttnConfig { n, dim, heads, mita: cfg };
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
+    for op in ["attn.mita", "attn.dense"] {
+        let scfg = NativeServeConfig {
+            n,
+            dim,
+            op: op.to_string(),
+            requests: 32,
+            rate: 0.0,
+            queue_cap: 64,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        };
+        let report = serve_native(&engine.handle(), &scfg)?;
+        println!("{}", report.row());
+    }
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,43 @@
+"""Pytest configuration for the L1/L2 compile-time suites.
+
+Two jobs:
+
+1. Make ``compile`` importable when pytest is invoked from the repo root
+   (``python -m pytest python/tests -q``) — the package lives next to this
+   file, not on the default path.
+
+2. Skip-if-no-JAX: the kernel/model/AOT suites import ``jax`` (and
+   ``hypothesis`` for the property sweeps) at module scope, so on a plain
+   runner they must be excluded at *collection* time, not at test time.
+   ``test_environment.py`` stays collectable everywhere so the run reports
+   an explicit skip instead of "no tests collected" (pytest exit code 5).
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+
+def _installed(module: str) -> bool:
+    try:
+        return importlib.util.find_spec(module) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+HAVE_JAX = _installed("jax")
+HAVE_HYPOTHESIS = _installed("hypothesis")
+
+collect_ignore = []
+if not HAVE_JAX:
+    collect_ignore += [
+        "tests/test_aot.py",
+        "tests/test_kernels.py",
+        "tests/test_model.py",
+        "tests/test_perf.py",
+    ]
+elif not HAVE_HYPOTHESIS:
+    # Only the property sweeps need hypothesis.
+    collect_ignore += ["tests/test_kernels.py"]

@@ -1,0 +1,25 @@
+"""Environment probe — collectable on any runner, JAX or not.
+
+Keeps `pytest python/tests` from exiting with "no tests collected" (code 5)
+on machines without JAX, and makes the skip reason visible in CI logs.
+"""
+
+import importlib.util
+
+import pytest
+
+
+def _installed(module: str) -> bool:
+    try:
+        return importlib.util.find_spec(module) is not None
+    except (ImportError, ValueError):
+        return False
+
+
+def test_compile_suites_runnable_or_skipped():
+    if not _installed("jax"):
+        pytest.skip("JAX not installed: L1/L2 compile suites ignored at collection")
+    if not _installed("hypothesis"):
+        pytest.skip("hypothesis not installed: kernel property sweeps ignored")
+    # Both present: the real suites were collected alongside this probe.
+    assert _installed("jax") and _installed("hypothesis")

@@ -1,19 +1,103 @@
-//! Bench: Fig. 5 — forward latency of the 3-layer d=128 model, standard vs
-//! MiTA attention, across sequence lengths. Prints the per-N speedup series
-//! the paper plots. Requires `make artifacts`.
+//! Bench: attention forward latency, two parts.
+//!
+//! **Native sweep** (always runs, no artifacts needed): the pure-Rust MiTA
+//! kernels vs the naive dense baseline across sequence lengths at a fixed
+//! model shape (dim=64, heads=4). Writes `BENCH_attn_native.json` so CI
+//! can archive the perf trajectory.
+//!
+//! **PJRT sweep** (requires `make artifacts`): the original Fig. 5
+//! predict-latency measurement over the compiled bundles.
+//!
+//! Quick mode for CI smoke runs: pass `--quick` after `--`, or set
+//! `MITA_BENCH_QUICK=1`.
 
+use std::fmt::Write as _;
+
+use mita::data::rng::Rng;
 use mita::data::{BatchSource, Split};
 use mita::flops;
+use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
 use mita::runtime::{Runtime, Tensor};
 use mita::util::bench::bench_for;
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MITA_BENCH_QUICK").is_ok_and(|v| v == "1");
+
+    native_sweep(quick);
+
     if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP: run `make artifacts` first");
+        println!("\nSKIP PJRT sweep: run `make artifacts` first");
         return;
     }
+    pjrt_sweep();
+}
+
+/// Native CPU kernels: MiTA vs naive dense, per sequence length.
+fn native_sweep(quick: bool) {
+    let (dim, heads) = (64usize, 4usize);
+    let ns: &[usize] = if quick { &[256, 1024] } else { &[256, 512, 1024, 2048, 4096] };
+    let budget = if quick { 0.25 } else { 1.5 };
+    println!("# attn_microbench — native kernels (dim={dim}, heads={heads}, quick={quick})");
+
+    let mut rows: Vec<(usize, MitaKernelConfig, f64, f64)> = Vec::new();
+    for &n in ns {
+        let mut rng = Rng::derive(0xBE7C, &[n as u64]);
+        let mut gen =
+            |len: usize| (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect::<Vec<f32>>();
+        let (q, k, v) = (gen(n * dim), gen(n * dim), gen(n * dim));
+        let cfg = MitaKernelConfig::for_seq(n);
+        let mut out = vec![0.0f32; n * dim];
+
+        let rd = bench_for(&format!("dense n={n}"), 1, budget, || {
+            dense_attention_mh(&q, &k, &v, n, heads, dim, &mut out);
+        });
+        println!("{}", rd.row());
+        let rm = bench_for(&format!("mita n={n} (m={}, k={})", cfg.m, cfg.k), 1, budget, || {
+            mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut out);
+        });
+        println!("{}", rm.row());
+        rows.push((n, cfg, rd.mean_secs, rm.mean_secs));
+    }
+
+    println!("\nN, dense_ms, mita_ms, speedup");
+    for (n, _, d, m) in &rows {
+        println!("{n}, {:.3}, {:.3}, x{:.2}", d * 1e3, m * 1e3, d / m);
+    }
+
+    // JSON artifact for the CI perf trajectory.
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"attn_native\",");
+    let _ = writeln!(json, "  \"dim\": {dim},");
+    let _ = writeln!(json, "  \"heads\": {heads},");
+    let _ = writeln!(json, "  \"quick\": {quick},");
+    let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"rows\": [");
+    for (i, (n, cfg, d, m)) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"n\": {n}, \"m\": {}, \"k\": {}, \"dense_ms\": {:.4}, \"mita_ms\": {:.4}, \
+             \"speedup\": {:.3}}}{comma}",
+            cfg.m,
+            cfg.k,
+            d * 1e3,
+            m * 1e3,
+            d / m
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    std::fs::write("BENCH_attn_native.json", json).expect("write BENCH_attn_native.json");
+    println!("\nwrote BENCH_attn_native.json");
+}
+
+/// Fig. 5 — forward latency of the 3-layer d=128 model, standard vs MiTA
+/// attention, through the compiled PJRT artifacts.
+fn pjrt_sweep() {
     let rt = Runtime::load("artifacts").expect("runtime");
-    println!("# attn_microbench (Fig. 5): predict latency, batch as compiled");
+    println!("\n# attn_microbench (Fig. 5): predict latency, batch as compiled");
 
     let mut rows: Vec<(usize, f64, f64)> = Vec::new();
     for name in rt.manifest().bundles_with_prefix("f5_standard_n") {

@@ -1,26 +1,28 @@
-//! Engine thread: single-threaded owner of the PJRT [`Runtime`].
+//! Engine thread: single-threaded owner of an execution [`Backend`].
 //!
-//! PJRT handles are not `Send`, so the runtime lives on one dedicated OS
-//! thread; the frontend talks to it over an mpsc channel (std threads —
-//! the vendored crate set has no tokio). This is the same frontend/engine
-//! split as vLLM's router → engine core.
+//! PJRT handles are not `Send`, so the backend is *constructed inside* one
+//! dedicated OS thread from a [`BackendSpec`]; the frontend talks to it
+//! over an mpsc channel (std threads — the vendored crate set has no
+//! tokio). This is the same frontend/engine split as vLLM's router →
+//! engine core, now backend-agnostic: the same loop drives PJRT artifacts
+//! (`Engine::spawn`) or the native CPU attention kernels
+//! (`Engine::spawn_backend` with [`BackendSpec::Native`]).
 //!
-//! Model parameters are *bound* once inside the engine (from an init
-//! artifact or a checkpoint) and referenced by key on each request, so the
-//! hot path converts only the batch tensor — never the weights.
+//! Parameter bindings live inside the backend (bound once, referenced by
+//! key on each request), so the hot path converts only the batch tensor —
+//! never the weights.
 
-use std::collections::HashMap;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{BackendSpec, Tensor};
 
 /// Requests served by the engine thread.
 pub enum EngineRequest {
-    /// Execute `artifact` on `inputs`, optionally prefixed by a parameter
-    /// binding created earlier.
+    /// Execute `artifact` (op name) on `inputs`, optionally prefixed by a
+    /// parameter binding created earlier.
     Run {
         artifact: String,
         binding: Option<String>,
@@ -55,7 +57,7 @@ impl EngineHandle {
         rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
     }
 
-    /// Execute an artifact and block for the result.
+    /// Execute an op and block for the result.
     pub fn run(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
         let (reply, rx) = mpsc::channel();
         self.submit(
@@ -64,7 +66,7 @@ impl EngineHandle {
         )
     }
 
-    /// Execute an artifact with a parameter binding prefix.
+    /// Execute an op with a parameter binding prefix.
     pub fn run_bound(
         &self,
         artifact: &str,
@@ -118,77 +120,56 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spawn the engine thread. `warmup` artifacts are compiled before any
-    /// job is served (keeps compiles off the latency path).
+    /// Spawn an engine over the PJRT artifact backend (back-compat entry
+    /// point; equivalent to `spawn_backend(BackendSpec::Pjrt { .. }, ..)`).
     pub fn spawn(artifacts_dir: std::path::PathBuf, warmup: Vec<String>) -> Result<Self> {
+        Self::spawn_backend(BackendSpec::Pjrt { artifacts_dir }, warmup)
+    }
+
+    /// Spawn the engine thread over any backend. `warmup` ops are prepared
+    /// before any job is served (keeps compiles off the latency path).
+    pub fn spawn_backend(spec: BackendSpec, warmup: Vec<String>) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<EngineRequest>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let join = std::thread::Builder::new()
             .name("mita-engine".into())
             .spawn(move || {
-                let runtime = match Runtime::load(&artifacts_dir) {
-                    Ok(rt) => rt,
+                let mut backend = match spec.create() {
+                    Ok(b) => b,
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                for art in &warmup {
-                    if let Err(e) = runtime.warmup(art) {
+                for op in &warmup {
+                    if let Err(e) = backend.warmup(op) {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 }
                 let _ = ready_tx.send(Ok(()));
 
-                let mut bindings: HashMap<String, Vec<xla::Literal>> = HashMap::new();
                 while let Ok(req) = rx.recv() {
                     match req {
                         EngineRequest::Shutdown => break,
                         EngineRequest::Run { artifact, binding, inputs, reply } => {
-                            let result = (|| -> Result<Vec<Tensor>> {
-                                let outs = match binding {
-                                    None => {
-                                        return runtime.run(&artifact, &inputs);
-                                    }
-                                    Some(key) => {
-                                        let params = bindings
-                                            .get(&key)
-                                            .with_context(|| format!("no binding {key:?}"))?;
-                                        runtime.run_hybrid(&artifact, params, &inputs)?
-                                    }
-                                };
-                                outs.iter().map(Tensor::from_literal).collect()
-                            })();
+                            let result = backend.run(&artifact, binding.as_deref(), &inputs);
                             let _ = reply.send(result);
                         }
-                        EngineRequest::BindInit { key, init_artifact, seed, param_count, reply } => {
-                            let result = (|| -> Result<()> {
-                                let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
-                                let mut state =
-                                    runtime.run_literals(&init_artifact, &[seed_lit])?;
-                                anyhow::ensure!(
-                                    state.len() >= param_count,
-                                    "init returned {} < {param_count} outputs",
-                                    state.len()
-                                );
-                                state.truncate(param_count);
-                                bindings.insert(key, state);
-                                Ok(())
-                            })();
+                        EngineRequest::BindInit {
+                            key,
+                            init_artifact,
+                            seed,
+                            param_count,
+                            reply,
+                        } => {
+                            let result =
+                                backend.bind_init(&key, &init_artifact, seed, param_count);
                             let _ = reply.send(result);
                         }
                         EngineRequest::BindTensors { key, params, reply } => {
-                            let result = (|| -> Result<()> {
-                                let lits: Vec<xla::Literal> = params
-                                    .iter()
-                                    .map(Tensor::to_literal)
-                                    .collect::<Result<_>>()?;
-                                bindings.insert(key, lits);
-                                Ok(())
-                            })();
-                            let _ = reply.send(result);
+                            let _ = reply.send(backend.bind_tensors(&key, params));
                         }
                     }
                 }

@@ -1,9 +1,12 @@
 //! L3 coordinator: everything that runs on the request path.
 //!
-//! - [`engine`]: dedicated thread owning the PJRT runtime (frontend/engine
-//!   split as in vLLM's router architecture).
+//! - [`engine`]: dedicated thread owning an execution backend — PJRT
+//!   artifacts or the native CPU kernels — behind one frontend/engine
+//!   split as in vLLM's router architecture.
 //! - [`batcher`]: pure dynamic-batching policy (max-batch / max-wait).
-//! - [`server`]: async serving loop + load generator + latency accounting.
+//! - [`server`]: async serving loop + load generator + latency accounting,
+//!   with a bundle-driven front ([`serve`]) and an artifact-free native
+//!   front ([`serve_native`]).
 //! - [`trainer`]: AOT train-step driver with loss-curve tracking.
 //! - [`checkpoint`]: flat-parameter save/load.
 //! - [`metrics`]: histograms, streaming stats, mIoU.
@@ -17,5 +20,5 @@ pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
 pub use engine::{Engine, EngineHandle};
-pub use server::{serve, ServeConfig, ServeReport};
+pub use server::{serve, serve_native, NativeServeConfig, ServeConfig, ServeReport};
 pub use trainer::{eval_checkpoint, EvalResult, Trainer};

@@ -2,8 +2,17 @@
 //! dynamic batcher → engine thread → per-request latency accounting.
 //!
 //! This is the L3 system that measures the paper's Fig. 5 inference
-//! throughput: requests are single examples; the compiled `predict`
-//! artifact has a fixed batch size B, so the batcher packs/pads to B.
+//! throughput. The loop itself is backend-agnostic — it only sees an
+//! engine op plus a pool of single-request tensors — and has two fronts:
+//!
+//! - [`serve`]: bundle-driven PJRT path. Requests are single examples; the
+//!   compiled `predict` artifact has a fixed batch size B, so the batcher
+//!   packs/pads to B.
+//! - [`serve_native`]: artifact-free native path. Requests are fused
+//!   `[1, 3, n, dim]` QKV bundles executed by the engine's
+//!   [`NativeBackend`](crate::runtime::NativeBackend) (`attn.mita` /
+//!   `attn.dense`), so the whole pipeline runs on a plain machine.
+//!
 //! Std threads + channels (no async runtime in the vendored crate set);
 //! the generator runs on its own thread, the batching loop on the caller's.
 
@@ -17,10 +26,11 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Flush};
 use crate::coordinator::engine::EngineHandle;
 use crate::coordinator::metrics::LatencyHistogram;
+use crate::data::rng::Rng;
 use crate::data::{BatchSource, Split};
 use crate::runtime::{BundleSpec, Tensor};
 
-/// Serving workload description.
+/// Serving workload description (PJRT bundle path).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Bundle whose `predict` artifact serves requests.
@@ -34,6 +44,23 @@ pub struct ServeConfig {
     /// as the pipeline drains).
     pub rate: f64,
     /// Admission queue capacity (backpressure bound; overflow = rejected).
+    pub queue_cap: usize,
+    pub policy: BatchPolicy,
+}
+
+/// Serving workload description (native attention path; no artifacts).
+#[derive(Debug, Clone)]
+pub struct NativeServeConfig {
+    /// Sequence length of each request's QKV bundle.
+    pub n: usize,
+    /// Model dimension of each request (heads and kernel parameters live
+    /// in the engine backend's `NativeAttnConfig`, the single source of
+    /// truth for how the op executes).
+    pub dim: usize,
+    /// Native op to execute: `attn.mita` or `attn.dense`.
+    pub op: String,
+    pub requests: usize,
+    pub rate: f64,
     pub queue_cap: usize,
     pub policy: BatchPolicy,
 }
@@ -122,30 +149,25 @@ pub(crate) fn pack_batch(examples: &[Tensor], b: usize) -> Result<Tensor> {
     }
 }
 
-/// Run the serving benchmark: generator thread → queue → batcher → engine.
-pub fn serve(
-    engine: &EngineHandle,
-    bundle: &BundleSpec,
-    bundle_name: &str,
-    cfg: &ServeConfig,
-) -> Result<ServeReport> {
-    let predict = bundle
-        .artifacts
-        .get("predict")
-        .with_context(|| format!("bundle {bundle_name} has no predict artifact"))?
-        .clone();
-    let source = BatchSource::for_bundle(bundle)?;
-    let b = bundle.train.batch_size;
+/// Backend-agnostic parameters of one serving run.
+struct LoopSpec<'a> {
+    /// Report label.
+    label: &'a str,
+    /// Engine op (artifact name or native op).
+    op: &'a str,
+    /// Parameter-binding key, if the op needs bound weights.
+    binding: Option<&'a str>,
+    requests: usize,
+    rate: f64,
+    queue_cap: usize,
+    policy: BatchPolicy,
+}
 
-    // Pre-generate the client input pool from the val split.
-    let pool_batches = 4usize;
-    let mut pool: Vec<Tensor> = Vec::with_capacity(pool_batches * b);
-    for i in 0..pool_batches {
-        let (x, _) = source.batch(Split::Val, i as u64)?;
-        for j in 0..b {
-            pool.push(slice_example(&x, j)?);
-        }
-    }
+/// The serving pipeline shared by both fronts: generator thread → bounded
+/// queue → batcher → engine → latency accounting.
+fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Result<ServeReport> {
+    anyhow::ensure!(!pool.is_empty(), "request pool is empty");
+    let b = spec.policy.max_batch;
 
     // Bounded admission queue: a channel plus an explicit depth counter
     // (std channels have no try_send-with-capacity; the counter enforces
@@ -156,9 +178,9 @@ pub fn serve(
 
     let gen_depth = depth.clone();
     let gen_rejected = rejected.clone();
-    let gen_requests = cfg.requests;
-    let rate = cfg.rate;
-    let queue_cap = cfg.queue_cap;
+    let gen_requests = spec.requests;
+    let rate = spec.rate;
+    let queue_cap = spec.queue_cap;
     let generator = std::thread::spawn(move || {
         let t0 = Instant::now();
         for i in 0..gen_requests {
@@ -182,7 +204,7 @@ pub fn serve(
     });
 
     // ---- batching + dispatch loop (caller thread) -------------------------
-    let mut batcher: Batcher<Request> = Batcher::new(cfg.policy);
+    let mut batcher: Batcher<Request> = Batcher::new(spec.policy);
     let mut hist = LatencyHistogram::new();
     let mut completed = 0usize;
     let t0 = Instant::now();
@@ -198,9 +220,13 @@ pub fn serve(
                     .map(|p| pool[p.payload.example as usize % pool.len()].clone())
                     .collect();
                 let batch = pack_batch(&examples, b)?;
-                let outs = engine.run_bound(&predict, &cfg.binding, vec![batch])?;
+                let outs = match spec.binding {
+                    Some(key) => engine.run_bound(spec.op, key, vec![batch])?,
+                    None => engine.run(spec.op, vec![batch])?,
+                };
+                anyhow::ensure!(!outs.is_empty(), "op {} returned no outputs", spec.op);
                 let finish = Instant::now();
-                let _preds = outs[0].argmax_last()?; // per-request responses
+                let _responses = outs[0].argmax_last()?; // per-request responses
                 for p in taken {
                     hist.record(finish.duration_since(p.payload.issued));
                     completed += 1;
@@ -224,7 +250,7 @@ pub fn serve(
     generator.join().map_err(|_| anyhow::anyhow!("generator thread panicked"))?;
     let elapsed = t0.elapsed().as_secs_f64();
     Ok(ServeReport {
-        bundle: bundle_name.to_string(),
+        bundle: spec.label.to_string(),
         completed,
         rejected: rejected.load(Ordering::Relaxed),
         elapsed_secs: elapsed,
@@ -236,6 +262,78 @@ pub fn serve(
         batches: batcher.batches_emitted,
         pad_fraction: batcher.pad_fraction(),
     })
+}
+
+/// Run the serving benchmark against a bundle's `predict` artifact.
+pub fn serve(
+    engine: &EngineHandle,
+    bundle: &BundleSpec,
+    bundle_name: &str,
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    let predict = bundle
+        .artifacts
+        .get("predict")
+        .with_context(|| format!("bundle {bundle_name} has no predict artifact"))?
+        .clone();
+    let source = BatchSource::for_bundle(bundle)?;
+    let b = bundle.train.batch_size;
+    anyhow::ensure!(
+        cfg.policy.max_batch == b,
+        "batch policy ({}) must match the compiled batch size ({b})",
+        cfg.policy.max_batch
+    );
+
+    // Pre-generate the client input pool from the val split.
+    let pool_batches = 4usize;
+    let mut pool: Vec<Tensor> = Vec::with_capacity(pool_batches * b);
+    for i in 0..pool_batches {
+        let (x, _) = source.batch(Split::Val, i as u64)?;
+        for j in 0..b {
+            pool.push(slice_example(&x, j)?);
+        }
+    }
+
+    let spec = LoopSpec {
+        label: bundle_name,
+        op: &predict,
+        binding: Some(&cfg.binding),
+        requests: cfg.requests,
+        rate: cfg.rate,
+        queue_cap: cfg.queue_cap,
+        policy: cfg.policy,
+    };
+    serve_loop(engine, &spec, &pool)
+}
+
+/// Run the serving benchmark against the engine's native attention backend
+/// (spawn the engine with [`BackendSpec::Native`]; no artifacts needed).
+///
+/// [`BackendSpec::Native`]: crate::runtime::BackendSpec::Native
+pub fn serve_native(engine: &EngineHandle, cfg: &NativeServeConfig) -> Result<ServeReport> {
+    let (n, dim) = (cfg.n, cfg.dim);
+    anyhow::ensure!(n > 0 && dim > 0, "native serving needs n > 0 and dim > 0");
+
+    // Pre-generate a pool of fused QKV request bundles.
+    let pool_size = 8usize;
+    let mut pool: Vec<Tensor> = Vec::with_capacity(pool_size);
+    for i in 0..pool_size {
+        let mut rng = Rng::derive(0x5E27E, &[i as u64]);
+        let data: Vec<f32> = (0..3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        pool.push(Tensor::f32(&[1, 3, n, dim], data)?);
+    }
+
+    let label = format!("native/{} n={n}", cfg.op);
+    let spec = LoopSpec {
+        label: &label,
+        op: &cfg.op,
+        binding: None,
+        requests: cfg.requests,
+        rate: cfg.rate,
+        queue_cap: cfg.queue_cap,
+        policy: cfg.policy,
+    };
+    serve_loop(engine, &spec, &pool)
 }
 
 #[cfg(test)]

@@ -25,7 +25,13 @@ impl Rng {
     /// Seed from a single u64 via splitmix64 (as recommended by the authors).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
-        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
     }
 
     /// Derive an independent stream from (seed, stream ids) — hash-combined.

@@ -74,7 +74,10 @@ pub fn figure5(artifacts_dir: &std::path::Path, rt: &Runtime, requests: usize) -
 }
 
 /// Run the analysis artifact on one image with a trained t2_mita model.
-fn run_analysis(rt: &Runtime, seed: i32) -> Result<(Vec<Tensor>, usize, usize, usize, usize, usize)> {
+fn run_analysis(
+    rt: &Runtime,
+    seed: i32,
+) -> Result<(Vec<Tensor>, usize, usize, usize, usize, usize)> {
     let params = train_or_load_checkpoint(rt, "t2_mita", seed)?;
     let bundle = rt.manifest().bundle("fig_analysis_mita")?.clone();
     anyhow::ensure!(

@@ -53,7 +53,8 @@ pub fn table2(rt: &Runtime, opts: &Opts) -> Result<String> {
             oc.eval.accuracy, oc.steps, oc.mean_step_secs
         );
     }
-    let rendered = format!("## Table 2 — synthetic-image classification from scratch\n{}", out.render());
+    let rendered =
+        format!("## Table 2 — synthetic-image classification from scratch\n{}", out.render());
     println!("{rendered}");
     Ok(rendered)
 }
@@ -91,7 +92,8 @@ pub fn table3(rt: &Runtime, opts: &Opts) -> Result<String> {
             pct(ev.accuracy),
         ]);
     }
-    let rendered = format!("## Table 3 — model-level comparison (substituted scope)\n{}", out.render());
+    let rendered =
+        format!("## Table 3 — model-level comparison (substituted scope)\n{}", out.render());
     println!("{rendered}");
     Ok(rendered)
 }
@@ -119,7 +121,8 @@ pub fn table4(rt: &Runtime, opts: &Opts) -> Result<String> {
         crate::coordinator::checkpoint::load(&crate::harness::checkpoint_path("t4_std"))?;
     let std_params: Vec<xla::Literal> =
         std_params_host.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
-    let swap_ev = eval_params(rt, swap_art, &std_params, &source, 16, true, swap_spec.model.num_classes)?;
+    let swap_ev =
+        eval_params(rt, swap_art, &std_params, &source, 16, true, swap_spec.model.num_classes)?;
     let mita_flops = flops::model_flops(&swap_spec.model);
     out.row(&[
         "MiTA-ViT ▽ (swapped)".into(),
@@ -137,7 +140,8 @@ pub fn table4(rt: &Runtime, opts: &Opts) -> Result<String> {
         pct(mita_oc.eval.accuracy),
     ]);
 
-    let rendered = format!("## Table 4 — synthetic dense prediction (ADE20K stand-in)\n{}", out.render());
+    let rendered =
+        format!("## Table 4 — synthetic dense prediction (ADE20K stand-in)\n{}", out.render());
     println!("{rendered}");
     Ok(rendered)
 }

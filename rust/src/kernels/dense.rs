@@ -1,0 +1,158 @@
+//! Dense scaled-dot-product softmax attention — the O(N²·d) baseline the
+//! native MiTA path is checked against and benchmarked over. Blocked over
+//! query rows with the row block parallelized across threads.
+
+use crate::kernels::linalg::{
+    gather_head, matmul_nt, scale_in_place, scatter_head, softmax_rows, weighted_row_sum,
+};
+use crate::kernels::par::par_chunks_mut;
+
+/// Query rows per task; the per-task score scratch is `QB × n` floats.
+const QB: usize = 32;
+
+/// Single-head dense attention: `out = softmax(Q Kᵀ / √d) V` for row-major
+/// `[n, d]` inputs.
+pub fn dense_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(q.len(), n * d, "q must be [n, d]");
+    assert_eq!(k.len(), n * d, "k must be [n, d]");
+    assert_eq!(v.len(), n * d, "v must be [n, d]");
+    assert_eq!(out.len(), n * d, "out must be [n, d]");
+    if n == 0 || d == 0 {
+        return;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    par_chunks_mut(out, QB * d, |blk, out_blk| {
+        let r0 = blk * QB;
+        let rows = out_blk.len() / d;
+        let mut s = vec![0.0f32; rows * n];
+        matmul_nt(&q[r0 * d..(r0 + rows) * d], k, rows, n, d, &mut s);
+        scale_in_place(&mut s, scale);
+        softmax_rows(&mut s, rows, n);
+        for (r, orow) in out_blk.chunks_exact_mut(d).enumerate() {
+            weighted_row_sum(&s[r * n..(r + 1) * n], v, d, orow);
+        }
+    });
+}
+
+/// Multi-head dense attention over model-dim layout: `[n, dim]` inputs
+/// where head `h` owns columns `[h·dh, (h+1)·dh)`, `dim = heads · dh`.
+pub fn dense_attention_mh(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    heads: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    assert!(heads >= 1 && dim % heads == 0, "dim {dim} must divide into {heads} heads");
+    if n == 0 || dim == 0 {
+        return;
+    }
+    let dh = dim / heads;
+    let mut qh = vec![0.0f32; n * dh];
+    let mut kh = vec![0.0f32; n * dh];
+    let mut vh = vec![0.0f32; n * dh];
+    let mut oh = vec![0.0f32; n * dh];
+    for h in 0..heads {
+        gather_head(q, n, dim, dh, h, &mut qh);
+        gather_head(k, n, dim, dh, h, &mut kh);
+        gather_head(v, n, dim, dh, h, &mut vh);
+        dense_attention(&qh, &kh, &vh, n, dh, &mut oh);
+        scatter_head(&oh, n, dim, dh, h, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    /// f64 reference for one query row.
+    fn ref_row(qrow: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> Vec<f64> {
+        let scale = 1.0 / (d as f64).sqrt();
+        let logits: Vec<f64> = (0..n)
+            .map(|j| {
+                let mut acc = 0.0f64;
+                for c in 0..d {
+                    acc += qrow[c] as f64 * k[j * d + c] as f64;
+                }
+                acc * scale
+            })
+            .collect();
+        let mx = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let ps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+        let den: f64 = ps.iter().sum();
+        let mut out = vec![0.0f64; d];
+        for (j, p) in ps.iter().enumerate() {
+            for c in 0..d {
+                out[c] += p / den * v[j * d + c] as f64;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_f64_reference() {
+        let mut rng = Rng::new(3);
+        for (n, d) in [(1, 4), (7, 3), (65, 16), (128, 32)] {
+            let q: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let k: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let v: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+            let mut out = vec![0.0f32; n * d];
+            dense_attention(&q, &k, &v, n, d, &mut out);
+            for r in [0, n / 2, n - 1] {
+                let want = ref_row(&q[r * d..(r + 1) * d], &k, &v, n, d);
+                for c in 0..d {
+                    let got = out[r * d + c] as f64;
+                    assert!(
+                        (got - want[c]).abs() < 1e-4,
+                        "n={n} d={d} row {r} col {c}: {got} vs {}",
+                        want[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // Identical keys ⇒ uniform attention ⇒ output = mean of values.
+        let (n, d) = (9, 5);
+        let q: Vec<f32> = (0..n * d).map(|i| (i % 7) as f32).collect();
+        let k = vec![1.0f32; n * d];
+        let v: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; n * d];
+        dense_attention(&q, &k, &v, n, d, &mut out);
+        for c in 0..d {
+            let mean: f32 = (0..n).map(|j| v[j * d + c]).sum::<f32>() / n as f32;
+            assert!((out[c] - mean).abs() < 1e-3, "col {c}: {} vs {mean}", out[c]);
+        }
+    }
+
+    #[test]
+    fn multihead_equals_per_head_calls() {
+        let mut rng = Rng::new(5);
+        let (n, heads, dh) = (33, 4, 8);
+        let dim = heads * dh;
+        let q: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let k: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let v: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut got = vec![0.0f32; n * dim];
+        dense_attention_mh(&q, &k, &v, n, heads, dim, &mut got);
+
+        let mut want = vec![0.0f32; n * dim];
+        let mut qh = vec![0.0f32; n * dh];
+        let mut kh = vec![0.0f32; n * dh];
+        let mut vh = vec![0.0f32; n * dh];
+        let mut oh = vec![0.0f32; n * dh];
+        for h in 0..heads {
+            gather_head(&q, n, dim, dh, h, &mut qh);
+            gather_head(&k, n, dim, dh, h, &mut kh);
+            gather_head(&v, n, dim, dh, h, &mut vh);
+            dense_attention(&qh, &kh, &vh, n, dh, &mut oh);
+            scatter_head(&oh, n, dim, dh, h, &mut want);
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,180 @@
+//! Blocked row-major matrix primitives shared by the native attention
+//! kernels. Everything is f32, row-major, allocation-free (callers own the
+//! buffers), and written so the inner loops reduce to contiguous
+//! slice-zip-sum — the shape LLVM autovectorizes reliably.
+
+/// `out[i, j] = Σ_c a[i, c] · b[j, c]` — A·Bᵀ for row-major A `[p, d]` and
+/// B `[q, d]`. This dot-product form is every attention score computation.
+/// Tiled over (i, j) so a block of B rows stays hot in L1.
+pub fn matmul_nt(a: &[f32], b: &[f32], p: usize, q: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), p * d, "a must be [p, d]");
+    assert_eq!(b.len(), q * d, "b must be [q, d]");
+    assert_eq!(out.len(), p * q, "out must be [p, q]");
+    const IB: usize = 16;
+    const JB: usize = 32;
+    for i0 in (0..p).step_by(IB) {
+        let i1 = (i0 + IB).min(p);
+        for j0 in (0..q).step_by(JB) {
+            let j1 = (j0 + JB).min(q);
+            for i in i0..i1 {
+                let arow = &a[i * d..(i + 1) * d];
+                let orow = &mut out[i * q..(i + 1) * q];
+                for j in j0..j1 {
+                    let brow = &b[j * d..(j + 1) * d];
+                    orow[j] = dot(arow, brow);
+                }
+            }
+        }
+    }
+}
+
+/// Dot product of two equal-length slices.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// `y += alpha · x` (the attention value-accumulation step).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Multiply every element by `s`.
+pub fn scale_in_place(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Numerically-stable softmax over one row, in place. No-op on empty rows.
+pub fn softmax_in_place(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let mx = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut den = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - mx).exp();
+        den += *v;
+    }
+    let inv = 1.0 / den;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Softmax over each row of a `[rows, cols]` buffer, in place.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for row in x.chunks_exact_mut(cols) {
+        softmax_in_place(row);
+    }
+}
+
+/// `out[c] = Σ_i weights[i] · rows[i, c]` for row-major `rows` `[k, d]` —
+/// the probability-weighted value combine.
+pub fn weighted_row_sum(weights: &[f32], rows: &[f32], d: usize, out: &mut [f32]) {
+    assert_eq!(rows.len(), weights.len() * d, "rows must be [len(weights), d]");
+    assert_eq!(out.len(), d);
+    out.fill(0.0);
+    for (w, row) in weights.iter().zip(rows.chunks_exact(d)) {
+        axpy(*w, row, out);
+    }
+}
+
+/// Copy head `h`'s column block out of a `[n, dim]` matrix into a
+/// contiguous `[n, dh]` buffer (`dim = heads · dh`).
+pub fn gather_head(x: &[f32], n: usize, dim: usize, dh: usize, h: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), n * dim);
+    assert_eq!(out.len(), n * dh);
+    let off = h * dh;
+    for (orow, xrow) in out.chunks_exact_mut(dh).zip(x.chunks_exact(dim)) {
+        orow.copy_from_slice(&xrow[off..off + dh]);
+    }
+}
+
+/// Inverse of [`gather_head`]: write a contiguous `[n, dh]` head result
+/// back into its column block of the `[n, dim]` output.
+pub fn scatter_head(xh: &[f32], n: usize, dim: usize, dh: usize, h: usize, out: &mut [f32]) {
+    assert_eq!(xh.len(), n * dh);
+    assert_eq!(out.len(), n * dim);
+    let off = h * dh;
+    for (orow, xrow) in out.chunks_exact_mut(dim).zip(xh.chunks_exact(dh)) {
+        orow[off..off + dh].copy_from_slice(xrow);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn naive_nt(a: &[f32], b: &[f32], p: usize, q: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0.0f64; p * q];
+        for i in 0..p {
+            for j in 0..q {
+                for c in 0..d {
+                    out[i * q + j] += a[i * d + c] as f64 * b[j * d + c] as f64;
+                }
+            }
+        }
+        out.into_iter().map(|x| x as f32).collect()
+    }
+
+    #[test]
+    fn matmul_nt_matches_naive_on_awkward_shapes() {
+        let mut rng = Rng::new(11);
+        for (p, q, d) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (40, 19, 64), (16, 32, 16)] {
+            let a: Vec<f32> = (0..p * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..q * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let mut got = vec![0.0f32; p * q];
+            matmul_nt(&a, &b, p, q, d, &mut got);
+            let want = naive_nt(&a, &b, p, q, d);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "p={p} q={q} d={d}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut x = vec![0.0f32, 1.0, 2.0, -50.0, 100.0, 100.0];
+        softmax_rows(&mut x, 2, 3);
+        for row in x.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+            assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        }
+        // Large equal logits split evenly without overflow.
+        assert!((x[4] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn weighted_row_sum_and_axpy() {
+        let rows = [1.0f32, 0.0, 0.0, 1.0]; // identity [2, 2]
+        let mut out = vec![9.0f32; 2];
+        weighted_row_sum(&[0.25, 0.75], &rows, 2, &mut out);
+        assert_eq!(out, vec![0.25, 0.75]);
+        axpy(2.0, &[1.0, 2.0], &mut out);
+        assert_eq!(out, vec![2.25, 4.75]);
+    }
+
+    #[test]
+    fn head_gather_scatter_roundtrip() {
+        let (n, heads, dh) = (3, 2, 2);
+        let dim = heads * dh;
+        let x: Vec<f32> = (0..n * dim).map(|i| i as f32).collect();
+        let mut back = vec![0.0f32; n * dim];
+        let mut xh = vec![0.0f32; n * dh];
+        for h in 0..heads {
+            gather_head(&x, n, dim, dh, h, &mut xh);
+            scatter_head(&xh, n, dim, dh, h, &mut back);
+        }
+        assert_eq!(back, x);
+    }
+}

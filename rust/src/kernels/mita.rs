@@ -1,0 +1,348 @@
+//! Native MiTA attention forward pass (Alg. 1 of the paper, CPU edition).
+//!
+//! The N-width fast-weight MLP is compressed by `m` landmark queries
+//! (adaptive average pooling over Q), each landmark gathers its top-`k`
+//! activated key-value pairs into a deformable expert, and every real query
+//! is argmax-routed to exactly one expert. Routing semantics are *reused*
+//! from [`crate::mita::routing`] — the same functions the property tests
+//! pin against kernels/ref.py — so the native path and the Pallas kernel
+//! share one definition of the math.
+//!
+//! Execution layout mirrors the Pallas host wrapper: queries are packed
+//! into `[m, cap, d]` slots ([`routing::pack_by_expert`]), experts compute
+//! in parallel over disjoint packed regions, and results scatter back to
+//! `[n, d]`. Queries that overflow an expert's capacity are not dropped
+//! (unlike the static-shape kernel): they fall back to an unpacked
+//! per-query pass over the same expert KV, so the native output is exact
+//! for every query.
+
+use crate::kernels::linalg::{
+    axpy, dot, gather_head, matmul_nt, scale_in_place, scatter_head, softmax_in_place,
+};
+use crate::kernels::par::par_chunks_mut;
+use crate::mita::routing;
+
+/// Shape-independent MiTA kernel parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MitaKernelConfig {
+    /// Landmark / expert count (m in the paper).
+    pub m: usize,
+    /// KV pairs gathered per expert (k in the paper).
+    pub k: usize,
+    /// Query capacity factor over the mean per-expert load.
+    pub cap_factor: usize,
+    /// Capacity rounding granularity (the kernel's query block).
+    pub block_q: usize,
+}
+
+impl Default for MitaKernelConfig {
+    fn default() -> Self {
+        MitaKernelConfig { m: 16, k: 64, cap_factor: 2, block_q: 16 }
+    }
+}
+
+impl MitaKernelConfig {
+    /// Paper-flavored defaults for a sequence length: m ≈ √n landmarks
+    /// (clamped to [4, 64]), k = 4·(n/m) gathered KV per expert.
+    pub fn for_seq(n: usize) -> Self {
+        let m = (n as f64).sqrt().round() as usize;
+        let m = m.clamp(4, 64).min(n.max(1));
+        let k = (4 * n.div_ceil(m)).min(n.max(1));
+        MitaKernelConfig { m, k, cap_factor: 2, block_q: 16 }
+    }
+
+    /// Clamp to a concrete sequence length (m, k ≤ n; everything ≥ 1).
+    fn clamped(self, n: usize) -> Self {
+        MitaKernelConfig {
+            m: self.m.clamp(1, n.max(1)),
+            k: self.k.clamp(1, n.max(1)),
+            cap_factor: self.cap_factor.max(1),
+            block_q: self.block_q.max(1),
+        }
+    }
+}
+
+/// Routing/packing statistics of one forward call.
+#[derive(Debug, Clone)]
+pub struct MitaStats {
+    /// Query slots per expert after rounding.
+    pub cap: usize,
+    /// Queries that exceeded their expert's capacity (served by the
+    /// unpacked fallback pass).
+    pub overflow: usize,
+    /// Queries routed to each expert (before capacity truncation).
+    pub expert_counts: Vec<usize>,
+}
+
+/// One query row attending over an expert's gathered KV (indices into the
+/// original K/V, no copies). `orow` is overwritten.
+#[allow(clippy::too_many_arguments)]
+fn attend_one(
+    qrow: &[f32],
+    picks: &[usize],
+    kmat: &[f32],
+    v: &[f32],
+    d: usize,
+    scale: f32,
+    logits: &mut [f32],
+    orow: &mut [f32],
+) {
+    debug_assert_eq!(logits.len(), picks.len());
+    for (l, &ki) in logits.iter_mut().zip(picks) {
+        *l = dot(qrow, &kmat[ki * d..(ki + 1) * d]) * scale;
+    }
+    softmax_in_place(logits);
+    orow.fill(0.0);
+    for (&w, &ki) in logits.iter().zip(picks) {
+        axpy(w, &v[ki * d..(ki + 1) * d], orow);
+    }
+}
+
+/// Single-head MiTA forward over row-major `[n, d]` Q/K/V. Writes `[n, d]`
+/// into `out` and returns routing statistics.
+pub fn mita_attention(
+    q: &[f32],
+    kmat: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    cfg: &MitaKernelConfig,
+    out: &mut [f32],
+) -> MitaStats {
+    assert_eq!(q.len(), n * d, "q must be [n, d]");
+    assert_eq!(kmat.len(), n * d, "k must be [n, d]");
+    assert_eq!(v.len(), n * d, "v must be [n, d]");
+    assert_eq!(out.len(), n * d, "out must be [n, d]");
+    if n == 0 || d == 0 {
+        return MitaStats { cap: 0, overflow: 0, expert_counts: Vec::new() };
+    }
+    let cfg = cfg.clamped(n);
+    let (m, kk) = (cfg.m, cfg.k);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // 1. Landmarks: adaptive average pooling over Q (Alg. 1 line 3).
+    let landmarks = routing::landmarks_pool1d(q, n, d, m);
+
+    // 2. Landmark scores S = K Q̃ᵀ / √d as a blocked matmul ([n, m], same
+    //    layout as routing::scores).
+    let mut s = vec![0.0f32; n * m];
+    matmul_nt(kmat, &landmarks, n, m, d, &mut s);
+    scale_in_place(&mut s, scale);
+
+    // 3. Deformable experts: top-k activated KV rows per landmark (Eq. 7).
+    let topk = routing::topk_indices(&s, n, m, kk);
+
+    // 4. Argmax routing via blocked logits Q Q̃ᵀ — the dot products run in
+    //    the same order as routing::route_argmax's scalar loop (and ties
+    //    keep the lower expert id), so the assignment is bit-identical to
+    //    it — then capacity packing (DESIGN.md §6 semantics).
+    let mut route_logits = vec![0.0f32; n * m];
+    matmul_nt(q, &landmarks, n, m, d, &mut route_logits);
+    let assign: Vec<usize> = route_logits
+        .chunks_exact(m)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect();
+    let cap = routing::capacity(n, m, cfg.cap_factor, cfg.block_q);
+    let pack = routing::pack_by_expert(&assign, m, cap);
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (qi, slot) in pack.slot.iter().enumerate() {
+        if let Some(si) = slot {
+            members[si / cap].push(qi); // rank order == arrival order
+        }
+    }
+
+    // 5. Per-expert attention into the packed [m, cap, d] buffer; experts
+    //    own disjoint regions, so they run in parallel.
+    let mut packed = vec![0.0f32; m * cap * d];
+    par_chunks_mut(&mut packed, cap * d, |e, chunk| {
+        let picks = &topk[e * kk..(e + 1) * kk];
+        let mut logits = vec![0.0f32; kk];
+        for (rank, &qi) in members[e].iter().enumerate() {
+            let qrow = &q[qi * d..(qi + 1) * d];
+            let orow = &mut chunk[rank * d..(rank + 1) * d];
+            attend_one(qrow, picks, kmat, v, d, scale, &mut logits, orow);
+        }
+    });
+
+    // 6. Scatter packed results back to query order.
+    for (e, mem) in members.iter().enumerate() {
+        for (rank, &qi) in mem.iter().enumerate() {
+            let src = &packed[(e * cap + rank) * d..(e * cap + rank + 1) * d];
+            out[qi * d..(qi + 1) * d].copy_from_slice(src);
+        }
+    }
+
+    // 7. Overflowed queries: unpacked fallback over the same expert KV, so
+    //    the native output stays exact under skewed routing.
+    if pack.overflow > 0 {
+        let mut logits = vec![0.0f32; kk];
+        for (qi, slot) in pack.slot.iter().enumerate() {
+            if slot.is_none() {
+                let e = assign[qi];
+                let picks = &topk[e * kk..(e + 1) * kk];
+                let qrow = &q[qi * d..(qi + 1) * d];
+                let orow = &mut out[qi * d..(qi + 1) * d];
+                attend_one(qrow, picks, kmat, v, d, scale, &mut logits, orow);
+            }
+        }
+    }
+
+    MitaStats { cap, overflow: pack.overflow, expert_counts: pack.counts }
+}
+
+/// Multi-head MiTA over model-dim layout `[n, dim]` (`dim = heads · dh`),
+/// with independent routing per head. Returns the total overflow across
+/// heads (each head's overflow queries were served by the fallback pass).
+#[allow(clippy::too_many_arguments)]
+pub fn mita_attention_mh(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    heads: usize,
+    dim: usize,
+    cfg: &MitaKernelConfig,
+    out: &mut [f32],
+) -> usize {
+    assert!(heads >= 1 && dim % heads == 0, "dim {dim} must divide into {heads} heads");
+    if n == 0 || dim == 0 {
+        return 0;
+    }
+    let dh = dim / heads;
+    let mut qh = vec![0.0f32; n * dh];
+    let mut kh = vec![0.0f32; n * dh];
+    let mut vh = vec![0.0f32; n * dh];
+    let mut oh = vec![0.0f32; n * dh];
+    let mut overflow = 0usize;
+    for h in 0..heads {
+        gather_head(q, n, dim, dh, h, &mut qh);
+        gather_head(k, n, dim, dh, h, &mut kh);
+        gather_head(v, n, dim, dh, h, &mut vh);
+        overflow += mita_attention(&qh, &kh, &vh, n, dh, cfg, &mut oh).overflow;
+        scatter_head(&oh, n, dim, dh, h, out);
+    }
+    overflow
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernels::dense::dense_attention;
+
+    fn rand_qkv(rng: &mut Rng, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut gen = |len: usize| (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect::<Vec<_>>();
+        (gen(n * d), gen(n * d), gen(n * d))
+    }
+
+    #[test]
+    fn degenerate_full_attention_matches_dense() {
+        // m = n, k = n: every landmark is one query, every expert gathers
+        // the full KV set, so MiTA must reduce to dense attention.
+        let mut rng = Rng::new(21);
+        for (n, d) in [(8, 4), (33, 8), (64, 16)] {
+            let (q, k, v) = rand_qkv(&mut rng, n, d);
+            let cfg = MitaKernelConfig { m: n, k: n, cap_factor: 2, block_q: 8 };
+            let mut got = vec![0.0f32; n * d];
+            mita_attention(&q, &k, &v, n, d, &cfg, &mut got);
+            let mut want = vec![0.0f32; n * d];
+            dense_attention(&q, &k, &v, n, d, &mut want);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-4, "n={n} d={d} elem {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn identical_queries_survive_overflow() {
+        // All queries identical ⇒ all route to one expert ⇒ massive
+        // overflow; every output row must still be identical because the
+        // fallback pass computes the same expert attention.
+        let (n, d) = (24, 4);
+        let q = vec![0.7f32; n * d];
+        let mut rng = Rng::new(9);
+        let k: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let v: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let cfg = MitaKernelConfig { m: 4, k: 8, cap_factor: 1, block_q: 1 };
+        let mut out = vec![0.0f32; n * d];
+        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        assert!(stats.overflow > 0, "test must exercise the overflow path");
+        let first = &out[..d];
+        for r in 1..n {
+            for c in 0..d {
+                assert!(
+                    (out[r * d + c] - first[c]).abs() < 1e-5,
+                    "row {r} diverged despite identical queries"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stats_are_consistent() {
+        let mut rng = Rng::new(33);
+        let (n, d) = (50, 8);
+        let (q, k, v) = rand_qkv(&mut rng, n, d);
+        let cfg = MitaKernelConfig { m: 5, k: 12, cap_factor: 2, block_q: 4 };
+        let mut out = vec![0.0f32; n * d];
+        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        assert_eq!(stats.expert_counts.len(), 5);
+        assert_eq!(stats.expert_counts.iter().sum::<usize>(), n);
+        assert_eq!(stats.cap % 4, 0);
+        let expect_overflow: usize =
+            stats.expert_counts.iter().map(|&c| c.saturating_sub(stats.cap)).sum();
+        assert_eq!(stats.overflow, expect_overflow);
+    }
+
+    #[test]
+    fn config_clamps_to_sequence() {
+        let cfg = MitaKernelConfig { m: 100, k: 100, cap_factor: 0, block_q: 0 };
+        let (n, d) = (6, 3);
+        let mut rng = Rng::new(2);
+        let (q, k, v) = rand_qkv(&mut rng, n, d);
+        let mut out = vec![0.0f32; n * d];
+        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        assert_eq!(stats.expert_counts.len(), n); // m clamped to n
+        assert!(out.iter().all(|x| x.is_finite()));
+        let auto = MitaKernelConfig::for_seq(1024);
+        assert!(auto.m >= 4 && auto.m <= 64 && auto.k <= 1024);
+    }
+
+    #[test]
+    fn multihead_equals_per_head_calls() {
+        let mut rng = Rng::new(8);
+        let (n, heads, dh) = (40, 2, 8);
+        let dim = heads * dh;
+        let gen = |rng: &mut Rng, len: usize| {
+            (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect::<Vec<f32>>()
+        };
+        let q = gen(&mut rng, n * dim);
+        let k = gen(&mut rng, n * dim);
+        let v = gen(&mut rng, n * dim);
+        let cfg = MitaKernelConfig { m: 8, k: 16, cap_factor: 2, block_q: 8 };
+        let mut got = vec![0.0f32; n * dim];
+        mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut got);
+
+        let mut want = vec![0.0f32; n * dim];
+        let mut qh = vec![0.0f32; n * dh];
+        let mut kh = vec![0.0f32; n * dh];
+        let mut vh = vec![0.0f32; n * dh];
+        let mut oh = vec![0.0f32; n * dh];
+        for h in 0..heads {
+            gather_head(&q, n, dim, dh, h, &mut qh);
+            gather_head(&k, n, dim, dh, h, &mut kh);
+            gather_head(&v, n, dim, dh, h, &mut vh);
+            mita_attention(&qh, &kh, &vh, n, dh, &cfg, &mut oh);
+            scatter_head(&oh, n, dim, dh, h, &mut want);
+        }
+        assert_eq!(got, want);
+    }
+}

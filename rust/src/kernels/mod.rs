@@ -1,0 +1,25 @@
+//! Native CPU execution kernels for MiTA and dense attention.
+//!
+//! Until now the Rust side could only *execute* attention through AOT PJRT
+//! artifacts; this module implements the forward pass directly on the host
+//! so the serving loop, benchmarks, and tests run on a plain machine with
+//! no Python, JAX, or PJRT closure installed:
+//!
+//! - [`linalg`]: blocked row-major matmuls + softmax primitives.
+//! - [`par`]: scoped-thread parallel helpers (std-only rayon substitute).
+//! - [`dense`]: O(N²) softmax attention — the correctness baseline.
+//! - [`mita`]: the full MiTA forward — landmark pooling, landmark scores,
+//!   top-k KV expert construction, argmax-routed dispatch with capacity
+//!   packing (reusing `crate::mita::routing`), per-expert attention, and
+//!   output scatter.
+//!
+//! The [`crate::runtime::backend`] module exposes these behind the same
+//! `Backend` interface as the PJRT artifact path.
+
+pub mod dense;
+pub mod linalg;
+pub mod mita;
+pub mod par;
+
+pub use dense::{dense_attention, dense_attention_mh};
+pub use mita::{mita_attention, mita_attention_mh, MitaKernelConfig, MitaStats};

@@ -1,0 +1,92 @@
+//! Scoped-thread parallel helpers — the std-only substitute for rayon in
+//! this offline build (the vendored crate set has no rayon).
+//!
+//! The only primitive the kernels need is "run a closure over disjoint
+//! mutable chunks of a buffer, spread across threads": experts write
+//! disjoint regions of a packed output, heads write disjoint column blocks,
+//! dense attention writes disjoint query-row blocks. Chunks are dealt
+//! round-robin so ragged workloads still balance.
+
+use std::num::NonZeroUsize;
+
+/// Worker count: `MITA_NUM_THREADS` if set to a positive integer (useful
+/// for deterministic benchmarking), else the machine's available
+/// parallelism. An unparseable or zero value falls back to the latter
+/// rather than silently degrading to one thread.
+pub fn num_threads() -> usize {
+    let fallback = std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1);
+    match std::env::var("MITA_NUM_THREADS") {
+        Ok(v) => v.trim().parse::<usize>().ok().filter(|&n| n > 0).unwrap_or(fallback),
+        Err(_) => fallback,
+    }
+}
+
+/// Invoke `f(chunk_index, chunk)` for every `chunk_len`-sized chunk of
+/// `buf` (last chunk may be short), distributing chunks across threads.
+/// Falls back to a plain loop when one thread suffices.
+pub fn par_chunks_mut<T, F>(buf: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    if buf.is_empty() {
+        return;
+    }
+    let nchunks = buf.len().div_ceil(chunk_len);
+    let threads = num_threads().min(nchunks);
+    if threads <= 1 {
+        for (i, chunk) in buf.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut groups: Vec<_> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, chunk) in buf.chunks_mut(chunk_len).enumerate() {
+            groups[i % threads].push((i, chunk));
+        }
+        for group in groups {
+            scope.spawn(move || {
+                for (i, chunk) in group {
+                    f(i, chunk);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_chunk_visited_exactly_once() {
+        let mut buf = vec![0usize; 103]; // ragged tail
+        par_chunks_mut(&mut buf, 10, |i, chunk| {
+            for x in chunk.iter_mut() {
+                *x += i + 1;
+            }
+        });
+        for (j, &x) in buf.iter().enumerate() {
+            assert_eq!(x, j / 10 + 1, "element {j}");
+        }
+    }
+
+    #[test]
+    fn single_chunk_and_empty_buffers() {
+        let mut buf = vec![1.0f32; 4];
+        par_chunks_mut(&mut buf, 64, |i, chunk| {
+            assert_eq!(i, 0);
+            assert_eq!(chunk.len(), 4);
+        });
+        let mut empty: Vec<f32> = Vec::new();
+        par_chunks_mut(&mut empty, 8, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -9,6 +9,9 @@
 //! - **L3** (this crate): loads + executes the artifacts via PJRT, owns the
 //!   serving loop, the training driver, data generation, metrics, and the
 //!   benchmark harness that regenerates every table/figure of the paper.
+//! - **L3-native** (`kernels` + `runtime::backend`): a pure-Rust MiTA /
+//!   dense attention forward pass behind the same `Backend` interface, so
+//!   serving and benchmarking run on machines with no PJRT closure at all.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -16,6 +19,7 @@ pub mod coordinator;
 pub mod data;
 pub mod flops;
 pub mod harness;
+pub mod kernels;
 pub mod mita;
 pub mod report;
 pub mod runtime;

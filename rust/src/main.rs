@@ -9,6 +9,8 @@
 //!   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
 //!   eval <bundle> <checkpoint> [--batches N]
 //!   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W]
+//!   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K]
+//!   serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
 //!   table2|table3|table4|table5|table6|table7 [--steps N] [--seed S]
 //!   figure5 [--requests N] | figure9 | figure10 | figures (3/4/8)
 //!   complexity                        FLOPs-vs-N scaling table
@@ -16,17 +18,20 @@
 //! ```
 
 use std::path::PathBuf;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::{serve, Engine, ServeConfig, Trainer};
+use mita::coordinator::{serve, serve_native, Engine, NativeServeConfig, ServeConfig, Trainer};
+use mita::data::rng::Rng;
 use mita::data::BatchSource;
 use mita::flops;
 use mita::harness::tables::{self, Opts};
 use mita::harness::{figures, train_bundle};
+use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
 use mita::report::Table;
-use mita::runtime::Runtime;
+use mita::runtime::{BackendSpec, NativeAttnConfig, Runtime};
 use mita::util::cli;
 
 const VALUED_FLAGS: &[&str] = &[
@@ -43,6 +48,16 @@ const VALUED_FLAGS: &[&str] = &[
     "queue-cap",
     "eval-batches",
     "log-every",
+    // native-backend workload shape
+    "n",
+    "dim",
+    "heads",
+    "m",
+    "k",
+    "cap-factor",
+    "block-q",
+    "op",
+    "max-batch",
 ];
 
 fn main() -> Result<()> {
@@ -224,6 +239,102 @@ fn main() -> Result<()> {
             figures::figure10(&rt, opts.seed)?;
             figures::figure5(&artifacts, &rt, args.flag_parse("requests", 64usize)?)?;
         }
+        // ---- native backend (no artifacts required) -----------------------
+        "native-check" => {
+            let n = args.flag_parse("n", 256usize)?;
+            let dim = args.flag_parse("dim", 64usize)?;
+            let heads = args.flag_parse("heads", 4usize)?;
+            anyhow::ensure!(
+                heads >= 1 && dim % heads == 0,
+                "--dim {dim} must divide into --heads {heads}"
+            );
+            let cfg = native_kernel_config(&args, n)?;
+            let mut rng = Rng::new(opts.seed as u64);
+            let mut gen =
+                |len: usize| (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect::<Vec<f32>>();
+            let (q, k, v) = (gen(n * dim), gen(n * dim), gen(n * dim));
+
+            // 1) Degenerate full-attention parity: m = n, k = n must match
+            //    the dense baseline exactly (within fp tolerance).
+            let pn = n.min(128);
+            let pcfg = MitaKernelConfig { m: pn, k: pn, cap_factor: 2, block_q: 8 };
+            let sub = pn * dim;
+            let mut mita_out = vec![0.0f32; sub];
+            let mut dense_out = vec![0.0f32; sub];
+            mita_attention_mh(
+                &q[..sub],
+                &k[..sub],
+                &v[..sub],
+                pn,
+                heads,
+                dim,
+                &pcfg,
+                &mut mita_out,
+            );
+            dense_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &mut dense_out);
+            let max_diff = mita_out
+                .iter()
+                .zip(&dense_out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            let ok = max_diff < 1e-4;
+            println!(
+                "parity (n={pn}, m=k=n, heads={heads}): max|Δ| = {max_diff:.2e}  {}",
+                if ok { "OK" } else { "FAIL" }
+            );
+
+            // 2) Configured MiTA vs dense on the full shape: timing + routing.
+            let mut out = vec![0.0f32; n * dim];
+            let t0 = Instant::now();
+            let overflow = mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut out);
+            let mita_secs = t0.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            dense_attention_mh(&q, &k, &v, n, heads, dim, &mut out);
+            let dense_secs = t0.elapsed().as_secs_f64();
+            println!(
+                "n={n} dim={dim} heads={heads} m={} k={}: mita={:.2}ms dense={:.2}ms (x{:.2}) \
+                 overflow={overflow}/{}",
+                cfg.m,
+                cfg.k,
+                mita_secs * 1e3,
+                dense_secs * 1e3,
+                dense_secs / mita_secs,
+                n * heads,
+            );
+            if !ok {
+                bail!("native parity check failed (max|Δ| = {max_diff:.2e})");
+            }
+        }
+        "serve-native" => {
+            let n = args.flag_parse("n", 1024usize)?;
+            let dim = args.flag_parse("dim", 64usize)?;
+            let heads = args.flag_parse("heads", 4usize)?;
+            anyhow::ensure!(
+                heads >= 1 && dim % heads == 0,
+                "--dim {dim} must divide into --heads {heads}"
+            );
+            let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
+            attn.mita = native_kernel_config(&args, n)?;
+            let op = args.flag_or("op", "attn.mita");
+            let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
+            let cfg = NativeServeConfig {
+                n,
+                dim,
+                op,
+                requests: args.flag_parse("requests", 64usize)?,
+                rate: args.flag_parse("rate", 0.0f64)?,
+                queue_cap: args.flag_parse("queue-cap", 128usize)?,
+                policy: BatchPolicy {
+                    max_batch: args.flag_parse("max-batch", 8usize)?,
+                    max_wait: std::time::Duration::from_millis(
+                        args.flag_parse("max-wait-ms", 5u64)?,
+                    ),
+                },
+            };
+            let report = serve_native(&engine.handle(), &cfg)?;
+            println!("{}", report.row());
+            engine.shutdown();
+        }
         // Utility used by examples/tests to sanity-check one bundle quickly.
         "quickcheck" => {
             let rt = Runtime::load(&artifacts)?;
@@ -240,6 +351,18 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// MiTA kernel parameters from CLI flags, defaulting to the paper-flavored
+/// shape for the sequence length.
+fn native_kernel_config(args: &cli::Args, n: usize) -> Result<MitaKernelConfig> {
+    let auto = MitaKernelConfig::for_seq(n);
+    Ok(MitaKernelConfig {
+        m: args.flag_parse("m", auto.m)?,
+        k: args.flag_parse("k", auto.k)?,
+        cap_factor: args.flag_parse("cap-factor", auto.cap_factor)?,
+        block_q: args.flag_parse("block-q", auto.block_q)?,
+    })
+}
+
 const HELP: &str = r#"mita — MiTA attention coordinator (rust + JAX/Pallas AOT)
 
 usage: mita [--artifacts DIR] <command> [args]
@@ -253,6 +376,13 @@ single runs:
   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
   eval <bundle> <checkpoint> [--batches N]
   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W] [--queue-cap C]
+
+native backend (pure-Rust kernels, no artifacts or Python needed):
+  native-check [--n N] [--dim D] [--heads H] [--m M] [--k K] [--cap-factor C]
+           parity vs dense attention + single-shot speedup/routing stats
+  serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
+               [--requests R] [--rate R] [--max-batch B] [--max-wait-ms W]
+           dynamic-batching serving benchmark over the native backend
 
 paper reproduction (see DESIGN.md experiment index):
   table2   from-scratch image classification (attention varied only)

@@ -1,0 +1,394 @@
+//! Execution-backend abstraction: one interface over the PJRT artifact
+//! path and the native CPU kernel path.
+//!
+//! The coordinator's engine thread used to be welded to the PJRT
+//! [`Runtime`]; with [`Backend`] it owns a `Box<dyn Backend>` instead, so
+//! the same serving loop, batcher, and benches drive either:
+//!
+//! - [`PjrtBackend`]: manifest-driven AOT artifacts (ops are artifact
+//!   names, parameter bindings are device literals) — requires the real
+//!   vendored `xla` closure.
+//! - [`NativeBackend`]: the pure-Rust attention kernels in
+//!   [`crate::kernels`] (ops `attn.mita` / `attn.dense`) — runs anywhere.
+//!
+//! Backends are built *inside* the engine thread from a [`BackendSpec`]
+//! (PJRT handles are not `Send`, so the spec crosses the thread boundary,
+//! not the backend).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
+use crate::runtime::client::{Runtime, RuntimeStats};
+use crate::runtime::tensor::Tensor;
+
+/// A place computations run: named ops over host tensors, with optional
+/// named parameter bindings kept backend-side between calls.
+pub trait Backend {
+    /// Short identifier ("pjrt" / "native") for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Prepare an op off the hot path (compile an artifact, warm caches).
+    fn warmup(&self, op: &str) -> Result<()>;
+
+    /// Bind named parameters from host tensors (e.g. a loaded checkpoint).
+    fn bind_tensors(&mut self, key: &str, params: Vec<Tensor>) -> Result<()>;
+
+    /// Bind named parameters by running an init op with a seed and keeping
+    /// its first `param_count` outputs.
+    fn bind_init(&mut self, key: &str, init_op: &str, seed: i32, param_count: usize) -> Result<()>;
+
+    /// Execute `op` on `inputs`, optionally prefixed by a binding's
+    /// parameters.
+    fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Compile/execute counters for reports.
+    fn stats(&self) -> RuntimeStats;
+}
+
+/// Serializable description of a backend, safe to send to the engine
+/// thread that will actually construct it.
+#[derive(Debug, Clone)]
+pub enum BackendSpec {
+    /// AOT artifact execution from `artifacts_dir` (PJRT).
+    Pjrt { artifacts_dir: PathBuf },
+    /// Native CPU attention kernels.
+    Native(NativeAttnConfig),
+}
+
+impl BackendSpec {
+    /// Construct the backend. Called on the thread that will own it.
+    pub fn create(&self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendSpec::Pjrt { artifacts_dir } => {
+                Ok(Box::new(PjrtBackend::load(artifacts_dir.clone())?))
+            }
+            BackendSpec::Native(cfg) => Ok(Box::new(NativeBackend::new(cfg.clone()))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// The artifact-execution backend: wraps [`Runtime`] and keeps parameter
+/// bindings as device-format literals so the hot path never re-converts
+/// weights (previously this logic lived inside the engine thread).
+pub struct PjrtBackend {
+    runtime: Runtime,
+    bindings: HashMap<String, Vec<xla::Literal>>,
+}
+
+impl PjrtBackend {
+    pub fn load(artifacts_dir: PathBuf) -> Result<Self> {
+        Ok(PjrtBackend { runtime: Runtime::load(artifacts_dir)?, bindings: HashMap::new() })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn warmup(&self, op: &str) -> Result<()> {
+        self.runtime.warmup(op)
+    }
+
+    fn bind_tensors(&mut self, key: &str, params: Vec<Tensor>) -> Result<()> {
+        let lits: Vec<xla::Literal> =
+            params.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        self.bindings.insert(key.to_string(), lits);
+        Ok(())
+    }
+
+    fn bind_init(
+        &mut self,
+        key: &str,
+        init_op: &str,
+        seed: i32,
+        param_count: usize,
+    ) -> Result<()> {
+        let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
+        let mut state = self.runtime.run_literals(init_op, &[seed_lit])?;
+        anyhow::ensure!(
+            state.len() >= param_count,
+            "init returned {} < {param_count} outputs",
+            state.len()
+        );
+        state.truncate(param_count);
+        self.bindings.insert(key.to_string(), state);
+        Ok(())
+    }
+
+    fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match binding {
+            None => self.runtime.run(op, inputs),
+            Some(key) => {
+                let params =
+                    self.bindings.get(key).with_context(|| format!("no binding {key:?}"))?;
+                let outs = self.runtime.run_hybrid(op, params, inputs)?;
+                outs.iter().map(Tensor::from_literal).collect()
+            }
+        }
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.runtime.stats()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Shape + kernel configuration of the native attention workload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NativeAttnConfig {
+    /// Sequence length of the serving workload (used to build request
+    /// pools; ops themselves take their shape from the input tensors).
+    pub n: usize,
+    /// Model dimension (`heads · head_dim`).
+    pub dim: usize,
+    pub heads: usize,
+    pub mita: MitaKernelConfig,
+}
+
+impl NativeAttnConfig {
+    /// Paper-flavored defaults for a (n, dim, heads) shape.
+    pub fn for_shape(n: usize, dim: usize, heads: usize) -> Self {
+        NativeAttnConfig { n, dim, heads, mita: MitaKernelConfig::for_seq(n) }
+    }
+}
+
+/// Op names served by [`NativeBackend`].
+pub const OP_ATTN_MITA: &str = "attn.mita";
+pub const OP_ATTN_DENSE: &str = "attn.dense";
+
+/// The native CPU backend: executes the attention forward pass with the
+/// kernels in [`crate::kernels`]. Accepts per-op inputs in either form:
+///
+/// - one fused tensor `[b, 3, n, dim]` (or `[3, n, dim]` for b = 1) with
+///   Q/K/V stacked on axis 1 — the serving path packs requests this way;
+/// - three tensors Q, K, V of `[b, n, dim]` (or `[n, dim]` for b = 1).
+///
+/// Output is always `[b, n, dim]`.
+pub struct NativeBackend {
+    cfg: NativeAttnConfig,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: NativeAttnConfig) -> Self {
+        NativeBackend { cfg, stats: RefCell::new(RuntimeStats::default()) }
+    }
+
+    pub fn config(&self) -> &NativeAttnConfig {
+        &self.cfg
+    }
+
+    /// Per-example contiguous (q, k, v) slices of length `n · dim` each,
+    /// resolved from either input form.
+    fn example_qkv(
+        inputs: &[Tensor],
+        b: usize,
+        per: usize,
+        i: usize,
+    ) -> Result<(&[f32], &[f32], &[f32])> {
+        match inputs.len() {
+            1 => {
+                let data = inputs[0].as_f32()?;
+                let block = &data[i * 3 * per..(i + 1) * 3 * per];
+                Ok((&block[..per], &block[per..2 * per], &block[2 * per..]))
+            }
+            3 => {
+                let q = inputs[0].as_f32()?;
+                let k = inputs[1].as_f32()?;
+                let v = inputs[2].as_f32()?;
+                debug_assert_eq!(q.len(), b * per);
+                Ok((
+                    &q[i * per..(i + 1) * per],
+                    &k[i * per..(i + 1) * per],
+                    &v[i * per..(i + 1) * per],
+                ))
+            }
+            other => bail!("native attention wants 1 fused or 3 tensors, got {other}"),
+        }
+    }
+
+    /// Resolve (b, n, dim) from the input shapes.
+    fn batch_shape(inputs: &[Tensor]) -> Result<(usize, usize, usize)> {
+        match inputs.len() {
+            1 => {
+                let shape = inputs[0].shape();
+                match *shape {
+                    [three, n, dim] if three == 3 => Ok((1, n, dim)),
+                    [b, three, n, dim] if three == 3 => Ok((b, n, dim)),
+                    _ => bail!("fused input must be [b, 3, n, dim] or [3, n, dim], got {shape:?}"),
+                }
+            }
+            3 => {
+                let shape = inputs[0].shape();
+                for t in &inputs[1..] {
+                    anyhow::ensure!(
+                        t.shape() == shape,
+                        "q/k/v shapes differ: {shape:?} vs {:?}",
+                        t.shape()
+                    );
+                }
+                match *shape {
+                    [n, dim] => Ok((1, n, dim)),
+                    [b, n, dim] => Ok((b, n, dim)),
+                    _ => bail!("q/k/v must be [b, n, dim] or [n, dim], got {shape:?}"),
+                }
+            }
+            other => bail!("native attention wants 1 fused or 3 tensors, got {other}"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn warmup(&self, _op: &str) -> Result<()> {
+        Ok(()) // nothing to compile
+    }
+
+    fn bind_tensors(&mut self, _key: &str, _params: Vec<Tensor>) -> Result<()> {
+        bail!("native attention backend has no parameter bindings")
+    }
+
+    fn bind_init(
+        &mut self,
+        _key: &str,
+        init_op: &str,
+        _seed: i32,
+        _param_count: usize,
+    ) -> Result<()> {
+        bail!("native backend has no init artifacts (requested {init_op:?})")
+    }
+
+    fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(binding.is_none(), "native ops take no parameter binding");
+        let mita_op = match op {
+            OP_ATTN_MITA => true,
+            OP_ATTN_DENSE => false,
+            other => {
+                bail!("native backend has no op {other:?} (available: attn.mita, attn.dense)")
+            }
+        };
+        let (b, n, dim) = Self::batch_shape(inputs)?;
+        let heads = self.cfg.heads.max(1);
+        anyhow::ensure!(
+            dim % heads == 0,
+            "model dim {dim} not divisible by {heads} heads"
+        );
+        let per = n * dim;
+        let t0 = Instant::now();
+        let mut out = vec![0.0f32; b * per];
+        for (i, out_ex) in out.chunks_exact_mut(per).enumerate() {
+            let (q, k, v) = Self::example_qkv(inputs, b, per, i)?;
+            if mita_op {
+                mita_attention_mh(q, k, v, n, heads, dim, &self.cfg.mita, out_ex);
+            } else {
+                dense_attention_mh(q, k, v, n, heads, dim, out_ex);
+            }
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(vec![Tensor::f32(&[b, n, dim], out)?])
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn qkv_tensors(n: usize, dim: usize, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        (0..3)
+            .map(|_| {
+                let data = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+                Tensor::f32(&[n, dim], data).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_and_separate_inputs_agree() {
+        let (n, dim) = (12, 8);
+        let sep = qkv_tensors(n, dim, 4);
+        let mut fused = Vec::new();
+        for t in &sep {
+            fused.extend_from_slice(t.as_f32().unwrap());
+        }
+        let fused = Tensor::f32(&[3, n, dim], fused).unwrap();
+
+        let be = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 2));
+        let a = be.run(OP_ATTN_MITA, None, &sep).unwrap();
+        let b = be.run(OP_ATTN_MITA, None, &[fused]).unwrap();
+        assert_eq!(a[0], b[0]);
+        assert_eq!(a[0].shape(), &[1, n, dim]);
+        assert_eq!(be.stats().executions, 2);
+    }
+
+    #[test]
+    fn batched_run_matches_per_example() {
+        let (n, dim, bsz) = (10, 4, 3);
+        let mut rng = Rng::new(7);
+        let mut data = Vec::new();
+        for _ in 0..bsz * 3 * n * dim {
+            data.push(rng.range_f32(-1.0, 1.0));
+        }
+        let batch = Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap();
+        let be = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 1));
+        let out = be.run(OP_ATTN_DENSE, None, &[batch]).unwrap();
+        assert_eq!(out[0].shape(), &[bsz, n, dim]);
+        let full = out[0].as_f32().unwrap();
+        for i in 0..bsz {
+            let one =
+                Tensor::f32(&[3, n, dim], data[i * 3 * n * dim..(i + 1) * 3 * n * dim].to_vec())
+                    .unwrap();
+            let o = be.run(OP_ATTN_DENSE, None, &[one]).unwrap();
+            assert_eq!(&full[i * n * dim..(i + 1) * n * dim], o[0].as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_ops_and_shapes() {
+        let be = NativeBackend::new(NativeAttnConfig::for_shape(8, 4, 2));
+        let t = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
+        assert!(be.run("predict", None, &[t.clone()]).is_err());
+        assert!(be.run(OP_ATTN_MITA, None, &[t.clone()]).is_err()); // not [3, n, dim]
+        assert!(be.run(OP_ATTN_MITA, Some("w"), &[t]).is_err());
+        let mut be = be;
+        assert!(be.bind_tensors("w", vec![]).is_err());
+        assert!(be.bind_init("w", "init", 0, 1).is_err());
+        assert!(be.warmup(OP_ATTN_MITA).is_ok());
+    }
+
+    #[test]
+    fn backend_spec_creates_native() {
+        let spec = BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2));
+        let be = spec.create().unwrap();
+        assert_eq!(be.name(), "native");
+    }
+}

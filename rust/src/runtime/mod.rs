@@ -1,15 +1,19 @@
-//! Runtime layer: manifest-driven loading and execution of AOT-compiled
-//! XLA artifacts through the PJRT C API (the `xla` crate).
+//! Runtime layer: execution backends plus the manifest-driven loading of
+//! AOT-compiled XLA artifacts through the PJRT C API (the `xla` crate).
 //!
+//! - [`backend`]: the [`Backend`] trait — PJRT artifacts or native CPU
+//!   kernels behind one interface — and [`BackendSpec`] for picking one.
 //! - [`manifest`]: schema of `artifacts/manifest.json` (the Python⇄Rust
 //!   contract).
 //! - [`tensor`]: host tensors ⇄ `xla::Literal`.
 //! - [`client`]: the [`Runtime`] — compile cache + execution.
 
+pub mod backend;
 pub mod client;
 pub mod manifest;
 pub mod tensor;
 
+pub use backend::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, PjrtBackend};
 pub use client::{Runtime, RuntimeStats};
 pub use manifest::{ArtifactSpec, BundleSpec, DType, Manifest, ModelCfg, TensorSpec, TrainCfg};
 pub use tensor::Tensor;

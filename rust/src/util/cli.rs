@@ -84,8 +84,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_flags_and_positionals() {
-        let a = parse(&v(&["train", "t2_std", "--steps", "100", "--verbose", "--lr=0.1"]), &["steps"])
-            .unwrap();
+        let argv = v(&["train", "t2_std", "--steps", "100", "--verbose", "--lr=0.1"]);
+        let a = parse(&argv, &["steps"]).unwrap();
         assert_eq!(a.subcommand, "train");
         assert_eq!(a.positional(0, "bundle").unwrap(), "t2_std");
         assert_eq!(a.flag("steps"), Some("100"));

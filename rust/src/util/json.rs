@@ -133,7 +133,12 @@ impl<'a> Parser<'a> {
             self.pos += 1;
             Ok(())
         } else {
-            bail!("expected {:?} at byte {}, found {:?}", b as char, self.pos, self.peek().map(|c| c as char))
+            bail!(
+                "expected {:?} at byte {}, found {:?}",
+                b as char,
+                self.pos,
+                self.peek().map(|c| c as char)
+            )
         }
     }
 

@@ -53,7 +53,8 @@ pub fn run_prop_seeded<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut property
                 .cloned()
                 .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property failed on case {case} (seed {seed:#x}, size {}): {msg}", 16 + case % 48);
+            let size = 16 + case % 48;
+            panic!("property failed on case {case} (seed {seed:#x}, size {size}): {msg}");
         }
     }
 }

@@ -1,0 +1,252 @@
+//! Native-backend correctness — all artifact-free, so CI exercises the
+//! full stack on plain runners:
+//!
+//! - parity: native MiTA forward vs the dense baseline in the degenerate
+//!   full-attention configuration (m = n, k = n);
+//! - routing/packing invariants of the kernel vs `mita::routing` directly;
+//! - an independent per-query reference (f64 softmax over the routed
+//!   expert's gathered KV) that ignores capacity packing entirely, pinning
+//!   the pack/scatter/overflow machinery;
+//! - the engine + serving integration over `BackendSpec::Native`.
+
+use std::time::Duration;
+
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::server::{serve_native, NativeServeConfig};
+use mita::coordinator::Engine;
+use mita::data::rng::Rng;
+use mita::kernels::linalg::{matmul_nt, scale_in_place};
+use mita::kernels::{dense_attention, mita_attention, MitaKernelConfig};
+use mita::mita::routing;
+use mita::runtime::backend::{OP_ATTN_DENSE, OP_ATTN_MITA};
+use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+use mita::util::prop::run_prop;
+
+fn rand_vec(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.range_f32(lo, hi)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Parity with the dense baseline (degenerate full-attention case).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_degenerate_mita_equals_dense() {
+    run_prop(30, |g| {
+        let n = g.usize_in(1, 80);
+        let d = g.usize_in(1, 24);
+        let q = g.vec_f32(n * d, -2.0, 2.0);
+        let k = g.vec_f32(n * d, -2.0, 2.0);
+        let v = g.vec_f32(n * d, -2.0, 2.0);
+        let cfg = MitaKernelConfig {
+            m: n,
+            k: n,
+            cap_factor: g.usize_in(1, 3),
+            block_q: [1, 8, 16][g.usize_in(0, 2)],
+        };
+        let mut got = vec![0.0f32; n * d];
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut got);
+        let mut want = vec![0.0f32; n * d];
+        dense_attention(&q, &k, &v, n, d, &mut want);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "n={n} d={d} elem {i}: {a} vs {b}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Kernel-internal landmark scores match routing::scores.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_blocked_scores_match_routing_scores() {
+    run_prop(60, |g| {
+        let n = g.usize_in(1, 96);
+        let m = g.usize_in(1, 16);
+        let d = g.usize_in(1, 32);
+        let k = g.vec_f32(n * d, -2.0, 2.0);
+        let lands = g.vec_f32(m * d, -2.0, 2.0);
+        let want = routing::scores(&k, &lands, n, d, m);
+        let mut got = vec![0.0f32; n * m];
+        matmul_nt(&k, &lands, n, m, d, &mut got);
+        scale_in_place(&mut got, 1.0 / (d as f32).sqrt());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "elem {i}: {a} vs {b}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Routing/packing invariants: the kernel's stats must be exactly what
+// mita::routing computes on the same inputs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_kernel_routing_matches_routing_module() {
+    run_prop(40, |g| {
+        let n = g.usize_in(1, 120);
+        let d = g.usize_in(1, 16);
+        let m = g.usize_in(1, n.min(8));
+        let kk = g.usize_in(1, n);
+        let cap_factor = g.usize_in(1, 2);
+        let block_q = [1, 4, 16][g.usize_in(0, 2)];
+        let q = g.vec_f32(n * d, -2.0, 2.0);
+        let k = g.vec_f32(n * d, -2.0, 2.0);
+        let v = g.vec_f32(n * d, -2.0, 2.0);
+        let cfg = MitaKernelConfig { m, k: kk, cap_factor, block_q };
+        let mut out = vec![0.0f32; n * d];
+        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+
+        let lands = routing::landmarks_pool1d(&q, n, d, m);
+        let assign = routing::route_argmax(&q, &lands, n, d, m);
+        let cap = routing::capacity(n, m, cap_factor, block_q);
+        let pack = routing::pack_by_expert(&assign, m, cap);
+        assert_eq!(stats.cap, cap);
+        assert_eq!(stats.overflow, pack.overflow);
+        assert_eq!(stats.expert_counts, pack.counts);
+        assert_eq!(stats.expert_counts.iter().sum::<usize>(), n);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Independent per-query reference: same discrete routing decisions, f64
+// attention math, no packing — catches any scatter/overflow/parallelism bug.
+// ---------------------------------------------------------------------------
+
+fn ref_query_output(qrow: &[f32], picks: &[usize], k: &[f32], v: &[f32], d: usize) -> Vec<f64> {
+    let scale = 1.0 / (d as f64).sqrt();
+    let logits: Vec<f64> = picks
+        .iter()
+        .map(|&ki| {
+            let krow = &k[ki * d..(ki + 1) * d];
+            let dot: f64 = qrow.iter().zip(krow).map(|(a, b)| *a as f64 * *b as f64).sum();
+            dot * scale
+        })
+        .collect();
+    let mx = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ps: Vec<f64> = logits.iter().map(|l| (l - mx).exp()).collect();
+    let den: f64 = ps.iter().sum();
+    let mut out = vec![0.0f64; d];
+    for (p, &ki) in ps.iter().zip(picks) {
+        let vrow = &v[ki * d..(ki + 1) * d];
+        for (o, x) in out.iter_mut().zip(vrow) {
+            *o += p / den * *x as f64;
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_every_query_matches_unpacked_reference() {
+    run_prop(30, |g| {
+        let n = g.usize_in(2, 64);
+        let d = g.usize_in(1, 12);
+        let m = g.usize_in(1, n.min(6));
+        let kk = g.usize_in(1, n);
+        // Tiny capacities so the overflow fallback path is hit often.
+        let cfg = MitaKernelConfig { m, k: kk, cap_factor: 1, block_q: 1 };
+        let q = g.vec_f32(n * d, -2.0, 2.0);
+        let k = g.vec_f32(n * d, -2.0, 2.0);
+        let v = g.vec_f32(n * d, -2.0, 2.0);
+        let mut out = vec![0.0f32; n * d];
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+
+        // Reconstruct the kernel's discrete decisions with the same shared
+        // routing functions (scores via the same blocked matmul).
+        let lands = routing::landmarks_pool1d(&q, n, d, m);
+        let mut s = vec![0.0f32; n * m];
+        matmul_nt(&k, &lands, n, m, d, &mut s);
+        scale_in_place(&mut s, 1.0 / (d as f32).sqrt());
+        let topk = routing::topk_indices(&s, n, m, kk);
+        let assign = routing::route_argmax(&q, &lands, n, d, m);
+
+        for qi in 0..n {
+            let picks = &topk[assign[qi] * kk..(assign[qi] + 1) * kk];
+            let want = ref_query_output(&q[qi * d..(qi + 1) * d], picks, &k, &v, d);
+            for c in 0..d {
+                let got = out[qi * d + c] as f64;
+                assert!(
+                    (got - want[c]).abs() < 1e-4,
+                    "query {qi} col {c}: {got} vs {} (n={n} m={m} k={kk})",
+                    want[c]
+                );
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Engine + serving integration over the native backend.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_native_backend_runs_attention_ops() {
+    let (n, dim, heads) = (32, 16, 2);
+    let attn = NativeAttnConfig::for_shape(n, dim, heads);
+    let mut rng = Rng::new(40);
+    let fused = Tensor::f32(&[1, 3, n, dim], rand_vec(&mut rng, 3 * n * dim, -1.0, 1.0)).unwrap();
+
+    // Direct backend call is the reference for the engine round-trip.
+    let backend = NativeBackend::new(attn.clone());
+    let want = backend.run(OP_ATTN_MITA, None, &[fused.clone()]).unwrap();
+
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![OP_ATTN_MITA.into()])
+        .expect("native engine");
+    let handle = engine.handle();
+    let got = handle.run(OP_ATTN_MITA, vec![fused.clone()]).unwrap();
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0], want[0]);
+    assert_eq!(got[0].shape(), &[1, n, dim]);
+
+    let dense = handle.run(OP_ATTN_DENSE, vec![fused.clone()]).unwrap();
+    assert_eq!(dense[0].shape(), &[1, n, dim]);
+
+    // Unknown ops and binding requests fail loudly.
+    assert!(handle.run("predict", vec![fused.clone()]).is_err());
+    assert!(handle.run_bound(OP_ATTN_MITA, "weights", vec![fused]).is_err());
+    assert!(handle.bind_init("w", "init", 0, 4).is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn native_serving_closed_loop_completes_all_requests() {
+    let attn = NativeAttnConfig::for_shape(64, 16, 2);
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+    for op in [OP_ATTN_MITA, OP_ATTN_DENSE] {
+        let cfg = NativeServeConfig {
+            n: 64,
+            dim: 16,
+            op: op.to_string(),
+            requests: 24,
+            rate: 0.0,
+            queue_cap: 64,
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        };
+        let report = serve_native(&engine.handle(), &cfg).unwrap();
+        assert_eq!(report.completed, 24, "op {op}");
+        assert_eq!(report.rejected, 0);
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.batches >= 6); // 24 requests / max_batch 4
+        assert!(report.p50_ms <= report.p99_ms + 1e-9);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn native_serving_open_loop_backpressure() {
+    let attn = NativeAttnConfig::for_shape(128, 32, 4);
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+    let cfg = NativeServeConfig {
+        n: 128,
+        dim: 32,
+        op: OP_ATTN_MITA.to_string(),
+        requests: 100,
+        rate: 50_000.0,
+        queue_cap: 4,
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    };
+    let report = serve_native(&engine.handle(), &cfg).unwrap();
+    assert_eq!(report.completed + report.rejected, 100);
+    assert!(report.completed > 0);
+    engine.shutdown();
+}

@@ -1,0 +1,171 @@
+//! Std-only stand-in for the `anyhow` crate, covering exactly the surface
+//! this workspace uses: [`Error`], [`Result`], the [`anyhow!`] / [`bail!`] /
+//! [`ensure!`] macros, and the [`Context`] extension trait for `Result` and
+//! `Option`.
+//!
+//! The build environment is fully offline, so instead of the real crate we
+//! vendor this ~150-line subset. Semantics match anyhow where it matters:
+//! context wraps outside-in (`"ctx: cause"`), any `std::error::Error` value
+//! converts via `?`, and `Error` itself deliberately does *not* implement
+//! `std::error::Error` (that is what keeps the blanket `From` impl coherent,
+//! same trick as upstream).
+
+use std::fmt;
+
+/// Error: a message with any context frames already folded in.
+pub struct Error(String);
+
+/// `anyhow::Result<T>` — alias with the crate's error as the default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(message.to_string())
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error(format!("{context}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Context-attachment extension, as in anyhow: available on `Result` with a
+/// displayable error, and on `Option` (where `None` becomes the context).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{context}: {e}")))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_then_wrap(s: &str) -> Result<i32> {
+        let n: i32 = s.parse()?; // From<ParseIntError>
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_then_wrap("42").unwrap(), 42);
+        assert!(parse_then_wrap("nope").is_err());
+    }
+
+    #[test]
+    fn context_wraps_outside_in() {
+        let e: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 7");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let v: Option<u8> = None;
+        let err = v.context("missing").unwrap_err();
+        assert_eq!(format!("{err}"), "missing");
+        let v: Option<u8> = Some(3);
+        assert_eq!(v.with_context(|| "unused").unwrap(), 3);
+    }
+
+    fn ensures(x: usize) -> Result<usize> {
+        ensure!(x < 10, "x too big: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(ensures(3).unwrap(), 3);
+        assert_eq!(ensures(11).unwrap_err().to_string(), "x too big: 11");
+        fn bails() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "boom 1");
+    }
+}

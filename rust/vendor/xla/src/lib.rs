@@ -1,0 +1,267 @@
+//! Stub of the vendored `xla` PJRT bindings.
+//!
+//! The original build environment vendors the full PJRT C-API closure; this
+//! container does not ship it, so the workspace builds against this stub
+//! instead. The split is deliberate:
+//!
+//! - [`Literal`] is **fully functional** (host tensors: f32/s32, reshape,
+//!   readback). Everything that only moves data — checkpoints, parameter
+//!   bindings, tensor conversion — keeps working.
+//! - The **runtime surface** ([`PjRtClient`], [`PjRtLoadedExecutable`],
+//!   [`HloModuleProto`]) type-checks but reports
+//!   "PJRT unavailable" at the first call, so artifact-dependent paths fail
+//!   with a clear message instead of at link time. The native CPU backend
+//!   (`mita::kernels`) is the execution path in this build.
+//!
+//! Swapping the real crate back in is a one-line change in rust/Cargo.toml.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Stub error; rendered with `{:?}` by callers, matching the real crate.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT runtime unavailable (stub xla crate; use the native backend or \
+         restore the vendored PJRT closure)"
+    ))
+}
+
+/// Element types of the PJRT boundary. Only `F32`/`S32` are constructed by
+/// this stub, but the full set is declared so caller `match` arms over
+/// "unsupported" types stay reachable, as with the real crate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Typed host storage behind a [`Literal`]. Public only because the
+/// [`NativeType`] trait must name it; not part of the intended API.
+#[doc(hidden)]
+#[derive(Debug, Clone, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+/// Rust scalar types that map onto an [`ElementType`].
+pub trait NativeType: Sized + Copy {
+    fn element_type() -> ElementType;
+    #[doc(hidden)]
+    fn store(data: &[Self]) -> Storage;
+    #[doc(hidden)]
+    fn read(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+
+    fn store(data: &[Self]) -> Storage {
+        Storage::F32(data.to_vec())
+    }
+
+    fn read(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::S32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+
+    fn store(data: &[Self]) -> Storage {
+        Storage::S32(data.to_vec())
+    }
+
+    fn read(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::S32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+}
+
+/// Dims + element type of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A dense host tensor (the only literal kind this workspace constructs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: T::store(data) }
+    }
+
+    fn element_count(&self) -> i64 {
+        match &self.storage {
+            Storage::F32(v) => v.len() as i64,
+            Storage::S32(v) => v.len() as i64,
+        }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want != self.element_count() {
+            return Err(Error(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), storage: self.storage.clone() })
+    }
+
+    /// Shape of the array (always available: the stub has no tuple literals).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.storage {
+            Storage::F32(_) => ElementType::F32,
+            Storage::S32(_) => ElementType::S32,
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    /// Copy the elements out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match T::read(&self.storage) {
+            Some(v) => Ok(v),
+            None => Err(Error(format!("to_vec: literal is not {:?}", T::element_type()))),
+        }
+    }
+
+    /// Tuple decomposition — only execution results are tuples, and the stub
+    /// never produces one.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error("decompose_tuple: stub literals are never tuples".to_string()))
+    }
+}
+
+/// Parsed HLO module (stub: cannot be constructed).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parse {}", path.as_ref().display())))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer holding one execution output (stub: never produced).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: never produced).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute on per-device argument lists; generic over owned or borrowed
+    /// literals, matching the real crate's call sites.
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("execute"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let l = l.reshape(&[2, 2]).unwrap();
+        let s = l.array_shape().unwrap();
+        assert_eq!(s.dims(), &[2, 2]);
+        assert_eq!(s.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_bad_reshape() {
+        let l = Literal::vec1(&[7i32, 8]);
+        assert!(l.reshape(&[3]).is_err());
+        let r = l.reshape(&[2, 1]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![7, 8]);
+        assert_eq!(Literal::vec1(&[0i32; 0]).array_shape().unwrap().dims(), &[0]);
+    }
+
+    #[test]
+    fn runtime_surface_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+        let mut l = Literal::vec1(&[1.0f32]);
+        assert!(l.decompose_tuple().is_err());
+    }
+}
