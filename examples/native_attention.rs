@@ -2,12 +2,21 @@
 //! MiTA attention path. Unlike the other examples this needs **no**
 //! `make artifacts`, no Python, and no PJRT closure — it runs anywhere.
 //!
-//! 1. Calls the kernels directly: dense vs MiTA forward on one sequence,
-//!    with a degenerate-parity check (m = k = n ⇒ identical outputs).
-//! 2. Spawns the coordinator engine over `BackendSpec::Native` and drives
-//!    the dynamic-batching serving loop against it.
+//! 1. Calls the kernels directly (serial, zero-alloc via a [`Workspace`]):
+//!    dense vs MiTA forward on one sequence, with a degenerate-parity
+//!    check (m = k = n ⇒ identical outputs).
+//! 2. Runs a batched problem through [`NativeBackend`] — the kernel
+//!    registry resolves the op, and execution fans out as (example × head)
+//!    work items over pooled per-thread workspaces.
+//! 3. Spawns the coordinator engine over `BackendSpec::Native` and drives
+//!    the dynamic-batching serving loop against it (the report row shows
+//!    the run's routing stats: `ovf=` overflow fraction, `imb=` expert
+//!    load imbalance).
 //!
 //! Run: `cargo run --release --example native_attention [-- n dim heads]`
+//!
+//! [`Workspace`]: mita::kernels::Workspace
+//! [`NativeBackend`]: mita::runtime::NativeBackend
 
 use std::time::Instant;
 
@@ -16,8 +25,10 @@ use mita::coordinator::batcher::BatchPolicy;
 use mita::coordinator::server::{serve_native, NativeServeConfig};
 use mita::coordinator::Engine;
 use mita::data::rng::Rng;
-use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
-use mita::runtime::{BackendSpec, NativeAttnConfig};
+use mita::kernels::{
+    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, OP_ATTN_MITA, Workspace,
+};
+use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,35 +42,70 @@ fn main() -> Result<()> {
 
     // 1) Direct kernel calls: parity on the degenerate config, then timing
     //    of the real MiTA configuration against the dense baseline.
+    let mut ws = Workspace::new();
     let pn = n.min(96);
     let sub = pn * dim;
     let pcfg = MitaKernelConfig { m: pn, k: pn, cap_factor: 2, block_q: 8 };
     let mut a = vec![0.0f32; sub];
     let mut b = vec![0.0f32; sub];
-    mita_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &pcfg, &mut a);
-    dense_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &mut b);
+    let mut pstats = MitaStats::default();
+    mita_attention_mh(
+        &q[..sub],
+        &k[..sub],
+        &v[..sub],
+        pn,
+        heads,
+        dim,
+        &pcfg,
+        &mut ws,
+        &mut a,
+        &mut pstats,
+    );
+    dense_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &mut ws, &mut b);
     let max_diff = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
     println!("degenerate parity (n={pn}): max|mita - dense| = {max_diff:.2e}");
 
     let cfg = MitaKernelConfig::for_seq(n);
     let mut out = vec![0.0f32; n * dim];
+    let mut stats = MitaStats::default();
     let t0 = Instant::now();
-    let overflow = mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut out);
+    mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut ws, &mut out, &mut stats);
     let mita_ms = t0.elapsed().as_secs_f64() * 1e3;
     let t0 = Instant::now();
-    dense_attention_mh(&q, &k, &v, n, heads, dim, &mut out);
+    dense_attention_mh(&q, &k, &v, n, heads, dim, &mut ws, &mut out);
     let dense_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!(
         "n={n} dim={dim} heads={heads} (m={}, k={}): mita={mita_ms:.2}ms dense={dense_ms:.2}ms \
-         (x{:.2}), overflow {overflow}/{}",
+         (x{:.2}), overflow {}/{}",
         cfg.m,
         cfg.k,
         dense_ms / mita_ms,
-        n * heads
+        stats.overflow,
+        stats.queries,
     );
 
-    // 2) The same kernels behind the engine + dynamic batcher.
+    // 2) The same math through the backend's batched (example × head)
+    //    dispatch: one fused [b, 3, n, dim] call, parallel work items,
+    //    pooled workspaces.
     let attn = NativeAttnConfig { n, dim, heads, mita: cfg };
+    let backend = NativeBackend::new(attn.clone());
+    let bsz = 4usize;
+    let fused_data: Vec<f32> = (0..bsz * 3 * n * dim).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let fused = Tensor::f32(&[bsz, 3, n, dim], fused_data)?;
+    let t0 = Instant::now();
+    let outs = backend.run(OP_ATTN_MITA, None, &[fused])?;
+    let batched_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let bstats = backend.mita_stats().unwrap_or_default();
+    println!(
+        "batched b={bsz}: out {:?} in {batched_ms:.2}ms ({} work items, {} pooled workspaces, \
+         ovf {:.1}%)",
+        outs[0].shape(),
+        bsz * heads,
+        backend.workspace_pool().created(),
+        bstats.overflow_fraction() * 100.0,
+    );
+
+    // 3) The same kernels behind the engine + dynamic batcher.
     let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
     for op in ["attn.mita", "attn.dense"] {
         let scfg = NativeServeConfig {

@@ -1,9 +1,15 @@
-//! Bench: attention forward latency, two parts.
+//! Bench: attention forward latency, three parts.
 //!
 //! **Native sweep** (always runs, no artifacts needed): the pure-Rust MiTA
-//! kernels vs the naive dense baseline across sequence lengths at a fixed
-//! model shape (dim=64, heads=4). Writes `BENCH_attn_native.json` so CI
-//! can archive the perf trajectory.
+//! kernel vs the naive dense baseline across sequence lengths at a fixed
+//! model shape (dim=64, heads=4), one sequence at a time through a warm
+//! `Workspace` (the serial per-sequence path).
+//!
+//! **Batch sweep** (always runs): the backend's batched (example × head)
+//! parallel dispatch vs that serial per-sequence path across batch sizes —
+//! the speedup column is the win from work-item parallelism + pooled
+//! workspaces. Both sweeps land in `BENCH_attn_native.json` so CI can
+//! archive the perf trajectory.
 //!
 //! **PJRT sweep** (requires `make artifacts`): the original Fig. 5
 //! predict-latency measurement over the compiled bundles.
@@ -16,15 +22,26 @@ use std::fmt::Write as _;
 use mita::data::rng::Rng;
 use mita::data::{BatchSource, Split};
 use mita::flops;
-use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
-use mita::runtime::{Runtime, Tensor};
+use mita::kernels::{
+    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, OP_ATTN_MITA, Workspace,
+};
+use mita::runtime::{Backend, NativeAttnConfig, NativeBackend, Runtime, Tensor};
 use mita::util::bench::bench_for;
+
+/// Model shape shared by the native sweeps and the JSON artifact (the
+/// JSON metadata must never drift from what was actually measured).
+const DIM: usize = 64;
+const HEADS: usize = 4;
+/// Sequence length of the batch-size sweep.
+const BATCH_N: usize = 512;
 
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("MITA_BENCH_QUICK").is_ok_and(|v| v == "1");
 
-    native_sweep(quick);
+    let seq_rows = native_sweep(quick);
+    let batch_rows = batched_sweep(quick);
+    write_json(quick, &seq_rows, &batch_rows);
 
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("\nSKIP PJRT sweep: run `make artifacts` first");
@@ -33,13 +50,16 @@ fn main() {
     pjrt_sweep();
 }
 
-/// Native CPU kernels: MiTA vs naive dense, per sequence length.
-fn native_sweep(quick: bool) {
-    let (dim, heads) = (64usize, 4usize);
+/// Native CPU kernels: MiTA vs naive dense, per sequence length (serial
+/// per-sequence path through one warm workspace).
+fn native_sweep(quick: bool) -> Vec<(usize, MitaKernelConfig, f64, f64)> {
+    let (dim, heads) = (DIM, HEADS);
     let ns: &[usize] = if quick { &[256, 1024] } else { &[256, 512, 1024, 2048, 4096] };
     let budget = if quick { 0.25 } else { 1.5 };
     println!("# attn_microbench — native kernels (dim={dim}, heads={heads}, quick={quick})");
 
+    let mut ws = Workspace::new();
+    let mut stats = MitaStats::default();
     let mut rows: Vec<(usize, MitaKernelConfig, f64, f64)> = Vec::new();
     for &n in ns {
         let mut rng = Rng::derive(0xBE7C, &[n as u64]);
@@ -50,11 +70,11 @@ fn native_sweep(quick: bool) {
         let mut out = vec![0.0f32; n * dim];
 
         let rd = bench_for(&format!("dense n={n}"), 1, budget, || {
-            dense_attention_mh(&q, &k, &v, n, heads, dim, &mut out);
+            dense_attention_mh(&q, &k, &v, n, heads, dim, &mut ws, &mut out);
         });
         println!("{}", rd.row());
         let rm = bench_for(&format!("mita n={n} (m={}, k={})", cfg.m, cfg.k), 1, budget, || {
-            mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut out);
+            mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut ws, &mut out, &mut stats);
         });
         println!("{}", rm.row());
         rows.push((n, cfg, rd.mean_secs, rm.mean_secs));
@@ -64,18 +84,75 @@ fn native_sweep(quick: bool) {
     for (n, _, d, m) in &rows {
         println!("{n}, {:.3}, {:.3}, x{:.2}", d * 1e3, m * 1e3, d / m);
     }
+    rows
+}
 
-    // JSON artifact for the CI perf trajectory.
+/// Batched (example × head) parallel dispatch through `NativeBackend` vs
+/// the serial per-sequence kernel path, per batch size.
+fn batched_sweep(quick: bool) -> Vec<(usize, f64, f64)> {
+    let (n, dim, heads) = (BATCH_N, DIM, HEADS);
+    let batches: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    let budget = if quick { 0.25 } else { 1.0 };
+    let cfg = MitaKernelConfig::for_seq(n);
+    println!(
+        "\n# attn_microbench — batched dispatch (n={n}, dim={dim}, heads={heads}, threads={})",
+        mita::kernels::par::num_threads()
+    );
+
+    let backend = NativeBackend::new(NativeAttnConfig { n, dim, heads, mita: cfg });
+    let per = n * dim;
+    let mut ws = Workspace::new();
+    let mut stats = MitaStats::default();
+    let mut rows: Vec<(usize, f64, f64)> = Vec::new();
+    for &b in batches {
+        let mut rng = Rng::derive(0xBA7C, &[b as u64]);
+        let data: Vec<f32> = (0..b * 3 * per).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        let fused = Tensor::f32(&[b, 3, n, dim], data.clone()).unwrap();
+        let mut out = vec![0.0f32; b * per];
+
+        // Serial per-sequence path: one warm workspace, one example at a
+        // time (what the backend did before batched dispatch).
+        let rs = bench_for(&format!("serial  b={b}"), 1, budget, || {
+            for i in 0..b {
+                let ex = &data[i * 3 * per..(i + 1) * 3 * per];
+                let (q, k, v) = (&ex[..per], &ex[per..2 * per], &ex[2 * per..]);
+                let out_ex = &mut out[i * per..(i + 1) * per];
+                mita_attention_mh(q, k, v, n, heads, dim, &cfg, &mut ws, out_ex, &mut stats);
+            }
+        });
+        println!("{}  ({:.1} seqs/s)", rs.row(), rs.throughput(b as f64));
+
+        let rb = bench_for(&format!("batched b={b}"), 1, budget, || {
+            backend.run(OP_ATTN_MITA, None, std::slice::from_ref(&fused)).unwrap();
+        });
+        println!("{}  ({:.1} seqs/s)", rb.row(), rb.throughput(b as f64));
+        rows.push((b, rs.mean_secs, rb.mean_secs));
+    }
+
+    println!("\nbatch, serial_ms, batched_ms, batched_speedup");
+    for (b, s, m) in &rows {
+        println!("{b}, {:.3}, {:.3}, x{:.2}", s * 1e3, m * 1e3, s / m);
+    }
+    rows
+}
+
+/// JSON artifact for the CI perf trajectory: per-sequence rows + the
+/// batched-throughput entries.
+fn write_json(
+    quick: bool,
+    seq_rows: &[(usize, MitaKernelConfig, f64, f64)],
+    batch_rows: &[(usize, f64, f64)],
+) {
     let mut json = String::new();
     let _ = writeln!(json, "{{");
     let _ = writeln!(json, "  \"bench\": \"attn_native\",");
-    let _ = writeln!(json, "  \"dim\": {dim},");
-    let _ = writeln!(json, "  \"heads\": {heads},");
+    let _ = writeln!(json, "  \"dim\": {DIM},");
+    let _ = writeln!(json, "  \"heads\": {HEADS},");
     let _ = writeln!(json, "  \"quick\": {quick},");
     let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
     let _ = writeln!(json, "  \"rows\": [");
-    for (i, (n, cfg, d, m)) in rows.iter().enumerate() {
-        let comma = if i + 1 < rows.len() { "," } else { "" };
+    for (i, (n, cfg, d, m)) in seq_rows.iter().enumerate() {
+        let comma = if i + 1 < seq_rows.len() { "," } else { "" };
         let _ = writeln!(
             json,
             "    {{\"n\": {n}, \"m\": {}, \"k\": {}, \"dense_ms\": {:.4}, \"mita_ms\": {:.4}, \
@@ -85,6 +162,21 @@ fn native_sweep(quick: bool) {
             d * 1e3,
             m * 1e3,
             d / m
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"batched\": [");
+    for (i, (b, s, m)) in batch_rows.iter().enumerate() {
+        let comma = if i + 1 < batch_rows.len() { "," } else { "" };
+        let (s_tp, b_tp) = (*b as f64 / s, *b as f64 / m);
+        let _ = writeln!(
+            json,
+            "    {{\"batch\": {b}, \"n\": {BATCH_N}, \"serial_ms\": {:.4}, \"batched_ms\": {:.4}, \
+             \"serial_seqs_per_s\": {s_tp:.2}, \"batched_seqs_per_s\": {b_tp:.2}, \
+             \"speedup\": {:.3}}}{comma}",
+            s * 1e3,
+            m * 1e3,
+            s / m
         );
     }
     let _ = writeln!(json, "  ]");

@@ -168,6 +168,106 @@ mod tests {
     }
 
     #[test]
+    fn prop_timeout_flush_edge_cases() {
+        use crate::util::prop::run_prop;
+        run_prop(150, |g| {
+            let max_batch = g.usize_in(1, 6);
+            let wait_ms = g.usize_in(0, 10) as u64;
+            let max_wait = Duration::from_millis(wait_ms);
+            let mut b: Batcher<usize> = Batcher::new(BatchPolicy { max_batch, max_wait });
+            let t0 = Instant::now();
+
+            // Empty queue: wait with no deadline hint, at any time.
+            assert_eq!(b.poll(t0), Flush::Wait(None));
+            assert_eq!(b.poll(t0 + Duration::from_secs(60)), Flush::Wait(None));
+
+            // Enqueue with monotone arrival times.
+            let qlen = g.usize_in(1, 12);
+            let mut now = t0;
+            let mut first_enq = None;
+            for i in 0..qlen {
+                now += Duration::from_millis(g.usize_in(0, 3) as u64);
+                b.push(i, now);
+                first_enq.get_or_insert(now);
+            }
+            let first_enq = first_enq.unwrap();
+
+            if qlen >= max_batch {
+                // Demand flush wins regardless of time.
+                assert_eq!(b.poll(first_enq), Flush::Take(max_batch));
+            } else {
+                // Exactly at the deadline: flush whatever is queued.
+                assert_eq!(b.poll(first_enq + max_wait), Flush::Take(qlen));
+                // Past the deadline too.
+                let late = first_enq + max_wait + Duration::from_millis(1);
+                assert_eq!(b.poll(late), Flush::Take(qlen));
+                if wait_ms > 0 {
+                    // Just before: bounded wait hint, never a flush.
+                    let just_before = first_enq + max_wait - Duration::from_millis(1);
+                    match b.poll(just_before) {
+                        Flush::Wait(Some(hint)) => assert!(hint <= Duration::from_millis(1)),
+                        other => panic!("expected bounded wait before deadline, got {other:?}"),
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_bounded_admission_conserves_requests() {
+        use crate::util::prop::run_prop;
+        // Simulates serve_loop's queue_cap backpressure: at most queue_cap
+        // requests may sit in the batcher; everything admitted must be
+        // emitted exactly once, in FIFO order, with pad slots accounted.
+        run_prop(150, |g| {
+            let max_batch = g.usize_in(1, 5);
+            let max_wait = Duration::from_millis(g.usize_in(0, 4) as u64);
+            let queue_cap = g.usize_in(1, 8);
+            let total = g.usize_in(1, 40);
+            let mut b: Batcher<usize> = Batcher::new(BatchPolicy { max_batch, max_wait });
+            let mut now = Instant::now();
+            let (mut admitted, mut rejected) = (0usize, 0usize);
+            let mut emitted: Vec<usize> = Vec::new();
+
+            for i in 0..total {
+                now += Duration::from_millis(g.usize_in(0, 2) as u64);
+                if b.len() >= queue_cap {
+                    rejected += 1;
+                } else {
+                    b.push(i, now);
+                    admitted += 1;
+                }
+                assert!(b.len() <= queue_cap, "backpressure bound violated");
+                if let Flush::Take(k) = b.poll(now) {
+                    assert!(k >= 1 && k == b.len().min(max_batch), "bad take size {k}");
+                    emitted.extend(b.take(k).into_iter().map(|p| p.payload));
+                }
+            }
+            // Drain: once time passes the deadline a non-empty queue must
+            // always flush (never deadlock on Wait).
+            while !b.is_empty() {
+                now += max_wait + Duration::from_millis(1);
+                match b.poll(now) {
+                    Flush::Take(k) => emitted.extend(b.take(k).into_iter().map(|p| p.payload)),
+                    Flush::Wait(_) => panic!("non-empty batcher refused to flush past deadline"),
+                }
+            }
+
+            assert_eq!(admitted + rejected, total);
+            assert_eq!(emitted.len(), admitted, "requests lost or duplicated");
+            assert!(emitted.windows(2).all(|w| w[0] < w[1]), "FIFO order violated");
+            assert_eq!(b.items_emitted as usize, admitted);
+            let frac = b.pad_fraction();
+            assert!((0.0..1.0).contains(&frac) || b.batches_emitted == 0);
+            assert_eq!(
+                b.items_emitted + b.padded_slots,
+                b.batches_emitted * max_batch as u64,
+                "pad accounting must cover every executed slot"
+            );
+        });
+    }
+
+    #[test]
     fn overfull_queue_emits_max_batch_only() {
         let mut b = Batcher::new(policy(2, 5));
         let now = Instant::now();

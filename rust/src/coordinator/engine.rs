@@ -17,7 +17,18 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use crate::runtime::{BackendSpec, Tensor};
+use crate::kernels::MitaStats;
+use crate::runtime::{BackendSpec, RuntimeStats, Tensor};
+
+/// Combined backend counters returned by [`EngineHandle::backend_stats`].
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Compile/execute counters.
+    pub runtime: RuntimeStats,
+    /// Native MiTA routing statistics, when the backend runs those
+    /// kernels (None on artifact backends).
+    pub mita: Option<MitaStats>,
+}
 
 /// Requests served by the engine thread.
 pub enum EngineRequest {
@@ -40,6 +51,11 @@ pub enum EngineRequest {
     },
     /// Create a binding from host tensors (e.g. a loaded checkpoint).
     BindTensors { key: String, params: Vec<Tensor>, reply: mpsc::Sender<Result<()>> },
+    /// Snapshot the backend's execution + routing counters. With `reset`,
+    /// the routing accumulator is cleared after the snapshot, so
+    /// successive resetting reads partition the stats into disjoint
+    /// per-interval reports.
+    Stats { reset: bool, reply: mpsc::Sender<Result<EngineStats>> },
     /// Stop the engine loop (makes `shutdown` safe even while other
     /// EngineHandle clones are still alive).
     Shutdown,
@@ -111,6 +127,23 @@ impl EngineHandle {
         let (reply, rx) = mpsc::channel();
         self.submit(EngineRequest::BindTensors { key: key.into(), params, reply }, rx)
     }
+
+    /// Snapshot the backend's execution counters and (for the native
+    /// backend) accumulated MiTA routing statistics.
+    pub fn backend_stats(&self) -> Result<EngineStats> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(EngineRequest::Stats { reset: false, reply }, rx)
+    }
+
+    /// Like [`EngineHandle::backend_stats`], but clears the routing
+    /// accumulator after the snapshot — the serving loop brackets a run
+    /// with two of these so its report covers exactly that run (peaks
+    /// like the load-imbalance maximum cannot be deltaed out of a
+    /// cumulative snapshot).
+    pub fn take_backend_stats(&self) -> Result<EngineStats> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(EngineRequest::Stats { reset: true, reply }, rx)
+    }
 }
 
 /// The running engine (join handle + submission side).
@@ -170,6 +203,15 @@ impl Engine {
                         }
                         EngineRequest::BindTensors { key, params, reply } => {
                             let _ = reply.send(backend.bind_tensors(&key, params));
+                        }
+                        EngineRequest::Stats { reset, reply } => {
+                            let mita = if reset {
+                                backend.take_mita_stats()
+                            } else {
+                                backend.mita_stats()
+                            };
+                            let stats = EngineStats { runtime: backend.stats(), mita };
+                            let _ = reply.send(Ok(stats));
                         }
                     }
                 }

@@ -19,6 +19,6 @@ pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
-pub use engine::{Engine, EngineHandle};
+pub use engine::{Engine, EngineHandle, EngineStats};
 pub use server::{serve, serve_native, NativeServeConfig, ServeConfig, ServeReport};
 pub use trainer::{eval_checkpoint, EvalResult, Trainer};

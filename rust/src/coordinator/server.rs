@@ -16,6 +16,7 @@
 //! Std threads + channels (no async runtime in the vendored crate set);
 //! the generator runs on its own thread, the batching loop on the caller's.
 
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -28,6 +29,7 @@ use crate::coordinator::engine::EngineHandle;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::data::rng::Rng;
 use crate::data::{BatchSource, Split};
+use crate::kernels::MitaStats;
 use crate::runtime::{BundleSpec, Tensor};
 
 /// Serving workload description (PJRT bundle path).
@@ -79,11 +81,15 @@ pub struct ServeReport {
     pub p99_ms: f64,
     pub batches: u64,
     pub pad_fraction: f64,
+    /// MiTA routing statistics accumulated over this run (native backend
+    /// only; `None` on artifact backends, `queries == 0` when the run
+    /// executed no MiTA kernels).
+    pub mita: Option<MitaStats>,
 }
 
 impl ServeReport {
     pub fn row(&self) -> String {
-        format!(
+        let mut row = format!(
             "{:24} reqs={:5} rej={:4} thru={:8.1}/s mean={:7.2}ms p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms batches={:5} pad={:4.1}%",
             self.bundle,
             self.completed,
@@ -95,7 +101,20 @@ impl ServeReport {
             self.p99_ms,
             self.batches,
             self.pad_fraction * 100.0
-        )
+        );
+        if let Some(m) = &self.mita {
+            if m.queries > 0 {
+                // ovf: fraction of queries served by the capacity-overflow
+                // fallback; imb: peak expert load vs perfect balance.
+                let _ = write!(
+                    row,
+                    " ovf={:4.1}% imb={:4.2}",
+                    m.overflow_fraction() * 100.0,
+                    m.load_imbalance()
+                );
+            }
+        }
+        row
     }
 }
 
@@ -157,6 +176,11 @@ struct LoopSpec<'a> {
     op: &'a str,
     /// Parameter-binding key, if the op needs bound weights.
     binding: Option<&'a str>,
+    /// Append a valid-rows marker tensor to each batch so the backend
+    /// short-circuits padding rows (native backend only; compiled PJRT
+    /// artifacts take exactly one input and always compute the full
+    /// padded batch).
+    mark_valid: bool,
     requests: usize,
     rate: f64,
     queue_cap: usize,
@@ -168,6 +192,11 @@ struct LoopSpec<'a> {
 fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Result<ServeReport> {
     anyhow::ensure!(!pool.is_empty(), "request pool is empty");
     let b = spec.policy.max_batch;
+
+    // Drain any routing stats a previous run left behind, so the closing
+    // take below covers exactly this run (peaks such as the
+    // load-imbalance maximum cannot be deltaed from cumulative counters).
+    let _ = engine.take_backend_stats();
 
     // Bounded admission queue: a channel plus an explicit depth counter
     // (std channels have no try_send-with-capacity; the counter enforces
@@ -219,10 +248,16 @@ fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Re
                     .iter()
                     .map(|p| pool[p.payload.example as usize % pool.len()].clone())
                     .collect();
-                let batch = pack_batch(&examples, b)?;
+                let mut inputs = vec![pack_batch(&examples, b)?];
+                if spec.mark_valid {
+                    // Padding rows are marked so the backend never
+                    // computes them (they also never reach a response:
+                    // only `taken` requests are accounted below).
+                    inputs.push(Tensor::i32(&[1], vec![examples.len() as i32])?);
+                }
                 let outs = match spec.binding {
-                    Some(key) => engine.run_bound(spec.op, key, vec![batch])?,
-                    None => engine.run(spec.op, vec![batch])?,
+                    Some(key) => engine.run_bound(spec.op, key, inputs)?,
+                    None => engine.run(spec.op, inputs)?,
                 };
                 anyhow::ensure!(!outs.is_empty(), "op {} returned no outputs", spec.op);
                 let finish = Instant::now();
@@ -249,6 +284,7 @@ fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Re
 
     generator.join().map_err(|_| anyhow::anyhow!("generator thread panicked"))?;
     let elapsed = t0.elapsed().as_secs_f64();
+    let mita = engine.take_backend_stats().ok().and_then(|s| s.mita);
     Ok(ServeReport {
         bundle: spec.label.to_string(),
         completed,
@@ -261,6 +297,7 @@ fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Re
         p99_ms: hist.percentile(99.0) * 1e3,
         batches: batcher.batches_emitted,
         pad_fraction: batcher.pad_fraction(),
+        mita,
     })
 }
 
@@ -298,6 +335,7 @@ pub fn serve(
         label: bundle_name,
         op: &predict,
         binding: Some(&cfg.binding),
+        mark_valid: false, // compiled artifacts take exactly one input
         requests: cfg.requests,
         rate: cfg.rate,
         queue_cap: cfg.queue_cap,
@@ -308,6 +346,10 @@ pub fn serve(
 
 /// Run the serving benchmark against the engine's native attention backend
 /// (spawn the engine with [`BackendSpec::Native`]; no artifacts needed).
+/// Every dispatched batch carries a valid-rows marker, so the padding the
+/// batch policy accounts for (`pad=` in the report row) is never actually
+/// computed by the backend, and the report's `mita` stats (`ovf=`/`imb=`
+/// in the row) cover exactly this run's real requests.
 ///
 /// [`BackendSpec::Native`]: crate::runtime::BackendSpec::Native
 pub fn serve_native(engine: &EngineHandle, cfg: &NativeServeConfig) -> Result<ServeReport> {
@@ -328,6 +370,7 @@ pub fn serve_native(engine: &EngineHandle, cfg: &NativeServeConfig) -> Result<Se
         label: &label,
         op: &cfg.op,
         binding: None,
+        mark_valid: true, // native backend skips padded batch rows
         requests: cfg.requests,
         rate: cfg.rate,
         queue_cap: cfg.queue_cap,

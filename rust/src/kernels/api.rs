@@ -1,0 +1,632 @@
+//! The uniform kernel interface of the native execution stack.
+//!
+//! Everything the runtime executes reduces to one primitive —
+//! [`AttentionKernel`]: *solve a single-head attention problem over
+//! contiguous row-major `[n, d]` Q/K/V, scratch from a [`Workspace`],
+//! output into `[n, d]`*. Around it:
+//!
+//! - [`KernelRegistry`]: name-keyed kernel lookup, replacing string-matched
+//!   dispatch inside the backend. `attn.mita` and `attn.dense` are the
+//!   default entries; new kernels register without touching the backend.
+//! - [`AttnProblem`]: shape descriptor of a batched multi-head problem
+//!   (batch, heads, n, dim, fused-vs-separate layout, valid rows).
+//! - [`run_batched`]: decomposes a problem into (example × head) work
+//!   items scheduled across [`crate::kernels::par`], each on a pooled
+//!   per-thread [`Workspace`], then scatters head results back to
+//!   model-dim layout. Padding rows are zeroed, never computed.
+//! - [`MitaStats`]: routing statistics accumulated across kernel calls and
+//!   surfaced through the backend into serve reports.
+
+use crate::kernels::dense::dense_attention;
+use crate::kernels::linalg::{gather_head, scatter_head};
+use crate::kernels::mita::{mita_attention, MitaKernelConfig};
+use crate::kernels::par::par_chunks_mut;
+use crate::kernels::workspace::{Workspace, WorkspacePool};
+
+/// Registry / op name of the MiTA kernel.
+pub const OP_ATTN_MITA: &str = "attn.mita";
+/// Registry / op name of the dense-baseline kernel.
+pub const OP_ATTN_DENSE: &str = "attn.dense";
+
+// ---------------------------------------------------------------------------
+// Routing statistics
+// ---------------------------------------------------------------------------
+
+/// Routing / packing statistics accumulated across MiTA kernel calls.
+///
+/// A fresh `MitaStats::default()` passed to one kernel call records exactly
+/// that call; the batched executor merges per-thread accumulators into one
+/// per-backend total, and the serve loop brackets a run with resetting
+/// snapshots to get per-run numbers. Kernels without routing (dense) leave
+/// it untouched, so `queries == 0` means "no MiTA work recorded".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MitaStats {
+    /// Kernel invocations recorded (one per (example × head) work item).
+    pub calls: usize,
+    /// Total queries routed.
+    pub queries: usize,
+    /// Queries that exceeded their expert's capacity and were served by
+    /// the exact unpacked fallback pass.
+    pub overflow: usize,
+    /// Query-slot capacity per expert of the most recent call.
+    pub cap: usize,
+    /// Worst single-call routing skew seen so far, in thousandths:
+    /// `max_count · m / n` of the most skewed call (1000 = perfectly
+    /// balanced). Kept as an integer so the struct stays `Eq`.
+    pub peak_imbalance_milli: usize,
+    /// Queries routed to each expert (element-wise sum across calls).
+    pub expert_counts: Vec<usize>,
+}
+
+impl MitaStats {
+    /// Record one kernel call's routing outcome.
+    pub fn record(&mut self, cap: usize, overflow: usize, counts: &[usize]) {
+        let routed: usize = counts.iter().sum();
+        self.calls += 1;
+        self.queries += routed;
+        self.overflow += overflow;
+        self.cap = cap;
+        if routed > 0 {
+            let max = counts.iter().copied().max().unwrap_or(0);
+            let imbalance = max * counts.len() * 1000 / routed;
+            self.peak_imbalance_milli = self.peak_imbalance_milli.max(imbalance);
+        }
+        if self.expert_counts.len() < counts.len() {
+            self.expert_counts.resize(counts.len(), 0);
+        }
+        for (acc, &c) in self.expert_counts.iter_mut().zip(counts) {
+            *acc += c;
+        }
+    }
+
+    /// Fold another accumulator into this one.
+    pub fn merge(&mut self, other: &MitaStats) {
+        self.calls += other.calls;
+        self.queries += other.queries;
+        self.overflow += other.overflow;
+        self.cap = self.cap.max(other.cap);
+        self.peak_imbalance_milli = self.peak_imbalance_milli.max(other.peak_imbalance_milli);
+        if self.expert_counts.len() < other.expert_counts.len() {
+            self.expert_counts.resize(other.expert_counts.len(), 0);
+        }
+        for (acc, &c) in self.expert_counts.iter_mut().zip(&other.expert_counts) {
+            *acc += c;
+        }
+    }
+
+    /// Clear every counter, keeping allocated capacity.
+    pub fn reset(&mut self) {
+        self.calls = 0;
+        self.queries = 0;
+        self.overflow = 0;
+        self.cap = 0;
+        self.peak_imbalance_milli = 0;
+        self.expert_counts.clear();
+    }
+
+    /// Fraction of queries served by the overflow fallback pass.
+    pub fn overflow_fraction(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            self.overflow as f64 / self.queries as f64
+        }
+    }
+
+    /// Worst single-call expert load relative to perfect balance: 1.0
+    /// means every expert received `n / m` in every call; larger values
+    /// mean routing skew. Tracked per call (not on the aggregated counts,
+    /// where opposite skews across heads would average out to "balanced").
+    pub fn load_imbalance(&self) -> f64 {
+        self.peak_imbalance_milli as f64 / 1000.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The kernel trait + registry
+// ---------------------------------------------------------------------------
+
+/// One attention kernel: solves a single-head `[n, d]` problem.
+///
+/// Implementations must give back every workspace buffer they take and be
+/// allocation-free once the workspace is warm — that contract is what lets
+/// the batched executor run thousands of work items without touching the
+/// allocator.
+pub trait AttentionKernel: Send + Sync {
+    /// Registry / op name (e.g. `"attn.mita"`).
+    fn name(&self) -> &'static str;
+
+    /// Compute attention for contiguous row-major `[n, d]` Q/K/V into the
+    /// `[n, d]` output, recording routing stats (kernels without routing
+    /// leave `stats` untouched).
+    #[allow(clippy::too_many_arguments)]
+    fn run(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        stats: &mut MitaStats,
+    );
+}
+
+/// [`AttentionKernel`] over the MiTA forward pass
+/// ([`crate::kernels::mita::mita_attention`]).
+#[derive(Debug, Clone)]
+pub struct MitaKernel {
+    /// Shape-independent MiTA parameters (m, k, capacity policy).
+    pub cfg: MitaKernelConfig,
+}
+
+impl AttentionKernel for MitaKernel {
+    fn name(&self) -> &'static str {
+        OP_ATTN_MITA
+    }
+
+    fn run(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        stats: &mut MitaStats,
+    ) {
+        mita_attention(q, k, v, n, d, &self.cfg, ws, out, stats);
+    }
+}
+
+/// [`AttentionKernel`] over the dense O(N²) baseline
+/// ([`crate::kernels::dense::dense_attention`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DenseKernel;
+
+impl AttentionKernel for DenseKernel {
+    fn name(&self) -> &'static str {
+        OP_ATTN_DENSE
+    }
+
+    fn run(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        _stats: &mut MitaStats,
+    ) {
+        dense_attention(q, k, v, n, d, ws, out);
+    }
+}
+
+/// Name-keyed kernel registry: the backend resolves ops here instead of
+/// string-matching inside `run`.
+#[derive(Default)]
+pub struct KernelRegistry {
+    kernels: Vec<Box<dyn AttentionKernel>>,
+}
+
+impl KernelRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        KernelRegistry::default()
+    }
+
+    /// The standard kernel set: `attn.mita` (with `cfg`) and `attn.dense`.
+    pub fn with_defaults(cfg: MitaKernelConfig) -> Self {
+        let mut registry = KernelRegistry::new();
+        registry.register(Box::new(MitaKernel { cfg }));
+        registry.register(Box::new(DenseKernel));
+        registry
+    }
+
+    /// Add a kernel, replacing any existing entry with the same name.
+    pub fn register(&mut self, kernel: Box<dyn AttentionKernel>) {
+        match self.kernels.iter().position(|k| k.name() == kernel.name()) {
+            Some(i) => self.kernels[i] = kernel,
+            None => self.kernels.push(kernel),
+        }
+    }
+
+    /// Look up a kernel by registry name.
+    pub fn get(&self, name: &str) -> Option<&dyn AttentionKernel> {
+        self.kernels.iter().find(|k| k.name() == name).map(|k| k.as_ref())
+    }
+
+    /// Registered names, in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.kernels.iter().map(|k| k.name()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Problem descriptor + input views
+// ---------------------------------------------------------------------------
+
+/// Layout of the Q/K/V inputs of an [`AttnProblem`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QkvLayout {
+    /// One `[b, 3, n, dim]` buffer with Q/K/V stacked on axis 1.
+    Fused,
+    /// Three `[b, n, dim]` buffers.
+    Separate,
+}
+
+/// Shape descriptor of one batched multi-head attention problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AttnProblem {
+    /// Batch rows present in the buffers (including padding).
+    pub batch: usize,
+    /// Attention heads; `dim` splits into `heads` column blocks.
+    pub heads: usize,
+    /// Sequence length.
+    pub n: usize,
+    /// Model dimension (`heads · head_dim`).
+    pub dim: usize,
+    /// Input layout (fused vs separate Q/K/V).
+    pub layout: QkvLayout,
+    /// Leading batch rows that carry real data; the trailing
+    /// `batch - valid` rows are padding — never computed, never written.
+    pub valid: usize,
+}
+
+impl AttnProblem {
+    /// A problem over `batch` real examples (no padding).
+    pub fn new(batch: usize, heads: usize, n: usize, dim: usize, layout: QkvLayout) -> Self {
+        AttnProblem { batch, heads, n, dim, layout, valid: batch }
+    }
+
+    /// Mark trailing rows as padding: only the first `valid` examples are
+    /// computed.
+    pub fn with_valid(mut self, valid: usize) -> Self {
+        self.valid = valid;
+        self
+    }
+
+    /// Per-head feature dimension.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// (example × head) work items the batched executor schedules.
+    pub fn work_items(&self) -> usize {
+        self.valid * self.heads
+    }
+
+    /// Floats per example per tensor (`n · dim`).
+    pub fn example_len(&self) -> usize {
+        self.n * self.dim
+    }
+
+    /// Structural validity: heads divide dim, valid rows within the batch.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.heads == 0 || self.dim % self.heads != 0 {
+            return Err(format!("model dim {} not divisible by {} heads", self.dim, self.heads));
+        }
+        if self.valid > self.batch {
+            return Err(format!("valid rows {} exceed batch {}", self.valid, self.batch));
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed view of a problem's Q/K/V input buffers.
+#[derive(Debug, Clone, Copy)]
+pub enum QkvData<'a> {
+    /// `[b, 3, n, dim]` with Q/K/V stacked on axis 1.
+    Fused(&'a [f32]),
+    /// Three `[b, n, dim]` buffers.
+    Separate {
+        /// Queries.
+        q: &'a [f32],
+        /// Keys.
+        k: &'a [f32],
+        /// Values.
+        v: &'a [f32],
+    },
+}
+
+impl<'a> QkvData<'a> {
+    /// The layout this view carries.
+    pub fn layout(&self) -> QkvLayout {
+        match self {
+            QkvData::Fused(_) => QkvLayout::Fused,
+            QkvData::Separate { .. } => QkvLayout::Separate,
+        }
+    }
+
+    /// Check buffer lengths and layout against a problem descriptor.
+    pub fn check(&self, prob: &AttnProblem) -> Result<(), String> {
+        if self.layout() != prob.layout {
+            return Err(format!(
+                "data layout {:?} != problem layout {:?}",
+                self.layout(),
+                prob.layout
+            ));
+        }
+        let per = prob.example_len();
+        match self {
+            QkvData::Fused(data) => {
+                if data.len() != prob.batch * 3 * per {
+                    return Err(format!(
+                        "fused buffer holds {} floats, want {} for [b={}, 3, n={}, dim={}]",
+                        data.len(),
+                        prob.batch * 3 * per,
+                        prob.batch,
+                        prob.n,
+                        prob.dim
+                    ));
+                }
+            }
+            QkvData::Separate { q, k, v } => {
+                for (name, buf) in [("q", q), ("k", k), ("v", v)] {
+                    if buf.len() != prob.batch * per {
+                        return Err(format!(
+                            "{name} holds {} floats, want {} for [b={}, n={}, dim={}]",
+                            buf.len(),
+                            prob.batch * per,
+                            prob.batch,
+                            prob.n,
+                            prob.dim
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Contiguous (q, k, v) slices of example `i`, each `n·dim` floats.
+    pub fn example(&self, prob: &AttnProblem, i: usize) -> (&'a [f32], &'a [f32], &'a [f32]) {
+        let per = prob.example_len();
+        match *self {
+            QkvData::Fused(data) => {
+                let block = &data[i * 3 * per..(i + 1) * 3 * per];
+                (&block[..per], &block[per..2 * per], &block[2 * per..])
+            }
+            QkvData::Separate { q, k, v } => (
+                &q[i * per..(i + 1) * per],
+                &k[i * per..(i + 1) * per],
+                &v[i * per..(i + 1) * per],
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched parallel execution
+// ---------------------------------------------------------------------------
+
+/// Execute `prob` with `kernel` by decomposing it into (example × head)
+/// work items run in parallel, each on a pooled per-thread workspace.
+///
+/// `headout` is a caller-owned staging buffer (head-major `[valid·heads,
+/// n, head_dim]`) reused across calls; `out` receives `[batch, n, dim]`
+/// with padding rows (`valid..batch`) zero-filled and never computed.
+/// Kernel routing stats accumulate into `stats`.
+///
+/// Parallelism granularity is deliberately the work item: the kernels
+/// themselves are serial (that is what makes them zero-alloc over one
+/// workspace), so a `valid·heads = 1` problem runs on one thread. Serving
+/// throughput comes from batching — the batcher packs requests precisely
+/// so this fan-out has items to spread across cores.
+///
+/// The pool must not be shared with another concurrent `run_batched` call
+/// while stats are being collected (the backend serializes runs).
+#[allow(clippy::too_many_arguments)]
+pub fn run_batched(
+    kernel: &dyn AttentionKernel,
+    prob: &AttnProblem,
+    data: &QkvData<'_>,
+    pool: &WorkspacePool,
+    headout: &mut Vec<f32>,
+    out: &mut [f32],
+    stats: &mut MitaStats,
+) {
+    if let Err(e) = prob.validate() {
+        panic!("invalid attention problem: {e}");
+    }
+    if let Err(e) = data.check(prob) {
+        panic!("attention inputs do not match problem: {e}");
+    }
+    let (heads, n, dim) = (prob.heads, prob.n, prob.dim);
+    let (dh, per) = (prob.head_dim(), prob.example_len());
+    assert_eq!(out.len(), prob.batch * per, "out must be [batch, n, dim]");
+
+    // Padding rows are zeroed up front and skipped below.
+    out[prob.valid * per..].fill(0.0);
+    if prob.valid == 0 || per == 0 {
+        return;
+    }
+
+    // Single-head fast path: each example's Q/K/V is already contiguous
+    // per head, so kernels write straight into the output — no staging.
+    if heads == 1 {
+        par_chunks_mut(&mut out[..prob.valid * per], per, |i, out_ex| {
+            let (q, k, v) = data.example(prob, i);
+            let mut pooled = pool.acquire();
+            let (ws, wstats) = pooled.parts();
+            kernel.run(q, k, v, n, dim, ws, out_ex, wstats);
+        });
+        pool.collect_stats(stats);
+        return;
+    }
+
+    // General path: gather each head into contiguous [n, dh] slices,
+    // solve every (example, head) as an independent work item, then
+    // scatter head results back to model-dim layout.
+    // No element of the staging buffer needs initialization — every chunk
+    // row is overwritten by its kernel run; the zero fill-value below is
+    // only resize's required argument (it memsets growth once per
+    // high-water mark, never in steady state). Do not rely on zeroing.
+    let hd = n * dh;
+    headout.resize(prob.work_items() * hd, 0.0);
+    par_chunks_mut(headout.as_mut_slice(), hd, |w, head_out| {
+        let (i, h) = (w / heads, w % heads);
+        let (q, k, v) = data.example(prob, i);
+        let mut pooled = pool.acquire();
+        let (ws, wstats) = pooled.parts();
+        let mut qh = ws.take_f32("item.q", hd);
+        let mut kh = ws.take_f32("item.k", hd);
+        let mut vh = ws.take_f32("item.v", hd);
+        gather_head(q, n, dim, dh, h, &mut qh);
+        gather_head(k, n, dim, dh, h, &mut kh);
+        gather_head(v, n, dim, dh, h, &mut vh);
+        kernel.run(&qh, &kh, &vh, n, dh, ws, head_out, wstats);
+        ws.give_f32("item.q", qh);
+        ws.give_f32("item.k", kh);
+        ws.give_f32("item.v", vh);
+    });
+    pool.collect_stats(stats);
+
+    let staged: &[f32] = headout.as_slice();
+    par_chunks_mut(&mut out[..prob.valid * per], per, |i, out_ex| {
+        for h in 0..heads {
+            let w = i * heads + h;
+            scatter_head(&staged[w * hd..(w + 1) * hd], n, dim, dh, h, out_ex);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernels::dense::dense_attention_mh;
+    use crate::kernels::mita::mita_attention_mh;
+
+    #[test]
+    fn registry_lookup_replace_and_names() {
+        let cfg = MitaKernelConfig::default();
+        let mut r = KernelRegistry::with_defaults(cfg);
+        assert_eq!(r.names(), vec![OP_ATTN_MITA, OP_ATTN_DENSE]);
+        assert!(r.get(OP_ATTN_MITA).is_some());
+        assert!(r.get("predict").is_none());
+
+        // Re-registering a name replaces in place (no duplicate entries).
+        let custom = MitaKernelConfig { m: 2, k: 2, cap_factor: 1, block_q: 1 };
+        r.register(Box::new(MitaKernel { cfg: custom }));
+        assert_eq!(r.names().len(), 2);
+    }
+
+    #[test]
+    fn problem_validation() {
+        let p = AttnProblem::new(4, 3, 8, 16, QkvLayout::Fused);
+        assert!(p.validate().is_err()); // 16 % 3 != 0
+        let p = AttnProblem::new(4, 2, 8, 16, QkvLayout::Fused);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.head_dim(), 8);
+        assert_eq!(p.work_items(), 8);
+        assert!(p.with_valid(5).validate().is_err()); // valid > batch
+        assert!(p.with_valid(2).validate().is_ok());
+    }
+
+    #[test]
+    fn stats_record_merge_reset() {
+        let mut a = MitaStats::default();
+        a.record(8, 2, &[5, 3]);
+        a.record(8, 0, &[4, 4]);
+        assert_eq!(a.calls, 2);
+        assert_eq!(a.queries, 16);
+        assert_eq!(a.overflow, 2);
+        assert_eq!(a.expert_counts, vec![9, 7]);
+        assert!((a.overflow_fraction() - 0.125).abs() < 1e-12);
+        // Peak per-call skew: the [5, 3] call (5·2/8 = 1.25), not the
+        // balanced-looking aggregate [9, 7].
+        assert!((a.load_imbalance() - 1.25).abs() < 1e-12);
+
+        let mut b = MitaStats::default();
+        b.record(8, 1, &[2, 0]); // fully skewed call: 2·2/2 = 2.0
+        assert!((b.load_imbalance() - 2.0).abs() < 1e-12);
+
+        let mut m = MitaStats::default();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.queries, 18);
+        assert_eq!(m.expert_counts, vec![11, 7]);
+        assert!((m.load_imbalance() - 2.0).abs() < 1e-12, "merge keeps the worst peak");
+        m.reset();
+        assert_eq!(m, MitaStats::default());
+    }
+
+    #[test]
+    fn run_batched_matches_per_sequence_mh() {
+        let (b, heads, n, dim) = (3usize, 2usize, 20usize, 8usize);
+        let per = n * dim;
+        let mut rng = Rng::new(17);
+        let data: Vec<f32> = (0..b * 3 * per).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+        let cfg = MitaKernelConfig { m: 4, k: 8, cap_factor: 2, block_q: 4 };
+
+        let prob = AttnProblem::new(b, heads, n, dim, QkvLayout::Fused);
+        let view = QkvData::Fused(&data);
+        let pool = WorkspacePool::new();
+        let mut headout = Vec::new();
+        let mut stats = MitaStats::default();
+        let mut got = vec![0.0f32; b * per];
+        run_batched(&MitaKernel { cfg }, &prob, &view, &pool, &mut headout, &mut got, &mut stats);
+
+        let mut ws = Workspace::new();
+        let mut want = vec![0.0f32; b * per];
+        let mut ref_stats = MitaStats::default();
+        for i in 0..b {
+            let (q, k, v) = view.example(&prob, i);
+            mita_attention_mh(
+                q,
+                k,
+                v,
+                n,
+                heads,
+                dim,
+                &cfg,
+                &mut ws,
+                &mut want[i * per..(i + 1) * per],
+                &mut ref_stats,
+            );
+        }
+        assert_eq!(got, want, "batched decomposition must be bit-identical");
+        assert_eq!(stats.calls, b * heads);
+        assert_eq!(stats.queries, b * heads * n);
+        assert_eq!(stats.queries, ref_stats.queries);
+        assert_eq!(stats.overflow, ref_stats.overflow);
+
+        // Dense kernel through the same executor.
+        let mut got_d = vec![0.0f32; b * per];
+        run_batched(&DenseKernel, &prob, &view, &pool, &mut headout, &mut got_d, &mut stats);
+        let mut want_d = vec![0.0f32; b * per];
+        for i in 0..b {
+            let (q, k, v) = view.example(&prob, i);
+            let out_ex = &mut want_d[i * per..(i + 1) * per];
+            dense_attention_mh(q, k, v, n, heads, dim, &mut ws, out_ex);
+        }
+        assert_eq!(got_d, want_d);
+    }
+
+    #[test]
+    fn run_batched_skips_padding_rows() {
+        let (b, valid, heads, n, dim) = (4usize, 2usize, 2usize, 12usize, 8usize);
+        let per = n * dim;
+        let mut rng = Rng::new(23);
+        let data: Vec<f32> = (0..b * 3 * per).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let prob = AttnProblem::new(b, heads, n, dim, QkvLayout::Fused).with_valid(valid);
+        let view = QkvData::Fused(&data);
+        let pool = WorkspacePool::new();
+        let mut headout = Vec::new();
+        let mut stats = MitaStats::default();
+        let mut out = vec![f32::NAN; b * per]; // pads must be overwritten to 0
+        let cfg = MitaKernelConfig { m: 3, k: 6, cap_factor: 2, block_q: 4 };
+        let kernel = MitaKernel { cfg };
+        run_batched(&kernel, &prob, &view, &pool, &mut headout, &mut out, &mut stats);
+
+        assert!(out[..valid * per].iter().all(|x| x.is_finite()));
+        assert!(out[valid * per..].iter().all(|&x| x == 0.0), "pad rows must stay zero");
+        assert_eq!(stats.calls, valid * heads, "pad rows must never be computed");
+        assert_eq!(stats.queries, valid * heads * n);
+    }
+}

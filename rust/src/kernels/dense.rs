@@ -1,18 +1,28 @@
 //! Dense scaled-dot-product softmax attention — the O(N²·d) baseline the
 //! native MiTA path is checked against and benchmarked over. Blocked over
-//! query rows with the row block parallelized across threads.
+//! query rows with one reusable score buffer from the [`Workspace`], so
+//! steady-state calls are allocation-free; parallelism lives one level up
+//! in the batched (example × head) executor of [`crate::kernels::api`].
 
 use crate::kernels::linalg::{
     gather_head, matmul_nt, scale_in_place, scatter_head, softmax_rows, weighted_row_sum,
 };
-use crate::kernels::par::par_chunks_mut;
+use crate::kernels::workspace::Workspace;
 
-/// Query rows per task; the per-task score scratch is `QB × n` floats.
+/// Query rows per block; the score scratch is `min(QB, n) × n` floats.
 const QB: usize = 32;
 
 /// Single-head dense attention: `out = softmax(Q Kᵀ / √d) V` for row-major
-/// `[n, d]` inputs.
-pub fn dense_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, out: &mut [f32]) {
+/// `[n, d]` inputs, scratch from `ws`.
+pub fn dense_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    ws: &mut Workspace,
+    out: &mut [f32],
+) {
     assert_eq!(q.len(), n * d, "q must be [n, d]");
     assert_eq!(k.len(), n * d, "k must be [n, d]");
     assert_eq!(v.len(), n * d, "v must be [n, d]");
@@ -21,21 +31,23 @@ pub fn dense_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize, out:
         return;
     }
     let scale = 1.0 / (d as f32).sqrt();
-    par_chunks_mut(out, QB * d, |blk, out_blk| {
-        let r0 = blk * QB;
-        let rows = out_blk.len() / d;
-        let mut s = vec![0.0f32; rows * n];
-        matmul_nt(&q[r0 * d..(r0 + rows) * d], k, rows, n, d, &mut s);
-        scale_in_place(&mut s, scale);
-        softmax_rows(&mut s, rows, n);
-        for (r, orow) in out_blk.chunks_exact_mut(d).enumerate() {
-            weighted_row_sum(&s[r * n..(r + 1) * n], v, d, orow);
+    let mut s = ws.take_f32("dense.scores", QB.min(n) * n);
+    for r0 in (0..n).step_by(QB) {
+        let rows = QB.min(n - r0);
+        let sblk = &mut s[..rows * n];
+        matmul_nt(&q[r0 * d..(r0 + rows) * d], k, rows, n, d, sblk);
+        scale_in_place(sblk, scale);
+        softmax_rows(sblk, rows, n);
+        for (r, orow) in out[r0 * d..(r0 + rows) * d].chunks_exact_mut(d).enumerate() {
+            weighted_row_sum(&sblk[r * n..(r + 1) * n], v, d, orow);
         }
-    });
+    }
+    ws.give_f32("dense.scores", s);
 }
 
 /// Multi-head dense attention over model-dim layout: `[n, dim]` inputs
 /// where head `h` owns columns `[h·dh, (h+1)·dh)`, `dim = heads · dh`.
+#[allow(clippy::too_many_arguments)]
 pub fn dense_attention_mh(
     q: &[f32],
     k: &[f32],
@@ -43,24 +55,30 @@ pub fn dense_attention_mh(
     n: usize,
     heads: usize,
     dim: usize,
+    ws: &mut Workspace,
     out: &mut [f32],
 ) {
     assert!(heads >= 1 && dim % heads == 0, "dim {dim} must divide into {heads} heads");
+    assert_eq!(out.len(), n * dim, "out must be [n, dim]");
     if n == 0 || dim == 0 {
         return;
     }
     let dh = dim / heads;
-    let mut qh = vec![0.0f32; n * dh];
-    let mut kh = vec![0.0f32; n * dh];
-    let mut vh = vec![0.0f32; n * dh];
-    let mut oh = vec![0.0f32; n * dh];
+    let mut qh = ws.take_f32("mh.q", n * dh);
+    let mut kh = ws.take_f32("mh.k", n * dh);
+    let mut vh = ws.take_f32("mh.v", n * dh);
+    let mut oh = ws.take_f32("mh.out", n * dh);
     for h in 0..heads {
         gather_head(q, n, dim, dh, h, &mut qh);
         gather_head(k, n, dim, dh, h, &mut kh);
         gather_head(v, n, dim, dh, h, &mut vh);
-        dense_attention(&qh, &kh, &vh, n, dh, &mut oh);
+        dense_attention(&qh, &kh, &vh, n, dh, ws, &mut oh);
         scatter_head(&oh, n, dim, dh, h, out);
     }
+    ws.give_f32("mh.q", qh);
+    ws.give_f32("mh.k", kh);
+    ws.give_f32("mh.v", vh);
+    ws.give_f32("mh.out", oh);
 }
 
 #[cfg(test)]
@@ -95,12 +113,13 @@ mod tests {
     #[test]
     fn matches_f64_reference() {
         let mut rng = Rng::new(3);
+        let mut ws = Workspace::new();
         for (n, d) in [(1, 4), (7, 3), (65, 16), (128, 32)] {
             let q: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
             let k: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
             let v: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
             let mut out = vec![0.0f32; n * d];
-            dense_attention(&q, &k, &v, n, d, &mut out);
+            dense_attention(&q, &k, &v, n, d, &mut ws, &mut out);
             for r in [0, n / 2, n - 1] {
                 let want = ref_row(&q[r * d..(r + 1) * d], &k, &v, n, d);
                 for c in 0..d {
@@ -122,8 +141,9 @@ mod tests {
         let q: Vec<f32> = (0..n * d).map(|i| (i % 7) as f32).collect();
         let k = vec![1.0f32; n * d];
         let v: Vec<f32> = (0..n * d).map(|i| i as f32).collect();
+        let mut ws = Workspace::new();
         let mut out = vec![0.0f32; n * d];
-        dense_attention(&q, &k, &v, n, d, &mut out);
+        dense_attention(&q, &k, &v, n, d, &mut ws, &mut out);
         for c in 0..d {
             let mean: f32 = (0..n).map(|j| v[j * d + c]).sum::<f32>() / n as f32;
             assert!((out[c] - mean).abs() < 1e-3, "col {c}: {} vs {mean}", out[c]);
@@ -138,8 +158,9 @@ mod tests {
         let q: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let k: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let v: Vec<f32> = (0..n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut ws = Workspace::new();
         let mut got = vec![0.0f32; n * dim];
-        dense_attention_mh(&q, &k, &v, n, heads, dim, &mut got);
+        dense_attention_mh(&q, &k, &v, n, heads, dim, &mut ws, &mut got);
 
         let mut want = vec![0.0f32; n * dim];
         let mut qh = vec![0.0f32; n * dh];
@@ -150,7 +171,7 @@ mod tests {
             gather_head(&q, n, dim, dh, h, &mut qh);
             gather_head(&k, n, dim, dh, h, &mut kh);
             gather_head(&v, n, dim, dh, h, &mut vh);
-            dense_attention(&qh, &kh, &vh, n, dh, &mut oh);
+            dense_attention(&qh, &kh, &vh, n, dh, &mut ws, &mut oh);
             scatter_head(&oh, n, dim, dh, h, &mut want);
         }
         assert_eq!(got, want);

@@ -8,18 +8,22 @@
 //! pin against kernels/ref.py — so the native path and the Pallas kernel
 //! share one definition of the math.
 //!
-//! Execution layout mirrors the Pallas host wrapper: queries are packed
-//! into `[m, cap, d]` slots ([`routing::pack_by_expert`]), experts compute
-//! in parallel over disjoint packed regions, and results scatter back to
-//! `[n, d]`. Queries that overflow an expert's capacity are not dropped
-//! (unlike the static-shape kernel): they fall back to an unpacked
-//! per-query pass over the same expert KV, so the native output is exact
-//! for every query.
+//! The kernel is deliberately **serial and allocation-free**: every scratch
+//! buffer comes from a [`Workspace`], so repeated calls at one problem
+//! shape never touch the allocator, and parallelism lives one level up —
+//! the batched executor in [`crate::kernels::api`] schedules whole
+//! (example × head) problems across threads with pooled workspaces.
+//! Queries grouped by expert execute together (the expert's gathered KV
+//! stays hot), and queries that overflow an expert's capacity are not
+//! dropped (unlike the static-shape Pallas kernel): they fall back to an
+//! unpacked per-query pass over the same expert KV, so the native output
+//! is exact for every query.
 
+use crate::kernels::api::MitaStats;
 use crate::kernels::linalg::{
     axpy, dot, gather_head, matmul_nt, scale_in_place, scatter_head, softmax_in_place,
 };
-use crate::kernels::par::par_chunks_mut;
+use crate::kernels::workspace::Workspace;
 use crate::mita::routing;
 
 /// Shape-independent MiTA kernel parameters.
@@ -62,18 +66,6 @@ impl MitaKernelConfig {
     }
 }
 
-/// Routing/packing statistics of one forward call.
-#[derive(Debug, Clone)]
-pub struct MitaStats {
-    /// Query slots per expert after rounding.
-    pub cap: usize,
-    /// Queries that exceeded their expert's capacity (served by the
-    /// unpacked fallback pass).
-    pub overflow: usize,
-    /// Queries routed to each expert (before capacity truncation).
-    pub expert_counts: Vec<usize>,
-}
-
 /// One query row attending over an expert's gathered KV (indices into the
 /// original K/V, no copies). `orow` is overwritten.
 #[allow(clippy::too_many_arguments)]
@@ -98,8 +90,11 @@ fn attend_one(
     }
 }
 
-/// Single-head MiTA forward over row-major `[n, d]` Q/K/V. Writes `[n, d]`
-/// into `out` and returns routing statistics.
+/// Single-head MiTA forward over row-major `[n, d]` Q/K/V, scratch from
+/// `ws`. Writes `[n, d]` into `out` and records routing statistics into
+/// `stats` (a fresh `MitaStats::default()` captures exactly this call).
+/// Zero heap allocations once `ws` has served this problem size.
+#[allow(clippy::too_many_arguments)]
 pub fn mita_attention(
     q: &[f32],
     kmat: &[f32],
@@ -107,100 +102,123 @@ pub fn mita_attention(
     n: usize,
     d: usize,
     cfg: &MitaKernelConfig,
+    ws: &mut Workspace,
     out: &mut [f32],
-) -> MitaStats {
+    stats: &mut MitaStats,
+) {
     assert_eq!(q.len(), n * d, "q must be [n, d]");
     assert_eq!(kmat.len(), n * d, "k must be [n, d]");
     assert_eq!(v.len(), n * d, "v must be [n, d]");
     assert_eq!(out.len(), n * d, "out must be [n, d]");
     if n == 0 || d == 0 {
-        return MitaStats { cap: 0, overflow: 0, expert_counts: Vec::new() };
+        return;
     }
     let cfg = cfg.clamped(n);
     let (m, kk) = (cfg.m, cfg.k);
     let scale = 1.0 / (d as f32).sqrt();
 
     // 1. Landmarks: adaptive average pooling over Q (Alg. 1 line 3).
-    let landmarks = routing::landmarks_pool1d(q, n, d, m);
+    let mut landmarks = ws.take_f32("mita.landmarks", m * d);
+    routing::landmarks_pool1d_into(q, n, d, m, &mut landmarks);
 
     // 2. Landmark scores S = K Q̃ᵀ / √d as a blocked matmul ([n, m], same
     //    layout as routing::scores).
-    let mut s = vec![0.0f32; n * m];
+    let mut s = ws.take_f32("mita.scores", n * m);
     matmul_nt(kmat, &landmarks, n, m, d, &mut s);
     scale_in_place(&mut s, scale);
 
     // 3. Deformable experts: top-k activated KV rows per landmark (Eq. 7).
-    let topk = routing::topk_indices(&s, n, m, kk);
+    let mut order = ws.take_usize("mita.order", n);
+    let mut topk = ws.take_usize("mita.topk", m * kk);
+    routing::topk_indices_into(&s, n, m, kk, &mut order, &mut topk);
 
     // 4. Argmax routing via blocked logits Q Q̃ᵀ — the dot products run in
     //    the same order as routing::route_argmax's scalar loop (and ties
     //    keep the lower expert id), so the assignment is bit-identical to
     //    it — then capacity packing (DESIGN.md §6 semantics).
-    let mut route_logits = vec![0.0f32; n * m];
+    let mut route_logits = ws.take_f32("mita.route", n * m);
     matmul_nt(q, &landmarks, n, m, d, &mut route_logits);
-    let assign: Vec<usize> = route_logits
-        .chunks_exact(m)
-        .map(|row| {
-            let mut best = 0usize;
-            for (i, &x) in row.iter().enumerate() {
-                if x > row[best] {
-                    best = i;
-                }
+    let mut assign = ws.take_usize("mita.assign", n);
+    for (a, row) in assign.iter_mut().zip(route_logits.chunks_exact(m)) {
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
             }
-            best
-        })
-        .collect();
+        }
+        *a = best;
+    }
     let cap = routing::capacity(n, m, cfg.cap_factor, cfg.block_q);
-    let pack = routing::pack_by_expert(&assign, m, cap);
-    let mut members: Vec<Vec<usize>> = vec![Vec::new(); m];
-    for (qi, slot) in pack.slot.iter().enumerate() {
-        if let Some(si) = slot {
-            members[si / cap].push(qi); // rank order == arrival order
+    let mut counts = ws.take_usize("mita.counts", m);
+    let mut slot = ws.take_usize("mita.slot", n);
+    let overflow = routing::pack_into(&assign, m, cap, &mut counts, &mut slot);
+
+    // 5. Expert-grouped attention straight into `out`: queries execute in
+    //    (expert, arrival-rank) order so each expert's gathered KV stays
+    //    hot, but every row lands at its own query position — no packed
+    //    intermediate or scatter pass needed in the serial kernel.
+    let mut packed_qi = ws.take_usize("mita.packed_qi", m * cap);
+    for (qi, &sl) in slot.iter().enumerate() {
+        if sl != routing::OVERFLOW {
+            packed_qi[sl] = qi;
         }
     }
-
-    // 5. Per-expert attention into the packed [m, cap, d] buffer; experts
-    //    own disjoint regions, so they run in parallel.
-    let mut packed = vec![0.0f32; m * cap * d];
-    par_chunks_mut(&mut packed, cap * d, |e, chunk| {
+    let mut logits = ws.take_f32("mita.logits", kk);
+    for e in 0..m {
         let picks = &topk[e * kk..(e + 1) * kk];
-        let mut logits = vec![0.0f32; kk];
-        for (rank, &qi) in members[e].iter().enumerate() {
-            let qrow = &q[qi * d..(qi + 1) * d];
-            let orow = &mut chunk[rank * d..(rank + 1) * d];
-            attend_one(qrow, picks, kmat, v, d, scale, &mut logits, orow);
-        }
-    });
-
-    // 6. Scatter packed results back to query order.
-    for (e, mem) in members.iter().enumerate() {
-        for (rank, &qi) in mem.iter().enumerate() {
-            let src = &packed[(e * cap + rank) * d..(e * cap + rank + 1) * d];
-            out[qi * d..(qi + 1) * d].copy_from_slice(src);
+        let filled = counts[e].min(cap);
+        for &qi in &packed_qi[e * cap..e * cap + filled] {
+            attend_one(
+                &q[qi * d..(qi + 1) * d],
+                picks,
+                kmat,
+                v,
+                d,
+                scale,
+                &mut logits,
+                &mut out[qi * d..(qi + 1) * d],
+            );
         }
     }
 
-    // 7. Overflowed queries: unpacked fallback over the same expert KV, so
+    // 6. Overflowed queries: unpacked fallback over the same expert KV, so
     //    the native output stays exact under skewed routing.
-    if pack.overflow > 0 {
-        let mut logits = vec![0.0f32; kk];
-        for (qi, slot) in pack.slot.iter().enumerate() {
-            if slot.is_none() {
+    if overflow > 0 {
+        for (qi, &sl) in slot.iter().enumerate() {
+            if sl == routing::OVERFLOW {
                 let e = assign[qi];
                 let picks = &topk[e * kk..(e + 1) * kk];
-                let qrow = &q[qi * d..(qi + 1) * d];
-                let orow = &mut out[qi * d..(qi + 1) * d];
-                attend_one(qrow, picks, kmat, v, d, scale, &mut logits, orow);
+                attend_one(
+                    &q[qi * d..(qi + 1) * d],
+                    picks,
+                    kmat,
+                    v,
+                    d,
+                    scale,
+                    &mut logits,
+                    &mut out[qi * d..(qi + 1) * d],
+                );
             }
         }
     }
 
-    MitaStats { cap, overflow: pack.overflow, expert_counts: pack.counts }
+    stats.record(cap, overflow, &counts);
+
+    ws.give_f32("mita.landmarks", landmarks);
+    ws.give_f32("mita.scores", s);
+    ws.give_f32("mita.route", route_logits);
+    ws.give_f32("mita.logits", logits);
+    ws.give_usize("mita.order", order);
+    ws.give_usize("mita.topk", topk);
+    ws.give_usize("mita.assign", assign);
+    ws.give_usize("mita.counts", counts);
+    ws.give_usize("mita.slot", slot);
+    ws.give_usize("mita.packed_qi", packed_qi);
 }
 
 /// Multi-head MiTA over model-dim layout `[n, dim]` (`dim = heads · dh`),
-/// with independent routing per head. Returns the total overflow across
-/// heads (each head's overflow queries were served by the fallback pass).
+/// with independent routing per head. Head results accumulate into `stats`
+/// (total overflow across heads is `stats.overflow`).
 #[allow(clippy::too_many_arguments)]
 pub fn mita_attention_mh(
     q: &[f32],
@@ -210,26 +228,31 @@ pub fn mita_attention_mh(
     heads: usize,
     dim: usize,
     cfg: &MitaKernelConfig,
+    ws: &mut Workspace,
     out: &mut [f32],
-) -> usize {
+    stats: &mut MitaStats,
+) {
     assert!(heads >= 1 && dim % heads == 0, "dim {dim} must divide into {heads} heads");
+    assert_eq!(out.len(), n * dim, "out must be [n, dim]");
     if n == 0 || dim == 0 {
-        return 0;
+        return;
     }
     let dh = dim / heads;
-    let mut qh = vec![0.0f32; n * dh];
-    let mut kh = vec![0.0f32; n * dh];
-    let mut vh = vec![0.0f32; n * dh];
-    let mut oh = vec![0.0f32; n * dh];
-    let mut overflow = 0usize;
+    let mut qh = ws.take_f32("mh.q", n * dh);
+    let mut kh = ws.take_f32("mh.k", n * dh);
+    let mut vh = ws.take_f32("mh.v", n * dh);
+    let mut oh = ws.take_f32("mh.out", n * dh);
     for h in 0..heads {
         gather_head(q, n, dim, dh, h, &mut qh);
         gather_head(k, n, dim, dh, h, &mut kh);
         gather_head(v, n, dim, dh, h, &mut vh);
-        overflow += mita_attention(&qh, &kh, &vh, n, dh, cfg, &mut oh).overflow;
+        mita_attention(&qh, &kh, &vh, n, dh, cfg, ws, &mut oh, stats);
         scatter_head(&oh, n, dim, dh, h, out);
     }
-    overflow
+    ws.give_f32("mh.q", qh);
+    ws.give_f32("mh.k", kh);
+    ws.give_f32("mh.v", vh);
+    ws.give_f32("mh.out", oh);
 }
 
 #[cfg(test)]
@@ -248,13 +271,15 @@ mod tests {
         // m = n, k = n: every landmark is one query, every expert gathers
         // the full KV set, so MiTA must reduce to dense attention.
         let mut rng = Rng::new(21);
+        let mut ws = Workspace::new();
         for (n, d) in [(8, 4), (33, 8), (64, 16)] {
             let (q, k, v) = rand_qkv(&mut rng, n, d);
             let cfg = MitaKernelConfig { m: n, k: n, cap_factor: 2, block_q: 8 };
             let mut got = vec![0.0f32; n * d];
-            mita_attention(&q, &k, &v, n, d, &cfg, &mut got);
+            let mut stats = MitaStats::default();
+            mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut got, &mut stats);
             let mut want = vec![0.0f32; n * d];
-            dense_attention(&q, &k, &v, n, d, &mut want);
+            dense_attention(&q, &k, &v, n, d, &mut ws, &mut want);
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                 assert!((g - w).abs() < 1e-4, "n={n} d={d} elem {i}: {g} vs {w}");
             }
@@ -272,8 +297,10 @@ mod tests {
         let k: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let v: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
         let cfg = MitaKernelConfig { m: 4, k: 8, cap_factor: 1, block_q: 1 };
+        let mut ws = Workspace::new();
         let mut out = vec![0.0f32; n * d];
-        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        let mut stats = MitaStats::default();
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut out, &mut stats);
         assert!(stats.overflow > 0, "test must exercise the overflow path");
         let first = &out[..d];
         for r in 1..n {
@@ -292,8 +319,12 @@ mod tests {
         let (n, d) = (50, 8);
         let (q, k, v) = rand_qkv(&mut rng, n, d);
         let cfg = MitaKernelConfig { m: 5, k: 12, cap_factor: 2, block_q: 4 };
+        let mut ws = Workspace::new();
         let mut out = vec![0.0f32; n * d];
-        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        let mut stats = MitaStats::default();
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut out, &mut stats);
+        assert_eq!(stats.calls, 1);
+        assert_eq!(stats.queries, n);
         assert_eq!(stats.expert_counts.len(), 5);
         assert_eq!(stats.expert_counts.iter().sum::<usize>(), n);
         assert_eq!(stats.cap % 4, 0);
@@ -308,8 +339,10 @@ mod tests {
         let (n, d) = (6, 3);
         let mut rng = Rng::new(2);
         let (q, k, v) = rand_qkv(&mut rng, n, d);
+        let mut ws = Workspace::new();
         let mut out = vec![0.0f32; n * d];
-        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        let mut stats = MitaStats::default();
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut out, &mut stats);
         assert_eq!(stats.expert_counts.len(), n); // m clamped to n
         assert!(out.iter().all(|x| x.is_finite()));
         let auto = MitaKernelConfig::for_seq(1024);
@@ -328,8 +361,12 @@ mod tests {
         let k = gen(&mut rng, n * dim);
         let v = gen(&mut rng, n * dim);
         let cfg = MitaKernelConfig { m: 8, k: 16, cap_factor: 2, block_q: 8 };
+        let mut ws = Workspace::new();
         let mut got = vec![0.0f32; n * dim];
-        mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut got);
+        let mut stats = MitaStats::default();
+        mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut ws, &mut got, &mut stats);
+        assert_eq!(stats.calls, heads);
+        assert_eq!(stats.queries, heads * n);
 
         let mut want = vec![0.0f32; n * dim];
         let mut qh = vec![0.0f32; n * dh];
@@ -340,9 +377,44 @@ mod tests {
             gather_head(&q, n, dim, dh, h, &mut qh);
             gather_head(&k, n, dim, dh, h, &mut kh);
             gather_head(&v, n, dim, dh, h, &mut vh);
-            mita_attention(&qh, &kh, &vh, n, dh, &cfg, &mut oh);
+            let mut st = MitaStats::default();
+            mita_attention(&qh, &kh, &vh, n, dh, &cfg, &mut ws, &mut oh, &mut st);
             scatter_head(&oh, n, dim, dh, h, &mut want);
         }
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn workspace_capacity_is_stable_after_warmup() {
+        // The acceptance gate for the zero-alloc refactor: one workspace
+        // serving repeated kernel calls must stop growing after the first
+        // (warm-up) call — steady-state calls take and give back the same
+        // buffers without touching the allocator.
+        let mut rng = Rng::new(55);
+        let (n, heads, dim) = (96, 4, 32);
+        let (q, k, v) = rand_qkv(&mut rng, n, dim);
+        let cfg = MitaKernelConfig::for_seq(n);
+        let mut ws = Workspace::new();
+        let mut out = vec![0.0f32; n * dim];
+        let mut stats = MitaStats::default();
+
+        fn snapshot(ws: &Workspace, stats: &MitaStats) -> (usize, usize, usize, usize) {
+            let counts_cap = stats.expert_counts.capacity();
+            (ws.f32_capacity(), ws.usize_capacity(), ws.buffer_count(), counts_cap)
+        }
+
+        mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut ws, &mut out, &mut stats);
+        dense_attention(&q, &k, &v, n, dim, &mut ws, &mut out);
+        let warm = snapshot(&ws, &stats);
+
+        let first_out = out.clone();
+        for _ in 0..4 {
+            mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut ws, &mut out, &mut stats);
+            dense_attention(&q, &k, &v, n, dim, &mut ws, &mut out);
+            assert_eq!(snapshot(&ws, &stats), warm, "workspace must not grow in steady state");
+        }
+        // Same inputs through a warm workspace still give the same answer.
+        dense_attention(&q, &k, &v, n, dim, &mut ws, &mut out);
+        assert_eq!(out, first_out);
     }
 }

@@ -1,25 +1,36 @@
 //! Native CPU execution kernels for MiTA and dense attention.
 //!
-//! Until now the Rust side could only *execute* attention through AOT PJRT
-//! artifacts; this module implements the forward pass directly on the host
-//! so the serving loop, benchmarks, and tests run on a plain machine with
-//! no Python, JAX, or PJRT closure installed:
+//! The module is organized as a small execution stack:
 //!
 //! - [`linalg`]: blocked row-major matmuls + softmax primitives.
-//! - [`par`]: scoped-thread parallel helpers (std-only rayon substitute).
-//! - [`dense`]: O(N²) softmax attention — the correctness baseline.
-//! - [`mita`]: the full MiTA forward — landmark pooling, landmark scores,
-//!   top-k KV expert construction, argmax-routed dispatch with capacity
-//!   packing (reusing `crate::mita::routing`), per-expert attention, and
-//!   output scatter.
+//! - [`workspace`]: the [`Workspace`] scratch arena (zero allocations in
+//!   steady state) and the thread-safe [`WorkspacePool`] behind it.
+//! - [`mita`] / [`dense`]: serial, allocation-free single-head kernels —
+//!   the full MiTA forward (landmark pooling, landmark scores, top-k KV
+//!   expert construction, argmax-routed dispatch with capacity packing,
+//!   reusing `crate::mita::routing`, plus an exact overflow fallback) and
+//!   the O(N²) dense baseline.
+//! - [`api`]: the [`AttentionKernel`] trait, the name-keyed
+//!   [`KernelRegistry`], the [`AttnProblem`] shape descriptor, and
+//!   [`run_batched`] — the (example × head) work-item executor that owns
+//!   all parallelism.
+//! - [`par`]: scoped-thread parallel helpers (std-only rayon substitute)
+//!   that schedule those work items.
 //!
-//! The [`crate::runtime::backend`] module exposes these behind the same
-//! `Backend` interface as the PJRT artifact path.
+//! The [`crate::runtime::backend`] module exposes this stack behind the
+//! same `Backend` interface as the PJRT artifact path.
 
+pub mod api;
 pub mod dense;
 pub mod linalg;
 pub mod mita;
 pub mod par;
+pub mod workspace;
 
+pub use api::{
+    run_batched, AttentionKernel, AttnProblem, DenseKernel, KernelRegistry, MitaKernel, MitaStats,
+    OP_ATTN_DENSE, OP_ATTN_MITA, QkvData, QkvLayout,
+};
 pub use dense::{dense_attention, dense_attention_mh};
-pub use mita::{mita_attention, mita_attention_mh, MitaKernelConfig, MitaStats};
+pub use mita::{mita_attention, mita_attention_mh, MitaKernelConfig};
+pub use workspace::{PooledWorkspace, Workspace, WorkspacePool};

@@ -1,10 +1,12 @@
 //! Scoped-thread parallel helpers — the std-only substitute for rayon in
 //! this offline build (the vendored crate set has no rayon).
 //!
-//! The only primitive the kernels need is "run a closure over disjoint
-//! mutable chunks of a buffer, spread across threads": experts write
-//! disjoint regions of a packed output, heads write disjoint column blocks,
-//! dense attention writes disjoint query-row blocks. Chunks are dealt
+//! The only primitive the execution stack needs is "run a closure over
+//! disjoint mutable chunks of a buffer, spread across threads". The
+//! batched executor ([`crate::kernels::api::run_batched`]) is the main
+//! user: every (example × head) work item owns one disjoint chunk of the
+//! staging/output buffer, and each worker draws scratch from the
+//! [`crate::kernels::workspace::WorkspacePool`]. Chunks are dealt
 //! round-robin so ragged workloads still balance.
 
 use std::num::NonZeroUsize;

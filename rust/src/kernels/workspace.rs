@@ -1,0 +1,270 @@
+//! Reusable scratch-memory arena for the native attention kernels.
+//!
+//! [`Workspace`] owns named scratch buffers that kernels check out by name
+//! and hand back when done. Buffers keep their capacity across calls, so a
+//! kernel running repeatedly at one problem shape performs **zero heap
+//! allocations** after the first (warm-up) call — the steady state the
+//! serving hot path cares about. The take/give protocol moves buffers out
+//! of the arena as owned `Vec`s and returns them afterwards, which
+//! sidesteps the aliasing limits of handing out several `&mut` slices from
+//! one arena at once.
+//!
+//! [`WorkspacePool`] is the thread-safe extension: the batched executor
+//! ([`crate::kernels::api::run_batched`]) checks one workspace out per
+//! (example × head) work item (two brief pool-mutex operations per item),
+//! so every worker thread reuses warm buffers instead of allocating. Each
+//! pooled entry also carries a [`MitaStats`] accumulator, so kernels
+//! record routing statistics lock-free into the workspace they already
+//! hold — no separate shared stats mutex, no per-item stats allocation;
+//! [`WorkspacePool::collect_stats`] drains them once the parallel region
+//! has joined.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::kernels::api::MitaStats;
+
+/// Named scratch buffers with stable (high-water-mark) capacity.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32s: Vec<(&'static str, Vec<f32>)>,
+    usizes: Vec<(&'static str, Vec<usize>)>,
+}
+
+impl Workspace {
+    /// An empty arena; buffers materialize on first take (warm-up).
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Check out the f32 buffer `name`, sized to exactly `len`. Contents
+    /// are **unspecified** (zero on first growth, stale data from the
+    /// previous checkout otherwise) — callers must write every element
+    /// they later read, which is what lets the steady state skip both the
+    /// allocator and a redundant memset. Allocates only if the buffer has
+    /// never been this large before.
+    pub fn take_f32(&mut self, name: &'static str, len: usize) -> Vec<f32> {
+        let mut buf = match self.f32s.iter().position(|(n, _)| *n == name) {
+            Some(i) => self.f32s.swap_remove(i).1,
+            None => Vec::new(),
+        };
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer checked out with [`Workspace::take_f32`], parking
+    /// its capacity for the next call.
+    pub fn give_f32(&mut self, name: &'static str, buf: Vec<f32>) {
+        debug_assert!(
+            self.f32s.iter().all(|(n, _)| *n != name),
+            "workspace buffer {name} given back twice"
+        );
+        self.f32s.push((name, buf));
+    }
+
+    /// Check out the usize buffer `name`, sized to exactly `len`. Same
+    /// contract as [`Workspace::take_f32`]: contents are unspecified,
+    /// callers must write every element they later read.
+    pub fn take_usize(&mut self, name: &'static str, len: usize) -> Vec<usize> {
+        let mut buf = match self.usizes.iter().position(|(n, _)| *n == name) {
+            Some(i) => self.usizes.swap_remove(i).1,
+            None => Vec::new(),
+        };
+        buf.resize(len, 0);
+        buf
+    }
+
+    /// Return a buffer checked out with [`Workspace::take_usize`].
+    pub fn give_usize(&mut self, name: &'static str, buf: Vec<usize>) {
+        debug_assert!(
+            self.usizes.iter().all(|(n, _)| *n != name),
+            "workspace buffer {name} given back twice"
+        );
+        self.usizes.push((name, buf));
+    }
+
+    /// Total f32 capacity parked in the arena — the allocation high-water
+    /// mark. Stable across steady-state kernel calls.
+    pub fn f32_capacity(&self) -> usize {
+        self.f32s.iter().map(|(_, b)| b.capacity()).sum()
+    }
+
+    /// Total usize capacity parked in the arena.
+    pub fn usize_capacity(&self) -> usize {
+        self.usizes.iter().map(|(_, b)| b.capacity()).sum()
+    }
+
+    /// Number of parked buffers (every take must have been given back).
+    pub fn buffer_count(&self) -> usize {
+        self.f32s.len() + self.usizes.len()
+    }
+}
+
+/// Thread-safe pool of [`Workspace`]s (plus per-workspace [`MitaStats`]
+/// accumulators) for parallel work-item execution.
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<(Workspace, MitaStats)>>,
+    created: AtomicUsize,
+}
+
+impl WorkspacePool {
+    /// An empty pool; workspaces are created on demand, bounded by the
+    /// number of threads that hold one concurrently.
+    pub fn new() -> Self {
+        WorkspacePool::default()
+    }
+
+    /// Check a workspace out (reusing an idle one when available). The
+    /// guard returns it on drop.
+    pub fn acquire(&self) -> PooledWorkspace<'_> {
+        let entry = self.free.lock().unwrap().pop().unwrap_or_else(|| {
+            self.created.fetch_add(1, Ordering::Relaxed);
+            (Workspace::new(), MitaStats::default())
+        });
+        PooledWorkspace { pool: self, entry: Some(entry) }
+    }
+
+    /// Workspaces ever created — stable once the pool is warm (steady
+    /// state reuses instead of allocating).
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Workspaces currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Merge (and reset) the stats accumulated by every idle workspace
+    /// into `into`. Call after the parallel region has joined — while
+    /// workspaces are checked out their stats are not visible here.
+    pub fn collect_stats(&self, into: &mut MitaStats) {
+        for (_, stats) in self.free.lock().unwrap().iter_mut() {
+            into.merge(stats);
+            stats.reset();
+        }
+    }
+}
+
+/// RAII guard over a pooled workspace; returns it to the pool on drop.
+#[derive(Debug)]
+pub struct PooledWorkspace<'a> {
+    pool: &'a WorkspacePool,
+    entry: Option<(Workspace, MitaStats)>,
+}
+
+impl PooledWorkspace<'_> {
+    /// Split borrows of the workspace and its stats accumulator (kernels
+    /// take them as two separate `&mut` arguments).
+    pub fn parts(&mut self) -> (&mut Workspace, &mut MitaStats) {
+        let entry = self.entry.as_mut().expect("pooled workspace already returned");
+        (&mut entry.0, &mut entry.1)
+    }
+}
+
+impl Drop for PooledWorkspace<'_> {
+    fn drop(&mut self) {
+        if let Some(entry) = self.entry.take() {
+            self.pool.free.lock().unwrap().push(entry);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_capacity_without_rezeroing() {
+        let mut ws = Workspace::new();
+        let mut buf = ws.take_f32("a", 64);
+        assert_eq!(buf.len(), 64);
+        assert!(buf.iter().all(|&x| x == 0.0), "first growth is zero-filled");
+        buf.iter_mut().for_each(|x| *x = 7.0);
+        ws.give_f32("a", buf);
+        let cap = ws.f32_capacity();
+
+        // Same size: reuse with NO memset (contents are unspecified by
+        // contract — here the previous checkout's data), capacity stable.
+        let buf = ws.take_f32("a", 64);
+        assert_eq!(buf.len(), 64);
+        assert!(buf.iter().all(|&x| x == 7.0), "steady-state take must not re-zero");
+        ws.give_f32("a", buf);
+        assert_eq!(ws.f32_capacity(), cap);
+
+        // Smaller: shorter view, capacity keeps the high-water mark.
+        let buf = ws.take_f32("a", 8);
+        assert_eq!(buf.len(), 8);
+        ws.give_f32("a", buf);
+        assert_eq!(ws.f32_capacity(), cap);
+        assert_eq!(ws.buffer_count(), 1);
+
+        // Growing again re-fills only the growth.
+        let buf = ws.take_f32("a", 64);
+        assert_eq!(buf.len(), 64);
+        ws.give_f32("a", buf);
+        assert_eq!(ws.f32_capacity(), cap);
+    }
+
+    #[test]
+    fn distinct_names_are_distinct_buffers() {
+        let mut ws = Workspace::new();
+        let a = ws.take_usize("a", 4);
+        let b = ws.take_usize("b", 6);
+        assert_eq!((a.len(), b.len()), (4, 6));
+        ws.give_usize("a", a);
+        ws.give_usize("b", b);
+        assert_eq!(ws.buffer_count(), 2);
+        assert!(ws.usize_capacity() >= 10);
+    }
+
+    #[test]
+    fn pool_reuses_workspaces_and_collects_stats() {
+        let pool = WorkspacePool::new();
+        {
+            let mut g = pool.acquire();
+            let (ws, stats) = g.parts();
+            let buf = ws.take_f32("x", 16);
+            ws.give_f32("x", buf);
+            stats.record(4, 1, &[2, 3]);
+        }
+        assert_eq!(pool.created(), 1);
+        assert_eq!(pool.idle(), 1);
+
+        // Re-acquire: same workspace comes back, nothing new created.
+        {
+            let mut g = pool.acquire();
+            let (ws, _) = g.parts();
+            assert_eq!(ws.buffer_count(), 1);
+        }
+        assert_eq!(pool.created(), 1);
+
+        let mut total = MitaStats::default();
+        pool.collect_stats(&mut total);
+        assert_eq!(total.overflow, 1);
+        assert_eq!(total.queries, 5);
+        // Stats were reset at collection: a second drain adds nothing.
+        pool.collect_stats(&mut total);
+        assert_eq!(total.queries, 5);
+    }
+
+    #[test]
+    fn pool_is_shareable_across_threads() {
+        let pool = WorkspacePool::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..8 {
+                        let mut g = pool.acquire();
+                        let (ws, _) = g.parts();
+                        let buf = ws.take_f32("t", 32);
+                        ws.give_f32("t", buf);
+                    }
+                });
+            }
+        });
+        assert!(pool.created() >= 1 && pool.created() <= 4);
+        assert_eq!(pool.idle(), pool.created());
+    }
+}

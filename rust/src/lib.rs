@@ -10,8 +10,10 @@
 //!   serving loop, the training driver, data generation, metrics, and the
 //!   benchmark harness that regenerates every table/figure of the paper.
 //! - **L3-native** (`kernels` + `runtime::backend`): a pure-Rust MiTA /
-//!   dense attention forward pass behind the same `Backend` interface, so
-//!   serving and benchmarking run on machines with no PJRT closure at all.
+//!   dense attention stack behind the same `Backend` interface — an
+//!   `AttentionKernel` registry, zero-alloc `Workspace` arenas, and
+//!   batched (example × head) parallel dispatch — so serving and
+//!   benchmarking run on machines with no PJRT closure at all.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 

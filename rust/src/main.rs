@@ -29,7 +29,7 @@ use mita::data::BatchSource;
 use mita::flops;
 use mita::harness::tables::{self, Opts};
 use mita::harness::{figures, train_bundle};
-use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
+use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, Workspace};
 use mita::report::Table;
 use mita::runtime::{BackendSpec, NativeAttnConfig, Runtime};
 use mita::util::cli;
@@ -256,11 +256,13 @@ fn main() -> Result<()> {
 
             // 1) Degenerate full-attention parity: m = n, k = n must match
             //    the dense baseline exactly (within fp tolerance).
+            let mut ws = Workspace::new();
             let pn = n.min(128);
             let pcfg = MitaKernelConfig { m: pn, k: pn, cap_factor: 2, block_q: 8 };
             let sub = pn * dim;
             let mut mita_out = vec![0.0f32; sub];
             let mut dense_out = vec![0.0f32; sub];
+            let mut pstats = MitaStats::default();
             mita_attention_mh(
                 &q[..sub],
                 &k[..sub],
@@ -269,9 +271,20 @@ fn main() -> Result<()> {
                 heads,
                 dim,
                 &pcfg,
+                &mut ws,
                 &mut mita_out,
+                &mut pstats,
             );
-            dense_attention_mh(&q[..sub], &k[..sub], &v[..sub], pn, heads, dim, &mut dense_out);
+            dense_attention_mh(
+                &q[..sub],
+                &k[..sub],
+                &v[..sub],
+                pn,
+                heads,
+                dim,
+                &mut ws,
+                &mut dense_out,
+            );
             let max_diff = mita_out
                 .iter()
                 .zip(&dense_out)
@@ -285,21 +298,25 @@ fn main() -> Result<()> {
 
             // 2) Configured MiTA vs dense on the full shape: timing + routing.
             let mut out = vec![0.0f32; n * dim];
+            let mut stats = MitaStats::default();
             let t0 = Instant::now();
-            let overflow = mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut out);
+            mita_attention_mh(&q, &k, &v, n, heads, dim, &cfg, &mut ws, &mut out, &mut stats);
             let mita_secs = t0.elapsed().as_secs_f64();
             let t0 = Instant::now();
-            dense_attention_mh(&q, &k, &v, n, heads, dim, &mut out);
+            dense_attention_mh(&q, &k, &v, n, heads, dim, &mut ws, &mut out);
             let dense_secs = t0.elapsed().as_secs_f64();
             println!(
                 "n={n} dim={dim} heads={heads} m={} k={}: mita={:.2}ms dense={:.2}ms (x{:.2}) \
-                 overflow={overflow}/{}",
+                 overflow={}/{} ({:.1}%) imbalance={:.2}",
                 cfg.m,
                 cfg.k,
                 mita_secs * 1e3,
                 dense_secs * 1e3,
                 dense_secs / mita_secs,
-                n * heads,
+                stats.overflow,
+                stats.queries,
+                stats.overflow_fraction() * 100.0,
+                stats.load_imbalance(),
             );
             if !ok {
                 bail!("native parity check failed (max|Δ| = {max_diff:.2e})");

@@ -24,20 +24,29 @@ pub fn adaptive_pool_matrix(n: usize, m: usize) -> Vec<f32> {
 
 /// 1-D adaptive-average-pooled landmarks: q `[n, d]` -> `[m, d]`.
 pub fn landmarks_pool1d(q: &[f32], n: usize, d: usize, m: usize) -> Vec<f32> {
-    assert_eq!(q.len(), n * d);
-    let p = adaptive_pool_matrix(n, m);
     let mut out = vec![0.0f32; m * d];
+    landmarks_pool1d_into(q, n, d, m, &mut out);
+    out
+}
+
+/// Allocation-free core of [`landmarks_pool1d`]: same windows, same
+/// accumulation order (so results are bit-identical), output into a
+/// caller-owned `[m, d]` buffer.
+pub fn landmarks_pool1d_into(q: &[f32], n: usize, d: usize, m: usize, out: &mut [f32]) {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(out.len(), m * d);
+    assert!(m >= 1 && m <= n);
+    out.fill(0.0);
     for i in 0..m {
-        for r in 0..n {
-            let w = p[i * n + r];
-            if w != 0.0 {
-                for c in 0..d {
-                    out[i * d + c] += w * q[r * d + c];
-                }
+        let lo = i * n / m;
+        let hi = (i + 1) * n / m;
+        let w = 1.0 / (hi - lo) as f32;
+        for r in lo..hi {
+            for c in 0..d {
+                out[i * d + c] += w * q[r * d + c];
             }
         }
     }
-    out
 }
 
 /// Landmark scores S = K Q̃ᵀ / sqrt(d): `[n, m]` (Alg. 1 line 4).
@@ -61,21 +70,47 @@ pub fn scores(k: &[f32], q_land: &[f32], n: usize, d: usize, m: usize) -> Vec<f3
 /// Top-k row indices per expert column (Eq. 7): returns `[m, kk]` indices,
 /// each column's picks sorted by descending score (ties: lower index first).
 pub fn topk_indices(s: &[f32], n: usize, m: usize, kk: usize) -> Vec<usize> {
+    let mut order = vec![0usize; n];
+    let mut out = vec![0usize; m * kk];
+    topk_indices_into(s, n, m, kk, &mut order, &mut out);
+    out
+}
+
+/// Allocation-free core of [`topk_indices`]: `order` is an `[n]` scratch
+/// buffer, `out` receives the `[m, kk]` picks. Selection uses an unstable
+/// partition + prefix sort — identical results to a full stable sort
+/// because the index tiebreak makes the comparator a total order, but
+/// O(n + k·log k) per expert instead of O(n·log n).
+pub fn topk_indices_into(
+    s: &[f32],
+    n: usize,
+    m: usize,
+    kk: usize,
+    order: &mut [usize],
+    out: &mut [usize],
+) {
     assert!(kk <= n);
-    let mut out = Vec::with_capacity(m * kk);
-    let mut order: Vec<usize> = Vec::with_capacity(n);
+    assert_eq!(order.len(), n);
+    assert_eq!(out.len(), m * kk);
+    if kk == 0 {
+        return;
+    }
     for i in 0..m {
-        order.clear();
-        order.extend(0..n);
-        order.sort_by(|&a, &b| {
+        for (j, o) in order.iter_mut().enumerate() {
+            *o = j;
+        }
+        let cmp = |a: &usize, b: &usize| {
             s[b * m + i]
                 .partial_cmp(&s[a * m + i])
                 .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        out.extend_from_slice(&order[..kk]);
+                .then(a.cmp(b))
+        };
+        if kk < n {
+            order.select_nth_unstable_by(kk - 1, cmp);
+        }
+        order[..kk].sort_unstable_by(cmp);
+        out[i * kk..(i + 1) * kk].copy_from_slice(&order[..kk]);
     }
-    out
 }
 
 /// Argmax routing e(q) over logits Q Q̃ᵀ (s = 1): `[n]` expert ids.
@@ -120,28 +155,45 @@ pub struct PackResult {
 /// Pack queries by expert assignment with bounded capacity — the static-
 /// shape substitute for varlen batching (DESIGN.md §6).
 pub fn pack_by_expert(assign: &[usize], m: usize, cap: usize) -> PackResult {
-    let n = assign.len();
     let mut counts = vec![0usize; m];
-    for &e in assign {
-        assert!(e < m, "expert id {e} out of range {m}");
-        counts[e] += 1;
-    }
-    let mut next = vec![0usize; m];
-    let mut slot = Vec::with_capacity(n);
-    let mut overflow = 0usize;
-    // Stable iteration order mirrors jnp.argsort(e, stable) + rank-within-
-    // expert: queries keep arrival order within their expert.
-    for &e in assign {
-        let r = next[e];
-        next[e] += 1;
-        if r < cap {
-            slot.push(Some(e * cap + r));
-        } else {
-            slot.push(None);
-            overflow += 1;
-        }
-    }
+    let mut raw = vec![0usize; assign.len()];
+    let overflow = pack_into(assign, m, cap, &mut counts, &mut raw);
+    let slot = raw.iter().map(|&s| if s == OVERFLOW { None } else { Some(s) }).collect();
     PackResult { slot, cap, overflow, counts }
+}
+
+/// Sentinel slot value marking a capacity-overflowed query in
+/// [`pack_into`]'s output.
+pub const OVERFLOW: usize = usize::MAX;
+
+/// Allocation-free core of [`pack_by_expert`]: fills `counts` (`[m]`,
+/// queries per expert before truncation) and `slot` (`[n]`, `expert · cap
+/// + rank` or [`OVERFLOW`]) and returns the overflow count. Queries keep
+/// arrival order within their expert (mirrors jnp.argsort(e, stable) +
+/// rank-within-expert).
+pub fn pack_into(
+    assign: &[usize],
+    m: usize,
+    cap: usize,
+    counts: &mut [usize],
+    slot: &mut [usize],
+) -> usize {
+    assert_eq!(counts.len(), m, "counts must be [m]");
+    assert_eq!(slot.len(), assign.len(), "slot must be [n]");
+    counts.fill(0);
+    let mut overflow = 0usize;
+    for (&e, sl) in assign.iter().zip(slot.iter_mut()) {
+        assert!(e < m, "expert id {e} out of range {m}");
+        let r = counts[e];
+        counts[e] += 1;
+        *sl = if r < cap {
+            e * cap + r
+        } else {
+            overflow += 1;
+            OVERFLOW
+        };
+    }
+    overflow
 }
 
 #[cfg(test)]
@@ -220,5 +272,38 @@ mod tests {
         let r = pack_by_expert(&assign, 2, 4);
         assert_eq!(r.overflow, 6);
         assert_eq!(r.slot.iter().filter(|s| s.is_some()).count(), 4);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_apis() {
+        // The `_into` cores used by the zero-alloc kernel must agree with
+        // the original allocating functions on identical inputs.
+        let (n, d, m, kk) = (23, 5, 4, 7);
+        let q: Vec<f32> = (0..n * d).map(|i| ((i * 37 % 19) as f32) - 9.0).collect();
+        let s: Vec<f32> = (0..n * m).map(|i| ((i * 53 % 29) as f32) * 0.25 - 3.0).collect();
+
+        let mut lands = vec![1.0f32; m * d];
+        landmarks_pool1d_into(&q, n, d, m, &mut lands);
+        assert_eq!(lands, landmarks_pool1d(&q, n, d, m));
+
+        let mut order = vec![0usize; n];
+        let mut topk = vec![0usize; m * kk];
+        topk_indices_into(&s, n, m, kk, &mut order, &mut topk);
+        assert_eq!(topk, topk_indices(&s, n, m, kk));
+
+        let assign: Vec<usize> = (0..n).map(|i| i * 3 % m).collect();
+        let cap = 4;
+        let mut counts = vec![9usize; m];
+        let mut slot = vec![0usize; n];
+        let overflow = pack_into(&assign, m, cap, &mut counts, &mut slot);
+        let want = pack_by_expert(&assign, m, cap);
+        assert_eq!(overflow, want.overflow);
+        assert_eq!(counts, want.counts);
+        for (got, want) in slot.iter().zip(&want.slot) {
+            match want {
+                Some(s) => assert_eq!(got, s),
+                None => assert_eq!(*got, OVERFLOW),
+            }
+        }
     }
 }

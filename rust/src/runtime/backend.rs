@@ -8,8 +8,13 @@
 //! - [`PjrtBackend`]: manifest-driven AOT artifacts (ops are artifact
 //!   names, parameter bindings are device literals) — requires the real
 //!   vendored `xla` closure.
-//! - [`NativeBackend`]: the pure-Rust attention kernels in
-//!   [`crate::kernels`] (ops `attn.mita` / `attn.dense`) — runs anywhere.
+//! - [`NativeBackend`]: the pure-Rust attention stack in
+//!   [`crate::kernels`] — runs anywhere. Ops resolve through a
+//!   [`KernelRegistry`], inputs parse into an [`AttnProblem`], and
+//!   execution fans out as (example × head) work items over a
+//!   [`WorkspacePool`] (see [`run_batched`]), so steady-state calls
+//!   allocate nothing beyond the output tensor. Per-call MiTA routing
+//!   statistics accumulate and surface through [`Backend::mita_stats`].
 //!
 //! Backends are built *inside* the engine thread from a [`BackendSpec`]
 //! (PJRT handles are not `Send`, so the spec crosses the thread boundary,
@@ -22,9 +27,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig};
+use crate::kernels::api::{run_batched, AttnProblem, KernelRegistry, MitaStats, QkvData, QkvLayout};
+use crate::kernels::workspace::WorkspacePool;
+use crate::kernels::MitaKernelConfig;
 use crate::runtime::client::{Runtime, RuntimeStats};
 use crate::runtime::tensor::Tensor;
+
+pub use crate::kernels::api::{OP_ATTN_DENSE, OP_ATTN_MITA};
 
 /// A place computations run: named ops over host tensors, with optional
 /// named parameter bindings kept backend-side between calls.
@@ -48,6 +57,20 @@ pub trait Backend {
 
     /// Compile/execute counters for reports.
     fn stats(&self) -> RuntimeStats;
+
+    /// Accumulated MiTA routing statistics, when this backend executes the
+    /// native kernels (None for artifact backends).
+    fn mita_stats(&self) -> Option<MitaStats> {
+        None
+    }
+
+    /// Snapshot **and reset** the MiTA routing accumulator, so the caller
+    /// gets stats covering exactly the interval since the previous take
+    /// (peaks like `load_imbalance` are monotone maxima and cannot be
+    /// recovered per-interval from cumulative snapshots).
+    fn take_mita_stats(&self) -> Option<MitaStats> {
+        None
+    }
 }
 
 /// Serializable description of a backend, safe to send to the engine
@@ -169,71 +192,89 @@ impl NativeAttnConfig {
     }
 }
 
-/// Op names served by [`NativeBackend`].
-pub const OP_ATTN_MITA: &str = "attn.mita";
-pub const OP_ATTN_DENSE: &str = "attn.dense";
-
-/// The native CPU backend: executes the attention forward pass with the
-/// kernels in [`crate::kernels`]. Accepts per-op inputs in either form:
+/// The native CPU backend: resolves ops through a [`KernelRegistry`] and
+/// executes them as batched (example × head) work items with pooled
+/// per-thread workspaces. Accepts per-op inputs in three forms:
 ///
 /// - one fused tensor `[b, 3, n, dim]` (or `[3, n, dim]` for b = 1) with
 ///   Q/K/V stacked on axis 1 — the serving path packs requests this way;
+/// - the fused tensor plus a one-element i32 *valid-rows marker*: only the
+///   first `valid` batch rows are computed, trailing padding rows are
+///   zero-filled and never executed (the batcher pads short batches);
 /// - three tensors Q, K, V of `[b, n, dim]` (or `[n, dim]` for b = 1).
 ///
 /// Output is always `[b, n, dim]`.
 pub struct NativeBackend {
     cfg: NativeAttnConfig,
+    registry: KernelRegistry,
+    pool: WorkspacePool,
+    /// Head-major staging buffer reused across calls.
+    headout: RefCell<Vec<f32>>,
     stats: RefCell<RuntimeStats>,
+    mita: RefCell<MitaStats>,
 }
 
 impl NativeBackend {
     pub fn new(cfg: NativeAttnConfig) -> Self {
-        NativeBackend { cfg, stats: RefCell::new(RuntimeStats::default()) }
+        let registry = KernelRegistry::with_defaults(cfg.mita);
+        Self::with_registry(registry, cfg)
+    }
+
+    /// Build over a custom kernel registry (alternative or experimental
+    /// kernels slot in without touching the backend).
+    pub fn with_registry(registry: KernelRegistry, cfg: NativeAttnConfig) -> Self {
+        NativeBackend {
+            cfg,
+            registry,
+            pool: WorkspacePool::new(),
+            headout: RefCell::new(Vec::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+            mita: RefCell::new(MitaStats::default()),
+        }
     }
 
     pub fn config(&self) -> &NativeAttnConfig {
         &self.cfg
     }
 
-    /// Per-example contiguous (q, k, v) slices of length `n · dim` each,
-    /// resolved from either input form.
-    fn example_qkv(
-        inputs: &[Tensor],
-        b: usize,
-        per: usize,
-        i: usize,
-    ) -> Result<(&[f32], &[f32], &[f32])> {
-        match inputs.len() {
-            1 => {
-                let data = inputs[0].as_f32()?;
-                let block = &data[i * 3 * per..(i + 1) * 3 * per];
-                Ok((&block[..per], &block[per..2 * per], &block[2 * per..]))
-            }
-            3 => {
-                let q = inputs[0].as_f32()?;
-                let k = inputs[1].as_f32()?;
-                let v = inputs[2].as_f32()?;
-                debug_assert_eq!(q.len(), b * per);
-                Ok((
-                    &q[i * per..(i + 1) * per],
-                    &k[i * per..(i + 1) * per],
-                    &v[i * per..(i + 1) * per],
-                ))
-            }
-            other => bail!("native attention wants 1 fused or 3 tensors, got {other}"),
-        }
+    /// The worker workspace pool (exposed for reuse tests / diagnostics).
+    pub fn workspace_pool(&self) -> &WorkspacePool {
+        &self.pool
     }
 
-    /// Resolve (b, n, dim) from the input shapes.
-    fn batch_shape(inputs: &[Tensor]) -> Result<(usize, usize, usize)> {
+    /// Registered op names.
+    pub fn ops(&self) -> Vec<&'static str> {
+        self.registry.names()
+    }
+
+    /// Parse input tensors into a problem descriptor plus a borrowed data
+    /// view (see the type-level docs for the accepted forms).
+    fn problem<'a>(&self, inputs: &'a [Tensor]) -> Result<(AttnProblem, QkvData<'a>)> {
+        let heads = self.cfg.heads.max(1);
         match inputs.len() {
-            1 => {
+            1 | 2 => {
                 let shape = inputs[0].shape();
-                match *shape {
-                    [three, n, dim] if three == 3 => Ok((1, n, dim)),
-                    [b, three, n, dim] if three == 3 => Ok((b, n, dim)),
+                let (b, n, dim) = match *shape {
+                    [three, n, dim] if three == 3 => (1, n, dim),
+                    [b, three, n, dim] if three == 3 => (b, n, dim),
                     _ => bail!("fused input must be [b, 3, n, dim] or [3, n, dim], got {shape:?}"),
+                };
+                let mut prob = AttnProblem::new(b, heads, n, dim, QkvLayout::Fused);
+                if inputs.len() == 2 {
+                    let marker = inputs[1].as_i32().context("valid-rows marker")?;
+                    anyhow::ensure!(
+                        marker.len() == 1,
+                        "valid-rows marker must hold one i32, got {} values",
+                        marker.len()
+                    );
+                    let valid = marker[0];
+                    anyhow::ensure!(
+                        valid >= 1 && valid as usize <= b,
+                        "valid rows {valid} out of range 1..={b}"
+                    );
+                    prob = prob.with_valid(valid as usize);
                 }
+                Ok((prob, QkvData::Fused(inputs[0].as_f32()?)))
             }
             3 => {
                 let shape = inputs[0].shape();
@@ -244,13 +285,22 @@ impl NativeBackend {
                         t.shape()
                     );
                 }
-                match *shape {
-                    [n, dim] => Ok((1, n, dim)),
-                    [b, n, dim] => Ok((b, n, dim)),
+                let (b, n, dim) = match *shape {
+                    [n, dim] => (1, n, dim),
+                    [b, n, dim] => (b, n, dim),
                     _ => bail!("q/k/v must be [b, n, dim] or [n, dim], got {shape:?}"),
-                }
+                };
+                let data = QkvData::Separate {
+                    q: inputs[0].as_f32()?,
+                    k: inputs[1].as_f32()?,
+                    v: inputs[2].as_f32()?,
+                };
+                Ok((AttnProblem::new(b, heads, n, dim, QkvLayout::Separate), data))
             }
-            other => bail!("native attention wants 1 fused or 3 tensors, got {other}"),
+            other => bail!(
+                "native attention wants 1 fused tensor (+ optional valid-rows marker) \
+                 or 3 q/k/v tensors, got {other}"
+            ),
         }
     }
 }
@@ -280,40 +330,44 @@ impl Backend for NativeBackend {
 
     fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         anyhow::ensure!(binding.is_none(), "native ops take no parameter binding");
-        let mita_op = match op {
-            OP_ATTN_MITA => true,
-            OP_ATTN_DENSE => false,
-            other => {
-                bail!("native backend has no op {other:?} (available: attn.mita, attn.dense)")
-            }
-        };
-        let (b, n, dim) = Self::batch_shape(inputs)?;
-        let heads = self.cfg.heads.max(1);
-        anyhow::ensure!(
-            dim % heads == 0,
-            "model dim {dim} not divisible by {heads} heads"
-        );
-        let per = n * dim;
+        let kernel = self.registry.get(op).with_context(|| {
+            format!(
+                "native backend has no op {op:?} (available: {})",
+                self.registry.names().join(", ")
+            )
+        })?;
+        let (prob, data) = self.problem(inputs)?;
+        if let Err(e) = prob.validate() {
+            bail!("invalid attention problem: {e}");
+        }
         let t0 = Instant::now();
-        let mut out = vec![0.0f32; b * per];
-        for (i, out_ex) in out.chunks_exact_mut(per).enumerate() {
-            let (q, k, v) = Self::example_qkv(inputs, b, per, i)?;
-            if mita_op {
-                mita_attention_mh(q, k, v, n, heads, dim, &self.cfg.mita, out_ex);
-            } else {
-                dense_attention_mh(q, k, v, n, heads, dim, out_ex);
-            }
+        let mut out = vec![0.0f32; prob.batch * prob.example_len()];
+        {
+            let mut headout = self.headout.borrow_mut();
+            let mut mita = self.mita.borrow_mut();
+            run_batched(kernel, &prob, &data, &self.pool, &mut headout, &mut out, &mut mita);
         }
         {
             let mut st = self.stats.borrow_mut();
             st.executions += 1;
             st.execute_secs += t0.elapsed().as_secs_f64();
         }
-        Ok(vec![Tensor::f32(&[b, n, dim], out)?])
+        Ok(vec![Tensor::f32(&[prob.batch, prob.n, prob.dim], out)?])
     }
 
     fn stats(&self) -> RuntimeStats {
         self.stats.borrow().clone()
+    }
+
+    fn mita_stats(&self) -> Option<MitaStats> {
+        Some(self.mita.borrow().clone())
+    }
+
+    fn take_mita_stats(&self) -> Option<MitaStats> {
+        let mut mita = self.mita.borrow_mut();
+        let snapshot = mita.clone();
+        mita.reset();
+        Some(snapshot)
     }
 }
 
@@ -348,6 +402,10 @@ mod tests {
         assert_eq!(a[0], b[0]);
         assert_eq!(a[0].shape(), &[1, n, dim]);
         assert_eq!(be.stats().executions, 2);
+        // Both runs routed n queries per head.
+        let mstats = be.mita_stats().unwrap();
+        assert_eq!(mstats.queries, 2 * 2 * n);
+        assert_eq!(mstats.calls, 2 * 2);
     }
 
     #[test]
@@ -373,6 +431,43 @@ mod tests {
     }
 
     #[test]
+    fn valid_rows_marker_skips_padding() {
+        let (n, dim, bsz, valid) = (8, 4, 4, 2);
+        let mut rng = Rng::new(19);
+        let data: Vec<f32> =
+            (0..bsz * 3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let fused = Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap();
+        let marker = Tensor::i32(&[1], vec![valid as i32]).unwrap();
+
+        let be = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 2));
+        let out = be.run(OP_ATTN_MITA, None, &[fused.clone(), marker]).unwrap();
+        let full = out[0].as_f32().unwrap();
+        let per = n * dim;
+
+        // Real rows match an unpadded run over the prefix.
+        let prefix =
+            Tensor::f32(&[valid, 3, n, dim], data[..valid * 3 * per].to_vec()).unwrap();
+        let be2 = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 2));
+        let want = be2.run(OP_ATTN_MITA, None, &[prefix]).unwrap();
+        assert_eq!(&full[..valid * per], want[0].as_f32().unwrap());
+
+        // Pad rows never reach the output (stay exactly zero) and never
+        // reach the kernels (stats only count valid work).
+        assert!(full[valid * per..].iter().all(|&x| x == 0.0));
+        let mstats = be.mita_stats().unwrap();
+        assert_eq!(mstats.calls, valid * 2);
+        assert_eq!(mstats.queries, valid * 2 * n);
+
+        // Out-of-range markers are rejected.
+        for bad in [0i32, 5] {
+            let marker = Tensor::i32(&[1], vec![bad]).unwrap();
+            assert!(be.run(OP_ATTN_MITA, None, &[fused.clone(), marker]).is_err());
+        }
+        let wide = Tensor::i32(&[2], vec![1, 1]).unwrap();
+        assert!(be.run(OP_ATTN_MITA, None, &[fused, wide]).is_err());
+    }
+
+    #[test]
     fn rejects_bad_ops_and_shapes() {
         let be = NativeBackend::new(NativeAttnConfig::for_shape(8, 4, 2));
         let t = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
@@ -383,6 +478,7 @@ mod tests {
         assert!(be.bind_tensors("w", vec![]).is_err());
         assert!(be.bind_init("w", "init", 0, 1).is_err());
         assert!(be.warmup(OP_ATTN_MITA).is_ok());
+        assert_eq!(be.ops(), vec![OP_ATTN_MITA, OP_ATTN_DENSE]);
     }
 
     #[test]
@@ -390,5 +486,6 @@ mod tests {
         let spec = BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2));
         let be = spec.create().unwrap();
         assert_eq!(be.name(), "native");
+        assert!(be.mita_stats().is_some());
     }
 }

@@ -6,7 +6,10 @@
 //! - routing/packing invariants of the kernel vs `mita::routing` directly;
 //! - an independent per-query reference (f64 softmax over the routed
 //!   expert's gathered KV) that ignores capacity packing entirely, pinning
-//!   the pack/scatter/overflow machinery;
+//!   the expert-grouped execution + overflow machinery;
+//! - the batched (example × head) dispatch vs the serial per-sequence
+//!   kernels, bit-for-bit, plus workspace-pool reuse across thread counts
+//!   and padding-row short-circuiting;
 //! - the engine + serving integration over `BackendSpec::Native`.
 
 use std::time::Duration;
@@ -16,7 +19,10 @@ use mita::coordinator::server::{serve_native, NativeServeConfig};
 use mita::coordinator::Engine;
 use mita::data::rng::Rng;
 use mita::kernels::linalg::{matmul_nt, scale_in_place};
-use mita::kernels::{dense_attention, mita_attention, MitaKernelConfig};
+use mita::kernels::{
+    dense_attention, dense_attention_mh, mita_attention, mita_attention_mh, MitaKernelConfig,
+    MitaStats, Workspace,
+};
 use mita::mita::routing;
 use mita::runtime::backend::{OP_ATTN_DENSE, OP_ATTN_MITA};
 use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
@@ -44,10 +50,12 @@ fn prop_degenerate_mita_equals_dense() {
             cap_factor: g.usize_in(1, 3),
             block_q: [1, 8, 16][g.usize_in(0, 2)],
         };
+        let mut ws = Workspace::new();
         let mut got = vec![0.0f32; n * d];
-        mita_attention(&q, &k, &v, n, d, &cfg, &mut got);
+        let mut stats = MitaStats::default();
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut got, &mut stats);
         let mut want = vec![0.0f32; n * d];
-        dense_attention(&q, &k, &v, n, d, &mut want);
+        dense_attention(&q, &k, &v, n, d, &mut ws, &mut want);
         for (i, (a, b)) in got.iter().zip(&want).enumerate() {
             assert!((a - b).abs() < 1e-4, "n={n} d={d} elem {i}: {a} vs {b}");
         }
@@ -94,8 +102,10 @@ fn prop_kernel_routing_matches_routing_module() {
         let k = g.vec_f32(n * d, -2.0, 2.0);
         let v = g.vec_f32(n * d, -2.0, 2.0);
         let cfg = MitaKernelConfig { m, k: kk, cap_factor, block_q };
+        let mut ws = Workspace::new();
         let mut out = vec![0.0f32; n * d];
-        let stats = mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        let mut stats = MitaStats::default();
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut out, &mut stats);
 
         let lands = routing::landmarks_pool1d(&q, n, d, m);
         let assign = routing::route_argmax(&q, &lands, n, d, m);
@@ -104,13 +114,14 @@ fn prop_kernel_routing_matches_routing_module() {
         assert_eq!(stats.cap, cap);
         assert_eq!(stats.overflow, pack.overflow);
         assert_eq!(stats.expert_counts, pack.counts);
-        assert_eq!(stats.expert_counts.iter().sum::<usize>(), n);
+        assert_eq!(stats.queries, n);
+        assert_eq!(stats.calls, 1);
     });
 }
 
 // ---------------------------------------------------------------------------
 // Independent per-query reference: same discrete routing decisions, f64
-// attention math, no packing — catches any scatter/overflow/parallelism bug.
+// attention math, no packing — catches any grouping/overflow bug.
 // ---------------------------------------------------------------------------
 
 fn ref_query_output(qrow: &[f32], picks: &[usize], k: &[f32], v: &[f32], d: usize) -> Vec<f64> {
@@ -148,8 +159,10 @@ fn prop_every_query_matches_unpacked_reference() {
         let q = g.vec_f32(n * d, -2.0, 2.0);
         let k = g.vec_f32(n * d, -2.0, 2.0);
         let v = g.vec_f32(n * d, -2.0, 2.0);
+        let mut ws = Workspace::new();
         let mut out = vec![0.0f32; n * d];
-        mita_attention(&q, &k, &v, n, d, &cfg, &mut out);
+        let mut stats = MitaStats::default();
+        mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut out, &mut stats);
 
         // Reconstruct the kernel's discrete decisions with the same shared
         // routing functions (scores via the same blocked matmul).
@@ -173,6 +186,131 @@ fn prop_every_query_matches_unpacked_reference() {
             }
         }
     });
+}
+
+// ---------------------------------------------------------------------------
+// Batched (example × head) dispatch vs the serial per-sequence kernels —
+// the decomposition must be bit-for-bit identical.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batched_dispatch_matches_per_sequence_kernels() {
+    let mut rng = Rng::new(77);
+    for (bsz, n, dim, heads) in [(5, 24, 16, 2), (3, 17, 12, 1), (2, 33, 24, 3)] {
+        let per = n * dim;
+        let data = rand_vec(&mut rng, bsz * 3 * per, -2.0, 2.0);
+        let fused = Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap();
+        let attn = NativeAttnConfig::for_shape(n, dim, heads);
+        let cfg = attn.mita;
+        let backend = NativeBackend::new(attn);
+
+        let got_mita = backend.run(OP_ATTN_MITA, None, &[fused.clone()]).unwrap();
+        let got_dense = backend.run(OP_ATTN_DENSE, None, &[fused]).unwrap();
+        assert_eq!(got_mita[0].shape(), &[bsz, n, dim]);
+
+        let mut ws = Workspace::new();
+        let mut stats = MitaStats::default();
+        let mut want_mita = vec![0.0f32; bsz * per];
+        let mut want_dense = vec![0.0f32; bsz * per];
+        for i in 0..bsz {
+            let ex = &data[i * 3 * per..(i + 1) * 3 * per];
+            let (q, k, v) = (&ex[..per], &ex[per..2 * per], &ex[2 * per..]);
+            let out_ex = &mut want_mita[i * per..(i + 1) * per];
+            mita_attention_mh(q, k, v, n, heads, dim, &cfg, &mut ws, out_ex, &mut stats);
+            let out_ex = &mut want_dense[i * per..(i + 1) * per];
+            dense_attention_mh(q, k, v, n, heads, dim, &mut ws, out_ex);
+        }
+        assert_eq!(
+            got_mita[0].as_f32().unwrap(),
+            &want_mita[..],
+            "mita batched != serial (b={bsz} n={n} dim={dim} heads={heads})"
+        );
+        assert_eq!(
+            got_dense[0].as_f32().unwrap(),
+            &want_dense[..],
+            "dense batched != serial (b={bsz} n={n} dim={dim} heads={heads})"
+        );
+
+        // The backend recorded exactly the serial path's routing totals.
+        let bstats = backend.mita_stats().unwrap();
+        assert_eq!(bstats.queries, stats.queries);
+        assert_eq!(bstats.overflow, stats.overflow);
+        assert_eq!(bstats.calls, bsz * heads);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace-pool reuse: steady state creates no new workspaces, under both
+// single-threaded and multi-threaded scheduling. Worker counts are driven
+// with explicit scoped threads (mutating MITA_NUM_THREADS from a test
+// would race other tests' getenv calls); the CI job that exports
+// MITA_NUM_THREADS=1 additionally pins the whole suite — including the
+// backend test below — to single-threaded dispatch.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn workspace_pool_reuse_under_explicit_thread_counts() {
+    let items_total = 12usize;
+    for threads in [1usize, 4] {
+        let pool = mita::kernels::WorkspacePool::new();
+        // One "dispatch round": acquire per work item, exactly like
+        // run_batched's workers, spread over `threads` workers.
+        let round = |pool: &mita::kernels::WorkspacePool| {
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| {
+                        for _ in 0..items_total / threads {
+                            let mut pooled = pool.acquire();
+                            let (ws, stats) = pooled.parts();
+                            let buf = ws.take_f32("item.q", 64);
+                            ws.give_f32("item.q", buf);
+                            stats.record(4, 0, &[1]);
+                        }
+                    });
+                }
+            });
+        };
+        for _ in 0..4 {
+            round(&pool);
+        }
+        // created() counts the peak concurrent demand ever seen, so across
+        // 4 rounds × items_total acquires the workspace-per-worker bound is
+        // exactly the reuse property (without reuse it would approach the
+        // total acquire count).
+        let created = pool.created();
+        assert!(created >= 1, "pool must materialize workspaces");
+        assert!(
+            created <= threads,
+            "at most one workspace per worker (created {created}, threads {threads})"
+        );
+        assert_eq!(pool.idle(), created, "all workspaces returned after joins");
+        let mut stats = MitaStats::default();
+        pool.collect_stats(&mut stats);
+        assert_eq!(stats.queries, 4 * items_total, "every work item recorded once");
+    }
+}
+
+#[test]
+fn backend_reuses_pooled_workspaces_in_steady_state() {
+    // Ambient thread count (the MITA_NUM_THREADS=1 CI pass pins this to
+    // one worker; the default pass exercises the parallel scheduler).
+    let (bsz, n, dim, heads) = (3usize, 32usize, 16usize, 4usize);
+    let mut rng = Rng::new(12);
+    let data = rand_vec(&mut rng, bsz * 3 * n * dim, -1.0, 1.0);
+    let fused = Tensor::f32(&[bsz, 3, n, dim], data).unwrap();
+    let backend = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, heads));
+
+    for _ in 0..4 {
+        backend.run(OP_ATTN_MITA, None, &[fused.clone()]).unwrap();
+        backend.run(OP_ATTN_DENSE, None, &[fused.clone()]).unwrap();
+    }
+    // created() is the peak concurrent-acquire count: staying within the
+    // work-item bound across 8 runs × 12 items proves pooled reuse
+    // (without reuse it would track the total acquire count, 96).
+    let created = backend.workspace_pool().created();
+    assert!(created >= 1, "pool must materialize workspaces");
+    assert!(created <= bsz * heads, "never more workspaces than concurrent work items");
+    assert_eq!(backend.workspace_pool().idle(), created, "all returned between runs");
 }
 
 // ---------------------------------------------------------------------------
@@ -201,6 +339,14 @@ fn engine_native_backend_runs_attention_ops() {
     let dense = handle.run(OP_ATTN_DENSE, vec![fused.clone()]).unwrap();
     assert_eq!(dense[0].shape(), &[1, n, dim]);
 
+    // Stats flow through the engine thread: one MiTA run of `heads` work
+    // items routed n queries each (the dense run adds none).
+    let stats = handle.backend_stats().unwrap();
+    assert_eq!(stats.runtime.executions, 2);
+    let mita = stats.mita.expect("native backend reports mita stats");
+    assert_eq!(mita.calls, heads);
+    assert_eq!(mita.queries, heads * n);
+
     // Unknown ops and binding requests fail loudly.
     assert!(handle.run("predict", vec![fused.clone()]).is_err());
     assert!(handle.run_bound(OP_ATTN_MITA, "weights", vec![fused]).is_err());
@@ -228,6 +374,18 @@ fn native_serving_closed_loop_completes_all_requests() {
         assert!(report.throughput_rps > 0.0);
         assert!(report.batches >= 6); // 24 requests / max_batch 4
         assert!(report.p50_ms <= report.p99_ms + 1e-9);
+
+        // Per-run routing stats ride along in the report; padded batch
+        // slots are marked and never computed, so a MiTA run routes
+        // exactly completed · heads · n queries — no more, no less.
+        let mita = report.mita.as_ref().expect("native serve reports mita stats");
+        if op == OP_ATTN_MITA {
+            assert_eq!(mita.queries, 24 * 2 * 64, "pad rows must never reach the kernels");
+            assert!(mita.overflow <= mita.queries);
+            assert!(report.row().contains("ovf="));
+        } else {
+            assert_eq!(mita.queries, 0, "dense runs record no routing work");
+        }
     }
     engine.shutdown();
 }
@@ -248,5 +406,9 @@ fn native_serving_open_loop_backpressure() {
     let report = serve_native(&engine.handle(), &cfg).unwrap();
     assert_eq!(report.completed + report.rejected, 100);
     assert!(report.completed > 0);
+    // Every completed request was computed: the stats cover exactly the
+    // completed ones (4 heads × n queries each).
+    let mita = report.mita.expect("native serve reports mita stats");
+    assert_eq!(mita.queries, report.completed * 4 * 128);
     engine.shutdown();
 }
