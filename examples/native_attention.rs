@@ -87,7 +87,8 @@ fn main() -> Result<()> {
     // 2) The same math through the backend's batched (example × head)
     //    dispatch: one fused [b, 3, n, dim] call, parallel work items,
     //    pooled workspaces.
-    let attn = NativeAttnConfig { n, dim, heads, mita: cfg };
+    let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
+    attn.mita = cfg;
     let backend = NativeBackend::new(attn.clone());
     let bsz = 4usize;
     let fused_data: Vec<f32> = (0..bsz * 3 * n * dim).map(|_| rng.range_f32(-2.0, 2.0)).collect();

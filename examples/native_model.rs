@@ -1,0 +1,109 @@
+//! Model-subsystem quickstart: the smallest end-to-end use of the native
+//! MiTA transformer. Needs **no** `make artifacts`, no Python, and no
+//! PJRT closure — it runs anywhere.
+//!
+//! 1. Builds an LRA ListOps task and a matching [`MitaModel`], then runs
+//!    one batched forward with MiTA blocks and again with dense blocks
+//!    (same parameters, different per-block kernel) and compares the
+//!    predicted classes + routing stats.
+//! 2. Round-trips the model through the native checkpoint format.
+//! 3. Spawns the coordinator engine over `BackendSpec::Native`, binds the
+//!    model, and drives the dynamic-batching serving loop with token
+//!    requests (the report row shows the run's routing stats).
+//!
+//! Run: `cargo run --release --example native_model [-- seq_len dim heads]`
+//!
+//! [`MitaModel`]: mita::model::MitaModel
+
+use anyhow::Result;
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::{serve_model, Engine, ModelServeConfig};
+use mita::data::lra;
+use mita::data::Split;
+use mita::flops;
+use mita::kernels::{MitaStats, WorkspacePool, OP_ATTN_DENSE, OP_ATTN_MITA};
+use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_INIT};
+use mita::runtime::{BackendSpec, NativeAttnConfig};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n = args.first().map(|s| s.parse::<usize>()).transpose()?.unwrap_or(256);
+    let dim = args.get(1).map(|s| s.parse::<usize>()).transpose()?.unwrap_or(64);
+    let heads = args.get(2).map(|s| s.parse::<usize>()).transpose()?.unwrap_or(4);
+
+    // 1) Task + model; one forward per kernel choice, shared parameters.
+    let task = lra::by_name("listops", n, 16, 0xC0FFEE);
+    let cfg = ModelConfig::for_task(task.as_ref(), dim, heads, 2, OP_ATTN_MITA);
+    println!(
+        "listops n={n} dim={dim} heads={heads} depth={} (m={}, k={}): {} params, {} / fwd",
+        cfg.depth,
+        cfg.mita.m,
+        cfg.mita.k,
+        cfg.param_count(),
+        flops::gflops(flops::native_model_flops(&cfg)),
+    );
+    let model = MitaModel::init(cfg, 7)?;
+    let dense = model.with_kernel(OP_ATTN_DENSE)?;
+    let registry = model.registry();
+    let pool = WorkspacePool::new();
+    let mut scratch = ModelScratch::default();
+    let mut stats = MitaStats::default();
+
+    let bsz = 4usize;
+    let (tokens, labels) = lra::batch_host(task.as_ref(), Split::Val, 0, bsz);
+    let lm = model.forward(&tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)?;
+    let ld = dense.forward(&tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)?;
+    let classes = model.cfg.classes;
+    for i in 0..bsz {
+        // First-maximum argmax, matching Tensor::argmax_last's tie-break.
+        let pick = |l: &[f32]| {
+            let row = &l[i * classes..(i + 1) * classes];
+            let mut best = 0usize;
+            for (c, &x) in row.iter().enumerate() {
+                if x > row[best] {
+                    best = c;
+                }
+            }
+            best
+        };
+        println!(
+            "  example {i}: label={} mita_pred={} dense_pred={}",
+            labels[i],
+            pick(&lm),
+            pick(&ld)
+        );
+    }
+    println!(
+        "routing over {} MiTA-block calls: ovf={:.1}% imb={:.2}",
+        stats.calls,
+        stats.overflow_fraction() * 100.0,
+        stats.load_imbalance()
+    );
+
+    // 2) Checkpoint round-trip through the shared native format.
+    let path = std::env::temp_dir().join(format!("native_model_{}.ckpt", std::process::id()));
+    model.save(&path)?;
+    let reloaded = MitaModel::load(&path)?;
+    let lr = reloaded.forward(&tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)?;
+    println!("checkpoint round-trip: logits identical = {}", lr == lm);
+    std::fs::remove_file(&path).ok();
+
+    // 3) The same model behind the engine + dynamic batcher.
+    let attn = NativeAttnConfig::for_shape(n, dim, heads).with_model(model.cfg.clone());
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
+    engine.handle().bind_init("model", OP_MODEL_INIT, 7, 0)?;
+    let scfg = ModelServeConfig {
+        task: "listops".into(),
+        seq_len: n,
+        vocab: 16,
+        binding: "model".into(),
+        requests: 32,
+        rate: 0.0,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+    };
+    let report = serve_model(&engine.handle(), &scfg)?;
+    println!("{}", report.row());
+    engine.shutdown();
+    Ok(())
+}

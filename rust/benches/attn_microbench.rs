@@ -99,7 +99,9 @@ fn batched_sweep(quick: bool) -> Vec<(usize, f64, f64)> {
         mita::kernels::par::num_threads()
     );
 
-    let backend = NativeBackend::new(NativeAttnConfig { n, dim, heads, mita: cfg });
+    let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
+    attn.mita = cfg;
+    let backend = NativeBackend::new(attn);
     let per = n * dim;
     let mut ws = Workspace::new();
     let mut stats = MitaStats::default();

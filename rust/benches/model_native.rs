@@ -1,0 +1,225 @@
+//! Bench: end-to-end native MiTA transformer forward across the LRA task
+//! shapes — the model-level counterpart of `attn_microbench`.
+//!
+//! For each task shape the same parameters run twice, once with every
+//! block dispatched to `attn.mita` and once to `attn.dense` (the per-block
+//! kernel choice is the only difference), measuring:
+//!
+//! - **throughput**: batched forward latency / sequences-per-second;
+//! - **accuracy parity**: argmax agreement between the two models at the
+//!   real MiTA configuration (routing/compression effects at model level);
+//! - **strict parity**: max logits |Δ| on the landmarks-cover-everything
+//!   config (m = k = n, clamped to n ≤ 256 to keep the degenerate O(n²)
+//!   MiTA affordable), which must stay ≤ 1e-4;
+//! - **analytical FLOPs**: `flops::native_model_flops` per forward.
+//!
+//! Everything lands in `BENCH_model_native.json` so CI can archive the
+//! model-level perf trajectory next to the attention-kernel one.
+//!
+//! Quick mode for CI smoke runs: pass `--quick` after `--`, or set
+//! `MITA_BENCH_QUICK=1` (still covers three task shapes).
+
+use std::fmt::Write as _;
+
+use mita::data::lra;
+use mita::data::Split;
+use mita::flops;
+use mita::kernels::{MitaKernelConfig, MitaStats, WorkspacePool, OP_ATTN_DENSE, OP_ATTN_MITA};
+use mita::model::{MitaModel, ModelConfig, ModelScratch};
+use mita::util::bench::bench_for;
+
+/// Model shape shared by every row (the JSON metadata must never drift
+/// from what was actually measured).
+const DIM: usize = 64;
+const HEADS: usize = 4;
+const DEPTH: usize = 2;
+/// Examples per forward call.
+const BATCH: usize = 4;
+
+struct Row {
+    task: &'static str,
+    n: usize,
+    vocab: usize,
+    classes: usize,
+    m: usize,
+    k: usize,
+    dense_ms: f64,
+    mita_ms: f64,
+    parity: f32,
+    agreement: f64,
+    mita_flops: f64,
+    dense_flops: f64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MITA_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let shapes: &[(&str, usize)] = if quick {
+        &[("listops", 256), ("text", 256), ("image", 256)]
+    } else {
+        &[
+            ("listops", 256),
+            ("text", 512),
+            ("retrieval", 512),
+            ("image", 1024),
+            ("pathfinder", 1024),
+        ]
+    };
+    let budget = if quick { 0.3 } else { 1.0 };
+    println!(
+        "# model_native — MiTA vs dense blocks (dim={DIM}, heads={HEADS}, depth={DEPTH}, \
+         batch={BATCH}, quick={quick}, threads={})",
+        mita::kernels::par::num_threads()
+    );
+
+    let mut rows = Vec::new();
+    for &(name, n) in shapes {
+        let vocab = lra::default_vocab(name).expect("known task");
+        rows.push(run_shape(name, n, vocab, budget));
+    }
+
+    println!("\ntask, n, dense_ms, mita_ms, speedup, argmax_agreement, parity_max_diff");
+    for r in &rows {
+        println!(
+            "{}, {}, {:.3}, {:.3}, x{:.2}, {:.2}, {:.2e}",
+            r.task,
+            r.n,
+            r.dense_ms,
+            r.mita_ms,
+            r.dense_ms / r.mita_ms,
+            r.agreement,
+            r.parity
+        );
+    }
+    write_json(quick, &rows);
+}
+
+fn run_shape(name: &'static str, n: usize, vocab: usize, budget: f64) -> Row {
+    let task = lra::by_name(name, n, vocab, 0xBE9C);
+    let mcfg = ModelConfig::for_task(task.as_ref(), DIM, HEADS, DEPTH, OP_ATTN_MITA);
+    let model = MitaModel::init(mcfg.clone(), 7).expect("model init");
+    let dense = model.with_kernel(OP_ATTN_DENSE).expect("dense model");
+    let registry = model.registry();
+    let pool = WorkspacePool::new();
+    let mut scratch = ModelScratch::default();
+    let mut stats = MitaStats::default();
+    let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 0, BATCH);
+
+    let rm = bench_for(&format!("mita  {name} n={n}"), 1, budget, || {
+        model
+            .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
+            .expect("mita forward");
+    });
+    println!("{}  ({:.1} seqs/s)", rm.row(), rm.throughput(BATCH as f64));
+    let rd = bench_for(&format!("dense {name} n={n}"), 1, budget, || {
+        dense
+            .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
+            .expect("dense forward");
+    });
+    println!("{}  ({:.1} seqs/s)", rd.row(), rd.throughput(BATCH as f64));
+
+    // Accuracy parity at the real config: do routed and dense blocks pick
+    // the same class per example?
+    let lm = model
+        .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
+        .expect("mita logits");
+    let ld = dense
+        .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
+        .expect("dense logits");
+    let classes = mcfg.classes;
+    let agree = (0..BATCH)
+        .filter(|&i| {
+            let row = i * classes..(i + 1) * classes;
+            argmax(&lm[row.clone()]) == argmax(&ld[row])
+        })
+        .count() as f64
+        / BATCH as f64;
+
+    // Strict parity on the landmarks-cover-everything config (m = k = n),
+    // at a clamped sequence length so the degenerate O(n²) stays cheap.
+    let pn = n.min(256);
+    let ptask = lra::by_name(name, pn, vocab, 0xBE9C);
+    let pcfg = ModelConfig::for_task(ptask.as_ref(), DIM, HEADS, DEPTH, OP_ATTN_MITA)
+        .with_mita(MitaKernelConfig { m: pn, k: pn, cap_factor: 2, block_q: 8 });
+    let pmodel = MitaModel::init(pcfg, 7).expect("parity init");
+    let pdense = pmodel.with_kernel(OP_ATTN_DENSE).expect("parity dense");
+    let pregistry = pmodel.registry();
+    let (ptokens, _) = lra::batch_host(ptask.as_ref(), Split::Val, 0, 2);
+    let pa = pmodel
+        .forward(&ptokens, 2, 2, &pregistry, &pool, &mut scratch, &mut stats)
+        .expect("parity mita");
+    let pb = pdense
+        .forward(&ptokens, 2, 2, &pregistry, &pool, &mut scratch, &mut stats)
+        .expect("parity dense fwd");
+    let parity = pa.iter().zip(&pb).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    assert!(parity < 1e-4, "{name}: model-level parity broke (max|Δ| = {parity:.2e})");
+
+    Row {
+        task: name,
+        n,
+        vocab: task.vocab(),
+        classes,
+        m: mcfg.mita.m,
+        k: mcfg.mita.k,
+        dense_ms: rd.mean_secs * 1e3,
+        mita_ms: rm.mean_secs * 1e3,
+        parity,
+        agreement: agree,
+        mita_flops: flops::native_model_flops(&mcfg),
+        dense_flops: flops::native_model_flops(&dense.cfg),
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// JSON artifact for the CI perf trajectory: one MiTA-vs-dense row per
+/// LRA task shape, with throughput, parity, and model-level FLOPs.
+fn write_json(quick: bool, rows: &[Row]) {
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"model_native\",");
+    let _ = writeln!(json, "  \"dim\": {DIM},");
+    let _ = writeln!(json, "  \"heads\": {HEADS},");
+    let _ = writeln!(json, "  \"depth\": {DEPTH},");
+    let _ = writeln!(json, "  \"batch\": {BATCH},");
+    let _ = writeln!(json, "  \"quick\": {quick},");
+    let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"rows\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let (m_tp, d_tp) = (BATCH as f64 / r.mita_ms * 1e3, BATCH as f64 / r.dense_ms * 1e3);
+        let _ = writeln!(
+            json,
+            "    {{\"task\": \"{}\", \"n\": {}, \"vocab\": {}, \"classes\": {}, \"m\": {}, \
+             \"k\": {}, \"dense_ms\": {:.4}, \"mita_ms\": {:.4}, \"speedup\": {:.3}, \
+             \"mita_seqs_per_s\": {m_tp:.2}, \"dense_seqs_per_s\": {d_tp:.2}, \
+             \"argmax_agreement\": {:.3}, \"parity_max_diff\": {:.3e}, \
+             \"mita_model_flops\": {:.0}, \"dense_model_flops\": {:.0}}}{comma}",
+            r.task,
+            r.n,
+            r.vocab,
+            r.classes,
+            r.m,
+            r.k,
+            r.dense_ms,
+            r.mita_ms,
+            r.dense_ms / r.mita_ms,
+            r.agreement,
+            r.parity,
+            r.mita_flops,
+            r.dense_flops
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    std::fs::write("BENCH_model_native.json", json).expect("write BENCH_model_native.json");
+    println!("\nwrote BENCH_model_native.json");
+}

@@ -5,8 +5,9 @@
 //!   split as in vLLM's router architecture.
 //! - [`batcher`]: pure dynamic-batching policy (max-batch / max-wait).
 //! - [`server`]: async serving loop + load generator + latency accounting,
-//!   with a bundle-driven front ([`serve`]) and an artifact-free native
-//!   front ([`serve_native`]).
+//!   with a bundle-driven front ([`serve`]), an artifact-free native
+//!   attention front ([`serve_native`]), and a whole-model front over the
+//!   LRA tasks ([`serve_model`]).
 //! - [`trainer`]: AOT train-step driver with loss-curve tracking.
 //! - [`checkpoint`]: flat-parameter save/load.
 //! - [`metrics`]: histograms, streaming stats, mIoU.
@@ -20,5 +21,8 @@ pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
 pub use engine::{Engine, EngineHandle, EngineStats};
-pub use server::{serve, serve_native, NativeServeConfig, ServeConfig, ServeReport};
+pub use server::{
+    serve, serve_model, serve_native, ModelServeConfig, NativeServeConfig, ServeConfig,
+    ServeReport,
+};
 pub use trainer::{eval_checkpoint, EvalResult, Trainer};

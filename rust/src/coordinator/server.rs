@@ -12,6 +12,12 @@
 //!   `[1, 3, n, dim]` QKV bundles executed by the engine's
 //!   [`NativeBackend`](crate::runtime::NativeBackend) (`attn.mita` /
 //!   `attn.dense`), so the whole pipeline runs on a plain machine.
+//! - [`serve_model`]: whole-model native path. Requests are `[1, n]` i32
+//!   token sequences drawn from an LRA task and executed by the backend's
+//!   `model.forward` op against a bound [`MitaModel`] — end-to-end
+//!   classification serving with no artifacts.
+//!
+//! [`MitaModel`]: crate::model::MitaModel
 //!
 //! Std threads + channels (no async runtime in the vendored crate set);
 //! the generator runs on its own thread, the batching loop on the caller's.
@@ -28,8 +34,9 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher, Flush};
 use crate::coordinator::engine::EngineHandle;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::data::rng::Rng;
-use crate::data::{BatchSource, Split};
+use crate::data::{lra, BatchSource, Split};
 use crate::kernels::MitaStats;
+use crate::model::OP_MODEL_FORWARD;
 use crate::runtime::{BundleSpec, Tensor};
 
 /// Serving workload description (PJRT bundle path).
@@ -61,6 +68,26 @@ pub struct NativeServeConfig {
     pub dim: usize,
     /// Native op to execute: `attn.mita` or `attn.dense`.
     pub op: String,
+    pub requests: usize,
+    pub rate: f64,
+    pub queue_cap: usize,
+    pub policy: BatchPolicy,
+}
+
+/// Serving workload description (whole-model native path; requests are
+/// LRA task token sequences, the op is `model.forward`).
+#[derive(Debug, Clone)]
+pub struct ModelServeConfig {
+    /// LRA task generating the request token sequences
+    /// (one of [`lra::TASK_NAMES`]).
+    pub task: String,
+    /// Sequence length of each request (must match the bound model).
+    pub seq_len: usize,
+    /// Task vocabulary parameter (must match the bound model's vocab).
+    pub vocab: usize,
+    /// Engine parameter-binding key holding the model (created via
+    /// `bind_tensors` with a checkpoint or `bind_init` with `model.init`).
+    pub binding: String,
     pub requests: usize,
     pub rate: f64,
     pub queue_cap: usize,
@@ -371,6 +398,39 @@ pub fn serve_native(engine: &EngineHandle, cfg: &NativeServeConfig) -> Result<Se
         op: &cfg.op,
         binding: None,
         mark_valid: true, // native backend skips padded batch rows
+        requests: cfg.requests,
+        rate: cfg.rate,
+        queue_cap: cfg.queue_cap,
+        policy: cfg.policy,
+    };
+    serve_loop(engine, &spec, &pool)
+}
+
+/// Run the serving benchmark against a whole model on the engine's native
+/// backend: requests are single LRA-task token sequences, each dispatched
+/// batch runs `model.forward` against the `cfg.binding` model with a
+/// valid-rows marker (padding rows are never computed), and the report's
+/// `mita` stats cover exactly this run's routed queries across every
+/// MiTA block of the model.
+pub fn serve_model(engine: &EngineHandle, cfg: &ModelServeConfig) -> Result<ServeReport> {
+    let seed = crate::data::loader::DEFAULT_SEED;
+    let task = lra::try_by_name(&cfg.task, cfg.seq_len, cfg.vocab, seed)?;
+    let n = task.seq_len();
+
+    // Pre-generate the client request pool from the val split.
+    let pool_size = 16usize;
+    let mut pool: Vec<Tensor> = Vec::with_capacity(pool_size);
+    for i in 0..pool_size {
+        let (tokens, _) = task.sample(Split::Val, i as u64);
+        pool.push(Tensor::i32(&[1, n], tokens)?);
+    }
+
+    let label = format!("model/{} n={n}", cfg.task);
+    let spec = LoopSpec {
+        label: &label,
+        op: OP_MODEL_FORWARD,
+        binding: Some(&cfg.binding),
+        mark_valid: true, // the model computes only real batch rows
         requests: cfg.requests,
         rate: cfg.rate,
         queue_cap: cfg.queue_cap,

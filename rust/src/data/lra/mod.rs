@@ -18,6 +18,9 @@ use crate::data::images::Split;
 use crate::runtime::Tensor;
 use anyhow::Result;
 
+/// The five LRA-style task names [`by_name`] accepts.
+pub const TASK_NAMES: [&str; 5] = ["listops", "text", "retrieval", "image", "pathfinder"];
+
 /// A sequence-classification task: token ids in [0, vocab), one label.
 pub trait SeqTask {
     fn name(&self) -> &'static str;
@@ -28,8 +31,16 @@ pub trait SeqTask {
     fn sample(&self, split: Split, idx: u64) -> (Vec<i32>, i32);
 }
 
-/// Build a batch (x [B, N] i32, y [B] i32) from any task.
-pub fn batch(task: &dyn SeqTask, split: Split, start: u64, bsz: usize) -> Result<(Tensor, Tensor)> {
+/// Build a batch as plain host buffers — row-major tokens `[bsz · N]` plus
+/// `[bsz]` labels. This is the generation primitive: it needs no runtime,
+/// no tensor type, and no artifacts, so the native model path and the
+/// benches consume it directly.
+pub fn batch_host(
+    task: &dyn SeqTask,
+    split: Split,
+    start: u64,
+    bsz: usize,
+) -> (Vec<i32>, Vec<i32>) {
     let n = task.seq_len();
     let mut xs = Vec::with_capacity(bsz * n);
     let mut ys = Vec::with_capacity(bsz);
@@ -39,6 +50,14 @@ pub fn batch(task: &dyn SeqTask, split: Split, start: u64, bsz: usize) -> Result
         xs.extend_from_slice(&tokens);
         ys.push(label);
     }
+    (xs, ys)
+}
+
+/// Thin [`Tensor`] adapter over [`batch_host`] for the PJRT bundle path:
+/// (x [B, N] i32, y [B] i32).
+pub fn batch(task: &dyn SeqTask, split: Split, start: u64, bsz: usize) -> Result<(Tensor, Tensor)> {
+    let n = task.seq_len();
+    let (xs, ys) = batch_host(task, split, start, bsz);
     Ok((Tensor::i32(&[bsz, n], xs)?, Tensor::i32(&[bsz], ys)?))
 }
 
@@ -52,6 +71,52 @@ pub fn by_name(name: &str, seq_len: usize, vocab: usize, seed: u64) -> Box<dyn S
         "pathfinder" => Box::new(pathfinder::Pathfinder::new(seq_len, seed)),
         other => panic!("unknown LRA task {other:?}"),
     }
+}
+
+/// The canonical vocabulary argument for a task name (`None` for unknown
+/// names) — the single source of truth the CLI defaults and tests share.
+/// Matches what the task constructors expect / fix internally: listops and
+/// pathfinder have hard-wired vocabularies, text/retrieval need room for
+/// their signal sets, image uses it as the quantization bin count.
+pub fn default_vocab(name: &str) -> Option<usize> {
+    match name {
+        "listops" => Some(listops::VOCAB),
+        "text" | "retrieval" => Some(64),
+        "image" => Some(32),
+        "pathfinder" => Some(4),
+        _ => None,
+    }
+}
+
+/// Non-panicking [`by_name`]: validates the task name and the shape
+/// constraints the constructors would otherwise `assert!` on (a CLI typo
+/// should be an error, not a process abort).
+pub fn try_by_name(
+    name: &str,
+    seq_len: usize,
+    vocab: usize,
+    seed: u64,
+) -> Result<Box<dyn SeqTask>> {
+    anyhow::ensure!(
+        TASK_NAMES.contains(&name),
+        "unknown LRA task {name:?} (expected one of {TASK_NAMES:?})"
+    );
+    if matches!(name, "image" | "pathfinder") {
+        let side = (seq_len as f64).sqrt() as usize;
+        anyhow::ensure!(
+            side * side == seq_len,
+            "{name} needs a perfect-square seq_len, got {seq_len}"
+        );
+    }
+    match name {
+        "text" => anyhow::ensure!(vocab >= 24, "text needs vocab >= 24, got {vocab}"),
+        "retrieval" => anyhow::ensure!(
+            vocab >= 32 && seq_len >= 32,
+            "retrieval needs vocab >= 32 and seq_len >= 32, got ({vocab}, {seq_len})"
+        ),
+        _ => {}
+    }
+    Ok(by_name(name, seq_len, vocab, seed))
 }
 
 #[cfg(test)]
@@ -109,5 +174,70 @@ mod tests {
         let (x, y) = batch(t.as_ref(), Split::Train, 0, 8).unwrap();
         assert_eq!(x.shape(), &[8, 512]);
         assert_eq!(y.shape(), &[8]);
+    }
+
+    /// The SeqTask contract, pinned for all five tasks: `sample(split,
+    /// idx)` is reproducible across calls *and* across task instances,
+    /// tokens stay inside the vocabulary, labels inside the class set,
+    /// and every sequence is exactly `seq_len` long. n = 64 is a perfect
+    /// square, so it is valid for every task.
+    #[test]
+    fn all_tasks_deterministic_and_bounded() {
+        for name in TASK_NAMES {
+            let (n, vocab) = (64, default_vocab(name).unwrap());
+            let t = try_by_name(name, n, vocab, 9).unwrap();
+            let fresh = try_by_name(name, n, vocab, 9).unwrap(); // same seed, new instance
+            for split in [Split::Train, Split::Val] {
+                for idx in 0..12u64 {
+                    let (tokens, label) = t.sample(split, idx);
+                    assert_eq!(
+                        t.sample(split, idx),
+                        (tokens.clone(), label),
+                        "{name}: resample must be identical"
+                    );
+                    assert_eq!(
+                        fresh.sample(split, idx),
+                        (tokens.clone(), label),
+                        "{name}: fresh instance must agree"
+                    );
+                    assert_eq!(tokens.len(), t.seq_len(), "{name}: length != seq_len");
+                    assert!(
+                        tokens.iter().all(|&x| (0..t.vocab() as i32).contains(&x)),
+                        "{name}: token outside [0, vocab)"
+                    );
+                    assert!(
+                        (0..t.classes() as i32).contains(&label),
+                        "{name}: label {label} outside [0, classes)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_host_matches_tensor_batch() {
+        let t = by_name("text", 128, 64, 1);
+        let (xs, ys) = batch_host(t.as_ref(), Split::Train, 3, 4);
+        assert_eq!(xs.len(), 4 * 128);
+        assert_eq!(ys.len(), 4);
+        let (x, y) = batch(t.as_ref(), Split::Train, 3, 4).unwrap();
+        assert_eq!(x.as_i32().unwrap(), xs.as_slice());
+        assert_eq!(y.as_i32().unwrap(), ys.as_slice());
+        // Random access: batch 3 regenerated standalone matches.
+        let (one, _) = batch_host(t.as_ref(), Split::Train, 5, 1);
+        assert_eq!(&xs[2 * 128..3 * 128], one.as_slice());
+    }
+
+    #[test]
+    fn try_by_name_rejects_bad_shapes_without_panicking() {
+        assert!(try_by_name("nope", 64, 16, 1).is_err());
+        assert!(try_by_name("image", 200, 32, 1).is_err(), "200 is not a perfect square");
+        assert!(try_by_name("pathfinder", 65, 4, 1).is_err());
+        assert!(try_by_name("text", 64, 8, 1).is_err(), "text vocab floor");
+        assert!(try_by_name("retrieval", 16, 64, 1).is_err(), "retrieval seq floor");
+        for name in TASK_NAMES {
+            assert!(try_by_name(name, 256, default_vocab(name).unwrap(), 1).is_ok(), "{name}");
+        }
+        assert!(default_vocab("nope").is_none());
     }
 }

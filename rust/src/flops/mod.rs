@@ -5,6 +5,8 @@
 //! costs are counted at 1 FLOP per element pass (they are negligible next
 //! to the matmuls, but included for honesty at small N).
 
+use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+use crate::model::ModelConfig;
 use crate::runtime::ModelCfg;
 
 /// FLOPs of one attention layer's token mixing for a single example,
@@ -115,6 +117,60 @@ pub fn param_count(cfg: &ModelCfg) -> usize {
     p
 }
 
+// ---------------------------------------------------------------------------
+// Native model subsystem (crate::model) accounting
+// ---------------------------------------------------------------------------
+
+/// FLOPs of one *native* attention op for a single example — the token
+/// mixing the registry kernel actually executes, summed over heads and
+/// excluding the qkv/proj projections (those are counted per block in
+/// [`native_model_flops`]). `attn.mita` mirrors the kernel's stages:
+/// landmark pooling, landmark scores, routing logits + top-k selection,
+/// then per-query attention over the expert's k gathered KV pairs.
+pub fn native_attention_flops(cfg: &ModelConfig, kernel: &str) -> f64 {
+    let n = cfg.seq_len as f64;
+    let d = cfg.head_dim() as f64;
+    let h = cfg.heads as f64;
+    let per_head = match kernel {
+        OP_ATTN_DENSE => 2.0 * n * n * d + 2.0 * n * n * d + 3.0 * n * n,
+        OP_ATTN_MITA => {
+            let m = cfg.mita.m.clamp(1, cfg.seq_len) as f64;
+            let k = cfg.mita.k.clamp(1, cfg.seq_len) as f64;
+            let landmarks = n * d; // adaptive pooling over Q
+            let scores = 2.0 * n * m * d; // K Q̃ᵀ
+            let routing = 2.0 * n * m * d; // Q Q̃ᵀ + argmax
+            let topk = m * n * k.log2().max(1.0); // top-k selection
+            let attn = 2.0 * n * k * d * 2.0 + 3.0 * n * k; // per-query over k pairs
+            landmarks + scores + routing + topk + attn
+        }
+        other => panic!("unknown native attention kernel {other:?}"),
+    };
+    per_head * h
+}
+
+/// FLOPs of one full native-model forward pass for a single example:
+/// embedding + per-block (qkv, attention via the block's kernel, proj,
+/// MLP, layernorms) + final LN, mean-pool, and classifier head. This is
+/// the model-level complexity column of `BENCH_model_native.json`.
+pub fn native_model_flops(cfg: &ModelConfig) -> f64 {
+    let n = cfg.seq_len as f64;
+    let dim = cfg.dim as f64;
+    let hidden = cfg.mlp_hidden as f64;
+
+    let embed = 2.0 * n * dim; // table lookup + positional add
+    let mut total = embed;
+    for kernel in &cfg.block_kernels {
+        total += 2.0 * n * dim * (3.0 * dim) // qkv projections
+            + 2.0 * n * dim * dim // output projection
+            + 2.0 * n * dim * hidden * 2.0 // MLP fc1 + fc2
+            + 2.0 * 5.0 * n * dim // two layernorms
+            + native_attention_flops(cfg, kernel);
+    }
+    total + 5.0 * n * dim // final layernorm
+        + n * dim // mean pool
+        + 2.0 * dim * cfg.classes as f64 // head
+}
+
 /// Human-readable GFLOPs.
 pub fn gflops(f: f64) -> String {
     if f >= 1e9 {
@@ -201,5 +257,39 @@ mod tests {
     fn model_flops_dominated_by_blocks() {
         let c = cfg("standard", 8, 16, 16);
         assert!(model_flops(&c) > attention_flops(&c) * c.depth as f64);
+    }
+
+    fn native_cfg(n: usize, kernel: &str) -> ModelConfig {
+        let mut c = ModelConfig::new(32, n, 64, 4, 2, 128, 10, kernel);
+        // Fix (m, k) across n so the scaling test isolates the N term.
+        c.mita = crate::kernels::MitaKernelConfig { m: 16, k: 64, cap_factor: 2, block_q: 16 };
+        c
+    }
+
+    #[test]
+    fn native_dense_blocks_quadratic_mita_blocks_linear() {
+        // 4x the tokens: ~16x dense-block attention, ~4x MiTA-block.
+        let dense_r = native_attention_flops(&native_cfg(4096, OP_ATTN_DENSE), OP_ATTN_DENSE)
+            / native_attention_flops(&native_cfg(1024, OP_ATTN_DENSE), OP_ATTN_DENSE);
+        let mita_r = native_attention_flops(&native_cfg(4096, OP_ATTN_MITA), OP_ATTN_MITA)
+            / native_attention_flops(&native_cfg(1024, OP_ATTN_MITA), OP_ATTN_MITA);
+        assert!(dense_r > 14.0 && dense_r < 18.0, "dense ratio {dense_r}");
+        assert!(mita_r > 3.5 && mita_r < 4.5, "mita ratio {mita_r}");
+    }
+
+    #[test]
+    fn native_model_flops_sum_blocks_and_respect_kernels() {
+        let mita = native_cfg(1024, OP_ATTN_MITA);
+        let dense = mita.clone().with_kernel(OP_ATTN_DENSE);
+        assert!(native_model_flops(&dense) > native_model_flops(&mita));
+        // A mixed model sits strictly between the uniform ones.
+        let mut mixed = mita.clone();
+        mixed.block_kernels[0] = OP_ATTN_DENSE.to_string();
+        let (lo, mid, hi) =
+            (native_model_flops(&mita), native_model_flops(&mixed), native_model_flops(&dense));
+        assert!(lo < mid && mid < hi, "{lo} < {mid} < {hi}");
+        // Model total strictly exceeds its attention mixing alone.
+        let attn_total = 2.0 * native_attention_flops(&mita, OP_ATTN_MITA);
+        assert!(native_model_flops(&mita) > attn_total);
     }
 }

@@ -14,6 +14,9 @@
 //!   `AttentionKernel` registry, zero-alloc `Workspace` arenas, and
 //!   batched (example × head) parallel dispatch — so serving and
 //!   benchmarking run on machines with no PJRT closure at all.
+//! - **L3-model** (`model`): a native MiTA Transformer over that stack —
+//!   pre-LN blocks whose attention resolves per block through the kernel
+//!   registry — served end-to-end over the LRA tasks via `model.forward`.
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -23,6 +26,7 @@ pub mod flops;
 pub mod harness;
 pub mod kernels;
 pub mod mita;
+pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod util;

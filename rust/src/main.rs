@@ -11,6 +11,8 @@
 //!   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W]
 //!   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K]
 //!   serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
+//!   model-check [--seq-len N] [--dim D] [--heads H] [--depth L]
+//!   serve-model [--task T] [--seq-len N] [--op attn.mita|attn.dense] [--checkpoint F]
 //!   table2|table3|table4|table5|table6|table7 [--steps N] [--seed S]
 //!   figure5 [--requests N] | figure9 | figure10 | figures (3/4/8)
 //!   complexity                        FLOPs-vs-N scaling table
@@ -23,13 +25,21 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::{serve, serve_native, Engine, NativeServeConfig, ServeConfig, Trainer};
+use mita::coordinator::{
+    serve, serve_model, serve_native, Engine, ModelServeConfig, NativeServeConfig, ServeConfig,
+    Trainer,
+};
+use mita::data::lra::{self, SeqTask};
 use mita::data::rng::Rng;
-use mita::data::BatchSource;
+use mita::data::{BatchSource, Split};
 use mita::flops;
 use mita::harness::tables::{self, Opts};
 use mita::harness::{figures, train_bundle};
-use mita::kernels::{dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, Workspace};
+use mita::kernels::{
+    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, Workspace, WorkspacePool,
+    OP_ATTN_DENSE, OP_ATTN_MITA,
+};
+use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_INIT};
 use mita::report::Table;
 use mita::runtime::{BackendSpec, NativeAttnConfig, Runtime};
 use mita::util::cli;
@@ -58,6 +68,11 @@ const VALUED_FLAGS: &[&str] = &[
     "block-q",
     "op",
     "max-batch",
+    // native model subsystem
+    "task",
+    "seq-len",
+    "vocab",
+    "depth",
 ];
 
 fn main() -> Result<()> {
@@ -352,6 +367,101 @@ fn main() -> Result<()> {
             println!("{}", report.row());
             engine.shutdown();
         }
+        "model-check" => {
+            let dim = args.flag_parse("dim", 32usize)?;
+            let heads = args.flag_parse("heads", 2usize)?;
+            let depth = args.flag_parse("depth", 2usize)?;
+            let seq = args.flag_parse("seq-len", 64usize)?;
+            anyhow::ensure!(
+                heads >= 1 && dim % heads == 0,
+                "--dim {dim} must divide into --heads {heads}"
+            );
+            let side = (seq as f64).sqrt() as usize;
+            anyhow::ensure!(
+                side * side == seq,
+                "--seq-len {seq} must be a perfect square (image/pathfinder tasks)"
+            );
+            println!("# model-check: dim={dim} heads={heads} depth={depth} seq_len={seq}");
+            let mut all_ok = true;
+            for name in lra::TASK_NAMES {
+                let (_, vocab) = lra_task_defaults(name)?;
+                let task = lra::try_by_name(name, seq, vocab, opts.seed as u64)?;
+                all_ok &= model_check_task(task.as_ref(), dim, heads, depth, opts.seed as u64)?;
+            }
+            if !all_ok {
+                bail!("model-check failed (parity or checkpoint round-trip above)");
+            }
+        }
+        "serve-model" => {
+            let task_name = args.flag_or("task", "listops");
+            let (def_n, def_vocab) = lra_task_defaults(&task_name)?;
+            let seq = args.flag_parse("seq-len", def_n)?;
+            let vocab = args.flag_parse("vocab", def_vocab)?;
+            let dim = args.flag_parse("dim", 64usize)?;
+            let heads = args.flag_parse("heads", 4usize)?;
+            let depth = args.flag_parse("depth", 2usize)?;
+            anyhow::ensure!(
+                heads >= 1 && dim % heads == 0,
+                "--dim {dim} must divide into --heads {heads}"
+            );
+            let kernel = args.flag_or("op", "attn.mita");
+            let task = lra::try_by_name(&task_name, seq, vocab, opts.seed as u64)?;
+            let mut mcfg = ModelConfig::for_task(task.as_ref(), dim, heads, depth, &kernel);
+            mcfg.mita = native_kernel_config(&args, task.seq_len())?;
+            let attn = NativeAttnConfig::for_shape(task.seq_len(), dim, heads).with_model(mcfg);
+            let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
+            // Bind the model: --checkpoint if given, else seeded init.
+            match args.flag("checkpoint") {
+                Some(path) => {
+                    let tensors =
+                        mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
+                    // Fail at bind time, not mid-pipeline: the checkpoint's
+                    // self-describing config (the cheap leading descriptor
+                    // tensor — no need to parse the parameters here) must
+                    // fit the task geometry.
+                    anyhow::ensure!(!tensors.is_empty(), "checkpoint {path:?} is empty");
+                    let ckpt = ModelConfig::from_tensor(&tensors[0])?;
+                    anyhow::ensure!(
+                        ckpt.seq_len == task.seq_len(),
+                        "checkpoint seq_len {} != task seq_len {} (pass a matching --seq-len)",
+                        ckpt.seq_len,
+                        task.seq_len()
+                    );
+                    anyhow::ensure!(
+                        ckpt.vocab >= task.vocab(),
+                        "checkpoint vocab {} cannot embed task vocab {}",
+                        ckpt.vocab,
+                        task.vocab()
+                    );
+                    anyhow::ensure!(
+                        ckpt.classes == task.classes(),
+                        "checkpoint classes {} != task classes {}",
+                        ckpt.classes,
+                        task.classes()
+                    );
+                    engine.handle().bind_tensors("model", tensors)?;
+                }
+                None => engine.handle().bind_init("model", OP_MODEL_INIT, opts.seed, 0)?,
+            }
+            let cfg = ModelServeConfig {
+                task: task_name,
+                seq_len: task.seq_len(),
+                vocab: task.vocab(),
+                binding: "model".into(),
+                requests: args.flag_parse("requests", 64usize)?,
+                rate: args.flag_parse("rate", 0.0f64)?,
+                queue_cap: args.flag_parse("queue-cap", 128usize)?,
+                policy: BatchPolicy {
+                    max_batch: args.flag_parse("max-batch", 8usize)?,
+                    max_wait: std::time::Duration::from_millis(
+                        args.flag_parse("max-wait-ms", 5u64)?,
+                    ),
+                },
+            };
+            let report = serve_model(&engine.handle(), &cfg)?;
+            println!("{}", report.row());
+            engine.shutdown();
+        }
         // Utility used by examples/tests to sanity-check one bundle quickly.
         "quickcheck" => {
             let rt = Runtime::load(&artifacts)?;
@@ -380,6 +490,84 @@ fn native_kernel_config(args: &cli::Args, n: usize) -> Result<MitaKernelConfig> 
     })
 }
 
+/// Default (seq_len, vocab) per LRA task for the model CLI commands
+/// (vocab comes from the canonical `lra::default_vocab` table).
+fn lra_task_defaults(name: &str) -> Result<(usize, usize)> {
+    match lra::default_vocab(name) {
+        Some(vocab) => Ok((256, vocab)),
+        None => bail!("unknown LRA task {name:?} (expected one of {:?})", lra::TASK_NAMES),
+    }
+}
+
+/// One LRA task's model-level checks: MiTA-vs-dense logits parity on the
+/// landmarks-cover-everything config (m = k = n), real-config timing +
+/// routing stats, and a checkpoint save/load round-trip. Prints one row;
+/// returns whether every check passed.
+fn model_check_task(
+    task: &dyn SeqTask,
+    dim: usize,
+    heads: usize,
+    depth: usize,
+    seed: u64,
+) -> Result<bool> {
+    let n = task.seq_len();
+    let bsz = 2usize;
+    let (tokens, _) = lra::batch_host(task, Split::Val, 0, bsz);
+    let pool = WorkspacePool::new();
+    let mut scratch = ModelScratch::default();
+    let mut stats = MitaStats::default();
+
+    // 1) Parity: with m = k = n every expert gathers the full KV set, so
+    //    MiTA blocks must reproduce dense blocks within fp tolerance.
+    let pcfg = MitaKernelConfig { m: n, k: n, cap_factor: 2, block_q: 8 };
+    let cfg = ModelConfig::for_task(task, dim, heads, depth, OP_ATTN_MITA).with_mita(pcfg);
+    let pmodel = MitaModel::init(cfg, seed)?;
+    let pregistry = pmodel.registry();
+    let lm = pmodel.forward(&tokens, bsz, bsz, &pregistry, &pool, &mut scratch, &mut stats)?;
+    let pdense = pmodel.with_kernel(OP_ATTN_DENSE)?;
+    let ld = pdense.forward(&tokens, bsz, bsz, &pregistry, &pool, &mut scratch, &mut stats)?;
+    let max_diff = lm.iter().zip(&ld).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    let parity_ok = max_diff < 1e-4;
+
+    // 2) Real config: timing + routing stats, MiTA vs dense blocks.
+    let cfg = ModelConfig::for_task(task, dim, heads, depth, OP_ATTN_MITA);
+    let model = MitaModel::init(cfg, seed)?;
+    let registry = model.registry();
+    let dense = model.with_kernel(OP_ATTN_DENSE)?;
+    stats.reset();
+    let t0 = Instant::now();
+    let logits = model.forward(&tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)?;
+    let mita_secs = t0.elapsed().as_secs_f64();
+    let ovf = stats.overflow_fraction();
+    let t0 = Instant::now();
+    dense.forward(&tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)?;
+    let dense_secs = t0.elapsed().as_secs_f64();
+
+    // 3) Checkpoint round-trip: the reloaded model must agree bit-for-bit.
+    let dir = std::env::temp_dir().join(format!("mita_model_check_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{}.ckpt", task.name()));
+    model.save(&path)?;
+    let loaded = MitaModel::load(&path)?;
+    let lr = loaded.forward(&tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)?;
+    let roundtrip_ok = lr == logits && loaded.cfg == model.cfg;
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_dir(&dir).ok(); // non-recursive: only removes once empty
+
+    println!(
+        "{:10} n={n:4} parity max|Δ|={max_diff:.2e} [{}]  mita={:7.2}ms dense={:7.2}ms (x{:.2}) \
+         ovf={:4.1}%  ckpt roundtrip [{}]",
+        task.name(),
+        if parity_ok { "OK" } else { "FAIL" },
+        mita_secs * 1e3,
+        dense_secs * 1e3,
+        dense_secs / mita_secs,
+        ovf * 100.0,
+        if roundtrip_ok { "OK" } else { "FAIL" },
+    );
+    Ok(parity_ok && roundtrip_ok)
+}
+
 const HELP: &str = r#"mita — MiTA attention coordinator (rust + JAX/Pallas AOT)
 
 usage: mita [--artifacts DIR] <command> [args]
@@ -400,6 +588,16 @@ native backend (pure-Rust kernels, no artifacts or Python needed):
   serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
                [--requests R] [--rate R] [--max-batch B] [--max-wait-ms W]
            dynamic-batching serving benchmark over the native backend
+
+native model subsystem (full MiTA transformer over the kernel registry):
+  model-check [--seq-len N] [--dim D] [--heads H] [--depth L] [--seed S]
+           per-LRA-task checks: MiTA-vs-dense logits parity (m = k = n),
+           forward timing + routing stats, checkpoint round-trip
+  serve-model [--task listops|text|retrieval|image|pathfinder] [--seq-len N]
+              [--dim D] [--heads H] [--depth L] [--op attn.mita|attn.dense]
+              [--checkpoint F] [--requests R] [--rate R] [--max-batch B]
+           whole-model classification serving over an LRA task (requests
+           are token sequences; the engine runs model.forward per batch)
 
 paper reproduction (see DESIGN.md experiment index):
   table2   from-scratch image classification (attention varied only)

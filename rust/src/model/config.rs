@@ -1,0 +1,311 @@
+//! Model configuration of the native MiTA transformer.
+//!
+//! A [`ModelConfig`] fixes the token geometry (vocab, sequence length,
+//! classes), the transformer shape (dim, heads, depth, MLP width), the
+//! shared MiTA kernel parameters, and — the part that makes attention
+//! kernels drop-in — a *per-block* attention kernel registry name
+//! (`attn.mita` / `attn.dense`), so a model can mix routed and dense
+//! blocks freely. The config round-trips through a single i32 tensor so a
+//! checkpoint (see [`crate::coordinator::checkpoint`]) is self-describing:
+//!
+//! ```text
+//! [version, vocab, seq_len, dim, heads, depth, mlp_hidden, classes,
+//!  m, k, cap_factor, block_q, kernel_id × depth]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::lra::SeqTask;
+use crate::kernels::{MitaKernelConfig, OP_ATTN_DENSE, OP_ATTN_MITA};
+use crate::runtime::Tensor;
+
+/// Version tag of the checkpoint config tensor.
+const CONFIG_VERSION: i32 = 1;
+
+/// Registry-name ↔ checkpoint-id mapping for per-block attention kernels.
+const KERNEL_IDS: &[(&str, i32)] = &[(OP_ATTN_MITA, 0), (OP_ATTN_DENSE, 1)];
+
+fn kernel_id(name: &str) -> Result<i32> {
+    match KERNEL_IDS.iter().find(|(n, _)| *n == name) {
+        Some(&(_, id)) => Ok(id),
+        None => bail!(
+            "attention kernel {name:?} is not checkpointable (known: {})",
+            KERNEL_IDS.iter().map(|&(n, _)| n).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+fn kernel_name(id: i32) -> Result<&'static str> {
+    match KERNEL_IDS.iter().find(|(_, i)| *i == id) {
+        Some(&(name, _)) => Ok(name),
+        None => bail!("unknown attention kernel id {id} in model config"),
+    }
+}
+
+fn as_dim(x: i32, what: &str) -> Result<usize> {
+    anyhow::ensure!(x >= 0, "model config {what} is negative ({x})");
+    Ok(x as usize)
+}
+
+/// Shape + kernel-selection description of one native MiTA transformer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Token vocabulary size (embedding rows).
+    pub vocab: usize,
+    /// Sequence length (fixed; the positional table has this many rows).
+    pub seq_len: usize,
+    /// Model dimension (`heads · head_dim`).
+    pub dim: usize,
+    /// Attention heads per block.
+    pub heads: usize,
+    /// Transformer blocks.
+    pub depth: usize,
+    /// Hidden width of each block's GELU MLP.
+    pub mlp_hidden: usize,
+    /// Classifier output classes.
+    pub classes: usize,
+    /// MiTA kernel parameters shared by every `attn.mita` block.
+    pub mita: MitaKernelConfig,
+    /// Per-block attention kernel registry names (`len == depth`); blocks
+    /// may mix `attn.mita` and `attn.dense`.
+    pub block_kernels: Vec<String>,
+}
+
+impl ModelConfig {
+    /// A config with every block dispatching through `kernel` and
+    /// paper-flavored MiTA parameters for the sequence length.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        vocab: usize,
+        seq_len: usize,
+        dim: usize,
+        heads: usize,
+        depth: usize,
+        mlp_hidden: usize,
+        classes: usize,
+        kernel: &str,
+    ) -> Self {
+        ModelConfig {
+            vocab,
+            seq_len,
+            dim,
+            heads,
+            depth,
+            mlp_hidden,
+            classes,
+            mita: MitaKernelConfig::for_seq(seq_len),
+            block_kernels: vec![kernel.to_string(); depth],
+        }
+    }
+
+    /// Shape a model for an LRA task: vocab / sequence length / classes
+    /// come from the task, the MLP hidden width defaults to `2 · dim`.
+    pub fn for_task(
+        task: &dyn SeqTask,
+        dim: usize,
+        heads: usize,
+        depth: usize,
+        kernel: &str,
+    ) -> Self {
+        let (vocab, n, classes) = (task.vocab(), task.seq_len(), task.classes());
+        ModelConfig::new(vocab, n, dim, heads, depth, 2 * dim, classes, kernel)
+    }
+
+    /// Same config with every block dispatched to `kernel` instead.
+    pub fn with_kernel(mut self, kernel: &str) -> Self {
+        for k in &mut self.block_kernels {
+            *k = kernel.to_string();
+        }
+        self
+    }
+
+    /// Same config with different MiTA kernel parameters.
+    pub fn with_mita(mut self, mita: MitaKernelConfig) -> Self {
+        self.mita = mita;
+        self
+    }
+
+    /// Per-head feature dimension.
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+
+    /// Total trainable f32 parameter count (mirrors `ModelParams::init`).
+    pub fn param_count(&self) -> usize {
+        let (d, h) = (self.dim, self.mlp_hidden);
+        let block = 2 * d                // ln1
+            + 3 * (d * d + d)           // q/k/v projections
+            + d * d + d                 // output projection
+            + 2 * d                     // ln2
+            + d * h + h                 // fc1
+            + h * d + d;                // fc2
+        self.vocab * d                  // token embedding
+            + self.seq_len * d          // positional embedding
+            + self.depth * block
+            + 2 * d                     // final layernorm
+            + self.classes * d + self.classes // head
+    }
+
+    /// Structural validity: non-degenerate shape, heads divide dim, one
+    /// checkpointable kernel name per block.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.vocab >= 1 && self.seq_len >= 1 && self.classes >= 1,
+            "degenerate token geometry (vocab {}, seq_len {}, classes {})",
+            self.vocab,
+            self.seq_len,
+            self.classes
+        );
+        anyhow::ensure!(self.depth >= 1 && self.mlp_hidden >= 1, "degenerate depth/MLP width");
+        anyhow::ensure!(
+            self.heads >= 1 && self.dim >= 1 && self.dim % self.heads == 0,
+            "model dim {} not divisible by {} heads",
+            self.dim,
+            self.heads
+        );
+        anyhow::ensure!(
+            self.block_kernels.len() == self.depth,
+            "{} block kernels for depth {}",
+            self.block_kernels.len(),
+            self.depth
+        );
+        for name in &self.block_kernels {
+            kernel_id(name)?;
+        }
+        Ok(())
+    }
+
+    /// Encode as the checkpoint's leading i32 config tensor.
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        self.validate()?;
+        let mut data = vec![
+            CONFIG_VERSION,
+            self.vocab as i32,
+            self.seq_len as i32,
+            self.dim as i32,
+            self.heads as i32,
+            self.depth as i32,
+            self.mlp_hidden as i32,
+            self.classes as i32,
+            self.mita.m as i32,
+            self.mita.k as i32,
+            self.mita.cap_factor as i32,
+            self.mita.block_q as i32,
+        ];
+        for name in &self.block_kernels {
+            data.push(kernel_id(name)?);
+        }
+        let len = data.len();
+        Tensor::i32(&[len], data)
+    }
+
+    /// Decode from a checkpoint's leading config tensor.
+    pub fn from_tensor(t: &Tensor) -> Result<Self> {
+        let data = t.as_i32().context("model config tensor must be i32")?;
+        anyhow::ensure!(
+            data.len() >= 12,
+            "model config tensor holds {} values, want >= 12",
+            data.len()
+        );
+        anyhow::ensure!(data[0] == CONFIG_VERSION, "unsupported model config version {}", data[0]);
+        let depth = as_dim(data[5], "depth")?;
+        anyhow::ensure!(
+            data.len() == 12 + depth,
+            "model config tensor holds {} values, want {} for depth {depth}",
+            data.len(),
+            12 + depth
+        );
+        let block_kernels = data[12..]
+            .iter()
+            .map(|&id| kernel_name(id).map(str::to_string))
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = ModelConfig {
+            vocab: as_dim(data[1], "vocab")?,
+            seq_len: as_dim(data[2], "seq_len")?,
+            dim: as_dim(data[3], "dim")?,
+            heads: as_dim(data[4], "heads")?,
+            depth,
+            mlp_hidden: as_dim(data[6], "mlp_hidden")?,
+            classes: as_dim(data[7], "classes")?,
+            mita: MitaKernelConfig {
+                m: as_dim(data[8], "m")?,
+                k: as_dim(data[9], "k")?,
+                cap_factor: as_dim(data[10], "cap_factor")?,
+                block_q: as_dim(data[11], "block_q")?,
+            },
+            block_kernels,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::lra;
+
+    #[test]
+    fn config_tensor_roundtrip() {
+        let mut cfg = ModelConfig::new(16, 64, 32, 2, 3, 64, 10, OP_ATTN_MITA);
+        cfg.block_kernels[1] = OP_ATTN_DENSE.to_string(); // mixed blocks survive
+        let t = cfg.to_tensor().unwrap();
+        assert_eq!(t.shape(), &[15]);
+        let back = ModelConfig::from_tensor(&t).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn for_task_matches_task_geometry() {
+        let task = lra::by_name("listops", 256, 16, 1);
+        let cfg = ModelConfig::for_task(task.as_ref(), 64, 4, 2, OP_ATTN_MITA);
+        assert_eq!((cfg.vocab, cfg.seq_len, cfg.classes), (16, 256, 10));
+        assert_eq!(cfg.mlp_hidden, 128);
+        assert_eq!(cfg.head_dim(), 16);
+        assert!(cfg.validate().is_ok());
+        let dense = cfg.clone().with_kernel(OP_ATTN_DENSE);
+        assert!(dense.block_kernels.iter().all(|k| k == OP_ATTN_DENSE));
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let good = ModelConfig::new(8, 16, 32, 2, 2, 64, 4, OP_ATTN_MITA);
+        assert!(good.validate().is_ok());
+        let mut bad = good.clone();
+        bad.heads = 3; // 32 % 3 != 0
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.block_kernels.pop(); // len != depth
+        assert!(bad.validate().is_err());
+        let mut bad = good.clone();
+        bad.block_kernels[0] = "attn.unknown".to_string();
+        assert!(bad.validate().is_err());
+        assert!(bad.to_tensor().is_err());
+        let mut bad = good;
+        bad.vocab = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn from_tensor_rejects_garbage() {
+        assert!(ModelConfig::from_tensor(&Tensor::i32(&[3], vec![1, 2, 3]).unwrap()).is_err());
+        let cfg = ModelConfig::new(8, 16, 32, 2, 2, 64, 4, OP_ATTN_MITA);
+        let t = cfg.to_tensor().unwrap();
+        let mut data = t.as_i32().unwrap().to_vec();
+        data[0] = 99; // bad version
+        let bad = Tensor::i32(&[data.len()], data.clone()).unwrap();
+        assert!(ModelConfig::from_tensor(&bad).is_err());
+        data[0] = 1;
+        data[12] = 7; // bad kernel id
+        assert!(ModelConfig::from_tensor(&Tensor::i32(&[data.len()], data).unwrap()).is_err());
+    }
+
+    #[test]
+    fn param_count_counts_every_tensor() {
+        // depth 1, dim 4, hidden 8, vocab 5, seq 6, classes 3:
+        // block = 8 + 3·20 + 20 + 8 + 40 + 36 = 172
+        // total = 20 + 24 + 172 + 8 + 15 = 239
+        let cfg = ModelConfig::new(5, 6, 4, 2, 1, 8, 3, OP_ATTN_DENSE);
+        assert_eq!(cfg.param_count(), 239);
+    }
+}

@@ -1,0 +1,37 @@
+//! Native MiTA transformer model subsystem.
+//!
+//! The layer that turns the raw attention kernels into a system that runs
+//! whole scenarios: a pure-Rust Transformer (token embedding + learned
+//! positions, pre-LN residual blocks, GELU MLP, final LN + classifier
+//! head) whose per-block attention dispatches through the
+//! [`crate::kernels::api::KernelRegistry`] — `attn.mita` and `attn.dense`
+//! are drop-in choices per block — and executes over the shared
+//! [`crate::kernels::workspace::WorkspacePool`].
+//!
+//! - [`config`]: [`ModelConfig`] + the i32 descriptor tensor that makes
+//!   checkpoints self-describing.
+//! - [`params`]: [`ModelParams`] — deterministic seeded init and the
+//!   flat tensor order shared with [`crate::coordinator::checkpoint`].
+//! - [`transformer`]: [`MitaModel`] — the forward pass, checkpoint
+//!   save/load, and [`ModelScratch`] activation reuse.
+//!
+//! Upward, [`crate::runtime::NativeBackend`] serves whole models through
+//! the [`OP_MODEL_FORWARD`] op (bind a checkpoint with `bind_tensors`, or
+//! seed-init one with `bind_init` + [`OP_MODEL_INIT`]), and
+//! `serve_model` drives classification traffic over the LRA tasks
+//! through the engine + dynamic batcher.
+
+pub mod config;
+pub mod params;
+pub mod transformer;
+
+pub use config::ModelConfig;
+pub use params::{BlockParams, ModelParams};
+pub use transformer::{MitaModel, ModelScratch};
+
+/// Backend op name: whole-model classification forward
+/// (tokens `[b, n]` i32 → logits `[b, classes]` f32).
+pub const OP_MODEL_FORWARD: &str = "model.forward";
+/// Init-op name `bind_init` accepts on the native backend (seed-derived
+/// parameters from the backend's model config).
+pub const OP_MODEL_INIT: &str = "model.init";

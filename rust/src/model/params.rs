@@ -1,0 +1,288 @@
+//! Parameter containers + deterministic seeded initialization of the
+//! native MiTA transformer.
+//!
+//! Weights are row-major `[out, in]` matrices (a linear layer is
+//! `matmul_nt(x, w) + b`, the dot-product form every kernel in
+//! [`crate::kernels::linalg`] autovectorizes). Every tensor draws from its
+//! own `Rng::derive(seed, [tag, layer, slot])` stream, so initialization
+//! is reproducible and order-independent — the same (config, seed) pair
+//! yields bit-identical parameters on any thread count or call order.
+
+use anyhow::{Context, Result};
+
+use crate::data::rng::Rng;
+use crate::model::config::ModelConfig;
+use crate::runtime::Tensor;
+
+const TAG_EMBED: u64 = 1;
+const TAG_BLOCK: u64 = 2;
+const TAG_HEAD: u64 = 3;
+
+/// GPT-style init scale for projection / embedding weights.
+const WEIGHT_STD: f64 = 0.02;
+
+fn normal_vec(seed: u64, ids: [u64; 3], len: usize, std: f64) -> Vec<f32> {
+    let mut rng = Rng::derive(seed, &ids);
+    (0..len).map(|_| (rng.normal() * std) as f32).collect()
+}
+
+/// Parameters of one pre-LN transformer block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockParams {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    /// Query projection `[dim, dim]`.
+    pub wq: Vec<f32>,
+    pub bq: Vec<f32>,
+    /// Key projection `[dim, dim]`.
+    pub wk: Vec<f32>,
+    pub bk: Vec<f32>,
+    /// Value projection `[dim, dim]`.
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    /// Output projection `[dim, dim]`.
+    pub wo: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    /// MLP expansion `[mlp_hidden, dim]`.
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// MLP contraction `[dim, mlp_hidden]`.
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+/// Number of checkpoint tensors each block flattens to.
+pub const BLOCK_TENSORS: usize = 16;
+/// Checkpoint tensors outside the blocks (tok/pos embeddings, final LN
+/// pair, head weight + bias).
+pub const EXTRA_TENSORS: usize = 6;
+
+/// All parameters of a native MiTA transformer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelParams {
+    /// Token embedding `[vocab, dim]`.
+    pub tok_emb: Vec<f32>,
+    /// Learned positional embedding `[seq_len, dim]`.
+    pub pos_emb: Vec<f32>,
+    pub blocks: Vec<BlockParams>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    /// Classifier head `[classes, dim]`.
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+impl ModelParams {
+    /// Deterministic seeded initialization: N(0, 0.02²) weights, zero
+    /// biases, unit layernorm scales, N(0, 0.01²) positions.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let (d, h) = (cfg.dim, cfg.mlp_hidden);
+        let blocks = (0..cfg.depth)
+            .map(|l| {
+                let li = l as u64;
+                BlockParams {
+                    ln1_g: vec![1.0; d],
+                    ln1_b: vec![0.0; d],
+                    wq: normal_vec(seed, [TAG_BLOCK, li, 0], d * d, WEIGHT_STD),
+                    bq: vec![0.0; d],
+                    wk: normal_vec(seed, [TAG_BLOCK, li, 1], d * d, WEIGHT_STD),
+                    bk: vec![0.0; d],
+                    wv: normal_vec(seed, [TAG_BLOCK, li, 2], d * d, WEIGHT_STD),
+                    bv: vec![0.0; d],
+                    wo: normal_vec(seed, [TAG_BLOCK, li, 3], d * d, WEIGHT_STD),
+                    bo: vec![0.0; d],
+                    ln2_g: vec![1.0; d],
+                    ln2_b: vec![0.0; d],
+                    w1: normal_vec(seed, [TAG_BLOCK, li, 4], h * d, WEIGHT_STD),
+                    b1: vec![0.0; h],
+                    w2: normal_vec(seed, [TAG_BLOCK, li, 5], d * h, WEIGHT_STD),
+                    b2: vec![0.0; d],
+                }
+            })
+            .collect();
+        ModelParams {
+            tok_emb: normal_vec(seed, [TAG_EMBED, 0, 0], cfg.vocab * d, WEIGHT_STD),
+            pos_emb: normal_vec(seed, [TAG_EMBED, 0, 1], cfg.seq_len * d, 0.01),
+            blocks,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            head_w: normal_vec(seed, [TAG_HEAD, 0, 0], cfg.classes * d, WEIGHT_STD),
+            head_b: vec![0.0; cfg.classes],
+        }
+    }
+
+    /// Total f32 parameters held (equals `cfg.param_count()`).
+    pub fn count(&self) -> usize {
+        let block: usize = self
+            .blocks
+            .iter()
+            .map(|b| {
+                b.ln1_g.len()
+                    + b.ln1_b.len()
+                    + b.wq.len()
+                    + b.bq.len()
+                    + b.wk.len()
+                    + b.bk.len()
+                    + b.wv.len()
+                    + b.bv.len()
+                    + b.wo.len()
+                    + b.bo.len()
+                    + b.ln2_g.len()
+                    + b.ln2_b.len()
+                    + b.w1.len()
+                    + b.b1.len()
+                    + b.w2.len()
+                    + b.b2.len()
+            })
+            .sum();
+        self.tok_emb.len()
+            + self.pos_emb.len()
+            + block
+            + self.lnf_g.len()
+            + self.lnf_b.len()
+            + self.head_w.len()
+            + self.head_b.len()
+    }
+
+    /// Flatten to checkpoint tensors in the fixed documented order:
+    /// tok_emb, pos_emb, per block (ln1 g/b, wq/bq, wk/bk, wv/bv, wo/bo,
+    /// ln2 g/b, w1/b1, w2/b2), lnf g/b, head w/b.
+    pub fn to_tensors(&self, cfg: &ModelConfig) -> Result<Vec<Tensor>> {
+        let (d, h) = (cfg.dim, cfg.mlp_hidden);
+        let mut out = Vec::with_capacity(EXTRA_TENSORS + BLOCK_TENSORS * self.blocks.len());
+        out.push(Tensor::f32(&[cfg.vocab, d], self.tok_emb.clone())?);
+        out.push(Tensor::f32(&[cfg.seq_len, d], self.pos_emb.clone())?);
+        for b in &self.blocks {
+            out.push(Tensor::f32(&[d], b.ln1_g.clone())?);
+            out.push(Tensor::f32(&[d], b.ln1_b.clone())?);
+            out.push(Tensor::f32(&[d, d], b.wq.clone())?);
+            out.push(Tensor::f32(&[d], b.bq.clone())?);
+            out.push(Tensor::f32(&[d, d], b.wk.clone())?);
+            out.push(Tensor::f32(&[d], b.bk.clone())?);
+            out.push(Tensor::f32(&[d, d], b.wv.clone())?);
+            out.push(Tensor::f32(&[d], b.bv.clone())?);
+            out.push(Tensor::f32(&[d, d], b.wo.clone())?);
+            out.push(Tensor::f32(&[d], b.bo.clone())?);
+            out.push(Tensor::f32(&[d], b.ln2_g.clone())?);
+            out.push(Tensor::f32(&[d], b.ln2_b.clone())?);
+            out.push(Tensor::f32(&[h, d], b.w1.clone())?);
+            out.push(Tensor::f32(&[h], b.b1.clone())?);
+            out.push(Tensor::f32(&[d, h], b.w2.clone())?);
+            out.push(Tensor::f32(&[d], b.b2.clone())?);
+        }
+        out.push(Tensor::f32(&[d], self.lnf_g.clone())?);
+        out.push(Tensor::f32(&[d], self.lnf_b.clone())?);
+        out.push(Tensor::f32(&[cfg.classes, d], self.head_w.clone())?);
+        out.push(Tensor::f32(&[cfg.classes], self.head_b.clone())?);
+        Ok(out)
+    }
+
+    /// Rebuild from checkpoint tensors (inverse of
+    /// [`ModelParams::to_tensors`], with shape checks against `cfg`).
+    pub fn from_tensors(cfg: &ModelConfig, tensors: &[Tensor]) -> Result<Self> {
+        let want = EXTRA_TENSORS + BLOCK_TENSORS * cfg.depth;
+        anyhow::ensure!(
+            tensors.len() == want,
+            "model checkpoint holds {} parameter tensors, want {want} for depth {}",
+            tensors.len(),
+            cfg.depth
+        );
+        let (d, h) = (cfg.dim, cfg.mlp_hidden);
+        let mut i = 0usize;
+        let tok_emb = take(tensors, &mut i, &[cfg.vocab, d], "tok_emb")?;
+        let pos_emb = take(tensors, &mut i, &[cfg.seq_len, d], "pos_emb")?;
+        let mut blocks = Vec::with_capacity(cfg.depth);
+        for _ in 0..cfg.depth {
+            blocks.push(BlockParams {
+                ln1_g: take(tensors, &mut i, &[d], "ln1_g")?,
+                ln1_b: take(tensors, &mut i, &[d], "ln1_b")?,
+                wq: take(tensors, &mut i, &[d, d], "wq")?,
+                bq: take(tensors, &mut i, &[d], "bq")?,
+                wk: take(tensors, &mut i, &[d, d], "wk")?,
+                bk: take(tensors, &mut i, &[d], "bk")?,
+                wv: take(tensors, &mut i, &[d, d], "wv")?,
+                bv: take(tensors, &mut i, &[d], "bv")?,
+                wo: take(tensors, &mut i, &[d, d], "wo")?,
+                bo: take(tensors, &mut i, &[d], "bo")?,
+                ln2_g: take(tensors, &mut i, &[d], "ln2_g")?,
+                ln2_b: take(tensors, &mut i, &[d], "ln2_b")?,
+                w1: take(tensors, &mut i, &[h, d], "w1")?,
+                b1: take(tensors, &mut i, &[h], "b1")?,
+                w2: take(tensors, &mut i, &[d, h], "w2")?,
+                b2: take(tensors, &mut i, &[d], "b2")?,
+            });
+        }
+        Ok(ModelParams {
+            tok_emb,
+            pos_emb,
+            blocks,
+            lnf_g: take(tensors, &mut i, &[d], "lnf_g")?,
+            lnf_b: take(tensors, &mut i, &[d], "lnf_b")?,
+            head_w: take(tensors, &mut i, &[cfg.classes, d], "head_w")?,
+            head_b: take(tensors, &mut i, &[cfg.classes], "head_b")?,
+        })
+    }
+}
+
+fn take(tensors: &[Tensor], i: &mut usize, shape: &[usize], what: &str) -> Result<Vec<f32>> {
+    let t = tensors
+        .get(*i)
+        .with_context(|| format!("model checkpoint truncated at tensor {} ({what})", *i))?;
+    anyhow::ensure!(
+        t.shape() == shape,
+        "checkpoint tensor {} ({what}): shape {:?}, want {shape:?}",
+        *i,
+        t.shape()
+    );
+    *i += 1;
+    Ok(t.as_f32().with_context(|| format!("{what} must be f32"))?.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::OP_ATTN_MITA;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::new(9, 12, 8, 2, 2, 16, 3, OP_ATTN_MITA)
+    }
+
+    #[test]
+    fn init_is_deterministic_and_sized() {
+        let c = cfg();
+        let a = ModelParams::init(&c, 42);
+        let b = ModelParams::init(&c, 42);
+        assert_eq!(a, b, "same (config, seed) must be bit-identical");
+        assert_eq!(a.count(), c.param_count());
+        assert_ne!(a.tok_emb, ModelParams::init(&c, 43).tok_emb, "seeds must differ");
+        // Structured defaults.
+        assert!(a.blocks[0].ln1_g.iter().all(|&x| x == 1.0));
+        assert!(a.blocks[0].bq.iter().all(|&x| x == 0.0));
+        assert!(a.head_b.iter().all(|&x| x == 0.0));
+        // Per-tensor streams: wq and wk must not repeat each other.
+        assert_ne!(a.blocks[0].wq, a.blocks[0].wk);
+        assert_ne!(a.blocks[0].wq, a.blocks[1].wq);
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let c = cfg();
+        let p = ModelParams::init(&c, 7);
+        let tensors = p.to_tensors(&c).unwrap();
+        assert_eq!(tensors.len(), EXTRA_TENSORS + BLOCK_TENSORS * c.depth);
+        let back = ModelParams::from_tensors(&c, &tensors).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn from_tensors_rejects_wrong_shapes() {
+        let c = cfg();
+        let p = ModelParams::init(&c, 7);
+        let mut tensors = p.to_tensors(&c).unwrap();
+        assert!(ModelParams::from_tensors(&c, &tensors[1..]).is_err(), "wrong count");
+        tensors[2] = Tensor::f32(&[3], vec![0.0; 3]).unwrap(); // ln1_g wrong shape
+        assert!(ModelParams::from_tensors(&c, &tensors).is_err());
+    }
+}

@@ -1,0 +1,457 @@
+//! The native MiTA transformer: a full pre-LN block stack executed over
+//! the kernel registry.
+//!
+//! ```text
+//! tokens [b, n] i32
+//!   │ token embedding + learned positions
+//!   ▼
+//! depth × ┌ LN → Q/K/V proj → KernelRegistry op (attn.mita | attn.dense,
+//!         │      per block) via run_batched over the WorkspacePool → proj ⊕
+//!         └ LN → GELU MLP ⊕
+//!   │ final LN → mean-pool over n → classifier head
+//!   ▼
+//! logits [b, classes] f32
+//! ```
+//!
+//! Attention is dispatched through [`crate::kernels::api::run_batched`] —
+//! the same (example × head) work-item executor the raw attention ops use —
+//! so each block picks `attn.mita` or `attn.dense` by registry name and
+//! inherits batched parallelism + pooled workspaces for free. Every other
+//! stage (embedding, projections, MLP, head) parallelizes per example via
+//! [`par_chunks_mut`] with per-thread scratch drawn from the same
+//! [`WorkspacePool`]; within a chunk the math is serial, so outputs are
+//! bit-identical across thread counts.
+//!
+//! Model checkpoints reuse [`crate::coordinator::checkpoint`]'s container
+//! format: tensor 0 is the i32 [`ModelConfig`] descriptor, the rest are
+//! the parameters in [`crate::model::params::ModelParams::to_tensors`]
+//! order — a checkpoint is self-describing and loads without a config.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::kernels::api::{
+    run_batched, AttentionKernel, AttnProblem, KernelRegistry, MitaStats, QkvData, QkvLayout,
+};
+use crate::kernels::linalg::{dot, matmul_nt, scale_in_place};
+use crate::kernels::par::par_chunks_mut;
+use crate::kernels::workspace::WorkspacePool;
+use crate::model::config::ModelConfig;
+use crate::model::params::ModelParams;
+use crate::runtime::Tensor;
+
+/// LayerNorm epsilon.
+const LN_EPS: f32 = 1e-5;
+
+/// Normalize each `[d]` row of `x` with scale `g` and shift `b`.
+fn layer_norm_rows(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len() % d, 0);
+    for (xrow, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let mean = xrow.iter().sum::<f32>() / d as f32;
+        let var = xrow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for ((o, &v), (&gc, &bc)) in orow.iter_mut().zip(xrow).zip(g.iter().zip(b)) {
+            *o = (v - mean) * inv * gc + bc;
+        }
+    }
+}
+
+/// `x[r, :] += bias` for row-major `[rows, len(bias)]`.
+fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
+    for row in x.chunks_exact_mut(bias.len()) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// GELU (tanh approximation), in place.
+fn gelu_in_place(x: &mut [f32]) {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    for v in x.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
+    }
+}
+
+/// Reusable activation buffers of one forward pass. Steady-state calls at
+/// one (batch, shape) reuse every allocation; per-thread scratch inside
+/// the parallel regions comes from the caller's [`WorkspacePool`].
+#[derive(Debug, Default)]
+pub struct ModelScratch {
+    /// Residual-stream activations `[valid, n, dim]`.
+    h: Vec<f32>,
+    /// Pre-LN output `[valid, n, dim]`.
+    y: Vec<f32>,
+    /// Fused Q/K/V projections `[valid, 3, n, dim]`.
+    qkv: Vec<f32>,
+    /// Attention output `[valid, n, dim]`.
+    attn: Vec<f32>,
+    /// Head-major staging buffer for `run_batched`.
+    headout: Vec<f32>,
+}
+
+/// A native MiTA transformer: config + parameters.
+#[derive(Debug, Clone)]
+pub struct MitaModel {
+    pub cfg: ModelConfig,
+    pub params: ModelParams,
+}
+
+impl MitaModel {
+    /// Deterministic seeded initialization (validates the config).
+    pub fn init(cfg: ModelConfig, seed: u64) -> Result<Self> {
+        cfg.validate()?;
+        let params = ModelParams::init(&cfg, seed);
+        Ok(MitaModel { cfg, params })
+    }
+
+    /// Same parameters with every block dispatched to `kernel` instead —
+    /// the MiTA-vs-dense parity lever.
+    pub fn with_kernel(&self, kernel: &str) -> Result<MitaModel> {
+        let cfg = self.cfg.clone().with_kernel(kernel);
+        cfg.validate()?;
+        Ok(MitaModel { cfg, params: self.params.clone() })
+    }
+
+    /// The standard kernel set keyed by this model's MiTA parameters.
+    pub fn registry(&self) -> KernelRegistry {
+        KernelRegistry::with_defaults(self.cfg.mita)
+    }
+
+    /// Flatten to checkpoint tensors (config descriptor first).
+    pub fn to_tensors(&self) -> Result<Vec<Tensor>> {
+        let mut out = vec![self.cfg.to_tensor()?];
+        out.extend(self.params.to_tensors(&self.cfg)?);
+        Ok(out)
+    }
+
+    /// Rebuild from checkpoint tensors (inverse of
+    /// [`MitaModel::to_tensors`]).
+    pub fn from_tensors(tensors: &[Tensor]) -> Result<Self> {
+        anyhow::ensure!(!tensors.is_empty(), "model checkpoint is empty");
+        let cfg = ModelConfig::from_tensor(&tensors[0])
+            .context("tensor 0 must be the model config descriptor")?;
+        let params = ModelParams::from_tensors(&cfg, &tensors[1..])?;
+        Ok(MitaModel { cfg, params })
+    }
+
+    /// Save to the shared native checkpoint format (atomic rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        checkpoint::save(path, &self.to_tensors()?)
+    }
+
+    /// Load a self-describing model checkpoint.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_tensors(&checkpoint::load(path)?)
+    }
+
+    /// Classify a batch: `tokens` is row-major `[batch, seq_len]`, only
+    /// the first `valid` rows are computed (trailing rows are padding —
+    /// their logits stay zero). Returns logits `[batch, classes]`.
+    ///
+    /// Attention dispatches through `registry` by each block's kernel
+    /// name; all scratch comes from `scratch` + the pool, so steady-state
+    /// calls allocate only the returned logits. MiTA routing statistics
+    /// accumulate into `stats`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        valid: usize,
+        registry: &KernelRegistry,
+        pool: &WorkspacePool,
+        scratch: &mut ModelScratch,
+        stats: &mut MitaStats,
+    ) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let p = &self.params;
+        let (n, d, heads, hid) = (cfg.seq_len, cfg.dim, cfg.heads, cfg.mlp_hidden);
+        let per = n * d;
+        anyhow::ensure!(
+            tokens.len() == batch * n,
+            "tokens hold {} ids, want {} for [b={batch}, n={n}]",
+            tokens.len(),
+            batch * n
+        );
+        anyhow::ensure!(
+            valid >= 1 && valid <= batch,
+            "valid rows {valid} out of range 1..={batch}"
+        );
+        // Resolve every block's kernel up front (fail before any compute).
+        let kernels: Vec<&dyn AttentionKernel> = cfg
+            .block_kernels
+            .iter()
+            .map(|name| {
+                registry.get(name).with_context(|| {
+                    format!(
+                        "block kernel {name:?} not in the registry (available: {})",
+                        registry.names().join(", ")
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        for (i, &t) in tokens[..valid * n].iter().enumerate() {
+            anyhow::ensure!(
+                (0..cfg.vocab as i32).contains(&t),
+                "token {t} at flat position {i} outside vocab 0..{}",
+                cfg.vocab
+            );
+        }
+
+        // Token embedding + learned positions.
+        scratch.h.resize(valid * per, 0.0);
+        {
+            let (tok_emb, pos_emb) = (&p.tok_emb, &p.pos_emb);
+            par_chunks_mut(&mut scratch.h, per, |i, hex| {
+                let toks = &tokens[i * n..(i + 1) * n];
+                for (t, (&tok, hrow)) in toks.iter().zip(hex.chunks_exact_mut(d)).enumerate() {
+                    let erow = &tok_emb[tok as usize * d..(tok as usize + 1) * d];
+                    let prow = &pos_emb[t * d..(t + 1) * d];
+                    for ((h, &e), &pv) in hrow.iter_mut().zip(erow).zip(prow) {
+                        *h = e + pv;
+                    }
+                }
+            });
+        }
+
+        scratch.y.resize(valid * per, 0.0);
+        scratch.qkv.resize(valid * 3 * per, 0.0);
+        scratch.attn.resize(valid * per, 0.0);
+        for (block, kernel) in p.blocks.iter().zip(&kernels) {
+            // Pre-LN.
+            {
+                let h = &scratch.h;
+                par_chunks_mut(&mut scratch.y, per, |i, yex| {
+                    layer_norm_rows(&h[i * per..(i + 1) * per], d, &block.ln1_g, &block.ln1_b, yex);
+                });
+            }
+            // Fused Q/K/V projections into `[valid, 3, n, dim]`.
+            {
+                let y = &scratch.y;
+                par_chunks_mut(&mut scratch.qkv, 3 * per, |i, qex| {
+                    let yex = &y[i * per..(i + 1) * per];
+                    let (qb, rest) = qex.split_at_mut(per);
+                    let (kb, vb) = rest.split_at_mut(per);
+                    matmul_nt(yex, &block.wq, n, d, d, qb);
+                    add_bias_rows(qb, &block.bq);
+                    matmul_nt(yex, &block.wk, n, d, d, kb);
+                    add_bias_rows(kb, &block.bk);
+                    matmul_nt(yex, &block.wv, n, d, d, vb);
+                    add_bias_rows(vb, &block.bv);
+                });
+            }
+            // Attention through the block's registry kernel: batched
+            // (example × head) work items over the shared pool.
+            let prob = AttnProblem::new(valid, heads, n, d, QkvLayout::Fused);
+            let data = QkvData::Fused(&scratch.qkv[..valid * 3 * per]);
+            run_batched(
+                *kernel,
+                &prob,
+                &data,
+                pool,
+                &mut scratch.headout,
+                &mut scratch.attn[..valid * per],
+                stats,
+            );
+            // Output projection + residual.
+            {
+                let attn = &scratch.attn;
+                par_chunks_mut(&mut scratch.h, per, |i, hex| {
+                    let mut pooled = pool.acquire();
+                    let (ws, _) = pooled.parts();
+                    let mut proj = ws.take_f32("model.proj", per);
+                    matmul_nt(&attn[i * per..(i + 1) * per], &block.wo, n, d, d, &mut proj);
+                    add_bias_rows(&mut proj, &block.bo);
+                    for (hv, &pv) in hex.iter_mut().zip(&proj) {
+                        *hv += pv;
+                    }
+                    ws.give_f32("model.proj", proj);
+                });
+            }
+            // Pre-LN GELU MLP + residual.
+            par_chunks_mut(&mut scratch.h, per, |_, hex| {
+                let mut pooled = pool.acquire();
+                let (ws, _) = pooled.parts();
+                let mut ln = ws.take_f32("model.ln2", per);
+                layer_norm_rows(hex, d, &block.ln2_g, &block.ln2_b, &mut ln);
+                let mut hidden = ws.take_f32("model.hidden", n * hid);
+                matmul_nt(&ln, &block.w1, n, hid, d, &mut hidden);
+                add_bias_rows(&mut hidden, &block.b1);
+                gelu_in_place(&mut hidden);
+                let mut mlp = ws.take_f32("model.mlp", per);
+                matmul_nt(&hidden, &block.w2, n, d, hid, &mut mlp);
+                add_bias_rows(&mut mlp, &block.b2);
+                for (hv, &mv) in hex.iter_mut().zip(&mlp) {
+                    *hv += mv;
+                }
+                ws.give_f32("model.ln2", ln);
+                ws.give_f32("model.hidden", hidden);
+                ws.give_f32("model.mlp", mlp);
+            });
+        }
+
+        // Final LN → mean-pool over the sequence → classifier head.
+        // Padding rows keep their zero logits and are never computed.
+        let classes = cfg.classes;
+        let mut logits = vec![0.0f32; batch * classes];
+        {
+            let h = &scratch.h;
+            par_chunks_mut(&mut logits[..valid * classes], classes, |i, lex| {
+                let mut pooled = pool.acquire();
+                let (ws, _) = pooled.parts();
+                let mut ln = ws.take_f32("model.lnf", per);
+                layer_norm_rows(&h[i * per..(i + 1) * per], d, &p.lnf_g, &p.lnf_b, &mut ln);
+                let mut mean = ws.take_f32("model.pool", d);
+                mean.fill(0.0);
+                for row in ln.chunks_exact(d) {
+                    for (mc, &v) in mean.iter_mut().zip(row) {
+                        *mc += v;
+                    }
+                }
+                scale_in_place(&mut mean, 1.0 / n as f32);
+                let head = p.head_w.chunks_exact(d).zip(&p.head_b);
+                for (lc, (wrow, &bc)) in lex.iter_mut().zip(head) {
+                    *lc = dot(&mean, wrow) + bc;
+                }
+                ws.give_f32("model.lnf", ln);
+                ws.give_f32("model.pool", mean);
+            });
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig::new(11, 12, 16, 2, 2, 32, 3, OP_ATTN_MITA)
+    }
+
+    fn tokens_for(cfg: &ModelConfig, batch: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Rng::new(seed);
+        (0..batch * cfg.seq_len).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, -1.0, -1.0, -1.0, 7.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        let mut out = vec![0.0f32; 8];
+        layer_norm_rows(&x, 4, &g, &b, &mut out);
+        for row in out.chunks_exact(4) {
+            let mean: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+        // Scale and shift apply per channel.
+        let g = vec![2.0f32, 1.0, 1.0, 1.0];
+        let b = vec![0.0f32, 5.0, 0.0, 0.0];
+        let mut scaled = vec![0.0f32; 8];
+        layer_norm_rows(&x, 4, &g, &b, &mut scaled);
+        assert!((scaled[0] - 2.0 * out[0]).abs() < 1e-5);
+        assert!((scaled[1] - (out[1] + 5.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gelu_shape() {
+        let mut x = vec![0.0f32, 5.0, -5.0, 1.0];
+        gelu_in_place(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 5.0).abs() < 1e-3, "gelu(5) ≈ 5, got {}", x[1]);
+        assert!(x[2].abs() < 1e-3, "gelu(-5) ≈ 0, got {}", x[2]);
+        assert!((x[3] - 0.8412).abs() < 1e-3, "gelu(1) ≈ 0.8412, got {}", x[3]);
+    }
+
+    #[test]
+    fn forward_shapes_determinism_and_padding() {
+        let cfg = tiny_cfg();
+        let model = MitaModel::init(cfg.clone(), 5).unwrap();
+        let registry = model.registry();
+        let pool = WorkspacePool::new();
+        let mut scratch = ModelScratch::default();
+        let mut stats = MitaStats::default();
+        let (batch, valid) = (4usize, 3usize);
+        let tokens = tokens_for(&cfg, batch, 1);
+
+        let a = model
+            .forward(&tokens, batch, valid, &registry, &pool, &mut scratch, &mut stats)
+            .unwrap();
+        assert_eq!(a.len(), batch * cfg.classes);
+        assert!(a[..valid * cfg.classes].iter().all(|x| x.is_finite()));
+        assert!(a[valid * cfg.classes..].iter().all(|&x| x == 0.0), "pad logits stay zero");
+        // Every MiTA block routed each valid example's queries per head.
+        assert_eq!(stats.calls, cfg.depth * valid * cfg.heads);
+        assert_eq!(stats.queries, cfg.depth * valid * cfg.heads * cfg.seq_len);
+
+        // Steady state through warm scratch is bit-identical.
+        let b = model
+            .forward(&tokens, batch, valid, &registry, &pool, &mut scratch, &mut stats)
+            .unwrap();
+        assert_eq!(a, b);
+        // Fresh scratch too (no stale-state dependence).
+        let mut fresh = ModelScratch::default();
+        let c = model
+            .forward(&tokens, batch, valid, &registry, &pool, &mut fresh, &mut stats)
+            .unwrap();
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn forward_valid_prefix_matches_smaller_batch() {
+        let cfg = tiny_cfg();
+        let model = MitaModel::init(cfg.clone(), 9).unwrap();
+        let registry = model.registry();
+        let pool = WorkspacePool::new();
+        let mut scratch = ModelScratch::default();
+        let mut stats = MitaStats::default();
+        let tokens = tokens_for(&cfg, 4, 2);
+        let padded = model
+            .forward(&tokens, 4, 2, &registry, &pool, &mut scratch, &mut stats)
+            .unwrap();
+        let exact = model
+            .forward(&tokens[..2 * cfg.seq_len], 2, 2, &registry, &pool, &mut scratch, &mut stats)
+            .unwrap();
+        assert_eq!(&padded[..2 * cfg.classes], exact.as_slice());
+    }
+
+    #[test]
+    fn forward_rejects_bad_inputs() {
+        let cfg = tiny_cfg();
+        let model = MitaModel::init(cfg.clone(), 3).unwrap();
+        let registry = model.registry();
+        let pool = WorkspacePool::new();
+        let mut scratch = ModelScratch::default();
+        let mut stats = MitaStats::default();
+        let tokens = tokens_for(&cfg, 2, 3);
+        let mut fails = |toks: &[i32], v: usize, reg: &KernelRegistry| {
+            model.forward(toks, 2, v, reg, &pool, &mut scratch, &mut stats).is_err()
+        };
+        assert!(fails(&tokens[1..], 2, &registry), "wrong token count");
+        assert!(fails(&tokens, 0, &registry), "valid = 0");
+        assert!(fails(&tokens, 3, &registry), "valid > batch");
+        let mut bad = tokens.clone();
+        bad[0] = cfg.vocab as i32;
+        assert!(fails(&bad, 2, &registry), "out-of-vocab token");
+        assert!(fails(&tokens, 2, &KernelRegistry::new()), "kernel missing from registry");
+    }
+
+    #[test]
+    fn with_kernel_swaps_every_block_and_keeps_params() {
+        let model = MitaModel::init(tiny_cfg(), 11).unwrap();
+        let dense = model.with_kernel(OP_ATTN_DENSE).unwrap();
+        assert!(dense.cfg.block_kernels.iter().all(|k| k == OP_ATTN_DENSE));
+        assert_eq!(model.params, dense.params);
+        assert!(model.with_kernel("attn.unknown").is_err());
+    }
+}

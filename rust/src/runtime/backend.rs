@@ -15,6 +15,11 @@
 //!   [`WorkspacePool`] (see [`run_batched`]), so steady-state calls
 //!   allocate nothing beyond the output tensor. Per-call MiTA routing
 //!   statistics accumulate and surface through [`Backend::mita_stats`].
+//!   Beyond the raw attention ops it also serves whole
+//!   [`MitaModel`](crate::model::MitaModel)s: bind a checkpoint with
+//!   [`Backend::bind_tensors`] (or seed-init one via
+//!   [`Backend::bind_init`] + [`OP_MODEL_INIT`]) and run
+//!   [`OP_MODEL_FORWARD`] on token batches to get class logits.
 //!
 //! Backends are built *inside* the engine thread from a [`BackendSpec`]
 //! (PJRT handles are not `Send`, so the spec crosses the thread boundary,
@@ -30,10 +35,12 @@ use anyhow::{bail, Context, Result};
 use crate::kernels::api::{run_batched, AttnProblem, KernelRegistry, MitaStats, QkvData, QkvLayout};
 use crate::kernels::workspace::WorkspacePool;
 use crate::kernels::MitaKernelConfig;
+use crate::model::{MitaModel, ModelConfig, ModelScratch};
 use crate::runtime::client::{Runtime, RuntimeStats};
 use crate::runtime::tensor::Tensor;
 
 pub use crate::kernels::api::{OP_ATTN_DENSE, OP_ATTN_MITA};
+pub use crate::model::{OP_MODEL_FORWARD, OP_MODEL_INIT};
 
 /// A place computations run: named ops over host tensors, with optional
 /// named parameter bindings kept backend-side between calls.
@@ -183,12 +190,23 @@ pub struct NativeAttnConfig {
     pub dim: usize,
     pub heads: usize,
     pub mita: MitaKernelConfig,
+    /// Whole-model configuration, when the backend should be able to
+    /// seed-init a [`MitaModel`] via `bind_init` + [`OP_MODEL_INIT`]
+    /// (checkpoints bound with `bind_tensors` are self-describing and
+    /// need no config here).
+    pub model: Option<ModelConfig>,
 }
 
 impl NativeAttnConfig {
     /// Paper-flavored defaults for a (n, dim, heads) shape.
     pub fn for_shape(n: usize, dim: usize, heads: usize) -> Self {
-        NativeAttnConfig { n, dim, heads, mita: MitaKernelConfig::for_seq(n) }
+        NativeAttnConfig { n, dim, heads, mita: MitaKernelConfig::for_seq(n), model: None }
+    }
+
+    /// Attach a whole-model config (enables `bind_init`-seeded models).
+    pub fn with_model(mut self, model: ModelConfig) -> Self {
+        self.model = Some(model);
+        self
     }
 }
 
@@ -204,6 +222,12 @@ impl NativeAttnConfig {
 /// - three tensors Q, K, V of `[b, n, dim]` (or `[n, dim]` for b = 1).
 ///
 /// Output is always `[b, n, dim]`.
+///
+/// Whole models run through [`OP_MODEL_FORWARD`] instead: inputs are a
+/// `[b, n]` (or `[n]`) i32 token tensor plus the same optional valid-rows
+/// marker, the binding key names a model bound earlier (`bind_tensors`
+/// with a checkpoint, or `bind_init` with [`OP_MODEL_INIT`]), and the
+/// output is `[b, classes]` logits with padding rows zeroed.
 pub struct NativeBackend {
     cfg: NativeAttnConfig,
     registry: KernelRegistry,
@@ -212,6 +236,17 @@ pub struct NativeBackend {
     headout: RefCell<Vec<f32>>,
     stats: RefCell<RuntimeStats>,
     mita: RefCell<MitaStats>,
+    /// Models bound by key. Each carries its own registry keyed by the
+    /// checkpoint's MiTA parameters (the backend registry serves the raw
+    /// attention ops, whose kernel config may differ).
+    models: HashMap<String, BoundModel>,
+    /// Activation buffers shared by every bound model's forward calls.
+    model_scratch: RefCell<ModelScratch>,
+}
+
+struct BoundModel {
+    model: MitaModel,
+    registry: KernelRegistry,
 }
 
 impl NativeBackend {
@@ -230,6 +265,8 @@ impl NativeBackend {
             headout: RefCell::new(Vec::new()),
             stats: RefCell::new(RuntimeStats::default()),
             mita: RefCell::new(MitaStats::default()),
+            models: HashMap::new(),
+            model_scratch: RefCell::new(ModelScratch::default()),
         }
     }
 
@@ -261,18 +298,7 @@ impl NativeBackend {
                 };
                 let mut prob = AttnProblem::new(b, heads, n, dim, QkvLayout::Fused);
                 if inputs.len() == 2 {
-                    let marker = inputs[1].as_i32().context("valid-rows marker")?;
-                    anyhow::ensure!(
-                        marker.len() == 1,
-                        "valid-rows marker must hold one i32, got {} values",
-                        marker.len()
-                    );
-                    let valid = marker[0];
-                    anyhow::ensure!(
-                        valid >= 1 && valid as usize <= b,
-                        "valid rows {valid} out of range 1..={b}"
-                    );
-                    prob = prob.with_valid(valid as usize);
+                    prob = prob.with_valid(parse_valid_marker(&inputs[1], b)?);
                 }
                 Ok((prob, QkvData::Fused(inputs[0].as_f32()?)))
             }
@@ -303,6 +329,71 @@ impl NativeBackend {
             ),
         }
     }
+
+    /// Execute [`OP_MODEL_FORWARD`]: a bound model's classification
+    /// forward over a `[b, n]` token batch (+ optional valid-rows marker).
+    fn run_model(&self, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let key = binding
+            .context("model.forward needs a parameter binding (bind_tensors/bind_init first)")?;
+        let bound = self.models.get(key).with_context(|| {
+            let mut keys: Vec<&str> = self.models.keys().map(String::as_str).collect();
+            keys.sort_unstable();
+            format!("no model bound under {key:?} (bound models: [{}])", keys.join(", "))
+        })?;
+        let cfg = &bound.model.cfg;
+        anyhow::ensure!(
+            !inputs.is_empty() && inputs.len() <= 2,
+            "model.forward wants a token tensor (+ optional valid-rows marker), got {} inputs",
+            inputs.len()
+        );
+        let shape = inputs[0].shape();
+        let (b, n) = match *shape {
+            [n] => (1, n),
+            [b, n] => (b, n),
+            _ => bail!("model tokens must be [b, n] or [n], got {shape:?}"),
+        };
+        anyhow::ensure!(
+            n == cfg.seq_len,
+            "token length {n} != model sequence length {}",
+            cfg.seq_len
+        );
+        let valid = if inputs.len() == 2 { parse_valid_marker(&inputs[1], b)? } else { b };
+        let tokens = inputs[0].as_i32().context("model tokens must be i32")?;
+
+        let t0 = Instant::now();
+        let logits = {
+            let mut scratch = self.model_scratch.borrow_mut();
+            let mut mita = self.mita.borrow_mut();
+            bound.model.forward(
+                tokens,
+                b,
+                valid,
+                &bound.registry,
+                &self.pool,
+                &mut scratch,
+                &mut mita,
+            )?
+        };
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Ok(vec![Tensor::f32(&[b, cfg.classes], logits)?])
+    }
+}
+
+/// Parse the one-element i32 valid-rows marker against batch size `b`.
+fn parse_valid_marker(t: &Tensor, b: usize) -> Result<usize> {
+    let marker = t.as_i32().context("valid-rows marker")?;
+    anyhow::ensure!(
+        marker.len() == 1,
+        "valid-rows marker must hold one i32, got {} values",
+        marker.len()
+    );
+    let valid = marker[0];
+    anyhow::ensure!(valid >= 1 && valid as usize <= b, "valid rows {valid} out of range 1..={b}");
+    Ok(valid as usize)
 }
 
 impl Backend for NativeBackend {
@@ -314,22 +405,48 @@ impl Backend for NativeBackend {
         Ok(()) // nothing to compile
     }
 
-    fn bind_tensors(&mut self, _key: &str, _params: Vec<Tensor>) -> Result<()> {
-        bail!("native attention backend has no parameter bindings")
+    /// Bind a model checkpoint: the tensor list must be a self-describing
+    /// [`MitaModel`] flat form (config descriptor first — exactly what
+    /// `MitaModel::to_tensors` / `model-check --checkpoint` writes).
+    fn bind_tensors(&mut self, key: &str, params: Vec<Tensor>) -> Result<()> {
+        let model = MitaModel::from_tensors(&params)
+            .with_context(|| format!("binding {key:?}: native bindings are model checkpoints"))?;
+        let registry = model.registry();
+        self.models.insert(key.to_string(), BoundModel { model, registry });
+        Ok(())
     }
 
+    /// Seed-initialize a model from the backend's model config and bind
+    /// it under `key`. The init op must be [`OP_MODEL_INIT`]; the PJRT
+    /// `param_count` argument is advisory here (a seeded model always
+    /// materializes its full parameter set).
     fn bind_init(
         &mut self,
-        _key: &str,
+        key: &str,
         init_op: &str,
-        _seed: i32,
+        seed: i32,
         _param_count: usize,
     ) -> Result<()> {
-        bail!("native backend has no init artifacts (requested {init_op:?})")
+        anyhow::ensure!(
+            init_op == OP_MODEL_INIT,
+            "native backend init op must be {OP_MODEL_INIT:?} (requested {init_op:?})"
+        );
+        let mcfg = self
+            .cfg
+            .model
+            .clone()
+            .context("backend spec carries no model config (NativeAttnConfig::with_model)")?;
+        let model = MitaModel::init(mcfg, seed as u64)?;
+        let registry = model.registry();
+        self.models.insert(key.to_string(), BoundModel { model, registry });
+        Ok(())
     }
 
     fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        anyhow::ensure!(binding.is_none(), "native ops take no parameter binding");
+        if op == OP_MODEL_FORWARD {
+            return self.run_model(binding, inputs);
+        }
+        anyhow::ensure!(binding.is_none(), "native attention ops take no parameter binding");
         let kernel = self.registry.get(op).with_context(|| {
             format!(
                 "native backend has no op {op:?} (available: {})",
@@ -487,5 +604,44 @@ mod tests {
         let be = spec.create().unwrap();
         assert_eq!(be.name(), "native");
         assert!(be.mita_stats().is_some());
+    }
+
+    #[test]
+    fn model_forward_binds_runs_and_skips_padding() {
+        let mcfg = ModelConfig::new(7, 10, 8, 2, 1, 16, 3, OP_ATTN_MITA);
+        let attn = NativeAttnConfig::for_shape(10, 8, 2).with_model(mcfg.clone());
+        let mut be = NativeBackend::new(attn);
+        let mut rng = Rng::new(31);
+        let toks: Vec<i32> = (0..2 * 10).map(|_| rng.below(7) as i32).collect();
+        let tokens = Tensor::i32(&[2, 10], toks).unwrap();
+
+        // model.forward needs a binding that exists.
+        assert!(be.run(OP_MODEL_FORWARD, None, &[tokens.clone()]).is_err());
+        assert!(be.run(OP_MODEL_FORWARD, Some("m"), &[tokens.clone()]).is_err());
+
+        be.bind_init("m", OP_MODEL_INIT, 3, 0).unwrap();
+        assert!(be.bind_init("m", "init", 3, 0).is_err(), "only {OP_MODEL_INIT:?} seeds models");
+        let out = be.run(OP_MODEL_FORWARD, Some("m"), &[tokens.clone()]).unwrap();
+        assert_eq!(out[0].shape(), &[2, 3]);
+        assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+
+        // The valid-rows marker computes only the prefix; pad logits stay 0.
+        let marker = Tensor::i32(&[1], vec![1]).unwrap();
+        let padded = be.run(OP_MODEL_FORWARD, Some("m"), &[tokens.clone(), marker]).unwrap();
+        let full = padded[0].as_f32().unwrap();
+        assert_eq!(&full[..3], &out[0].as_f32().unwrap()[..3]);
+        assert!(full[3..].iter().all(|&x| x == 0.0));
+
+        // A checkpoint bound via bind_tensors matches the seeded model.
+        let model = MitaModel::init(mcfg, 3).unwrap();
+        be.bind_tensors("ckpt", model.to_tensors().unwrap()).unwrap();
+        let out2 = be.run(OP_MODEL_FORWARD, Some("ckpt"), &[tokens]).unwrap();
+        assert_eq!(out[0], out2[0]);
+        assert!(be.mita_stats().unwrap().queries > 0, "model attention records routing stats");
+
+        // Wrong sequence length / non-checkpoint bindings are rejected.
+        let short = Tensor::i32(&[2, 6], vec![0; 12]).unwrap();
+        assert!(be.run(OP_MODEL_FORWARD, Some("m"), &[short]).is_err());
+        assert!(be.bind_tensors("bad", vec![Tensor::scalar_i32(1)]).is_err());
     }
 }

@@ -1,0 +1,154 @@
+//! Integration tests of the native model subsystem: MiTA-vs-dense model
+//! parity, checkpoint round-trips, the backend's `model.forward` op, and
+//! end-to-end serving over the LRA tasks through the engine.
+
+use mita::coordinator::batcher::BatchPolicy;
+use mita::coordinator::{checkpoint, serve_model, Engine, ModelServeConfig};
+use mita::data::lra;
+use mita::data::Split;
+use mita::kernels::{MitaKernelConfig, MitaStats, WorkspacePool, OP_ATTN_DENSE, OP_ATTN_MITA};
+use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_FORWARD, OP_MODEL_INIT};
+use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+
+/// Tiny (seq_len, vocab) valid for every task: 64 is a perfect square
+/// (image/pathfinder), vocab from the canonical per-task table.
+fn tiny_shape(name: &str) -> (usize, usize) {
+    (64, lra::default_vocab(name).expect("known task"))
+}
+
+fn forward_all(model: &MitaModel, tokens: &[i32], bsz: usize) -> Vec<f32> {
+    let registry = model.registry();
+    let pool = WorkspacePool::new();
+    let mut scratch = ModelScratch::default();
+    let mut stats = MitaStats::default();
+    model
+        .forward(tokens, bsz, bsz, &registry, &pool, &mut scratch, &mut stats)
+        .expect("forward")
+}
+
+/// Acceptance gate: with the landmarks-cover-everything config (m = k =
+/// n) every MiTA expert attends the full KV set, so a MiTA-block model
+/// and a dense-block model sharing parameters must produce the same
+/// logits within 1e-4 — across all five LRA tasks.
+#[test]
+fn model_parity_when_landmarks_cover_everything() {
+    for name in lra::TASK_NAMES {
+        let (n, vocab) = tiny_shape(name);
+        let task = lra::by_name(name, n, vocab, 3);
+        let pcfg = MitaKernelConfig { m: n, k: n, cap_factor: 2, block_q: 8 };
+        let cfg = ModelConfig::for_task(task.as_ref(), 32, 2, 2, OP_ATTN_MITA).with_mita(pcfg);
+        let model = MitaModel::init(cfg, 17).unwrap();
+        let dense = model.with_kernel(OP_ATTN_DENSE).unwrap();
+        let bsz = 3usize;
+        let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 0, bsz);
+
+        let lm = forward_all(&model, &tokens, bsz);
+        let ld = forward_all(&dense, &tokens, bsz);
+        let max_diff = lm.iter().zip(&ld).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "{name}: model parity broke (max|Δ| = {max_diff})");
+        assert!(lm.iter().all(|x| x.is_finite()), "{name}: non-finite logits");
+    }
+}
+
+#[test]
+fn model_forward_is_deterministic_across_instances() {
+    let task = lra::by_name("listops", 64, 16, 5);
+    let cfg = ModelConfig::for_task(task.as_ref(), 32, 2, 2, OP_ATTN_MITA);
+    let (tokens, _) = lra::batch_host(task.as_ref(), Split::Train, 0, 2);
+    let a = forward_all(&MitaModel::init(cfg.clone(), 11).unwrap(), &tokens, 2);
+    let b = forward_all(&MitaModel::init(cfg.clone(), 11).unwrap(), &tokens, 2);
+    assert_eq!(a, b, "same (config, seed, tokens) must be bit-identical");
+    let c = forward_all(&MitaModel::init(cfg, 12).unwrap(), &tokens, 2);
+    assert_ne!(a, c, "a different seed must change the logits");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_model_exactly() {
+    let dir = std::env::temp_dir().join(format!("mita_model_rt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.ckpt");
+
+    let task = lra::by_name("text", 64, 64, 2);
+    let mut cfg = ModelConfig::for_task(task.as_ref(), 32, 4, 3, OP_ATTN_MITA);
+    cfg.block_kernels[1] = OP_ATTN_DENSE.to_string(); // mixed blocks survive
+    let model = MitaModel::init(cfg, 23).unwrap();
+    model.save(&path).unwrap();
+
+    let loaded = MitaModel::load(&path).unwrap();
+    assert_eq!(loaded.cfg, model.cfg, "config descriptor must round-trip");
+    assert_eq!(loaded.params, model.params, "parameters must round-trip bit-exactly");
+
+    let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 7, 2);
+    assert_eq!(forward_all(&model, &tokens, 2), forward_all(&loaded, &tokens, 2));
+
+    // The same file feeds the generic checkpoint loader + backend binding.
+    let tensors = checkpoint::load(&path).unwrap();
+    let attn = NativeAttnConfig::for_shape(64, 32, 4);
+    let mut be = NativeBackend::new(attn);
+    be.bind_tensors("m", tensors).unwrap();
+    let x = Tensor::i32(&[2, 64], tokens).unwrap();
+    let out = be.run(OP_MODEL_FORWARD, Some("m"), &[x]).unwrap();
+    assert_eq!(out[0].shape(), &[2, model.cfg.classes]);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn backend_model_op_matches_direct_forward_and_skips_padding() {
+    let task = lra::by_name("image", 64, 32, 9);
+    let mcfg = ModelConfig::for_task(task.as_ref(), 32, 2, 2, OP_ATTN_MITA);
+    let attn = NativeAttnConfig::for_shape(64, 32, 2).with_model(mcfg.clone());
+    let mut be = NativeBackend::new(attn);
+    be.bind_init("m", OP_MODEL_INIT, 5, 0).unwrap();
+
+    let (bsz, valid) = (4usize, 2usize);
+    let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 0, bsz);
+    let x = Tensor::i32(&[bsz, 64], tokens.clone()).unwrap();
+    let marker = Tensor::i32(&[1], vec![valid as i32]).unwrap();
+    let out = be.run(OP_MODEL_FORWARD, Some("m"), &[x, marker]).unwrap();
+    let full = out[0].as_f32().unwrap();
+    let classes = mcfg.classes;
+
+    // Valid prefix matches the library-level forward on the same model.
+    let model = MitaModel::init(mcfg, 5).unwrap();
+    let want = forward_all(&model, &tokens[..valid * 64], valid);
+    assert_eq!(&full[..valid * classes], want.as_slice());
+    // Pad rows never reach the model (zero logits, no routed queries).
+    assert!(full[valid * classes..].iter().all(|&x| x == 0.0));
+    let stats = be.mita_stats().unwrap();
+    assert_eq!(stats.queries, model.cfg.depth * valid * model.cfg.heads * 64);
+}
+
+#[test]
+fn engine_serves_model_requests_end_to_end() {
+    let (n, vocab) = tiny_shape("listops");
+    let task = lra::by_name("listops", n, vocab, 1);
+    let mcfg = ModelConfig::for_task(task.as_ref(), 32, 2, 2, OP_ATTN_MITA);
+    let attn = NativeAttnConfig::for_shape(n, 32, 2).with_model(mcfg);
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+    engine.handle().bind_init("model", OP_MODEL_INIT, 0, 0).unwrap();
+
+    let cfg = ModelServeConfig {
+        task: "listops".into(),
+        seq_len: n,
+        vocab,
+        binding: "model".into(),
+        requests: 12,
+        rate: 0.0,
+        queue_cap: 64,
+        policy: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
+    };
+    let report = serve_model(&engine.handle(), &cfg).unwrap();
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.rejected, 0);
+    assert!(report.batches >= 3, "12 requests at max_batch 4 need >= 3 batches");
+    // The run's MiTA stats cover the model's routed blocks.
+    let mita = report.mita.expect("native backend reports MiTA stats");
+    assert!(mita.queries > 0, "MiTA blocks must have routed queries");
+
+    // Unknown tasks are rejected before any serving starts.
+    let mut bad = cfg;
+    bad.task = "nope".into();
+    assert!(serve_model(&engine.handle(), &bad).is_err());
+    engine.shutdown();
+}
