@@ -5,13 +5,15 @@
 //! 1. Calls the kernels directly (serial, zero-alloc via a [`Workspace`]):
 //!    dense vs MiTA forward on one sequence, with a degenerate-parity
 //!    check (m = k = n ⇒ identical outputs).
-//! 2. Runs a batched problem through [`NativeBackend`] — the kernel
-//!    registry resolves the op, and execution fans out as (example × head)
-//!    work items over pooled per-thread workspaces.
+//! 2. Runs a batched problem through [`NativeBackend`] as a **typed
+//!    service request** — a validated `QkvBatch` routed by `KernelId`,
+//!    with padding expressed as the typed `valid_rows` field (no marker
+//!    tensors, no raw op strings) — and execution fans out as
+//!    (example × head) work items over pooled per-thread workspaces.
 //! 3. Spawns the coordinator engine over `BackendSpec::Native` and drives
 //!    the dynamic-batching serving loop against it (the report row shows
-//!    the run's routing stats: `ovf=` overflow fraction, `imb=` expert
-//!    load imbalance).
+//!    queue-wait vs execute latency plus the run's routing stats: `ovf=`
+//!    overflow fraction, `imb=` expert load imbalance).
 //!
 //! Run: `cargo run --release --example native_attention [-- n dim heads]`
 //!
@@ -22,13 +24,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::server::{serve_native, NativeServeConfig};
+use mita::coordinator::server::{serve_native, NativeServeConfig, DEFAULT_MAX_INFLIGHT};
 use mita::coordinator::Engine;
 use mita::data::rng::Rng;
 use mita::kernels::{
-    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, OP_ATTN_MITA, Workspace,
+    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, Workspace,
 };
-use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+use mita::runtime::{BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+use mita::service::{KernelId, QkvBatch};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -84,24 +87,27 @@ fn main() -> Result<()> {
         stats.queries,
     );
 
-    // 2) The same math through the backend's batched (example × head)
-    //    dispatch: one fused [b, 3, n, dim] call, parallel work items,
-    //    pooled workspaces.
+    // 2) The same math as a typed service request through the backend's
+    //    batched (example × head) dispatch: a validated QkvBatch, a
+    //    KernelId, and typed valid_rows padding — the last batch row is
+    //    marked padding, never computed, and comes back as zeros.
     let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
     attn.mita = cfg;
     let backend = NativeBackend::new(attn.clone());
     let bsz = 4usize;
+    let valid = bsz - 1;
     let fused_data: Vec<f32> = (0..bsz * 3 * n * dim).map(|_| rng.range_f32(-2.0, 2.0)).collect();
-    let fused = Tensor::f32(&[bsz, 3, n, dim], fused_data)?;
+    let qkv = QkvBatch::fused(Tensor::f32(&[bsz, 3, n, dim], fused_data)?)?;
     let t0 = Instant::now();
-    let outs = backend.run(OP_ATTN_MITA, None, &[fused])?;
+    let out = backend.run_attention(&KernelId::Mita, &qkv, Some(valid))?;
     let batched_ms = t0.elapsed().as_secs_f64() * 1e3;
-    let bstats = backend.mita_stats().unwrap_or_default();
+    let bstats = backend.mita_stats();
+    let pad_zeroed = out.as_f32()?[valid * n * dim..].iter().all(|&x| x == 0.0);
     println!(
-        "batched b={bsz}: out {:?} in {batched_ms:.2}ms ({} work items, {} pooled workspaces, \
-         ovf {:.1}%)",
-        outs[0].shape(),
-        bsz * heads,
+        "batched b={bsz} valid={valid}: out {:?} in {batched_ms:.2}ms ({} work items, {} pooled \
+         workspaces, ovf {:.1}%, pad row zeroed: {pad_zeroed})",
+        out.shape(),
+        valid * heads,
         backend.workspace_pool().created(),
         bstats.overflow_fraction() * 100.0,
     );
@@ -116,6 +122,7 @@ fn main() -> Result<()> {
             requests: 32,
             rate: 0.0,
             queue_cap: 64,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
             policy: BatchPolicy {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(2),

@@ -8,8 +8,10 @@
 //!    predicted classes + routing stats.
 //! 2. Round-trips the model through the native checkpoint format.
 //! 3. Spawns the coordinator engine over `BackendSpec::Native`, binds the
-//!    model, and drives the dynamic-batching serving loop with token
-//!    requests (the report row shows the run's routing stats).
+//!    model, sends one **typed** model-forward request (padding is the
+//!    typed `valid_rows` field — no marker tensors), and drives the
+//!    dynamic-batching serving loop with token requests (the report row
+//!    shows queue-wait vs execute latency plus routing stats).
 //!
 //! Run: `cargo run --release --example native_model [-- seq_len dim heads]`
 //!
@@ -17,13 +19,13 @@
 
 use anyhow::Result;
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::{serve_model, Engine, ModelServeConfig};
+use mita::coordinator::{serve_model, Engine, ModelServeConfig, DEFAULT_MAX_INFLIGHT};
 use mita::data::lra;
 use mita::data::Split;
 use mita::flops;
 use mita::kernels::{MitaStats, WorkspacePool, OP_ATTN_DENSE, OP_ATTN_MITA};
 use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_INIT};
-use mita::runtime::{BackendSpec, NativeAttnConfig};
+use mita::runtime::{BackendSpec, NativeAttnConfig, Tensor};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -88,10 +90,19 @@ fn main() -> Result<()> {
     println!("checkpoint round-trip: logits identical = {}", lr == lm);
     std::fs::remove_file(&path).ok();
 
-    // 3) The same model behind the engine + dynamic batcher.
+    // 3) The same model behind the engine: first one typed model-forward
+    //    request (tokens + valid_rows — the second batch row is padding
+    //    the backend never computes), then the dynamic batcher.
     let attn = NativeAttnConfig::for_shape(n, dim, heads).with_model(model.cfg.clone());
     let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
     engine.handle().bind_init("model", OP_MODEL_INIT, 7, 0)?;
+    let two = Tensor::i32(&[2, n], tokens[..2 * n].to_vec())?;
+    let logits = engine.handle().model_forward("model", two, Some(1))?;
+    let pad_zeroed = logits.as_f32()?[classes..].iter().all(|&x| x == 0.0);
+    println!(
+        "typed model.forward: logits {:?} (row 1 is padding, zeroed: {pad_zeroed})",
+        logits.shape()
+    );
     let scfg = ModelServeConfig {
         task: "listops".into(),
         seq_len: n,
@@ -100,6 +111,7 @@ fn main() -> Result<()> {
         requests: 32,
         rate: 0.0,
         queue_cap: 64,
+        max_inflight: DEFAULT_MAX_INFLIGHT,
         policy: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
     };
     let report = serve_model(&engine.handle(), &scfg)?;

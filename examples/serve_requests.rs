@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::server::{serve, ServeConfig};
+use mita::coordinator::server::{serve, ServeConfig, DEFAULT_MAX_INFLIGHT};
 use mita::coordinator::Engine;
 use mita::runtime::Runtime;
 
@@ -42,6 +42,7 @@ fn main() -> Result<()> {
             requests,
             rate,
             queue_cap: requests.max(64),
+            max_inflight: DEFAULT_MAX_INFLIGHT,
             policy: BatchPolicy {
                 max_batch: spec.train.batch_size,
                 max_wait: std::time::Duration::from_millis(max_wait_ms),

@@ -23,9 +23,10 @@ use mita::data::rng::Rng;
 use mita::data::{BatchSource, Split};
 use mita::flops;
 use mita::kernels::{
-    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, OP_ATTN_MITA, Workspace,
+    dense_attention_mh, mita_attention_mh, MitaKernelConfig, MitaStats, Workspace,
 };
-use mita::runtime::{Backend, NativeAttnConfig, NativeBackend, Runtime, Tensor};
+use mita::runtime::{NativeAttnConfig, NativeBackend, Runtime, Tensor};
+use mita::service::{KernelId, QkvBatch};
 use mita::util::bench::bench_for;
 
 /// Model shape shared by the native sweeps and the JSON artifact (the
@@ -87,8 +88,10 @@ fn native_sweep(quick: bool) -> Vec<(usize, MitaKernelConfig, f64, f64)> {
     rows
 }
 
-/// Batched (example × head) parallel dispatch through `NativeBackend` vs
-/// the serial per-sequence kernel path, per batch size.
+/// Batched (example × head) parallel dispatch through `NativeBackend` —
+/// driven as typed attention requests (validated `QkvBatch` + `KernelId`,
+/// the serving path's exact request form) — vs the serial per-sequence
+/// kernel path, per batch size.
 fn batched_sweep(quick: bool) -> Vec<(usize, f64, f64)> {
     let (n, dim, heads) = (BATCH_N, DIM, HEADS);
     let batches: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8, 16] };
@@ -109,7 +112,8 @@ fn batched_sweep(quick: bool) -> Vec<(usize, f64, f64)> {
     for &b in batches {
         let mut rng = Rng::derive(0xBA7C, &[b as u64]);
         let data: Vec<f32> = (0..b * 3 * per).map(|_| rng.range_f32(-2.0, 2.0)).collect();
-        let fused = Tensor::f32(&[b, 3, n, dim], data.clone()).unwrap();
+        let qkv = QkvBatch::fused(Tensor::f32(&[b, 3, n, dim], data.clone()).unwrap())
+            .expect("valid fused batch");
         let mut out = vec![0.0f32; b * per];
 
         // Serial per-sequence path: one warm workspace, one example at a
@@ -125,7 +129,7 @@ fn batched_sweep(quick: bool) -> Vec<(usize, f64, f64)> {
         println!("{}  ({:.1} seqs/s)", rs.row(), rs.throughput(b as f64));
 
         let rb = bench_for(&format!("batched b={b}"), 1, budget, || {
-            backend.run(OP_ATTN_MITA, None, std::slice::from_ref(&fused)).unwrap();
+            backend.run_attention(&KernelId::Mita, &qkv, None).unwrap();
         });
         println!("{}  ({:.1} seqs/s)", rb.row(), rb.throughput(b as f64));
         rows.push((b, rs.mean_secs, rb.mean_secs));

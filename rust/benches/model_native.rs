@@ -26,6 +26,8 @@ use mita::data::Split;
 use mita::flops;
 use mita::kernels::{MitaKernelConfig, MitaStats, WorkspacePool, OP_ATTN_DENSE, OP_ATTN_MITA};
 use mita::model::{MitaModel, ModelConfig, ModelScratch};
+use mita::runtime::{Backend, NativeAttnConfig, NativeBackend, Tensor};
+use mita::service::{BindingId, ServiceRequest};
 use mita::util::bench::bench_for;
 
 /// Model shape shared by every row (the JSON metadata must never drift
@@ -99,33 +101,40 @@ fn run_shape(name: &'static str, n: usize, vocab: usize, budget: f64) -> Row {
     let mcfg = ModelConfig::for_task(task.as_ref(), DIM, HEADS, DEPTH, OP_ATTN_MITA);
     let model = MitaModel::init(mcfg.clone(), 7).expect("model init");
     let dense = model.with_kernel(OP_ATTN_DENSE).expect("dense model");
-    let registry = model.registry();
-    let pool = WorkspacePool::new();
-    let mut scratch = ModelScratch::default();
-    let mut stats = MitaStats::default();
     let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 0, BATCH);
 
+    // Measure through the typed service surface — exactly what serving
+    // executes: both variants bound as checkpoints, batches dispatched as
+    // typed model-forward requests.
+    let mut be = NativeBackend::new(NativeAttnConfig::for_shape(n, DIM, HEADS));
+    be.execute(ServiceRequest::BindCheckpoint {
+        binding: BindingId::from("mita"),
+        params: model.to_tensors().expect("flatten mita model"),
+    })
+    .expect("bind mita model");
+    be.execute(ServiceRequest::BindCheckpoint {
+        binding: BindingId::from("dense"),
+        params: dense.to_tensors().expect("flatten dense model"),
+    })
+    .expect("bind dense model");
+    let batch = Tensor::i32(&[BATCH, n], tokens.clone()).expect("token batch");
+    let (b_mita, b_dense) = (BindingId::from("mita"), BindingId::from("dense"));
+
     let rm = bench_for(&format!("mita  {name} n={n}"), 1, budget, || {
-        model
-            .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
-            .expect("mita forward");
+        be.run_model(&b_mita, &batch, None).expect("mita forward");
     });
     println!("{}  ({:.1} seqs/s)", rm.row(), rm.throughput(BATCH as f64));
     let rd = bench_for(&format!("dense {name} n={n}"), 1, budget, || {
-        dense
-            .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
-            .expect("dense forward");
+        be.run_model(&b_dense, &batch, None).expect("dense forward");
     });
     println!("{}  ({:.1} seqs/s)", rd.row(), rd.throughput(BATCH as f64));
 
     // Accuracy parity at the real config: do routed and dense blocks pick
     // the same class per example?
-    let lm = model
-        .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
-        .expect("mita logits");
-    let ld = dense
-        .forward(&tokens, BATCH, BATCH, &registry, &pool, &mut scratch, &mut stats)
-        .expect("dense logits");
+    let lm = be.run_model(&b_mita, &batch, None).expect("mita logits");
+    let lm = lm.as_f32().expect("f32 logits").to_vec();
+    let ld = be.run_model(&b_dense, &batch, None).expect("dense logits");
+    let ld = ld.as_f32().expect("f32 logits").to_vec();
     let classes = mcfg.classes;
     let agree = (0..BATCH)
         .filter(|&i| {
@@ -136,7 +145,11 @@ fn run_shape(name: &'static str, n: usize, vocab: usize, budget: f64) -> Row {
         / BATCH as f64;
 
     // Strict parity on the landmarks-cover-everything config (m = k = n),
-    // at a clamped sequence length so the degenerate O(n²) stays cheap.
+    // at a clamped sequence length so the degenerate O(n²) stays cheap
+    // (library-level forward: this shape is never bound for serving).
+    let pool = WorkspacePool::new();
+    let mut scratch = ModelScratch::default();
+    let mut stats = MitaStats::default();
     let pn = n.min(256);
     let ptask = lra::by_name(name, pn, vocab, 0xBE9C);
     let pcfg = ModelConfig::for_task(ptask.as_ref(), DIM, HEADS, DEPTH, OP_ATTN_MITA)

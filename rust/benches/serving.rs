@@ -5,7 +5,7 @@
 use std::time::{Duration, Instant};
 
 use mita::coordinator::batcher::{BatchPolicy, Batcher, Flush};
-use mita::coordinator::server::{serve, ServeConfig};
+use mita::coordinator::server::{serve, ServeConfig, DEFAULT_MAX_INFLIGHT};
 use mita::coordinator::Engine;
 use mita::runtime::Runtime;
 use mita::util::bench::bench;
@@ -52,6 +52,7 @@ fn main() {
             requests: 128,
             rate: 0.0,
             queue_cap: 256,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
             policy: BatchPolicy {
                 max_batch: spec.train.batch_size,
                 max_wait: Duration::from_millis(max_wait_ms),

@@ -216,7 +216,7 @@ mod tests {
     #[test]
     fn prop_bounded_admission_conserves_requests() {
         use crate::util::prop::run_prop;
-        // Simulates serve_loop's queue_cap backpressure: at most queue_cap
+        // Simulates serve_workload's queue_cap backpressure: at most queue_cap
         // requests may sit in the batcher; everything admitted must be
         // emitted exactly once, in FIFO order, with pad slots accounted.
         run_prop(150, |g| {

@@ -1,138 +1,185 @@
-//! Engine thread: single-threaded owner of an execution [`Backend`].
+//! Engine thread: single-threaded owner of an execution [`Backend`],
+//! driven by **submit/poll tickets** instead of blocking request/reply.
 //!
-//! PJRT handles are not `Send`, so the backend is *constructed inside* one
-//! dedicated OS thread from a [`BackendSpec`]; the frontend talks to it
+//! PJRT handles are not `Send`, so the backend is *constructed inside*
+//! one dedicated OS thread from a [`BackendSpec`]; frontends talk to it
 //! over an mpsc channel (std threads — the vendored crate set has no
 //! tokio). This is the same frontend/engine split as vLLM's router →
-//! engine core, now backend-agnostic: the same loop drives PJRT artifacts
-//! (`Engine::spawn`) or the native CPU attention kernels
-//! (`Engine::spawn_backend` with [`BackendSpec::Native`]).
+//! engine core, now with a typed, pipelined submission surface:
+//!
+//! - [`EngineHandle::submit`] enqueues a [`ServiceRequest`] and returns a
+//!   [`Ticket`] immediately — the caller keeps batching, generating, or
+//!   serving other clients while the engine executes.
+//! - [`Ticket::wait`] / [`Ticket::try_wait`] collect that request's
+//!   result. Each ticket carries a correlation id and its own completion
+//!   channel, so any number of requests can be in flight per handle and
+//!   results can be collected **out of submission order** — no caller
+//!   thread is parked per request.
 //!
 //! Parameter bindings live inside the backend (bound once, referenced by
-//! key on each request), so the hot path converts only the batch tensor —
-//! never the weights.
+//! [`BindingId`] on each request), so the hot path converts only the
+//! batch tensors — never the weights.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-use crate::kernels::MitaStats;
-use crate::runtime::{BackendSpec, RuntimeStats, Tensor};
+use crate::runtime::{BackendSpec, Tensor};
+use crate::service::{
+    BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse, ServiceResult,
+};
 
-/// Combined backend counters returned by [`EngineHandle::backend_stats`].
-#[derive(Debug, Clone, Default)]
-pub struct EngineStats {
-    /// Compile/execute counters.
-    pub runtime: RuntimeStats,
-    /// Native MiTA routing statistics, when the backend runs those
-    /// kernels (None on artifact backends).
-    pub mita: Option<MitaStats>,
-}
+/// Combined backend counters returned by [`EngineHandle::backend_stats`]
+/// (the engine-side name of [`crate::service::ServiceStats`]).
+pub type EngineStats = crate::service::ServiceStats;
 
-/// Requests served by the engine thread.
-pub enum EngineRequest {
-    /// Execute `artifact` (op name) on `inputs`, optionally prefixed by a
-    /// parameter binding created earlier.
-    Run {
-        artifact: String,
-        binding: Option<String>,
-        inputs: Vec<Tensor>,
-        reply: mpsc::Sender<Result<Vec<Tensor>>>,
-    },
-    /// Create a binding by running a bundle's `init` artifact and keeping
-    /// its first `param_count` outputs (the parameters).
-    BindInit {
-        key: String,
-        init_artifact: String,
-        seed: i32,
-        param_count: usize,
-        reply: mpsc::Sender<Result<()>>,
-    },
-    /// Create a binding from host tensors (e.g. a loaded checkpoint).
-    BindTensors { key: String, params: Vec<Tensor>, reply: mpsc::Sender<Result<()>> },
-    /// Snapshot the backend's execution + routing counters. With `reset`,
-    /// the routing accumulator is cleared after the snapshot, so
-    /// successive resetting reads partition the stats into disjoint
-    /// per-interval reports.
-    Stats { reset: bool, reply: mpsc::Sender<Result<EngineStats>> },
+enum EngineMsg {
+    /// Execute one typed request; the result travels back over the
+    /// ticket's dedicated channel (the correlation id stays caller-side,
+    /// on the [`Ticket`] — the engine has no use for it).
+    Job { req: ServiceRequest, reply: mpsc::Sender<ServiceResult<ServiceResponse>> },
     /// Stop the engine loop (makes `shutdown` safe even while other
     /// EngineHandle clones are still alive).
     Shutdown,
 }
 
-/// Handle for submitting jobs; cloneable across threads.
+/// An in-flight engine request: a correlation id plus the completion
+/// channel. Obtained from [`EngineHandle::submit`]; redeem with
+/// [`Ticket::wait`] (blocking) or [`Ticket::try_wait`] (polling).
+pub struct Ticket {
+    id: u64,
+    rx: mpsc::Receiver<ServiceResult<ServiceResponse>>,
+}
+
+impl Ticket {
+    /// The correlation id (unique per engine handle family; useful for
+    /// logs and for matching completions to submissions).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until this request completes.
+    pub fn wait(self) -> ServiceResult<ServiceResponse> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServiceError::Internal(format!(
+                "engine dropped reply for ticket {}",
+                self.id
+            ))),
+        }
+    }
+
+    /// Non-blocking completion check. Returns `None` while the request is
+    /// still executing; once it returns `Some`, the result has been taken
+    /// and later calls report an internal error.
+    pub fn try_wait(&mut self) -> Option<ServiceResult<ServiceResponse>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServiceError::Internal(format!(
+                "engine dropped reply for ticket {}",
+                self.id
+            )))),
+        }
+    }
+}
+
+/// Handle for submitting jobs; cloneable across threads. Clones share one
+/// correlation-id sequence.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::Sender<EngineRequest>,
+    tx: mpsc::Sender<EngineMsg>,
+    next_id: Arc<AtomicU64>,
 }
 
 impl EngineHandle {
-    fn submit<T>(&self, req: EngineRequest, rx: mpsc::Receiver<Result<T>>) -> Result<T> {
-        self.tx.send(req).map_err(|_| anyhow::anyhow!("engine thread terminated"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped reply"))?
-    }
-
-    /// Execute an op and block for the result.
-    pub fn run(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+    /// Enqueue a request and return its [`Ticket`] without blocking on
+    /// execution. Fails only if the engine thread is gone.
+    pub fn submit(&self, req: ServiceRequest) -> ServiceResult<Ticket> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
-        self.submit(
-            EngineRequest::Run { artifact: artifact.into(), binding: None, inputs, reply },
-            rx,
-        )
+        self.tx
+            .send(EngineMsg::Job { req, reply })
+            .map_err(|_| ServiceError::Unavailable("engine thread terminated".into()))?;
+        Ok(Ticket { id, rx })
     }
 
-    /// Execute an op with a parameter binding prefix.
-    pub fn run_bound(
+    /// Submit and block for the result (the one-shot convenience).
+    pub fn call(&self, req: ServiceRequest) -> ServiceResult<ServiceResponse> {
+        self.submit(req)?.wait()
+    }
+
+    /// Typed attention round-trip: `[b, n, dim]` output.
+    pub fn attention(
+        &self,
+        op: KernelId,
+        qkv: QkvBatch,
+        valid_rows: Option<usize>,
+    ) -> ServiceResult<Tensor> {
+        self.call(ServiceRequest::Attention { op, qkv, valid_rows })?.into_tensor()
+    }
+
+    /// Typed model-forward round-trip: `[b, classes]` logits.
+    pub fn model_forward(
+        &self,
+        binding: &str,
+        tokens: Tensor,
+        valid_rows: Option<usize>,
+    ) -> ServiceResult<Tensor> {
+        self.call(ServiceRequest::ModelForward {
+            binding: BindingId::from(binding),
+            tokens,
+            valid_rows,
+        })?
+        .into_tensor()
+    }
+
+    /// Execute a compiled artifact (PJRT backend), optionally against a
+    /// parameter binding.
+    pub fn run_artifact(
         &self,
         artifact: &str,
-        binding: &str,
+        binding: Option<&str>,
         inputs: Vec<Tensor>,
-    ) -> Result<Vec<Tensor>> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(
-            EngineRequest::Run {
-                artifact: artifact.into(),
-                binding: Some(binding.into()),
-                inputs,
-                reply,
-            },
-            rx,
-        )
+    ) -> ServiceResult<Vec<Tensor>> {
+        let resp = self.call(ServiceRequest::Artifact {
+            artifact: artifact.to_string(),
+            binding: binding.map(BindingId::from),
+            inputs,
+        })?;
+        Ok(resp.into_tensors())
     }
 
-    /// Bind parameters by running an init artifact inside the engine.
+    /// Bind parameters by seeded init inside the engine (`init_op` is
+    /// `model.init` natively, an init artifact name on PJRT).
     pub fn bind_init(
         &self,
         key: &str,
-        init_artifact: &str,
+        init_op: &str,
         seed: i32,
         param_count: usize,
-    ) -> Result<()> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(
-            EngineRequest::BindInit {
-                key: key.into(),
-                init_artifact: init_artifact.into(),
-                seed,
-                param_count,
-                reply,
-            },
-            rx,
-        )
+    ) -> ServiceResult<()> {
+        self.call(ServiceRequest::BindInit {
+            binding: BindingId::from(key),
+            init_op: init_op.to_string(),
+            seed,
+            param_count,
+        })?;
+        Ok(())
     }
 
     /// Bind parameters from host tensors (checkpoint weights).
-    pub fn bind_tensors(&self, key: &str, params: Vec<Tensor>) -> Result<()> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(EngineRequest::BindTensors { key: key.into(), params, reply }, rx)
+    pub fn bind_tensors(&self, key: &str, params: Vec<Tensor>) -> ServiceResult<()> {
+        self.call(ServiceRequest::BindCheckpoint { binding: BindingId::from(key), params })?;
+        Ok(())
     }
 
     /// Snapshot the backend's execution counters and (for the native
     /// backend) accumulated MiTA routing statistics.
-    pub fn backend_stats(&self) -> Result<EngineStats> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(EngineRequest::Stats { reset: false, reply }, rx)
+    pub fn backend_stats(&self) -> ServiceResult<EngineStats> {
+        self.call(ServiceRequest::Stats { reset: false })?.into_stats()
     }
 
     /// Like [`EngineHandle::backend_stats`], but clears the routing
@@ -140,9 +187,8 @@ impl EngineHandle {
     /// with two of these so its report covers exactly that run (peaks
     /// like the load-imbalance maximum cannot be deltaed out of a
     /// cumulative snapshot).
-    pub fn take_backend_stats(&self) -> Result<EngineStats> {
-        let (reply, rx) = mpsc::channel();
-        self.submit(EngineRequest::Stats { reset: true, reply }, rx)
+    pub fn take_backend_stats(&self) -> ServiceResult<EngineStats> {
+        self.call(ServiceRequest::Stats { reset: true })?.into_stats()
     }
 }
 
@@ -162,7 +208,7 @@ impl Engine {
     /// Spawn the engine thread over any backend. `warmup` ops are prepared
     /// before any job is served (keeps compiles off the latency path).
     pub fn spawn_backend(spec: BackendSpec, warmup: Vec<String>) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<EngineRequest>();
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let join = std::thread::Builder::new()
@@ -183,35 +229,32 @@ impl Engine {
                 }
                 let _ = ready_tx.send(Ok(()));
 
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        EngineRequest::Shutdown => break,
-                        EngineRequest::Run { artifact, binding, inputs, reply } => {
-                            let result = backend.run(&artifact, binding.as_deref(), &inputs);
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        EngineMsg::Shutdown => break,
+                        EngineMsg::Job { req, reply } => {
+                            // Panic isolation: the engine serves untrusted
+                            // network input through the netserver front; a
+                            // panicking backend must surface as a typed
+                            // internal error on that one ticket, not kill
+                            // the singleton engine thread for every future
+                            // request. (Backend scratch is RefCell-based
+                            // with no poisoning; borrows release on
+                            // unwind, so the backend stays usable.)
+                            let result = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| backend.execute(req)),
+                            )
+                            .unwrap_or_else(|panic| {
+                                let msg = panic
+                                    .downcast_ref::<&str>()
+                                    .map(|s| (*s).to_string())
+                                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "non-string panic payload".into());
+                                Err(ServiceError::Internal(format!("backend panicked: {msg}")))
+                            });
+                            // A dropped reply receiver just means the
+                            // caller stopped caring about this ticket.
                             let _ = reply.send(result);
-                        }
-                        EngineRequest::BindInit {
-                            key,
-                            init_artifact,
-                            seed,
-                            param_count,
-                            reply,
-                        } => {
-                            let result =
-                                backend.bind_init(&key, &init_artifact, seed, param_count);
-                            let _ = reply.send(result);
-                        }
-                        EngineRequest::BindTensors { key, params, reply } => {
-                            let _ = reply.send(backend.bind_tensors(&key, params));
-                        }
-                        EngineRequest::Stats { reset, reply } => {
-                            let mita = if reset {
-                                backend.take_mita_stats()
-                            } else {
-                                backend.mita_stats()
-                            };
-                            let stats = EngineStats { runtime: backend.stats(), mita };
-                            let _ = reply.send(Ok(stats));
                         }
                     }
                 }
@@ -220,7 +263,10 @@ impl Engine {
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        Ok(Engine { handle: EngineHandle { tx }, join: Some(join) })
+        Ok(Engine {
+            handle: EngineHandle { tx, next_id: Arc::new(AtomicU64::new(0)) },
+            join: Some(join),
+        })
     }
 
     pub fn handle(&self) -> EngineHandle {
@@ -231,7 +277,7 @@ impl Engine {
     /// while other EngineHandle clones are alive (their later submissions
     /// fail with "engine thread terminated").
     pub fn shutdown(mut self) {
-        let _ = self.handle.tx.send(EngineRequest::Shutdown);
+        let _ = self.handle.tx.send(EngineMsg::Shutdown);
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -241,8 +287,80 @@ impl Engine {
 impl Drop for Engine {
     fn drop(&mut self) {
         if let Some(j) = self.join.take() {
-            let _ = self.handle.tx.send(EngineRequest::Shutdown);
+            let _ = self.handle.tx.send(EngineMsg::Shutdown);
             let _ = j.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::runtime::NativeAttnConfig;
+
+    fn fused_batch(n: usize, dim: usize, seed: u64) -> QkvBatch {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        QkvBatch::fused(Tensor::f32(&[1, 3, n, dim], data).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn tickets_complete_out_of_submission_order() {
+        let attn = NativeAttnConfig::for_shape(16, 8, 2);
+        let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+        let handle = engine.handle();
+
+        // Submit a pipeline of requests without waiting on any of them.
+        let tickets: Vec<Ticket> = (0..4)
+            .map(|i| {
+                handle
+                    .submit(ServiceRequest::Attention {
+                        op: KernelId::Mita,
+                        qkv: fused_batch(16, 8, i),
+                        valid_rows: None,
+                    })
+                    .unwrap()
+            })
+            .collect();
+        let ids: Vec<u64> = tickets.iter().map(Ticket::id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "correlation ids are sequential");
+
+        // Redeem in reverse order — completions are per-ticket, so the
+        // collection order is the caller's choice.
+        for t in tickets.into_iter().rev() {
+            let out = t.wait().unwrap().into_tensor().unwrap();
+            assert_eq!(out.shape(), &[1, 16, 8]);
+        }
+
+        // try_wait polls without blocking.
+        let mut t = handle
+            .submit(ServiceRequest::Attention {
+                op: KernelId::Dense,
+                qkv: fused_batch(16, 8, 9),
+                valid_rows: None,
+            })
+            .unwrap();
+        let result = loop {
+            match t.try_wait() {
+                Some(r) => break r,
+                None => std::thread::yield_now(),
+            }
+        };
+        assert_eq!(result.unwrap().into_tensor().unwrap().shape(), &[1, 16, 8]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_unavailable() {
+        let attn = NativeAttnConfig::for_shape(8, 4, 1);
+        let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+        let handle = engine.handle();
+        engine.shutdown();
+        let err = handle
+            .submit(ServiceRequest::Stats { reset: false })
+            .map(|_| ())
+            .unwrap_err();
+        assert_eq!(err.code(), "unavailable");
     }
 }

@@ -1,13 +1,18 @@
 //! L3 coordinator: everything that runs on the request path.
 //!
 //! - [`engine`]: dedicated thread owning an execution backend — PJRT
-//!   artifacts or the native CPU kernels — behind one frontend/engine
-//!   split as in vLLM's router architecture.
+//!   artifacts or the native CPU kernels — driven by typed
+//!   [`ServiceRequest`](crate::service::ServiceRequest)s over
+//!   submit/poll tickets (one frontend/engine split as in vLLM's router
+//!   architecture, now pipelined).
 //! - [`batcher`]: pure dynamic-batching policy (max-batch / max-wait).
-//! - [`server`]: async serving loop + load generator + latency accounting,
-//!   with a bundle-driven front ([`serve`]), an artifact-free native
-//!   attention front ([`serve_native`]), and a whole-model front over the
-//!   LRA tasks ([`serve_model`]).
+//! - [`server`]: the serving loop + load generator + latency accounting;
+//!   one [`Workload`]-parameterized front with convenience builders for
+//!   PJRT bundles ([`serve`]), native attention ([`serve_native`]), and
+//!   whole-model classification ([`serve_model`]).
+//! - [`netserver`]: the network edge — a TCP HTTP/1.1 + JSON loop
+//!   mapping wire requests onto the typed service API, plus the matching
+//!   loopback [`NetClient`].
 //! - [`trainer`]: AOT train-step driver with loss-curve tracking.
 //! - [`checkpoint`]: flat-parameter save/load.
 //! - [`metrics`]: histograms, streaming stats, mIoU.
@@ -16,13 +21,15 @@ pub mod batcher;
 pub mod checkpoint;
 pub mod engine;
 pub mod metrics;
+pub mod netserver;
 pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
-pub use engine::{Engine, EngineHandle, EngineStats};
+pub use engine::{Engine, EngineHandle, EngineStats, Ticket};
+pub use netserver::{NetClient, NetServer, NetServerConfig};
 pub use server::{
-    serve, serve_model, serve_native, ModelServeConfig, NativeServeConfig, ServeConfig,
-    ServeReport,
+    serve, serve_model, serve_native, serve_workload, ModelServeConfig, NativeServeConfig,
+    ServeConfig, ServeReport, Workload, WorkloadSpec, DEFAULT_MAX_INFLIGHT,
 };
 pub use trainer::{eval_checkpoint, EvalResult, Trainer};

@@ -1,0 +1,576 @@
+//! Network serving front: a std::net TCP loop speaking minimal HTTP/1.1
+//! + JSON over the typed service API.
+//!
+//! Wire requests parse **once** at this boundary into
+//! [`ServiceRequest`]s (see [`crate::service::wire`] and
+//! `docs/PROTOCOL.md`) and ride the engine's submit/poll tickets; every
+//! failure is a [`ServiceError`] whose stable code becomes the HTTP
+//! status + JSON error body. Admission control is an in-flight cap
+//! acquired **after the headers but before the body**: past
+//! [`NetServerConfig::max_inflight`] concurrent requests, new work is
+//! rejected with `503 overloaded` before its body is even buffered, so
+//! the cap bounds request memory, not just engine work.
+//!
+//! One OS thread per **connection** (not per request), with a hard
+//! connection cap: connections are keep-alive, so a client pipelining
+//! many requests costs one thread, and the engine round-trip itself
+//! never parks more than that thread. [`NetClient`] is the matching
+//! loopback client used by the CLI, the tests, and the CI smoke step.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::engine::EngineHandle;
+use crate::service::wire::{self, EP_HEALTH, EP_SHUTDOWN};
+use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult};
+use crate::util::json::Value;
+
+/// Largest accepted request body (tensors are JSON, so generous). The
+/// body is streamed, never allocated upfront from the declared length.
+const MAX_BODY_BYTES: usize = 64 << 20;
+/// Cap on the request line + headers of one request.
+const MAX_HEADER_BYTES: u64 = 64 * 1024;
+/// Body cap for server-local endpoints (health/shutdown/unknown) — they
+/// never need one, so a large declared body there is a smuggling attempt.
+const MAX_LOCAL_BODY_BYTES: usize = 4 * 1024;
+/// Hard cap on concurrent connections (each costs one handler thread).
+const MAX_CONNECTIONS: usize = 256;
+/// Over-capacity connections get a short-lived drain thread so the 503
+/// isn't RST away with unread bytes pending; past this many concurrent
+/// rejections the connection is dropped outright.
+const MAX_REJECT_DRAINS: usize = 32;
+
+/// Network front configuration.
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Listen address, e.g. `127.0.0.1:7433` (`:0` picks a free port).
+    pub addr: String,
+    /// Admission cap: requests allowed to execute concurrently before
+    /// new ones are rejected with `overloaded`. 0 rejects everything
+    /// (useful to test admission control).
+    pub max_inflight: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig { addr: "127.0.0.1:0".into(), max_inflight: 64 }
+    }
+}
+
+/// The bound network server. [`NetServer::run`] serves until a client
+/// posts the shutdown endpoint, then returns cleanly.
+pub struct NetServer {
+    listener: TcpListener,
+    engine: EngineHandle,
+    inflight: Arc<AtomicUsize>,
+    shutdown: Arc<AtomicBool>,
+    max_inflight: usize,
+}
+
+impl NetServer {
+    /// Bind the listen socket (fails fast on a bad address).
+    pub fn bind(engine: EngineHandle, cfg: &NetServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        Ok(NetServer {
+            listener,
+            engine,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            max_inflight: cfg.max_inflight,
+        })
+    }
+
+    /// The actual bound address (resolves `:0` to the chosen port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("local_addr")
+    }
+
+    /// Accept loop: one handler thread per connection, until shutdown.
+    pub fn run(self) -> Result<()> {
+        let addr = self.local_addr()?;
+        let mut handlers = Vec::new();
+        let rejecting = Arc::new(AtomicUsize::new(0));
+        for conn in self.listener.incoming() {
+            if self.shutdown.load(Ordering::Acquire) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            // Reap finished handler threads, then enforce the connection
+            // cap (each live connection holds one thread + its buffers).
+            handlers.retain(|h| !h.is_finished());
+            if handlers.len() >= MAX_CONNECTIONS {
+                // Reject off-thread: the accept loop must never block on
+                // a slow peer, and writing the 503 without consuming the
+                // request would let close() RST it away (the same reason
+                // serve_connection's refuse path drains to a sink).
+                if rejecting.load(Ordering::Acquire) < MAX_REJECT_DRAINS {
+                    rejecting.fetch_add(1, Ordering::AcqRel);
+                    let rejecting = rejecting.clone();
+                    std::thread::spawn(move || {
+                        let _ = reject_over_capacity(stream);
+                        rejecting.fetch_sub(1, Ordering::AcqRel);
+                    });
+                }
+                continue;
+            }
+            let engine = self.engine.clone();
+            let inflight = self.inflight.clone();
+            let shutdown = self.shutdown.clone();
+            let max_inflight = self.max_inflight;
+            handlers.push(std::thread::spawn(move || {
+                let _ = serve_connection(stream, &engine, &inflight, &shutdown, max_inflight, addr);
+            }));
+        }
+        for h in handlers {
+            // Join only handlers that already returned; an idle keep-alive
+            // connection parks its handler in a (60s-capped) read, and
+            // joining it would stall shutdown for that long — detach those
+            // instead (they exit on their next read timeout/EOF).
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Answer one over-capacity connection with `503 overloaded`: read the
+/// request head (bounded), write the typed error, and drain the declared
+/// body to a sink so closing the socket doesn't RST the response. Runs
+/// on its own short-lived thread under a tight read timeout.
+fn reject_over_capacity(stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let head = read_http_head(&mut reader)?;
+    let err =
+        ServiceError::Overloaded(format!("connection capacity reached ({MAX_CONNECTIONS})"));
+    let body = wire::encode_error(&err).render();
+    let _ = write_http_response(&mut writer, err.http_status(), &body, false);
+    if let Some(head) = head {
+        let _ = std::io::copy(
+            &mut (&mut reader).take(head.content_length as u64),
+            &mut std::io::sink(),
+        );
+    }
+    Ok(())
+}
+
+/// RAII in-flight slot (decrements on drop, even on error paths).
+struct InflightSlot<'a>(&'a AtomicUsize);
+
+impl Drop for InflightSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    engine: &EngineHandle,
+    inflight: &AtomicUsize,
+    shutdown: &AtomicBool,
+    max_inflight: usize,
+    addr: SocketAddr,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    // Even transport-level failures (garbled request line, oversized
+    // headers/body) answer with the protocol's typed error body before
+    // the connection closes — best-effort, since the peer may be gone.
+    let reject = |writer: &mut TcpStream, e: &anyhow::Error| {
+        let err = ServiceError::BadRequest(format!("malformed HTTP request: {e}"));
+        let body = wire::encode_error(&err).render();
+        let _ = write_http_response(writer, err.http_status(), &body, false);
+    };
+    loop {
+        let head = match read_http_head(&mut reader) {
+            Ok(Some(head)) => head,
+            Ok(None) => return Ok(()), // clean EOF between requests
+            Err(e) => {
+                reject(&mut writer, &e);
+                return Err(e);
+            }
+        };
+        // Admission before the body: a rejected request's (possibly
+        // large) body is never buffered — answer 503 and close. Engine
+        // service requests are POSTs to *known* non-admin endpoints;
+        // everything else (server-local endpoints, unknown paths — which
+        // are guaranteed to fail routing anyway) bypasses admission but
+        // gets a tiny body cap, so nothing smuggles a large upload past
+        // the in-flight accounting.
+        let is_service = head.method == "POST"
+            && head.path != EP_SHUTDOWN
+            && wire::known_endpoints().contains(&head.path.as_str());
+        // Reject without buffering: write the typed error, then *discard*
+        // the declared body to a sink (O(1) memory) so closing the socket
+        // doesn't RST the response out from under the client.
+        let refuse = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, e: ServiceError| {
+            let body = wire::encode_error(&e).render();
+            let _ = write_http_response(writer, e.http_status(), &body, false);
+            let _ = std::io::copy(
+                &mut reader.take(head.content_length as u64),
+                &mut std::io::sink(),
+            );
+        };
+        let slot = if is_service {
+            if inflight.fetch_add(1, Ordering::AcqRel) >= max_inflight {
+                inflight.fetch_sub(1, Ordering::AcqRel);
+                let err = ServiceError::Overloaded(format!(
+                    "admission cap reached ({max_inflight} requests in flight)"
+                ));
+                refuse(&mut writer, &mut reader, err);
+                return Ok(());
+            }
+            Some(InflightSlot(inflight))
+        } else {
+            if head.content_length > MAX_LOCAL_BODY_BYTES {
+                let err = ServiceError::BadRequest(format!(
+                    "endpoint {} takes no request body of {} bytes",
+                    head.path, head.content_length
+                ));
+                refuse(&mut writer, &mut reader, err);
+                return Ok(());
+            }
+            None
+        };
+        let body = match read_http_body(&mut reader, head.content_length) {
+            Ok(body) => body,
+            Err(e) => {
+                reject(&mut writer, &e);
+                return Err(e);
+            }
+        };
+        let (status, resp) = route(engine, shutdown, &head.method, &head.path, &body);
+        drop(slot); // request fully served engine-side; release admission
+        write_http_response(&mut writer, status, &resp.render(), head.keep_alive)?;
+        if shutdown.load(Ordering::Acquire) {
+            // Wake the accept loop so `run` can return. An unspecified
+            // listen address (0.0.0.0/[::]) is not connectable on every
+            // platform, so aim the wake at the same family's loopback.
+            let wake = if addr.ip().is_unspecified() {
+                let loopback: std::net::IpAddr = match addr.ip() {
+                    std::net::IpAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                    std::net::IpAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+                };
+                SocketAddr::new(loopback, addr.port())
+            } else {
+                addr
+            };
+            let _ = TcpStream::connect_timeout(&wake, Duration::from_secs(1));
+            return Ok(());
+        }
+        if !head.keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+/// Map one wire request onto the typed service API (admission already
+/// handled by the caller, which holds the in-flight slot).
+fn route(
+    engine: &EngineHandle,
+    shutdown: &AtomicBool,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> (u16, Value) {
+    match (method, path) {
+        ("GET", EP_HEALTH) => (200, ok_body(&[("status", Value::str("ok"))])),
+        ("POST", EP_SHUTDOWN) => {
+            shutdown.store(true, Ordering::Release);
+            (200, ok_body(&[("status", Value::str("shutting down"))]))
+        }
+        ("POST", _) => match handle_service(engine, path, body) {
+            Ok(resp) => (200, wire::encode_response(&resp)),
+            Err(e) => (e.http_status(), wire::encode_error(&e)),
+        },
+        (m, p) => {
+            let e = ServiceError::BadRequest(format!(
+                "no route {m} {p} (endpoints: {})",
+                wire::known_endpoints().join(", ")
+            ));
+            (e.http_status(), wire::encode_error(&e))
+        }
+    }
+}
+
+fn handle_service(engine: &EngineHandle, path: &str, body: &str) -> ServiceResult<ServiceResponse> {
+    let parsed = Value::parse(body)
+        .map_err(|e| ServiceError::BadRequest(format!("malformed JSON body: {e}")))?;
+    let req = wire::parse_request(path, &parsed)?;
+    let resp = engine.submit(req)?.wait()?;
+    wire::check_encodable(&resp)?;
+    Ok(resp)
+}
+
+fn ok_body(extra: &[(&str, Value)]) -> Value {
+    let mut pairs: Vec<(String, Value)> = vec![
+        ("version".into(), Value::num(crate::service::PROTOCOL_VERSION as f64)),
+        ("ok".into(), Value::Bool(true)),
+    ];
+    for (k, v) in extra {
+        pairs.push(((*k).to_string(), v.clone()));
+    }
+    Value::obj(pairs)
+}
+
+// ---------------------------------------------------------------------------
+// Minimal HTTP/1.1
+// ---------------------------------------------------------------------------
+
+/// Parsed request line + headers of one HTTP request.
+struct HttpHead {
+    method: String,
+    path: String,
+    content_length: usize,
+    keep_alive: bool,
+}
+
+/// Read one request's line + headers. Returns `None` on clean EOF before
+/// a request line; errors on torn/oversized heads. Hard-capped at
+/// [`MAX_HEADER_BYTES`] so a missing line terminator cannot grow a
+/// buffer without bound; the body is read separately (after admission)
+/// by [`read_http_body`].
+fn read_http_head<R: BufRead>(reader: &mut R) -> Result<Option<HttpHead>> {
+    // Bounded view for the request line + headers: once the cap is
+    // consumed, read_line reports EOF and the request is rejected below.
+    let mut head = (&mut *reader).take(MAX_HEADER_BYTES);
+    let mut line = String::new();
+    // Between requests, any read failure (EOF, idle-timeout, reset) just
+    // means the connection is over — close silently rather than
+    // answering a 400 the peer never solicited.
+    match head.read_line(&mut line) {
+        Ok(0) | Err(_) => return Ok(None),
+        Ok(_) => {}
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    anyhow::ensure!(!method.is_empty() && path.starts_with('/'), "malformed request line {line:?}");
+
+    let mut content_length = 0usize;
+    let mut keep_alive = true; // HTTP/1.1 default
+    loop {
+        let mut header = String::new();
+        anyhow::ensure!(head.read_line(&mut header)? > 0, "EOF or header cap inside headers");
+        let header = header.trim_end();
+        if header.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = header.split_once(':') {
+            let value = value.trim();
+            match name.to_ascii_lowercase().as_str() {
+                "content-length" => {
+                    content_length = value.parse().context("content-length")?;
+                    anyhow::ensure!(content_length <= MAX_BODY_BYTES, "body too large");
+                }
+                "connection" => keep_alive = !value.eq_ignore_ascii_case("close"),
+                _ => {}
+            }
+        }
+    }
+    Ok(Some(HttpHead { method, path, content_length, keep_alive }))
+}
+
+/// Stream a request body of the declared length: capacity grows with
+/// bytes actually received (capped hint), so a hostile `Content-Length`
+/// never causes an upfront allocation.
+fn read_http_body<R: BufRead>(reader: &mut R, content_length: usize) -> Result<String> {
+    let mut body = Vec::with_capacity(content_length.min(1 << 20));
+    let got = (&mut *reader)
+        .take(content_length as u64)
+        .read_to_end(&mut body)
+        .context("read body")?;
+    anyhow::ensure!(got == content_length, "truncated body ({got} of {content_length} bytes)");
+    String::from_utf8(body).context("body utf-8")
+}
+
+fn write_http_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Loopback client
+// ---------------------------------------------------------------------------
+
+/// Minimal HTTP/1.1 client for the wire protocol: one connection per
+/// call, typed requests in, typed responses (or typed errors) out. Used
+/// by `mita client`, the tests, and the CI loopback smoke step.
+pub struct NetClient {
+    addr: String,
+}
+
+impl NetClient {
+    pub fn new(addr: impl Into<String>) -> Self {
+        NetClient { addr: addr.into() }
+    }
+
+    /// Send one typed request and parse the typed result. Server-side
+    /// failures come back as the original [`ServiceError`] (same code).
+    pub fn call(&self, req: &ServiceRequest) -> ServiceResult<ServiceResponse> {
+        wire::check_request_encodable(req)?;
+        let (path, body) = wire::encode_request(req);
+        let (_status, text) = self.http("POST", path, &body.render())?;
+        let parsed = Value::parse(&text)
+            .map_err(|e| ServiceError::Internal(format!("malformed response JSON: {e}")))?;
+        wire::parse_response(&parsed)
+    }
+
+    /// Liveness probe.
+    pub fn healthz(&self) -> ServiceResult<()> {
+        self.expect_ok(self.http("GET", EP_HEALTH, "")?)
+    }
+
+    /// Ask the server to shut down cleanly.
+    pub fn shutdown(&self) -> ServiceResult<()> {
+        self.expect_ok(self.http("POST", EP_SHUTDOWN, "")?)
+    }
+
+    /// Server-local endpoints answer plain ok bodies; any non-200 must
+    /// surface its typed error code, never silently read as success.
+    fn expect_ok(&self, (status, text): (u16, String)) -> ServiceResult<()> {
+        if status == 200 {
+            return Ok(());
+        }
+        if let Ok(parsed) = Value::parse(&text) {
+            // Error bodies carry the stable code; bubble it up typed.
+            wire::parse_response(&parsed)?;
+        }
+        Err(ServiceError::Unavailable(format!("{}: HTTP {status}: {text}", self.addr)))
+    }
+
+    fn http(&self, method: &str, path: &str, body: &str) -> ServiceResult<(u16, String)> {
+        let io = |e: std::io::Error| {
+            ServiceError::Unavailable(format!("{method} {}{path}: {e}", self.addr))
+        };
+        let mut stream = TcpStream::connect(&self.addr).map_err(io)?;
+        stream.set_read_timeout(Some(Duration::from_secs(120))).map_err(io)?;
+        write!(
+            stream,
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            self.addr,
+            body.len(),
+        )
+        .map_err(io)?;
+        stream.flush().map_err(io)?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line).map_err(io)?;
+        let mut content_length = None;
+        loop {
+            let mut header = String::new();
+            if reader.read_line(&mut header).map_err(io)? == 0 {
+                break;
+            }
+            let header = header.trim_end();
+            if header.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = header.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse::<usize>().ok();
+                }
+            }
+        }
+        let mut body = Vec::new();
+        match content_length {
+            Some(len) => {
+                body.resize(len, 0);
+                reader.read_exact(&mut body).map_err(io)?;
+            }
+            None => {
+                reader.read_to_end(&mut body).map_err(io)?;
+            }
+        }
+        let text = String::from_utf8(body)
+            .map_err(|e| ServiceError::Internal(format!("response utf-8: {e}")))?;
+        // Non-JSON error pages (shouldn't happen from our server) still
+        // need a typed failure.
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        if text.is_empty() && status != 200 {
+            return Err(ServiceError::Internal(format!("HTTP {status} with empty body")));
+        }
+        Ok((status, text))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn http_request_parse_roundtrip() {
+        let raw = "POST /v1/stats HTTP/1.1\r\nHost: x\r\nContent-Length: 14\r\n\r\n{\"version\": 1}";
+        let mut r = BufReader::new(raw.as_bytes());
+        let head = read_http_head(&mut r).unwrap().unwrap();
+        assert_eq!((head.method.as_str(), head.path.as_str()), ("POST", "/v1/stats"));
+        assert!(head.keep_alive);
+        let body = read_http_body(&mut r, head.content_length).unwrap();
+        assert_eq!(body, "{\"version\": 1}");
+
+        let raw = "GET /v1/healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut r = BufReader::new(raw.as_bytes());
+        let head = read_http_head(&mut r).unwrap().unwrap();
+        assert_eq!(head.method, "GET");
+        assert_eq!(head.content_length, 0);
+        assert!(!head.keep_alive);
+        assert!(read_http_body(&mut r, 0).unwrap().is_empty());
+
+        // Clean EOF → None; torn bodies and garbled heads → error.
+        let mut r = BufReader::new(&b""[..]);
+        assert!(read_http_head(&mut r).unwrap().is_none());
+        let raw = &b"POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort"[..];
+        let mut r = BufReader::new(raw);
+        let head = read_http_head(&mut r).unwrap().unwrap();
+        assert!(read_http_body(&mut r, head.content_length).is_err());
+        let mut r = BufReader::new(&b"garbage\r\n\r\n"[..]);
+        assert!(read_http_head(&mut r).is_err());
+    }
+
+    #[test]
+    fn http_response_format() {
+        let mut buf = Vec::new();
+        write_http_response(&mut buf, 503, "{\"x\":1}", false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Content-Length: 7\r\n"));
+        assert!(text.contains("Connection: close"));
+        assert!(text.ends_with("{\"x\":1}"));
+    }
+}

@@ -1,27 +1,31 @@
 //! Serving loop: open-loop load generator → bounded admission queue →
-//! dynamic batcher → engine thread → per-request latency accounting.
+//! dynamic batcher → **pipelined** engine submission → per-request
+//! latency accounting.
 //!
 //! This is the L3 system that measures the paper's Fig. 5 inference
-//! throughput. The loop itself is backend-agnostic — it only sees an
-//! engine op plus a pool of single-request tensors — and has two fronts:
+//! throughput. Since the typed-service redesign there is **one** front:
+//! every workload is a generator of per-request tensors plus a
+//! [`Workload`] describing how a flushed batch becomes a
+//! [`ServiceRequest`] — PJRT bundles ([`Workload::Artifact`]), native
+//! attention ([`Workload::Attention`]), and whole-model classification
+//! ([`Workload::Model`]) all ride the same loop. The convenience
+//! builders [`serve`], [`serve_native`], and [`serve_model`] just
+//! assemble the request pool + workload.
 //!
-//! - [`serve`]: bundle-driven PJRT path. Requests are single examples; the
-//!   compiled `predict` artifact has a fixed batch size B, so the batcher
-//!   packs/pads to B.
-//! - [`serve_native`]: artifact-free native path. Requests are fused
-//!   `[1, 3, n, dim]` QKV bundles executed by the engine's
-//!   [`NativeBackend`](crate::runtime::NativeBackend) (`attn.mita` /
-//!   `attn.dense`), so the whole pipeline runs on a plain machine.
-//! - [`serve_model`]: whole-model native path. Requests are `[1, n]` i32
-//!   token sequences drawn from an LRA task and executed by the backend's
-//!   `model.forward` op against a bound [`MitaModel`] — end-to-end
-//!   classification serving with no artifacts.
-//!
-//! [`MitaModel`]: crate::model::MitaModel
+//! Batches are dispatched through [`EngineHandle::submit`] tickets, so
+//! up to `max_inflight` batches execute/queue engine-side while the
+//! batcher keeps packing the next one — the loop never blocks a thread
+//! per request, and padding is expressed as the typed `valid_rows` field
+//! (never computed by the backend). Per-request latency is split into
+//! two histograms: **queue wait** (issue → dispatch) and **execute**
+//! (dispatch → completion, including engine-queue residency while
+//! pipelined batches drain).
 //!
 //! Std threads + channels (no async runtime in the vendored crate set);
-//! the generator runs on its own thread, the batching loop on the caller's.
+//! the generator runs on its own thread, the batching loop on the
+//! caller's.
 
+use std::collections::VecDeque;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -31,13 +35,16 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Flush};
-use crate::coordinator::engine::EngineHandle;
+use crate::coordinator::engine::{EngineHandle, Ticket};
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::data::rng::Rng;
 use crate::data::{lra, BatchSource, Split};
 use crate::kernels::MitaStats;
-use crate::model::OP_MODEL_FORWARD;
 use crate::runtime::{BundleSpec, Tensor};
+use crate::service::{BindingId, KernelId, QkvBatch, ServiceRequest};
+
+/// Default engine-submission pipeline depth of the serve configs.
+pub const DEFAULT_MAX_INFLIGHT: usize = 3;
 
 /// Serving workload description (PJRT bundle path).
 #[derive(Debug, Clone)]
@@ -54,6 +61,8 @@ pub struct ServeConfig {
     pub rate: f64,
     /// Admission queue capacity (backpressure bound; overflow = rejected).
     pub queue_cap: usize,
+    /// Batches allowed in flight engine-side before dispatch blocks.
+    pub max_inflight: usize,
     pub policy: BatchPolicy,
 }
 
@@ -66,16 +75,17 @@ pub struct NativeServeConfig {
     /// in the engine backend's `NativeAttnConfig`, the single source of
     /// truth for how the op executes).
     pub dim: usize,
-    /// Native op to execute: `attn.mita` or `attn.dense`.
+    /// Native kernel to execute: `attn.mita` or `attn.dense`.
     pub op: String,
     pub requests: usize,
     pub rate: f64,
     pub queue_cap: usize,
+    pub max_inflight: usize,
     pub policy: BatchPolicy,
 }
 
 /// Serving workload description (whole-model native path; requests are
-/// LRA task token sequences, the op is `model.forward`).
+/// LRA task token sequences served as typed model-forward requests).
 #[derive(Debug, Clone)]
 pub struct ModelServeConfig {
     /// LRA task generating the request token sequences
@@ -91,7 +101,50 @@ pub struct ModelServeConfig {
     pub requests: usize,
     pub rate: f64,
     pub queue_cap: usize,
+    pub max_inflight: usize,
     pub policy: BatchPolicy,
+}
+
+/// How a flushed batch of per-request tensors becomes one typed
+/// [`ServiceRequest`]. This enum is the whole difference between the
+/// serving fronts — everything else is the shared loop.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Fused `[B, 3, n, dim]` batches through an attention kernel; short
+    /// batches carry `valid_rows` so padding is never computed.
+    Attention { op: KernelId },
+    /// `[B, n]` token batches through a bound model; short batches carry
+    /// `valid_rows`.
+    Model { binding: BindingId },
+    /// A compiled artifact on the packed batch (PJRT). Compiled bundles
+    /// take exactly one input and always compute the full padded batch —
+    /// there is no `valid_rows` on this path.
+    Artifact { artifact: String, binding: BindingId },
+}
+
+impl Workload {
+    /// Build the batch request: `examples` are batch-1 tensors from the
+    /// request pool, padded up to `b` rows.
+    fn build(&self, examples: &[Tensor], b: usize) -> Result<ServiceRequest> {
+        let packed = pack_batch(examples, b)?;
+        Ok(match self {
+            Workload::Attention { op } => ServiceRequest::Attention {
+                op: op.clone(),
+                qkv: QkvBatch::fused(packed)?,
+                valid_rows: Some(examples.len()),
+            },
+            Workload::Model { binding } => ServiceRequest::ModelForward {
+                binding: binding.clone(),
+                tokens: packed,
+                valid_rows: Some(examples.len()),
+            },
+            Workload::Artifact { artifact, binding } => ServiceRequest::Artifact {
+                artifact: artifact.clone(),
+                binding: Some(binding.clone()),
+                inputs: vec![packed],
+            },
+        })
+    }
 }
 
 /// Aggregate serving report.
@@ -102,10 +155,21 @@ pub struct ServeReport {
     pub rejected: usize,
     pub elapsed_secs: f64,
     pub throughput_rps: f64,
+    /// End-to-end latency (issue → completion).
     pub mean_ms: f64,
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Queue-wait component (issue → batch dispatch): admission queue +
+    /// batcher residency.
+    pub queue_mean_ms: f64,
+    pub queue_p50_ms: f64,
+    pub queue_p95_ms: f64,
+    /// Execute component (dispatch → completion): engine queue + backend
+    /// execution of the request's batch.
+    pub exec_mean_ms: f64,
+    pub exec_p50_ms: f64,
+    pub exec_p95_ms: f64,
     pub batches: u64,
     pub pad_fraction: f64,
     /// MiTA routing statistics accumulated over this run (native backend
@@ -117,7 +181,7 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn row(&self) -> String {
         let mut row = format!(
-            "{:24} reqs={:5} rej={:4} thru={:8.1}/s mean={:7.2}ms p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms batches={:5} pad={:4.1}%",
+            "{:24} reqs={:5} rej={:4} thru={:8.1}/s mean={:7.2}ms p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms qwait={:6.2}/{:6.2}ms exec={:6.2}/{:6.2}ms batches={:5} pad={:4.1}%",
             self.bundle,
             self.completed,
             self.rejected,
@@ -126,6 +190,10 @@ impl ServeReport {
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
+            self.queue_p50_ms,
+            self.queue_p95_ms,
+            self.exec_p50_ms,
+            self.exec_p95_ms,
             self.batches,
             self.pad_fraction * 100.0
         );
@@ -149,6 +217,13 @@ struct Request {
     /// Example index into the pre-generated input pool.
     example: u64,
     issued: Instant,
+}
+
+/// One dispatched batch awaiting engine completion.
+struct InFlightBatch {
+    ticket: Ticket,
+    dispatched: Instant,
+    members: Vec<Request>,
 }
 
 /// Extract example `j` of a batched tensor as a batch-1 tensor.
@@ -196,28 +271,63 @@ pub(crate) fn pack_batch(examples: &[Tensor], b: usize) -> Result<Tensor> {
 }
 
 /// Backend-agnostic parameters of one serving run.
-struct LoopSpec<'a> {
+pub struct WorkloadSpec<'a> {
     /// Report label.
-    label: &'a str,
-    /// Engine op (artifact name or native op).
-    op: &'a str,
-    /// Parameter-binding key, if the op needs bound weights.
-    binding: Option<&'a str>,
-    /// Append a valid-rows marker tensor to each batch so the backend
-    /// short-circuits padding rows (native backend only; compiled PJRT
-    /// artifacts take exactly one input and always compute the full
-    /// padded batch).
-    mark_valid: bool,
-    requests: usize,
-    rate: f64,
-    queue_cap: usize,
-    policy: BatchPolicy,
+    pub label: &'a str,
+    /// How a flushed batch becomes a typed request.
+    pub workload: Workload,
+    pub requests: usize,
+    pub rate: f64,
+    pub queue_cap: usize,
+    /// Batches allowed in flight engine-side (≥ 1) before dispatch blocks
+    /// on the oldest one.
+    pub max_inflight: usize,
+    pub policy: BatchPolicy,
 }
 
-/// The serving pipeline shared by both fronts: generator thread → bounded
-/// queue → batcher → engine → latency accounting.
-fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Result<ServeReport> {
+/// Latency accounting for one completed batch.
+struct Hists {
+    total: LatencyHistogram,
+    queue: LatencyHistogram,
+    exec: LatencyHistogram,
+}
+
+fn settle(
+    dispatched: Instant,
+    members: Vec<Request>,
+    result: crate::service::ServiceResult<crate::service::ServiceResponse>,
+    label: &str,
+    hists: &mut Hists,
+    completed: &mut usize,
+) -> Result<()> {
+    let resp = result.with_context(|| format!("serving {label}"))?;
+    let outs = resp.into_tensors();
+    anyhow::ensure!(!outs.is_empty(), "{label}: batch returned no outputs");
+    // Producing per-request responses is part of the served work: extract
+    // them before the completion timestamp (this also validates that the
+    // batch output is a well-formed f32 tensor, and keeps latency numbers
+    // comparable with the pre-pipelining serve loop, which did the same).
+    let _responses = outs[0].argmax_last().with_context(|| format!("{label}: batch output"))?;
+    let finish = Instant::now();
+    let exec = finish.duration_since(dispatched);
+    for r in &members {
+        hists.queue.record(dispatched.duration_since(r.issued));
+        hists.exec.record(exec);
+        hists.total.record(finish.duration_since(r.issued));
+    }
+    *completed += members.len();
+    Ok(())
+}
+
+/// The serving pipeline shared by every front: generator thread → bounded
+/// queue → batcher → pipelined engine tickets → latency accounting.
+pub fn serve_workload(
+    engine: &EngineHandle,
+    spec: &WorkloadSpec<'_>,
+    pool: &[Tensor],
+) -> Result<ServeReport> {
     anyhow::ensure!(!pool.is_empty(), "request pool is empty");
+    anyhow::ensure!(spec.max_inflight >= 1, "max_inflight must be >= 1");
     let b = spec.policy.max_batch;
 
     // Drain any routing stats a previous run left behind, so the closing
@@ -259,14 +369,39 @@ fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Re
         // Dropping tx closes the queue.
     });
 
-    // ---- batching + dispatch loop (caller thread) -------------------------
+    // ---- batching + pipelined dispatch loop (caller thread) ---------------
     let mut batcher: Batcher<Request> = Batcher::new(spec.policy);
-    let mut hist = LatencyHistogram::new();
+    let mut hists = Hists {
+        total: LatencyHistogram::new(),
+        queue: LatencyHistogram::new(),
+        exec: LatencyHistogram::new(),
+    };
+    let mut inflight: VecDeque<InFlightBatch> = VecDeque::new();
     let mut completed = 0usize;
     let t0 = Instant::now();
     let mut open = true;
 
-    while open || !batcher.is_empty() {
+    while open || !batcher.is_empty() || !inflight.is_empty() {
+        // Collect finished batches without blocking (the engine completes
+        // them in submission order, but tickets make that an
+        // implementation detail — each is redeemed independently).
+        while let Some(front) = inflight.front_mut() {
+            match front.ticket.try_wait() {
+                Some(result) => {
+                    let InFlightBatch { dispatched, members, .. } =
+                        inflight.pop_front().expect("front exists");
+                    settle(dispatched, members, result, spec.label, &mut hists, &mut completed)?;
+                }
+                None => break,
+            }
+        }
+        // Pipeline full: block on the oldest batch before dispatching more.
+        if inflight.len() >= spec.max_inflight {
+            let InFlightBatch { ticket, dispatched, members } =
+                inflight.pop_front().expect("non-empty");
+            settle(dispatched, members, ticket.wait(), spec.label, &mut hists, &mut completed)?;
+            continue;
+        }
         match batcher.poll(Instant::now()) {
             Flush::Take(n) => {
                 let taken = batcher.take(n);
@@ -275,27 +410,43 @@ fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Re
                     .iter()
                     .map(|p| pool[p.payload.example as usize % pool.len()].clone())
                     .collect();
-                let mut inputs = vec![pack_batch(&examples, b)?];
-                if spec.mark_valid {
-                    // Padding rows are marked so the backend never
-                    // computes them (they also never reach a response:
-                    // only `taken` requests are accounted below).
-                    inputs.push(Tensor::i32(&[1], vec![examples.len() as i32])?);
-                }
-                let outs = match spec.binding {
-                    Some(key) => engine.run_bound(spec.op, key, inputs)?,
-                    None => engine.run(spec.op, inputs)?,
-                };
-                anyhow::ensure!(!outs.is_empty(), "op {} returned no outputs", spec.op);
-                let finish = Instant::now();
-                let _responses = outs[0].argmax_last()?; // per-request responses
-                for p in taken {
-                    hist.record(finish.duration_since(p.payload.issued));
-                    completed += 1;
-                }
+                let req = spec.workload.build(&examples, b)?;
+                let dispatched = Instant::now();
+                let ticket = engine
+                    .submit(req)
+                    .with_context(|| format!("submitting {} batch", spec.label))?;
+                inflight.push_back(InFlightBatch {
+                    ticket,
+                    dispatched,
+                    members: taken.into_iter().map(|p| p.payload).collect(),
+                });
             }
             Flush::Wait(hint) => {
-                let timeout = hint.unwrap_or(Duration::from_millis(20));
+                if !open && batcher.is_empty() {
+                    // No more arrivals and nothing to batch: drain the
+                    // pipeline.
+                    if let Some(InFlightBatch { ticket, dispatched, members }) =
+                        inflight.pop_front()
+                    {
+                        settle(
+                            dispatched,
+                            members,
+                            ticket.wait(),
+                            spec.label,
+                            &mut hists,
+                            &mut completed,
+                        )?;
+                    }
+                    continue;
+                }
+                // With batches in flight, poll completions promptly even
+                // if no new request arrives.
+                let cap = if inflight.is_empty() {
+                    Duration::from_millis(20)
+                } else {
+                    Duration::from_millis(2)
+                };
+                let timeout = hint.unwrap_or(cap).min(cap);
                 match rx.recv_timeout(timeout) {
                     Ok(req) => batcher.push(req, Instant::now()),
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -318,10 +469,16 @@ fn serve_loop(engine: &EngineHandle, spec: &LoopSpec<'_>, pool: &[Tensor]) -> Re
         rejected: rejected.load(Ordering::Relaxed),
         elapsed_secs: elapsed,
         throughput_rps: completed as f64 / elapsed,
-        mean_ms: hist.mean() * 1e3,
-        p50_ms: hist.percentile(50.0) * 1e3,
-        p95_ms: hist.percentile(95.0) * 1e3,
-        p99_ms: hist.percentile(99.0) * 1e3,
+        mean_ms: hists.total.mean() * 1e3,
+        p50_ms: hists.total.percentile(50.0) * 1e3,
+        p95_ms: hists.total.percentile(95.0) * 1e3,
+        p99_ms: hists.total.percentile(99.0) * 1e3,
+        queue_mean_ms: hists.queue.mean() * 1e3,
+        queue_p50_ms: hists.queue.percentile(50.0) * 1e3,
+        queue_p95_ms: hists.queue.percentile(95.0) * 1e3,
+        exec_mean_ms: hists.exec.mean() * 1e3,
+        exec_p50_ms: hists.exec.percentile(50.0) * 1e3,
+        exec_p95_ms: hists.exec.percentile(95.0) * 1e3,
         batches: batcher.batches_emitted,
         pad_fraction: batcher.pad_fraction(),
         mita,
@@ -358,22 +515,24 @@ pub fn serve(
         }
     }
 
-    let spec = LoopSpec {
+    let spec = WorkloadSpec {
         label: bundle_name,
-        op: &predict,
-        binding: Some(&cfg.binding),
-        mark_valid: false, // compiled artifacts take exactly one input
+        workload: Workload::Artifact {
+            artifact: predict,
+            binding: BindingId::from(cfg.binding.as_str()),
+        },
         requests: cfg.requests,
         rate: cfg.rate,
         queue_cap: cfg.queue_cap,
+        max_inflight: cfg.max_inflight,
         policy: cfg.policy,
     };
-    serve_loop(engine, &spec, &pool)
+    serve_workload(engine, &spec, &pool)
 }
 
 /// Run the serving benchmark against the engine's native attention backend
 /// (spawn the engine with [`BackendSpec::Native`]; no artifacts needed).
-/// Every dispatched batch carries a valid-rows marker, so the padding the
+/// Every dispatched batch carries a typed `valid_rows`, so the padding the
 /// batch policy accounts for (`pad=` in the report row) is never actually
 /// computed by the backend, and the report's `mita` stats (`ovf=`/`imb=`
 /// in the row) cover exactly this run's real requests.
@@ -382,6 +541,7 @@ pub fn serve(
 pub fn serve_native(engine: &EngineHandle, cfg: &NativeServeConfig) -> Result<ServeReport> {
     let (n, dim) = (cfg.n, cfg.dim);
     anyhow::ensure!(n > 0 && dim > 0, "native serving needs n > 0 and dim > 0");
+    let op = KernelId::parse(&cfg.op)?;
 
     // Pre-generate a pool of fused QKV request bundles.
     let pool_size = 8usize;
@@ -393,23 +553,22 @@ pub fn serve_native(engine: &EngineHandle, cfg: &NativeServeConfig) -> Result<Se
     }
 
     let label = format!("native/{} n={n}", cfg.op);
-    let spec = LoopSpec {
+    let spec = WorkloadSpec {
         label: &label,
-        op: &cfg.op,
-        binding: None,
-        mark_valid: true, // native backend skips padded batch rows
+        workload: Workload::Attention { op },
         requests: cfg.requests,
         rate: cfg.rate,
         queue_cap: cfg.queue_cap,
+        max_inflight: cfg.max_inflight,
         policy: cfg.policy,
     };
-    serve_loop(engine, &spec, &pool)
+    serve_workload(engine, &spec, &pool)
 }
 
 /// Run the serving benchmark against a whole model on the engine's native
 /// backend: requests are single LRA-task token sequences, each dispatched
-/// batch runs `model.forward` against the `cfg.binding` model with a
-/// valid-rows marker (padding rows are never computed), and the report's
+/// batch is a typed model-forward request against the `cfg.binding` model
+/// with `valid_rows` (padding rows are never computed), and the report's
 /// `mita` stats cover exactly this run's routed queries across every
 /// MiTA block of the model.
 pub fn serve_model(engine: &EngineHandle, cfg: &ModelServeConfig) -> Result<ServeReport> {
@@ -426,17 +585,16 @@ pub fn serve_model(engine: &EngineHandle, cfg: &ModelServeConfig) -> Result<Serv
     }
 
     let label = format!("model/{} n={n}", cfg.task);
-    let spec = LoopSpec {
+    let spec = WorkloadSpec {
         label: &label,
-        op: OP_MODEL_FORWARD,
-        binding: Some(&cfg.binding),
-        mark_valid: true, // the model computes only real batch rows
+        workload: Workload::Model { binding: BindingId::from(cfg.binding.as_str()) },
         requests: cfg.requests,
         rate: cfg.rate,
         queue_cap: cfg.queue_cap,
+        max_inflight: cfg.max_inflight,
         policy: cfg.policy,
     };
-    serve_loop(engine, &spec, &pool)
+    serve_workload(engine, &spec, &pool)
 }
 
 #[cfg(test)]
@@ -466,5 +624,41 @@ mod tests {
         assert_eq!(s.as_i32().unwrap(), &[4, 5, 6]);
         let packed = pack_batch(&[s], 2).unwrap();
         assert_eq!(packed.as_i32().unwrap(), &[4, 5, 6, 4, 5, 6]);
+    }
+
+    #[test]
+    fn workload_builds_typed_requests_with_valid_rows() {
+        let e = Tensor::f32(&[1, 3, 4, 2], vec![0.5; 24]).unwrap();
+        let w = Workload::Attention { op: KernelId::Mita };
+        match w.build(&[e.clone(), e.clone()], 4).unwrap() {
+            ServiceRequest::Attention { op, qkv, valid_rows } => {
+                assert_eq!(op, KernelId::Mita);
+                assert_eq!(qkv.batch(), 4);
+                assert_eq!(valid_rows, Some(2), "short batches mark real rows");
+            }
+            other => panic!("wrong request class {:?}", other.kind()),
+        }
+
+        let t = Tensor::i32(&[1, 4], vec![1, 2, 3, 4]).unwrap();
+        let w = Workload::Model { binding: BindingId::from("m") };
+        match w.build(&[t], 3).unwrap() {
+            ServiceRequest::ModelForward { binding, tokens, valid_rows } => {
+                assert_eq!(binding.as_str(), "m");
+                assert_eq!(tokens.shape(), &[3, 4]);
+                assert_eq!(valid_rows, Some(1));
+            }
+            other => panic!("wrong request class {:?}", other.kind()),
+        }
+
+        let x = Tensor::f32(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let w = Workload::Artifact { artifact: "predict".into(), binding: BindingId::from("w") };
+        match w.build(&[x], 2).unwrap() {
+            ServiceRequest::Artifact { artifact, binding, inputs } => {
+                assert_eq!(artifact, "predict");
+                assert_eq!(binding.unwrap().as_str(), "w");
+                assert_eq!(inputs[0].shape(), &[2, 2], "artifacts compute the padded batch");
+            }
+            other => panic!("wrong request class {:?}", other.kind()),
+        }
     }
 }

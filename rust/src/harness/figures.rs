@@ -41,6 +41,7 @@ pub fn figure5(artifacts_dir: &std::path::Path, rt: &Runtime, requests: usize) -
                 requests,
                 rate: 0.0, // closed loop: measures peak throughput
                 queue_cap: requests,
+                max_inflight: crate::coordinator::DEFAULT_MAX_INFLIGHT,
                 policy: BatchPolicy {
                     max_batch: spec.train.batch_size,
                     max_wait: std::time::Duration::from_millis(2),

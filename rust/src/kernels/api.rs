@@ -240,6 +240,14 @@ impl KernelRegistry {
         self.kernels.iter().find(|k| k.name() == name).map(|k| k.as_ref())
     }
 
+    /// Like [`KernelRegistry::get`], but a miss reports the available
+    /// names — the message every dispatch site used to hand-roll.
+    pub fn resolve(&self, name: &str) -> Result<&dyn AttentionKernel, String> {
+        self.get(name).ok_or_else(|| {
+            format!("no kernel {name:?} registered (available: {})", self.names().join(", "))
+        })
+    }
+
     /// Registered names, in registration order.
     pub fn names(&self) -> Vec<&'static str> {
         self.kernels.iter().map(|k| k.name()).collect()
@@ -509,6 +517,9 @@ mod tests {
         assert_eq!(r.names(), vec![OP_ATTN_MITA, OP_ATTN_DENSE]);
         assert!(r.get(OP_ATTN_MITA).is_some());
         assert!(r.get("predict").is_none());
+        assert!(r.resolve(OP_ATTN_MITA).is_ok());
+        let miss = r.resolve("predict").unwrap_err();
+        assert!(miss.contains(OP_ATTN_MITA) && miss.contains(OP_ATTN_DENSE), "{miss}");
 
         // Re-registering a name replaces in place (no duplicate entries).
         let custom = MitaKernelConfig { m: 2, k: 2, cap_factor: 1, block_q: 1 };

@@ -16,7 +16,12 @@
 //!   benchmarking run on machines with no PJRT closure at all.
 //! - **L3-model** (`model`): a native MiTA Transformer over that stack —
 //!   pre-LN blocks whose attention resolves per block through the kernel
-//!   registry — served end-to-end over the LRA tasks via `model.forward`.
+//!   registry — served end-to-end over the LRA tasks.
+//! - **L3-service** (`service` + `coordinator::netserver`): the typed
+//!   request surface — `ServiceRequest`/`ServiceResponse` with a stable
+//!   error taxonomy, parsed once at the service boundary — and the
+//!   network front that speaks it over HTTP/1.1 + JSON
+//!   (`docs/PROTOCOL.md`).
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -29,4 +34,5 @@ pub mod mita;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod util;

@@ -8,7 +8,8 @@
 //!   flops [--prefix P]                analytical FLOPs/params per bundle
 //!   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
 //!   eval <bundle> <checkpoint> [--batches N]
-//!   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W]
+//!   serve [<bundle>] [--workload bundle|attn|model] [--listen ADDR] ...
+//!   client --addr ADDR <health|attention|model-forward|stats|shutdown> ...
 //!   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K]
 //!   serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
 //!   model-check [--seq-len N] [--dim D] [--heads H] [--depth L]
@@ -19,15 +20,15 @@
 //!   all [--steps N]                   every table + figure in sequence
 //! ```
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use mita::coordinator::batcher::BatchPolicy;
 use mita::coordinator::{
-    serve, serve_model, serve_native, Engine, ModelServeConfig, NativeServeConfig, ServeConfig,
-    Trainer,
+    serve, serve_model, serve_native, Engine, ModelServeConfig, NativeServeConfig, NetClient,
+    NetServer, NetServerConfig, ServeConfig, Trainer, DEFAULT_MAX_INFLIGHT,
 };
 use mita::data::lra::{self, SeqTask};
 use mita::data::rng::Rng;
@@ -41,7 +42,8 @@ use mita::kernels::{
 };
 use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_INIT};
 use mita::report::Table;
-use mita::runtime::{BackendSpec, NativeAttnConfig, Runtime};
+use mita::runtime::{BackendSpec, NativeAttnConfig, Runtime, Tensor};
+use mita::service::{KernelId, QkvBatch, ServiceRequest};
 use mita::util::cli;
 
 const VALUED_FLAGS: &[&str] = &[
@@ -73,6 +75,15 @@ const VALUED_FLAGS: &[&str] = &[
     "seq-len",
     "vocab",
     "depth",
+    // typed service front
+    "listen",
+    "addr-file",
+    "workload",
+    "addr",
+    "binding",
+    "max-inflight",
+    "valid",
+    "batch",
 ];
 
 fn main() -> Result<()> {
@@ -167,41 +178,16 @@ fn main() -> Result<()> {
                 ev.examples
             );
         }
-        "serve" => {
-            let bundle = args.positional(0, "bundle")?.to_string();
-            let rt = Runtime::load(&artifacts)?;
-            let spec = rt.manifest().bundle(&bundle)?.clone();
-            let predict = rt.manifest().bundle_artifact(&bundle, "predict")?.to_string();
-            let init = rt.manifest().bundle_artifact(&bundle, "init").map(str::to_string);
-            drop(rt); // the engine thread owns its own runtime
-            let engine = Engine::spawn(artifacts.clone(), vec![predict])?;
-            // Bind weights: --checkpoint if given, else the init artifact.
-            match args.flag("checkpoint") {
-                Some(path) => {
-                    let params =
-                        mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
-                    engine.handle().bind_tensors(&bundle, params)?;
-                }
-                None => {
-                    engine.handle().bind_init(&bundle, &init?, 0, spec.param_count())?;
-                }
-            }
-            let cfg = ServeConfig {
-                bundle: bundle.clone(),
-                binding: bundle.clone(),
-                requests: args.flag_parse("requests", 256usize)?,
-                rate: args.flag_parse("rate", 0.0f64)?,
-                queue_cap: args.flag_parse("queue-cap", 128usize)?,
-                policy: BatchPolicy {
-                    max_batch: spec.train.batch_size,
-                    max_wait: std::time::Duration::from_millis(
-                        args.flag_parse("max-wait-ms", 5u64)?,
-                    ),
-                },
-            };
-            let report = serve(&engine.handle(), &spec, &bundle, &cfg)?;
-            println!("{}", report.row());
-            engine.shutdown();
+        // One serving front over the typed service API: `serve <bundle>`
+        // drives a compiled PJRT bundle, `--workload attn|model` the
+        // native backend (the `serve-native` / `serve-model` aliases
+        // preselect those), and `--listen ADDR` starts the network
+        // server instead of the load generator.
+        "serve" | "serve-native" | "serve-model" => {
+            cmd_serve(&args, args.subcommand.as_str(), &artifacts, &opts)?;
+        }
+        "client" => {
+            cmd_client(&args, &opts)?;
         }
         "table2" => {
             tables::table2(&Runtime::load(&artifacts)?, &opts)?;
@@ -337,36 +323,6 @@ fn main() -> Result<()> {
                 bail!("native parity check failed (max|Δ| = {max_diff:.2e})");
             }
         }
-        "serve-native" => {
-            let n = args.flag_parse("n", 1024usize)?;
-            let dim = args.flag_parse("dim", 64usize)?;
-            let heads = args.flag_parse("heads", 4usize)?;
-            anyhow::ensure!(
-                heads >= 1 && dim % heads == 0,
-                "--dim {dim} must divide into --heads {heads}"
-            );
-            let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
-            attn.mita = native_kernel_config(&args, n)?;
-            let op = args.flag_or("op", "attn.mita");
-            let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
-            let cfg = NativeServeConfig {
-                n,
-                dim,
-                op,
-                requests: args.flag_parse("requests", 64usize)?,
-                rate: args.flag_parse("rate", 0.0f64)?,
-                queue_cap: args.flag_parse("queue-cap", 128usize)?,
-                policy: BatchPolicy {
-                    max_batch: args.flag_parse("max-batch", 8usize)?,
-                    max_wait: std::time::Duration::from_millis(
-                        args.flag_parse("max-wait-ms", 5u64)?,
-                    ),
-                },
-            };
-            let report = serve_native(&engine.handle(), &cfg)?;
-            println!("{}", report.row());
-            engine.shutdown();
-        }
         "model-check" => {
             let dim = args.flag_parse("dim", 32usize)?;
             let heads = args.flag_parse("heads", 2usize)?;
@@ -392,76 +348,6 @@ fn main() -> Result<()> {
                 bail!("model-check failed (parity or checkpoint round-trip above)");
             }
         }
-        "serve-model" => {
-            let task_name = args.flag_or("task", "listops");
-            let (def_n, def_vocab) = lra_task_defaults(&task_name)?;
-            let seq = args.flag_parse("seq-len", def_n)?;
-            let vocab = args.flag_parse("vocab", def_vocab)?;
-            let dim = args.flag_parse("dim", 64usize)?;
-            let heads = args.flag_parse("heads", 4usize)?;
-            let depth = args.flag_parse("depth", 2usize)?;
-            anyhow::ensure!(
-                heads >= 1 && dim % heads == 0,
-                "--dim {dim} must divide into --heads {heads}"
-            );
-            let kernel = args.flag_or("op", "attn.mita");
-            let task = lra::try_by_name(&task_name, seq, vocab, opts.seed as u64)?;
-            let mut mcfg = ModelConfig::for_task(task.as_ref(), dim, heads, depth, &kernel);
-            mcfg.mita = native_kernel_config(&args, task.seq_len())?;
-            let attn = NativeAttnConfig::for_shape(task.seq_len(), dim, heads).with_model(mcfg);
-            let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
-            // Bind the model: --checkpoint if given, else seeded init.
-            match args.flag("checkpoint") {
-                Some(path) => {
-                    let tensors =
-                        mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
-                    // Fail at bind time, not mid-pipeline: the checkpoint's
-                    // self-describing config (the cheap leading descriptor
-                    // tensor — no need to parse the parameters here) must
-                    // fit the task geometry.
-                    anyhow::ensure!(!tensors.is_empty(), "checkpoint {path:?} is empty");
-                    let ckpt = ModelConfig::from_tensor(&tensors[0])?;
-                    anyhow::ensure!(
-                        ckpt.seq_len == task.seq_len(),
-                        "checkpoint seq_len {} != task seq_len {} (pass a matching --seq-len)",
-                        ckpt.seq_len,
-                        task.seq_len()
-                    );
-                    anyhow::ensure!(
-                        ckpt.vocab >= task.vocab(),
-                        "checkpoint vocab {} cannot embed task vocab {}",
-                        ckpt.vocab,
-                        task.vocab()
-                    );
-                    anyhow::ensure!(
-                        ckpt.classes == task.classes(),
-                        "checkpoint classes {} != task classes {}",
-                        ckpt.classes,
-                        task.classes()
-                    );
-                    engine.handle().bind_tensors("model", tensors)?;
-                }
-                None => engine.handle().bind_init("model", OP_MODEL_INIT, opts.seed, 0)?,
-            }
-            let cfg = ModelServeConfig {
-                task: task_name,
-                seq_len: task.seq_len(),
-                vocab: task.vocab(),
-                binding: "model".into(),
-                requests: args.flag_parse("requests", 64usize)?,
-                rate: args.flag_parse("rate", 0.0f64)?,
-                queue_cap: args.flag_parse("queue-cap", 128usize)?,
-                policy: BatchPolicy {
-                    max_batch: args.flag_parse("max-batch", 8usize)?,
-                    max_wait: std::time::Duration::from_millis(
-                        args.flag_parse("max-wait-ms", 5u64)?,
-                    ),
-                },
-            };
-            let report = serve_model(&engine.handle(), &cfg)?;
-            println!("{}", report.row());
-            engine.shutdown();
-        }
         // Utility used by examples/tests to sanity-check one bundle quickly.
         "quickcheck" => {
             let rt = Runtime::load(&artifacts)?;
@@ -474,6 +360,333 @@ fn main() -> Result<()> {
             println!("quickcheck {bundle}: loss={:.3} acc={:.3}", ev.loss, ev.accuracy);
         }
         other => bail!("unknown command {other:?} (try `mita help`)"),
+    }
+    Ok(())
+}
+
+/// The single serving front. Dispatch: `--listen` starts the network
+/// server; otherwise the workload (bundle / attn / model — preselected by
+/// the `serve-native` / `serve-model` aliases, or `serve <bundle>` for
+/// the PJRT path) runs under the load-generator benchmark loop. All
+/// three produce typed `ServiceRequest` batches over the same engine.
+fn cmd_serve(args: &cli::Args, alias: &str, artifacts: &Path, opts: &Opts) -> Result<()> {
+    // The alias / --workload choice carries into --listen: a model
+    // workload must bind its (default listops) model before the network
+    // server starts, or every /v1/model/forward would be unbound_params.
+    let wants_model = alias == "serve-model" || args.flag("workload") == Some("model");
+    if let Some(addr) = args.flag("listen") {
+        return serve_listen(args, addr, opts, wants_model);
+    }
+    let workload = match alias {
+        "serve-native" => "attn".to_string(),
+        "serve-model" => "model".to_string(),
+        _ if args.positionals.first().is_some() => "bundle".to_string(),
+        _ => args.flag_or("workload", "attn"),
+    };
+    match workload.as_str() {
+        "bundle" => serve_bundle_front(args, artifacts),
+        "attn" => serve_attn_front(args),
+        "model" => serve_model_front(args, opts),
+        other => bail!("unknown --workload {other:?} (expected bundle, attn, or model)"),
+    }
+}
+
+/// Generator front over a compiled PJRT bundle's `predict` artifact.
+fn serve_bundle_front(args: &cli::Args, artifacts: &Path) -> Result<()> {
+    let bundle = args.positional(0, "bundle")?.to_string();
+    let rt = Runtime::load(artifacts)?;
+    let spec = rt.manifest().bundle(&bundle)?.clone();
+    let predict = rt.manifest().bundle_artifact(&bundle, "predict")?.to_string();
+    let init = rt.manifest().bundle_artifact(&bundle, "init").map(str::to_string);
+    drop(rt); // the engine thread owns its own runtime
+    let engine = Engine::spawn(artifacts.to_path_buf(), vec![predict])?;
+    // Bind weights: --checkpoint if given, else the init artifact.
+    match args.flag("checkpoint") {
+        Some(path) => {
+            let params = mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
+            engine.handle().bind_tensors(&bundle, params)?;
+        }
+        None => {
+            engine.handle().bind_init(&bundle, &init?, 0, spec.param_count())?;
+        }
+    }
+    let cfg = ServeConfig {
+        bundle: bundle.clone(),
+        binding: bundle.clone(),
+        requests: args.flag_parse("requests", 256usize)?,
+        rate: args.flag_parse("rate", 0.0f64)?,
+        queue_cap: args.flag_parse("queue-cap", 128usize)?,
+        max_inflight: args.flag_parse("max-inflight", DEFAULT_MAX_INFLIGHT)?,
+        policy: BatchPolicy {
+            max_batch: spec.train.batch_size,
+            max_wait: std::time::Duration::from_millis(args.flag_parse("max-wait-ms", 5u64)?),
+        },
+    };
+    let report = serve(&engine.handle(), &spec, &bundle, &cfg)?;
+    println!("{}", report.row());
+    engine.shutdown();
+    Ok(())
+}
+
+/// Spawn a native engine for the raw attention workload from the shared
+/// shape flags — the single construction path for both the generator
+/// front and `serve --listen`, so the two can never configure engines
+/// differently.
+fn spawn_attn_engine(args: &cli::Args) -> Result<(Engine, usize, usize)> {
+    let n = args.flag_parse("n", 1024usize)?;
+    let dim = args.flag_parse("dim", 64usize)?;
+    let heads = args.flag_parse("heads", 4usize)?;
+    anyhow::ensure!(
+        heads >= 1 && dim % heads == 0,
+        "--dim {dim} must divide into --heads {heads}"
+    );
+    let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
+    attn.mita = native_kernel_config(args, n)?;
+    Ok((Engine::spawn_backend(BackendSpec::Native(attn), vec![])?, n, dim))
+}
+
+/// Generator front over the native attention kernels.
+fn serve_attn_front(args: &cli::Args) -> Result<()> {
+    let (engine, n, dim) = spawn_attn_engine(args)?;
+    let op = args.flag_or("op", "attn.mita");
+    let cfg = NativeServeConfig {
+        n,
+        dim,
+        op,
+        requests: args.flag_parse("requests", 64usize)?,
+        rate: args.flag_parse("rate", 0.0f64)?,
+        queue_cap: args.flag_parse("queue-cap", 128usize)?,
+        max_inflight: args.flag_parse("max-inflight", DEFAULT_MAX_INFLIGHT)?,
+        policy: BatchPolicy {
+            max_batch: args.flag_parse("max-batch", 8usize)?,
+            max_wait: std::time::Duration::from_millis(args.flag_parse("max-wait-ms", 5u64)?),
+        },
+    };
+    let report = serve_native(&engine.handle(), &cfg)?;
+    println!("{}", report.row());
+    engine.shutdown();
+    Ok(())
+}
+
+/// Generator front over a whole native model serving LRA token traffic.
+fn serve_model_front(args: &cli::Args, opts: &Opts) -> Result<()> {
+    let task_name = args.flag_or("task", "listops");
+    let (engine, task_name, task) = spawn_model_engine(args, opts, &task_name, "model")?;
+    let cfg = ModelServeConfig {
+        task: task_name,
+        seq_len: task.seq_len(),
+        vocab: task.vocab(),
+        binding: "model".into(),
+        requests: args.flag_parse("requests", 64usize)?,
+        rate: args.flag_parse("rate", 0.0f64)?,
+        queue_cap: args.flag_parse("queue-cap", 128usize)?,
+        max_inflight: args.flag_parse("max-inflight", DEFAULT_MAX_INFLIGHT)?,
+        policy: BatchPolicy {
+            max_batch: args.flag_parse("max-batch", 8usize)?,
+            max_wait: std::time::Duration::from_millis(args.flag_parse("max-wait-ms", 5u64)?),
+        },
+    };
+    let report = serve_model(&engine.handle(), &cfg)?;
+    println!("{}", report.row());
+    engine.shutdown();
+    Ok(())
+}
+
+/// Spawn a native engine shaped for an LRA task and bind the model
+/// (checkpoint if `--checkpoint`, else seeded init) under `binding`.
+fn spawn_model_engine(
+    args: &cli::Args,
+    opts: &Opts,
+    task_name: &str,
+    binding: &str,
+) -> Result<(Engine, String, Box<dyn SeqTask>)> {
+    let (def_n, def_vocab) = lra_task_defaults(task_name)?;
+    let seq = args.flag_parse("seq-len", def_n)?;
+    let vocab = args.flag_parse("vocab", def_vocab)?;
+    let dim = args.flag_parse("dim", 64usize)?;
+    let heads = args.flag_parse("heads", 4usize)?;
+    let depth = args.flag_parse("depth", 2usize)?;
+    anyhow::ensure!(
+        heads >= 1 && dim % heads == 0,
+        "--dim {dim} must divide into --heads {heads}"
+    );
+    let kernel = args.flag_or("op", "attn.mita");
+    let task = lra::try_by_name(task_name, seq, vocab, opts.seed as u64)?;
+    // One kernel config for both the model's MiTA blocks and the raw
+    // attention registry, so the two can never drift apart.
+    let kcfg = native_kernel_config(args, task.seq_len())?;
+    let mut mcfg = ModelConfig::for_task(task.as_ref(), dim, heads, depth, &kernel);
+    mcfg.mita = kcfg;
+    let mut attn = NativeAttnConfig::for_shape(task.seq_len(), dim, heads).with_model(mcfg);
+    attn.mita = kcfg;
+    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
+    // Bind the model: --checkpoint if given, else seeded init.
+    match args.flag("checkpoint") {
+        Some(path) => {
+            let tensors = mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
+            // Fail at bind time, not mid-pipeline: the checkpoint's
+            // self-describing config (the cheap leading descriptor
+            // tensor — no need to parse the parameters here) must
+            // fit the task geometry.
+            anyhow::ensure!(!tensors.is_empty(), "checkpoint {path:?} is empty");
+            let ckpt = ModelConfig::from_tensor(&tensors[0])?;
+            anyhow::ensure!(
+                ckpt.seq_len == task.seq_len(),
+                "checkpoint seq_len {} != task seq_len {} (pass a matching --seq-len)",
+                ckpt.seq_len,
+                task.seq_len()
+            );
+            anyhow::ensure!(
+                ckpt.vocab >= task.vocab(),
+                "checkpoint vocab {} cannot embed task vocab {}",
+                ckpt.vocab,
+                task.vocab()
+            );
+            anyhow::ensure!(
+                ckpt.classes == task.classes(),
+                "checkpoint classes {} != task classes {}",
+                ckpt.classes,
+                task.classes()
+            );
+            engine.handle().bind_tensors(binding, tensors)?;
+        }
+        None => engine.handle().bind_init(binding, OP_MODEL_INIT, opts.seed, 0)?,
+    }
+    Ok((engine, task_name.to_string(), task))
+}
+
+/// `serve --listen ADDR`: the network front. Native backend; with
+/// `--task` / `--checkpoint` (or a model workload alias) a model is
+/// bound under `--binding` (default "model") so `/v1/model/forward` is
+/// servable alongside `/v1/attention`. `--addr-file F` writes the bound
+/// address (useful with port 0 in scripts/CI). Runs until a client posts
+/// `/v1/admin/shutdown`.
+fn serve_listen(args: &cli::Args, addr: &str, opts: &Opts, wants_model: bool) -> Result<()> {
+    let binding = args.flag_or("binding", "model");
+    let engine =
+        if wants_model || args.flag("task").is_some() || args.flag("checkpoint").is_some() {
+            let task_name = args.flag_or("task", "listops");
+            let (engine, _, _) = spawn_model_engine(args, opts, &task_name, &binding)?;
+            engine
+        } else {
+            spawn_attn_engine(args)?.0
+        };
+
+    let cfg = NetServerConfig {
+        addr: addr.to_string(),
+        max_inflight: args.flag_parse("max-inflight", 64usize)?,
+    };
+    let server = NetServer::bind(engine.handle(), &cfg)?;
+    let local = server.local_addr()?;
+    println!("serving on http://{local} (backend=native, protocol docs/PROTOCOL.md)");
+    if let Some(path) = args.flag("addr-file") {
+        std::fs::write(path, local.to_string())?;
+    }
+    server.run()?;
+    println!("shutdown complete");
+    engine.shutdown();
+    Ok(())
+}
+
+/// Loopback wire client: sends one typed request to a `serve --listen`
+/// server and checks the response shape (exits non-zero on mismatch) —
+/// the CI smoke step drives the full TCP round-trip with this.
+fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
+    let addr = args.flag("addr").map(str::to_string);
+    let addr = match (addr, args.flag("addr-file")) {
+        (Some(a), _) => a,
+        (None, Some(path)) => std::fs::read_to_string(path)?.trim().to_string(),
+        (None, None) => bail!("client needs --addr HOST:PORT (or --addr-file F)"),
+    };
+    let client = NetClient::new(addr.as_str());
+    match args.positional(0, "action")? {
+        "health" => {
+            client.healthz()?;
+            println!("{addr}: ok");
+        }
+        "shutdown" => {
+            client.shutdown()?;
+            println!("{addr}: shutting down");
+        }
+        "stats" => {
+            let stats =
+                client.call(&ServiceRequest::Stats { reset: args.has("reset") })?.into_stats()?;
+            let mita = stats
+                .mita
+                .map(|m| {
+                    format!(
+                        " mita: queries={} ovf={:.1}% imb={:.2}",
+                        m.queries,
+                        m.overflow_fraction() * 100.0,
+                        m.load_imbalance()
+                    )
+                })
+                .unwrap_or_default();
+            println!(
+                "executions={} execute_secs={:.3}{mita}",
+                stats.runtime.executions, stats.runtime.execute_secs
+            );
+        }
+        "attention" => {
+            let n = args.flag_parse("n", 256usize)?;
+            let dim = args.flag_parse("dim", 64usize)?;
+            let batch = args.flag_parse("batch", 2usize)?;
+            let valid = args.flag("valid").map(str::parse::<usize>).transpose()?;
+            let op = KernelId::parse(&args.flag_or("op", "attn.mita"))?;
+            let mut rng = Rng::new(opts.seed as u64);
+            let data: Vec<f32> =
+                (0..batch * 3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let qkv = QkvBatch::fused(Tensor::f32(&[batch, 3, n, dim], data)?)?;
+            let t0 = Instant::now();
+            let out = client
+                .call(&ServiceRequest::Attention { op: op.clone(), qkv, valid_rows: valid })?
+                .into_tensor()?;
+            anyhow::ensure!(
+                out.shape() == [batch, n, dim],
+                "attention response shape {:?} != [{batch}, {n}, {dim}]",
+                out.shape()
+            );
+            println!(
+                "attention {op}: out {:?} in {:.2}ms (round-trip)",
+                out.shape(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
+        "model-forward" => {
+            let task_name = args.flag_or("task", "listops");
+            let (def_n, def_vocab) = lra_task_defaults(&task_name)?;
+            let seq = args.flag_parse("seq-len", def_n)?;
+            let vocab = args.flag_parse("vocab", def_vocab)?;
+            let binding = args.flag_or("binding", "model");
+            let task = lra::try_by_name(&task_name, seq, vocab, opts.seed as u64)?;
+            let (tokens, _) = task.sample(Split::Val, 0);
+            let tokens = Tensor::i32(&[1, task.seq_len()], tokens)?;
+            let t0 = Instant::now();
+            let logits = client
+                .call(&ServiceRequest::ModelForward {
+                    binding: binding.as_str().into(),
+                    tokens,
+                    valid_rows: None,
+                })?
+                .into_tensor()?;
+            anyhow::ensure!(
+                logits.shape().len() == 2 && logits.shape()[0] == 1,
+                "model-forward response shape {:?} is not [1, classes]",
+                logits.shape()
+            );
+            anyhow::ensure!(
+                logits.as_f32()?.iter().all(|x| x.is_finite()),
+                "model-forward returned non-finite logits"
+            );
+            println!(
+                "model-forward {task_name}: logits {:?} in {:.2}ms (round-trip)",
+                logits.shape(),
+                t0.elapsed().as_secs_f64() * 1e3
+            );
+        }
+        other => {
+            bail!("unknown client action {other:?} (health|attention|model-forward|stats|shutdown)")
+        }
     }
     Ok(())
 }
@@ -580,24 +793,33 @@ inspection:
 single runs:
   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
   eval <bundle> <checkpoint> [--batches N]
+
+serving (one typed-request front; see docs/PROTOCOL.md):
   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W] [--queue-cap C]
+           load-generator benchmark over a compiled PJRT bundle
+  serve --workload attn|model [--op attn.mita|attn.dense] [--task T] ...
+           same benchmark over the native backend (aliases: serve-native,
+           serve-model keep their old flags)
+  serve --listen ADDR [--addr-file F] [--max-inflight C]
+        [--task T [--seq-len N] [--dim D] [--heads H] [--depth L]]
+        [--checkpoint F] [--binding K]
+           network front: TCP HTTP/1.1 + JSON over the typed service API
+           (/v1/attention, /v1/model/forward, /v1/bind, /v1/stats, ...);
+           runs until a client posts /v1/admin/shutdown
+  client (--addr HOST:PORT | --addr-file F)
+         <health|attention|model-forward|stats|shutdown>
+         [--n N] [--dim D] [--batch B] [--valid V] [--task T] [--binding K]
+           loopback wire client: sends one typed request and asserts the
+           response shape (non-zero exit on protocol errors)
 
 native backend (pure-Rust kernels, no artifacts or Python needed):
   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K] [--cap-factor C]
            parity vs dense attention + single-shot speedup/routing stats
-  serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
-               [--requests R] [--rate R] [--max-batch B] [--max-wait-ms W]
-           dynamic-batching serving benchmark over the native backend
 
 native model subsystem (full MiTA transformer over the kernel registry):
   model-check [--seq-len N] [--dim D] [--heads H] [--depth L] [--seed S]
            per-LRA-task checks: MiTA-vs-dense logits parity (m = k = n),
            forward timing + routing stats, checkpoint round-trip
-  serve-model [--task listops|text|retrieval|image|pathfinder] [--seq-len N]
-              [--dim D] [--heads H] [--depth L] [--op attn.mita|attn.dense]
-              [--checkpoint F] [--requests R] [--rate R] [--max-batch B]
-           whole-model classification serving over an LRA task (requests
-           are token sequences; the engine runs model.forward per batch)
 
 paper reproduction (see DESIGN.md experiment index):
   table2   from-scratch image classification (attention varied only)

@@ -16,10 +16,16 @@
 //!   save/load, and [`ModelScratch`] activation reuse.
 //!
 //! Upward, [`crate::runtime::NativeBackend`] serves whole models through
-//! the [`OP_MODEL_FORWARD`] op (bind a checkpoint with `bind_tensors`, or
-//! seed-init one with `bind_init` + [`OP_MODEL_INIT`]), and
-//! `serve_model` drives classification traffic over the LRA tasks
-//! through the engine + dynamic batcher.
+//! typed [`ServiceRequest::ModelForward`] requests (bind a checkpoint
+//! with [`ServiceRequest::BindCheckpoint`], or seed-init one with
+//! [`ServiceRequest::BindInit`] + [`OP_MODEL_INIT`]); `serve_model`
+//! drives classification traffic over the LRA tasks through the engine +
+//! dynamic batcher, and the network front exposes the same path at
+//! `/v1/model/forward` (docs/PROTOCOL.md).
+//!
+//! [`ServiceRequest::ModelForward`]: crate::service::ServiceRequest::ModelForward
+//! [`ServiceRequest::BindCheckpoint`]: crate::service::ServiceRequest::BindCheckpoint
+//! [`ServiceRequest::BindInit`]: crate::service::ServiceRequest::BindInit
 
 pub mod config;
 pub mod params;

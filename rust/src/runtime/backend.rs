@@ -1,25 +1,25 @@
 //! Execution-backend abstraction: one interface over the PJRT artifact
 //! path and the native CPU kernel path.
 //!
-//! The coordinator's engine thread used to be welded to the PJRT
-//! [`Runtime`]; with [`Backend`] it owns a `Box<dyn Backend>` instead, so
-//! the same serving loop, batcher, and benches drive either:
+//! Since the typed-service redesign, a backend executes exactly one
+//! thing: a validated [`ServiceRequest`]. The stringly-typed `run(op,
+//! binding, inputs)` surface — with its magic one-element i32
+//! "valid-rows marker" tensor — is gone; shapes, kernel ids, and padding
+//! are parsed once at the service boundary ([`crate::service`]) and
+//! backends consume typed requests, answering with typed
+//! [`ServiceResponse`]s or [`ServiceError`]s carrying stable codes.
 //!
-//! - [`PjrtBackend`]: manifest-driven AOT artifacts (ops are artifact
-//!   names, parameter bindings are device literals) — requires the real
-//!   vendored `xla` closure.
+//! - [`PjrtBackend`]: manifest-driven AOT artifacts. Serves
+//!   [`ServiceRequest::Artifact`] (and the two bind classes); typed
+//!   attention / model requests answer `unavailable` — compiled bundles
+//!   only exist as artifacts.
 //! - [`NativeBackend`]: the pure-Rust attention stack in
-//!   [`crate::kernels`] — runs anywhere. Ops resolve through a
-//!   [`KernelRegistry`], inputs parse into an [`AttnProblem`], and
-//!   execution fans out as (example × head) work items over a
-//!   [`WorkspacePool`] (see [`run_batched`]), so steady-state calls
-//!   allocate nothing beyond the output tensor. Per-call MiTA routing
-//!   statistics accumulate and surface through [`Backend::mita_stats`].
-//!   Beyond the raw attention ops it also serves whole
-//!   [`MitaModel`](crate::model::MitaModel)s: bind a checkpoint with
-//!   [`Backend::bind_tensors`] (or seed-init one via
-//!   [`Backend::bind_init`] + [`OP_MODEL_INIT`]) and run
-//!   [`OP_MODEL_FORWARD`] on token batches to get class logits.
+//!   [`crate::kernels`] — runs anywhere. [`ServiceRequest::Attention`]
+//!   resolves through a [`KernelRegistry`] and fans out as
+//!   (example × head) work items over a [`WorkspacePool`] (see
+//!   [`run_batched`]); [`ServiceRequest::ModelForward`] runs a bound
+//!   [`MitaModel`](crate::model::MitaModel) end to end. Rows past the
+//!   request's typed `valid_rows` are zero-filled and never computed.
 //!
 //! Backends are built *inside* the engine thread from a [`BackendSpec`]
 //! (PJRT handles are not `Send`, so the spec crosses the thread boundary,
@@ -30,20 +30,41 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
-use crate::kernels::api::{run_batched, AttnProblem, KernelRegistry, MitaStats, QkvData, QkvLayout};
+use crate::kernels::api::{run_batched, AttnProblem, KernelRegistry, MitaStats};
 use crate::kernels::workspace::WorkspacePool;
 use crate::kernels::MitaKernelConfig;
 use crate::model::{MitaModel, ModelConfig, ModelScratch};
 use crate::runtime::client::{Runtime, RuntimeStats};
 use crate::runtime::tensor::Tensor;
+use crate::service::{
+    resolve_valid_rows, BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest,
+    ServiceResponse, ServiceResult, ServiceStats,
+};
 
 pub use crate::kernels::api::{OP_ATTN_DENSE, OP_ATTN_MITA};
 pub use crate::model::{OP_MODEL_FORWARD, OP_MODEL_INIT};
 
-/// A place computations run: named ops over host tensors, with optional
-/// named parameter bindings kept backend-side between calls.
+/// Cap on distinct parameter bindings per backend. Binding creation is
+/// wire-reachable through the network front, so the maps must not grow
+/// without bound; rebinding an existing key is always allowed.
+pub const MAX_BINDINGS: usize = 64;
+
+fn check_binding_capacity<V>(
+    map: &HashMap<String, V>,
+    key: &BindingId,
+) -> ServiceResult<()> {
+    if !map.contains_key(key.as_str()) && map.len() >= MAX_BINDINGS {
+        return Err(ServiceError::Overloaded(format!(
+            "binding capacity reached ({MAX_BINDINGS} keys); rebind an existing key"
+        )));
+    }
+    Ok(())
+}
+
+/// A place computations run: typed service requests over host tensors,
+/// with named parameter bindings kept backend-side between calls.
 pub trait Backend {
     /// Short identifier ("pjrt" / "native") for logs and reports.
     fn name(&self) -> &'static str;
@@ -51,33 +72,10 @@ pub trait Backend {
     /// Prepare an op off the hot path (compile an artifact, warm caches).
     fn warmup(&self, op: &str) -> Result<()>;
 
-    /// Bind named parameters from host tensors (e.g. a loaded checkpoint).
-    fn bind_tensors(&mut self, key: &str, params: Vec<Tensor>) -> Result<()>;
-
-    /// Bind named parameters by running an init op with a seed and keeping
-    /// its first `param_count` outputs.
-    fn bind_init(&mut self, key: &str, init_op: &str, seed: i32, param_count: usize) -> Result<()>;
-
-    /// Execute `op` on `inputs`, optionally prefixed by a binding's
-    /// parameters.
-    fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
-
-    /// Compile/execute counters for reports.
-    fn stats(&self) -> RuntimeStats;
-
-    /// Accumulated MiTA routing statistics, when this backend executes the
-    /// native kernels (None for artifact backends).
-    fn mita_stats(&self) -> Option<MitaStats> {
-        None
-    }
-
-    /// Snapshot **and reset** the MiTA routing accumulator, so the caller
-    /// gets stats covering exactly the interval since the previous take
-    /// (peaks like `load_imbalance` are monotone maxima and cannot be
-    /// recovered per-interval from cumulative snapshots).
-    fn take_mita_stats(&self) -> Option<MitaStats> {
-        None
-    }
+    /// Execute one typed request. Every failure is a [`ServiceError`]
+    /// with a stable code — callers (the engine, the network front) can
+    /// surface it without string matching.
+    fn execute(&mut self, req: ServiceRequest) -> ServiceResult<ServiceResponse>;
 }
 
 /// Serializable description of a backend, safe to send to the engine
@@ -108,7 +106,7 @@ impl BackendSpec {
 
 /// The artifact-execution backend: wraps [`Runtime`] and keeps parameter
 /// bindings as device-format literals so the hot path never re-converts
-/// weights (previously this logic lived inside the engine thread).
+/// weights.
 pub struct PjrtBackend {
     runtime: Runtime,
     bindings: HashMap<String, Vec<xla::Literal>>,
@@ -122,6 +120,37 @@ impl PjrtBackend {
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }
+
+    fn run_artifact(
+        &self,
+        artifact: &str,
+        binding: Option<&BindingId>,
+        inputs: &[Tensor],
+    ) -> ServiceResult<Vec<Tensor>> {
+        // Resolve the artifact name up front so "no such artifact" gets
+        // its own code instead of a generic execution failure.
+        if self.runtime.manifest().artifact(artifact).is_err() {
+            return Err(ServiceError::UnknownOp(format!(
+                "no artifact {artifact:?} in the manifest"
+            )));
+        }
+        match binding {
+            None => self.runtime.run(artifact, inputs).map_err(ServiceError::internal),
+            Some(key) => {
+                let params = self.bindings.get(key.as_str()).ok_or_else(|| {
+                    ServiceError::UnboundParams(format!("no binding {key:?}"))
+                })?;
+                let outs = self
+                    .runtime
+                    .run_hybrid(artifact, params, inputs)
+                    .map_err(ServiceError::internal)?;
+                outs.iter()
+                    .map(Tensor::from_literal)
+                    .collect::<Result<_>>()
+                    .map_err(ServiceError::internal)
+            }
+        }
+    }
 }
 
 impl Backend for PjrtBackend {
@@ -133,46 +162,62 @@ impl Backend for PjrtBackend {
         self.runtime.warmup(op)
     }
 
-    fn bind_tensors(&mut self, key: &str, params: Vec<Tensor>) -> Result<()> {
-        let lits: Vec<xla::Literal> =
-            params.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
-        self.bindings.insert(key.to_string(), lits);
-        Ok(())
-    }
-
-    fn bind_init(
-        &mut self,
-        key: &str,
-        init_op: &str,
-        seed: i32,
-        param_count: usize,
-    ) -> Result<()> {
-        let seed_lit = Tensor::scalar_i32(seed).to_literal()?;
-        let mut state = self.runtime.run_literals(init_op, &[seed_lit])?;
-        anyhow::ensure!(
-            state.len() >= param_count,
-            "init returned {} < {param_count} outputs",
-            state.len()
-        );
-        state.truncate(param_count);
-        self.bindings.insert(key.to_string(), state);
-        Ok(())
-    }
-
-    fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        match binding {
-            None => self.runtime.run(op, inputs),
-            Some(key) => {
-                let params =
-                    self.bindings.get(key).with_context(|| format!("no binding {key:?}"))?;
-                let outs = self.runtime.run_hybrid(op, params, inputs)?;
-                outs.iter().map(Tensor::from_literal).collect()
+    fn execute(&mut self, req: ServiceRequest) -> ServiceResult<ServiceResponse> {
+        match req {
+            ServiceRequest::Artifact { artifact, binding, inputs } => {
+                let outputs = self.run_artifact(&artifact, binding.as_ref(), &inputs)?;
+                Ok(ServiceResponse::Artifact { outputs })
+            }
+            ServiceRequest::BindCheckpoint { binding, params } => {
+                check_binding_capacity(&self.bindings, &binding)?;
+                let lits: Vec<xla::Literal> = params
+                    .iter()
+                    .map(Tensor::to_literal)
+                    .collect::<Result<_>>()
+                    .map_err(ServiceError::internal)?;
+                self.bindings.insert(binding.as_str().to_string(), lits);
+                Ok(ServiceResponse::Bound { binding })
+            }
+            ServiceRequest::BindInit { binding, init_op, seed, param_count } => {
+                check_binding_capacity(&self.bindings, &binding)?;
+                if self.runtime.manifest().artifact(&init_op).is_err() {
+                    return Err(ServiceError::UnknownOp(format!(
+                        "no init artifact {init_op:?} in the manifest"
+                    )));
+                }
+                let seed_lit =
+                    Tensor::scalar_i32(seed).to_literal().map_err(ServiceError::internal)?;
+                let mut state = self
+                    .runtime
+                    .run_literals(&init_op, &[seed_lit])
+                    .map_err(ServiceError::internal)?;
+                // param_count == 0 (the wire default) keeps every init
+                // output — truncating to an empty parameter set would
+                // "succeed" into a useless binding.
+                if param_count > 0 {
+                    if state.len() < param_count {
+                        return Err(ServiceError::BadShape(format!(
+                            "init returned {} < {param_count} outputs",
+                            state.len()
+                        )));
+                    }
+                    state.truncate(param_count);
+                }
+                self.bindings.insert(binding.as_str().to_string(), state);
+                Ok(ServiceResponse::Bound { binding })
+            }
+            ServiceRequest::Stats { .. } => Ok(ServiceResponse::Stats(ServiceStats {
+                runtime: self.runtime.stats(),
+                mita: None,
+            })),
+            other @ (ServiceRequest::Attention { .. } | ServiceRequest::ModelForward { .. }) => {
+                Err(ServiceError::Unavailable(format!(
+                    "pjrt backend serves compiled artifacts; {:?} requests need the native \
+                     backend",
+                    other.kind()
+                )))
             }
         }
-    }
-
-    fn stats(&self) -> RuntimeStats {
-        self.runtime.stats()
     }
 }
 
@@ -184,16 +229,17 @@ impl Backend for PjrtBackend {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NativeAttnConfig {
     /// Sequence length of the serving workload (used to build request
-    /// pools; ops themselves take their shape from the input tensors).
+    /// pools; ops themselves take their shape from the request tensors).
     pub n: usize,
     /// Model dimension (`heads · head_dim`).
     pub dim: usize,
     pub heads: usize,
     pub mita: MitaKernelConfig,
     /// Whole-model configuration, when the backend should be able to
-    /// seed-init a [`MitaModel`] via `bind_init` + [`OP_MODEL_INIT`]
-    /// (checkpoints bound with `bind_tensors` are self-describing and
-    /// need no config here).
+    /// seed-init a [`MitaModel`] via [`ServiceRequest::BindInit`] +
+    /// [`OP_MODEL_INIT`] (checkpoints bound with
+    /// [`ServiceRequest::BindCheckpoint`] are self-describing and need no
+    /// config here).
     pub model: Option<ModelConfig>,
 }
 
@@ -203,31 +249,19 @@ impl NativeAttnConfig {
         NativeAttnConfig { n, dim, heads, mita: MitaKernelConfig::for_seq(n), model: None }
     }
 
-    /// Attach a whole-model config (enables `bind_init`-seeded models).
+    /// Attach a whole-model config (enables `BindInit`-seeded models).
     pub fn with_model(mut self, model: ModelConfig) -> Self {
         self.model = Some(model);
         self
     }
 }
 
-/// The native CPU backend: resolves ops through a [`KernelRegistry`] and
-/// executes them as batched (example × head) work items with pooled
-/// per-thread workspaces. Accepts per-op inputs in three forms:
-///
-/// - one fused tensor `[b, 3, n, dim]` (or `[3, n, dim]` for b = 1) with
-///   Q/K/V stacked on axis 1 — the serving path packs requests this way;
-/// - the fused tensor plus a one-element i32 *valid-rows marker*: only the
-///   first `valid` batch rows are computed, trailing padding rows are
-///   zero-filled and never executed (the batcher pads short batches);
-/// - three tensors Q, K, V of `[b, n, dim]` (or `[n, dim]` for b = 1).
-///
-/// Output is always `[b, n, dim]`.
-///
-/// Whole models run through [`OP_MODEL_FORWARD`] instead: inputs are a
-/// `[b, n]` (or `[n]`) i32 token tensor plus the same optional valid-rows
-/// marker, the binding key names a model bound earlier (`bind_tensors`
-/// with a checkpoint, or `bind_init` with [`OP_MODEL_INIT`]), and the
-/// output is `[b, classes]` logits with padding rows zeroed.
+/// The native CPU backend: [`ServiceRequest::Attention`] resolves through
+/// a [`KernelRegistry`] and executes as batched (example × head) work
+/// items with pooled per-thread workspaces; [`ServiceRequest::ModelForward`]
+/// runs a bound [`MitaModel`]'s classification forward. Output shapes:
+/// `[b, n, dim]` for attention, `[b, classes]` for model logits — rows
+/// past the request's `valid_rows` are zero-filled and never computed.
 pub struct NativeBackend {
     cfg: NativeAttnConfig,
     registry: KernelRegistry,
@@ -237,7 +271,7 @@ pub struct NativeBackend {
     stats: RefCell<RuntimeStats>,
     mita: RefCell<MitaStats>,
     /// Models bound by key. Each carries its own registry keyed by the
-    /// checkpoint's MiTA parameters (the backend registry serves the raw
+    /// checkpoint's MiTA params (the backend registry serves the raw
     /// attention ops, whose kernel config may differ).
     models: HashMap<String, BoundModel>,
     /// Activation buffers shared by every bound model's forward calls.
@@ -284,116 +318,108 @@ impl NativeBackend {
         self.registry.names()
     }
 
-    /// Parse input tensors into a problem descriptor plus a borrowed data
-    /// view (see the type-level docs for the accepted forms).
-    fn problem<'a>(&self, inputs: &'a [Tensor]) -> Result<(AttnProblem, QkvData<'a>)> {
-        let heads = self.cfg.heads.max(1);
-        match inputs.len() {
-            1 | 2 => {
-                let shape = inputs[0].shape();
-                let (b, n, dim) = match *shape {
-                    [three, n, dim] if three == 3 => (1, n, dim),
-                    [b, three, n, dim] if three == 3 => (b, n, dim),
-                    _ => bail!("fused input must be [b, 3, n, dim] or [3, n, dim], got {shape:?}"),
-                };
-                let mut prob = AttnProblem::new(b, heads, n, dim, QkvLayout::Fused);
-                if inputs.len() == 2 {
-                    prob = prob.with_valid(parse_valid_marker(&inputs[1], b)?);
-                }
-                Ok((prob, QkvData::Fused(inputs[0].as_f32()?)))
-            }
-            3 => {
-                let shape = inputs[0].shape();
-                for t in &inputs[1..] {
-                    anyhow::ensure!(
-                        t.shape() == shape,
-                        "q/k/v shapes differ: {shape:?} vs {:?}",
-                        t.shape()
-                    );
-                }
-                let (b, n, dim) = match *shape {
-                    [n, dim] => (1, n, dim),
-                    [b, n, dim] => (b, n, dim),
-                    _ => bail!("q/k/v must be [b, n, dim] or [n, dim], got {shape:?}"),
-                };
-                let data = QkvData::Separate {
-                    q: inputs[0].as_f32()?,
-                    k: inputs[1].as_f32()?,
-                    v: inputs[2].as_f32()?,
-                };
-                Ok((AttnProblem::new(b, heads, n, dim, QkvLayout::Separate), data))
-            }
-            other => bail!(
-                "native attention wants 1 fused tensor (+ optional valid-rows marker) \
-                 or 3 q/k/v tensors, got {other}"
-            ),
-        }
+    /// Accumulated MiTA routing statistics (test/diagnostic accessor; the
+    /// service path reads them through [`ServiceRequest::Stats`]).
+    pub fn mita_stats(&self) -> MitaStats {
+        self.mita.borrow().clone()
     }
 
-    /// Execute [`OP_MODEL_FORWARD`]: a bound model's classification
-    /// forward over a `[b, n]` token batch (+ optional valid-rows marker).
-    fn run_model(&self, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let key = binding
-            .context("model.forward needs a parameter binding (bind_tensors/bind_init first)")?;
-        let bound = self.models.get(key).with_context(|| {
+    /// Execute a typed attention request (also reachable without the
+    /// trait's `&mut self`, since attention never mutates bindings).
+    pub fn run_attention(
+        &self,
+        op: &KernelId,
+        qkv: &QkvBatch,
+        valid_rows: Option<usize>,
+    ) -> ServiceResult<Tensor> {
+        let kernel = self.registry.resolve(op.as_str()).map_err(ServiceError::UnknownOp)?;
+        let heads = self.cfg.heads.max(1);
+        let valid = resolve_valid_rows(valid_rows, qkv.batch())?;
+        let prob = AttnProblem::new(qkv.batch(), heads, qkv.seq_len(), qkv.dim(), qkv.layout())
+            .with_valid(valid);
+        if let Err(e) = prob.validate() {
+            return Err(ServiceError::BadShape(format!("invalid attention problem: {e}")));
+        }
+        let t0 = Instant::now();
+        let mut out = vec![0.0f32; prob.batch * prob.example_len()];
+        {
+            let data = qkv.view();
+            let mut headout = self.headout.borrow_mut();
+            let mut mita = self.mita.borrow_mut();
+            run_batched(kernel, &prob, &data, &self.pool, &mut headout, &mut out, &mut mita);
+        }
+        {
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        Tensor::f32(&[prob.batch, prob.n, prob.dim], out).map_err(ServiceError::internal)
+    }
+
+    /// Execute a typed model-forward request against a bound model.
+    pub fn run_model(
+        &self,
+        binding: &BindingId,
+        tokens: &Tensor,
+        valid_rows: Option<usize>,
+    ) -> ServiceResult<Tensor> {
+        let bound = self.models.get(binding.as_str()).ok_or_else(|| {
             let mut keys: Vec<&str> = self.models.keys().map(String::as_str).collect();
             keys.sort_unstable();
-            format!("no model bound under {key:?} (bound models: [{}])", keys.join(", "))
+            ServiceError::UnboundParams(format!(
+                "no model bound under {binding:?} (bound models: [{}])",
+                keys.join(", ")
+            ))
         })?;
         let cfg = &bound.model.cfg;
-        anyhow::ensure!(
-            !inputs.is_empty() && inputs.len() <= 2,
-            "model.forward wants a token tensor (+ optional valid-rows marker), got {} inputs",
-            inputs.len()
-        );
-        let shape = inputs[0].shape();
-        let (b, n) = match *shape {
+        let toks = tokens
+            .as_i32()
+            .map_err(|_| ServiceError::BadShape("model tokens must be i32".into()))?;
+        let (b, n) = match *tokens.shape() {
             [n] => (1, n),
             [b, n] => (b, n),
-            _ => bail!("model tokens must be [b, n] or [n], got {shape:?}"),
+            ref s => {
+                return Err(ServiceError::BadShape(format!(
+                    "model tokens must be [b, n] or [n], got {s:?}"
+                )))
+            }
         };
-        anyhow::ensure!(
-            n == cfg.seq_len,
-            "token length {n} != model sequence length {}",
-            cfg.seq_len
-        );
-        let valid = if inputs.len() == 2 { parse_valid_marker(&inputs[1], b)? } else { b };
-        let tokens = inputs[0].as_i32().context("model tokens must be i32")?;
+        if n != cfg.seq_len {
+            return Err(ServiceError::BadShape(format!(
+                "token length {n} != model sequence length {}",
+                cfg.seq_len
+            )));
+        }
+        let valid = resolve_valid_rows(valid_rows, b)?;
 
         let t0 = Instant::now();
         let logits = {
             let mut scratch = self.model_scratch.borrow_mut();
             let mut mita = self.mita.borrow_mut();
-            bound.model.forward(
-                tokens,
-                b,
-                valid,
-                &bound.registry,
-                &self.pool,
-                &mut scratch,
-                &mut mita,
-            )?
+            bound
+                .model
+                .forward(toks, b, valid, &bound.registry, &self.pool, &mut scratch, &mut mita)
+                .map_err(ServiceError::internal)?
         };
         {
             let mut st = self.stats.borrow_mut();
             st.executions += 1;
             st.execute_secs += t0.elapsed().as_secs_f64();
         }
-        Ok(vec![Tensor::f32(&[b, cfg.classes], logits)?])
+        Tensor::f32(&[b, cfg.classes], logits).map_err(ServiceError::internal)
     }
-}
 
-/// Parse the one-element i32 valid-rows marker against batch size `b`.
-fn parse_valid_marker(t: &Tensor, b: usize) -> Result<usize> {
-    let marker = t.as_i32().context("valid-rows marker")?;
-    anyhow::ensure!(
-        marker.len() == 1,
-        "valid-rows marker must hold one i32, got {} values",
-        marker.len()
-    );
-    let valid = marker[0];
-    anyhow::ensure!(valid >= 1 && valid as usize <= b, "valid rows {valid} out of range 1..={b}");
-    Ok(valid as usize)
+    fn take_stats(&self, reset: bool) -> ServiceStats {
+        let mita = if reset {
+            let mut mita = self.mita.borrow_mut();
+            let snapshot = mita.clone();
+            mita.reset();
+            snapshot
+        } else {
+            self.mita.borrow().clone()
+        };
+        ServiceStats { runtime: self.stats.borrow().clone(), mita: Some(mita) }
+    }
 }
 
 impl Backend for NativeBackend {
@@ -405,86 +431,59 @@ impl Backend for NativeBackend {
         Ok(()) // nothing to compile
     }
 
-    /// Bind a model checkpoint: the tensor list must be a self-describing
-    /// [`MitaModel`] flat form (config descriptor first — exactly what
-    /// `MitaModel::to_tensors` / `model-check --checkpoint` writes).
-    fn bind_tensors(&mut self, key: &str, params: Vec<Tensor>) -> Result<()> {
-        let model = MitaModel::from_tensors(&params)
-            .with_context(|| format!("binding {key:?}: native bindings are model checkpoints"))?;
-        let registry = model.registry();
-        self.models.insert(key.to_string(), BoundModel { model, registry });
-        Ok(())
-    }
-
-    /// Seed-initialize a model from the backend's model config and bind
-    /// it under `key`. The init op must be [`OP_MODEL_INIT`]; the PJRT
-    /// `param_count` argument is advisory here (a seeded model always
-    /// materializes its full parameter set).
-    fn bind_init(
-        &mut self,
-        key: &str,
-        init_op: &str,
-        seed: i32,
-        _param_count: usize,
-    ) -> Result<()> {
-        anyhow::ensure!(
-            init_op == OP_MODEL_INIT,
-            "native backend init op must be {OP_MODEL_INIT:?} (requested {init_op:?})"
-        );
-        let mcfg = self
-            .cfg
-            .model
-            .clone()
-            .context("backend spec carries no model config (NativeAttnConfig::with_model)")?;
-        let model = MitaModel::init(mcfg, seed as u64)?;
-        let registry = model.registry();
-        self.models.insert(key.to_string(), BoundModel { model, registry });
-        Ok(())
-    }
-
-    fn run(&self, op: &str, binding: Option<&str>, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if op == OP_MODEL_FORWARD {
-            return self.run_model(binding, inputs);
+    fn execute(&mut self, req: ServiceRequest) -> ServiceResult<ServiceResponse> {
+        match req {
+            ServiceRequest::Attention { op, qkv, valid_rows } => {
+                let out = self.run_attention(&op, &qkv, valid_rows)?;
+                Ok(ServiceResponse::Attention { out })
+            }
+            ServiceRequest::ModelForward { binding, tokens, valid_rows } => {
+                let logits = self.run_model(&binding, &tokens, valid_rows)?;
+                Ok(ServiceResponse::ModelForward { logits })
+            }
+            // Bind a model checkpoint: the tensor list must be a
+            // self-describing MitaModel flat form (config descriptor
+            // first — exactly what `MitaModel::to_tensors` writes).
+            ServiceRequest::BindCheckpoint { binding, params } => {
+                check_binding_capacity(&self.models, &binding)?;
+                let model = MitaModel::from_tensors(&params).map_err(|e| {
+                    ServiceError::BadRequest(format!(
+                        "binding {binding:?}: native bindings are model checkpoints: {e}"
+                    ))
+                })?;
+                let registry = model.registry();
+                self.models.insert(binding.as_str().to_string(), BoundModel { model, registry });
+                Ok(ServiceResponse::Bound { binding })
+            }
+            // Seed-initialize a model from the backend's model config.
+            // The init op must be OP_MODEL_INIT; `param_count` is
+            // advisory (a seeded model always materializes its full
+            // parameter set).
+            ServiceRequest::BindInit { binding, init_op, seed, .. } => {
+                check_binding_capacity(&self.models, &binding)?;
+                if init_op != OP_MODEL_INIT {
+                    return Err(ServiceError::UnknownOp(format!(
+                        "native backend init op must be {OP_MODEL_INIT:?} (requested {init_op:?})"
+                    )));
+                }
+                let mcfg = self.cfg.model.clone().ok_or_else(|| {
+                    ServiceError::BadRequest(
+                        "backend spec carries no model config (NativeAttnConfig::with_model)"
+                            .into(),
+                    )
+                })?;
+                let model =
+                    MitaModel::init(mcfg, seed as u64).map_err(ServiceError::internal)?;
+                let registry = model.registry();
+                self.models.insert(binding.as_str().to_string(), BoundModel { model, registry });
+                Ok(ServiceResponse::Bound { binding })
+            }
+            ServiceRequest::Artifact { artifact, .. } => Err(ServiceError::Unavailable(format!(
+                "native backend serves typed attention/model requests, not compiled artifacts \
+                 (requested {artifact:?})"
+            ))),
+            ServiceRequest::Stats { reset } => Ok(ServiceResponse::Stats(self.take_stats(reset))),
         }
-        anyhow::ensure!(binding.is_none(), "native attention ops take no parameter binding");
-        let kernel = self.registry.get(op).with_context(|| {
-            format!(
-                "native backend has no op {op:?} (available: {})",
-                self.registry.names().join(", ")
-            )
-        })?;
-        let (prob, data) = self.problem(inputs)?;
-        if let Err(e) = prob.validate() {
-            bail!("invalid attention problem: {e}");
-        }
-        let t0 = Instant::now();
-        let mut out = vec![0.0f32; prob.batch * prob.example_len()];
-        {
-            let mut headout = self.headout.borrow_mut();
-            let mut mita = self.mita.borrow_mut();
-            run_batched(kernel, &prob, &data, &self.pool, &mut headout, &mut out, &mut mita);
-        }
-        {
-            let mut st = self.stats.borrow_mut();
-            st.executions += 1;
-            st.execute_secs += t0.elapsed().as_secs_f64();
-        }
-        Ok(vec![Tensor::f32(&[prob.batch, prob.n, prob.dim], out)?])
-    }
-
-    fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
-    }
-
-    fn mita_stats(&self) -> Option<MitaStats> {
-        Some(self.mita.borrow().clone())
-    }
-
-    fn take_mita_stats(&self) -> Option<MitaStats> {
-        let mut mita = self.mita.borrow_mut();
-        let snapshot = mita.clone();
-        mita.reset();
-        Some(snapshot)
     }
 }
 
@@ -503,6 +502,10 @@ mod tests {
             .collect()
     }
 
+    fn attention(be: &NativeBackend, op: KernelId, qkv: QkvBatch) -> Tensor {
+        be.run_attention(&op, &qkv, None).unwrap()
+    }
+
     #[test]
     fn fused_and_separate_inputs_agree() {
         let (n, dim) = (12, 8);
@@ -511,18 +514,19 @@ mod tests {
         for t in &sep {
             fused.extend_from_slice(t.as_f32().unwrap());
         }
-        let fused = Tensor::f32(&[3, n, dim], fused).unwrap();
+        let fused = QkvBatch::fused(Tensor::f32(&[3, n, dim], fused).unwrap()).unwrap();
+        let sep = QkvBatch::separate(sep[0].clone(), sep[1].clone(), sep[2].clone()).unwrap();
 
         let be = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 2));
-        let a = be.run(OP_ATTN_MITA, None, &sep).unwrap();
-        let b = be.run(OP_ATTN_MITA, None, &[fused]).unwrap();
-        assert_eq!(a[0], b[0]);
-        assert_eq!(a[0].shape(), &[1, n, dim]);
-        assert_eq!(be.stats().executions, 2);
+        let a = attention(&be, KernelId::Mita, sep);
+        let b = attention(&be, KernelId::Mita, fused);
+        assert_eq!(a, b);
+        assert_eq!(a.shape(), &[1, n, dim]);
         // Both runs routed n queries per head.
-        let mstats = be.mita_stats().unwrap();
+        let mstats = be.mita_stats();
         assert_eq!(mstats.queries, 2 * 2 * n);
         assert_eq!(mstats.calls, 2 * 2);
+        assert_eq!(be.take_stats(false).runtime.executions, 2);
     }
 
     #[test]
@@ -533,77 +537,134 @@ mod tests {
         for _ in 0..bsz * 3 * n * dim {
             data.push(rng.range_f32(-1.0, 1.0));
         }
-        let batch = Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap();
+        let batch =
+            QkvBatch::fused(Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap()).unwrap();
         let be = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 1));
-        let out = be.run(OP_ATTN_DENSE, None, &[batch]).unwrap();
-        assert_eq!(out[0].shape(), &[bsz, n, dim]);
-        let full = out[0].as_f32().unwrap();
+        let out = attention(&be, KernelId::Dense, batch);
+        assert_eq!(out.shape(), &[bsz, n, dim]);
+        let full = out.as_f32().unwrap();
         for i in 0..bsz {
-            let one =
+            let one = QkvBatch::fused(
                 Tensor::f32(&[3, n, dim], data[i * 3 * n * dim..(i + 1) * 3 * n * dim].to_vec())
-                    .unwrap();
-            let o = be.run(OP_ATTN_DENSE, None, &[one]).unwrap();
-            assert_eq!(&full[i * n * dim..(i + 1) * n * dim], o[0].as_f32().unwrap());
+                    .unwrap(),
+            )
+            .unwrap();
+            let o = attention(&be, KernelId::Dense, one);
+            assert_eq!(&full[i * n * dim..(i + 1) * n * dim], o.as_f32().unwrap());
         }
     }
 
     #[test]
-    fn valid_rows_marker_skips_padding() {
+    fn typed_valid_rows_skips_padding() {
         let (n, dim, bsz, valid) = (8, 4, 4, 2);
         let mut rng = Rng::new(19);
-        let data: Vec<f32> =
-            (0..bsz * 3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
-        let fused = Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap();
-        let marker = Tensor::i32(&[1], vec![valid as i32]).unwrap();
+        let data: Vec<f32> = (0..bsz * 3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let fused = QkvBatch::fused(Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap()).unwrap();
 
         let be = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 2));
-        let out = be.run(OP_ATTN_MITA, None, &[fused.clone(), marker]).unwrap();
-        let full = out[0].as_f32().unwrap();
+        let out = be.run_attention(&KernelId::Mita, &fused, Some(valid)).unwrap();
+        let full = out.as_f32().unwrap();
         let per = n * dim;
 
         // Real rows match an unpadded run over the prefix.
-        let prefix =
-            Tensor::f32(&[valid, 3, n, dim], data[..valid * 3 * per].to_vec()).unwrap();
+        let prefix = QkvBatch::fused(
+            Tensor::f32(&[valid, 3, n, dim], data[..valid * 3 * per].to_vec()).unwrap(),
+        )
+        .unwrap();
         let be2 = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, 2));
-        let want = be2.run(OP_ATTN_MITA, None, &[prefix]).unwrap();
-        assert_eq!(&full[..valid * per], want[0].as_f32().unwrap());
+        let want = be2.run_attention(&KernelId::Mita, &prefix, None).unwrap();
+        assert_eq!(&full[..valid * per], want.as_f32().unwrap());
 
         // Pad rows never reach the output (stay exactly zero) and never
         // reach the kernels (stats only count valid work).
         assert!(full[valid * per..].iter().all(|&x| x == 0.0));
-        let mstats = be.mita_stats().unwrap();
+        let mstats = be.mita_stats();
         assert_eq!(mstats.calls, valid * 2);
         assert_eq!(mstats.queries, valid * 2 * n);
 
-        // Out-of-range markers are rejected.
-        for bad in [0i32, 5] {
-            let marker = Tensor::i32(&[1], vec![bad]).unwrap();
-            assert!(be.run(OP_ATTN_MITA, None, &[fused.clone(), marker]).is_err());
+        // Out-of-range valid_rows are rejected with the bad_shape code.
+        for bad in [Some(0usize), Some(5)] {
+            let err = be.run_attention(&KernelId::Mita, &fused, bad).unwrap_err();
+            assert_eq!(err.code(), "bad_shape");
         }
-        let wide = Tensor::i32(&[2], vec![1, 1]).unwrap();
-        assert!(be.run(OP_ATTN_MITA, None, &[fused, wide]).is_err());
     }
 
     #[test]
-    fn rejects_bad_ops_and_shapes() {
-        let be = NativeBackend::new(NativeAttnConfig::for_shape(8, 4, 2));
-        let t = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
-        assert!(be.run("predict", None, &[t.clone()]).is_err());
-        assert!(be.run(OP_ATTN_MITA, None, &[t.clone()]).is_err()); // not [3, n, dim]
-        assert!(be.run(OP_ATTN_MITA, Some("w"), &[t]).is_err());
-        let mut be = be;
-        assert!(be.bind_tensors("w", vec![]).is_err());
-        assert!(be.bind_init("w", "init", 0, 1).is_err());
+    fn error_codes_for_bad_requests() {
+        let mut be = NativeBackend::new(NativeAttnConfig::for_shape(8, 4, 2));
+        let qkv =
+            QkvBatch::fused(Tensor::f32(&[3, 8, 4], vec![0.0; 3 * 8 * 4]).unwrap()).unwrap();
+
+        // Unknown (but well-formed) kernel name.
+        let err = be.run_attention(&KernelId::Custom("attn.nope".into()), &qkv, None).unwrap_err();
+        assert_eq!(err.code(), "unknown_op");
+
+        // Unbound model binding.
+        let tokens = Tensor::i32(&[1, 8], vec![0; 8]).unwrap();
+        let err = be.run_model(&BindingId::from("w"), &tokens, None).unwrap_err();
+        assert_eq!(err.code(), "unbound_params");
+
+        // Artifact execution is a different backend's job.
+        let err = be
+            .execute(ServiceRequest::Artifact {
+                artifact: "predict".into(),
+                binding: None,
+                inputs: vec![],
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "unavailable");
+
+        // Non-checkpoint bind payloads and non-model init ops.
+        let err = be
+            .execute(ServiceRequest::BindCheckpoint {
+                binding: BindingId::from("w"),
+                params: vec![],
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "bad_request");
+        let err = be
+            .execute(ServiceRequest::BindInit {
+                binding: BindingId::from("w"),
+                init_op: "init".into(),
+                seed: 0,
+                param_count: 1,
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_op");
+
         assert!(be.warmup(OP_ATTN_MITA).is_ok());
         assert_eq!(be.ops(), vec![OP_ATTN_MITA, OP_ATTN_DENSE]);
     }
 
     #[test]
+    fn binding_capacity_is_bounded() {
+        let mcfg = ModelConfig::new(5, 8, 4, 1, 1, 8, 2, OP_ATTN_MITA);
+        let attn = NativeAttnConfig::for_shape(8, 4, 1).with_model(mcfg);
+        let mut be = NativeBackend::new(attn);
+        let bind = |i: usize| ServiceRequest::BindInit {
+            binding: BindingId::new(format!("m{i}")),
+            init_op: OP_MODEL_INIT.into(),
+            seed: 0,
+            param_count: 0,
+        };
+        for i in 0..MAX_BINDINGS {
+            be.execute(bind(i)).unwrap();
+        }
+        // One past the cap: rejected with the overloaded code.
+        let err = be.execute(bind(MAX_BINDINGS)).unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        // Rebinding an existing key is always allowed.
+        be.execute(bind(0)).unwrap();
+    }
+
+    #[test]
     fn backend_spec_creates_native() {
         let spec = BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2));
-        let be = spec.create().unwrap();
+        let mut be = spec.create().unwrap();
         assert_eq!(be.name(), "native");
-        assert!(be.mita_stats().is_some());
+        let stats =
+            be.execute(ServiceRequest::Stats { reset: false }).unwrap().into_stats().unwrap();
+        assert!(stats.mita.is_some());
     }
 
     #[test]
@@ -614,34 +675,43 @@ mod tests {
         let mut rng = Rng::new(31);
         let toks: Vec<i32> = (0..2 * 10).map(|_| rng.below(7) as i32).collect();
         let tokens = Tensor::i32(&[2, 10], toks).unwrap();
+        let m = BindingId::from("m");
 
-        // model.forward needs a binding that exists.
-        assert!(be.run(OP_MODEL_FORWARD, None, &[tokens.clone()]).is_err());
-        assert!(be.run(OP_MODEL_FORWARD, Some("m"), &[tokens.clone()]).is_err());
+        // model forward needs a binding that exists.
+        assert_eq!(be.run_model(&m, &tokens, None).unwrap_err().code(), "unbound_params");
 
-        be.bind_init("m", OP_MODEL_INIT, 3, 0).unwrap();
-        assert!(be.bind_init("m", "init", 3, 0).is_err(), "only {OP_MODEL_INIT:?} seeds models");
-        let out = be.run(OP_MODEL_FORWARD, Some("m"), &[tokens.clone()]).unwrap();
-        assert_eq!(out[0].shape(), &[2, 3]);
-        assert!(out[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+        be.execute(ServiceRequest::BindInit {
+            binding: m.clone(),
+            init_op: OP_MODEL_INIT.into(),
+            seed: 3,
+            param_count: 0,
+        })
+        .unwrap();
+        let out = be.run_model(&m, &tokens, None).unwrap();
+        assert_eq!(out.shape(), &[2, 3]);
+        assert!(out.as_f32().unwrap().iter().all(|x| x.is_finite()));
 
-        // The valid-rows marker computes only the prefix; pad logits stay 0.
-        let marker = Tensor::i32(&[1], vec![1]).unwrap();
-        let padded = be.run(OP_MODEL_FORWARD, Some("m"), &[tokens.clone(), marker]).unwrap();
-        let full = padded[0].as_f32().unwrap();
-        assert_eq!(&full[..3], &out[0].as_f32().unwrap()[..3]);
+        // Typed valid_rows computes only the prefix; pad logits stay 0.
+        let padded = be.run_model(&m, &tokens, Some(1)).unwrap();
+        let full = padded.as_f32().unwrap();
+        assert_eq!(&full[..3], &out.as_f32().unwrap()[..3]);
         assert!(full[3..].iter().all(|&x| x == 0.0));
 
-        // A checkpoint bound via bind_tensors matches the seeded model.
+        // A checkpoint bound via BindCheckpoint matches the seeded model.
         let model = MitaModel::init(mcfg, 3).unwrap();
-        be.bind_tensors("ckpt", model.to_tensors().unwrap()).unwrap();
-        let out2 = be.run(OP_MODEL_FORWARD, Some("ckpt"), &[tokens]).unwrap();
-        assert_eq!(out[0], out2[0]);
-        assert!(be.mita_stats().unwrap().queries > 0, "model attention records routing stats");
+        be.execute(ServiceRequest::BindCheckpoint {
+            binding: BindingId::from("ckpt"),
+            params: model.to_tensors().unwrap(),
+        })
+        .unwrap();
+        let out2 = be.run_model(&BindingId::from("ckpt"), &tokens, None).unwrap();
+        assert_eq!(out, out2);
+        assert!(be.mita_stats().queries > 0, "model attention records routing stats");
 
-        // Wrong sequence length / non-checkpoint bindings are rejected.
+        // Wrong sequence length / wrong dtype are bad_shape.
         let short = Tensor::i32(&[2, 6], vec![0; 12]).unwrap();
-        assert!(be.run(OP_MODEL_FORWARD, Some("m"), &[short]).is_err());
-        assert!(be.bind_tensors("bad", vec![Tensor::scalar_i32(1)]).is_err());
+        assert_eq!(be.run_model(&m, &short, None).unwrap_err().code(), "bad_shape");
+        let wrong = Tensor::f32(&[2, 10], vec![0.0; 20]).unwrap();
+        assert_eq!(be.run_model(&m, &wrong, None).unwrap_err().code(), "bad_shape");
     }
 }

@@ -2,7 +2,8 @@
 //! AOT-compiled XLA artifacts through the PJRT C API (the `xla` crate).
 //!
 //! - [`backend`]: the [`Backend`] trait — PJRT artifacts or native CPU
-//!   kernels behind one interface — and [`BackendSpec`] for picking one.
+//!   kernels executing typed [`crate::service::ServiceRequest`]s behind
+//!   one interface — and [`BackendSpec`] for picking one.
 //! - [`manifest`]: schema of `artifacts/manifest.json` (the Python⇄Rust
 //!   contract).
 //! - [`tensor`]: host tensors ⇄ `xla::Literal`.

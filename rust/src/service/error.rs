@@ -1,0 +1,162 @@
+//! The versioned error taxonomy of the typed service API.
+//!
+//! Every failure that can cross the service boundary — engine submission,
+//! backend execution, or the network front — is a [`ServiceError`] with a
+//! **stable string code**. Codes are part of the wire protocol (see
+//! `docs/PROTOCOL.md`): clients branch on `code`, never on the free-text
+//! `message`, so messages can improve without breaking anyone. The
+//! taxonomy itself is versioned through the protocol's `version` field;
+//! adding a code is backward-compatible, renaming one is not.
+
+use std::fmt;
+
+/// Typed service failure with a stable wire code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The request itself is malformed: unparseable JSON, missing fields,
+    /// wrong protocol version, unknown endpoint.
+    BadRequest(String),
+    /// Tensors have the wrong rank/shape/dtype, or `valid_rows` is out of
+    /// range for the batch.
+    BadShape(String),
+    /// The named op/kernel/artifact does not exist.
+    UnknownOp(String),
+    /// The request references a parameter binding that was never bound.
+    UnboundParams(String),
+    /// Admission control rejected the request (queue/inflight capacity).
+    Overloaded(String),
+    /// The backend cannot serve this request class at all (e.g. artifact
+    /// execution on the native backend, or a stubbed PJRT closure).
+    Unavailable(String),
+    /// Anything else: an execution failure behind a well-formed request.
+    Internal(String),
+}
+
+/// `Result` alias used across the service boundary.
+pub type ServiceResult<T> = Result<T, ServiceError>;
+
+impl ServiceError {
+    /// The stable wire code (what clients branch on).
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServiceError::BadRequest(_) => "bad_request",
+            ServiceError::BadShape(_) => "bad_shape",
+            ServiceError::UnknownOp(_) => "unknown_op",
+            ServiceError::UnboundParams(_) => "unbound_params",
+            ServiceError::Overloaded(_) => "overloaded",
+            ServiceError::Unavailable(_) => "unavailable",
+            ServiceError::Internal(_) => "internal",
+        }
+    }
+
+    /// The human-readable detail (free text; never branch on this).
+    pub fn message(&self) -> &str {
+        match self {
+            ServiceError::BadRequest(m)
+            | ServiceError::BadShape(m)
+            | ServiceError::UnknownOp(m)
+            | ServiceError::UnboundParams(m)
+            | ServiceError::Overloaded(m)
+            | ServiceError::Unavailable(m)
+            | ServiceError::Internal(m) => m,
+        }
+    }
+
+    /// HTTP status the network front maps this error to.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServiceError::BadRequest(_) | ServiceError::BadShape(_) => 400,
+            ServiceError::UnknownOp(_) | ServiceError::UnboundParams(_) => 404,
+            ServiceError::Overloaded(_) => 503,
+            ServiceError::Unavailable(_) => 501,
+            ServiceError::Internal(_) => 500,
+        }
+    }
+
+    /// Rebuild a typed error from its wire `(code, message)` pair — the
+    /// loopback client uses this so errors stay typed end to end. Unknown
+    /// codes (a newer server) degrade to [`ServiceError::Internal`].
+    pub fn from_code(code: &str, message: impl Into<String>) -> Self {
+        let m = message.into();
+        match code {
+            "bad_request" => ServiceError::BadRequest(m),
+            "bad_shape" => ServiceError::BadShape(m),
+            "unknown_op" => ServiceError::UnknownOp(m),
+            "unbound_params" => ServiceError::UnboundParams(m),
+            "overloaded" => ServiceError::Overloaded(m),
+            "unavailable" => ServiceError::Unavailable(m),
+            _ => ServiceError::Internal(format!("[{code}] {m}")),
+        }
+    }
+
+    /// Wrap an arbitrary failure as [`ServiceError::Internal`].
+    pub fn internal(e: impl fmt::Display) -> Self {
+        ServiceError::Internal(e.to_string())
+    }
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.code(), self.message())
+    }
+}
+
+// `?` from a ServiceResult inside an anyhow::Result works through anyhow's
+// blanket `From<E: std::error::Error>` impl; the code survives inside the
+// message as the `[code]` prefix.
+impl std::error::Error for ServiceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_roundtrip() {
+        let all = [
+            ServiceError::BadRequest("a".into()),
+            ServiceError::BadShape("b".into()),
+            ServiceError::UnknownOp("c".into()),
+            ServiceError::UnboundParams("d".into()),
+            ServiceError::Overloaded("e".into()),
+            ServiceError::Unavailable("f".into()),
+            ServiceError::Internal("g".into()),
+        ];
+        let codes: Vec<&str> = all.iter().map(|e| e.code()).collect();
+        assert_eq!(
+            codes,
+            [
+                "bad_request",
+                "bad_shape",
+                "unknown_op",
+                "unbound_params",
+                "overloaded",
+                "unavailable",
+                "internal"
+            ]
+        );
+        for e in &all {
+            assert_eq!(&ServiceError::from_code(e.code(), e.message()), e);
+        }
+        // Unknown codes degrade without losing information.
+        let e = ServiceError::from_code("brand_new", "future failure");
+        assert_eq!(e.code(), "internal");
+        assert!(e.message().contains("brand_new"));
+    }
+
+    #[test]
+    fn display_carries_code_and_message() {
+        let e = ServiceError::BadShape("rank 2 != 4".into());
+        assert_eq!(e.to_string(), "[bad_shape] rank 2 != 4");
+        // And the anyhow bridge keeps both.
+        let a: anyhow::Error = e.into();
+        assert!(a.to_string().contains("[bad_shape]"));
+    }
+
+    #[test]
+    fn http_statuses() {
+        assert_eq!(ServiceError::BadShape(String::new()).http_status(), 400);
+        assert_eq!(ServiceError::UnknownOp(String::new()).http_status(), 404);
+        assert_eq!(ServiceError::Overloaded(String::new()).http_status(), 503);
+        assert_eq!(ServiceError::Internal(String::new()).http_status(), 500);
+    }
+}

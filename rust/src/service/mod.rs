@@ -1,0 +1,459 @@
+//! Typed service API: the single request surface of the execution stack.
+//!
+//! Everything that used to be stringly-typed plumbing — bare op strings,
+//! a magic one-element i32 "valid-rows marker" tensor appended to the
+//! input list, per-op ad-hoc shape checks — is parsed **once** here, at
+//! the service boundary, into a [`ServiceRequest`]. Backends execute
+//! validated requests; the engine, the serving loop, the network front,
+//! benches, and examples all speak this one vocabulary:
+//!
+//! - [`ServiceRequest::Attention`] — a batched QKV problem
+//!   ([`QkvBatch`]) routed to a kernel by [`KernelId`], with padding
+//!   expressed as a typed `valid_rows: Option<usize>` field.
+//! - [`ServiceRequest::ModelForward`] — token classification against a
+//!   model bound under a [`BindingId`].
+//! - [`ServiceRequest::BindCheckpoint`] / [`ServiceRequest::BindInit`] —
+//!   parameter binding (checkpoint tensors or seeded init).
+//! - [`ServiceRequest::Artifact`] — compiled-artifact execution on the
+//!   PJRT backend (artifact names come from the build manifest, so they
+//!   stay strings by construction — but validated and routed here).
+//! - [`ServiceRequest::Stats`] — execution + routing counters.
+//!
+//! Failures are a [`ServiceError`] with a stable code ([`error`]);
+//! [`wire`] maps requests/responses onto the HTTP+JSON protocol served by
+//! `coordinator::netserver` and documented in `docs/PROTOCOL.md`.
+
+pub mod error;
+pub mod wire;
+
+pub use error::{ServiceError, ServiceResult};
+
+use crate::kernels::api::{QkvData, QkvLayout};
+use crate::kernels::{MitaStats, OP_ATTN_DENSE, OP_ATTN_MITA};
+use crate::runtime::client::RuntimeStats;
+use crate::runtime::tensor::Tensor;
+
+/// Protocol version stamped on every wire request/response (and the
+/// version of the error-code taxonomy).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------------
+// Identifiers
+// ---------------------------------------------------------------------------
+
+/// A validated attention-kernel selector. The two paper kernels are
+/// first-class; anything else must still look like a registry name and
+/// resolves (or fails with `unknown_op`) at execution time, so custom
+/// kernels registered on the backend stay reachable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelId {
+    /// The MiTA mixture-of-top-k kernel (`attn.mita`).
+    Mita,
+    /// The dense O(N²) baseline (`attn.dense`).
+    Dense,
+    /// A custom registry entry (validated name, resolved at execution).
+    Custom(String),
+}
+
+impl KernelId {
+    /// Parse a registry name. Unknown-but-well-formed names become
+    /// [`KernelId::Custom`]; malformed names are rejected here so they
+    /// never reach a backend.
+    pub fn parse(name: &str) -> ServiceResult<Self> {
+        match name {
+            OP_ATTN_MITA => Ok(KernelId::Mita),
+            OP_ATTN_DENSE => Ok(KernelId::Dense),
+            _ => {
+                let name_byte_ok =
+                    |b: u8| b.is_ascii_lowercase() || b.is_ascii_digit() || b"._-".contains(&b);
+                let well_formed =
+                    !name.is_empty() && name.len() <= 64 && name.bytes().all(name_byte_ok);
+                if well_formed {
+                    Ok(KernelId::Custom(name.to_string()))
+                } else {
+                    Err(ServiceError::BadRequest(format!(
+                        "malformed kernel name {name:?} (want lowercase [a-z0-9._-], ≤64 chars)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// The registry name this id resolves through.
+    pub fn as_str(&self) -> &str {
+        match self {
+            KernelId::Mita => OP_ATTN_MITA,
+            KernelId::Dense => OP_ATTN_DENSE,
+            KernelId::Custom(s) => s,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Key of a parameter binding held backend-side between requests.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BindingId(String);
+
+impl BindingId {
+    pub fn new(key: impl Into<String>) -> Self {
+        BindingId(key.into())
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+impl From<&str> for BindingId {
+    fn from(s: &str) -> Self {
+        BindingId(s.to_string())
+    }
+}
+
+impl std::fmt::Display for BindingId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QKV batch
+// ---------------------------------------------------------------------------
+
+/// A shape-validated batched QKV input. Construction is the only place
+/// attention input shapes are checked — backends consume the already
+/// validated batch and read its dims, never re-deriving them from raw
+/// tensor lists.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QkvBatch {
+    storage: QkvStorage,
+    batch: usize,
+    n: usize,
+    dim: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum QkvStorage {
+    /// `[b, 3, n, dim]` (or `[3, n, dim]` for b = 1), Q/K/V on axis 1.
+    Fused(Tensor),
+    /// Three equal-shape `[b, n, dim]` (or `[n, dim]`) tensors.
+    Separate { q: Tensor, k: Tensor, v: Tensor },
+}
+
+impl QkvBatch {
+    /// Validate a fused `[b, 3, n, dim]` / `[3, n, dim]` f32 tensor.
+    pub fn fused(t: Tensor) -> ServiceResult<Self> {
+        if t.as_f32().is_err() {
+            return Err(ServiceError::BadShape("fused qkv tensor must be f32".into()));
+        }
+        let (batch, n, dim) = match *t.shape() {
+            [three, n, dim] if three == 3 => (1, n, dim),
+            [b, three, n, dim] if three == 3 => (b, n, dim),
+            ref s => {
+                return Err(ServiceError::BadShape(format!(
+                    "fused qkv must be [b, 3, n, dim] or [3, n, dim], got {s:?}"
+                )))
+            }
+        };
+        if batch == 0 || n == 0 || dim == 0 {
+            return Err(ServiceError::BadShape(format!(
+                "qkv dims must be non-zero (b={batch}, n={n}, dim={dim})"
+            )));
+        }
+        Ok(QkvBatch { storage: QkvStorage::Fused(t), batch, n, dim })
+    }
+
+    /// Validate three equal-shape `[b, n, dim]` / `[n, dim]` f32 tensors.
+    pub fn separate(q: Tensor, k: Tensor, v: Tensor) -> ServiceResult<Self> {
+        for (name, t) in [("q", &q), ("k", &k), ("v", &v)] {
+            if t.as_f32().is_err() {
+                return Err(ServiceError::BadShape(format!("{name} tensor must be f32")));
+            }
+        }
+        if q.shape() != k.shape() || q.shape() != v.shape() {
+            return Err(ServiceError::BadShape(format!(
+                "q/k/v shapes differ: {:?} vs {:?} vs {:?}",
+                q.shape(),
+                k.shape(),
+                v.shape()
+            )));
+        }
+        let (batch, n, dim) = match *q.shape() {
+            [n, dim] => (1, n, dim),
+            [b, n, dim] => (b, n, dim),
+            ref s => {
+                return Err(ServiceError::BadShape(format!(
+                    "q/k/v must be [b, n, dim] or [n, dim], got {s:?}"
+                )))
+            }
+        };
+        if batch == 0 || n == 0 || dim == 0 {
+            return Err(ServiceError::BadShape(format!(
+                "qkv dims must be non-zero (b={batch}, n={n}, dim={dim})"
+            )));
+        }
+        Ok(QkvBatch { storage: QkvStorage::Separate { q, k, v }, batch, n, dim })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn layout(&self) -> QkvLayout {
+        match self.storage {
+            QkvStorage::Fused(_) => QkvLayout::Fused,
+            QkvStorage::Separate { .. } => QkvLayout::Separate,
+        }
+    }
+
+    /// Borrowed kernel-level view (shapes already validated, so the f32
+    /// accessors cannot fail).
+    pub fn view(&self) -> QkvData<'_> {
+        match &self.storage {
+            QkvStorage::Fused(t) => QkvData::Fused(t.as_f32().expect("validated f32")),
+            QkvStorage::Separate { q, k, v } => QkvData::Separate {
+                q: q.as_f32().expect("validated f32"),
+                k: k.as_f32().expect("validated f32"),
+                v: v.as_f32().expect("validated f32"),
+            },
+        }
+    }
+
+    /// The wire/storage tensors, in protocol order.
+    pub fn tensors(&self) -> Vec<&Tensor> {
+        match &self.storage {
+            QkvStorage::Fused(t) => vec![t],
+            QkvStorage::Separate { q, k, v } => vec![q, k, v],
+        }
+    }
+}
+
+/// Resolve a typed `valid_rows` field against a batch size: `None` means
+/// every row is real; `Some(v)` marks the trailing `batch - v` rows as
+/// padding (never computed, zero-filled in the output).
+pub fn resolve_valid_rows(valid_rows: Option<usize>, batch: usize) -> ServiceResult<usize> {
+    match valid_rows {
+        None => Ok(batch),
+        Some(v) if (1..=batch).contains(&v) => Ok(v),
+        Some(v) => Err(ServiceError::BadShape(format!(
+            "valid_rows {v} out of range 1..={batch}"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests / responses
+// ---------------------------------------------------------------------------
+
+/// One typed request against an execution backend.
+#[derive(Debug, Clone)]
+pub enum ServiceRequest {
+    /// Batched attention: `qkv` through the kernel named by `op`.
+    /// Output is `[b, n, dim]`; rows past `valid_rows` stay zero.
+    Attention { op: KernelId, qkv: QkvBatch, valid_rows: Option<usize> },
+    /// Whole-model classification: `[b, n]` (or `[n]`) i32 `tokens`
+    /// against the model bound under `binding`. Output is
+    /// `[b, classes]` logits; rows past `valid_rows` stay zero.
+    ModelForward { binding: BindingId, tokens: Tensor, valid_rows: Option<usize> },
+    /// Bind parameters from host tensors (a loaded checkpoint).
+    BindCheckpoint { binding: BindingId, params: Vec<Tensor> },
+    /// Bind parameters by seeded init (`init_op` is backend-specific:
+    /// `model.init` natively, an init artifact name on PJRT;
+    /// `param_count` is how many leading init outputs are parameters —
+    /// 0 (the wire default) keeps every output, and the value is
+    /// advisory on backends whose init materializes exactly the
+    /// parameter set).
+    BindInit { binding: BindingId, init_op: String, seed: i32, param_count: usize },
+    /// Execute a compiled artifact (PJRT backend), optionally prefixed by
+    /// a binding's parameters.
+    Artifact { artifact: String, binding: Option<BindingId>, inputs: Vec<Tensor> },
+    /// Snapshot execution + routing counters; with `reset`, clear the
+    /// routing accumulator after the snapshot.
+    Stats { reset: bool },
+}
+
+impl ServiceRequest {
+    /// Short request-class tag for logs and metrics.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServiceRequest::Attention { .. } => "attention",
+            ServiceRequest::ModelForward { .. } => "model_forward",
+            ServiceRequest::BindCheckpoint { .. } => "bind_checkpoint",
+            ServiceRequest::BindInit { .. } => "bind_init",
+            ServiceRequest::Artifact { .. } => "artifact",
+            ServiceRequest::Stats { .. } => "stats",
+        }
+    }
+}
+
+/// Combined backend counters returned by [`ServiceRequest::Stats`].
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// Compile/execute counters.
+    pub runtime: RuntimeStats,
+    /// Native MiTA routing statistics, when the backend runs those
+    /// kernels (None on artifact backends).
+    pub mita: Option<MitaStats>,
+}
+
+/// The typed result of a [`ServiceRequest`].
+#[derive(Debug, Clone)]
+pub enum ServiceResponse {
+    /// `[b, n, dim]` attention output.
+    Attention { out: Tensor },
+    /// `[b, classes]` classification logits.
+    ModelForward { logits: Tensor },
+    /// The binding now exists backend-side.
+    Bound { binding: BindingId },
+    /// Raw artifact outputs, in artifact order.
+    Artifact { outputs: Vec<Tensor> },
+    /// Counter snapshot.
+    Stats(ServiceStats),
+}
+
+impl ServiceResponse {
+    /// Response-class tag (mirrors [`ServiceRequest::kind`]).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServiceResponse::Attention { .. } => "attention",
+            ServiceResponse::ModelForward { .. } => "model_forward",
+            ServiceResponse::Bound { .. } => "bound",
+            ServiceResponse::Artifact { .. } => "artifact",
+            ServiceResponse::Stats(_) => "stats",
+        }
+    }
+
+    /// Borrowed payload tensors (the by-value form is
+    /// [`ServiceResponse::into_tensors`]).
+    pub fn tensors(&self) -> Vec<&Tensor> {
+        match self {
+            ServiceResponse::Attention { out } => vec![out],
+            ServiceResponse::ModelForward { logits } => vec![logits],
+            ServiceResponse::Artifact { outputs } => outputs.iter().collect(),
+            ServiceResponse::Bound { .. } | ServiceResponse::Stats(_) => Vec::new(),
+        }
+    }
+
+    /// The payload tensors, if this response class carries any.
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        match self {
+            ServiceResponse::Attention { out } => vec![out],
+            ServiceResponse::ModelForward { logits } => vec![logits],
+            ServiceResponse::Artifact { outputs } => outputs,
+            ServiceResponse::Bound { .. } | ServiceResponse::Stats(_) => Vec::new(),
+        }
+    }
+
+    /// The single payload tensor of an attention / model-forward
+    /// response (errors on other classes — a protocol mix-up).
+    pub fn into_tensor(self) -> ServiceResult<Tensor> {
+        match self {
+            ServiceResponse::Attention { out } => Ok(out),
+            ServiceResponse::ModelForward { logits } => Ok(logits),
+            other => Err(ServiceError::Internal(format!(
+                "expected a tensor-bearing response, got {:?} class",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// The stats payload (errors on other classes).
+    pub fn into_stats(self) -> ServiceResult<ServiceStats> {
+        match self {
+            ServiceResponse::Stats(s) => Ok(s),
+            other => Err(ServiceError::Internal(format!(
+                "expected a stats response, got {:?} class",
+                other.kind()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_id_parse_and_roundtrip() {
+        assert_eq!(KernelId::parse("attn.mita").unwrap(), KernelId::Mita);
+        assert_eq!(KernelId::parse("attn.dense").unwrap(), KernelId::Dense);
+        assert_eq!(
+            KernelId::parse("attn.flash2").unwrap(),
+            KernelId::Custom("attn.flash2".into())
+        );
+        for bad in ["", "Attn.Mita", "a b", "x\n"] {
+            let e = KernelId::parse(bad).unwrap_err();
+            assert_eq!(e.code(), "bad_request", "{bad:?}");
+        }
+        assert_eq!(KernelId::Mita.as_str(), "attn.mita");
+    }
+
+    #[test]
+    fn qkv_batch_validates_shapes() {
+        let fused = Tensor::f32(&[2, 3, 4, 8], vec![0.0; 2 * 3 * 4 * 8]).unwrap();
+        let b = QkvBatch::fused(fused).unwrap();
+        assert_eq!((b.batch(), b.seq_len(), b.dim()), (2, 4, 8));
+        assert_eq!(b.layout(), QkvLayout::Fused);
+        assert_eq!(b.tensors().len(), 1);
+
+        // Rank-3 single example.
+        let one = Tensor::f32(&[3, 4, 8], vec![0.0; 3 * 4 * 8]).unwrap();
+        assert_eq!(QkvBatch::fused(one).unwrap().batch(), 1);
+
+        // Wrong rank / wrong axis-1 / wrong dtype are all bad_shape.
+        let bad = Tensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
+        assert_eq!(QkvBatch::fused(bad).unwrap_err().code(), "bad_shape");
+        let bad = Tensor::f32(&[2, 4, 4, 8], vec![0.0; 2 * 4 * 4 * 8]).unwrap();
+        assert_eq!(QkvBatch::fused(bad).unwrap_err().code(), "bad_shape");
+        let bad = Tensor::i32(&[3, 4, 8], vec![0; 3 * 4 * 8]).unwrap();
+        assert_eq!(QkvBatch::fused(bad).unwrap_err().code(), "bad_shape");
+
+        // Separate tensors must agree on shape.
+        let q = Tensor::f32(&[4, 8], vec![0.0; 32]).unwrap();
+        let k = Tensor::f32(&[4, 8], vec![1.0; 32]).unwrap();
+        let v = Tensor::f32(&[5, 8], vec![2.0; 40]).unwrap();
+        assert_eq!(
+            QkvBatch::separate(q.clone(), k.clone(), v).unwrap_err().code(),
+            "bad_shape"
+        );
+        let v = Tensor::f32(&[4, 8], vec![2.0; 32]).unwrap();
+        let s = QkvBatch::separate(q, k, v).unwrap();
+        assert_eq!((s.batch(), s.seq_len(), s.dim()), (1, 4, 8));
+        assert_eq!(s.tensors().len(), 3);
+    }
+
+    #[test]
+    fn valid_rows_resolution() {
+        assert_eq!(resolve_valid_rows(None, 4).unwrap(), 4);
+        assert_eq!(resolve_valid_rows(Some(2), 4).unwrap(), 2);
+        assert_eq!(resolve_valid_rows(Some(4), 4).unwrap(), 4);
+        assert_eq!(resolve_valid_rows(Some(0), 4).unwrap_err().code(), "bad_shape");
+        assert_eq!(resolve_valid_rows(Some(5), 4).unwrap_err().code(), "bad_shape");
+    }
+
+    #[test]
+    fn response_accessors() {
+        let t = Tensor::f32(&[1, 2], vec![1.0, 2.0]).unwrap();
+        let r = ServiceResponse::Attention { out: t.clone() };
+        assert_eq!(r.clone().into_tensor().unwrap(), t);
+        assert_eq!(r.into_tensors().len(), 1);
+        let r = ServiceResponse::Bound { binding: BindingId::from("m") };
+        assert!(r.clone().into_tensor().is_err());
+        assert!(r.into_tensors().is_empty());
+        let s = ServiceResponse::Stats(ServiceStats::default());
+        assert!(s.into_stats().is_ok());
+    }
+}

@@ -1,0 +1,730 @@
+//! Wire protocol: [`ServiceRequest`]/[`ServiceResponse`] ⇄ HTTP+JSON.
+//!
+//! One encode/parse pair per direction, shared by the network server
+//! (`coordinator::netserver`) and its loopback client, so the two can
+//! never drift. The JSON schemas, endpoints, status mapping, and error
+//! codes are specified in `docs/PROTOCOL.md`; every body carries a
+//! `version` field ([`crate::service::PROTOCOL_VERSION`]).
+//!
+//! Tensors cross the wire as `{"dtype": "f32"|"i32", "shape": [..],
+//! "data": [..]}` with row-major data. f32 payloads round-trip exactly
+//! (JSON numbers are f64 and every f32 is representable).
+
+use crate::runtime::tensor::Tensor;
+use crate::service::{
+    BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse, ServiceResult,
+    ServiceStats, PROTOCOL_VERSION,
+};
+use crate::util::json::Value;
+
+/// Endpoint of [`ServiceRequest::Attention`].
+pub const EP_ATTENTION: &str = "/v1/attention";
+/// Endpoint of [`ServiceRequest::ModelForward`].
+pub const EP_MODEL_FORWARD: &str = "/v1/model/forward";
+/// Endpoint of [`ServiceRequest::BindCheckpoint`] / [`ServiceRequest::BindInit`].
+pub const EP_BIND: &str = "/v1/bind";
+/// Endpoint of [`ServiceRequest::Artifact`].
+pub const EP_ARTIFACT: &str = "/v1/artifact";
+/// Endpoint of [`ServiceRequest::Stats`].
+pub const EP_STATS: &str = "/v1/stats";
+/// Liveness probe (handled by the server, no engine round-trip).
+pub const EP_HEALTH: &str = "/v1/healthz";
+/// Clean-shutdown endpoint (handled by the server).
+pub const EP_SHUTDOWN: &str = "/v1/admin/shutdown";
+
+// ---------------------------------------------------------------------------
+// Tensors
+// ---------------------------------------------------------------------------
+
+/// Emit a tensor as its wire JSON object.
+pub fn tensor_to_json(t: &Tensor) -> Value {
+    let shape = Value::Arr(t.shape().iter().map(|&d| Value::num(d as f64)).collect());
+    let (dtype, data) = match t {
+        Tensor::F32 { data, .. } => {
+            ("f32", Value::Arr(data.iter().map(|&x| Value::num(x as f64)).collect()))
+        }
+        Tensor::I32 { data, .. } => {
+            ("i32", Value::Arr(data.iter().map(|&x| Value::num(x as f64)).collect()))
+        }
+    };
+    Value::obj([("dtype", Value::str(dtype)), ("shape", shape), ("data", data)])
+}
+
+/// Parse a wire JSON object into a tensor (shape × dtype × data checked).
+pub fn tensor_from_json(v: &Value) -> ServiceResult<Tensor> {
+    let bad = ServiceError::BadShape;
+    let obj = v.as_obj().map_err(|e| bad(format!("tensor: {e}")))?;
+    let dtype = obj
+        .get("dtype")
+        .map(|d| d.as_str().map_err(|e| bad(format!("tensor dtype: {e}"))))
+        .transpose()?
+        .unwrap_or("f32");
+    let shape: Vec<usize> = v
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .map_err(|e| bad(format!("tensor shape: {e}")))?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<_, _>>()
+        .map_err(|e| bad(format!("tensor shape: {e}")))?;
+    // Borrowed, not cloned: data arrays are the bulk of a request body.
+    let data = v
+        .get("data")
+        .and_then(|d| d.as_arr())
+        .map_err(|e| bad(format!("tensor data: {e}")))?;
+    // Checked element count: a crafted shape whose product wraps usize
+    // could otherwise "match" a short data array and smuggle impossible
+    // dims past every later size check (Tensor::f32 multiplies unchecked).
+    let elements = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| bad(format!("tensor shape {shape:?} overflows the element count")))?;
+    if elements != data.len() {
+        return Err(bad(format!(
+            "tensor shape {shape:?} wants {elements} values, got {}",
+            data.len()
+        )));
+    }
+    match dtype {
+        "f32" => {
+            let vals: Vec<f32> = data
+                .iter()
+                .map(|x| {
+                    let f = x.as_f64().map_err(|e| bad(format!("tensor data: {e}")))?;
+                    let v = f as f32;
+                    // JSON numbers are finite f64; a finite value that
+                    // overflows to ±inf in f32 is out of range, not data.
+                    if !v.is_finite() {
+                        return Err(bad(format!("tensor data: {f} is out of f32 range")));
+                    }
+                    Ok(v)
+                })
+                .collect::<Result<_, _>>()?;
+            Tensor::f32(&shape, vals).map_err(|e| bad(e.to_string()))
+        }
+        "i32" => {
+            let vals: Vec<i32> = data
+                .iter()
+                .map(|x| {
+                    let f = x.as_f64().map_err(|e| bad(format!("tensor data: {e}")))?;
+                    if f.fract() != 0.0 || f < i32::MIN as f64 || f > i32::MAX as f64 {
+                        return Err(bad(format!("tensor data: {f} is not an i32")));
+                    }
+                    Ok(f as i32)
+                })
+                .collect::<Result<_, _>>()?;
+            Tensor::i32(&shape, vals).map_err(|e| bad(e.to_string()))
+        }
+        other => Err(bad(format!("unsupported tensor dtype {other:?} (want f32 or i32)"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------------
+
+/// Encode a request as its `(endpoint, body)` wire pair.
+pub fn encode_request(req: &ServiceRequest) -> (&'static str, Value) {
+    let mut body: Vec<(String, Value)> =
+        vec![("version".into(), Value::num(PROTOCOL_VERSION as f64))];
+    let path = match req {
+        ServiceRequest::Attention { op, qkv, valid_rows } => {
+            body.push(("op".into(), Value::str(op.as_str())));
+            let tensors = qkv.tensors();
+            if tensors.len() == 1 {
+                body.push(("qkv".into(), tensor_to_json(tensors[0])));
+            } else {
+                body.push(("q".into(), tensor_to_json(tensors[0])));
+                body.push(("k".into(), tensor_to_json(tensors[1])));
+                body.push(("v".into(), tensor_to_json(tensors[2])));
+            }
+            if let Some(v) = valid_rows {
+                body.push(("valid_rows".into(), Value::num(*v as f64)));
+            }
+            EP_ATTENTION
+        }
+        ServiceRequest::ModelForward { binding, tokens, valid_rows } => {
+            body.push(("binding".into(), Value::str(binding.as_str())));
+            body.push(("tokens".into(), tensor_to_json(tokens)));
+            if let Some(v) = valid_rows {
+                body.push(("valid_rows".into(), Value::num(*v as f64)));
+            }
+            EP_MODEL_FORWARD
+        }
+        ServiceRequest::BindCheckpoint { binding, params } => {
+            body.push(("binding".into(), Value::str(binding.as_str())));
+            body.push(("params".into(), Value::Arr(params.iter().map(tensor_to_json).collect())));
+            EP_BIND
+        }
+        ServiceRequest::BindInit { binding, init_op, seed, param_count } => {
+            body.push(("binding".into(), Value::str(binding.as_str())));
+            body.push((
+                "init".into(),
+                Value::obj([
+                    ("op", Value::str(init_op.clone())),
+                    ("seed", Value::num(*seed as f64)),
+                    ("param_count", Value::num(*param_count as f64)),
+                ]),
+            ));
+            EP_BIND
+        }
+        ServiceRequest::Artifact { artifact, binding, inputs } => {
+            body.push(("artifact".into(), Value::str(artifact.clone())));
+            if let Some(b) = binding {
+                body.push(("binding".into(), Value::str(b.as_str())));
+            }
+            body.push(("inputs".into(), Value::Arr(inputs.iter().map(tensor_to_json).collect())));
+            EP_ARTIFACT
+        }
+        ServiceRequest::Stats { reset } => {
+            body.push(("reset".into(), Value::Bool(*reset)));
+            EP_STATS
+        }
+    };
+    (path, Value::obj(body))
+}
+
+fn check_version(body: &Value) -> ServiceResult<()> {
+    let v = body
+        .get("version")
+        .and_then(|v| v.as_usize())
+        .map_err(|e| ServiceError::BadRequest(format!("protocol version: {e}")))?;
+    if v as u64 != PROTOCOL_VERSION {
+        return Err(ServiceError::BadRequest(format!(
+            "unsupported protocol version {v} (this server speaks {PROTOCOL_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+fn req_str(body: &Value, key: &str) -> ServiceResult<String> {
+    body.get(key)
+        .and_then(|v| v.as_str().map(str::to_string))
+        .map_err(|e| ServiceError::BadRequest(e.to_string()))
+}
+
+fn opt_valid_rows(body: &Value) -> ServiceResult<Option<usize>> {
+    body.opt("valid_rows")
+        .map(|v| v.as_usize().map_err(|e| ServiceError::BadRequest(format!("valid_rows: {e}"))))
+        .transpose()
+}
+
+/// Parse an `(endpoint, body)` pair back into a typed request. This is
+/// the service boundary of the network front: past this point there are
+/// no raw op strings or marker tensors, only validated typed requests.
+pub fn parse_request(path: &str, body: &Value) -> ServiceResult<ServiceRequest> {
+    check_version(body)?;
+    match path {
+        EP_ATTENTION => {
+            let op = KernelId::parse(&req_str(body, "op")?)?;
+            let qkv = match body.opt("qkv") {
+                Some(fused) => QkvBatch::fused(tensor_from_json(fused)?)?,
+                None => {
+                    let get = |k: &str| -> ServiceResult<Tensor> {
+                        tensor_from_json(body.opt(k).ok_or_else(|| {
+                            ServiceError::BadRequest(format!(
+                                "attention wants \"qkv\" or \"q\"/\"k\"/\"v\" (missing {k:?})"
+                            ))
+                        })?)
+                    };
+                    QkvBatch::separate(get("q")?, get("k")?, get("v")?)?
+                }
+            };
+            Ok(ServiceRequest::Attention { op, qkv, valid_rows: opt_valid_rows(body)? })
+        }
+        EP_MODEL_FORWARD => {
+            let binding = BindingId::new(req_str(body, "binding")?);
+            let tokens = tensor_from_json(body.get("tokens").map_err(|e| {
+                ServiceError::BadRequest(e.to_string())
+            })?)?;
+            Ok(ServiceRequest::ModelForward { binding, tokens, valid_rows: opt_valid_rows(body)? })
+        }
+        EP_BIND => {
+            let binding = BindingId::new(req_str(body, "binding")?);
+            match (body.opt("init"), body.opt("params")) {
+                (Some(init), None) => Ok(ServiceRequest::BindInit {
+                    binding,
+                    init_op: req_str(init, "op")?,
+                    seed: {
+                        let s = init
+                            .get("seed")
+                            .and_then(|v| v.as_f64())
+                            .map_err(|e| ServiceError::BadRequest(format!("init seed: {e}")))?;
+                        if s.fract() != 0.0 || s < i32::MIN as f64 || s > i32::MAX as f64 {
+                            return Err(ServiceError::BadRequest(format!(
+                                "init seed {s} is not an i32"
+                            )));
+                        }
+                        s as i32
+                    },
+                    param_count: init
+                        .opt("param_count")
+                        .map(|v| v.as_usize())
+                        .transpose()
+                        .map_err(|e| ServiceError::BadRequest(format!("param_count: {e}")))?
+                        .unwrap_or(0),
+                }),
+                (None, Some(params)) => {
+                    let tensors = params
+                        .as_arr()
+                        .map_err(|e| ServiceError::BadRequest(e.to_string()))?
+                        .iter()
+                        .map(tensor_from_json)
+                        .collect::<ServiceResult<Vec<_>>>()?;
+                    Ok(ServiceRequest::BindCheckpoint { binding, params: tensors })
+                }
+                _ => Err(ServiceError::BadRequest(
+                    "bind wants exactly one of \"init\" or \"params\"".into(),
+                )),
+            }
+        }
+        EP_ARTIFACT => {
+            let artifact = req_str(body, "artifact")?;
+            let binding = body
+                .opt("binding")
+                .map(|b| b.as_str().map(BindingId::from))
+                .transpose()
+                .map_err(|e| ServiceError::BadRequest(e.to_string()))?;
+            let inputs = body
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .map_err(|e| ServiceError::BadRequest(e.to_string()))?
+                .iter()
+                .map(tensor_from_json)
+                .collect::<ServiceResult<Vec<_>>>()?;
+            Ok(ServiceRequest::Artifact { artifact, binding, inputs })
+        }
+        EP_STATS => {
+            let reset = body
+                .opt("reset")
+                .map(|v| v.as_bool())
+                .transpose()
+                .map_err(|e| ServiceError::BadRequest(format!("reset: {e}")))?
+                .unwrap_or(false);
+            Ok(ServiceRequest::Stats { reset })
+        }
+        other => Err(ServiceError::BadRequest(format!("unknown endpoint {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------------
+
+fn stats_to_json(s: &ServiceStats) -> Value {
+    let runtime = Value::obj([
+        ("compiles", Value::num(s.runtime.compiles as f64)),
+        ("compile_secs", Value::num(s.runtime.compile_secs)),
+        ("executions", Value::num(s.runtime.executions as f64)),
+        ("execute_secs", Value::num(s.runtime.execute_secs)),
+    ]);
+    let mita = match &s.mita {
+        None => Value::Null,
+        Some(m) => Value::obj([
+            ("calls", Value::num(m.calls as f64)),
+            ("queries", Value::num(m.queries as f64)),
+            ("overflow", Value::num(m.overflow as f64)),
+            ("cap", Value::num(m.cap as f64)),
+            ("peak_imbalance_milli", Value::num(m.peak_imbalance_milli as f64)),
+            (
+                "expert_counts",
+                Value::Arr(m.expert_counts.iter().map(|&c| Value::num(c as f64)).collect()),
+            ),
+        ]),
+    };
+    Value::obj([("runtime", runtime), ("mita", mita)])
+}
+
+fn stats_from_json(v: &Value) -> ServiceResult<ServiceStats> {
+    let bad = |e: anyhow::Error| ServiceError::BadRequest(format!("stats: {e}"));
+    let rt = v.get("runtime").map_err(bad)?;
+    let runtime = crate::runtime::client::RuntimeStats {
+        compiles: rt.get("compiles").and_then(|x| x.as_usize()).map_err(bad)?,
+        compile_secs: rt.get("compile_secs").and_then(|x| x.as_f64()).map_err(bad)?,
+        executions: rt.get("executions").and_then(|x| x.as_usize()).map_err(bad)?,
+        execute_secs: rt.get("execute_secs").and_then(|x| x.as_f64()).map_err(bad)?,
+    };
+    let mita = match v.opt("mita") {
+        None => None,
+        Some(m) => {
+            let mut stats = crate::kernels::MitaStats {
+                calls: m.get("calls").and_then(|x| x.as_usize()).map_err(bad)?,
+                queries: m.get("queries").and_then(|x| x.as_usize()).map_err(bad)?,
+                overflow: m.get("overflow").and_then(|x| x.as_usize()).map_err(bad)?,
+                cap: m.get("cap").and_then(|x| x.as_usize()).map_err(bad)?,
+                peak_imbalance_milli: m
+                    .get("peak_imbalance_milli")
+                    .and_then(|x| x.as_usize())
+                    .map_err(bad)?,
+                expert_counts: Vec::new(),
+            };
+            stats.expert_counts = m
+                .get("expert_counts")
+                .and_then(|x| x.as_arr())
+                .map_err(bad)?
+                .iter()
+                .map(|c| c.as_usize())
+                .collect::<Result<_, _>>()
+                .map_err(bad)?;
+            Some(stats)
+        }
+    };
+    Ok(ServiceStats { runtime, mita })
+}
+
+/// Encode a successful response body.
+pub fn encode_response(resp: &ServiceResponse) -> Value {
+    let mut body: Vec<(String, Value)> = vec![
+        ("version".into(), Value::num(PROTOCOL_VERSION as f64)),
+        ("ok".into(), Value::Bool(true)),
+        ("kind".into(), Value::str(resp.kind())),
+    ];
+    match resp {
+        ServiceResponse::Attention { out } => body.push(("out".into(), tensor_to_json(out))),
+        ServiceResponse::ModelForward { logits } => {
+            body.push(("logits".into(), tensor_to_json(logits)))
+        }
+        ServiceResponse::Bound { binding } => {
+            body.push(("binding".into(), Value::str(binding.as_str())))
+        }
+        ServiceResponse::Artifact { outputs } => {
+            body.push(("outputs".into(), Value::Arr(outputs.iter().map(tensor_to_json).collect())))
+        }
+        ServiceResponse::Stats(s) => body.push(("stats".into(), stats_to_json(s))),
+    }
+    Value::obj(body)
+}
+
+/// Encode an error response body (the HTTP status comes from
+/// [`ServiceError::http_status`]; the body repeats the stable code).
+pub fn encode_error(err: &ServiceError) -> Value {
+    Value::obj([
+        ("version".into(), Value::num(PROTOCOL_VERSION as f64)),
+        ("ok".into(), Value::Bool(false)),
+        (
+            "error".into(),
+            Value::obj([
+                ("code", Value::str(err.code())),
+                ("message", Value::str(err.message())),
+            ]),
+        ),
+    ])
+}
+
+/// Parse a response body back into the typed result — errors come back as
+/// the same [`ServiceError`] the server produced.
+pub fn parse_response(body: &Value) -> ServiceResult<ServiceResponse> {
+    check_version(body)?;
+    let ok = body
+        .get("ok")
+        .and_then(|v| v.as_bool())
+        .map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?;
+    if !ok {
+        let err = body
+            .get("error")
+            .map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?;
+        let code = err
+            .get("code")
+            .and_then(|c| c.as_str().map(str::to_string))
+            .map_err(|e| ServiceError::BadRequest(format!("error code: {e}")))?;
+        let message = err
+            .opt("message")
+            .and_then(|m| m.as_str().ok())
+            .unwrap_or("")
+            .to_string();
+        return Err(ServiceError::from_code(&code, message));
+    }
+    let kind = body
+        .get("kind")
+        .and_then(|k| k.as_str().map(str::to_string))
+        .map_err(|e| ServiceError::BadRequest(format!("response kind: {e}")))?;
+    let get_tensor = |key: &str| -> ServiceResult<Tensor> {
+        tensor_from_json(
+            body.get(key).map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?,
+        )
+    };
+    match kind.as_str() {
+        "attention" => Ok(ServiceResponse::Attention { out: get_tensor("out")? }),
+        "model_forward" => Ok(ServiceResponse::ModelForward { logits: get_tensor("logits")? }),
+        "bound" => Ok(ServiceResponse::Bound {
+            binding: BindingId::new(req_str(body, "binding")?),
+        }),
+        "artifact" => {
+            let outputs = body
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?
+                .iter()
+                .map(tensor_from_json)
+                .collect::<ServiceResult<Vec<_>>>()?;
+            Ok(ServiceResponse::Artifact { outputs })
+        }
+        "stats" => {
+            let s = body
+                .get("stats")
+                .map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?;
+            Ok(ServiceResponse::Stats(stats_from_json(s)?))
+        }
+        other => Err(ServiceError::BadRequest(format!("unknown response kind {other:?}"))),
+    }
+}
+
+/// Which endpoints exist (the network server 404s everything else before
+/// engine submission).
+pub fn known_endpoints() -> &'static [&'static str] {
+    &[EP_ATTENTION, EP_MODEL_FORWARD, EP_BIND, EP_ARTIFACT, EP_STATS, EP_HEALTH, EP_SHUTDOWN]
+}
+
+fn tensor_is_finite(t: &Tensor) -> bool {
+    match t.as_f32() {
+        Ok(data) => data.iter().all(|x| x.is_finite()),
+        Err(_) => true, // i32 tensors are always representable
+    }
+}
+
+/// Non-finite floats are not representable in JSON (they would render as
+/// `null` and corrupt the payload client-side), so a response carrying
+/// them must be surfaced as a typed internal error instead of a 200 —
+/// the network front runs this check before encoding.
+pub fn check_encodable(resp: &ServiceResponse) -> ServiceResult<()> {
+    if resp.tensors().into_iter().all(tensor_is_finite) {
+        Ok(())
+    } else {
+        Err(ServiceError::Internal(
+            "response tensor contains non-finite values (not representable in JSON)".into(),
+        ))
+    }
+}
+
+/// Request-side twin of [`check_encodable`]: an outbound request whose
+/// tensors carry non-finite floats would corrupt on the wire (rendered
+/// as `null`), so the client rejects it locally with a `bad_shape`
+/// naming the actual problem, instead of letting the server bounce an
+/// opaque parse error.
+pub fn check_request_encodable(req: &ServiceRequest) -> ServiceResult<()> {
+    let tensors: Vec<&Tensor> = match req {
+        ServiceRequest::Attention { qkv, .. } => qkv.tensors(),
+        ServiceRequest::ModelForward { tokens, .. } => vec![tokens],
+        ServiceRequest::BindCheckpoint { params, .. } => params.iter().collect(),
+        ServiceRequest::Artifact { inputs, .. } => inputs.iter().collect(),
+        ServiceRequest::BindInit { .. } | ServiceRequest::Stats { .. } => Vec::new(),
+    };
+    if tensors.into_iter().all(tensor_is_finite) {
+        Ok(())
+    } else {
+        Err(ServiceError::BadShape(
+            "request tensor contains non-finite values (not representable in JSON)".into(),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(req: ServiceRequest) -> ServiceRequest {
+        let (path, body) = encode_request(&req);
+        let text = body.render();
+        let parsed = Value::parse(&text).unwrap();
+        parse_request(path, &parsed).unwrap()
+    }
+
+    #[test]
+    fn tensor_roundtrip_exact() {
+        let t = Tensor::f32(&[2, 3], vec![0.1, -1.5, 3.25, 1.0 / 3.0, 0.0, -0.0]).unwrap();
+        let back = tensor_from_json(&Value::parse(&tensor_to_json(&t).render()).unwrap()).unwrap();
+        assert_eq!(back, t);
+        let t = Tensor::i32(&[3], vec![-1, 0, i32::MAX]).unwrap();
+        let back = tensor_from_json(&Value::parse(&tensor_to_json(&t).render()).unwrap()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn tensor_parse_rejects_bad_payloads() {
+        for text in [
+            r#"{"shape": [2], "data": [1]}"#,                          // len mismatch
+            r#"{"dtype": "i32", "shape": [1], "data": [1.5]}"#,        // non-integer i32
+            r#"{"dtype": "f64", "shape": [1], "data": [1]}"#,          // unknown dtype
+            r#"{"shape": "x", "data": []}"#,                           // shape not array
+            r#"[1, 2]"#,                                               // not an object
+            r#"{"shape": [1], "data": [1e39]}"#,                       // overflows f32
+            // Shape whose element product wraps usize to 0, "matching"
+            // the empty data array.
+            r#"{"shape": [9223372036854775807, 4], "data": []}"#,
+        ] {
+            let v = Value::parse(text).unwrap();
+            assert_eq!(tensor_from_json(&v).unwrap_err().code(), "bad_shape", "{text}");
+        }
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let fused = Tensor::f32(&[2, 3, 4, 2], vec![0.5; 48]).unwrap();
+        let req = ServiceRequest::Attention {
+            op: KernelId::Mita,
+            qkv: QkvBatch::fused(fused).unwrap(),
+            valid_rows: Some(1),
+        };
+        match roundtrip_req(req) {
+            ServiceRequest::Attention { op, qkv, valid_rows } => {
+                assert_eq!(op, KernelId::Mita);
+                assert_eq!((qkv.batch(), qkv.seq_len(), qkv.dim()), (2, 4, 2));
+                assert_eq!(valid_rows, Some(1));
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        let tokens = Tensor::i32(&[1, 4], vec![1, 2, 3, 0]).unwrap();
+        let req = ServiceRequest::ModelForward {
+            binding: BindingId::from("model"),
+            tokens: tokens.clone(),
+            valid_rows: None,
+        };
+        match roundtrip_req(req) {
+            ServiceRequest::ModelForward { binding, tokens: t, valid_rows } => {
+                assert_eq!(binding.as_str(), "model");
+                assert_eq!(t, tokens);
+                assert_eq!(valid_rows, None);
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        let req = ServiceRequest::BindInit {
+            binding: BindingId::from("m"),
+            init_op: "model.init".into(),
+            seed: -3,
+            param_count: 7,
+        };
+        match roundtrip_req(req) {
+            ServiceRequest::BindInit { binding, init_op, seed, param_count } => {
+                assert_eq!((binding.as_str(), init_op.as_str()), ("m", "model.init"));
+                assert_eq!((seed, param_count), (-3, 7));
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        let req = ServiceRequest::Artifact {
+            artifact: "predict".into(),
+            binding: Some(BindingId::from("w")),
+            inputs: vec![Tensor::scalar_i32(5)],
+        };
+        match roundtrip_req(req) {
+            ServiceRequest::Artifact { artifact, binding, inputs } => {
+                assert_eq!(artifact, "predict");
+                assert_eq!(binding.unwrap().as_str(), "w");
+                assert_eq!(inputs.len(), 1);
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        match roundtrip_req(ServiceRequest::Stats { reset: true }) {
+            ServiceRequest::Stats { reset } => assert!(reset),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn request_parse_taxonomy() {
+        // Unknown endpoint.
+        let body = Value::parse(r#"{"version": 1}"#).unwrap();
+        assert_eq!(parse_request("/v1/nope", &body).unwrap_err().code(), "bad_request");
+        // Missing / wrong protocol version.
+        let body = Value::parse(r#"{"op": "attn.mita"}"#).unwrap();
+        assert_eq!(parse_request(EP_ATTENTION, &body).unwrap_err().code(), "bad_request");
+        let body = Value::parse(r#"{"version": 99, "op": "attn.mita"}"#).unwrap();
+        assert_eq!(parse_request(EP_ATTENTION, &body).unwrap_err().code(), "bad_request");
+        // Wrong-rank qkv surfaces as bad_shape through the typed layer.
+        let body = Value::parse(
+            r#"{"version": 1, "op": "attn.mita",
+                "qkv": {"dtype": "f32", "shape": [2, 2], "data": [0, 0, 0, 0]}}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_request(EP_ATTENTION, &body).unwrap_err().code(), "bad_shape");
+        // Bind with both init and params is ambiguous.
+        let body = Value::parse(
+            r#"{"version": 1, "binding": "m",
+                "init": {"op": "model.init", "seed": 0}, "params": []}"#,
+        )
+        .unwrap();
+        assert_eq!(parse_request(EP_BIND, &body).unwrap_err().code(), "bad_request");
+        // Non-integer / out-of-range init seeds are rejected, not cast.
+        for seed in ["7.9", "1e12", "-2147483649"] {
+            let body = Value::parse(&format!(
+                r#"{{"version": 1, "binding": "m", "init": {{"op": "model.init", "seed": {seed}}}}}"#
+            ))
+            .unwrap();
+            assert_eq!(parse_request(EP_BIND, &body).unwrap_err().code(), "bad_request", "{seed}");
+        }
+    }
+
+    #[test]
+    fn non_finite_tensors_are_not_encodable() {
+        let ok = ServiceResponse::Attention { out: Tensor::f32(&[2], vec![1.0, 2.0]).unwrap() };
+        assert!(check_encodable(&ok).is_ok());
+        let bad = ServiceResponse::ModelForward {
+            logits: Tensor::f32(&[2], vec![1.0, f32::NAN]).unwrap(),
+        };
+        assert_eq!(check_encodable(&bad).unwrap_err().code(), "internal");
+        assert!(check_encodable(&ServiceResponse::Stats(ServiceStats::default())).is_ok());
+
+        // Request-side twin: rejected locally as bad_shape.
+        let inf = Tensor::f32(&[3, 1, 1], vec![1.0, f32::INFINITY, 0.0]).unwrap();
+        let req = ServiceRequest::Attention {
+            op: KernelId::Mita,
+            qkv: QkvBatch::fused(inf).unwrap(),
+            valid_rows: None,
+        };
+        assert_eq!(check_request_encodable(&req).unwrap_err().code(), "bad_shape");
+        assert!(check_request_encodable(&ServiceRequest::Stats { reset: false }).is_ok());
+    }
+
+    #[test]
+    fn stats_without_mita_roundtrip_as_none() {
+        // Artifact backends report `"mita": null`; Value::opt maps JSON
+        // null to absent, so the client parses it back to None.
+        let body = encode_response(&ServiceResponse::Stats(ServiceStats::default()));
+        let text = body.render();
+        assert!(text.contains("\"mita\":null"), "{text}");
+        match parse_response(&Value::parse(&text).unwrap()).unwrap() {
+            ServiceResponse::Stats(got) => assert!(got.mita.is_none()),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn response_roundtrips_including_errors() {
+        let out = Tensor::f32(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let body = encode_response(&ServiceResponse::Attention { out: out.clone() });
+        match parse_response(&Value::parse(&body.render()).unwrap()).unwrap() {
+            ServiceResponse::Attention { out: got } => assert_eq!(got, out),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        let stats = ServiceStats {
+            runtime: crate::runtime::client::RuntimeStats {
+                compiles: 1,
+                compile_secs: 0.25,
+                executions: 9,
+                execute_secs: 1.5,
+            },
+            mita: Some({
+                let mut m = crate::kernels::MitaStats::default();
+                m.record(8, 2, &[5, 3]);
+                m
+            }),
+        };
+        let body = encode_response(&ServiceResponse::Stats(stats.clone()));
+        match parse_response(&Value::parse(&body.render()).unwrap()).unwrap() {
+            ServiceResponse::Stats(got) => {
+                assert_eq!(got.runtime.executions, 9);
+                assert_eq!(got.mita.unwrap(), stats.mita.unwrap());
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        let err = ServiceError::UnboundParams("no model bound under \"m\"".into());
+        let body = encode_error(&err);
+        let got = parse_response(&Value::parse(&body.render()).unwrap()).unwrap_err();
+        assert_eq!(got, err);
+    }
+}

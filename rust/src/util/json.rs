@@ -1,9 +1,11 @@
-//! Minimal recursive-descent JSON parser (std-only).
+//! Minimal recursive-descent JSON parser **and emitter** (std-only).
 //!
 //! The build environment is fully offline with no serde in the vendored
-//! crate set, so the manifest contract (artifacts/manifest.json) is parsed
-//! with this ~300-line module instead. Supports the full JSON grammar
-//! except `\u` surrogate pairs beyond the BMP (the manifest is ASCII).
+//! crate set, so the manifest contract (artifacts/manifest.json) and the
+//! service wire protocol (docs/PROTOCOL.md) are handled with this module
+//! instead. Supports the full JSON grammar except `\u` surrogate pairs
+//! beyond the BMP. [`Value::render`] emits compact JSON with object keys
+//! sorted, so output is deterministic and diffable.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -95,6 +97,102 @@ impl Value {
             _ => None,
         }
     }
+
+    // ---- builders ---------------------------------------------------------
+
+    /// An object from `(key, value)` pairs.
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Value)>) -> Value {
+        Value::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// A string value.
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    /// A number value from anything convertible to f64. Integers up to
+    /// 2^53 and every f32 round-trip exactly through [`Value::render`].
+    pub fn num(n: impl Into<f64>) -> Value {
+        Value::Num(n.into())
+    }
+
+    // ---- emit -------------------------------------------------------------
+
+    /// Compact JSON text. Object keys are emitted sorted so the output is
+    /// deterministic; non-finite numbers (not representable in JSON)
+    /// render as `null`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => write_num(*n, out),
+            Value::Str(s) => write_str(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort_unstable();
+                out.push('{');
+                for (i, k) in keys.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    m[*k].write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    use std::fmt::Write as _;
+    let negative_zero = n == 0.0 && n.is_sign_negative();
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.0e15 && !negative_zero {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        // `{}` on f64 prints the shortest representation that round-trips
+        // (negative zero takes this branch too — "-0" is valid JSON and
+        // keeps the sign bit, which the i64 cast would drop).
+        let _ = write!(out, "{n}");
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 impl fmt::Display for Value {
@@ -322,6 +420,36 @@ mod tests {
         assert_eq!(Value::parse("42").unwrap().as_usize().unwrap(), 42);
         assert!(Value::parse("-1").unwrap().as_usize().is_err());
         assert!(Value::parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_and_sorts_keys() {
+        let v = Value::obj([
+            ("b", Value::num(2.0)),
+            ("a", Value::Arr(vec![Value::num(1.5), Value::Bool(true), Value::Null])),
+            ("s", Value::str("he said \"hi\"\n")),
+        ]);
+        let text = v.render();
+        assert_eq!(text, r#"{"a":[1.5,true,null],"b":2,"s":"he said \"hi\"\n"}"#);
+        assert_eq!(Value::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn render_numbers_roundtrip() {
+        for x in [0.0f64, -1.0, 42.0, 0.1, -3.5e2, 1.0e16, f32::MAX as f64, 1e-7] {
+            let text = Value::Num(x).render();
+            assert_eq!(Value::parse(&text).unwrap().as_f64().unwrap(), x, "{text}");
+        }
+        // f32 payloads survive the f64 wire format exactly — including
+        // the sign bit of negative zero (bitwise comparison; -0.0 == 0.0
+        // under float equality would mask losing it).
+        for x in [0.1f32, f32::MIN_POSITIVE, 1.0 / 3.0, -2.718_281_7, -0.0] {
+            let text = Value::Num(x as f64).render();
+            let back = Value::parse(&text).unwrap().as_f64().unwrap() as f32;
+            assert_eq!(back.to_bits(), x.to_bits(), "{text}");
+        }
+        assert_eq!(Value::Num(-0.0).render(), "-0");
+        assert_eq!(Value::Num(f64::NAN).render(), "null");
     }
 
     #[test]

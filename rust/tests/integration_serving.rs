@@ -28,16 +28,17 @@ fn engine_runs_jobs_and_shuts_down() {
     let engine = Engine::spawn("artifacts".into(), vec![art.clone()]).unwrap();
     let handle = engine.handle();
     let out = handle
-        .run(&art, vec![mita::runtime::Tensor::scalar_i32(0)])
+        .run_artifact(&art, None, vec![mita::runtime::Tensor::scalar_i32(0)])
         .unwrap();
     assert!(!out.is_empty());
     // Concurrent submissions from two threads.
     let h2 = engine.handle();
     let art2 = art.clone();
     let t = std::thread::spawn(move || {
-        h2.run(&art2, vec![mita::runtime::Tensor::scalar_i32(1)]).unwrap().len()
+        h2.run_artifact(&art2, None, vec![mita::runtime::Tensor::scalar_i32(1)]).unwrap().len()
     });
-    let n1 = handle.run(&art, vec![mita::runtime::Tensor::scalar_i32(2)]).unwrap().len();
+    let n1 =
+        handle.run_artifact(&art, None, vec![mita::runtime::Tensor::scalar_i32(2)]).unwrap().len();
     let n2 = t.join().unwrap();
     assert_eq!(n1, n2);
     engine.shutdown();
@@ -49,8 +50,8 @@ fn engine_reports_unknown_artifact() {
         return;
     }
     let engine = Engine::spawn("artifacts".into(), vec![]).unwrap();
-    let err = engine.handle().run("no_such_artifact", vec![]);
-    assert!(err.is_err());
+    let err = engine.handle().run_artifact("no_such_artifact", None, vec![]).unwrap_err();
+    assert_eq!(err.code(), "unknown_op");
     engine.shutdown();
 }
 
@@ -75,6 +76,7 @@ fn closed_loop_serving_completes_all_requests() {
         requests: 40,
         rate: 0.0,
         queue_cap: 64,
+        max_inflight: 2,
         policy: BatchPolicy {
             max_batch: spec.train.batch_size,
             max_wait: Duration::from_millis(2),
@@ -112,6 +114,7 @@ fn open_loop_backpressure_rejects_under_overload() {
         requests: 200,
         rate: 100_000.0,
         queue_cap: 4,
+        max_inflight: 2,
         policy: BatchPolicy {
             max_batch: spec.train.batch_size,
             max_wait: Duration::from_millis(1),

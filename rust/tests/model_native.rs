@@ -3,12 +3,13 @@
 //! end-to-end serving over the LRA tasks through the engine.
 
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::{checkpoint, serve_model, Engine, ModelServeConfig};
+use mita::coordinator::{checkpoint, serve_model, Engine, ModelServeConfig, DEFAULT_MAX_INFLIGHT};
 use mita::data::lra;
 use mita::data::Split;
 use mita::kernels::{MitaKernelConfig, MitaStats, WorkspacePool, OP_ATTN_DENSE, OP_ATTN_MITA};
-use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_FORWARD, OP_MODEL_INIT};
+use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_INIT};
 use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+use mita::service::{BindingId, ServiceRequest};
 
 /// Tiny (seq_len, vocab) valid for every task: 64 is a perfect square
 /// (image/pathfinder), vocab from the canonical per-task table.
@@ -85,28 +86,35 @@ fn checkpoint_roundtrip_preserves_model_exactly() {
     let tensors = checkpoint::load(&path).unwrap();
     let attn = NativeAttnConfig::for_shape(64, 32, 4);
     let mut be = NativeBackend::new(attn);
-    be.bind_tensors("m", tensors).unwrap();
+    be.execute(ServiceRequest::BindCheckpoint { binding: BindingId::from("m"), params: tensors })
+        .unwrap();
     let x = Tensor::i32(&[2, 64], tokens).unwrap();
-    let out = be.run(OP_MODEL_FORWARD, Some("m"), &[x]).unwrap();
-    assert_eq!(out[0].shape(), &[2, model.cfg.classes]);
+    let out = be.run_model(&BindingId::from("m"), &x, None).unwrap();
+    assert_eq!(out.shape(), &[2, model.cfg.classes]);
 
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
-fn backend_model_op_matches_direct_forward_and_skips_padding() {
+fn backend_model_request_matches_direct_forward_and_skips_padding() {
     let task = lra::by_name("image", 64, 32, 9);
     let mcfg = ModelConfig::for_task(task.as_ref(), 32, 2, 2, OP_ATTN_MITA);
     let attn = NativeAttnConfig::for_shape(64, 32, 2).with_model(mcfg.clone());
     let mut be = NativeBackend::new(attn);
-    be.bind_init("m", OP_MODEL_INIT, 5, 0).unwrap();
+    be.execute(ServiceRequest::BindInit {
+        binding: BindingId::from("m"),
+        init_op: OP_MODEL_INIT.into(),
+        seed: 5,
+        param_count: 0,
+    })
+    .unwrap();
 
     let (bsz, valid) = (4usize, 2usize);
     let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 0, bsz);
     let x = Tensor::i32(&[bsz, 64], tokens.clone()).unwrap();
-    let marker = Tensor::i32(&[1], vec![valid as i32]).unwrap();
-    let out = be.run(OP_MODEL_FORWARD, Some("m"), &[x, marker]).unwrap();
-    let full = out[0].as_f32().unwrap();
+    // Typed valid_rows instead of the old one-element marker tensor.
+    let out = be.run_model(&BindingId::from("m"), &x, Some(valid)).unwrap();
+    let full = out.as_f32().unwrap();
     let classes = mcfg.classes;
 
     // Valid prefix matches the library-level forward on the same model.
@@ -115,7 +123,7 @@ fn backend_model_op_matches_direct_forward_and_skips_padding() {
     assert_eq!(&full[..valid * classes], want.as_slice());
     // Pad rows never reach the model (zero logits, no routed queries).
     assert!(full[valid * classes..].iter().all(|&x| x == 0.0));
-    let stats = be.mita_stats().unwrap();
+    let stats = be.mita_stats();
     assert_eq!(stats.queries, model.cfg.depth * valid * model.cfg.heads * 64);
 }
 
@@ -136,6 +144,7 @@ fn engine_serves_model_requests_end_to_end() {
         requests: 12,
         rate: 0.0,
         queue_cap: 64,
+        max_inflight: DEFAULT_MAX_INFLIGHT,
         policy: BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(2) },
     };
     let report = serve_model(&engine.handle(), &cfg).unwrap();

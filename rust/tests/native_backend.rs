@@ -15,7 +15,7 @@
 use std::time::Duration;
 
 use mita::coordinator::batcher::BatchPolicy;
-use mita::coordinator::server::{serve_native, NativeServeConfig};
+use mita::coordinator::server::{serve_native, NativeServeConfig, DEFAULT_MAX_INFLIGHT};
 use mita::coordinator::Engine;
 use mita::data::rng::Rng;
 use mita::kernels::linalg::{matmul_nt, scale_in_place};
@@ -25,11 +25,16 @@ use mita::kernels::{
 };
 use mita::mita::routing;
 use mita::runtime::backend::{OP_ATTN_DENSE, OP_ATTN_MITA};
-use mita::runtime::{Backend, BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+use mita::runtime::{BackendSpec, NativeAttnConfig, NativeBackend, Tensor};
+use mita::service::{KernelId, QkvBatch};
 use mita::util::prop::run_prop;
 
 fn rand_vec(rng: &mut Rng, len: usize, lo: f32, hi: f32) -> Vec<f32> {
     (0..len).map(|_| rng.range_f32(lo, hi)).collect()
+}
+
+fn fused_qkv(bsz: usize, n: usize, dim: usize, data: Vec<f32>) -> QkvBatch {
+    QkvBatch::fused(Tensor::f32(&[bsz, 3, n, dim], data).unwrap()).unwrap()
 }
 
 // ---------------------------------------------------------------------------
@@ -199,14 +204,14 @@ fn batched_dispatch_matches_per_sequence_kernels() {
     for (bsz, n, dim, heads) in [(5, 24, 16, 2), (3, 17, 12, 1), (2, 33, 24, 3)] {
         let per = n * dim;
         let data = rand_vec(&mut rng, bsz * 3 * per, -2.0, 2.0);
-        let fused = Tensor::f32(&[bsz, 3, n, dim], data.clone()).unwrap();
+        let fused = fused_qkv(bsz, n, dim, data.clone());
         let attn = NativeAttnConfig::for_shape(n, dim, heads);
         let cfg = attn.mita;
         let backend = NativeBackend::new(attn);
 
-        let got_mita = backend.run(OP_ATTN_MITA, None, &[fused.clone()]).unwrap();
-        let got_dense = backend.run(OP_ATTN_DENSE, None, &[fused]).unwrap();
-        assert_eq!(got_mita[0].shape(), &[bsz, n, dim]);
+        let got_mita = backend.run_attention(&KernelId::Mita, &fused, None).unwrap();
+        let got_dense = backend.run_attention(&KernelId::Dense, &fused, None).unwrap();
+        assert_eq!(got_mita.shape(), &[bsz, n, dim]);
 
         let mut ws = Workspace::new();
         let mut stats = MitaStats::default();
@@ -221,18 +226,18 @@ fn batched_dispatch_matches_per_sequence_kernels() {
             dense_attention_mh(q, k, v, n, heads, dim, &mut ws, out_ex);
         }
         assert_eq!(
-            got_mita[0].as_f32().unwrap(),
+            got_mita.as_f32().unwrap(),
             &want_mita[..],
             "mita batched != serial (b={bsz} n={n} dim={dim} heads={heads})"
         );
         assert_eq!(
-            got_dense[0].as_f32().unwrap(),
+            got_dense.as_f32().unwrap(),
             &want_dense[..],
             "dense batched != serial (b={bsz} n={n} dim={dim} heads={heads})"
         );
 
         // The backend recorded exactly the serial path's routing totals.
-        let bstats = backend.mita_stats().unwrap();
+        let bstats = backend.mita_stats();
         assert_eq!(bstats.queries, stats.queries);
         assert_eq!(bstats.overflow, stats.overflow);
         assert_eq!(bstats.calls, bsz * heads);
@@ -297,12 +302,12 @@ fn backend_reuses_pooled_workspaces_in_steady_state() {
     let (bsz, n, dim, heads) = (3usize, 32usize, 16usize, 4usize);
     let mut rng = Rng::new(12);
     let data = rand_vec(&mut rng, bsz * 3 * n * dim, -1.0, 1.0);
-    let fused = Tensor::f32(&[bsz, 3, n, dim], data).unwrap();
+    let fused = fused_qkv(bsz, n, dim, data);
     let backend = NativeBackend::new(NativeAttnConfig::for_shape(n, dim, heads));
 
     for _ in 0..4 {
-        backend.run(OP_ATTN_MITA, None, &[fused.clone()]).unwrap();
-        backend.run(OP_ATTN_DENSE, None, &[fused.clone()]).unwrap();
+        backend.run_attention(&KernelId::Mita, &fused, None).unwrap();
+        backend.run_attention(&KernelId::Dense, &fused, None).unwrap();
     }
     // created() is the peak concurrent-acquire count: staying within the
     // work-item bound across 8 runs × 12 items proves pooled reuse
@@ -318,26 +323,25 @@ fn backend_reuses_pooled_workspaces_in_steady_state() {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn engine_native_backend_runs_attention_ops() {
+fn engine_native_backend_runs_attention_requests() {
     let (n, dim, heads) = (32, 16, 2);
     let attn = NativeAttnConfig::for_shape(n, dim, heads);
     let mut rng = Rng::new(40);
-    let fused = Tensor::f32(&[1, 3, n, dim], rand_vec(&mut rng, 3 * n * dim, -1.0, 1.0)).unwrap();
+    let fused = fused_qkv(1, n, dim, rand_vec(&mut rng, 3 * n * dim, -1.0, 1.0));
 
     // Direct backend call is the reference for the engine round-trip.
     let backend = NativeBackend::new(attn.clone());
-    let want = backend.run(OP_ATTN_MITA, None, &[fused.clone()]).unwrap();
+    let want = backend.run_attention(&KernelId::Mita, &fused, None).unwrap();
 
     let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![OP_ATTN_MITA.into()])
         .expect("native engine");
     let handle = engine.handle();
-    let got = handle.run(OP_ATTN_MITA, vec![fused.clone()]).unwrap();
-    assert_eq!(got.len(), 1);
-    assert_eq!(got[0], want[0]);
-    assert_eq!(got[0].shape(), &[1, n, dim]);
+    let got = handle.attention(KernelId::Mita, fused.clone(), None).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(got.shape(), &[1, n, dim]);
 
-    let dense = handle.run(OP_ATTN_DENSE, vec![fused.clone()]).unwrap();
-    assert_eq!(dense[0].shape(), &[1, n, dim]);
+    let dense = handle.attention(KernelId::Dense, fused.clone(), None).unwrap();
+    assert_eq!(dense.shape(), &[1, n, dim]);
 
     // Stats flow through the engine thread: one MiTA run of `heads` work
     // items routed n queries each (the dense run adds none).
@@ -347,10 +351,19 @@ fn engine_native_backend_runs_attention_ops() {
     assert_eq!(mita.calls, heads);
     assert_eq!(mita.queries, heads * n);
 
-    // Unknown ops and binding requests fail loudly.
-    assert!(handle.run("predict", vec![fused.clone()]).is_err());
-    assert!(handle.run_bound(OP_ATTN_MITA, "weights", vec![fused]).is_err());
-    assert!(handle.bind_init("w", "init", 0, 4).is_err());
+    // Failures keep their typed codes through the engine round-trip.
+    let err = handle
+        .attention(KernelId::Custom("attn.predict".into()), fused.clone(), None)
+        .unwrap_err();
+    assert_eq!(err.code(), "unknown_op");
+    let err = handle.attention(KernelId::Mita, fused, Some(9)).unwrap_err();
+    assert_eq!(err.code(), "bad_shape");
+    let err = handle
+        .run_artifact("predict", Some("weights"), vec![Tensor::scalar_i32(0)])
+        .unwrap_err();
+    assert_eq!(err.code(), "unavailable");
+    let err = handle.bind_init("w", "init", 0, 4).unwrap_err();
+    assert_eq!(err.code(), "unknown_op");
     engine.shutdown();
 }
 
@@ -366,6 +379,7 @@ fn native_serving_closed_loop_completes_all_requests() {
             requests: 24,
             rate: 0.0,
             queue_cap: 64,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
         };
         let report = serve_native(&engine.handle(), &cfg).unwrap();
@@ -374,6 +388,12 @@ fn native_serving_closed_loop_completes_all_requests() {
         assert!(report.throughput_rps > 0.0);
         assert!(report.batches >= 6); // 24 requests / max_batch 4
         assert!(report.p50_ms <= report.p99_ms + 1e-9);
+        // The split histograms are populated and consistent with the
+        // end-to-end latency: queue-wait and execute each bound the total.
+        assert!(report.queue_p50_ms >= 0.0 && report.exec_p50_ms > 0.0);
+        assert!(report.queue_p50_ms <= report.p99_ms + 1e-9);
+        assert!(report.exec_p50_ms <= report.p99_ms + 1e-9);
+        assert!(report.row().contains("qwait=") && report.row().contains("exec="));
 
         // Per-run routing stats ride along in the report; padded batch
         // slots are marked and never computed, so a MiTA run routes
@@ -401,6 +421,7 @@ fn native_serving_open_loop_backpressure() {
         requests: 100,
         rate: 50_000.0,
         queue_cap: 4,
+        max_inflight: 2,
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
     };
     let report = serve_native(&engine.handle(), &cfg).unwrap();
