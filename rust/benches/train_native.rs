@@ -1,0 +1,179 @@
+//! Bench: native training throughput + MiTA-vs-dense time-to-accuracy on
+//! a tiny LRA shape — the training-side counterpart of `model_native`.
+//!
+//! One row per attention kernel: the same seeded model and the same
+//! deterministic minibatch stream train under `attn.mita` and
+//! `attn.dense` blocks (the kernel choice is the only difference),
+//! measuring steps/sec, the loss trajectory, the wall-clock to reach a
+//! 5%-below-initial trailing-mean loss (time-to-loss), and final val
+//! loss/accuracy. Everything lands in `BENCH_train_native.json` so CI
+//! archives the training perf trajectory next to the kernel and model
+//! benches.
+//!
+//! Quick mode for CI smoke runs: pass `--quick` after `--`, or set
+//! `MITA_BENCH_QUICK=1`.
+
+use std::fmt::Write as _;
+
+use mita::data::lra;
+use mita::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+use mita::model::{MitaModel, ModelConfig};
+use mita::train::{json_num, AdamWConfig, NativeTrainer, TrainConfig};
+
+const TASK: &str = "text";
+const SEQ: usize = 64;
+const VOCAB: usize = 64;
+const DIM: usize = 32;
+const HEADS: usize = 2;
+const DEPTH: usize = 2;
+const BATCH: usize = 8;
+/// Trailing-mean window for the time-to-loss milestone.
+const WINDOW: usize = 5;
+
+struct Row {
+    kernel: &'static str,
+    steps: usize,
+    total_secs: f64,
+    steps_per_sec: f64,
+    first_loss: f64,
+    final_loss: f64,
+    time_to_loss_secs: Option<f64>,
+    eval_loss: f64,
+    eval_acc: f64,
+    overflow_fraction: f64,
+    losses: Vec<f64>,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MITA_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let steps = if quick { 15 } else { 80 };
+    println!(
+        "# train_native — {TASK} n={SEQ} dim={DIM} heads={HEADS} depth={DEPTH} batch={BATCH} \
+         steps={steps} quick={quick} threads={}",
+        mita::kernels::par::num_threads()
+    );
+
+    let rows =
+        vec![run_kernel(OP_ATTN_MITA, "mita", steps), run_kernel(OP_ATTN_DENSE, "dense", steps)];
+
+    println!("\nkernel, steps/s, first_loss, final_loss, time_to_loss_s, eval_loss, eval_acc");
+    for r in &rows {
+        println!(
+            "{}, {:.2}, {:.4}, {:.4}, {}, {:.4}, {:.3}",
+            r.kernel,
+            r.steps_per_sec,
+            r.first_loss,
+            r.final_loss,
+            r.time_to_loss_secs.map(|s| format!("{s:.3}")).unwrap_or_else(|| "-".into()),
+            r.eval_loss,
+            r.eval_acc
+        );
+    }
+    write_json(quick, steps, &rows);
+}
+
+fn run_kernel(kernel: &'static str, short: &'static str, steps: usize) -> Row {
+    let task = lra::by_name(TASK, SEQ, VOCAB, 0xBEEF);
+    let cfg = ModelConfig::for_task(task.as_ref(), DIM, HEADS, DEPTH, kernel);
+    let model = MitaModel::init(cfg, 7).expect("model init");
+    let mut trainer =
+        NativeTrainer::new(model, AdamWConfig::default(), 11).expect("trainer init");
+    let run = TrainConfig {
+        steps,
+        batch: BATCH,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 0,
+        checkpoint: None,
+    };
+    let outcome = trainer.train(task.as_ref(), &run).expect("training run");
+    println!(
+        "{short:6} {} steps in {:.2}s ({:.2} steps/s): loss {:.4} -> {:.4}, eval acc {:.3}",
+        outcome.steps,
+        outcome.mean_step_secs * outcome.steps as f64,
+        1.0 / outcome.mean_step_secs.max(1e-9),
+        outcome.first_loss,
+        outcome.final_loss,
+        outcome.final_eval.accuracy
+    );
+
+    let losses: Vec<f64> = trainer.history.iter().map(|r| r.loss).collect();
+    // Wall-clock until the trailing WINDOW-step mean first drops 5% below
+    // the initial loss.
+    let target = losses[0] * 0.95;
+    let mut elapsed = 0.0f64;
+    let mut time_to_loss = None;
+    for (i, rec) in trainer.history.iter().enumerate() {
+        elapsed += rec.secs;
+        if i + 1 >= WINDOW && time_to_loss.is_none() {
+            let mean: f64 = losses[i + 1 - WINDOW..=i].iter().sum::<f64>() / WINDOW as f64;
+            if mean < target {
+                time_to_loss = Some(elapsed);
+            }
+        }
+    }
+    let total_secs: f64 = trainer.history.iter().map(|r| r.secs).sum();
+    Row {
+        kernel: short,
+        steps: outcome.steps,
+        total_secs,
+        steps_per_sec: outcome.steps as f64 / total_secs.max(1e-9),
+        first_loss: outcome.first_loss,
+        final_loss: outcome.final_loss,
+        time_to_loss_secs: time_to_loss,
+        eval_loss: outcome.final_eval.loss,
+        eval_acc: outcome.final_eval.accuracy,
+        overflow_fraction: trainer.mita_stats().overflow_fraction(),
+        losses,
+    }
+}
+
+/// JSON artifact for the CI perf trajectory: one row per kernel with the
+/// full loss trajectory.
+fn write_json(quick: bool, steps: usize, rows: &[Row]) {
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"train_native\",");
+    let _ = writeln!(json, "  \"task\": \"{TASK}\",");
+    let _ = writeln!(json, "  \"n\": {SEQ},");
+    let _ = writeln!(json, "  \"dim\": {DIM},");
+    let _ = writeln!(json, "  \"heads\": {HEADS},");
+    let _ = writeln!(json, "  \"depth\": {DEPTH},");
+    let _ = writeln!(json, "  \"batch\": {BATCH},");
+    let _ = writeln!(json, "  \"steps\": {steps},");
+    let _ = writeln!(json, "  \"quick\": {quick},");
+    let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"rows\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let ttl = r
+            .time_to_loss_secs
+            .map(|s| format!("{s:.4}"))
+            .unwrap_or_else(|| "null".into());
+        // Loss fields go through json_num: a diverged run's NaN becomes
+        // null instead of corrupting the artifact.
+        let curve: Vec<String> = r.losses.iter().map(|&l| json_num(l, 4)).collect();
+        let _ = writeln!(
+            json,
+            "    {{\"kernel\": \"{}\", \"steps\": {}, \"total_secs\": {:.4}, \
+             \"steps_per_sec\": {:.3}, \"first_loss\": {}, \"final_loss\": {}, \
+             \"time_to_loss_secs\": {ttl}, \"eval_loss\": {}, \"eval_acc\": {:.3}, \
+             \"overflow_fraction\": {:.4}, \"loss_curve\": [{}]}}{comma}",
+            r.kernel,
+            r.steps,
+            r.total_secs,
+            r.steps_per_sec,
+            json_num(r.first_loss, 4),
+            json_num(r.final_loss, 4),
+            json_num(r.eval_loss, 4),
+            r.eval_acc,
+            r.overflow_fraction,
+            curve.join(", ")
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    std::fs::write("BENCH_train_native.json", json).expect("write BENCH_train_native.json");
+    println!("\nwrote BENCH_train_native.json");
+}

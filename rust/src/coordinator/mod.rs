@@ -13,7 +13,8 @@
 //! - [`netserver`]: the network edge — a TCP HTTP/1.1 + JSON loop
 //!   mapping wire requests onto the typed service API, plus the matching
 //!   loopback [`NetClient`].
-//! - [`trainer`]: AOT train-step driver with loss-curve tracking.
+//! - [`trainer`]: the **PJRT-artifact** train-step driver with
+//!   loss-curve tracking (native training lives in [`crate::train`]).
 //! - [`checkpoint`]: flat-parameter save/load.
 //! - [`metrics`]: histograms, streaming stats, mIoU.
 
@@ -32,4 +33,4 @@ pub use server::{
     serve, serve_model, serve_native, serve_workload, ModelServeConfig, NativeServeConfig,
     ServeConfig, ServeReport, Workload, WorkloadSpec, DEFAULT_MAX_INFLIGHT,
 };
-pub use trainer::{eval_checkpoint, EvalResult, Trainer};
+pub use trainer::{eval_checkpoint, EvalResult, StepRecord, Trainer};

@@ -1,6 +1,14 @@
-//! Training driver: runs a bundle's AOT `train_step` artifact in a loop,
-//! feeding batches from the bundle's synthetic data source, tracking the
-//! loss curve, and evaluating with the bundle's `eval_step`.
+//! **PJRT-artifact training driver**: runs a bundle's AOT `train_step`
+//! artifact in a loop, feeding batches from the bundle's synthetic data
+//! source, tracking the loss curve, and evaluating with the bundle's
+//! `eval_step`. The gradients and the optimizer live *inside* the
+//! compiled artifact; this driver only threads state between executions.
+//!
+//! This is **not** the native training path: for pure-Rust training with
+//! hand-derived exact backward passes, AdamW, and LRA task loops — no
+//! artifacts, no PJRT closure — see [`crate::train::NativeTrainer`].
+//! The two share [`StepRecord`] / [`EvalResult`] so reporting code works
+//! on either.
 //!
 //! The training state (params + AdamW moments + step counter) lives as a
 //! `Vec<xla::Literal>` threaded between executions — no Python, no pytrees;

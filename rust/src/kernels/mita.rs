@@ -56,13 +56,64 @@ impl MitaKernelConfig {
     }
 
     /// Clamp to a concrete sequence length (m, k ≤ n; everything ≥ 1).
-    fn clamped(self, n: usize) -> Self {
+    /// `pub(crate)` so the training backward clamps identically.
+    pub(crate) fn clamped(self, n: usize) -> Self {
         MitaKernelConfig {
             m: self.m.clamp(1, n.max(1)),
             k: self.k.clamp(1, n.max(1)),
             cap_factor: self.cap_factor.max(1),
             block_q: self.block_q.max(1),
         }
+    }
+}
+
+/// Steps 1–4 of Alg. 1 — the kernel's *selection structure*: landmark
+/// pooling over Q, blocked landmark scores S = K Q̃ᵀ/√d, top-k KV picks
+/// per landmark, and argmax routing of every query (blocked logits
+/// Q Q̃ᵀ; dot products run in the same order as
+/// `routing::route_argmax`'s scalar loop and ties keep the lower expert
+/// id, so the assignment is bit-identical to it). All outputs land in
+/// caller-provided buffers.
+///
+/// This helper is shared **verbatim** by the forward kernel and the
+/// straight-through training backward
+/// ([`crate::train::backward::mita_attention_backward`]): the backward
+/// treats these selections as constants, which is only exact if it
+/// recomputes precisely the indices the forward used — one function, no
+/// drift. `cfg` must already be clamped to `n`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn select_experts(
+    q: &[f32],
+    kmat: &[f32],
+    n: usize,
+    d: usize,
+    cfg: &MitaKernelConfig,
+    landmarks: &mut [f32],
+    s: &mut [f32],
+    order: &mut [usize],
+    topk: &mut [usize],
+    route_logits: &mut [f32],
+    assign: &mut [usize],
+) {
+    let (m, kk) = (cfg.m, cfg.k);
+    debug_assert_eq!(landmarks.len(), m * d);
+    debug_assert_eq!(s.len(), n * m);
+    debug_assert_eq!(route_logits.len(), n * m);
+    debug_assert_eq!(topk.len(), m * kk);
+    let scale = 1.0 / (d as f32).sqrt();
+    routing::landmarks_pool1d_into(q, n, d, m, landmarks);
+    matmul_nt(kmat, landmarks, n, m, d, s);
+    scale_in_place(s, scale);
+    routing::topk_indices_into(s, n, m, kk, order, topk);
+    matmul_nt(q, landmarks, n, m, d, route_logits);
+    for (a, row) in assign.iter_mut().zip(route_logits.chunks_exact(m)) {
+        let mut best = 0usize;
+        for (i, &x) in row.iter().enumerate() {
+            if x > row[best] {
+                best = i;
+            }
+        }
+        *a = best;
     }
 }
 
@@ -117,37 +168,29 @@ pub fn mita_attention(
     let (m, kk) = (cfg.m, cfg.k);
     let scale = 1.0 / (d as f32).sqrt();
 
-    // 1. Landmarks: adaptive average pooling over Q (Alg. 1 line 3).
+    // 1–4. Selection structure (landmarks → scores → top-k experts →
+    //    argmax routing), via the helper shared with the training
+    //    backward — see `select_experts` — then capacity packing
+    //    (DESIGN.md §6 semantics).
     let mut landmarks = ws.take_f32("mita.landmarks", m * d);
-    routing::landmarks_pool1d_into(q, n, d, m, &mut landmarks);
-
-    // 2. Landmark scores S = K Q̃ᵀ / √d as a blocked matmul ([n, m], same
-    //    layout as routing::scores).
     let mut s = ws.take_f32("mita.scores", n * m);
-    matmul_nt(kmat, &landmarks, n, m, d, &mut s);
-    scale_in_place(&mut s, scale);
-
-    // 3. Deformable experts: top-k activated KV rows per landmark (Eq. 7).
     let mut order = ws.take_usize("mita.order", n);
     let mut topk = ws.take_usize("mita.topk", m * kk);
-    routing::topk_indices_into(&s, n, m, kk, &mut order, &mut topk);
-
-    // 4. Argmax routing via blocked logits Q Q̃ᵀ — the dot products run in
-    //    the same order as routing::route_argmax's scalar loop (and ties
-    //    keep the lower expert id), so the assignment is bit-identical to
-    //    it — then capacity packing (DESIGN.md §6 semantics).
     let mut route_logits = ws.take_f32("mita.route", n * m);
-    matmul_nt(q, &landmarks, n, m, d, &mut route_logits);
     let mut assign = ws.take_usize("mita.assign", n);
-    for (a, row) in assign.iter_mut().zip(route_logits.chunks_exact(m)) {
-        let mut best = 0usize;
-        for (i, &x) in row.iter().enumerate() {
-            if x > row[best] {
-                best = i;
-            }
-        }
-        *a = best;
-    }
+    select_experts(
+        q,
+        kmat,
+        n,
+        d,
+        &cfg,
+        &mut landmarks,
+        &mut s,
+        &mut order,
+        &mut topk,
+        &mut route_logits,
+        &mut assign,
+    );
     let cap = routing::capacity(n, m, cfg.cap_factor, cfg.block_q);
     let mut counts = ws.take_usize("mita.counts", m);
     let mut slot = ws.take_usize("mita.slot", n);

@@ -22,6 +22,11 @@
 //!   error taxonomy, parsed once at the service boundary — and the
 //!   network front that speaks it over HTTP/1.1 + JSON
 //!   (`docs/PROTOCOL.md`).
+//! - **L3-train** (`train`): exact hand-derived backward passes for
+//!   every model layer (dense softmax and straight-through MiTA
+//!   attention included), flat gradients + AdamW, and the
+//!   `NativeTrainer` loop over the LRA tasks — checkpoints land in the
+//!   same container the serving path binds (`docs/TRAINING.md`).
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
@@ -35,4 +40,5 @@ pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod service;
+pub mod train;
 pub mod util;

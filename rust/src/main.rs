@@ -14,6 +14,8 @@
 //!   serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
 //!   model-check [--seq-len N] [--dim D] [--heads H] [--depth L]
 //!   serve-model [--task T] [--seq-len N] [--op attn.mita|attn.dense] [--checkpoint F]
+//!   train-native [--task T] [--steps N] [--lr X] [--batch B] [--kernel mita|dense]
+//!                [--checkpoint-out F] [--curve-out F]
 //!   table2|table3|table4|table5|table6|table7 [--steps N] [--seed S]
 //!   figure5 [--requests N] | figure9 | figure10 | figures (3/4/8)
 //!   complexity                        FLOPs-vs-N scaling table
@@ -44,6 +46,7 @@ use mita::model::{MitaModel, ModelConfig, ModelScratch, OP_MODEL_INIT};
 use mita::report::Table;
 use mita::runtime::{BackendSpec, NativeAttnConfig, Runtime, Tensor};
 use mita::service::{KernelId, QkvBatch, ServiceRequest};
+use mita::train::{curve_json, loss_curve, AdamWConfig, NativeTrainer, TrainConfig};
 use mita::util::cli;
 
 const VALUED_FLAGS: &[&str] = &[
@@ -84,6 +87,14 @@ const VALUED_FLAGS: &[&str] = &[
     "max-inflight",
     "valid",
     "batch",
+    // native training subsystem
+    "lr",
+    "kernel",
+    "weight-decay",
+    "clip",
+    "eval-every",
+    "checkpoint-out",
+    "curve-out",
 ];
 
 fn main() -> Result<()> {
@@ -347,6 +358,9 @@ fn main() -> Result<()> {
             if !all_ok {
                 bail!("model-check failed (parity or checkpoint round-trip above)");
             }
+        }
+        "train-native" => {
+            cmd_train_native(&args, &opts)?;
         }
         // Utility used by examples/tests to sanity-check one bundle quickly.
         "quickcheck" => {
@@ -691,6 +705,95 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
     Ok(())
 }
 
+/// `train-native`: end-to-end native training on an LRA task — exact
+/// backward passes + AdamW over the pure-Rust model, periodic eval,
+/// best-checkpoint save through the shared container format. No
+/// artifacts, no Python. `--assert-improved` exits non-zero unless the
+/// tail loss beats the first step's loss (the CI smoke gate).
+fn cmd_train_native(args: &cli::Args, opts: &Opts) -> Result<()> {
+    let task_name = args.flag_or("task", "listops");
+    let (def_n, def_vocab) = lra_task_defaults(&task_name)?;
+    let seq = args.flag_parse("seq-len", def_n)?;
+    let vocab = args.flag_parse("vocab", def_vocab)?;
+    let dim = args.flag_parse("dim", 32usize)?;
+    let heads = args.flag_parse("heads", 2usize)?;
+    let depth = args.flag_parse("depth", 2usize)?;
+    anyhow::ensure!(
+        heads >= 1 && dim % heads == 0,
+        "--dim {dim} must divide into --heads {heads}"
+    );
+    let kernel = match args.flag_or("kernel", "mita").as_str() {
+        "mita" | OP_ATTN_MITA => OP_ATTN_MITA,
+        "dense" | OP_ATTN_DENSE => OP_ATTN_DENSE,
+        other => bail!("--kernel {other:?} (expected mita or dense)"),
+    };
+    let steps = args.flag_parse("steps", 100usize)?;
+    let batch = args.flag_parse("batch", 8usize)?;
+    let optim = AdamWConfig {
+        lr: args.flag_parse("lr", 1e-2f64)?,
+        weight_decay: args.flag_parse("weight-decay", 0.01f64)?,
+        grad_clip: args.flag_parse("clip", 1.0f64)?,
+        ..AdamWConfig::default()
+    };
+    let task = lra::try_by_name(&task_name, seq, vocab, opts.seed as u64)?;
+    let mut mcfg = ModelConfig::for_task(task.as_ref(), dim, heads, depth, kernel);
+    mcfg.mita = native_kernel_config(args, seq)?;
+    let model = MitaModel::init(mcfg, opts.seed as u64)?;
+    let pcount = model.cfg.param_count();
+    let mut trainer = NativeTrainer::new(model, optim, opts.seed as u64)?;
+    let run = TrainConfig {
+        steps,
+        batch,
+        eval_every: args.flag_parse("eval-every", 25usize)?,
+        eval_batches: args.flag_parse("eval-batches", 4usize)?,
+        log_every: args.flag_parse("log-every", 10usize)?,
+        checkpoint: args.flag("checkpoint-out").map(PathBuf::from),
+    };
+    println!(
+        "# train-native: task={task_name} n={seq} dim={dim} heads={heads} depth={depth} \
+         kernel={kernel} steps={steps} batch={batch} lr={} params={pcount}",
+        optim.lr
+    );
+    let outcome = trainer.train(task.as_ref(), &run)?;
+    let stats = trainer.mita_stats();
+    println!(
+        "steps={} first_loss={:.4} final_loss={:.4} tail_loss={:.4} eval_loss={:.4} \
+         eval_acc={:.4} best_eval_loss={:.4} step_time={:.1}ms steps/s={:.2} ovf={:.1}%",
+        outcome.steps,
+        outcome.first_loss,
+        outcome.final_loss,
+        outcome.tail_loss,
+        outcome.final_eval.loss,
+        outcome.final_eval.accuracy,
+        outcome.best_eval.loss,
+        outcome.mean_step_secs * 1e3,
+        1.0 / outcome.mean_step_secs.max(1e-9),
+        stats.overflow_fraction() * 100.0,
+    );
+    let chart_name = format!("train-native/{task_name}");
+    println!("{}", figures::loss_curve_chart(&loss_curve(&trainer.history), &chart_name));
+    if let Some(path) = args.flag("checkpoint-out") {
+        println!("best checkpoint saved to {path}");
+    }
+    if let Some(path) = args.flag("curve-out") {
+        std::fs::write(path, curve_json(&trainer.history))?;
+        println!("loss curve written to {path}");
+    }
+    if args.has("assert-improved") {
+        anyhow::ensure!(
+            outcome.tail_loss < outcome.first_loss,
+            "training did not improve: tail loss {:.4} >= first loss {:.4}",
+            outcome.tail_loss,
+            outcome.first_loss
+        );
+        println!(
+            "loss improved: {:.4} -> {:.4} (tail mean)",
+            outcome.first_loss, outcome.tail_loss
+        );
+    }
+    Ok(())
+}
+
 /// MiTA kernel parameters from CLI flags, defaulting to the paper-flavored
 /// shape for the sequence length.
 fn native_kernel_config(args: &cli::Args, n: usize) -> Result<MitaKernelConfig> {
@@ -820,6 +923,15 @@ native model subsystem (full MiTA transformer over the kernel registry):
   model-check [--seq-len N] [--dim D] [--heads H] [--depth L] [--seed S]
            per-LRA-task checks: MiTA-vs-dense logits parity (m = k = n),
            forward timing + routing stats, checkpoint round-trip
+
+native training (exact backward passes + AdamW; see docs/TRAINING.md):
+  train-native [--task T] [--seq-len N] [--dim D] [--heads H] [--depth L]
+               [--steps N] [--batch B] [--lr X] [--weight-decay W] [--clip C]
+               [--kernel mita|dense] [--eval-every E] [--eval-batches B]
+               [--checkpoint-out F] [--curve-out F] [--assert-improved]
+           trains a native MiTA transformer on an LRA task end to end;
+           the best-eval checkpoint reloads unchanged into serve-model /
+           model-check / the network front
 
 paper reproduction (see DESIGN.md experiment index):
   table2   from-scratch image classification (attention varied only)

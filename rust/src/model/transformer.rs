@@ -42,11 +42,14 @@ use crate::model::config::ModelConfig;
 use crate::model::params::ModelParams;
 use crate::runtime::Tensor;
 
-/// LayerNorm epsilon.
-const LN_EPS: f32 = 1e-5;
+/// LayerNorm epsilon (shared with the exact backward in
+/// [`crate::train::backward`]).
+pub(crate) const LN_EPS: f32 = 1e-5;
 
 /// Normalize each `[d]` row of `x` with scale `g` and shift `b`.
-fn layer_norm_rows(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+/// `pub(crate)` so the training tape forward reuses the inference math
+/// bit-for-bit instead of re-deriving it.
+pub(crate) fn layer_norm_rows(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     debug_assert_eq!(x.len() % d, 0);
     for (xrow, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
@@ -60,7 +63,7 @@ fn layer_norm_rows(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
 }
 
 /// `x[r, :] += bias` for row-major `[rows, len(bias)]`.
-fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
+pub(crate) fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
     for row in x.chunks_exact_mut(bias.len()) {
         for (v, &b) in row.iter_mut().zip(bias) {
             *v += b;
@@ -68,8 +71,9 @@ fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
     }
 }
 
-/// GELU (tanh approximation), in place.
-fn gelu_in_place(x: &mut [f32]) {
+/// GELU (tanh approximation), in place. Constants are mirrored by
+/// [`crate::train::backward::gelu_backward`].
+pub(crate) fn gelu_in_place(x: &mut [f32]) {
     const C: f32 = 0.797_884_6; // sqrt(2/π)
     for v in x.iter_mut() {
         let u = *v;

@@ -1,0 +1,530 @@
+//! Hand-derived exact backward passes for every layer primitive in the
+//! native MiTA transformer.
+//!
+//! Conventions mirror the forward stack: everything is f32, row-major,
+//! serial, and allocation-free over a [`Workspace`] — parallelism lives
+//! one level up (per-example data parallelism in
+//! [`crate::train::model_grad`]). A `d*` buffer that is *overwritten* is
+//! documented as such; gradient buffers for parameters always
+//! *accumulate* (`+=`), because one example touches each parameter tensor
+//! once but the per-example gradients later sum across the batch.
+//!
+//! The MiTA backward follows the **straight-through selection**
+//! convention: landmark pooling, top-k KV selection, and argmax routing
+//! are recomputed with the forward's own selection helper
+//! ([`crate::kernels::mita::select_experts`] — one function, so the two
+//! sides cannot drift; bit-identical indices) and then *treated as
+//! constants* — gradients flow through the gathered KV pairs and the
+//! per-expert softmax exactly, and not through the selection logits.
+//! Capacity packing never enters the backward at all: packed and
+//! overflow-fallback queries compute the same expert attention in the
+//! forward, so their gradients are the same expression too.
+
+use crate::kernels::linalg::{axpy, dot, gather_head, scale_in_place, scatter_head};
+use crate::kernels::mita::MitaKernelConfig;
+use crate::kernels::workspace::Workspace;
+use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+use crate::model::transformer::LN_EPS;
+
+// ---------------------------------------------------------------------------
+// Matmul adjoints
+// ---------------------------------------------------------------------------
+
+/// `out[i, j] = Σ_t a[i, t] · b[t, j]` for row-major `a [p, q]`,
+/// `b [q, r]` — the adjoint of [`crate::kernels::linalg::matmul_nt`]
+/// with respect to its first operand (`dx = dy · W`). Overwrites `out`.
+pub fn matmul_nn(a: &[f32], b: &[f32], p: usize, q: usize, r: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), p * q, "a must be [p, q]");
+    assert_eq!(b.len(), q * r, "b must be [q, r]");
+    assert_eq!(out.len(), p * r, "out must be [p, r]");
+    out.fill(0.0);
+    matmul_nn_acc(a, b, p, q, r, out);
+}
+
+/// [`matmul_nn`] that accumulates (`out += a · b`) instead of
+/// overwriting — used to sum the Q/K/V input-gradient contributions.
+pub fn matmul_nn_acc(a: &[f32], b: &[f32], p: usize, q: usize, r: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), p * q, "a must be [p, q]");
+    assert_eq!(b.len(), q * r, "b must be [q, r]");
+    assert_eq!(out.len(), p * r, "out must be [p, r]");
+    for (arow, orow) in a.chunks_exact(q).zip(out.chunks_exact_mut(r)) {
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(r)) {
+            axpy(av, brow, orow);
+        }
+    }
+}
+
+/// `out[j, c] += Σ_i a[i, j] · b[i, c]` for row-major `a [n, q]`,
+/// `b [n, r]` — Aᵀ·B, the weight-gradient shape of every linear layer
+/// (`dW += dyᵀ · x`). Accumulates into `out [q, r]`.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], n: usize, q: usize, r: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), n * q, "a must be [n, q]");
+    assert_eq!(b.len(), n * r, "b must be [n, r]");
+    assert_eq!(out.len(), q * r, "out must be [q, r]");
+    for (arow, brow) in a.chunks_exact(q).zip(b.chunks_exact(r)) {
+        for (&av, orow) in arow.iter().zip(out.chunks_exact_mut(r)) {
+            axpy(av, brow, orow);
+        }
+    }
+}
+
+/// `db += Σ_rows dy[row, :]` — the bias gradient of a linear layer.
+pub fn bias_grad_acc(dy: &[f32], db: &mut [f32]) {
+    assert_eq!(dy.len() % db.len(), 0, "dy must be [rows, len(db)]");
+    for row in dy.chunks_exact(db.len()) {
+        for (acc, &v) in db.iter_mut().zip(row) {
+            *acc += v;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LayerNorm / GELU / softmax cross-entropy
+// ---------------------------------------------------------------------------
+
+/// Forward twin of [`layer_norm_backward`]: delegates to the model's own
+/// `layer_norm_rows`, so gradient checks differentiate exactly the math
+/// inference runs.
+pub fn layer_norm_forward(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
+    crate::model::transformer::layer_norm_rows(x, d, g, b, out);
+}
+
+/// Forward twin of [`gelu_backward`] (the model's `gelu_in_place`).
+pub fn gelu_forward(x: &mut [f32]) {
+    crate::model::transformer::gelu_in_place(x);
+}
+
+/// Backward of `layer_norm_rows` over `[rows, d]` input `x` with scale
+/// `g`: writes `dx` (overwritten) and accumulates `dg` / `db`. The mean
+/// and variance are recomputed from `x` with the forward's expression
+/// order, so `x̂` is bit-identical to the forward pass.
+pub fn layer_norm_backward(
+    x: &[f32],
+    d: usize,
+    g: &[f32],
+    dy: &[f32],
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    assert_eq!(x.len(), dy.len());
+    assert_eq!(x.len(), dx.len());
+    assert_eq!(x.len() % d, 0);
+    assert_eq!(g.len(), d);
+    assert_eq!(dg.len(), d);
+    assert_eq!(db.len(), d);
+    for ((xrow, dyrow), dxrow) in
+        x.chunks_exact(d).zip(dy.chunks_exact(d)).zip(dx.chunks_exact_mut(d))
+    {
+        let mean = xrow.iter().sum::<f32>() / d as f32;
+        let var = xrow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        // a = dy·g (the x̂-gradient); s1 = mean(a), s2 = mean(a·x̂).
+        let mut s1 = 0.0f32;
+        let mut s2 = 0.0f32;
+        for ((&xv, &dyv), (&gc, (dgc, dbc))) in
+            xrow.iter().zip(dyrow).zip(g.iter().zip(dg.iter_mut().zip(db.iter_mut())))
+        {
+            let xhat = (xv - mean) * inv;
+            let a = dyv * gc;
+            s1 += a;
+            s2 += a * xhat;
+            *dgc += dyv * xhat;
+            *dbc += dyv;
+        }
+        s1 /= d as f32;
+        s2 /= d as f32;
+        for ((&xv, &dyv), (&gc, dxc)) in
+            xrow.iter().zip(dyrow).zip(g.iter().zip(dxrow.iter_mut()))
+        {
+            let xhat = (xv - mean) * inv;
+            *dxc = (dyv * gc - s1 - xhat * s2) * inv;
+        }
+    }
+}
+
+/// Backward of the tanh-approximation GELU: `dx = dy · gelu'(x)`,
+/// element-wise (overwrites `dx`). Constants match `gelu_in_place`.
+pub fn gelu_backward(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    assert_eq!(x.len(), dy.len());
+    assert_eq!(x.len(), dx.len());
+    const C: f32 = 0.797_884_6; // sqrt(2/π), as in the forward
+    const A: f32 = 0.044_715;
+    for ((&u, &dyv), dxv) in x.iter().zip(dy).zip(dx.iter_mut()) {
+        let t = (C * (u + A * u * u * u)).tanh();
+        let dinner = C * (1.0 + 3.0 * A * u * u);
+        let dgelu = 0.5 * (1.0 + t) + 0.5 * u * (1.0 - t * t) * dinner;
+        *dxv = dyv * dgelu;
+    }
+}
+
+/// Softmax cross-entropy of one logit row against an integer label:
+/// returns the loss `−log softmax(logits)[label]` (computed in f64) and
+/// writes `dlogits = softmax(logits) − onehot(label)` (overwritten).
+pub fn softmax_xent(logits: &[f32], label: usize, dlogits: &mut [f32]) -> f64 {
+    assert_eq!(logits.len(), dlogits.len());
+    assert!(label < logits.len(), "label {label} outside {} classes", logits.len());
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mut den = 0.0f64;
+    for (&l, d) in logits.iter().zip(dlogits.iter_mut()) {
+        let e = ((l as f64) - mx).exp();
+        den += e;
+        *d = e as f32; // unnormalized for now
+    }
+    let inv = 1.0 / den;
+    for d in dlogits.iter_mut() {
+        *d = ((*d as f64) * inv) as f32;
+    }
+    dlogits[label] -= 1.0;
+    den.ln() - (logits[label] as f64 - mx)
+}
+
+/// Loss-only variant of [`softmax_xent`] (no gradient buffer needed).
+pub fn softmax_xent_loss(logits: &[f32], label: usize) -> f64 {
+    assert!(label < logits.len(), "label {label} outside {} classes", logits.len());
+    let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let den: f64 = logits.iter().map(|&l| ((l as f64) - mx).exp()).sum();
+    den.ln() - (logits[label] as f64 - mx)
+}
+
+// ---------------------------------------------------------------------------
+// Attention backward: dense
+// ---------------------------------------------------------------------------
+
+/// Query rows per block (matches the dense forward's blocking).
+const QB: usize = 32;
+
+/// Backward of single-head dense attention `out = softmax(QKᵀ/√d)·V` for
+/// row-major `[n, d]` inputs. Writes `dq` and accumulates nothing outside
+/// its outputs: `dq` is overwritten per query block, `dk`/`dv` are zeroed
+/// here and then accumulated across query blocks. The softmax
+/// probabilities are recomputed blockwise (same expression order as the
+/// forward), so no `[n, n]` tape is ever materialized.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_attention_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    dout: &[f32],
+    ws: &mut Workspace,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    assert_eq!(q.len(), n * d, "q must be [n, d]");
+    assert_eq!(k.len(), n * d, "k must be [n, d]");
+    assert_eq!(v.len(), n * d, "v must be [n, d]");
+    assert_eq!(dout.len(), n * d, "dout must be [n, d]");
+    assert_eq!(dq.len(), n * d, "dq must be [n, d]");
+    assert_eq!(dk.len(), n * d, "dk must be [n, d]");
+    assert_eq!(dv.len(), n * d, "dv must be [n, d]");
+    dk.fill(0.0);
+    dv.fill(0.0);
+    if n == 0 || d == 0 {
+        return;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let rows_max = QB.min(n);
+    let mut p = ws.take_f32("dense.bwd.p", rows_max * n);
+    let mut ds = ws.take_f32("dense.bwd.ds", rows_max * n);
+    for r0 in (0..n).step_by(QB) {
+        let rows = QB.min(n - r0);
+        let qblk = &q[r0 * d..(r0 + rows) * d];
+        let doblk = &dout[r0 * d..(r0 + rows) * d];
+        // Recompute P = softmax(Q_blk Kᵀ · scale) like the forward.
+        let pblk = &mut p[..rows * n];
+        crate::kernels::linalg::matmul_nt(qblk, k, rows, n, d, pblk);
+        scale_in_place(pblk, scale);
+        crate::kernels::linalg::softmax_rows(pblk, rows, n);
+        // dP[i, j] = dot(dout_i, v_j).
+        let dsblk = &mut ds[..rows * n];
+        crate::kernels::linalg::matmul_nt(doblk, v, rows, n, d, dsblk);
+        // dV[j] += Σ_i P[i, j] · dout_i (uses P before it turns into dS).
+        matmul_tn_acc(pblk, doblk, rows, n, d, dv);
+        // dS[i, j] = scale · P[i, j] · (dP[i, j] − Σ_t P[i, t]·dP[i, t]).
+        for (prow, dsrow) in pblk.chunks_exact(n).zip(dsblk.chunks_exact_mut(n)) {
+            let rowsum: f32 = prow.iter().zip(dsrow.iter()).map(|(&pv, &dp)| pv * dp).sum();
+            for (&pv, dsv) in prow.iter().zip(dsrow.iter_mut()) {
+                *dsv = pv * (*dsv - rowsum) * scale;
+            }
+        }
+        // dQ_blk = dS · K ; dK += dSᵀ · Q_blk (scale already folded in).
+        matmul_nn(dsblk, k, rows, n, d, &mut dq[r0 * d..(r0 + rows) * d]);
+        matmul_tn_acc(dsblk, qblk, rows, n, d, dk);
+    }
+    ws.give_f32("dense.bwd.p", p);
+    ws.give_f32("dense.bwd.ds", ds);
+}
+
+// ---------------------------------------------------------------------------
+// Attention backward: MiTA (straight-through selection)
+// ---------------------------------------------------------------------------
+
+/// Backward of the single-head MiTA forward
+/// ([`crate::kernels::mita::mita_attention`]) under the straight-through
+/// selection convention. Landmarks, top-k KV picks, and argmax routing
+/// are recomputed with the forward's exact functions — bit-identical
+/// indices — and held constant; gradients then flow through each query's
+/// softmax over its expert's gathered KV pairs, exactly as in dense
+/// attention restricted to the picked rows. Packed and overflow queries
+/// share one code path here (the forward's capacity packing only
+/// reorders execution, never the math). `dq` is overwritten; `dk` / `dv`
+/// are zeroed then scatter-accumulated in query order.
+#[allow(clippy::too_many_arguments)]
+pub fn mita_attention_backward(
+    q: &[f32],
+    kmat: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    cfg: &MitaKernelConfig,
+    dout: &[f32],
+    ws: &mut Workspace,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    assert_eq!(q.len(), n * d, "q must be [n, d]");
+    assert_eq!(kmat.len(), n * d, "k must be [n, d]");
+    assert_eq!(v.len(), n * d, "v must be [n, d]");
+    assert_eq!(dout.len(), n * d, "dout must be [n, d]");
+    assert_eq!(dq.len(), n * d, "dq must be [n, d]");
+    assert_eq!(dk.len(), n * d, "dk must be [n, d]");
+    assert_eq!(dv.len(), n * d, "dv must be [n, d]");
+    dk.fill(0.0);
+    dv.fill(0.0);
+    if n == 0 || d == 0 {
+        return;
+    }
+    let cfg = cfg.clamped(n);
+    let (m, kk) = (cfg.m, cfg.k);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // Recompute the forward's selection structure with the *same
+    // function* the forward kernel runs (`select_experts`) — same
+    // inputs, same code ⇒ the same indices, by construction.
+    let mut landmarks = ws.take_f32("mita.bwd.landmarks", m * d);
+    let mut s = ws.take_f32("mita.bwd.scores", n * m);
+    let mut order = ws.take_usize("mita.bwd.order", n);
+    let mut topk = ws.take_usize("mita.bwd.topk", m * kk);
+    let mut route_logits = ws.take_f32("mita.bwd.route", n * m);
+    let mut assign = ws.take_usize("mita.bwd.assign", n);
+    crate::kernels::mita::select_experts(
+        q,
+        kmat,
+        n,
+        d,
+        &cfg,
+        &mut landmarks,
+        &mut s,
+        &mut order,
+        &mut topk,
+        &mut route_logits,
+        &mut assign,
+    );
+
+    // Per-query softmax-attention backward over the expert's picks.
+    let mut w = ws.take_f32("mita.bwd.w", kk);
+    let mut dp = ws.take_f32("mita.bwd.dp", kk);
+    for qi in 0..n {
+        let e = assign[qi];
+        let picks = &topk[e * kk..(e + 1) * kk];
+        let qrow = &q[qi * d..(qi + 1) * d];
+        let dorow = &dout[qi * d..(qi + 1) * d];
+        // Recompute the forward's weights (same order as attend_one).
+        for (l, &ki) in w.iter_mut().zip(picks) {
+            *l = dot(qrow, &kmat[ki * d..(ki + 1) * d]) * scale;
+        }
+        crate::kernels::linalg::softmax_in_place(&mut w);
+        // dp_j = dot(dout_i, v_pj); rowsum = Σ_j w_j dp_j.
+        let mut rowsum = 0.0f32;
+        for ((dpj, &wj), &ki) in dp.iter_mut().zip(w.iter()).zip(picks) {
+            *dpj = dot(dorow, &v[ki * d..(ki + 1) * d]);
+            rowsum += wj * *dpj;
+        }
+        // dlogit_j = w_j (dp_j − rowsum); scatter into dq/dk/dv.
+        let dqrow = &mut dq[qi * d..(qi + 1) * d];
+        dqrow.fill(0.0);
+        for ((&dpj, &wj), &ki) in dp.iter().zip(w.iter()).zip(picks) {
+            let dlogit = wj * (dpj - rowsum) * scale;
+            axpy(dlogit, &kmat[ki * d..(ki + 1) * d], dqrow);
+            axpy(dlogit, qrow, &mut dk[ki * d..(ki + 1) * d]);
+            axpy(wj, dorow, &mut dv[ki * d..(ki + 1) * d]);
+        }
+    }
+
+    ws.give_f32("mita.bwd.landmarks", landmarks);
+    ws.give_f32("mita.bwd.scores", s);
+    ws.give_f32("mita.bwd.route", route_logits);
+    ws.give_f32("mita.bwd.w", w);
+    ws.give_f32("mita.bwd.dp", dp);
+    ws.give_usize("mita.bwd.order", order);
+    ws.give_usize("mita.bwd.topk", topk);
+    ws.give_usize("mita.bwd.assign", assign);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-head dispatch
+// ---------------------------------------------------------------------------
+
+/// Which attention backward a block uses — resolved once per model from
+/// the block's registry name (the backward is kernel-specific math, not a
+/// registry lookup).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnKind {
+    /// Routed MiTA attention (straight-through selection backward).
+    Mita,
+    /// Dense softmax attention (exact O(n²) backward).
+    Dense,
+}
+
+impl AttnKind {
+    /// Map a kernel registry name to its backward implementation.
+    pub fn from_name(name: &str) -> anyhow::Result<Self> {
+        match name {
+            OP_ATTN_MITA => Ok(AttnKind::Mita),
+            OP_ATTN_DENSE => Ok(AttnKind::Dense),
+            other => anyhow::bail!(
+                "no native backward for attention kernel {other:?} \
+                 (trainable kernels: {OP_ATTN_MITA}, {OP_ATTN_DENSE})"
+            ),
+        }
+    }
+}
+
+/// Multi-head attention backward over model-dim layout `[n, dim]`
+/// (`dim = heads · dh`), mirroring the forward's per-head gather/scatter:
+/// each head is gathered to contiguous `[n, dh]`, solved with the
+/// kernel-specific single-head backward, and scattered into the `[n,
+/// dim]` gradients. `dq`/`dk`/`dv` are fully overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward_mh(
+    kind: AttnKind,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    heads: usize,
+    dim: usize,
+    cfg: &MitaKernelConfig,
+    dout: &[f32],
+    ws: &mut Workspace,
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+) {
+    assert!(heads >= 1 && dim % heads == 0, "dim {dim} must divide into {heads} heads");
+    assert_eq!(q.len(), n * dim);
+    assert_eq!(dout.len(), n * dim);
+    assert_eq!(dq.len(), n * dim);
+    assert_eq!(dk.len(), n * dim);
+    assert_eq!(dv.len(), n * dim);
+    if n == 0 || dim == 0 {
+        return;
+    }
+    let dh = dim / heads;
+    let mut qh = ws.take_f32("bwd.mh.q", n * dh);
+    let mut kh = ws.take_f32("bwd.mh.k", n * dh);
+    let mut vh = ws.take_f32("bwd.mh.v", n * dh);
+    let mut doh = ws.take_f32("bwd.mh.dout", n * dh);
+    let mut dqh = ws.take_f32("bwd.mh.dq", n * dh);
+    let mut dkh = ws.take_f32("bwd.mh.dk", n * dh);
+    let mut dvh = ws.take_f32("bwd.mh.dv", n * dh);
+    for h in 0..heads {
+        gather_head(q, n, dim, dh, h, &mut qh);
+        gather_head(k, n, dim, dh, h, &mut kh);
+        gather_head(v, n, dim, dh, h, &mut vh);
+        gather_head(dout, n, dim, dh, h, &mut doh);
+        match kind {
+            AttnKind::Mita => mita_attention_backward(
+                &qh, &kh, &vh, n, dh, cfg, &doh, ws, &mut dqh, &mut dkh, &mut dvh,
+            ),
+            AttnKind::Dense => dense_attention_backward(
+                &qh, &kh, &vh, n, dh, &doh, ws, &mut dqh, &mut dkh, &mut dvh,
+            ),
+        }
+        scatter_head(&dqh, n, dim, dh, h, dq);
+        scatter_head(&dkh, n, dim, dh, h, dk);
+        scatter_head(&dvh, n, dim, dh, h, dv);
+    }
+    ws.give_f32("bwd.mh.q", qh);
+    ws.give_f32("bwd.mh.k", kh);
+    ws.give_f32("bwd.mh.v", vh);
+    ws.give_f32("bwd.mh.dout", doh);
+    ws.give_f32("bwd.mh.dq", dqh);
+    ws.give_f32("bwd.mh.dk", dkh);
+    ws.give_f32("bwd.mh.dv", dvh);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn matmul_adjoint_shapes_agree_with_naive() {
+        let (p, q, r) = (3usize, 4usize, 5usize);
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..p * q).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..q * r).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let mut got = vec![0.0f32; p * r];
+        matmul_nn(&a, &b, p, q, r, &mut got);
+        for i in 0..p {
+            for j in 0..r {
+                let want: f32 = (0..q).map(|t| a[i * q + t] * b[t * r + j]).sum();
+                assert!((got[i * r + j] - want).abs() < 1e-5);
+            }
+        }
+        // Accumulating variant adds on top.
+        let snapshot = got.clone();
+        matmul_nn_acc(&a, &b, p, q, r, &mut got);
+        for (g, s) in got.iter().zip(&snapshot) {
+            assert!((g - 2.0 * s).abs() < 1e-5);
+        }
+
+        // Aᵀ·B against a naive loop.
+        let n = p;
+        let mut tn = vec![0.0f32; q * r];
+        let b2: Vec<f32> = (0..n * r).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        matmul_tn_acc(&a, &b2, n, q, r, &mut tn);
+        for j in 0..q {
+            for c in 0..r {
+                let want: f32 = (0..n).map(|i| a[i * q + j] * b2[i * r + c]).sum();
+                assert!((tn[j * r + c] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn bias_grad_sums_rows() {
+        let dy = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut db = vec![0.5f32; 2];
+        bias_grad_acc(&dy, &mut db);
+        assert_eq!(db, vec![0.5 + 1.0 + 3.0 + 5.0, 0.5 + 2.0 + 4.0 + 6.0]);
+    }
+
+    #[test]
+    fn softmax_xent_gradient_sums_to_zero() {
+        let logits = vec![0.3f32, -1.2, 2.0, 0.0];
+        let mut d = vec![0.0f32; 4];
+        let loss = softmax_xent(&logits, 2, &mut d);
+        assert!(loss > 0.0);
+        assert!((loss - softmax_xent_loss(&logits, 2)).abs() < 1e-12);
+        let sum: f32 = d.iter().sum();
+        assert!(sum.abs() < 1e-6, "softmax-CE gradient rows sum to 0, got {sum}");
+        assert!(d[2] < 0.0, "true-class gradient must be negative");
+        // Loss equals -log p_label.
+        let mx = 2.0f64;
+        let den: f64 = logits.iter().map(|&l| ((l as f64) - mx).exp()).sum();
+        assert!((loss - (den.ln())).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attn_kind_resolution() {
+        assert_eq!(AttnKind::from_name(OP_ATTN_MITA).unwrap(), AttnKind::Mita);
+        assert_eq!(AttnKind::from_name(OP_ATTN_DENSE).unwrap(), AttnKind::Dense);
+        assert!(AttnKind::from_name("attn.unknown").is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Finite-difference gradient checking for the exact backward passes.
+//!
+//! Central differences: for a scalar loss `f` over f32 inputs, the
+//! numeric derivative at coordinate `i` is `(f(x+ε) − f(x−ε)) / 2ε` with
+//! the quotient taken in f64. The comparison criterion is the standard
+//! relative form `|a − n| ≤ tol · max(1, |a|, |n|)` — an absolute floor
+//! of `tol` for small gradients (where f32 forward round-off dominates
+//! the quotient) and a relative bound elsewhere. The MiTA kernel is
+//! checked under its straight-through convention: the numeric side must
+//! evaluate a *frozen-selection* forward (see `docs/TRAINING.md` and the
+//! tests in `rust/tests/train_native.rs`), because the analytic backward
+//! deliberately assigns no gradient to the selection logits.
+
+use anyhow::Result;
+
+/// Gradient-check settings.
+#[derive(Debug, Clone, Copy)]
+pub struct CheckOpts {
+    /// Central-difference step applied to the f32 input.
+    pub eps: f32,
+    /// Acceptance threshold for `rel_err`.
+    pub tol: f64,
+    /// Check every `stride`-th coordinate (1 = all); the first and last
+    /// coordinate are always included so boundaries stay covered.
+    pub stride: usize,
+}
+
+impl Default for CheckOpts {
+    fn default() -> Self {
+        CheckOpts { eps: 1e-2, tol: 1e-3, stride: 1 }
+    }
+}
+
+impl CheckOpts {
+    /// Default tolerances, checking every `stride`-th coordinate.
+    pub fn strided(stride: usize) -> Self {
+        CheckOpts { stride: stride.max(1), ..CheckOpts::default() }
+    }
+}
+
+/// Central difference of `f` along coordinate `i` of `x`.
+pub fn central_diff<F>(x: &[f32], i: usize, eps: f32, f: &mut F) -> f64
+where
+    F: FnMut(&[f32]) -> f64,
+{
+    let mut xp = x.to_vec();
+    xp[i] = x[i] + eps;
+    let fp = f(&xp);
+    xp[i] = x[i] - eps;
+    let fm = f(&xp);
+    (fp - fm) / (2.0 * eps as f64)
+}
+
+/// `|a − n| / max(1, |a|, |n|)` — relative error with an absolute floor.
+pub fn rel_err(analytic: f64, numeric: f64) -> f64 {
+    (analytic - numeric).abs() / analytic.abs().max(numeric.abs()).max(1.0)
+}
+
+/// Compare an analytic gradient against central differences of `f` over
+/// a strided coordinate sample of `x`. Returns the worst relative error,
+/// or an error naming the worst offending coordinate when it exceeds
+/// `opts.tol`.
+pub fn check<F>(label: &str, x: &[f32], analytic: &[f32], opts: &CheckOpts, f: &mut F) -> Result<f64>
+where
+    F: FnMut(&[f32]) -> f64,
+{
+    assert_eq!(x.len(), analytic.len(), "{label}: gradient length mismatch");
+    assert!(!x.is_empty(), "{label}: empty input");
+    let stride = opts.stride.max(1);
+    let mut worst = 0.0f64;
+    let mut worst_at = 0usize;
+    let mut coords: Vec<usize> = (0..x.len()).step_by(stride).collect();
+    if *coords.last().unwrap() != x.len() - 1 {
+        coords.push(x.len() - 1);
+    }
+    for i in coords {
+        let numeric = central_diff(x, i, opts.eps, f);
+        let e = rel_err(analytic[i] as f64, numeric);
+        if e > worst {
+            worst = e;
+            worst_at = i;
+        }
+    }
+    anyhow::ensure!(
+        worst <= opts.tol,
+        "{label}: gradient check failed at coordinate {worst_at}: analytic {}, numeric {}, \
+         rel err {worst:.3e} > tol {:.1e}",
+        analytic[worst_at],
+        central_diff(x, worst_at, opts.eps, f),
+        opts.tol
+    );
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadratic_passes_and_wrong_gradient_fails() {
+        // f(x) = Σ x², ∇f = 2x — exactly representable, so even loose
+        // steps agree tightly.
+        let x = vec![0.5f32, -1.25, 2.0, 0.0];
+        let grad: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+        let mut f = |xs: &[f32]| xs.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        let worst = check("quadratic", &x, &grad, &CheckOpts::default(), &mut f).unwrap();
+        assert!(worst < 1e-4, "worst {worst}");
+
+        let mut wrong = grad.clone();
+        wrong[1] += 0.5;
+        assert!(check("wrong", &x, &wrong, &CheckOpts::default(), &mut f).is_err());
+    }
+
+    #[test]
+    fn strided_sampling_still_covers_endpoints() {
+        let x = vec![1.0f32; 10];
+        let mut grad = vec![2.0f32; 10];
+        grad[9] = 99.0; // corrupt the last coordinate only
+        let mut f = |xs: &[f32]| xs.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        let err = check("tail", &x, &grad, &CheckOpts::strided(4), &mut f).unwrap_err();
+        assert!(err.to_string().contains("coordinate 9"), "{err}");
+    }
+
+    #[test]
+    fn rel_err_has_absolute_floor() {
+        assert!(rel_err(0.0, 5e-4) < 1e-3, "small-gradient noise tolerated");
+        assert!(rel_err(10.0, 10.1) < 2e-2);
+        assert!((rel_err(2.0, 1.0) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,339 @@
+//! Flat gradient storage matching [`ModelParams`]' checkpoint order.
+//!
+//! Gradients live in **one contiguous `Vec<f32>`** whose layout is exactly
+//! the tensor order of [`ModelParams::to_tensors`]: `tok_emb`, `pos_emb`,
+//! per block (`ln1 g/b`, `wq/bq`, `wk/bk`, `wv/bv`, `wo/bo`, `ln2 g/b`,
+//! `w1/b1`, `w2/b2`), `lnf g/b`, `head w/b`. One flat buffer keeps the
+//! optimizer a single offset walk, makes per-example gradient staging a
+//! plain `[batch · P]` slab, and lets the data-parallel reduction sum
+//! examples in a fixed order regardless of thread count.
+//!
+//! [`view_mut`] splits a flat buffer into named per-tensor slices (the
+//! backward pass writes through these); [`param_tensors`] /
+//! [`param_tensors_mut`] expose [`ModelParams`] in the *same* order, so
+//! "walk params and grads in lockstep" is a zip, never an index
+//! recomputation. A test pins that the two walks agree tensor-for-tensor.
+
+use crate::model::params::{BLOCK_TENSORS, EXTRA_TENSORS};
+use crate::model::{ModelConfig, ModelParams};
+
+/// Flat gradient buffer for one model (`len == cfg.param_count()`).
+#[derive(Debug, Clone)]
+pub struct Gradients {
+    flat: Vec<f32>,
+}
+
+impl Gradients {
+    /// A zeroed gradient buffer shaped for `cfg`.
+    pub fn zeros(cfg: &ModelConfig) -> Self {
+        Gradients { flat: vec![0.0; cfg.param_count()] }
+    }
+
+    /// Total f32 gradient entries (equals the model's parameter count).
+    pub fn len(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// True when the buffer holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.flat.is_empty()
+    }
+
+    /// The flat buffer, read-only.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.flat
+    }
+
+    /// The flat buffer, writable.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.flat
+    }
+
+    /// Reset every entry to zero (capacity untouched).
+    pub fn fill_zero(&mut self) {
+        self.flat.fill(0.0);
+    }
+
+    /// Named per-tensor views over the flat buffer.
+    pub fn view_mut(&mut self, cfg: &ModelConfig) -> GradsView<'_> {
+        view_mut(cfg, &mut self.flat)
+    }
+
+    /// Global L2 norm, accumulated in f64 in flat order (deterministic).
+    pub fn global_norm(&self) -> f64 {
+        self.flat.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt()
+    }
+
+    /// Multiply every entry by `s` (gradient clipping / batch averaging).
+    pub fn scale(&mut self, s: f32) {
+        for g in self.flat.iter_mut() {
+            *g *= s;
+        }
+    }
+}
+
+/// Gradient slices of one transformer block, in checkpoint order.
+#[derive(Debug)]
+pub struct BlockGrads<'a> {
+    pub ln1_g: &'a mut [f32],
+    pub ln1_b: &'a mut [f32],
+    pub wq: &'a mut [f32],
+    pub bq: &'a mut [f32],
+    pub wk: &'a mut [f32],
+    pub bk: &'a mut [f32],
+    pub wv: &'a mut [f32],
+    pub bv: &'a mut [f32],
+    pub wo: &'a mut [f32],
+    pub bo: &'a mut [f32],
+    pub ln2_g: &'a mut [f32],
+    pub ln2_b: &'a mut [f32],
+    pub w1: &'a mut [f32],
+    pub b1: &'a mut [f32],
+    pub w2: &'a mut [f32],
+    pub b2: &'a mut [f32],
+}
+
+/// Named gradient slices over one flat buffer, mirroring [`ModelParams`].
+#[derive(Debug)]
+pub struct GradsView<'a> {
+    pub tok_emb: &'a mut [f32],
+    pub pos_emb: &'a mut [f32],
+    pub blocks: Vec<BlockGrads<'a>>,
+    pub lnf_g: &'a mut [f32],
+    pub lnf_b: &'a mut [f32],
+    pub head_w: &'a mut [f32],
+    pub head_b: &'a mut [f32],
+}
+
+/// Split `rest` at `len`, returning the head and leaving the tail.
+pub(crate) fn carve<'a>(rest: &mut &'a mut [f32], len: usize) -> &'a mut [f32] {
+    let r = std::mem::take(rest);
+    let (head, tail) = r.split_at_mut(len);
+    *rest = tail;
+    head
+}
+
+/// Split a flat `[param_count]` buffer into named per-tensor slices in
+/// the canonical checkpoint order.
+pub fn view_mut<'a>(cfg: &ModelConfig, flat: &'a mut [f32]) -> GradsView<'a> {
+    assert_eq!(
+        flat.len(),
+        cfg.param_count(),
+        "flat gradient buffer does not match the model's parameter count"
+    );
+    let (d, h) = (cfg.dim, cfg.mlp_hidden);
+    let mut rest = flat;
+    let tok_emb = carve(&mut rest, cfg.vocab * d);
+    let pos_emb = carve(&mut rest, cfg.seq_len * d);
+    let blocks = (0..cfg.depth)
+        .map(|_| BlockGrads {
+            ln1_g: carve(&mut rest, d),
+            ln1_b: carve(&mut rest, d),
+            wq: carve(&mut rest, d * d),
+            bq: carve(&mut rest, d),
+            wk: carve(&mut rest, d * d),
+            bk: carve(&mut rest, d),
+            wv: carve(&mut rest, d * d),
+            bv: carve(&mut rest, d),
+            wo: carve(&mut rest, d * d),
+            bo: carve(&mut rest, d),
+            ln2_g: carve(&mut rest, d),
+            ln2_b: carve(&mut rest, d),
+            w1: carve(&mut rest, h * d),
+            b1: carve(&mut rest, h),
+            w2: carve(&mut rest, d * h),
+            b2: carve(&mut rest, d),
+        })
+        .collect();
+    let lnf_g = carve(&mut rest, d);
+    let lnf_b = carve(&mut rest, d);
+    let head_w = carve(&mut rest, cfg.classes * d);
+    let head_b = carve(&mut rest, cfg.classes);
+    debug_assert!(rest.is_empty());
+    GradsView { tok_emb, pos_emb, blocks, lnf_g, lnf_b, head_w, head_b }
+}
+
+/// Every parameter tensor of a model as read-only slices, in the same
+/// order the flat gradient buffer uses.
+pub fn param_tensors(p: &ModelParams) -> Vec<&[f32]> {
+    let mut out: Vec<&[f32]> =
+        Vec::with_capacity(EXTRA_TENSORS + BLOCK_TENSORS * p.blocks.len());
+    out.push(&p.tok_emb);
+    out.push(&p.pos_emb);
+    for b in &p.blocks {
+        out.push(&b.ln1_g);
+        out.push(&b.ln1_b);
+        out.push(&b.wq);
+        out.push(&b.bq);
+        out.push(&b.wk);
+        out.push(&b.bk);
+        out.push(&b.wv);
+        out.push(&b.bv);
+        out.push(&b.wo);
+        out.push(&b.bo);
+        out.push(&b.ln2_g);
+        out.push(&b.ln2_b);
+        out.push(&b.w1);
+        out.push(&b.b1);
+        out.push(&b.w2);
+        out.push(&b.b2);
+    }
+    out.push(&p.lnf_g);
+    out.push(&p.lnf_b);
+    out.push(&p.head_w);
+    out.push(&p.head_b);
+    out
+}
+
+/// Like [`param_tensors`], but mutable — the optimizer walks these in
+/// lockstep with the flat gradient / moment buffers.
+pub fn param_tensors_mut(p: &mut ModelParams) -> Vec<&mut [f32]> {
+    let mut out: Vec<&mut [f32]> =
+        Vec::with_capacity(EXTRA_TENSORS + BLOCK_TENSORS * p.blocks.len());
+    out.push(p.tok_emb.as_mut_slice());
+    out.push(p.pos_emb.as_mut_slice());
+    for b in &mut p.blocks {
+        out.push(b.ln1_g.as_mut_slice());
+        out.push(b.ln1_b.as_mut_slice());
+        out.push(b.wq.as_mut_slice());
+        out.push(b.bq.as_mut_slice());
+        out.push(b.wk.as_mut_slice());
+        out.push(b.bk.as_mut_slice());
+        out.push(b.wv.as_mut_slice());
+        out.push(b.bv.as_mut_slice());
+        out.push(b.wo.as_mut_slice());
+        out.push(b.bo.as_mut_slice());
+        out.push(b.ln2_g.as_mut_slice());
+        out.push(b.ln2_b.as_mut_slice());
+        out.push(b.w1.as_mut_slice());
+        out.push(b.b1.as_mut_slice());
+        out.push(b.w2.as_mut_slice());
+        out.push(b.b2.as_mut_slice());
+    }
+    out.push(p.lnf_g.as_mut_slice());
+    out.push(p.lnf_b.as_mut_slice());
+    out.push(p.head_w.as_mut_slice());
+    out.push(p.head_b.as_mut_slice());
+    out
+}
+
+/// Copy every parameter into one flat vector (canonical order).
+pub fn flatten_params(p: &ModelParams) -> Vec<f32> {
+    let mut out = Vec::with_capacity(p.count());
+    for t in param_tensors(p) {
+        out.extend_from_slice(t);
+    }
+    out
+}
+
+/// Overwrite every parameter from one flat vector (inverse of
+/// [`flatten_params`]).
+pub fn load_flat(p: &mut ModelParams, flat: &[f32]) {
+    let mut off = 0usize;
+    for t in param_tensors_mut(p) {
+        t.copy_from_slice(&flat[off..off + t.len()]);
+        off += t.len();
+    }
+    assert_eq!(off, flat.len(), "flat parameter vector does not match the model");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::OP_ATTN_MITA;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::new(9, 12, 8, 2, 2, 16, 3, OP_ATTN_MITA)
+    }
+
+    #[test]
+    fn view_partitions_the_whole_buffer() {
+        let c = cfg();
+        let mut g = Gradients::zeros(&c);
+        assert_eq!(g.len(), c.param_count());
+        let v = g.view_mut(&c);
+        let mut total = v.tok_emb.len() + v.pos_emb.len();
+        assert_eq!(v.tok_emb.len(), c.vocab * c.dim);
+        assert_eq!(v.blocks.len(), c.depth);
+        for b in &v.blocks {
+            assert_eq!(b.wq.len(), c.dim * c.dim);
+            assert_eq!(b.w1.len(), c.mlp_hidden * c.dim);
+            assert_eq!(b.w2.len(), c.dim * c.mlp_hidden);
+            total += b.ln1_g.len()
+                + b.ln1_b.len()
+                + b.wq.len()
+                + b.bq.len()
+                + b.wk.len()
+                + b.bk.len()
+                + b.wv.len()
+                + b.bv.len()
+                + b.wo.len()
+                + b.bo.len()
+                + b.ln2_g.len()
+                + b.ln2_b.len()
+                + b.w1.len()
+                + b.b1.len()
+                + b.w2.len()
+                + b.b2.len();
+        }
+        total += v.lnf_g.len() + v.lnf_b.len() + v.head_w.len() + v.head_b.len();
+        assert_eq!(total, c.param_count());
+    }
+
+    #[test]
+    fn grad_view_and_param_walk_share_one_order() {
+        // The optimizer's core assumption: the flat gradient layout and
+        // the parameter tensor walk have the same tensor boundaries.
+        let c = cfg();
+        let mut p = ModelParams::init(&c, 5);
+        let mut g = Gradients::zeros(&c);
+        // Stamp each grad tensor with its walk index...
+        {
+            let v = g.view_mut(&c);
+            let mut tensors: Vec<&mut [f32]> = vec![v.tok_emb, v.pos_emb];
+            for b in v.blocks {
+                tensors.extend([
+                    b.ln1_g, b.ln1_b, b.wq, b.bq, b.wk, b.bk, b.wv, b.bv, b.wo, b.bo, b.ln2_g,
+                    b.ln2_b, b.w1, b.b1, b.w2, b.b2,
+                ]);
+            }
+            tensors.extend([v.lnf_g, v.lnf_b, v.head_w, v.head_b]);
+            for (i, t) in tensors.iter_mut().enumerate() {
+                t.fill(i as f32);
+            }
+        }
+        // ...then confirm the parameter walk sees the same boundaries.
+        let mut off = 0usize;
+        for (i, t) in param_tensors_mut(&mut p).iter().enumerate() {
+            let seg = &g.as_slice()[off..off + t.len()];
+            assert!(seg.iter().all(|&x| x == i as f32), "tensor {i} misaligned");
+            off += t.len();
+        }
+        assert_eq!(off, g.len());
+    }
+
+    #[test]
+    fn flatten_roundtrip_and_scale_norm() {
+        let c = cfg();
+        let mut p = ModelParams::init(&c, 11);
+        let flat = flatten_params(&p);
+        assert_eq!(flat.len(), c.param_count());
+        let mut q = ModelParams::init(&c, 12);
+        load_flat(&mut q, &flat);
+        assert_eq!(p, q);
+
+        let mut g = Gradients::zeros(&c);
+        g.as_mut_slice()[0] = 3.0;
+        g.as_mut_slice()[1] = 4.0;
+        assert!((g.global_norm() - 5.0).abs() < 1e-12);
+        g.scale(0.5);
+        assert_eq!(g.as_slice()[0], 1.5);
+        assert!(!g.is_empty());
+
+        // load_flat writes through to the model (not a copy).
+        let mut flat2 = flat;
+        flat2[0] += 1.0;
+        load_flat(&mut p, &flat2);
+        assert_eq!(p.tok_emb[0], flat2[0]);
+    }
+}

@@ -1,0 +1,47 @@
+//! Native training subsystem: exact reverse-mode gradients for the
+//! MiTA transformer, an AdamW optimizer, and an end-to-end LRA training
+//! loop — pure Rust, no PJRT artifacts, no Python.
+//!
+//! The subsystem closes the train → checkpoint → serve loop natively:
+//!
+//! - [`backward`]: hand-derived layer adjoints (matmul/bias, LayerNorm,
+//!   GELU, softmax cross-entropy) plus both attention backwards — the
+//!   exact O(n²) dense softmax backward and the MiTA backward, which
+//!   recomputes the forward's landmark pooling, top-k picks, and argmax
+//!   routing bit-identically and treats those selections as constants
+//!   (straight-through), while gradients flow exactly through each
+//!   query's softmax over its expert's gathered KV pairs.
+//! - [`grads`]: the flat [`Gradients`] buffer in [`ModelParams`]'
+//!   checkpoint order, with named per-tensor views and the matching
+//!   parameter walk the optimizer zips against.
+//! - [`model_grad`]: per-example tape forward + reverse sweep, fanned
+//!   out over examples with a fixed-order gradient reduction — loss
+//!   curves are bit-identical across `MITA_NUM_THREADS`.
+//! - [`optim`]: [`AdamW`] with bias correction, decoupled weight decay,
+//!   and global-norm gradient clipping.
+//! - [`trainer`]: [`NativeTrainer`] — deterministic minibatch streams
+//!   over the LRA [`SeqTask`]s, periodic eval through the *inference*
+//!   forward, best-checkpoint saves through
+//!   [`crate::coordinator::checkpoint`].
+//! - [`gradcheck`]: central-difference checking used by the test suite
+//!   to pin every analytic gradient against numeric derivatives.
+//!
+//! The PJRT-artifact training driver ([`crate::coordinator::trainer`])
+//! is unchanged and independent; this module is the native counterpart.
+//! Derivation sketches and conventions: `docs/TRAINING.md`.
+//!
+//! [`ModelParams`]: crate::model::ModelParams
+//! [`SeqTask`]: crate::data::lra::SeqTask
+
+pub mod backward;
+pub mod gradcheck;
+pub mod grads;
+pub mod model_grad;
+pub mod optim;
+pub mod trainer;
+
+pub use backward::AttnKind;
+pub use grads::Gradients;
+pub use model_grad::{loss_and_gradients, BatchOutcome, TrainScratch};
+pub use optim::{AdamW, AdamWConfig};
+pub use trainer::{curve_json, json_num, loss_curve, NativeTrainer, TrainConfig, TrainOutcome};

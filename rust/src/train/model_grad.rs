@@ -1,0 +1,631 @@
+//! Whole-model loss + exact gradients for [`MitaModel`].
+//!
+//! Each example runs a **tape forward** — the same math as
+//! [`MitaModel::forward`] (it reuses the transformer's own
+//! `layer_norm_rows` / `add_bias_rows` / `gelu_in_place` helpers and the
+//! serial attention kernels), but keeping every intermediate activation
+//! in workspace-owned tape buffers — followed by the reverse sweep built
+//! from [`crate::train::backward`]'s layer adjoints. Both run serially
+//! inside one (example) work item over a pooled [`Workspace`], so the
+//! whole step is allocation-free in steady state.
+//!
+//! Batch parallelism and determinism: [`loss_and_gradients`] fans
+//! examples out over [`par_chunks_mut`] — each example accumulates into
+//! its **own** gradient slab — and then reduces slabs in *example-index
+//! order* per parameter chunk. The summation order is therefore a pure
+//! function of the batch, never of the thread schedule: loss curves and
+//! gradients are bit-identical for any `MITA_NUM_THREADS`.
+
+use anyhow::Result;
+
+use crate::kernels::linalg::{dot, matmul_nt, scale_in_place};
+use crate::kernels::par::par_chunks_mut;
+use crate::kernels::workspace::{Workspace, WorkspacePool};
+use crate::kernels::{dense_attention_mh, mita_attention_mh, MitaStats};
+use crate::model::transformer::{add_bias_rows, gelu_in_place, layer_norm_rows};
+use crate::model::MitaModel;
+use crate::train::backward::{
+    attention_backward_mh, bias_grad_acc, gelu_backward, layer_norm_backward, matmul_nn,
+    matmul_nn_acc, matmul_tn_acc, softmax_xent, AttnKind,
+};
+use crate::train::grads::{view_mut, Gradients};
+
+/// Parameters summed per reduction chunk (the unit of parallelism in the
+/// deterministic gradient reduction).
+const REDUCE_CHUNK: usize = 4096;
+
+/// Reusable per-example staging for one training step: gradient slab +
+/// loss/accuracy record per example. Kept across steps so steady-state
+/// training never touches the allocator.
+#[derive(Debug, Default)]
+pub struct TrainScratch {
+    slots: Vec<ExampleSlot>,
+}
+
+#[derive(Debug, Default)]
+struct ExampleSlot {
+    grad: Vec<f32>,
+    loss: f64,
+    correct: bool,
+}
+
+/// Result of one batch's loss/gradient computation.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOutcome {
+    /// Mean per-example cross-entropy loss.
+    pub loss: f64,
+    /// Examples whose argmax logit hit the label.
+    pub correct: usize,
+    /// Examples in the batch.
+    pub examples: usize,
+}
+
+impl BatchOutcome {
+    /// Batch accuracy in [0, 1].
+    pub fn accuracy(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.examples as f64
+        }
+    }
+}
+
+pub(crate) fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean loss and mean gradients of `model` on one labelled token batch.
+///
+/// `tokens` is row-major `[batch, seq_len]`, `labels` is `[batch]`.
+/// `grads` receives `∂(mean loss)/∂θ` in the canonical flat layout;
+/// MiTA routing statistics from the training forward accumulate into
+/// `stats`. Bit-identical across thread counts (see module docs).
+#[allow(clippy::too_many_arguments)]
+pub fn loss_and_gradients(
+    model: &MitaModel,
+    tokens: &[i32],
+    labels: &[i32],
+    batch: usize,
+    pool: &WorkspacePool,
+    scratch: &mut TrainScratch,
+    grads: &mut Gradients,
+    stats: &mut MitaStats,
+) -> Result<BatchOutcome> {
+    let cfg = &model.cfg;
+    let n = cfg.seq_len;
+    anyhow::ensure!(batch >= 1, "empty batch");
+    anyhow::ensure!(
+        tokens.len() == batch * n,
+        "tokens hold {} ids, want {} for [b={batch}, n={n}]",
+        tokens.len(),
+        batch * n
+    );
+    anyhow::ensure!(labels.len() == batch, "labels hold {} entries, want {batch}", labels.len());
+    for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            (0..cfg.vocab as i32).contains(&t),
+            "token {t} at flat position {i} outside vocab 0..{}",
+            cfg.vocab
+        );
+    }
+    for (i, &y) in labels.iter().enumerate() {
+        anyhow::ensure!(
+            (0..cfg.classes as i32).contains(&y),
+            "label {y} for example {i} outside 0..{}",
+            cfg.classes
+        );
+    }
+    // Resolve every block's backward up front (fail before any compute).
+    let kinds: Vec<AttnKind> = cfg
+        .block_kernels
+        .iter()
+        .map(|name| AttnKind::from_name(name))
+        .collect::<Result<Vec<_>>>()?;
+    let pcount = cfg.param_count();
+    anyhow::ensure!(grads.len() == pcount, "gradient buffer does not match the model");
+
+    if scratch.slots.len() < batch {
+        scratch.slots.resize_with(batch, ExampleSlot::default);
+    }
+    {
+        let slots = &mut scratch.slots[..batch];
+        par_chunks_mut(slots, 1, |i, chunk| {
+            let slot = &mut chunk[0];
+            slot.grad.resize(pcount, 0.0);
+            slot.grad.fill(0.0);
+            let mut pooled = pool.acquire();
+            let (ws, wstats) = pooled.parts();
+            let (loss, correct) = example_backward(
+                model,
+                &kinds,
+                &tokens[i * n..(i + 1) * n],
+                labels[i] as usize,
+                ws,
+                wstats,
+                &mut slot.grad,
+            );
+            slot.loss = loss;
+            slot.correct = correct;
+        });
+    }
+    pool.collect_stats(stats);
+
+    // Deterministic reduction: for every parameter, sum the per-example
+    // contributions in example-index order — the order is fixed by the
+    // batch regardless of which thread handles which chunk.
+    {
+        let slots = &scratch.slots[..batch];
+        par_chunks_mut(grads.as_mut_slice(), REDUCE_CHUNK, |ci, gchunk| {
+            let off = ci * REDUCE_CHUNK;
+            gchunk.fill(0.0);
+            for slot in slots {
+                for (g, &e) in gchunk.iter_mut().zip(&slot.grad[off..off + gchunk.len()]) {
+                    *g += e;
+                }
+            }
+        });
+    }
+    grads.scale(1.0 / batch as f32);
+
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    for slot in &scratch.slots[..batch] {
+        loss += slot.loss;
+        correct += slot.correct as usize;
+    }
+    Ok(BatchOutcome { loss: loss / batch as f64, correct, examples: batch })
+}
+
+/// One example's tape forward + reverse sweep. `grad` must be a zeroed
+/// `[param_count]` slab; the example's gradients accumulate into it.
+/// Returns (cross-entropy loss, argmax-correct).
+fn example_backward(
+    model: &MitaModel,
+    kinds: &[AttnKind],
+    tokens: &[i32],
+    label: usize,
+    ws: &mut Workspace,
+    stats: &mut MitaStats,
+    grad: &mut [f32],
+) -> (f64, bool) {
+    let cfg = &model.cfg;
+    let p = &model.params;
+    let (n, d, heads, hid) = (cfg.seq_len, cfg.dim, cfg.heads, cfg.mlp_hidden);
+    let (classes, depth) = (cfg.classes, cfg.depth);
+    let per = n * d;
+    let nh = n * hid;
+    debug_assert_eq!(tokens.len(), n);
+    debug_assert_eq!(kinds.len(), depth);
+    debug_assert_eq!(grad.len(), cfg.param_count());
+
+    // ---- tape buffers (workspace-owned, warm in steady state) ----
+    let mut h = ws.take_f32("train.h", (depth + 1) * per);
+    let mut mid = ws.take_f32("train.mid", depth * per);
+    let mut y1 = ws.take_f32("train.y1", depth * per);
+    let mut qkv = ws.take_f32("train.qkv", depth * 3 * per);
+    let mut attn = ws.take_f32("train.attn", depth * per);
+    let mut ln2 = ws.take_f32("train.ln2", depth * per);
+    let mut hpre = ws.take_f32("train.hpre", depth * nh);
+    let mut hpost = ws.take_f32("train.hpost", depth * nh);
+    let mut lnf = ws.take_f32("train.lnf", per);
+    let mut mean = ws.take_f32("train.mean", d);
+    let mut logits = ws.take_f32("train.logits", classes);
+    let mut proj = ws.take_f32("train.proj", per);
+
+    // ---- forward, writing the tape ----
+    // Token embedding + learned positions.
+    for (t, (&tok, hrow)) in tokens.iter().zip(h[..per].chunks_exact_mut(d)).enumerate() {
+        let tok = tok as usize;
+        let erow = &p.tok_emb[tok * d..(tok + 1) * d];
+        let prow = &p.pos_emb[t * d..(t + 1) * d];
+        for ((hv, &e), &pv) in hrow.iter_mut().zip(erow).zip(prow) {
+            *hv = e + pv;
+        }
+    }
+    for (l, (block, &kind)) in p.blocks.iter().zip(kinds).enumerate() {
+        // Pre-LN + fused Q/K/V projections.
+        layer_norm_rows(
+            &h[l * per..(l + 1) * per],
+            d,
+            &block.ln1_g,
+            &block.ln1_b,
+            &mut y1[l * per..(l + 1) * per],
+        );
+        {
+            let y_l = &y1[l * per..(l + 1) * per];
+            let (qb, rest) = qkv[l * 3 * per..(l + 1) * 3 * per].split_at_mut(per);
+            let (kb, vb) = rest.split_at_mut(per);
+            matmul_nt(y_l, &block.wq, n, d, d, qb);
+            add_bias_rows(qb, &block.bq);
+            matmul_nt(y_l, &block.wk, n, d, d, kb);
+            add_bias_rows(kb, &block.bk);
+            matmul_nt(y_l, &block.wv, n, d, d, vb);
+            add_bias_rows(vb, &block.bv);
+        }
+        // Attention (serial multi-head kernels; the parallelism is the
+        // surrounding per-example fan-out).
+        {
+            let qkv_l = &qkv[l * 3 * per..(l + 1) * 3 * per];
+            let (qs, ks, vs) = (&qkv_l[..per], &qkv_l[per..2 * per], &qkv_l[2 * per..]);
+            let out = &mut attn[l * per..(l + 1) * per];
+            match kind {
+                AttnKind::Mita => {
+                    mita_attention_mh(qs, ks, vs, n, heads, d, &cfg.mita, ws, out, stats)
+                }
+                AttnKind::Dense => dense_attention_mh(qs, ks, vs, n, heads, d, ws, out),
+            }
+        }
+        // Output projection + residual into `mid`.
+        matmul_nt(&attn[l * per..(l + 1) * per], &block.wo, n, d, d, &mut proj);
+        add_bias_rows(&mut proj, &block.bo);
+        {
+            let x = &h[l * per..(l + 1) * per];
+            for ((mv, &xv), &pv) in
+                mid[l * per..(l + 1) * per].iter_mut().zip(x).zip(proj.iter())
+            {
+                *mv = xv + pv;
+            }
+        }
+        // Pre-LN GELU MLP + residual into the next h snapshot.
+        layer_norm_rows(
+            &mid[l * per..(l + 1) * per],
+            d,
+            &block.ln2_g,
+            &block.ln2_b,
+            &mut ln2[l * per..(l + 1) * per],
+        );
+        matmul_nt(
+            &ln2[l * per..(l + 1) * per],
+            &block.w1,
+            n,
+            hid,
+            d,
+            &mut hpre[l * nh..(l + 1) * nh],
+        );
+        add_bias_rows(&mut hpre[l * nh..(l + 1) * nh], &block.b1);
+        hpost[l * nh..(l + 1) * nh].copy_from_slice(&hpre[l * nh..(l + 1) * nh]);
+        gelu_in_place(&mut hpost[l * nh..(l + 1) * nh]);
+        matmul_nt(&hpost[l * nh..(l + 1) * nh], &block.w2, n, d, hid, &mut proj);
+        add_bias_rows(&mut proj, &block.b2);
+        {
+            let mid_l = &mid[l * per..(l + 1) * per];
+            for ((hv, &mv), &pv) in
+                h[(l + 1) * per..(l + 2) * per].iter_mut().zip(mid_l).zip(proj.iter())
+            {
+                *hv = mv + pv;
+            }
+        }
+    }
+    // Final LN → mean-pool → classifier head.
+    layer_norm_rows(&h[depth * per..], d, &p.lnf_g, &p.lnf_b, &mut lnf);
+    mean.fill(0.0);
+    for row in lnf.chunks_exact(d) {
+        for (mc, &v) in mean.iter_mut().zip(row) {
+            *mc += v;
+        }
+    }
+    scale_in_place(&mut mean, 1.0 / n as f32);
+    for (lc, (wrow, &bc)) in logits.iter_mut().zip(p.head_w.chunks_exact(d).zip(&p.head_b)) {
+        *lc = dot(&mean, wrow) + bc;
+    }
+
+    // ---- loss seed ----
+    let mut dlogits = ws.take_f32("train.dlogits", classes);
+    let loss = softmax_xent(&logits, label, &mut dlogits);
+    let correct = argmax(&logits) == label;
+
+    // ---- reverse sweep ----
+    let mut gv = view_mut(cfg, grad);
+    let mut dmean = ws.take_f32("train.dmean", d);
+    matmul_nn(&dlogits, &p.head_w, 1, classes, d, &mut dmean);
+    matmul_tn_acc(&dlogits, &mean, 1, classes, d, gv.head_w);
+    bias_grad_acc(&dlogits, gv.head_b);
+    // Mean-pool adjoint: every sequence row receives dmean / n.
+    let mut dlnf = ws.take_f32("train.dlnf", per);
+    for drow in dlnf.chunks_exact_mut(d) {
+        for (dv, &mv) in drow.iter_mut().zip(dmean.iter()) {
+            *dv = mv / n as f32;
+        }
+    }
+    let mut dh = ws.take_f32("train.dh", per);
+    layer_norm_backward(&h[depth * per..], d, &p.lnf_g, &dlnf, &mut dh, gv.lnf_g, gv.lnf_b);
+
+    let mut dtmp = ws.take_f32("train.dtmp", per);
+    let mut dhid = ws.take_f32("train.dhid", nh);
+    let mut dhid2 = ws.take_f32("train.dhid2", nh);
+    let mut dln2 = ws.take_f32("train.dln2", per);
+    let mut dattn = ws.take_f32("train.dattn", per);
+    let mut dq = ws.take_f32("train.dq", per);
+    let mut dkb = ws.take_f32("train.dk", per);
+    let mut dvb = ws.take_f32("train.dv", per);
+    let mut dy = ws.take_f32("train.dy", per);
+    for l in (0..depth).rev() {
+        let block = &p.blocks[l];
+        let bg = &mut gv.blocks[l];
+        // dh holds ∂L/∂h_{l+1}. MLP branch first: h_out = mid + mlp, so
+        // the mlp-path seed is dh itself.
+        matmul_nn(&dh, &block.w2, n, d, hid, &mut dhid);
+        matmul_tn_acc(&dh, &hpost[l * nh..(l + 1) * nh], n, d, hid, bg.w2);
+        bias_grad_acc(&dh, bg.b2);
+        gelu_backward(&hpre[l * nh..(l + 1) * nh], &dhid, &mut dhid2);
+        matmul_nn(&dhid2, &block.w1, n, hid, d, &mut dln2);
+        matmul_tn_acc(&dhid2, &ln2[l * per..(l + 1) * per], n, hid, d, bg.w1);
+        bias_grad_acc(&dhid2, bg.b1);
+        layer_norm_backward(
+            &mid[l * per..(l + 1) * per],
+            d,
+            &block.ln2_g,
+            &dln2,
+            &mut dtmp,
+            bg.ln2_g,
+            bg.ln2_b,
+        );
+        // ∂L/∂mid = residual passthrough + LN2 path.
+        for (dhv, &tv) in dh.iter_mut().zip(dtmp.iter()) {
+            *dhv += tv;
+        }
+        // Attention branch: mid = x + attn·Woᵀ + bo, proj seed is dh.
+        matmul_nn(&dh, &block.wo, n, d, d, &mut dattn);
+        matmul_tn_acc(&dh, &attn[l * per..(l + 1) * per], n, d, d, bg.wo);
+        bias_grad_acc(&dh, bg.bo);
+        {
+            let qkv_l = &qkv[l * 3 * per..(l + 1) * 3 * per];
+            let (qs, ks, vs) = (&qkv_l[..per], &qkv_l[per..2 * per], &qkv_l[2 * per..]);
+            attention_backward_mh(
+                kinds[l], qs, ks, vs, n, heads, d, &cfg.mita, &dattn, ws, &mut dq, &mut dkb,
+                &mut dvb,
+            );
+        }
+        // Through the Q/K/V projections back to the LN1 output.
+        matmul_nn(&dq, &block.wq, n, d, d, &mut dy);
+        matmul_nn_acc(&dkb, &block.wk, n, d, d, &mut dy);
+        matmul_nn_acc(&dvb, &block.wv, n, d, d, &mut dy);
+        {
+            let y_l = &y1[l * per..(l + 1) * per];
+            matmul_tn_acc(&dq, y_l, n, d, d, bg.wq);
+            matmul_tn_acc(&dkb, y_l, n, d, d, bg.wk);
+            matmul_tn_acc(&dvb, y_l, n, d, d, bg.wv);
+        }
+        bias_grad_acc(&dq, bg.bq);
+        bias_grad_acc(&dkb, bg.bk);
+        bias_grad_acc(&dvb, bg.bv);
+        layer_norm_backward(
+            &h[l * per..(l + 1) * per],
+            d,
+            &block.ln1_g,
+            &dy,
+            &mut dtmp,
+            bg.ln1_g,
+            bg.ln1_b,
+        );
+        // ∂L/∂h_l = residual passthrough + LN1 path.
+        for (dhv, &tv) in dh.iter_mut().zip(dtmp.iter()) {
+            *dhv += tv;
+        }
+    }
+    // Embedding backward: scatter-add rows into the token table, add
+    // one-to-one into the positional table.
+    for (t, (&tok, drow)) in tokens.iter().zip(dh.chunks_exact(d)).enumerate() {
+        let tok = tok as usize;
+        for (g, &dv) in gv.tok_emb[tok * d..(tok + 1) * d].iter_mut().zip(drow) {
+            *g += dv;
+        }
+        for (g, &dv) in gv.pos_emb[t * d..(t + 1) * d].iter_mut().zip(drow) {
+            *g += dv;
+        }
+    }
+
+    ws.give_f32("train.h", h);
+    ws.give_f32("train.mid", mid);
+    ws.give_f32("train.y1", y1);
+    ws.give_f32("train.qkv", qkv);
+    ws.give_f32("train.attn", attn);
+    ws.give_f32("train.ln2", ln2);
+    ws.give_f32("train.hpre", hpre);
+    ws.give_f32("train.hpost", hpost);
+    ws.give_f32("train.lnf", lnf);
+    ws.give_f32("train.mean", mean);
+    ws.give_f32("train.logits", logits);
+    ws.give_f32("train.proj", proj);
+    ws.give_f32("train.dlogits", dlogits);
+    ws.give_f32("train.dmean", dmean);
+    ws.give_f32("train.dlnf", dlnf);
+    ws.give_f32("train.dh", dh);
+    ws.give_f32("train.dtmp", dtmp);
+    ws.give_f32("train.dhid", dhid);
+    ws.give_f32("train.dhid2", dhid2);
+    ws.give_f32("train.dln2", dln2);
+    ws.give_f32("train.dattn", dattn);
+    ws.give_f32("train.dq", dq);
+    ws.give_f32("train.dk", dkb);
+    ws.give_f32("train.dv", dvb);
+    ws.give_f32("train.dy", dy);
+    (loss, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+    use crate::model::ModelConfig;
+
+    fn tiny_model(kernel: &str, seed: u64) -> MitaModel {
+        MitaModel::init(ModelConfig::new(7, 10, 8, 2, 2, 12, 3, kernel), seed).unwrap()
+    }
+
+    fn tiny_batch(model: &MitaModel, batch: usize, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let cfg = &model.cfg;
+        let mut rng = Rng::new(seed);
+        let tokens =
+            (0..batch * cfg.seq_len).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let labels = (0..batch).map(|_| rng.below(cfg.classes) as i32).collect();
+        (tokens, labels)
+    }
+
+    #[test]
+    fn batch_loss_matches_serial_single_examples() {
+        for kernel in [OP_ATTN_MITA, OP_ATTN_DENSE] {
+            let model = tiny_model(kernel, 5);
+            let cfg = &model.cfg;
+            let (tokens, labels) = tiny_batch(&model, 4, 1);
+            let pool = WorkspacePool::new();
+            let mut scratch = TrainScratch::default();
+            let mut grads = Gradients::zeros(cfg);
+            let mut stats = MitaStats::default();
+            let out = loss_and_gradients(
+                &model, &tokens, &labels, 4, &pool, &mut scratch, &mut grads, &mut stats,
+            )
+            .unwrap();
+            assert_eq!(out.examples, 4);
+            assert!(out.loss.is_finite() && out.loss > 0.0);
+
+            // Mean of four single-example batches must agree exactly:
+            // the per-example computation is identical and the reduction
+            // is a fixed-order sum.
+            let mut sum_flat = vec![0.0f32; cfg.param_count()];
+            let mut sum_loss = 0.0f64;
+            for i in 0..4 {
+                let mut g1 = Gradients::zeros(cfg);
+                let o1 = loss_and_gradients(
+                    &model,
+                    &tokens[i * cfg.seq_len..(i + 1) * cfg.seq_len],
+                    &labels[i..i + 1],
+                    1,
+                    &pool,
+                    &mut scratch,
+                    &mut g1,
+                    &mut stats,
+                )
+                .unwrap();
+                sum_loss += o1.loss;
+                for (s, &g) in sum_flat.iter_mut().zip(g1.as_slice()) {
+                    *s += g;
+                }
+            }
+            assert!((out.loss - sum_loss / 4.0).abs() < 1e-12, "{kernel}: loss mismatch");
+            for (i, (&g, &s)) in grads.as_slice().iter().zip(&sum_flat).enumerate() {
+                assert!(
+                    (g - s / 4.0).abs() <= 1e-6 * (1.0 + s.abs()),
+                    "{kernel}: grad {i}: batched {g} vs mean-of-singles {}",
+                    s / 4.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tape_forward_loss_matches_inference_forward_exactly() {
+        // The training-time tape forward must compute the *same function*
+        // the inference/serving forward runs: same helpers, same op
+        // order, bit-identical logits — so the mean training loss equals
+        // the f64 cross-entropy of `MitaModel::forward`'s logits exactly.
+        // This pins the two forwards against silent drift.
+        for kernel in [OP_ATTN_MITA, OP_ATTN_DENSE] {
+            let model = tiny_model(kernel, 13);
+            let (tokens, labels) = tiny_batch(&model, 3, 9);
+            let pool = WorkspacePool::new();
+            let mut scratch = TrainScratch::default();
+            let mut grads = Gradients::zeros(&model.cfg);
+            let mut stats = MitaStats::default();
+            let out = loss_and_gradients(
+                &model, &tokens, &labels, 3, &pool, &mut scratch, &mut grads, &mut stats,
+            )
+            .unwrap();
+
+            let registry = model.registry();
+            let mut mscratch = crate::model::ModelScratch::default();
+            let logits = model
+                .forward(&tokens, 3, 3, &registry, &pool, &mut mscratch, &mut stats)
+                .unwrap();
+            let classes = model.cfg.classes;
+            let mut want = 0.0f64;
+            for (row, &y) in logits.chunks_exact(classes).zip(&labels) {
+                want += crate::train::backward::softmax_xent_loss(row, y as usize);
+            }
+            want /= 3.0;
+            assert_eq!(
+                out.loss.to_bits(),
+                want.to_bits(),
+                "{kernel}: training forward drifted from the inference forward"
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_are_finite_and_mostly_nonzero() {
+        let model = tiny_model(OP_ATTN_MITA, 9);
+        let (tokens, labels) = tiny_batch(&model, 3, 2);
+        let pool = WorkspacePool::new();
+        let mut scratch = TrainScratch::default();
+        let mut grads = Gradients::zeros(&model.cfg);
+        let mut stats = MitaStats::default();
+        loss_and_gradients(
+            &model, &tokens, &labels, 3, &pool, &mut scratch, &mut grads, &mut stats,
+        )
+        .unwrap();
+        assert!(grads.as_slice().iter().all(|g| g.is_finite()));
+        let nonzero = grads.as_slice().iter().filter(|&&g| g != 0.0).count();
+        assert!(
+            nonzero * 2 > grads.len(),
+            "most gradients should be nonzero (got {nonzero}/{})",
+            grads.len()
+        );
+        assert!(stats.queries > 0, "training forward records MiTA routing stats");
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        let model = tiny_model(OP_ATTN_DENSE, 3);
+        let (tokens, labels) = tiny_batch(&model, 2, 3);
+        let pool = WorkspacePool::new();
+        let mut scratch = TrainScratch::default();
+        let mut grads = Gradients::zeros(&model.cfg);
+        let mut stats = MitaStats::default();
+        let mut run = |toks: &[i32], labs: &[i32], b: usize| {
+            loss_and_gradients(
+                &model, toks, labs, b, &pool, &mut scratch, &mut grads, &mut stats,
+            )
+            .is_err()
+        };
+        assert!(run(&tokens[1..], &labels, 2), "wrong token count");
+        assert!(run(&tokens, &labels[..1], 2), "wrong label count");
+        assert!(run(&tokens, &labels, 0), "empty batch");
+        let mut bad = tokens.clone();
+        bad[0] = model.cfg.vocab as i32;
+        assert!(run(&bad, &labels, 2), "out-of-vocab token");
+        let bad_labels = vec![model.cfg.classes as i32; 2];
+        assert!(run(&tokens, &bad_labels, 2), "out-of-range label");
+    }
+
+    #[test]
+    fn steady_state_is_bit_identical_and_alloc_stable() {
+        let model = tiny_model(OP_ATTN_MITA, 11);
+        let (tokens, labels) = tiny_batch(&model, 3, 7);
+        let pool = WorkspacePool::new();
+        let mut scratch = TrainScratch::default();
+        let mut grads = Gradients::zeros(&model.cfg);
+        let mut stats = MitaStats::default();
+        let run = |scratch: &mut TrainScratch, grads: &mut Gradients, stats: &mut MitaStats| {
+            loss_and_gradients(&model, &tokens, &labels, 3, &pool, scratch, grads, stats)
+                .unwrap()
+        };
+        let first = run(&mut scratch, &mut grads, &mut stats);
+        let first_flat = grads.as_slice().to_vec();
+        for _ in 0..3 {
+            let again = run(&mut scratch, &mut grads, &mut stats);
+            assert_eq!(again.loss.to_bits(), first.loss.to_bits());
+            assert_eq!(grads.as_slice(), first_flat.as_slice());
+        }
+        // created() counts peak concurrent demand: bounded by the batch
+        // (one workspace per in-flight example), not the step count.
+        assert!(pool.created() >= 1 && pool.created() <= 3, "created {}", pool.created());
+    }
+}

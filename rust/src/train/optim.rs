@@ -1,0 +1,209 @@
+//! AdamW with bias correction and global-norm gradient clipping.
+//!
+//! The optimizer state is two flat f32 moment buffers (`mu`, `nu`)
+//! sharing the canonical parameter layout of
+//! [`crate::train::grads`]; a step walks the model's tensors in that
+//! order (via [`param_tensors_mut`]) zipped against the flat gradient
+//! and moment slices — one serial offset walk, deterministic by
+//! construction. Per-element math runs in f64 and rounds once back to
+//! f32, matching the reference AdamW update:
+//!
+//! ```text
+//! μ ← β₁μ + (1−β₁)g          ν ← β₂ν + (1−β₂)g²
+//! μ̂ = μ/(1−β₁ᵗ)              ν̂ = ν/(1−β₂ᵗ)
+//! θ ← θ − lr·μ̂/(√ν̂ + ε) − lr·λ·θ        (decoupled weight decay)
+//! ```
+
+use crate::model::ModelParams;
+use crate::train::grads::{param_tensors_mut, Gradients};
+
+/// AdamW hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamWConfig {
+    /// Learning rate.
+    pub lr: f64,
+    /// First-moment decay β₁.
+    pub beta1: f64,
+    /// Second-moment decay β₂.
+    pub beta2: f64,
+    /// Denominator stabilizer ε.
+    pub eps: f64,
+    /// Decoupled weight decay λ (0 disables).
+    pub weight_decay: f64,
+    /// Global L2-norm gradient clip (0 disables).
+    pub grad_clip: f64,
+}
+
+impl Default for AdamWConfig {
+    fn default() -> Self {
+        AdamWConfig {
+            lr: 1e-2,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.01,
+            grad_clip: 1.0,
+        }
+    }
+}
+
+impl AdamWConfig {
+    /// Same config with a different learning rate.
+    pub fn with_lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+}
+
+/// AdamW optimizer state for one model.
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    /// Hyperparameters (mutable so schedules can adjust `lr` between
+    /// steps without rebuilding the moment state).
+    pub cfg: AdamWConfig,
+    mu: Vec<f32>,
+    nu: Vec<f32>,
+    steps: usize,
+}
+
+impl AdamW {
+    /// Fresh (zero-moment) state for `param_count` parameters.
+    pub fn new(param_count: usize, cfg: AdamWConfig) -> Self {
+        AdamW { cfg, mu: vec![0.0; param_count], nu: vec![0.0; param_count], steps: 0 }
+    }
+
+    /// Optimizer steps taken so far (the bias-correction exponent).
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Parameter count this state was sized for.
+    pub fn param_count(&self) -> usize {
+        self.mu.len()
+    }
+
+    /// Apply one update in place. `grads` is consumed as ∂loss/∂θ (it is
+    /// rescaled here when clipping triggers). Returns the pre-clip global
+    /// gradient norm, for logging.
+    pub fn step(&mut self, params: &mut ModelParams, grads: &mut Gradients) -> f64 {
+        assert_eq!(
+            grads.len(),
+            self.mu.len(),
+            "gradient buffer does not match the optimizer state"
+        );
+        let norm = grads.global_norm();
+        if self.cfg.grad_clip > 0.0 && norm > self.cfg.grad_clip {
+            grads.scale((self.cfg.grad_clip / norm) as f32);
+        }
+        self.steps += 1;
+        let t = self.steps as i32;
+        let bc1 = 1.0 - self.cfg.beta1.powi(t);
+        let bc2 = 1.0 - self.cfg.beta2.powi(t);
+        let (lr, b1, b2, eps, wd) =
+            (self.cfg.lr, self.cfg.beta1, self.cfg.beta2, self.cfg.eps, self.cfg.weight_decay);
+        let g = grads.as_slice();
+        let mut off = 0usize;
+        for tensor in param_tensors_mut(params) {
+            for (i, p) in tensor.iter_mut().enumerate() {
+                let j = off + i;
+                let gd = g[j] as f64;
+                let m64 = b1 * (self.mu[j] as f64) + (1.0 - b1) * gd;
+                let v64 = b2 * (self.nu[j] as f64) + (1.0 - b2) * gd * gd;
+                self.mu[j] = m64 as f32;
+                self.nu[j] = v64 as f32;
+                let mhat = m64 / bc1;
+                let vhat = v64 / bc2;
+                let upd = lr * (mhat / (vhat.sqrt() + eps)) + lr * wd * (*p as f64);
+                *p = ((*p as f64) - upd) as f32;
+            }
+            off += tensor.len();
+        }
+        assert_eq!(off, g.len(), "parameter walk does not cover the gradient buffer");
+        norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::OP_ATTN_DENSE;
+    use crate::model::ModelConfig;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::new(5, 6, 4, 2, 1, 8, 3, OP_ATTN_DENSE)
+    }
+
+    #[test]
+    fn first_step_matches_bias_corrected_closed_form() {
+        // At t = 1, μ̂ = g and ν̂ = g² exactly, so the update (with λ = 0,
+        // no clip) is lr · g / (|g| + ε) ≈ lr · sign(g).
+        let c = cfg();
+        let mut p = ModelParams::init(&c, 1);
+        let before = p.tok_emb.clone();
+        let opt_cfg = AdamWConfig {
+            lr: 0.1,
+            weight_decay: 0.0,
+            grad_clip: 0.0,
+            ..AdamWConfig::default()
+        };
+        let mut opt = AdamW::new(c.param_count(), opt_cfg);
+        let mut g = Gradients::zeros(&c);
+        g.as_mut_slice()[0] = 0.5; // first tok_emb coordinate
+        g.as_mut_slice()[1] = -2.0;
+        let norm = opt.step(&mut p, &mut g);
+        assert!((norm - (0.25f64 + 4.0).sqrt()).abs() < 1e-6);
+        assert_eq!(opt.steps(), 1);
+        assert!((p.tok_emb[0] - (before[0] - 0.1)).abs() < 1e-5, "≈ −lr·sign(g)");
+        assert!((p.tok_emb[1] - (before[1] + 0.1)).abs() < 1e-5);
+        // Untouched coordinates (zero grad, zero decay) stay put.
+        assert_eq!(p.tok_emb[2], before[2]);
+    }
+
+    #[test]
+    fn clipping_rescales_to_the_norm_budget() {
+        let c = cfg();
+        let mut p = ModelParams::init(&c, 2);
+        let cfg = AdamWConfig { grad_clip: 1.0, ..Default::default() };
+        let mut opt = AdamW::new(c.param_count(), cfg);
+        let mut g = Gradients::zeros(&c);
+        g.as_mut_slice()[0] = 3.0;
+        g.as_mut_slice()[1] = 4.0; // norm 5 > clip 1
+        let norm = opt.step(&mut p, &mut g);
+        assert!((norm - 5.0).abs() < 1e-6, "returns the pre-clip norm");
+        assert!((g.global_norm() - 1.0).abs() < 1e-5, "grads rescaled to the budget");
+    }
+
+    #[test]
+    fn weight_decay_shrinks_unused_params() {
+        let c = cfg();
+        let mut p = ModelParams::init(&c, 3);
+        let before = p.head_w.clone();
+        let mut opt = AdamW::new(
+            c.param_count(),
+            AdamWConfig { lr: 0.1, weight_decay: 0.1, ..Default::default() },
+        );
+        let mut g = Gradients::zeros(&c); // zero gradient everywhere
+        opt.step(&mut p, &mut g);
+        for (after, &b) in p.head_w.iter().zip(&before) {
+            assert!((after - b * (1.0 - 0.1 * 0.1)).abs() < 1e-6, "θ(1 − lr·λ)");
+        }
+    }
+
+    #[test]
+    fn steps_are_deterministic() {
+        let c = cfg();
+        let run = || {
+            let mut p = ModelParams::init(&c, 4);
+            let mut opt = AdamW::new(c.param_count(), AdamWConfig::default());
+            for s in 0..5 {
+                let mut g = Gradients::zeros(&c);
+                for (i, gv) in g.as_mut_slice().iter_mut().enumerate() {
+                    *gv = ((i * 7 + s * 13) % 11) as f32 * 0.01 - 0.05;
+                }
+                opt.step(&mut p, &mut g);
+            }
+            p
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,476 @@
+//! `NativeTrainer` — the end-to-end native training loop over LRA tasks.
+//!
+//! One step: draw a deterministic minibatch from the task's train split
+//! (its own `data::rng` stream, keyed by the trainer seed and step
+//! index), compute mean loss + exact gradients
+//! ([`crate::train::model_grad::loss_and_gradients`] — per-example data
+//! parallelism with a fixed reduction order), and apply one [`AdamW`]
+//! update. Periodic evaluation runs the *inference* forward
+//! ([`MitaModel::forward`]) over the val split — the same code path
+//! serving executes — so a saved checkpoint reproduces the trainer's
+//! eval logits exactly when reloaded through
+//! `NativeBackend`/`BindCheckpoint`. Checkpoints go through
+//! [`crate::coordinator::checkpoint`]'s container, so `serve-model` and
+//! `model-check` consume training output unchanged.
+//!
+//! Training history reuses [`StepRecord`] and evaluation reuses
+//! [`EvalResult`] from the coordinator layer, so reporting code works
+//! on both the PJRT-artifact driver ([`crate::coordinator::Trainer`])
+//! and this native path.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Streaming;
+use crate::coordinator::trainer::{EvalResult, StepRecord};
+use crate::data::lra::{self, SeqTask};
+use crate::data::rng::Rng;
+use crate::data::Split;
+use crate::kernels::api::KernelRegistry;
+use crate::kernels::workspace::WorkspacePool;
+use crate::kernels::MitaStats;
+use crate::model::{MitaModel, ModelScratch};
+use crate::train::backward::{softmax_xent_loss, AttnKind};
+use crate::train::grads::Gradients;
+use crate::train::model_grad::{argmax, loss_and_gradients, TrainScratch};
+use crate::train::optim::{AdamW, AdamWConfig};
+
+/// Stream tag separating minibatch sampling from every other
+/// `Rng::derive` consumer.
+const STREAM_MINIBATCH: u64 = 0x7472_4149;
+
+/// Settings of one [`NativeTrainer::train`] run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Optimizer steps to take.
+    pub steps: usize,
+    /// Examples per minibatch.
+    pub batch: usize,
+    /// Evaluate every this many steps (0 = only the final eval).
+    pub eval_every: usize,
+    /// Val-split batches per evaluation.
+    pub eval_batches: usize,
+    /// Log a line every this many steps (0 = silent).
+    pub log_every: usize,
+    /// Save the best-eval-loss model here (the final eval participates,
+    /// so a configured path is always written).
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            batch: 8,
+            eval_every: 25,
+            eval_batches: 4,
+            log_every: 0,
+            checkpoint: None,
+        }
+    }
+}
+
+/// Summary of one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// Steps taken in this run.
+    pub steps: usize,
+    /// Loss of the run's first step.
+    pub first_loss: f64,
+    /// Loss of the run's last step.
+    pub final_loss: f64,
+    /// Mean loss over the run's final quarter (robust convergence
+    /// summary, mirrors the PJRT driver's `tail_loss`).
+    pub tail_loss: f64,
+    /// Evaluation after the last step.
+    pub final_eval: EvalResult,
+    /// Best evaluation seen (lowest val loss, final included).
+    pub best_eval: EvalResult,
+    /// Mean wall-clock per step over the run.
+    pub mean_step_secs: f64,
+}
+
+/// Native training loop: model + optimizer + reusable step buffers.
+pub struct NativeTrainer {
+    model: MitaModel,
+    registry: KernelRegistry,
+    pool: WorkspacePool,
+    opt: AdamW,
+    grads: Gradients,
+    scratch: TrainScratch,
+    eval_scratch: ModelScratch,
+    stats: MitaStats,
+    eval_stats: MitaStats,
+    seed: u64,
+    /// One record per optimizer step taken (across `train` calls).
+    pub history: Vec<StepRecord>,
+}
+
+impl NativeTrainer {
+    /// Build a trainer around `model`. Fails early if the model config is
+    /// invalid or any block's kernel has no native backward.
+    pub fn new(model: MitaModel, optim: AdamWConfig, seed: u64) -> Result<Self> {
+        model.cfg.validate()?;
+        for name in &model.cfg.block_kernels {
+            AttnKind::from_name(name)?;
+        }
+        let registry = model.registry();
+        let opt = AdamW::new(model.cfg.param_count(), optim);
+        let grads = Gradients::zeros(&model.cfg);
+        Ok(NativeTrainer {
+            model,
+            registry,
+            pool: WorkspacePool::new(),
+            opt,
+            grads,
+            scratch: TrainScratch::default(),
+            eval_scratch: ModelScratch::default(),
+            stats: MitaStats::default(),
+            eval_stats: MitaStats::default(),
+            seed,
+            history: Vec::new(),
+        })
+    }
+
+    /// The model being trained.
+    pub fn model(&self) -> &MitaModel {
+        &self.model
+    }
+
+    /// Consume the trainer, keeping the trained model.
+    pub fn into_model(self) -> MitaModel {
+        self.model
+    }
+
+    /// Optimizer steps taken.
+    pub fn steps_taken(&self) -> usize {
+        self.opt.steps()
+    }
+
+    /// MiTA routing statistics accumulated across *training* forwards
+    /// only — evaluation traffic lands in its own accumulator so this
+    /// metric is invariant to `eval_every` / `eval_batches`.
+    pub fn mita_stats(&self) -> &MitaStats {
+        &self.stats
+    }
+
+    /// MiTA routing statistics accumulated across evaluation forwards.
+    pub fn eval_mita_stats(&self) -> &MitaStats {
+        &self.eval_stats
+    }
+
+    /// The deterministic minibatch of training step `step`: `batch`
+    /// sample indices drawn from `Rng::derive(seed, [tag, step])`, so any
+    /// step's batch can be regenerated independently of the others.
+    pub fn minibatch(
+        &self,
+        task: &dyn SeqTask,
+        batch: usize,
+        step: usize,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let n = task.seq_len();
+        let mut rng = Rng::derive(self.seed, &[STREAM_MINIBATCH, step as u64]);
+        let mut tokens = Vec::with_capacity(batch * n);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (toks, label) = task.sample(Split::Train, rng.next_u64());
+            debug_assert_eq!(toks.len(), n);
+            tokens.extend_from_slice(&toks);
+            labels.push(label);
+        }
+        (tokens, labels)
+    }
+
+    /// The model must be able to embed the task's tokens and score its
+    /// classes; checked once per run for a readable error.
+    fn check_task(&self, task: &dyn SeqTask) -> Result<()> {
+        let cfg = &self.model.cfg;
+        anyhow::ensure!(
+            task.seq_len() == cfg.seq_len,
+            "task seq_len {} != model seq_len {}",
+            task.seq_len(),
+            cfg.seq_len
+        );
+        anyhow::ensure!(
+            task.vocab() <= cfg.vocab,
+            "model vocab {} cannot embed task vocab {}",
+            cfg.vocab,
+            task.vocab()
+        );
+        anyhow::ensure!(
+            task.classes() == cfg.classes,
+            "task classes {} != model classes {}",
+            task.classes(),
+            cfg.classes
+        );
+        Ok(())
+    }
+
+    /// One optimizer step on the next deterministic minibatch.
+    pub fn step(&mut self, task: &dyn SeqTask, batch: usize) -> Result<StepRecord> {
+        self.check_task(task)?;
+        let t0 = Instant::now();
+        let (tokens, labels) = self.minibatch(task, batch, self.history.len());
+        let out = loss_and_gradients(
+            &self.model,
+            &tokens,
+            &labels,
+            batch,
+            &self.pool,
+            &mut self.scratch,
+            &mut self.grads,
+            &mut self.stats,
+        )?;
+        self.opt.step(&mut self.model.params, &mut self.grads);
+        let rec = StepRecord {
+            step: self.history.len(),
+            loss: out.loss,
+            batch_acc: out.accuracy(),
+            secs: t0.elapsed().as_secs_f64(),
+        };
+        self.history.push(rec.clone());
+        Ok(rec)
+    }
+
+    /// Evaluate on the task's val split through the *inference* forward —
+    /// the exact code path serving runs, so checkpoint reloads reproduce
+    /// these logits bit-for-bit.
+    pub fn eval(&mut self, task: &dyn SeqTask, batches: usize, batch: usize) -> Result<EvalResult> {
+        self.check_task(task)?;
+        anyhow::ensure!(batches >= 1 && batch >= 1, "empty evaluation");
+        let classes = self.model.cfg.classes;
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        let mut examples = 0usize;
+        for b in 0..batches {
+            let start = (b * batch) as u64;
+            let (tokens, labels) = lra::batch_host(task, Split::Val, start, batch);
+            let logits = self.model.forward(
+                &tokens,
+                batch,
+                batch,
+                &self.registry,
+                &self.pool,
+                &mut self.eval_scratch,
+                &mut self.eval_stats,
+            )?;
+            for (row, &y) in logits.chunks_exact(classes).zip(&labels) {
+                loss += softmax_xent_loss(row, y as usize);
+                correct += (argmax(row) == y as usize) as usize;
+            }
+            examples += batch;
+        }
+        Ok(EvalResult {
+            loss: loss / examples as f64,
+            accuracy: correct as f64 / examples as f64,
+            miou: None,
+            examples,
+        })
+    }
+
+    /// Run the full loop: steps + periodic eval + best-checkpoint save.
+    pub fn train(&mut self, task: &dyn SeqTask, cfg: &TrainConfig) -> Result<TrainOutcome> {
+        self.check_task(task)?;
+        anyhow::ensure!(cfg.steps >= 1 && cfg.batch >= 1, "degenerate training run");
+        let run_start = self.history.len();
+        let mut best: Option<EvalResult> = None;
+        for s in 0..cfg.steps {
+            let rec = self.step(task, cfg.batch)?;
+            if cfg.log_every > 0 && (s + 1) % cfg.log_every == 0 {
+                eprintln!(
+                    "[train-native] step {:4}/{} loss={:.4} batch_acc={:.3}",
+                    s + 1,
+                    cfg.steps,
+                    rec.loss,
+                    rec.batch_acc
+                );
+            }
+            if cfg.eval_every > 0 && (s + 1) % cfg.eval_every == 0 && s + 1 < cfg.steps {
+                let ev = self.eval(task, cfg.eval_batches.max(1), cfg.batch)?;
+                if cfg.log_every > 0 {
+                    eprintln!(
+                        "[train-native] eval @ step {}: loss={:.4} acc={:.3}",
+                        s + 1,
+                        ev.loss,
+                        ev.accuracy
+                    );
+                }
+                self.keep_best(&mut best, ev, cfg)?;
+            }
+        }
+        let final_eval = self.eval(task, cfg.eval_batches.max(1), cfg.batch)?;
+        self.keep_best(&mut best, final_eval.clone(), cfg)?;
+        let run = &self.history[run_start..];
+        let tail = &run[run.len() - (run.len() / 4).max(1)..];
+        let mut secs = Streaming::default();
+        for r in run {
+            secs.push(r.secs);
+        }
+        Ok(TrainOutcome {
+            steps: run.len(),
+            first_loss: run[0].loss,
+            final_loss: run[run.len() - 1].loss,
+            tail_loss: tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64,
+            final_eval,
+            best_eval: best.expect("final eval always participates"),
+            mean_step_secs: secs.mean(),
+        })
+    }
+
+    /// Track the lowest-val-loss eval, checkpointing the current model
+    /// whenever it improves.
+    fn keep_best(
+        &self,
+        best: &mut Option<EvalResult>,
+        ev: EvalResult,
+        cfg: &TrainConfig,
+    ) -> Result<()> {
+        let improved = best.as_ref().map(|b| ev.loss < b.loss).unwrap_or(true);
+        if improved {
+            if let Some(path) = &cfg.checkpoint {
+                self.model.save(path)?;
+            }
+            *best = Some(ev);
+        }
+        Ok(())
+    }
+}
+
+/// `(step, loss)` pairs for [`crate::harness::figures::loss_curve_chart`].
+pub fn loss_curve(history: &[StepRecord]) -> Vec<(f64, f64)> {
+    history.iter().map(|r| (r.step as f64, r.loss)).collect()
+}
+
+/// Format a number for hand-rolled JSON: non-finite values (a diverged
+/// run's NaN loss) become `null` so the artifact stays parseable.
+pub fn json_num(x: f64, prec: usize) -> String {
+    if x.is_finite() {
+        format!("{x:.prec$}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Deterministic JSON for `--curve-out`: one record per step.
+pub fn curve_json(history: &[StepRecord]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::from("{\n  \"records\": [\n");
+    for (i, r) in history.iter().enumerate() {
+        let comma = if i + 1 < history.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"step\": {}, \"loss\": {}, \"batch_acc\": {}, \"secs\": {}}}{comma}",
+            r.step,
+            json_num(r.loss, 6),
+            json_num(r.batch_acc, 4),
+            json_num(r.secs, 6)
+        );
+    }
+    let _ = writeln!(out, "  ],");
+    let _ = writeln!(out, "  \"steps\": {}", history.len());
+    out.push('}');
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+    use crate::model::ModelConfig;
+
+    fn tiny_task() -> Box<dyn SeqTask> {
+        lra::by_name("listops", 32, 16, 7)
+    }
+
+    fn tiny_trainer(kernel: &str) -> NativeTrainer {
+        let task = tiny_task();
+        let cfg = ModelConfig::for_task(task.as_ref(), 16, 2, 1, kernel);
+        let model = MitaModel::init(cfg, 3).unwrap();
+        NativeTrainer::new(model, AdamWConfig::default(), 5).unwrap()
+    }
+
+    #[test]
+    fn minibatches_are_deterministic_per_step_and_differ_across_steps() {
+        let trainer = tiny_trainer(OP_ATTN_MITA);
+        let task = tiny_task();
+        let a = trainer.minibatch(task.as_ref(), 4, 0);
+        let b = trainer.minibatch(task.as_ref(), 4, 0);
+        assert_eq!(a, b, "same step must yield the same batch");
+        let c = trainer.minibatch(task.as_ref(), 4, 1);
+        assert_ne!(a.0, c.0, "different steps draw different batches");
+        assert_eq!(a.0.len(), 4 * 32);
+        assert_eq!(a.1.len(), 4);
+    }
+
+    #[test]
+    fn step_records_history_and_eval_is_finite() {
+        let mut trainer = tiny_trainer(OP_ATTN_DENSE);
+        let task = tiny_task();
+        let r0 = trainer.step(task.as_ref(), 4).unwrap();
+        let r1 = trainer.step(task.as_ref(), 4).unwrap();
+        assert_eq!((r0.step, r1.step), (0, 1));
+        assert_eq!(trainer.history.len(), 2);
+        assert_eq!(trainer.steps_taken(), 2);
+        assert!(r0.loss.is_finite() && r1.loss.is_finite());
+        let ev = trainer.eval(task.as_ref(), 2, 4).unwrap();
+        assert!(ev.loss.is_finite() && ev.loss > 0.0);
+        assert_eq!(ev.examples, 8);
+        assert!(ev.miou.is_none());
+    }
+
+    #[test]
+    fn eval_stats_do_not_contaminate_training_stats() {
+        let mut trainer = tiny_trainer(OP_ATTN_MITA);
+        let task = tiny_task();
+        trainer.step(task.as_ref(), 4).unwrap();
+        let train_q = trainer.mita_stats().queries;
+        assert!(train_q > 0, "training forward must record routing stats");
+        trainer.eval(task.as_ref(), 2, 4).unwrap();
+        assert_eq!(
+            trainer.mita_stats().queries,
+            train_q,
+            "eval traffic must not leak into the training accumulator"
+        );
+        assert!(trainer.eval_mita_stats().queries > 0, "eval stats land in their own bucket");
+    }
+
+    #[test]
+    fn rejects_mismatched_tasks_and_untrainable_kernels() {
+        let trainer = tiny_trainer(OP_ATTN_MITA);
+        let wrong_len = lra::by_name("listops", 64, 16, 7);
+        assert!(trainer.check_task(wrong_len.as_ref()).is_err());
+
+        let task = tiny_task();
+        let cfg = ModelConfig::for_task(task.as_ref(), 16, 2, 1, OP_ATTN_MITA);
+        let model = MitaModel::init(cfg, 1).unwrap();
+        // An unknown kernel name fails at construction, not mid-training.
+        let mut bad_cfg = model.cfg.clone();
+        bad_cfg.block_kernels[0] = "attn.unknown".into();
+        let bad = MitaModel { cfg: bad_cfg, params: model.params.clone() };
+        assert!(NativeTrainer::new(bad, AdamWConfig::default(), 0).is_err());
+    }
+
+    #[test]
+    fn curve_helpers_render_every_step() {
+        let history = vec![
+            StepRecord { step: 0, loss: 2.0, batch_acc: 0.25, secs: 0.01 },
+            StepRecord { step: 1, loss: 1.5, batch_acc: 0.5, secs: 0.01 },
+        ];
+        assert_eq!(loss_curve(&history), vec![(0.0, 2.0), (1.0, 1.5)]);
+        let json = curve_json(&history);
+        assert!(json.contains("\"steps\": 2"));
+        assert!(json.contains("\"loss\": 1.500000"));
+        assert!(json.ends_with("}\n"));
+
+        // A diverged run's NaN loss must not corrupt the artifact.
+        let bad = vec![StepRecord { step: 0, loss: f64::NAN, batch_acc: 0.0, secs: 0.01 }];
+        let json = curve_json(&bad);
+        assert!(json.contains("\"loss\": null"), "{json}");
+        assert!(!json.contains("NaN"));
+        assert_eq!(json_num(1.25, 2), "1.25");
+        assert_eq!(json_num(f64::INFINITY, 2), "null");
+    }
+}

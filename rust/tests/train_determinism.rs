@@ -1,0 +1,50 @@
+//! Thread-count determinism of the native trainer.
+//!
+//! This file holds exactly one test and therefore owns its whole test
+//! binary: it mutates `MITA_NUM_THREADS` (process-global state), which
+//! would race `getenv` calls from concurrently running tests if any
+//! shared the process. Keep it single-test.
+//!
+//! The property under test is the deterministic gradient-reduction
+//! order: per-example gradients land in per-example slabs and are summed
+//! in example-index order regardless of which worker thread produced
+//! them, so losses, gradients, and the resulting parameters are
+//! bit-identical for any worker count.
+
+use mita::data::lra;
+use mita::model::{MitaModel, ModelConfig};
+use mita::train::grads::flatten_params;
+use mita::train::{AdamWConfig, NativeTrainer, TrainConfig};
+
+fn run_training(threads: &str) -> (Vec<u64>, Vec<u32>) {
+    std::env::set_var("MITA_NUM_THREADS", threads);
+    let task = lra::by_name("text", 32, 32, 29);
+    let cfg = ModelConfig::for_task(task.as_ref(), 16, 2, 2, mita::kernels::OP_ATTN_MITA);
+    let model = MitaModel::init(cfg, 8).unwrap();
+    let mut trainer = NativeTrainer::new(model, AdamWConfig::default(), 12).unwrap();
+    let run = TrainConfig {
+        steps: 10,
+        batch: 6,
+        eval_every: 4,
+        eval_batches: 1,
+        log_every: 0,
+        checkpoint: None,
+    };
+    trainer.train(task.as_ref(), &run).unwrap();
+    let losses = trainer.history.iter().map(|r| r.loss.to_bits()).collect();
+    let params = flatten_params(&trainer.model().params).iter().map(|p| p.to_bits()).collect();
+    (losses, params)
+}
+
+#[test]
+fn loss_curves_and_params_are_bit_identical_across_thread_counts() {
+    let (loss1, params1) = run_training("1");
+    let (loss4, params4) = run_training("4");
+    std::env::remove_var("MITA_NUM_THREADS");
+    assert_eq!(loss1.len(), 10);
+    assert_eq!(
+        loss1, loss4,
+        "10-step loss curve must be bit-identical for 1 vs 4 worker threads"
+    );
+    assert_eq!(params1, params4, "trained parameters must be bit-identical too");
+}
