@@ -1,0 +1,266 @@
+//! Bench: open-loop load harness over the replica pool (docs/SERVING.md).
+//!
+//! Closed-loop benches (like `serving.rs`) hide queueing: the generator
+//! waits for each response, so offered load self-throttles to capacity.
+//! This harness is **open loop** — Poisson arrivals fire on a wall-clock
+//! schedule whether or not earlier requests finished, which is what real
+//! traffic does to a server. The sweep crosses replica counts with
+//! offered rates below and above measured capacity, reporting exact
+//! p50/p95/p99 latency, achieved throughput, and the shed fraction per
+//! cell. Everything lands in `BENCH_load_native.json` for CI.
+//!
+//! Method: a 1-replica closed loop first calibrates the per-replica
+//! service rate μ; each sweep cell then offers `factor × μ × replicas`
+//! requests/sec with exponential inter-arrival gaps, submits through
+//! [`ReplicaPool::submit`] (never blocking on completions), and polls
+//! outstanding tickets. Sheds are the pool's typed `overloaded` rejections.
+//!
+//! Quick mode for CI smoke runs: pass `--quick` after `--`, or set
+//! `MITA_BENCH_QUICK=1`.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+use mita::coordinator::{PoolTicket, ReplicaPool, ReplicaPoolConfig};
+use mita::data::rng::Rng;
+use mita::runtime::{BackendSpec, NativeAttnConfig, Tensor};
+use mita::service::{KernelId, QkvBatch, ServiceRequest};
+
+const N: usize = 64;
+const DIM: usize = 32;
+const HEADS: usize = 2;
+/// Per-replica admission cap: small enough that over-capacity offered
+/// rates actually shed instead of queueing the whole backlog.
+const MAX_INFLIGHT: usize = 4;
+/// Distinct pre-generated request payloads cycled by the generator (the
+/// arrival loop clones instead of regenerating 3·N·DIM floats per shot).
+const PAYLOADS: usize = 16;
+
+struct Row {
+    replicas: usize,
+    factor: f64,
+    offered_rate: f64,
+    requests: usize,
+    completed: usize,
+    shed: u64,
+    errors: u64,
+    wall_secs: f64,
+    throughput: f64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MITA_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let replica_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let factors: &[f64] = if quick { &[0.5, 2.0] } else { &[0.5, 1.0, 2.0] };
+    let requests = if quick { 150 } else { 800 };
+
+    let payloads = make_payloads();
+    let mu = calibrate(quick, &payloads);
+    println!(
+        "# load_native — open loop, n={N} dim={DIM} heads={HEADS} cap={MAX_INFLIGHT}/replica \
+         quick={quick} threads={}",
+        mita::kernels::par::num_threads()
+    );
+    println!("calibrated per-replica service rate: {mu:.0} req/s");
+
+    let mut rows = Vec::new();
+    println!(
+        "\nreplicas, offered_x, offered req/s, completed/total, shed%, achieved req/s, \
+         p50 us, p95 us, p99 us"
+    );
+    for (ri, &replicas) in replica_counts.iter().enumerate() {
+        for (fi, &factor) in factors.iter().enumerate() {
+            let seed = 0x10AD + (ri * factors.len() + fi) as u64;
+            let row = run_cell(replicas, factor, mu, requests, &payloads, seed);
+            println!(
+                "{:8}, {:9.2}, {:13.0}, {:9}, {:5.1}, {:14.0}, {:6.0}, {:6.0}, {:6.0}",
+                row.replicas,
+                row.factor,
+                row.offered_rate,
+                format!("{}/{}", row.completed, row.requests),
+                100.0 * row.shed as f64 / row.requests as f64,
+                row.throughput,
+                row.p50_us,
+                row.p95_us,
+                row.p99_us,
+            );
+            rows.push(row);
+        }
+    }
+    write_json(quick, mu, &rows);
+}
+
+fn make_payloads() -> Vec<ServiceRequest> {
+    let mut rng = Rng::new(0xF00D);
+    (0..PAYLOADS)
+        .map(|_| {
+            let data: Vec<f32> = (0..3 * N * DIM).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            ServiceRequest::Attention {
+                op: KernelId::Mita,
+                qkv: QkvBatch::fused(Tensor::f32(&[1, 3, N, DIM], data).expect("qkv tensor"))
+                    .expect("qkv batch"),
+                valid_rows: None,
+            }
+        })
+        .collect()
+}
+
+fn spawn_pool(replicas: usize) -> ReplicaPool {
+    let spec = BackendSpec::Native(NativeAttnConfig::for_shape(N, DIM, HEADS));
+    let cfg = ReplicaPoolConfig { replicas, max_inflight: MAX_INFLIGHT, retry_after_ms: 1 };
+    ReplicaPool::spawn(spec, vec![], cfg).expect("replica pool")
+}
+
+/// Closed-loop service-rate estimate on one replica (warmup excluded).
+fn calibrate(quick: bool, payloads: &[ServiceRequest]) -> f64 {
+    let pool = spawn_pool(1);
+    let iters = if quick { 24 } else { 80 };
+    for req in payloads.iter().take(4) {
+        pool.call(req.clone()).expect("calibration warmup");
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        pool.call(payloads[i % payloads.len()].clone()).expect("calibration request");
+    }
+    let mean = t0.elapsed().as_secs_f64() / iters as f64;
+    pool.shutdown();
+    1.0 / mean.max(1e-9)
+}
+
+/// One sweep cell: `requests` Poisson arrivals at `factor × μ × replicas`
+/// req/s against a fresh pool.
+fn run_cell(
+    replicas: usize,
+    factor: f64,
+    mu: f64,
+    requests: usize,
+    payloads: &[ServiceRequest],
+    seed: u64,
+) -> Row {
+    let pool = spawn_pool(replicas);
+    let offered_rate = factor * mu * replicas as f64;
+    let mut rng = Rng::new(seed);
+    // Arrival schedule up front: cumulative exponential gaps (seconds).
+    let mut arrivals = Vec::with_capacity(requests);
+    let mut t = 0.0f64;
+    for _ in 0..requests {
+        t += -(1.0 - rng.uniform()).ln() / offered_rate;
+        arrivals.push(t);
+    }
+
+    let start = Instant::now();
+    let mut next = 0usize;
+    let mut pending: Vec<(PoolTicket, Instant)> = Vec::new();
+    let mut latencies_us: Vec<f64> = Vec::new();
+    let (mut shed, mut errors) = (0u64, 0u64);
+    loop {
+        // Settle whatever finished since the last poll.
+        let mut i = 0;
+        while i < pending.len() {
+            match pending[i].0.try_wait() {
+                Some(result) => {
+                    let (_ticket, issued) = pending.swap_remove(i);
+                    match result {
+                        Ok(_) => latencies_us.push(issued.elapsed().as_secs_f64() * 1e6),
+                        Err(_) => errors += 1,
+                    }
+                }
+                None => i += 1,
+            }
+        }
+        // Fire every due arrival — open loop: the schedule, not the
+        // completions, decides when the next request goes out.
+        let now = start.elapsed().as_secs_f64();
+        while next < requests && arrivals[next] <= now {
+            match pool.submit(payloads[next % payloads.len()].clone()) {
+                Ok(ticket) => pending.push((ticket, Instant::now())),
+                Err(e) if e.code() == "overloaded" => shed += 1,
+                Err(_) => errors += 1,
+            }
+            next += 1;
+        }
+        if next == requests && pending.is_empty() {
+            break;
+        }
+        std::thread::sleep(Duration::from_micros(50));
+    }
+    let wall_secs = start.elapsed().as_secs_f64();
+
+    // Cross-check the pool's own registry against the harness counts —
+    // the /v1/metrics numbers must tell the same story the client saw.
+    let snap = pool.snapshot();
+    assert_eq!(snap.serve_requests_total, requests as u64, "pool counted every submit");
+    assert_eq!(snap.serve_shed_total, shed, "pool sheds match harness sheds");
+    pool.shutdown();
+
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    Row {
+        replicas,
+        factor,
+        offered_rate,
+        requests,
+        completed: latencies_us.len(),
+        shed,
+        errors,
+        wall_secs,
+        throughput: latencies_us.len() as f64 / wall_secs.max(1e-9),
+        p50_us: percentile(&latencies_us, 50.0),
+        p95_us: percentile(&latencies_us, 95.0),
+        p99_us: percentile(&latencies_us, 99.0),
+    }
+}
+
+/// Exact (nearest-rank on sorted samples) percentile; 0 when empty.
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_us.len() - 1) as f64).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// JSON artifact for CI: the calibration point plus one row per sweep cell.
+fn write_json(quick: bool, mu: f64, rows: &[Row]) {
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"load_native\",");
+    let _ = writeln!(json, "  \"quick\": {quick},");
+    let _ = writeln!(json, "  \"n\": {N},");
+    let _ = writeln!(json, "  \"dim\": {DIM},");
+    let _ = writeln!(json, "  \"heads\": {HEADS},");
+    let _ = writeln!(json, "  \"max_inflight_per_replica\": {MAX_INFLIGHT},");
+    let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"service_rate_per_replica\": {mu:.2},");
+    let _ = writeln!(json, "  \"rows\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"replicas\": {}, \"offered_factor\": {:.2}, \"offered_rate\": {:.2}, \
+             \"requests\": {}, \"completed\": {}, \"shed\": {}, \"errors\": {}, \
+             \"shed_fraction\": {:.4}, \"wall_secs\": {:.4}, \"throughput\": {:.2}, \
+             \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}}}{comma}",
+            r.replicas,
+            r.factor,
+            r.offered_rate,
+            r.requests,
+            r.completed,
+            r.shed,
+            r.errors,
+            r.shed as f64 / r.requests as f64,
+            r.wall_secs,
+            r.throughput,
+            r.p50_us,
+            r.p95_us,
+            r.p99_us,
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    std::fs::write("BENCH_load_native.json", json).expect("write BENCH_load_native.json");
+    println!("\nwrote BENCH_load_native.json");
+}

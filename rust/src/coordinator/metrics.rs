@@ -1,6 +1,17 @@
 //! Serving/training metrics: streaming statistics, latency histograms,
-//! throughput meters, and the mIoU derivation used by Tab. 4.
+//! throughput meters, the mIoU derivation used by Tab. 4 — and the
+//! serving-layer telemetry registry behind `GET /v1/metrics`.
+//!
+//! The registry half of this module is the **single source of truth** for
+//! serving observability: [`ServeMetrics`] holds the stable-named
+//! counters and the request-latency histogram, and [`MetricsSnapshot`] is
+//! the typed, wire-encodable snapshot the replica pool assembles from it
+//! (plus per-replica gauges). Every name in the snapshot is registered in
+//! `docs/SERVING.md`; tests, ops dashboards, and the load harness all
+//! read this one surface.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Welford streaming mean/variance.
@@ -127,6 +138,183 @@ impl LatencyHistogram {
             self.max_secs * 1e3,
         )
     }
+
+    /// Total recorded time in seconds.
+    pub fn sum(&self) -> f64 {
+        self.sum_secs
+    }
+
+    /// Upper bound of bucket `idx` in microseconds. The bucket grid is
+    /// **fixed** (`GROWTH`^(idx+1) µs, 20 buckets per decade from 1 µs),
+    /// so exports from different replicas/processes are mergeable
+    /// bucket-for-bucket.
+    pub fn bucket_le_us(idx: usize) -> f64 {
+        GROWTH.powf(idx as f64 + 1.0)
+    }
+
+    /// Wire-ready snapshot: counters, percentiles, and the sparse list of
+    /// non-empty `(le_us, count)` buckets.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.total,
+            sum_us: self.sum_secs * 1e6,
+            max_us: self.max_secs * 1e6,
+            p50_us: self.percentile(50.0) * 1e6,
+            p95_us: self.percentile(95.0) * 1e6,
+            p99_us: self.percentile(99.0) * 1e6,
+            buckets: self
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(i, &c)| (Self::bucket_le_us(i), c))
+                .collect(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serving telemetry registry (the data behind `GET /v1/metrics`)
+// ---------------------------------------------------------------------------
+
+/// Canonical registry of series names exported by `/v1/metrics` — the
+/// contract documented in `docs/SERVING.md`. `mita client metrics` (the
+/// CI probe) asserts every name appears in the raw payload, so renaming
+/// a series without updating the docs fails loudly.
+pub const METRIC_NAMES: &[&str] = &[
+    "serve_requests_total",
+    "serve_shed_total",
+    "serve_errors_total",
+    "request_latency_us",
+    "replica_requests_total",
+    "replica_queue_depth",
+    "overflow_fraction",
+    "load_imbalance",
+];
+
+/// Pool-wide serving counters and the request-latency histogram. Shared
+/// (`Arc`) between the replica pool's routing path and the snapshot
+/// path; counters are lock-free, the histogram takes a short mutex only
+/// on settle and snapshot.
+///
+/// Counting contract (registered in `docs/SERVING.md`):
+/// - `serve_requests_total` — every compute request the pool routed
+///   **or shed** (attention / model-forward / artifact). Binds, stats,
+///   and metrics requests are control-plane and do not count.
+/// - `serve_shed_total` — the subset rejected at admission with
+///   `overloaded` (so `shed / requests` is the shed fraction).
+/// - `serve_errors_total` — settled requests whose backend execution
+///   returned an error (sheds are not double-counted here).
+/// - `request_latency_us` — submit→settle latency of successfully
+///   executed requests, on the fixed log-spaced bucket grid.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    requests_total: AtomicU64,
+    shed_total: AtomicU64,
+    errors_total: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_shed(&self) {
+        self.shed_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        self.latency.lock().expect("latency lock").record(d);
+    }
+
+    pub fn requests_total(&self) -> u64 {
+        self.requests_total.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_total(&self) -> u64 {
+        self.shed_total.load(Ordering::Relaxed)
+    }
+
+    pub fn errors_total(&self) -> u64 {
+        self.errors_total.load(Ordering::Relaxed)
+    }
+
+    /// Mean settled latency in milliseconds (0 before any settle) — the
+    /// pool's `retry_after_ms` hint is derived from this.
+    pub fn mean_latency_ms(&self) -> f64 {
+        self.latency.lock().expect("latency lock").mean() * 1e3
+    }
+
+    pub fn latency_snapshot(&self) -> HistogramSnapshot {
+        self.latency.lock().expect("latency lock").snapshot()
+    }
+}
+
+/// Wire-encodable histogram export: summary statistics plus the sparse
+/// non-empty buckets of the fixed log-spaced grid. All times are in
+/// microseconds (percentiles are bucket-midpoint estimates, `sum`/`max`
+/// are exact).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum_us: f64,
+    pub max_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    /// Non-empty `(le_us, count)` pairs; `le_us` is the bucket's upper
+    /// bound on the fixed grid (`LatencyHistogram::bucket_le_us`).
+    pub buckets: Vec<(f64, u64)>,
+}
+
+/// Per-replica gauges sampled at snapshot time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaSnapshot {
+    /// Replica index (0-based, stable for the life of the pool).
+    pub replica: u64,
+    /// Compute requests routed to this replica since startup.
+    pub replica_requests_total: u64,
+    /// Tickets currently outstanding on this replica (gauge).
+    pub replica_queue_depth: u64,
+    /// This replica's admission cap.
+    pub max_inflight: u64,
+    /// MiTA routing overflow fraction from the replica's kernel stats
+    /// (queries exceeding an expert's capacity; 0 when unavailable).
+    pub overflow_fraction: f64,
+    /// Worst observed expert load imbalance (max/mean; 0 when
+    /// unavailable).
+    pub load_imbalance: f64,
+}
+
+/// The full `/v1/metrics` payload: pool counters, the latency histogram,
+/// and one [`ReplicaSnapshot`] per replica.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub serve_requests_total: u64,
+    pub serve_shed_total: u64,
+    pub serve_errors_total: u64,
+    pub request_latency_us: HistogramSnapshot,
+    pub replicas: Vec<ReplicaSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Shed fraction over the lifetime of the pool (0 with no traffic).
+    pub fn shed_fraction(&self) -> f64 {
+        if self.serve_requests_total == 0 {
+            0.0
+        } else {
+            self.serve_shed_total as f64 / self.serve_requests_total as f64
+        }
+    }
 }
 
 /// Items-per-second throughput meter.
@@ -236,6 +424,56 @@ mod tests {
         h.record(Duration::from_secs(1000));
         assert_eq!(h.count(), 2);
         assert!(h.percentile(100.0) > 0.0);
+    }
+
+    #[test]
+    fn histogram_snapshot_exports_fixed_buckets() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(12));
+        h.record(Duration::from_micros(12));
+        h.record(Duration::from_millis(5));
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert!((s.sum_us - 5024.0).abs() < 1.0, "sum_us={}", s.sum_us);
+        assert!((s.max_us - 5000.0).abs() < 1.0);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        // Sparse export: two non-empty buckets, ascending fixed bounds,
+        // counts adding back up to the total.
+        assert_eq!(s.buckets.len(), 2);
+        assert!(s.buckets[0].0 < s.buckets[1].0);
+        assert_eq!(s.buckets.iter().map(|&(_, c)| c).sum::<u64>(), 3);
+        // Each sample sits within its bucket's bound: 12us ≤ le of the
+        // first, 5000us ≤ le of the second.
+        assert!(s.buckets[0].0 >= 12.0 && s.buckets[0].1 == 2);
+        assert!(s.buckets[1].0 >= 5000.0 && s.buckets[1].1 == 1);
+        // The grid itself is fixed and growing.
+        assert!(LatencyHistogram::bucket_le_us(0) > 1.0);
+        assert!(LatencyHistogram::bucket_le_us(20) > LatencyHistogram::bucket_le_us(19));
+    }
+
+    #[test]
+    fn serve_metrics_counters_and_latency() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.requests_total(), 0);
+        m.record_request();
+        m.record_request();
+        m.record_shed();
+        m.record_error();
+        m.record_latency(Duration::from_millis(2));
+        assert_eq!(m.requests_total(), 2);
+        assert_eq!(m.shed_total(), 1);
+        assert_eq!(m.errors_total(), 1);
+        assert!((m.mean_latency_ms() - 2.0).abs() < 1e-9);
+        assert_eq!(m.latency_snapshot().count, 1);
+        let snap = MetricsSnapshot {
+            serve_requests_total: m.requests_total(),
+            serve_shed_total: m.shed_total(),
+            serve_errors_total: m.errors_total(),
+            request_latency_us: m.latency_snapshot(),
+            replicas: vec![],
+        };
+        assert!((snap.shed_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(MetricsSnapshot::default().shed_fraction(), 0.0);
     }
 
     #[test]

@@ -10,25 +10,32 @@
 //!   one [`Workload`]-parameterized front with convenience builders for
 //!   PJRT bundles ([`serve`]), native attention ([`serve_native`]), and
 //!   whole-model classification ([`serve_model`]).
+//! - [`replica`]: the multi-replica serving layer — N engines from one
+//!   spec behind least-outstanding routing, per-replica admission caps,
+//!   and typed shedding with `retry_after_ms` hints.
 //! - [`netserver`]: the network edge — a TCP HTTP/1.1 + JSON loop
-//!   mapping wire requests onto the typed service API, plus the matching
-//!   loopback [`NetClient`].
+//!   mapping wire requests onto the typed service API over a
+//!   [`ReplicaPool`], plus the matching loopback [`NetClient`].
 //! - [`trainer`]: the **PJRT-artifact** train-step driver with
 //!   loss-curve tracking (native training lives in [`crate::train`]).
 //! - [`checkpoint`]: flat-parameter save/load.
-//! - [`metrics`]: histograms, streaming stats, mIoU.
+//! - [`metrics`]: histograms, streaming stats, mIoU — and the serving
+//!   telemetry registry behind `GET /v1/metrics`.
 
 pub mod batcher;
 pub mod checkpoint;
 pub mod engine;
 pub mod metrics;
 pub mod netserver;
+pub mod replica;
 pub mod server;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
 pub use engine::{Engine, EngineHandle, EngineStats, Ticket};
+pub use metrics::{HistogramSnapshot, METRIC_NAMES, MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
 pub use netserver::{NetClient, NetServer, NetServerConfig};
+pub use replica::{PoolTicket, ReplicaPool, ReplicaPoolConfig};
 pub use server::{
     serve, serve_model, serve_native, serve_workload, ModelServeConfig, NativeServeConfig,
     ServeConfig, ServeReport, Workload, WorkloadSpec, DEFAULT_MAX_INFLIGHT,

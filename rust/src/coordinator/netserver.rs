@@ -3,30 +3,38 @@
 //!
 //! Wire requests parse **once** at this boundary into
 //! [`ServiceRequest`]s (see [`crate::service::wire`] and
-//! `docs/PROTOCOL.md`) and ride the engine's submit/poll tickets; every
-//! failure is a [`ServiceError`] whose stable code becomes the HTTP
-//! status + JSON error body. Admission control is an in-flight cap
-//! acquired **after the headers but before the body**: past
+//! `docs/PROTOCOL.md`) and route through a [`ReplicaPool`] — N engine
+//! replicas behind least-outstanding routing; every failure is a
+//! [`ServiceError`] whose stable code becomes the HTTP status + JSON
+//! error body. Admission control is layered: a transport in-flight cap
+//! acquired **after the headers but before the body** (past
 //! [`NetServerConfig::max_inflight`] concurrent requests, new work is
 //! rejected with `503 overloaded` before its body is even buffered, so
-//! the cap bounds request memory, not just engine work.
+//! the cap bounds request memory), and the pool's per-replica caps
+//! behind it. Both shed with a `retry_after_ms` hint derived from
+//! observed latency. `GET /v1/metrics` bypasses admission so telemetry
+//! stays readable under load.
 //!
 //! One OS thread per **connection** (not per request), with a hard
 //! connection cap: connections are keep-alive, so a client pipelining
 //! many requests costs one thread, and the engine round-trip itself
 //! never parks more than that thread. [`NetClient`] is the matching
-//! loopback client used by the CLI, the tests, and the CI smoke step.
+//! loopback client used by the CLI, the tests, and the CI smoke step;
+//! [`NetClient::with_retries`] adds bounded jittered retries that honor
+//! the server's `retry_after_ms` hint.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::engine::EngineHandle;
-use crate::service::wire::{self, EP_HEALTH, EP_SHUTDOWN};
+use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::replica::ReplicaPool;
+use crate::data::rng::splitmix64;
+use crate::service::wire::{self, EP_HEALTH, EP_METRICS, EP_SHUTDOWN};
 use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult};
 use crate::util::json::Value;
 
@@ -66,20 +74,22 @@ impl Default for NetServerConfig {
 /// posts the shutdown endpoint, then returns cleanly.
 pub struct NetServer {
     listener: TcpListener,
-    engine: EngineHandle,
+    pool: Arc<ReplicaPool>,
     inflight: Arc<AtomicUsize>,
     shutdown: Arc<AtomicBool>,
     max_inflight: usize,
 }
 
 impl NetServer {
-    /// Bind the listen socket (fails fast on a bad address).
-    pub fn bind(engine: EngineHandle, cfg: &NetServerConfig) -> Result<Self> {
+    /// Bind the listen socket (fails fast on a bad address). The pool is
+    /// shared: connection handlers route through it concurrently, and
+    /// the caller keeps its own `Arc` for direct access (binds, tests).
+    pub fn bind(pool: Arc<ReplicaPool>, cfg: &NetServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("bind {}", cfg.addr))?;
         Ok(NetServer {
             listener,
-            engine,
+            pool,
             inflight: Arc::new(AtomicUsize::new(0)),
             shutdown: Arc::new(AtomicBool::new(false)),
             max_inflight: cfg.max_inflight,
@@ -115,19 +125,20 @@ impl NetServer {
                 if rejecting.load(Ordering::Acquire) < MAX_REJECT_DRAINS {
                     rejecting.fetch_add(1, Ordering::AcqRel);
                     let rejecting = rejecting.clone();
+                    let hint = self.pool.retry_hint_ms();
                     std::thread::spawn(move || {
-                        let _ = reject_over_capacity(stream);
+                        let _ = reject_over_capacity(stream, hint);
                         rejecting.fetch_sub(1, Ordering::AcqRel);
                     });
                 }
                 continue;
             }
-            let engine = self.engine.clone();
+            let pool = self.pool.clone();
             let inflight = self.inflight.clone();
             let shutdown = self.shutdown.clone();
             let max_inflight = self.max_inflight;
             handlers.push(std::thread::spawn(move || {
-                let _ = serve_connection(stream, &engine, &inflight, &shutdown, max_inflight, addr);
+                let _ = serve_connection(stream, &pool, &inflight, &shutdown, max_inflight, addr);
             }));
         }
         for h in handlers {
@@ -147,13 +158,13 @@ impl NetServer {
 /// request head (bounded), write the typed error, and drain the declared
 /// body to a sink so closing the socket doesn't RST the response. Runs
 /// on its own short-lived thread under a tight read timeout.
-fn reject_over_capacity(stream: TcpStream) -> Result<()> {
+fn reject_over_capacity(stream: TcpStream, retry_hint_ms: u64) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(5)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let head = read_http_head(&mut reader)?;
-    let err =
-        ServiceError::Overloaded(format!("connection capacity reached ({MAX_CONNECTIONS})"));
+    let err = ServiceError::overloaded(format!("connection capacity reached ({MAX_CONNECTIONS})"))
+        .with_retry_after(retry_hint_ms);
     let body = wire::encode_error(&err).render();
     let _ = write_http_response(&mut writer, err.http_status(), &body, false);
     if let Some(head) = head {
@@ -176,7 +187,7 @@ impl Drop for InflightSlot<'_> {
 
 fn serve_connection(
     stream: TcpStream,
-    engine: &EngineHandle,
+    pool: &ReplicaPool,
     inflight: &AtomicUsize,
     shutdown: &AtomicBool,
     max_inflight: usize,
@@ -205,12 +216,14 @@ fn serve_connection(
         // Admission before the body: a rejected request's (possibly
         // large) body is never buffered — answer 503 and close. Engine
         // service requests are POSTs to *known* non-admin endpoints;
-        // everything else (server-local endpoints, unknown paths — which
-        // are guaranteed to fail routing anyway) bypasses admission but
-        // gets a tiny body cap, so nothing smuggles a large upload past
-        // the in-flight accounting.
+        // everything else (server-local endpoints, the metrics surface —
+        // which must stay readable while the pool sheds — and unknown
+        // paths, which are guaranteed to fail routing anyway) bypasses
+        // admission but gets a tiny body cap, so nothing smuggles a
+        // large upload past the in-flight accounting.
         let is_service = head.method == "POST"
             && head.path != EP_SHUTDOWN
+            && head.path != EP_METRICS
             && wire::known_endpoints().contains(&head.path.as_str());
         // Reject without buffering: write the typed error, then *discard*
         // the declared body to a sink (O(1) memory) so closing the socket
@@ -226,9 +239,11 @@ fn serve_connection(
         let slot = if is_service {
             if inflight.fetch_add(1, Ordering::AcqRel) >= max_inflight {
                 inflight.fetch_sub(1, Ordering::AcqRel);
-                let err = ServiceError::Overloaded(format!(
+                pool.record_transport_shed();
+                let err = ServiceError::overloaded(format!(
                     "admission cap reached ({max_inflight} requests in flight)"
-                ));
+                ))
+                .with_retry_after(pool.retry_hint_ms());
                 refuse(&mut writer, &mut reader, err);
                 return Ok(());
             }
@@ -251,7 +266,7 @@ fn serve_connection(
                 return Err(e);
             }
         };
-        let (status, resp) = route(engine, shutdown, &head.method, &head.path, &body);
+        let (status, resp) = route(pool, shutdown, &head.method, &head.path, &body);
         drop(slot); // request fully served engine-side; release admission
         write_http_response(&mut writer, status, &resp.render(), head.keep_alive)?;
         if shutdown.load(Ordering::Acquire) {
@@ -279,7 +294,7 @@ fn serve_connection(
 /// Map one wire request onto the typed service API (admission already
 /// handled by the caller, which holds the in-flight slot).
 fn route(
-    engine: &EngineHandle,
+    pool: &ReplicaPool,
     shutdown: &AtomicBool,
     method: &str,
     path: &str,
@@ -287,11 +302,16 @@ fn route(
 ) -> (u16, Value) {
     match (method, path) {
         ("GET", EP_HEALTH) => (200, ok_body(&[("status", Value::str("ok"))])),
+        // Telemetry answers plain GET (curl-friendly, body-less) as well
+        // as the typed POST below.
+        ("GET", EP_METRICS) => {
+            (200, wire::encode_response(&ServiceResponse::Metrics(pool.snapshot())))
+        }
         ("POST", EP_SHUTDOWN) => {
             shutdown.store(true, Ordering::Release);
             (200, ok_body(&[("status", Value::str("shutting down"))]))
         }
-        ("POST", _) => match handle_service(engine, path, body) {
+        ("POST", _) => match handle_service(pool, path, body) {
             Ok(resp) => (200, wire::encode_response(&resp)),
             Err(e) => (e.http_status(), wire::encode_error(&e)),
         },
@@ -305,18 +325,18 @@ fn route(
     }
 }
 
-fn handle_service(engine: &EngineHandle, path: &str, body: &str) -> ServiceResult<ServiceResponse> {
+fn handle_service(pool: &ReplicaPool, path: &str, body: &str) -> ServiceResult<ServiceResponse> {
     let parsed = Value::parse(body)
         .map_err(|e| ServiceError::BadRequest(format!("malformed JSON body: {e}")))?;
     let req = wire::parse_request(path, &parsed)?;
-    let resp = engine.submit(req)?.wait()?;
+    let resp = pool.call(req)?;
     wire::check_encodable(&resp)?;
     Ok(resp)
 }
 
 fn ok_body(extra: &[(&str, Value)]) -> Value {
     let mut pairs: Vec<(String, Value)> = vec![
-        ("version".into(), Value::num(crate::service::PROTOCOL_VERSION as f64)),
+        ("proto".into(), Value::num(crate::service::PROTOCOL_VERSION as f64)),
         ("ok".into(), Value::Bool(true)),
     ];
     for (k, v) in extra {
@@ -427,24 +447,87 @@ fn write_http_response(
 /// Minimal HTTP/1.1 client for the wire protocol: one connection per
 /// call, typed requests in, typed responses (or typed errors) out. Used
 /// by `mita client`, the tests, and the CI loopback smoke step.
+///
+/// Retries are off by default. [`NetClient::with_retries`] enables a
+/// bounded retry budget that fires only on `overloaded` sheds, sleeping
+/// the server's `retry_after_ms` hint (plus deterministic jitter) between
+/// attempts; once the budget is spent the last typed error is returned.
 pub struct NetClient {
     addr: String,
+    retries: usize,
 }
+
+/// Process-wide sequence feeding the retry jitter so backoff is
+/// deterministic under test yet de-synchronized across client instances.
+static CLIENT_SEQ: AtomicU64 = AtomicU64::new(0x9e37_79b9_7f4a_7c15);
 
 impl NetClient {
     pub fn new(addr: impl Into<String>) -> Self {
-        NetClient { addr: addr.into() }
+        NetClient { addr: addr.into(), retries: 0 }
+    }
+
+    /// Allow up to `retries` extra attempts after an `overloaded` shed.
+    pub fn with_retries(mut self, retries: usize) -> Self {
+        self.retries = retries;
+        self
     }
 
     /// Send one typed request and parse the typed result. Server-side
     /// failures come back as the original [`ServiceError`] (same code).
+    /// With a retry budget, `overloaded` sheds are retried after the
+    /// server's `retry_after_ms` hint; all other errors return at once.
     pub fn call(&self, req: &ServiceRequest) -> ServiceResult<ServiceResponse> {
         wire::check_request_encodable(req)?;
         let (path, body) = wire::encode_request(req);
-        let (_status, text) = self.http("POST", path, &body.render())?;
+        let rendered = body.render();
+        let mut attempt = 0usize;
+        loop {
+            let result = self.call_once(path, &rendered);
+            match result {
+                Err(ref e) if e.code() == "overloaded" && attempt < self.retries => {
+                    attempt += 1;
+                    std::thread::sleep(Self::backoff(e.retry_after_ms(), attempt));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    fn call_once(&self, path: &str, rendered: &str) -> ServiceResult<ServiceResponse> {
+        let (_status, text) = self.http("POST", path, rendered)?;
         let parsed = Value::parse(&text)
             .map_err(|e| ServiceError::Internal(format!("malformed response JSON: {e}")))?;
         wire::parse_response(&parsed)
+    }
+
+    /// Sleep budget for retry `attempt` (1-based): the server's hint —
+    /// default 10ms when absent — scaled linearly per attempt, plus up to
+    /// 25% deterministic jitter, capped at 2s so a bad hint can't park
+    /// the client.
+    fn backoff(hint_ms: Option<u64>, attempt: usize) -> Duration {
+        let base = hint_ms.unwrap_or(10).max(1).saturating_mul(attempt as u64);
+        let mut seed = CLIENT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let jitter = splitmix64(&mut seed) % (base / 4 + 1);
+        Duration::from_millis(base.saturating_add(jitter).min(2_000))
+    }
+
+    /// Fetch and parse the `/v1/metrics` telemetry snapshot.
+    pub fn metrics(&self) -> ServiceResult<MetricsSnapshot> {
+        self.call(&ServiceRequest::Metrics)?.into_metrics()
+    }
+
+    /// Fetch `/v1/metrics` as raw wire text (the CI probe greps this for
+    /// the documented metric names without trusting the typed decoder).
+    pub fn metrics_raw(&self) -> ServiceResult<String> {
+        let (status, text) = self.http("GET", EP_METRICS, "")?;
+        if status != 200 {
+            if let Ok(parsed) = Value::parse(&text) {
+                wire::parse_response(&parsed)?;
+            }
+            let msg = format!("{}: HTTP {status}: {text}", self.addr);
+            return Err(ServiceError::Unavailable(msg));
+        }
+        Ok(text)
     }
 
     /// Liveness probe.

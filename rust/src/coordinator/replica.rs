@@ -1,0 +1,417 @@
+//! Multi-replica serving: N engine replicas behind least-outstanding
+//! routing with per-replica admission caps and graceful backpressure.
+//!
+//! A [`ReplicaPool`] spawns N engines from **one** [`BackendSpec`] (each
+//! replica owns its own `NativeBackend`, bound to the same checkpoint via
+//! broadcast binds), then routes each compute request to the replica with
+//! the fewest outstanding tickets. Ties rotate round-robin so a stream of
+//! sequential callers still spreads across the fleet instead of camping
+//! on replica 0. This mirrors MiTA's own compress-and-route strategy one
+//! level up the stack: experts become replicas, capacity factors become
+//! admission caps, and overflow becomes typed shedding.
+//!
+//! Backpressure contract: when every replica is at its admission cap the
+//! pool **sheds** — [`ReplicaPool::submit`] returns a typed `overloaded`
+//! error carrying a `retry_after_ms` hint (the observed mean latency,
+//! floored by config) — it never queues unboundedly or stalls the caller.
+//!
+//! Observability: the pool owns the [`ServeMetrics`] registry and
+//! assembles the [`MetricsSnapshot`] served by `GET /v1/metrics` —
+//! pool-wide counters, the request-latency histogram, and per-replica
+//! gauges including the MiTA routing stats (`overflow_fraction`,
+//! `load_imbalance`) read from each replica's kernels.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::{Engine, EngineHandle, Ticket};
+use crate::coordinator::metrics::{MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
+use crate::kernels::MitaStats;
+use crate::runtime::BackendSpec;
+use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult, ServiceStats};
+
+/// Pool sizing and backpressure knobs.
+#[derive(Debug, Clone)]
+pub struct ReplicaPoolConfig {
+    /// Number of engine replicas (≥ 1).
+    pub replicas: usize,
+    /// Per-replica admission cap: tickets outstanding on one replica
+    /// before the router stops considering it. 0 sheds everything
+    /// (useful for testing the backpressure path).
+    pub max_inflight: usize,
+    /// Floor for the `retry_after_ms` hint on shed requests; the pool
+    /// raises it to the observed mean request latency once it has one.
+    pub retry_after_ms: u64,
+}
+
+impl Default for ReplicaPoolConfig {
+    fn default() -> Self {
+        ReplicaPoolConfig { replicas: 1, max_inflight: 64, retry_after_ms: 10 }
+    }
+}
+
+struct Replica {
+    engine: Engine,
+    handle: EngineHandle,
+    /// Tickets issued to this replica and not yet settled (the pool's
+    /// own count — the engine has no notion of it).
+    outstanding: Arc<AtomicUsize>,
+    /// Compute requests ever routed to this replica.
+    requests_total: AtomicU64,
+}
+
+/// N engine replicas behind least-outstanding-tickets routing. Shared as
+/// `Arc<ReplicaPool>` between the network front's connection handlers.
+pub struct ReplicaPool {
+    replicas: Vec<Replica>,
+    /// Rotates the routing scan's starting replica so equal-depth ties
+    /// round-robin instead of always resolving to the lowest index.
+    rr: AtomicUsize,
+    cfg: ReplicaPoolConfig,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl ReplicaPool {
+    /// Spawn `cfg.replicas` engines from one spec. Each replica gets its
+    /// own backend (and warmup); binds arriving through
+    /// [`ReplicaPool::call`] broadcast to all of them, so every replica
+    /// answers from the same parameters.
+    pub fn spawn(spec: BackendSpec, warmup: Vec<String>, cfg: ReplicaPoolConfig) -> Result<Self> {
+        if cfg.replicas == 0 {
+            anyhow::bail!("replica pool wants at least 1 replica");
+        }
+        let replicas = (0..cfg.replicas)
+            .map(|_| -> Result<Replica> {
+                let engine = Engine::spawn_backend(spec.clone(), warmup.clone())?;
+                let handle = engine.handle();
+                Ok(Replica {
+                    engine,
+                    handle,
+                    outstanding: Arc::new(AtomicUsize::new(0)),
+                    requests_total: AtomicU64::new(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ReplicaPool {
+            replicas,
+            rr: AtomicUsize::new(0),
+            cfg,
+            metrics: Arc::new(ServeMetrics::new()),
+        })
+    }
+
+    /// Number of replicas in the pool.
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Direct handle to one replica's engine (tests and binds that must
+    /// target a specific replica; routed traffic goes through
+    /// [`ReplicaPool::submit`]).
+    pub fn handle(&self, replica: usize) -> EngineHandle {
+        self.replicas[replica].handle.clone()
+    }
+
+    /// The `retry_after_ms` hint the pool attaches when shedding: the
+    /// observed mean request latency, floored by the configured minimum.
+    pub fn retry_hint_ms(&self) -> u64 {
+        (self.metrics.mean_latency_ms().ceil() as u64).max(self.cfg.retry_after_ms).max(1)
+    }
+
+    /// Record a compute request shed *before* it reached the pool (the
+    /// network front's transport in-flight cap), so `serve_shed_total`
+    /// and the shed fraction cover both admission layers.
+    pub fn record_transport_shed(&self) {
+        self.metrics.record_request();
+        self.metrics.record_shed();
+    }
+
+    /// Route one compute request: pick the admitting replica with the
+    /// fewest outstanding tickets (ties rotate round-robin), reserve a
+    /// slot, and submit. When every replica is at its cap, shed with a
+    /// typed `overloaded` error carrying the retry hint — never block.
+    pub fn submit(&self, req: ServiceRequest) -> ServiceResult<PoolTicket> {
+        self.metrics.record_request();
+        let n = self.replicas.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        // Candidate order: rotated indices, stable-sorted by queue depth —
+        // least-outstanding first, round-robin among equals.
+        let mut order: Vec<usize> = (0..n).map(|i| (start + i) % n).collect();
+        order.sort_by_key(|&i| self.replicas[i].outstanding.load(Ordering::Relaxed));
+        for &i in &order {
+            let r = &self.replicas[i];
+            // Reserve atomically against the cap (depths move under us).
+            let reserved = r
+                .outstanding
+                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |o| {
+                    (o < self.cfg.max_inflight).then_some(o + 1)
+                })
+                .is_ok();
+            if !reserved {
+                continue;
+            }
+            let inner = match r.handle.submit(req) {
+                Ok(t) => t,
+                Err(e) => {
+                    // The engine thread is gone; release the slot and
+                    // surface the typed error (not a shed).
+                    r.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    self.metrics.record_error();
+                    return Err(e);
+                }
+            };
+            r.requests_total.fetch_add(1, Ordering::Relaxed);
+            return Ok(PoolTicket {
+                inner: Some(inner),
+                replica: i,
+                issued: Instant::now(),
+                outstanding: Arc::clone(&r.outstanding),
+                metrics: Arc::clone(&self.metrics),
+                settled: false,
+            });
+        }
+        self.metrics.record_shed();
+        Err(ServiceError::overloaded(format!(
+            "all {n} replicas at their admission cap ({} tickets each)",
+            self.cfg.max_inflight
+        ))
+        .with_retry_after(self.retry_hint_ms()))
+    }
+
+    /// Blocking request entry point — the pool-level twin of
+    /// `EngineHandle::call`, with control-plane classes handled
+    /// pool-wide:
+    ///
+    /// - `Metrics` answers from the pool's registry (no engine hop);
+    /// - binds **broadcast** to every replica, so routed traffic always
+    ///   sees the same parameters regardless of placement;
+    /// - `Stats` aggregates across replicas (runtime counters summed,
+    ///   MiTA routing stats merged);
+    /// - compute classes route through [`ReplicaPool::submit`].
+    pub fn call(&self, req: ServiceRequest) -> ServiceResult<ServiceResponse> {
+        match req {
+            ServiceRequest::Metrics => Ok(ServiceResponse::Metrics(self.snapshot())),
+            ServiceRequest::BindCheckpoint { .. } | ServiceRequest::BindInit { .. } => {
+                let mut last = None;
+                for r in &self.replicas {
+                    last = Some(r.handle.call(req.clone())?);
+                }
+                Ok(last.expect("pool has at least one replica"))
+            }
+            ServiceRequest::Stats { reset } => {
+                let mut agg = ServiceStats::default();
+                let mut mita: Option<MitaStats> = None;
+                for r in &self.replicas {
+                    let s = r.handle.call(ServiceRequest::Stats { reset })?.into_stats()?;
+                    agg.runtime.compiles += s.runtime.compiles;
+                    agg.runtime.compile_secs += s.runtime.compile_secs;
+                    agg.runtime.executions += s.runtime.executions;
+                    agg.runtime.execute_secs += s.runtime.execute_secs;
+                    if let Some(m) = s.mita {
+                        match &mut mita {
+                            None => mita = Some(m),
+                            Some(acc) => acc.merge(&m),
+                        }
+                    }
+                }
+                agg.mita = mita;
+                Ok(ServiceResponse::Stats(agg))
+            }
+            other => self.submit(other)?.wait(),
+        }
+    }
+
+    /// Assemble the `/v1/metrics` payload: pool counters, the latency
+    /// histogram, and per-replica gauges (queue depth sampled now, MiTA
+    /// routing stats read from each replica's kernels).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let replicas = self
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let (overflow_fraction, load_imbalance) = r
+                    .handle
+                    .backend_stats()
+                    .ok()
+                    .and_then(|s| s.mita)
+                    .map(|m| (m.overflow_fraction(), m.load_imbalance()))
+                    .unwrap_or((0.0, 0.0));
+                ReplicaSnapshot {
+                    replica: i as u64,
+                    replica_requests_total: r.requests_total.load(Ordering::Relaxed),
+                    replica_queue_depth: r.outstanding.load(Ordering::Relaxed) as u64,
+                    max_inflight: self.cfg.max_inflight as u64,
+                    overflow_fraction,
+                    load_imbalance,
+                }
+            })
+            .collect();
+        MetricsSnapshot {
+            serve_requests_total: self.metrics.requests_total(),
+            serve_shed_total: self.metrics.shed_total(),
+            serve_errors_total: self.metrics.errors_total(),
+            request_latency_us: self.metrics.latency_snapshot(),
+            replicas,
+        }
+    }
+
+    /// Shut every replica down and join its engine thread.
+    pub fn shutdown(mut self) {
+        for r in self.replicas.drain(..) {
+            r.engine.shutdown();
+        }
+    }
+}
+
+/// An in-flight pool request: wraps the engine [`Ticket`] and, on
+/// settlement (wait / try-wait / drop), releases the replica's admission
+/// slot and records latency or error in the pool metrics.
+pub struct PoolTicket {
+    inner: Option<Ticket>,
+    replica: usize,
+    issued: Instant,
+    outstanding: Arc<AtomicUsize>,
+    metrics: Arc<ServeMetrics>,
+    settled: bool,
+}
+
+impl PoolTicket {
+    /// Which replica this request was routed to.
+    pub fn replica(&self) -> usize {
+        self.replica
+    }
+
+    /// Block until the request completes.
+    pub fn wait(mut self) -> ServiceResult<ServiceResponse> {
+        let ticket = self.inner.take().expect("pool ticket already redeemed");
+        let result = ticket.wait();
+        self.settle(&result);
+        result
+    }
+
+    /// Non-blocking completion check; `None` while still executing. Once
+    /// it returns `Some`, the ticket is settled.
+    pub fn try_wait(&mut self) -> Option<ServiceResult<ServiceResponse>> {
+        let result = self.inner.as_mut()?.try_wait()?;
+        self.inner = None;
+        self.settle(&result);
+        Some(result)
+    }
+
+    fn settle(&mut self, result: &ServiceResult<ServiceResponse>) {
+        if self.settled {
+            return;
+        }
+        self.settled = true;
+        self.outstanding.fetch_sub(1, Ordering::SeqCst);
+        match result {
+            Ok(_) => self.metrics.record_latency(self.issued.elapsed()),
+            Err(_) => self.metrics.record_error(),
+        }
+    }
+}
+
+impl Drop for PoolTicket {
+    fn drop(&mut self) {
+        // An abandoned ticket still releases its admission slot (no
+        // latency sample — the request was never observed completing).
+        if !self.settled {
+            self.settled = true;
+            self.outstanding.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::runtime::{NativeAttnConfig, Tensor};
+    use crate::service::{KernelId, QkvBatch};
+
+    fn attn_request(seed: u64) -> ServiceRequest {
+        let (n, dim) = (16usize, 8usize);
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..3 * n * dim).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        ServiceRequest::Attention {
+            op: KernelId::Mita,
+            qkv: QkvBatch::fused(Tensor::f32(&[1, 3, n, dim], data).unwrap()).unwrap(),
+            valid_rows: None,
+        }
+    }
+
+    fn pool(replicas: usize, max_inflight: usize) -> ReplicaPool {
+        let spec = BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2));
+        let cfg = ReplicaPoolConfig { replicas, max_inflight, retry_after_ms: 5 };
+        ReplicaPool::spawn(spec, vec![], cfg).unwrap()
+    }
+
+    #[test]
+    fn sequential_calls_round_robin_across_replicas() {
+        let p = pool(2, 8);
+        for i in 0..6 {
+            p.call(attn_request(i)).unwrap().into_tensor().unwrap();
+        }
+        let snap = p.snapshot();
+        assert_eq!(snap.serve_requests_total, 6);
+        assert_eq!(snap.serve_shed_total, 0);
+        assert_eq!(snap.replicas.len(), 2);
+        // Sequential callers leave every depth at 0, so the rotating
+        // tie-break alternates replicas exactly.
+        assert_eq!(snap.replicas[0].replica_requests_total, 3);
+        assert_eq!(snap.replicas[1].replica_requests_total, 3);
+        assert_eq!(snap.request_latency_us.count, 6);
+        assert!(snap.request_latency_us.p50_us > 0.0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn saturated_pool_sheds_with_retry_hint() {
+        let p = pool(2, 0);
+        let err = p.submit(attn_request(0)).map(|_| ()).unwrap_err();
+        assert_eq!(err.code(), "overloaded");
+        let hint = err.retry_after_ms().expect("shed carries a retry hint");
+        assert!(hint >= 5, "hint {hint} respects the configured floor");
+        let snap = p.snapshot();
+        assert_eq!(snap.serve_requests_total, 1);
+        assert_eq!(snap.serve_shed_total, 1);
+        assert!((snap.shed_fraction() - 1.0).abs() < 1e-12);
+        p.shutdown();
+    }
+
+    #[test]
+    fn admission_slots_release_on_settle_and_drop() {
+        let p = pool(1, 1);
+        // One slot: hold it via an unredeemed ticket, watch the second
+        // submit shed, then drop the ticket and watch the slot free up.
+        let t = p.submit(attn_request(1)).unwrap();
+        assert_eq!(p.submit(attn_request(2)).map(|_| ()).unwrap_err().code(), "overloaded");
+        drop(t);
+        let t = p.submit(attn_request(3)).unwrap();
+        t.wait().unwrap();
+        let snap = p.snapshot();
+        assert_eq!(snap.replicas[0].replica_queue_depth, 0);
+        assert_eq!(snap.serve_requests_total, 3);
+        assert_eq!(snap.serve_shed_total, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn stats_aggregate_across_replicas() {
+        let p = pool(2, 4);
+        for i in 0..4 {
+            p.call(attn_request(i)).unwrap();
+        }
+        let stats = p.call(ServiceRequest::Stats { reset: false }).unwrap().into_stats().unwrap();
+        // Two replicas served two executions each; the aggregate sees all
+        // four and the merged MiTA stats cover every query.
+        assert_eq!(stats.runtime.executions, 4);
+        let mita = stats.mita.expect("native replicas report routing stats");
+        assert!(mita.queries > 0);
+        p.shutdown();
+    }
+}

@@ -8,12 +8,11 @@
 //!   flops [--prefix P]                analytical FLOPs/params per bundle
 //!   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
 //!   eval <bundle> <checkpoint> [--batches N]
-//!   serve [<bundle>] [--workload bundle|attn|model] [--listen ADDR] ...
-//!   client --addr ADDR <health|attention|model-forward|stats|shutdown> ...
+//!   serve [<bundle>] [--workload bundle|attn|model] [--listen ADDR] [--replicas N] ...
+//!   client --addr ADDR <health|attention|model-forward|stats|metrics|shutdown>
+//!          [--retries N] ...
 //!   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K]
-//!   serve-native [--n N] [--dim D] [--heads H] [--op attn.mita|attn.dense]
 //!   model-check [--seq-len N] [--dim D] [--heads H] [--depth L]
-//!   serve-model [--task T] [--seq-len N] [--op attn.mita|attn.dense] [--checkpoint F]
 //!   train-native [--task T] [--steps N] [--lr X] [--batch B] [--kernel mita|dense]
 //!                [--checkpoint-out F] [--curve-out F]
 //!   table2|table3|table4|table5|table6|table7 [--steps N] [--seed S]
@@ -23,6 +22,7 @@
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -30,7 +30,8 @@ use anyhow::{bail, Result};
 use mita::coordinator::batcher::BatchPolicy;
 use mita::coordinator::{
     serve, serve_model, serve_native, Engine, ModelServeConfig, NativeServeConfig, NetClient,
-    NetServer, NetServerConfig, ServeConfig, Trainer, DEFAULT_MAX_INFLIGHT,
+    NetServer, NetServerConfig, ReplicaPool, ReplicaPoolConfig, ServeConfig, Trainer,
+    DEFAULT_MAX_INFLIGHT,
 };
 use mita::data::lra::{self, SeqTask};
 use mita::data::rng::Rng;
@@ -87,6 +88,8 @@ const VALUED_FLAGS: &[&str] = &[
     "max-inflight",
     "valid",
     "batch",
+    "replicas",
+    "retries",
     // native training subsystem
     "lr",
     "kernel",
@@ -384,6 +387,10 @@ fn main() -> Result<()> {
 /// the PJRT path) runs under the load-generator benchmark loop. All
 /// three produce typed `ServiceRequest` batches over the same engine.
 fn cmd_serve(args: &cli::Args, alias: &str, artifacts: &Path, opts: &Opts) -> Result<()> {
+    if alias != "serve" {
+        let workload = if alias == "serve-model" { "model" } else { "attn" };
+        eprintln!("warning: `{alias}` is deprecated; use `serve --workload {workload}`");
+    }
     // The alias / --workload choice carries into --listen: a model
     // workload must bind its (default listops) model before the network
     // server starts, or every /v1/model/forward would be unbound_params.
@@ -442,11 +449,11 @@ fn serve_bundle_front(args: &cli::Args, artifacts: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Spawn a native engine for the raw attention workload from the shared
-/// shape flags — the single construction path for both the generator
-/// front and `serve --listen`, so the two can never configure engines
-/// differently.
-fn spawn_attn_engine(args: &cli::Args) -> Result<(Engine, usize, usize)> {
+/// Build the native-backend spec for the raw attention workload from the
+/// shared shape flags — the single construction path for the generator
+/// front, `serve --listen`, and the replica pool, so none of them can
+/// configure backends differently.
+fn attn_backend_spec(args: &cli::Args) -> Result<(BackendSpec, usize, usize)> {
     let n = args.flag_parse("n", 1024usize)?;
     let dim = args.flag_parse("dim", 64usize)?;
     let heads = args.flag_parse("heads", 4usize)?;
@@ -456,7 +463,13 @@ fn spawn_attn_engine(args: &cli::Args) -> Result<(Engine, usize, usize)> {
     );
     let mut attn = NativeAttnConfig::for_shape(n, dim, heads);
     attn.mita = native_kernel_config(args, n)?;
-    Ok((Engine::spawn_backend(BackendSpec::Native(attn), vec![])?, n, dim))
+    Ok((BackendSpec::Native(attn), n, dim))
+}
+
+/// Spawn a native engine for the raw attention workload.
+fn spawn_attn_engine(args: &cli::Args) -> Result<(Engine, usize, usize)> {
+    let (spec, n, dim) = attn_backend_spec(args)?;
+    Ok((Engine::spawn_backend(spec, vec![])?, n, dim))
 }
 
 /// Generator front over the native attention kernels.
@@ -506,14 +519,13 @@ fn serve_model_front(args: &cli::Args, opts: &Opts) -> Result<()> {
     Ok(())
 }
 
-/// Spawn a native engine shaped for an LRA task and bind the model
-/// (checkpoint if `--checkpoint`, else seeded init) under `binding`.
-fn spawn_model_engine(
+/// Build the native-backend spec shaped for an LRA task (model +
+/// matching raw-attention registry from the same kernel config).
+fn model_backend_spec(
     args: &cli::Args,
     opts: &Opts,
     task_name: &str,
-    binding: &str,
-) -> Result<(Engine, String, Box<dyn SeqTask>)> {
+) -> Result<(BackendSpec, Box<dyn SeqTask>)> {
     let (def_n, def_vocab) = lra_task_defaults(task_name)?;
     let seq = args.flag_parse("seq-len", def_n)?;
     let vocab = args.flag_parse("vocab", def_vocab)?;
@@ -533,8 +545,19 @@ fn spawn_model_engine(
     mcfg.mita = kcfg;
     let mut attn = NativeAttnConfig::for_shape(task.seq_len(), dim, heads).with_model(mcfg);
     attn.mita = kcfg;
-    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![])?;
-    // Bind the model: --checkpoint if given, else seeded init.
+    Ok((BackendSpec::Native(attn), task))
+}
+
+/// The model bind for a freshly spawned backend: `--checkpoint` params
+/// if given (validated against the task geometry), else seeded init.
+/// Returned as a typed request so it can target one engine or broadcast
+/// through a [`ReplicaPool`].
+fn model_bind_request(
+    args: &cli::Args,
+    opts: &Opts,
+    binding: &str,
+    task: &dyn SeqTask,
+) -> Result<ServiceRequest> {
     match args.flag("checkpoint") {
         Some(path) => {
             let tensors = mita::coordinator::checkpoint::load(std::path::Path::new(path))?;
@@ -562,43 +585,83 @@ fn spawn_model_engine(
                 ckpt.classes,
                 task.classes()
             );
-            engine.handle().bind_tensors(binding, tensors)?;
+            Ok(ServiceRequest::BindCheckpoint { binding: binding.into(), params: tensors })
         }
-        None => engine.handle().bind_init(binding, OP_MODEL_INIT, opts.seed, 0)?,
+        None => Ok(ServiceRequest::BindInit {
+            binding: binding.into(),
+            init_op: OP_MODEL_INIT.to_string(),
+            seed: opts.seed,
+            param_count: 0,
+        }),
     }
+}
+
+/// Spawn a native engine shaped for an LRA task and bind the model
+/// (checkpoint if `--checkpoint`, else seeded init) under `binding`.
+fn spawn_model_engine(
+    args: &cli::Args,
+    opts: &Opts,
+    task_name: &str,
+    binding: &str,
+) -> Result<(Engine, String, Box<dyn SeqTask>)> {
+    let (spec, task) = model_backend_spec(args, opts, task_name)?;
+    let engine = Engine::spawn_backend(spec, vec![])?;
+    engine.handle().call(model_bind_request(args, opts, binding, task.as_ref())?)?;
     Ok((engine, task_name.to_string(), task))
 }
 
-/// `serve --listen ADDR`: the network front. Native backend; with
-/// `--task` / `--checkpoint` (or a model workload alias) a model is
-/// bound under `--binding` (default "model") so `/v1/model/forward` is
-/// servable alongside `/v1/attention`. `--addr-file F` writes the bound
-/// address (useful with port 0 in scripts/CI). Runs until a client posts
+/// `serve --listen ADDR`: the network front. `--replicas N` spawns N
+/// native engine replicas from one spec behind least-outstanding routing
+/// (see docs/SERVING.md); with `--task` / `--checkpoint` (or a model
+/// workload alias) a model is bound under `--binding` (default "model")
+/// on **every** replica so `/v1/model/forward` is servable alongside
+/// `/v1/attention`. `--addr-file F` writes the bound address (useful
+/// with port 0 in scripts/CI). Runs until a client posts
 /// `/v1/admin/shutdown`.
 fn serve_listen(args: &cli::Args, addr: &str, opts: &Opts, wants_model: bool) -> Result<()> {
     let binding = args.flag_or("binding", "model");
-    let engine =
-        if wants_model || args.flag("task").is_some() || args.flag("checkpoint").is_some() {
-            let task_name = args.flag_or("task", "listops");
-            let (engine, _, _) = spawn_model_engine(args, opts, &task_name, &binding)?;
-            engine
-        } else {
-            spawn_attn_engine(args)?.0
-        };
-
-    let cfg = NetServerConfig {
-        addr: addr.to_string(),
-        max_inflight: args.flag_parse("max-inflight", 64usize)?,
+    let replicas = args.flag_parse("replicas", 1usize)?;
+    anyhow::ensure!(replicas >= 1, "--replicas {replicas} wants at least 1");
+    let max_inflight = args.flag_parse("max-inflight", 64usize)?;
+    let wants_model =
+        wants_model || args.flag("task").is_some() || args.flag("checkpoint").is_some();
+    let (spec, bind) = if wants_model {
+        let task_name = args.flag_or("task", "listops");
+        let (spec, task) = model_backend_spec(args, opts, &task_name)?;
+        let bind = model_bind_request(args, opts, &binding, task.as_ref())?;
+        (spec, Some(bind))
+    } else {
+        (attn_backend_spec(args)?.0, None)
     };
-    let server = NetServer::bind(engine.handle(), &cfg)?;
+    // The transport cap is the pool-wide budget; each replica admits its
+    // share, rounded up so the per-replica caps always cover it.
+    let pool_cfg = ReplicaPoolConfig {
+        replicas,
+        max_inflight: max_inflight.div_ceil(replicas.max(1)).max(1),
+        ..ReplicaPoolConfig::default()
+    };
+    let pool = Arc::new(ReplicaPool::spawn(spec, vec![], pool_cfg)?);
+    if let Some(bind) = bind {
+        pool.call(bind)?; // broadcasts to every replica
+    }
+    let cfg = NetServerConfig { addr: addr.to_string(), max_inflight };
+    let server = NetServer::bind(pool.clone(), &cfg)?;
     let local = server.local_addr()?;
-    println!("serving on http://{local} (backend=native, protocol docs/PROTOCOL.md)");
+    println!(
+        "serving on http://{local} (backend=native, replicas={replicas}, \
+         protocol docs/PROTOCOL.md)"
+    );
     if let Some(path) = args.flag("addr-file") {
         std::fs::write(path, local.to_string())?;
     }
     server.run()?;
     println!("shutdown complete");
-    engine.shutdown();
+    // Lingering keep-alive handler threads may still hold pool clones;
+    // shut down explicitly when we hold the last one, otherwise engine
+    // Drop impls clean up when those handlers exit.
+    if let Ok(pool) = Arc::try_unwrap(pool) {
+        pool.shutdown();
+    }
     Ok(())
 }
 
@@ -612,7 +675,8 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
         (None, Some(path)) => std::fs::read_to_string(path)?.trim().to_string(),
         (None, None) => bail!("client needs --addr HOST:PORT (or --addr-file F)"),
     };
-    let client = NetClient::new(addr.as_str());
+    let client =
+        NetClient::new(addr.as_str()).with_retries(args.flag_parse("retries", 0usize)?);
     match args.positional(0, "action")? {
         "health" => {
             client.healthz()?;
@@ -698,8 +762,50 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 t0.elapsed().as_secs_f64() * 1e3
             );
         }
+        "metrics" => {
+            // Probe the raw wire text first so a renamed series fails CI
+            // even if the typed decoder were updated in lockstep; then
+            // print the typed summary.
+            let raw = client.metrics_raw()?;
+            let missing: Vec<&str> = mita::coordinator::metrics::METRIC_NAMES
+                .iter()
+                .copied()
+                .filter(|name| !raw.contains(name))
+                .collect();
+            anyhow::ensure!(
+                missing.is_empty(),
+                "/v1/metrics is missing documented series {missing:?} (see docs/SERVING.md)"
+            );
+            let m = client.metrics()?;
+            let lat = &m.request_latency_us;
+            println!(
+                "requests={} shed={} errors={} shed_fraction={:.4} \
+                 p50={:.0}us p95={:.0}us p99={:.0}us",
+                m.serve_requests_total,
+                m.serve_shed_total,
+                m.serve_errors_total,
+                m.shed_fraction(),
+                lat.p50_us,
+                lat.p95_us,
+                lat.p99_us,
+            );
+            for r in &m.replicas {
+                println!(
+                    "  replica {}: requests={} depth={}/{} ovf={:.1}% imb={:.2}",
+                    r.replica,
+                    r.replica_requests_total,
+                    r.replica_queue_depth,
+                    r.max_inflight,
+                    r.overflow_fraction * 100.0,
+                    r.load_imbalance,
+                );
+            }
+        }
         other => {
-            bail!("unknown client action {other:?} (health|attention|model-forward|stats|shutdown)")
+            bail!(
+                "unknown client action {other:?} \
+                 (health|attention|model-forward|stats|metrics|shutdown)"
+            )
         }
     }
     Ok(())
@@ -897,23 +1003,28 @@ single runs:
   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
   eval <bundle> <checkpoint> [--batches N]
 
-serving (one typed-request front; see docs/PROTOCOL.md):
+serving (one typed-request front; see docs/PROTOCOL.md + docs/SERVING.md):
   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W] [--queue-cap C]
            load-generator benchmark over a compiled PJRT bundle
   serve --workload attn|model [--op attn.mita|attn.dense] [--task T] ...
-           same benchmark over the native backend (aliases: serve-native,
-           serve-model keep their old flags)
-  serve --listen ADDR [--addr-file F] [--max-inflight C]
+           same benchmark over the native backend
+  serve --listen ADDR [--replicas N] [--addr-file F] [--max-inflight C]
         [--task T [--seq-len N] [--dim D] [--heads H] [--depth L]]
         [--checkpoint F] [--binding K]
            network front: TCP HTTP/1.1 + JSON over the typed service API
-           (/v1/attention, /v1/model/forward, /v1/bind, /v1/stats, ...);
+           (/v1/attention, /v1/model/forward, /v1/bind, /v1/stats,
+           /v1/metrics, ...); --replicas N routes across N engine
+           replicas with least-outstanding routing + typed shedding;
            runs until a client posts /v1/admin/shutdown
   client (--addr HOST:PORT | --addr-file F)
-         <health|attention|model-forward|stats|shutdown>
-         [--n N] [--dim D] [--batch B] [--valid V] [--task T] [--binding K]
+         <health|attention|model-forward|stats|metrics|shutdown>
+         [--retries N] [--n N] [--dim D] [--batch B] [--valid V]
+         [--task T] [--binding K]
            loopback wire client: sends one typed request and asserts the
-           response shape (non-zero exit on protocol errors)
+           response shape (non-zero exit on protocol errors); metrics
+           asserts every documented /v1/metrics series is present;
+           --retries N retries overloaded sheds per the server's
+           retry_after_ms hint
 
 native backend (pure-Rust kernels, no artifacts or Python needed):
   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K] [--cap-factor C]

@@ -56,7 +56,7 @@ fn check_binding_capacity<V>(
     key: &BindingId,
 ) -> ServiceResult<()> {
     if !map.contains_key(key.as_str()) && map.len() >= MAX_BINDINGS {
-        return Err(ServiceError::Overloaded(format!(
+        return Err(ServiceError::overloaded(format!(
             "binding capacity reached ({MAX_BINDINGS} keys); rebind an existing key"
         )));
     }
@@ -210,6 +210,9 @@ impl Backend for PjrtBackend {
                 runtime: self.runtime.stats(),
                 mita: None,
             })),
+            ServiceRequest::Metrics => Err(ServiceError::Unavailable(
+                "serving metrics are assembled by the replica pool, not a backend".into(),
+            )),
             other @ (ServiceRequest::Attention { .. } | ServiceRequest::ModelForward { .. }) => {
                 Err(ServiceError::Unavailable(format!(
                     "pjrt backend serves compiled artifacts; {:?} requests need the native \
@@ -483,6 +486,9 @@ impl Backend for NativeBackend {
                  (requested {artifact:?})"
             ))),
             ServiceRequest::Stats { reset } => Ok(ServiceResponse::Stats(self.take_stats(reset))),
+            ServiceRequest::Metrics => Err(ServiceError::Unavailable(
+                "serving metrics are assembled by the replica pool, not a backend".into(),
+            )),
         }
     }
 }

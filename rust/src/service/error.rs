@@ -1,12 +1,19 @@
 //! The versioned error taxonomy of the typed service API.
 //!
 //! Every failure that can cross the service boundary — engine submission,
-//! backend execution, or the network front — is a [`ServiceError`] with a
-//! **stable string code**. Codes are part of the wire protocol (see
-//! `docs/PROTOCOL.md`): clients branch on `code`, never on the free-text
-//! `message`, so messages can improve without breaking anyone. The
-//! taxonomy itself is versioned through the protocol's `version` field;
-//! adding a code is backward-compatible, renaming one is not.
+//! backend execution, replica-pool admission, or the network front — is a
+//! [`ServiceError`] with a **stable string code**. Codes are part of the
+//! wire protocol (see `docs/PROTOCOL.md`): clients branch on `code`,
+//! never on the free-text `message`, so messages can improve without
+//! breaking anyone. The taxonomy itself is versioned through the
+//! protocol's `proto` field; adding a code is backward-compatible,
+//! renaming one is not.
+//!
+//! [`ServiceError::Overloaded`] carries a structured `retry_after_ms`
+//! hint alongside the message: the serving layer fills it from observed
+//! latency so a shed client knows *when* to retry, and the wire layer
+//! round-trips it (`error.retry_after_ms`) so the hint survives typed
+//! end to end.
 
 use std::fmt;
 
@@ -14,8 +21,11 @@ use std::fmt;
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ServiceError {
     /// The request itself is malformed: unparseable JSON, missing fields,
-    /// wrong protocol version, unknown endpoint.
+    /// unknown endpoint.
     BadRequest(String),
+    /// The request speaks a protocol revision this server does not
+    /// support (`proto` outside the accepted range).
+    UnsupportedProto(String),
     /// Tensors have the wrong rank/shape/dtype, or `valid_rows` is out of
     /// range for the batch.
     BadShape(String),
@@ -24,7 +34,8 @@ pub enum ServiceError {
     /// The request references a parameter binding that was never bound.
     UnboundParams(String),
     /// Admission control rejected the request (queue/inflight capacity).
-    Overloaded(String),
+    /// `retry_after_ms`, when present, is the server's backoff hint.
+    Overloaded { message: String, retry_after_ms: Option<u64> },
     /// The backend cannot serve this request class at all (e.g. artifact
     /// execution on the native backend, or a stubbed PJRT closure).
     Unavailable(String),
@@ -40,10 +51,11 @@ impl ServiceError {
     pub fn code(&self) -> &'static str {
         match self {
             ServiceError::BadRequest(_) => "bad_request",
+            ServiceError::UnsupportedProto(_) => "unsupported_proto",
             ServiceError::BadShape(_) => "bad_shape",
             ServiceError::UnknownOp(_) => "unknown_op",
             ServiceError::UnboundParams(_) => "unbound_params",
-            ServiceError::Overloaded(_) => "overloaded",
+            ServiceError::Overloaded { .. } => "overloaded",
             ServiceError::Unavailable(_) => "unavailable",
             ServiceError::Internal(_) => "internal",
         }
@@ -53,10 +65,11 @@ impl ServiceError {
     pub fn message(&self) -> &str {
         match self {
             ServiceError::BadRequest(m)
+            | ServiceError::UnsupportedProto(m)
             | ServiceError::BadShape(m)
             | ServiceError::UnknownOp(m)
             | ServiceError::UnboundParams(m)
-            | ServiceError::Overloaded(m)
+            | ServiceError::Overloaded { message: m, .. }
             | ServiceError::Unavailable(m)
             | ServiceError::Internal(m) => m,
         }
@@ -65,25 +78,54 @@ impl ServiceError {
     /// HTTP status the network front maps this error to.
     pub fn http_status(&self) -> u16 {
         match self {
-            ServiceError::BadRequest(_) | ServiceError::BadShape(_) => 400,
+            ServiceError::BadRequest(_)
+            | ServiceError::UnsupportedProto(_)
+            | ServiceError::BadShape(_) => 400,
             ServiceError::UnknownOp(_) | ServiceError::UnboundParams(_) => 404,
-            ServiceError::Overloaded(_) => 503,
+            ServiceError::Overloaded { .. } => 503,
             ServiceError::Unavailable(_) => 501,
             ServiceError::Internal(_) => 500,
         }
     }
 
+    /// An [`ServiceError::Overloaded`] without a backoff hint (the
+    /// serving layer adds one via [`ServiceError::with_retry_after`]).
+    pub fn overloaded(message: impl Into<String>) -> Self {
+        ServiceError::Overloaded { message: message.into(), retry_after_ms: None }
+    }
+
+    /// Attach a backoff hint (no-op on non-`overloaded` errors, which
+    /// carry none on the wire).
+    pub fn with_retry_after(self, ms: u64) -> Self {
+        match self {
+            ServiceError::Overloaded { message, .. } => {
+                ServiceError::Overloaded { message, retry_after_ms: Some(ms) }
+            }
+            other => other,
+        }
+    }
+
+    /// The backoff hint, if this is an `overloaded` error carrying one.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            ServiceError::Overloaded { retry_after_ms, .. } => *retry_after_ms,
+            _ => None,
+        }
+    }
+
     /// Rebuild a typed error from its wire `(code, message)` pair — the
-    /// loopback client uses this so errors stay typed end to end. Unknown
+    /// loopback client uses this so errors stay typed end to end (the
+    /// wire layer re-attaches `retry_after_ms` separately). Unknown
     /// codes (a newer server) degrade to [`ServiceError::Internal`].
     pub fn from_code(code: &str, message: impl Into<String>) -> Self {
         let m = message.into();
         match code {
             "bad_request" => ServiceError::BadRequest(m),
+            "unsupported_proto" => ServiceError::UnsupportedProto(m),
             "bad_shape" => ServiceError::BadShape(m),
             "unknown_op" => ServiceError::UnknownOp(m),
             "unbound_params" => ServiceError::UnboundParams(m),
-            "overloaded" => ServiceError::Overloaded(m),
+            "overloaded" => ServiceError::overloaded(m),
             "unavailable" => ServiceError::Unavailable(m),
             _ => ServiceError::Internal(format!("[{code}] {m}")),
         }
@@ -114,10 +156,11 @@ mod tests {
     fn codes_are_stable_and_roundtrip() {
         let all = [
             ServiceError::BadRequest("a".into()),
+            ServiceError::UnsupportedProto("p".into()),
             ServiceError::BadShape("b".into()),
             ServiceError::UnknownOp("c".into()),
             ServiceError::UnboundParams("d".into()),
-            ServiceError::Overloaded("e".into()),
+            ServiceError::overloaded("e"),
             ServiceError::Unavailable("f".into()),
             ServiceError::Internal("g".into()),
         ];
@@ -126,6 +169,7 @@ mod tests {
             codes,
             [
                 "bad_request",
+                "unsupported_proto",
                 "bad_shape",
                 "unknown_op",
                 "unbound_params",
@@ -144,6 +188,19 @@ mod tests {
     }
 
     #[test]
+    fn overloaded_retry_hint() {
+        let e = ServiceError::overloaded("queue full");
+        assert_eq!(e.retry_after_ms(), None);
+        let e = e.with_retry_after(25);
+        assert_eq!(e.retry_after_ms(), Some(25));
+        assert_eq!(e.code(), "overloaded");
+        assert_eq!(e.message(), "queue full");
+        // Only overloaded carries a hint; other errors ignore it.
+        let e = ServiceError::BadRequest("x".into()).with_retry_after(25);
+        assert_eq!(e.retry_after_ms(), None);
+    }
+
+    #[test]
     fn display_carries_code_and_message() {
         let e = ServiceError::BadShape("rank 2 != 4".into());
         assert_eq!(e.to_string(), "[bad_shape] rank 2 != 4");
@@ -155,8 +212,9 @@ mod tests {
     #[test]
     fn http_statuses() {
         assert_eq!(ServiceError::BadShape(String::new()).http_status(), 400);
+        assert_eq!(ServiceError::UnsupportedProto(String::new()).http_status(), 400);
         assert_eq!(ServiceError::UnknownOp(String::new()).http_status(), 404);
-        assert_eq!(ServiceError::Overloaded(String::new()).http_status(), 503);
+        assert_eq!(ServiceError::overloaded("").http_status(), 503);
         assert_eq!(ServiceError::Internal(String::new()).http_status(), 500);
     }
 }

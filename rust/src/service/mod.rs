@@ -18,6 +18,8 @@
 //!   PJRT backend (artifact names come from the build manifest, so they
 //!   stay strings by construction — but validated and routed here).
 //! - [`ServiceRequest::Stats`] — execution + routing counters.
+//! - [`ServiceRequest::Metrics`] — the serving-layer telemetry snapshot
+//!   (counters/histograms; answered by the replica pool, not a backend).
 //!
 //! Failures are a [`ServiceError`] with a stable code ([`error`]);
 //! [`wire`] maps requests/responses onto the HTTP+JSON protocol served by
@@ -28,14 +30,22 @@ pub mod wire;
 
 pub use error::{ServiceError, ServiceResult};
 
+use crate::coordinator::metrics::MetricsSnapshot;
 use crate::kernels::api::{QkvData, QkvLayout};
 use crate::kernels::{MitaStats, OP_ATTN_DENSE, OP_ATTN_MITA};
 use crate::runtime::client::RuntimeStats;
 use crate::runtime::tensor::Tensor;
 
-/// Protocol version stamped on every wire request/response (and the
-/// version of the error-code taxonomy).
-pub const PROTOCOL_VERSION: u64 = 1;
+/// Protocol revision stamped as `proto` on every wire request/response
+/// (and the version of the error-code taxonomy). Servers accept
+/// [`PROTOCOL_VERSION_MIN`]`..=`[`PROTOCOL_VERSION`] and reject anything
+/// else with the stable `unsupported_proto` code; see `docs/PROTOCOL.md`
+/// for the evolution contract.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Oldest protocol revision this build still parses (v1 bodies carry the
+/// field under its old name, `version`).
+pub const PROTOCOL_VERSION_MIN: u64 = 1;
 
 // ---------------------------------------------------------------------------
 // Identifiers
@@ -283,6 +293,10 @@ pub enum ServiceRequest {
     /// Snapshot execution + routing counters; with `reset`, clear the
     /// routing accumulator after the snapshot.
     Stats { reset: bool },
+    /// Snapshot the serving-layer telemetry registry (request counters,
+    /// shed counters, latency histogram, per-replica gauges). Answered by
+    /// the replica pool; a bare backend returns `unavailable`.
+    Metrics,
 }
 
 impl ServiceRequest {
@@ -295,6 +309,7 @@ impl ServiceRequest {
             ServiceRequest::BindInit { .. } => "bind_init",
             ServiceRequest::Artifact { .. } => "artifact",
             ServiceRequest::Stats { .. } => "stats",
+            ServiceRequest::Metrics => "metrics",
         }
     }
 }
@@ -322,6 +337,8 @@ pub enum ServiceResponse {
     Artifact { outputs: Vec<Tensor> },
     /// Counter snapshot.
     Stats(ServiceStats),
+    /// Serving-layer telemetry snapshot.
+    Metrics(MetricsSnapshot),
 }
 
 impl ServiceResponse {
@@ -333,6 +350,7 @@ impl ServiceResponse {
             ServiceResponse::Bound { .. } => "bound",
             ServiceResponse::Artifact { .. } => "artifact",
             ServiceResponse::Stats(_) => "stats",
+            ServiceResponse::Metrics(_) => "metrics",
         }
     }
 
@@ -343,7 +361,9 @@ impl ServiceResponse {
             ServiceResponse::Attention { out } => vec![out],
             ServiceResponse::ModelForward { logits } => vec![logits],
             ServiceResponse::Artifact { outputs } => outputs.iter().collect(),
-            ServiceResponse::Bound { .. } | ServiceResponse::Stats(_) => Vec::new(),
+            ServiceResponse::Bound { .. }
+            | ServiceResponse::Stats(_)
+            | ServiceResponse::Metrics(_) => Vec::new(),
         }
     }
 
@@ -353,7 +373,9 @@ impl ServiceResponse {
             ServiceResponse::Attention { out } => vec![out],
             ServiceResponse::ModelForward { logits } => vec![logits],
             ServiceResponse::Artifact { outputs } => outputs,
-            ServiceResponse::Bound { .. } | ServiceResponse::Stats(_) => Vec::new(),
+            ServiceResponse::Bound { .. }
+            | ServiceResponse::Stats(_)
+            | ServiceResponse::Metrics(_) => Vec::new(),
         }
     }
 
@@ -376,6 +398,17 @@ impl ServiceResponse {
             ServiceResponse::Stats(s) => Ok(s),
             other => Err(ServiceError::Internal(format!(
                 "expected a stats response, got {:?} class",
+                other.kind()
+            ))),
+        }
+    }
+
+    /// The telemetry payload (errors on other classes).
+    pub fn into_metrics(self) -> ServiceResult<MetricsSnapshot> {
+        match self {
+            ServiceResponse::Metrics(m) => Ok(m),
+            other => Err(ServiceError::Internal(format!(
+                "expected a metrics response, got {:?} class",
                 other.kind()
             ))),
         }

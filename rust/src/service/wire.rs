@@ -4,16 +4,21 @@
 //! (`coordinator::netserver`) and its loopback client, so the two can
 //! never drift. The JSON schemas, endpoints, status mapping, and error
 //! codes are specified in `docs/PROTOCOL.md`; every body carries a
-//! `version` field ([`crate::service::PROTOCOL_VERSION`]).
+//! `proto` revision field ([`crate::service::PROTOCOL_VERSION`]), and
+//! parsers accept the supported range
+//! [`crate::service::PROTOCOL_VERSION_MIN`]`..=`[`crate::service::PROTOCOL_VERSION`]
+//! (v1 bodies spelled the field `version`; that spelling still parses).
+//! A revision outside the range is the stable `unsupported_proto` error.
 //!
 //! Tensors cross the wire as `{"dtype": "f32"|"i32", "shape": [..],
 //! "data": [..]}` with row-major data. f32 payloads round-trip exactly
 //! (JSON numbers are f64 and every f32 is representable).
 
+use crate::coordinator::metrics::{HistogramSnapshot, MetricsSnapshot, ReplicaSnapshot};
 use crate::runtime::tensor::Tensor;
 use crate::service::{
     BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse, ServiceResult,
-    ServiceStats, PROTOCOL_VERSION,
+    ServiceStats, PROTOCOL_VERSION, PROTOCOL_VERSION_MIN,
 };
 use crate::util::json::Value;
 
@@ -27,6 +32,9 @@ pub const EP_BIND: &str = "/v1/bind";
 pub const EP_ARTIFACT: &str = "/v1/artifact";
 /// Endpoint of [`ServiceRequest::Stats`].
 pub const EP_STATS: &str = "/v1/stats";
+/// Endpoint of [`ServiceRequest::Metrics`] (also answers plain `GET`, and
+/// bypasses admission so telemetry stays readable under load).
+pub const EP_METRICS: &str = "/v1/metrics";
 /// Liveness probe (handled by the server, no engine round-trip).
 pub const EP_HEALTH: &str = "/v1/healthz";
 /// Clean-shutdown endpoint (handled by the server).
@@ -126,7 +134,7 @@ pub fn tensor_from_json(v: &Value) -> ServiceResult<Tensor> {
 /// Encode a request as its `(endpoint, body)` wire pair.
 pub fn encode_request(req: &ServiceRequest) -> (&'static str, Value) {
     let mut body: Vec<(String, Value)> =
-        vec![("version".into(), Value::num(PROTOCOL_VERSION as f64))];
+        vec![("proto".into(), Value::num(PROTOCOL_VERSION as f64))];
     let path = match req {
         ServiceRequest::Attention { op, qkv, valid_rows } => {
             body.push(("op".into(), Value::str(op.as_str())));
@@ -180,21 +188,40 @@ pub fn encode_request(req: &ServiceRequest) -> (&'static str, Value) {
             body.push(("reset".into(), Value::Bool(*reset)));
             EP_STATS
         }
+        ServiceRequest::Metrics => EP_METRICS,
     };
     (path, Value::obj(body))
 }
 
-fn check_version(body: &Value) -> ServiceResult<()> {
-    let v = body
-        .get("version")
-        .and_then(|v| v.as_usize())
-        .map_err(|e| ServiceError::BadRequest(format!("protocol version: {e}")))?;
-    if v as u64 != PROTOCOL_VERSION {
-        return Err(ServiceError::BadRequest(format!(
-            "unsupported protocol version {v} (this server speaks {PROTOCOL_VERSION})"
-        )));
+/// Validate the protocol revision of a body: `proto` (or the legacy v1
+/// spelling `version`) must fall in the supported range. A missing field
+/// is a malformed body (`bad_request`); a revision outside the range is
+/// the dedicated `unsupported_proto` code, so clients can distinguish
+/// "fix your request" from "negotiate a protocol".
+fn check_proto(body: &Value) -> ServiceResult<()> {
+    let (name, field) = match body.opt("proto") {
+        Some(v) => ("proto", v),
+        None => match body.opt("version") {
+            Some(v) => ("version", v),
+            None => {
+                return Err(ServiceError::BadRequest(format!(
+                    "missing proto field (this server speaks \
+                     {PROTOCOL_VERSION_MIN}..={PROTOCOL_VERSION})"
+                )))
+            }
+        },
+    };
+    let v = field
+        .as_usize()
+        .map_err(|e| ServiceError::BadRequest(format!("{name}: {e}")))? as u64;
+    if (PROTOCOL_VERSION_MIN..=PROTOCOL_VERSION).contains(&v) {
+        Ok(())
+    } else {
+        Err(ServiceError::UnsupportedProto(format!(
+            "protocol revision {v} not supported (this server speaks \
+             {PROTOCOL_VERSION_MIN}..={PROTOCOL_VERSION})"
+        )))
     }
-    Ok(())
 }
 
 fn req_str(body: &Value, key: &str) -> ServiceResult<String> {
@@ -213,7 +240,7 @@ fn opt_valid_rows(body: &Value) -> ServiceResult<Option<usize>> {
 /// the service boundary of the network front: past this point there are
 /// no raw op strings or marker tensors, only validated typed requests.
 pub fn parse_request(path: &str, body: &Value) -> ServiceResult<ServiceRequest> {
-    check_version(body)?;
+    check_proto(body)?;
     match path {
         EP_ATTENTION => {
             let op = KernelId::parse(&req_str(body, "op")?)?;
@@ -303,6 +330,7 @@ pub fn parse_request(path: &str, body: &Value) -> ServiceResult<ServiceRequest> 
                 .unwrap_or(false);
             Ok(ServiceRequest::Stats { reset })
         }
+        EP_METRICS => Ok(ServiceRequest::Metrics),
         other => Err(ServiceError::BadRequest(format!("unknown endpoint {other:?}"))),
     }
 }
@@ -372,10 +400,130 @@ fn stats_from_json(v: &Value) -> ServiceResult<ServiceStats> {
     Ok(ServiceStats { runtime, mita })
 }
 
+fn histogram_to_json(h: &HistogramSnapshot) -> Value {
+    Value::obj([
+        ("count", Value::num(h.count as f64)),
+        ("sum_us", Value::num(h.sum_us)),
+        ("max_us", Value::num(h.max_us)),
+        ("p50_us", Value::num(h.p50_us)),
+        ("p95_us", Value::num(h.p95_us)),
+        ("p99_us", Value::num(h.p99_us)),
+        (
+            "buckets",
+            Value::Arr(
+                h.buckets
+                    .iter()
+                    .map(|&(le, c)| Value::Arr(vec![Value::num(le), Value::num(c as f64)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn histogram_from_json(v: &Value) -> ServiceResult<HistogramSnapshot> {
+    let bad = |e: anyhow::Error| ServiceError::BadRequest(format!("histogram: {e}"));
+    let buckets = v
+        .get("buckets")
+        .and_then(|b| b.as_arr())
+        .map_err(bad)?
+        .iter()
+        .map(|pair| -> ServiceResult<(f64, u64)> {
+            let pair = pair.as_arr().map_err(bad)?;
+            if pair.len() != 2 {
+                return Err(ServiceError::BadRequest(
+                    "histogram bucket wants [le_us, count]".into(),
+                ));
+            }
+            let le = pair[0].as_f64().map_err(bad)?;
+            let count = pair[1].as_usize().map_err(bad)? as u64;
+            Ok((le, count))
+        })
+        .collect::<ServiceResult<Vec<_>>>()?;
+    Ok(HistogramSnapshot {
+        count: v.get("count").and_then(|x| x.as_usize()).map_err(bad)? as u64,
+        sum_us: v.get("sum_us").and_then(|x| x.as_f64()).map_err(bad)?,
+        max_us: v.get("max_us").and_then(|x| x.as_f64()).map_err(bad)?,
+        p50_us: v.get("p50_us").and_then(|x| x.as_f64()).map_err(bad)?,
+        p95_us: v.get("p95_us").and_then(|x| x.as_f64()).map_err(bad)?,
+        p99_us: v.get("p99_us").and_then(|x| x.as_f64()).map_err(bad)?,
+        buckets,
+    })
+}
+
+fn metrics_to_json(m: &MetricsSnapshot) -> Value {
+    let replicas = m
+        .replicas
+        .iter()
+        .map(|r| {
+            Value::obj([
+                ("replica", Value::num(r.replica as f64)),
+                ("replica_requests_total", Value::num(r.replica_requests_total as f64)),
+                ("replica_queue_depth", Value::num(r.replica_queue_depth as f64)),
+                ("max_inflight", Value::num(r.max_inflight as f64)),
+                ("overflow_fraction", Value::num(r.overflow_fraction)),
+                ("load_imbalance", Value::num(r.load_imbalance)),
+            ])
+        })
+        .collect();
+    Value::obj([
+        ("serve_requests_total", Value::num(m.serve_requests_total as f64)),
+        ("serve_shed_total", Value::num(m.serve_shed_total as f64)),
+        ("serve_errors_total", Value::num(m.serve_errors_total as f64)),
+        ("request_latency_us", histogram_to_json(&m.request_latency_us)),
+        ("replicas", Value::Arr(replicas)),
+    ])
+}
+
+fn metrics_from_json(v: &Value) -> ServiceResult<MetricsSnapshot> {
+    let bad = |e: anyhow::Error| ServiceError::BadRequest(format!("metrics: {e}"));
+    let replicas = v
+        .get("replicas")
+        .and_then(|r| r.as_arr())
+        .map_err(bad)?
+        .iter()
+        .map(|r| -> ServiceResult<ReplicaSnapshot> {
+            Ok(ReplicaSnapshot {
+                replica: r.get("replica").and_then(|x| x.as_usize()).map_err(bad)? as u64,
+                replica_requests_total: r
+                    .get("replica_requests_total")
+                    .and_then(|x| x.as_usize())
+                    .map_err(bad)? as u64,
+                replica_queue_depth: r
+                    .get("replica_queue_depth")
+                    .and_then(|x| x.as_usize())
+                    .map_err(bad)? as u64,
+                max_inflight: r.get("max_inflight").and_then(|x| x.as_usize()).map_err(bad)?
+                    as u64,
+                overflow_fraction: r
+                    .get("overflow_fraction")
+                    .and_then(|x| x.as_f64())
+                    .map_err(bad)?,
+                load_imbalance: r.get("load_imbalance").and_then(|x| x.as_f64()).map_err(bad)?,
+            })
+        })
+        .collect::<ServiceResult<Vec<_>>>()?;
+    Ok(MetricsSnapshot {
+        serve_requests_total: v
+            .get("serve_requests_total")
+            .and_then(|x| x.as_usize())
+            .map_err(bad)? as u64,
+        serve_shed_total: v.get("serve_shed_total").and_then(|x| x.as_usize()).map_err(bad)?
+            as u64,
+        serve_errors_total: v
+            .get("serve_errors_total")
+            .and_then(|x| x.as_usize())
+            .map_err(bad)? as u64,
+        request_latency_us: histogram_from_json(
+            v.get("request_latency_us").map_err(bad)?,
+        )?,
+        replicas,
+    })
+}
+
 /// Encode a successful response body.
 pub fn encode_response(resp: &ServiceResponse) -> Value {
     let mut body: Vec<(String, Value)> = vec![
-        ("version".into(), Value::num(PROTOCOL_VERSION as f64)),
+        ("proto".into(), Value::num(PROTOCOL_VERSION as f64)),
         ("ok".into(), Value::Bool(true)),
         ("kind".into(), Value::str(resp.kind())),
     ];
@@ -391,30 +539,33 @@ pub fn encode_response(resp: &ServiceResponse) -> Value {
             body.push(("outputs".into(), Value::Arr(outputs.iter().map(tensor_to_json).collect())))
         }
         ServiceResponse::Stats(s) => body.push(("stats".into(), stats_to_json(s))),
+        ServiceResponse::Metrics(m) => body.push(("metrics".into(), metrics_to_json(m))),
     }
     Value::obj(body)
 }
 
 /// Encode an error response body (the HTTP status comes from
-/// [`ServiceError::http_status`]; the body repeats the stable code).
+/// [`ServiceError::http_status`]; the body repeats the stable code, and
+/// `overloaded` errors carry their `retry_after_ms` backoff hint).
 pub fn encode_error(err: &ServiceError) -> Value {
+    let mut error = vec![
+        ("code".to_string(), Value::str(err.code())),
+        ("message".to_string(), Value::str(err.message())),
+    ];
+    if let Some(ms) = err.retry_after_ms() {
+        error.push(("retry_after_ms".to_string(), Value::num(ms as f64)));
+    }
     Value::obj([
-        ("version".into(), Value::num(PROTOCOL_VERSION as f64)),
+        ("proto".into(), Value::num(PROTOCOL_VERSION as f64)),
         ("ok".into(), Value::Bool(false)),
-        (
-            "error".into(),
-            Value::obj([
-                ("code", Value::str(err.code())),
-                ("message", Value::str(err.message())),
-            ]),
-        ),
+        ("error".into(), Value::obj(error)),
     ])
 }
 
 /// Parse a response body back into the typed result — errors come back as
 /// the same [`ServiceError`] the server produced.
 pub fn parse_response(body: &Value) -> ServiceResult<ServiceResponse> {
-    check_version(body)?;
+    check_proto(body)?;
     let ok = body
         .get("ok")
         .and_then(|v| v.as_bool())
@@ -432,7 +583,11 @@ pub fn parse_response(body: &Value) -> ServiceResult<ServiceResponse> {
             .and_then(|m| m.as_str().ok())
             .unwrap_or("")
             .to_string();
-        return Err(ServiceError::from_code(&code, message));
+        let mut typed = ServiceError::from_code(&code, message);
+        if let Some(ms) = err.opt("retry_after_ms").and_then(|m| m.as_usize().ok()) {
+            typed = typed.with_retry_after(ms as u64);
+        }
+        return Err(typed);
     }
     let kind = body
         .get("kind")
@@ -465,6 +620,12 @@ pub fn parse_response(body: &Value) -> ServiceResult<ServiceResponse> {
                 .map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?;
             Ok(ServiceResponse::Stats(stats_from_json(s)?))
         }
+        "metrics" => {
+            let m = body
+                .get("metrics")
+                .map_err(|e| ServiceError::BadRequest(format!("response: {e}")))?;
+            Ok(ServiceResponse::Metrics(metrics_from_json(m)?))
+        }
         other => Err(ServiceError::BadRequest(format!("unknown response kind {other:?}"))),
     }
 }
@@ -472,7 +633,16 @@ pub fn parse_response(body: &Value) -> ServiceResult<ServiceResponse> {
 /// Which endpoints exist (the network server 404s everything else before
 /// engine submission).
 pub fn known_endpoints() -> &'static [&'static str] {
-    &[EP_ATTENTION, EP_MODEL_FORWARD, EP_BIND, EP_ARTIFACT, EP_STATS, EP_HEALTH, EP_SHUTDOWN]
+    &[
+        EP_ATTENTION,
+        EP_MODEL_FORWARD,
+        EP_BIND,
+        EP_ARTIFACT,
+        EP_STATS,
+        EP_METRICS,
+        EP_HEALTH,
+        EP_SHUTDOWN,
+    ]
 }
 
 fn tensor_is_finite(t: &Tensor) -> bool {
@@ -507,7 +677,9 @@ pub fn check_request_encodable(req: &ServiceRequest) -> ServiceResult<()> {
         ServiceRequest::ModelForward { tokens, .. } => vec![tokens],
         ServiceRequest::BindCheckpoint { params, .. } => params.iter().collect(),
         ServiceRequest::Artifact { inputs, .. } => inputs.iter().collect(),
-        ServiceRequest::BindInit { .. } | ServiceRequest::Stats { .. } => Vec::new(),
+        ServiceRequest::BindInit { .. }
+        | ServiceRequest::Stats { .. }
+        | ServiceRequest::Metrics => Vec::new(),
     };
     if tensors.into_iter().all(tensor_is_finite) {
         Ok(())
@@ -621,6 +793,14 @@ mod tests {
             ServiceRequest::Stats { reset } => assert!(reset),
             other => panic!("wrong class {:?}", other.kind()),
         }
+
+        let (path, body) = encode_request(&ServiceRequest::Metrics);
+        assert_eq!(path, EP_METRICS);
+        assert!(body.render().contains("\"proto\":2"));
+        match roundtrip_req(ServiceRequest::Metrics) {
+            ServiceRequest::Metrics => {}
+            other => panic!("wrong class {:?}", other.kind()),
+        }
     }
 
     #[test]
@@ -628,11 +808,30 @@ mod tests {
         // Unknown endpoint.
         let body = Value::parse(r#"{"version": 1}"#).unwrap();
         assert_eq!(parse_request("/v1/nope", &body).unwrap_err().code(), "bad_request");
-        // Missing / wrong protocol version.
+        // Missing protocol revision is a malformed body...
         let body = Value::parse(r#"{"op": "attn.mita"}"#).unwrap();
         assert_eq!(parse_request(EP_ATTENTION, &body).unwrap_err().code(), "bad_request");
-        let body = Value::parse(r#"{"version": 99, "op": "attn.mita"}"#).unwrap();
-        assert_eq!(parse_request(EP_ATTENTION, &body).unwrap_err().code(), "bad_request");
+        // ...but an out-of-range revision is the dedicated code, under
+        // either field spelling.
+        for text in
+            [r#"{"proto": 99, "op": "attn.mita"}"#, r#"{"version": 99, "op": "attn.mita"}"#]
+        {
+            let body = Value::parse(text).unwrap();
+            assert_eq!(
+                parse_request(EP_ATTENTION, &body).unwrap_err().code(),
+                "unsupported_proto",
+                "{text}"
+            );
+        }
+        // Both supported revisions parse (v1 bodies spell the field
+        // `version`; v2 spells it `proto`).
+        for text in [r#"{"version": 1}"#, r#"{"proto": 1}"#, r#"{"proto": 2}"#] {
+            let body = Value::parse(text).unwrap();
+            assert!(matches!(
+                parse_request(EP_METRICS, &body).unwrap(),
+                ServiceRequest::Metrics
+            ));
+        }
         // Wrong-rank qkv surfaces as bad_shape through the typed layer.
         let body = Value::parse(
             r#"{"version": 1, "op": "attn.mita",
@@ -726,5 +925,69 @@ mod tests {
         let body = encode_error(&err);
         let got = parse_response(&Value::parse(&body.render()).unwrap()).unwrap_err();
         assert_eq!(got, err);
+    }
+
+    #[test]
+    fn overloaded_retry_hint_survives_the_wire() {
+        let err = ServiceError::overloaded("pool saturated").with_retry_after(40);
+        let body = encode_error(&err);
+        let text = body.render();
+        assert!(text.contains("\"retry_after_ms\":40"), "{text}");
+        let got = parse_response(&Value::parse(&text).unwrap()).unwrap_err();
+        assert_eq!(got, err);
+        assert_eq!(got.retry_after_ms(), Some(40));
+        // Hint-less overloaded omits the field and parses back to None.
+        let body = encode_error(&ServiceError::overloaded("x"));
+        let text = body.render();
+        assert!(!text.contains("retry_after_ms"), "{text}");
+        let got = parse_response(&Value::parse(&text).unwrap()).unwrap_err();
+        assert_eq!(got.retry_after_ms(), None);
+    }
+
+    #[test]
+    fn metrics_snapshot_roundtrips() {
+        use crate::coordinator::metrics::{HistogramSnapshot, MetricsSnapshot, ReplicaSnapshot};
+        let snap = MetricsSnapshot {
+            serve_requests_total: 12,
+            serve_shed_total: 3,
+            serve_errors_total: 1,
+            request_latency_us: HistogramSnapshot {
+                count: 9,
+                sum_us: 4250.5,
+                max_us: 900.0,
+                p50_us: 420.0,
+                p95_us: 800.0,
+                p99_us: 890.0,
+                buckets: vec![(11.22, 2), (5011.87, 7)],
+            },
+            replicas: vec![
+                ReplicaSnapshot {
+                    replica: 0,
+                    replica_requests_total: 5,
+                    replica_queue_depth: 1,
+                    max_inflight: 8,
+                    overflow_fraction: 0.25,
+                    load_imbalance: 1.5,
+                },
+                ReplicaSnapshot {
+                    replica: 1,
+                    replica_requests_total: 4,
+                    replica_queue_depth: 0,
+                    max_inflight: 8,
+                    overflow_fraction: 0.0,
+                    load_imbalance: 1.0,
+                },
+            ],
+        };
+        let body = encode_response(&ServiceResponse::Metrics(snap.clone()));
+        let text = body.render();
+        // Every name in the canonical registry is literally on the wire.
+        for name in crate::coordinator::metrics::METRIC_NAMES {
+            assert!(text.contains(name), "{name} missing from {text}");
+        }
+        match parse_response(&Value::parse(&text).unwrap()).unwrap() {
+            ServiceResponse::Metrics(got) => assert_eq!(got, snap),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
     }
 }

@@ -4,11 +4,17 @@
 //!   tensors, unknown ops, unbound bindings, and over-capacity admission
 //!   each produce their documented **stable code** (never a stringly
 //!   message match);
-//! - the full TCP loopback path — `NetServer` on 127.0.0.1:0, the
-//!   `NetClient` wire client, attention + model-forward + stats requests,
-//!   and a clean `/v1/admin/shutdown`, all deterministic.
+//! - the full TCP loopback path — `NetServer` over a single-replica
+//!   `ReplicaPool` on 127.0.0.1:0, the `NetClient` wire client, attention
+//!   + model-forward + stats requests, and a clean `/v1/admin/shutdown`,
+//!   all deterministic. (Multi-replica behavior lives in
+//!   `tests/replica_pool.rs`.)
 
-use mita::coordinator::{Engine, NetClient, NetServer, NetServerConfig};
+use std::sync::Arc;
+
+use mita::coordinator::{
+    Engine, NetClient, NetServer, NetServerConfig, ReplicaPool, ReplicaPoolConfig,
+};
 use mita::data::lra;
 use mita::data::rng::Rng;
 use mita::data::Split;
@@ -28,23 +34,30 @@ fn fused_request(batch: usize, n: usize, dim: usize, valid: Option<usize>) -> Se
     }
 }
 
-/// Spawn a native engine (with a tiny listops model bound under "model")
-/// plus the network server on a loopback port; returns the client and
-/// the server thread handle.
+/// Spawn a single-replica pool (with a tiny listops model bound under
+/// "model") plus the network server on a loopback port; returns the pool,
+/// the client, and the server thread handle.
 fn spawn_loopback(
     max_inflight: usize,
-) -> (Engine, NetClient, std::thread::JoinHandle<anyhow::Result<()>>) {
+) -> (Arc<ReplicaPool>, NetClient, std::thread::JoinHandle<anyhow::Result<()>>) {
     let task = lra::by_name("listops", 32, 16, 7);
     let mcfg = ModelConfig::for_task(task.as_ref(), 16, 2, 1, "attn.mita");
     let attn = NativeAttnConfig::for_shape(32, 16, 2).with_model(mcfg);
-    let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
-    engine.handle().bind_init("model", OP_MODEL_INIT, 7, 0).unwrap();
+    let pool_cfg = ReplicaPoolConfig { replicas: 1, max_inflight, retry_after_ms: 5 };
+    let pool = Arc::new(ReplicaPool::spawn(BackendSpec::Native(attn), vec![], pool_cfg).unwrap());
+    pool.call(ServiceRequest::BindInit {
+        binding: "model".into(),
+        init_op: OP_MODEL_INIT.to_string(),
+        seed: 7,
+        param_count: 0,
+    })
+    .unwrap();
 
     let cfg = NetServerConfig { addr: "127.0.0.1:0".into(), max_inflight };
-    let server = NetServer::bind(engine.handle(), &cfg).unwrap();
+    let server = NetServer::bind(pool.clone(), &cfg).unwrap();
     let addr = server.local_addr().unwrap();
     let join = std::thread::spawn(move || server.run());
-    (engine, NetClient::new(addr.to_string()), join)
+    (pool, NetClient::new(addr.to_string()), join)
 }
 
 // ---------------------------------------------------------------------------
@@ -112,15 +125,18 @@ fn taxonomy_unknown_op_and_unbound_binding() {
 fn taxonomy_over_capacity_admission_is_overloaded() {
     // max_inflight = 0 rejects every request at admission, determin-
     // istically, with the overloaded code and HTTP 503 semantics.
-    let (engine, client, join) = spawn_loopback(0);
+    let (pool, client, join) = spawn_loopback(0);
     let err = client.call(&fused_request(1, 32, 16, None)).unwrap_err();
     assert_eq!(err.code(), "overloaded");
-    assert_eq!(ServiceError::Overloaded(String::new()).http_status(), 503);
+    assert!(err.retry_after_ms().is_some(), "sheds carry a retry hint over the wire");
+    assert_eq!(ServiceError::overloaded("").http_status(), 503);
     // Health and shutdown are server-local: they bypass admission.
     client.healthz().unwrap();
     client.shutdown().unwrap();
     join.join().unwrap().unwrap();
-    engine.shutdown();
+    if let Ok(pool) = Arc::try_unwrap(pool) {
+        pool.shutdown();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -129,7 +145,7 @@ fn taxonomy_over_capacity_admission_is_overloaded() {
 
 #[test]
 fn loopback_serves_attention_model_and_stats_then_shuts_down() {
-    let (engine, client, join) = spawn_loopback(8);
+    let (pool, client, join) = spawn_loopback(8);
     client.healthz().unwrap();
 
     // Attention with typed padding: [3, 32, 16] out, pad row zeroed.
@@ -162,12 +178,12 @@ fn loopback_serves_attention_model_and_stats_then_shuts_down() {
 
     // The wire answer matches a direct engine round-trip bit for bit
     // (f32 payloads survive the JSON f64 wire format exactly).
-    let direct = engine.handle().model_forward("model", tokens, None).unwrap();
+    let direct = pool.handle(0).model_forward("model", tokens, None).unwrap();
     assert_eq!(logits, direct);
 
     // Stats flowed through: at least the two executions above.
-    let stats =
-        client.call(&ServiceRequest::Stats { reset: false }).unwrap().into_stats().unwrap();
+    let resp = client.call(&ServiceRequest::Stats { reset: false }).unwrap();
+    let stats = resp.into_stats().unwrap();
     assert!(stats.runtime.executions >= 2);
     let mita = stats.mita.expect("native backend reports routing stats");
     assert!(mita.queries > 0);
@@ -191,5 +207,7 @@ fn loopback_serves_attention_model_and_stats_then_shuts_down() {
     // harness timeout).
     client.shutdown().unwrap();
     join.join().unwrap().unwrap();
-    engine.shutdown();
+    if let Ok(pool) = Arc::try_unwrap(pool) {
+        pool.shutdown();
+    }
 }
