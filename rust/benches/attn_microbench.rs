@@ -57,7 +57,11 @@ fn native_sweep(quick: bool) -> Vec<(usize, MitaKernelConfig, f64, f64)> {
     let (dim, heads) = (DIM, HEADS);
     let ns: &[usize] = if quick { &[256, 1024] } else { &[256, 512, 1024, 2048, 4096] };
     let budget = if quick { 0.25 } else { 1.5 };
-    println!("# attn_microbench — native kernels (dim={dim}, heads={heads}, quick={quick})");
+    println!(
+        "# attn_microbench — native kernels (dim={dim}, heads={heads}, quick={quick}, \
+         simd_lane={})",
+        mita::kernels::simd::active_lane()
+    );
 
     let mut ws = Workspace::new();
     let mut stats = MitaStats::default();
@@ -156,6 +160,7 @@ fn write_json(
     let _ = writeln!(json, "  \"heads\": {HEADS},");
     let _ = writeln!(json, "  \"quick\": {quick},");
     let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"simd_lane\": \"{}\",", mita::kernels::simd::active_lane());
     let _ = writeln!(json, "  \"rows\": [");
     for (i, (n, cfg, d, m)) in seq_rows.iter().enumerate() {
         let comma = if i + 1 < seq_rows.len() { "," } else { "" };

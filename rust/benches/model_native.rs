@@ -70,8 +70,9 @@ fn main() {
     let budget = if quick { 0.3 } else { 1.0 };
     println!(
         "# model_native — MiTA vs dense blocks (dim={DIM}, heads={HEADS}, depth={DEPTH}, \
-         batch={BATCH}, quick={quick}, threads={})",
-        mita::kernels::par::num_threads()
+         batch={BATCH}, quick={quick}, threads={}, simd_lane={})",
+        mita::kernels::par::num_threads(),
+        mita::kernels::simd::active_lane()
     );
 
     let mut rows = Vec::new();
@@ -205,6 +206,7 @@ fn write_json(quick: bool, rows: &[Row]) {
     let _ = writeln!(json, "  \"batch\": {BATCH},");
     let _ = writeln!(json, "  \"quick\": {quick},");
     let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"simd_lane\": \"{}\",", mita::kernels::simd::active_lane());
     let _ = writeln!(json, "  \"rows\": [");
     for (i, r) in rows.iter().enumerate() {
         let comma = if i + 1 < rows.len() { "," } else { "" };

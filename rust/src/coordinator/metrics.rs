@@ -190,6 +190,7 @@ pub const METRIC_NAMES: &[&str] = &[
     "replica_queue_depth",
     "overflow_fraction",
     "load_imbalance",
+    "simd_lane",
 ];
 
 /// Pool-wide serving counters and the request-latency histogram. Shared
@@ -304,6 +305,11 @@ pub struct MetricsSnapshot {
     pub serve_errors_total: u64,
     pub request_latency_us: HistogramSnapshot,
     pub replicas: Vec<ReplicaSnapshot>,
+    /// SIMD lane the serving process dispatched its kernels to at
+    /// startup (`scalar` | `portable` | `avx2` | `neon`; see
+    /// `docs/PERF.md`). A process-wide fact, so it lives at the pool
+    /// level, not per replica.
+    pub simd_lane: String,
 }
 
 impl MetricsSnapshot {
@@ -471,6 +477,7 @@ mod tests {
             serve_errors_total: m.errors_total(),
             request_latency_us: m.latency_snapshot(),
             replicas: vec![],
+            simd_lane: "scalar".into(),
         };
         assert!((snap.shed_fraction() - 0.5).abs() < 1e-12);
         assert_eq!(MetricsSnapshot::default().shed_fraction(), 0.0);

@@ -256,6 +256,7 @@ impl ReplicaPool {
             serve_errors_total: self.metrics.errors_total(),
             request_latency_us: self.metrics.latency_snapshot(),
             replicas,
+            simd_lane: crate::kernels::simd::active_lane().to_string(),
         }
     }
 

@@ -5,7 +5,7 @@
 //! in the batched (example × head) executor of [`crate::kernels::api`].
 
 use crate::kernels::linalg::{
-    gather_head, matmul_nt, scale_in_place, scatter_head, softmax_rows, weighted_row_sum,
+    gather_head, matmul_nt, scatter_head, softmax_rows_scaled, weighted_row_sum,
 };
 use crate::kernels::workspace::Workspace;
 
@@ -36,8 +36,9 @@ pub fn dense_attention(
         let rows = QB.min(n - r0);
         let sblk = &mut s[..rows * n];
         matmul_nt(&q[r0 * d..(r0 + rows) * d], k, rows, n, d, sblk);
-        scale_in_place(sblk, scale);
-        softmax_rows(sblk, rows, n);
+        // The 1/√d logit scale is folded into the softmax's exp pass —
+        // one fewer full traversal of the score block per query block.
+        softmax_rows_scaled(sblk, rows, n, scale);
         for (r, orow) in out[r0 * d..(r0 + rows) * d].chunks_exact_mut(d).enumerate() {
             weighted_row_sum(&sblk[r * n..(r + 1) * n], v, d, orow);
         }

@@ -1,17 +1,23 @@
 //! Blocked row-major matrix primitives shared by the native attention
 //! kernels. Everything is f32, row-major, allocation-free (callers own the
-//! buffers), and written so the inner loops reduce to contiguous
-//! slice-zip-sum — the shape LLVM autovectorizes reliably.
+//! buffers), and routed through the runtime-dispatched SIMD ops of
+//! [`crate::kernels::simd`] — all lanes return bit-identical results
+//! (fixed canonical reduction order), so callers never observe which
+//! lane ran.
+
+use crate::kernels::simd;
 
 /// `out[i, j] = Σ_c a[i, c] · b[j, c]` — A·Bᵀ for row-major A `[p, d]` and
 /// B `[q, d]`. This dot-product form is every attention score computation.
-/// Tiled over (i, j) so a block of B rows stays hot in L1.
+/// Tiled over (i, j) so a block of B rows stays hot in L1; the dispatched
+/// dot is hoisted out of the loops once.
 pub fn matmul_nt(a: &[f32], b: &[f32], p: usize, q: usize, d: usize, out: &mut [f32]) {
     assert_eq!(a.len(), p * d, "a must be [p, d]");
     assert_eq!(b.len(), q * d, "b must be [q, d]");
     assert_eq!(out.len(), p * q, "out must be [p, q]");
     const IB: usize = 16;
     const JB: usize = 32;
+    let dot_op = simd::ops().dot;
     for i0 in (0..p).step_by(IB) {
         let i1 = (i0 + IB).min(p);
         for j0 in (0..q).step_by(JB) {
@@ -21,51 +27,59 @@ pub fn matmul_nt(a: &[f32], b: &[f32], p: usize, q: usize, d: usize, out: &mut [
                 let orow = &mut out[i * q..(i + 1) * q];
                 for j in j0..j1 {
                     let brow = &b[j * d..(j + 1) * d];
-                    orow[j] = dot(arow, brow);
+                    orow[j] = dot_op(arow, brow);
                 }
             }
         }
     }
 }
 
-/// Dot product of two equal-length slices.
+/// Dot product of two equal-length slices (dispatched; canonical
+/// tree-reduction order on every lane).
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    x.iter().zip(y).map(|(a, b)| a * b).sum()
+    (simd::ops().dot)(x, y)
 }
 
-/// `y += alpha · x` (the attention value-accumulation step).
+/// `y += alpha · x` (the attention value-accumulation step; dispatched).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    (simd::ops().axpy)(alpha, x, y)
 }
 
-/// Multiply every element by `s`.
+/// Multiply every element by `s` (dispatched).
+#[inline]
 pub fn scale_in_place(x: &mut [f32], s: f32) {
-    for v in x.iter_mut() {
-        *v *= s;
-    }
+    (simd::ops().scale)(x, s)
 }
 
 /// Numerically-stable softmax over one row, in place. No-op on empty rows.
 pub fn softmax_in_place(x: &mut [f32]) {
+    // `1.0 · (v − mx)` is exact in IEEE f32, so delegating keeps the
+    // unscaled softmax bit-identical to the scaled one at scale = 1.
+    softmax_in_place_scaled(x, 1.0);
+}
+
+/// Softmax of `scale · x` over one row, in place, for `scale > 0` — the
+/// attention-logit pre-scale folded into the exp pass. `max(scale·x) =
+/// scale·max(x)` for positive scale, so `exp(scale·(v − max))` needs no
+/// separate scaling traversal over the row (one fewer full-row pass on
+/// the dense serving hot path). The max and the final normalization are
+/// dispatched; the exp loop (libm) and its running denominator stay
+/// sequential scalar code shared by every lane.
+pub fn softmax_in_place_scaled(x: &mut [f32], scale: f32) {
+    debug_assert!(scale > 0.0, "softmax pre-scale must be positive, got {scale}");
     if x.is_empty() {
         return;
     }
-    let mx = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let ops = simd::ops();
+    let mx = (ops.max)(x);
     let mut den = 0.0f32;
     for v in x.iter_mut() {
-        *v = (*v - mx).exp();
+        *v = (scale * (*v - mx)).exp();
         den += *v;
     }
-    let inv = 1.0 / den;
-    for v in x.iter_mut() {
-        *v *= inv;
-    }
+    (ops.scale)(x, 1.0 / den);
 }
 
 /// Softmax over each row of a `[rows, cols]` buffer, in place.
@@ -73,6 +87,14 @@ pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
     assert_eq!(x.len(), rows * cols);
     for row in x.chunks_exact_mut(cols) {
         softmax_in_place(row);
+    }
+}
+
+/// Row-wise [`softmax_in_place_scaled`] over a `[rows, cols]` buffer.
+pub fn softmax_rows_scaled(x: &mut [f32], rows: usize, cols: usize, scale: f32) {
+    assert_eq!(x.len(), rows * cols);
+    for row in x.chunks_exact_mut(cols) {
+        softmax_in_place_scaled(row, scale);
     }
 }
 
@@ -152,6 +174,25 @@ mod tests {
         }
         // Large equal logits split evenly without overflow.
         assert!((x[4] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn scaled_softmax_folds_the_prescale() {
+        // softmax_rows_scaled(x, s) must agree with the two-pass spelling
+        // scale_in_place(x, s); softmax_rows(x) it replaced.
+        let mut rng = Rng::new(17);
+        for (rows, cols) in [(1, 1), (3, 9), (5, 33)] {
+            let base: Vec<f32> = (0..rows * cols).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+            let scale = 0.37f32;
+            let mut folded = base.clone();
+            softmax_rows_scaled(&mut folded, rows, cols, scale);
+            let mut two_pass = base;
+            scale_in_place(&mut two_pass, scale);
+            softmax_rows(&mut two_pass, rows, cols);
+            for (f, t) in folded.iter().zip(&two_pass) {
+                assert!((f - t).abs() < 1e-5, "folded {f} vs two-pass {t}");
+            }
+        }
     }
 
     #[test]

@@ -90,6 +90,7 @@ pub(crate) fn select_experts(
     cfg: &MitaKernelConfig,
     landmarks: &mut [f32],
     s: &mut [f32],
+    col: &mut [f32],
     order: &mut [usize],
     topk: &mut [usize],
     route_logits: &mut [f32],
@@ -103,8 +104,11 @@ pub(crate) fn select_experts(
     let scale = 1.0 / (d as f32).sqrt();
     routing::landmarks_pool1d_into(q, n, d, m, landmarks);
     matmul_nt(kmat, landmarks, n, m, d, s);
+    // The positive scale is applied *before* top-k on purpose: dropping
+    // it would be mathematically order-preserving but could collapse
+    // near-equal scores differently after rounding and flip a tie-break.
     scale_in_place(s, scale);
-    routing::topk_indices_into(s, n, m, kk, order, topk);
+    routing::topk_indices_into(s, n, m, kk, col, order, topk);
     matmul_nt(q, landmarks, n, m, d, route_logits);
     for (a, row) in assign.iter_mut().zip(route_logits.chunks_exact(m)) {
         let mut best = 0usize;
@@ -174,6 +178,7 @@ pub fn mita_attention(
     //    (DESIGN.md §6 semantics).
     let mut landmarks = ws.take_f32("mita.landmarks", m * d);
     let mut s = ws.take_f32("mita.scores", n * m);
+    let mut col = ws.take_f32("mita.topk_col", n);
     let mut order = ws.take_usize("mita.order", n);
     let mut topk = ws.take_usize("mita.topk", m * kk);
     let mut route_logits = ws.take_f32("mita.route", n * m);
@@ -186,6 +191,7 @@ pub fn mita_attention(
         &cfg,
         &mut landmarks,
         &mut s,
+        &mut col,
         &mut order,
         &mut topk,
         &mut route_logits,
@@ -249,6 +255,7 @@ pub fn mita_attention(
 
     ws.give_f32("mita.landmarks", landmarks);
     ws.give_f32("mita.scores", s);
+    ws.give_f32("mita.topk_col", col);
     ws.give_f32("mita.route", route_logits);
     ws.give_f32("mita.logits", logits);
     ws.give_usize("mita.order", order);

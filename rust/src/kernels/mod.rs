@@ -2,7 +2,12 @@
 //!
 //! The module is organized as a small execution stack:
 //!
-//! - [`linalg`]: blocked row-major matmuls + softmax primitives.
+//! - [`simd`]: the runtime-dispatched SIMD lanes (scalar reference,
+//!   portable autovectorized baseline, AVX2, NEON) behind one
+//!   function-pointer table — every lane bit-identical by a fixed
+//!   reduction order (see `docs/PERF.md`; override with `MITA_SIMD`).
+//! - [`linalg`]: blocked row-major matmuls + softmax primitives, routed
+//!   through the dispatched SIMD ops.
 //! - [`workspace`]: the [`Workspace`] scratch arena (zero allocations in
 //!   steady state) and the thread-safe [`WorkspacePool`] behind it.
 //! - [`mita`] / [`dense`]: serial, allocation-free single-head kernels —
@@ -25,6 +30,7 @@ pub mod dense;
 pub mod linalg;
 pub mod mita;
 pub mod par;
+pub mod simd;
 pub mod workspace;
 
 pub use api::{

@@ -1,0 +1,240 @@
+//! The single runtime dispatch point: one [`SimdOps`] function-pointer
+//! table, selected once (on first use) from the `MITA_SIMD` environment
+//! variable and CPU feature detection, then read lock-free on every hot
+//! call.
+//!
+//! The active table lives in an `AtomicPtr` rather than a `OnceLock` so
+//! the bit-parity tests can flip lanes *in one process*
+//! ([`set_lane`]) and compare whole-model outputs across them; normal
+//! operation initializes exactly once and never changes lanes again.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+/// The dispatch table: every dispatched primitive as a plain function
+/// pointer. All lanes implementing this table return **bit-identical**
+/// results (the canonical reduction spec in the module docs); selection
+/// is purely a throughput decision.
+#[derive(Debug)]
+pub struct SimdOps {
+    /// Lane name as reported in `/v1/metrics`, `native-check`, and the
+    /// bench JSON (`"scalar" | "portable" | "avx2" | "neon"`).
+    pub name: &'static str,
+    /// `Σ x[i]·y[i]` (canonical tree reduction).
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `Σ x[i]` (canonical tree reduction).
+    pub sum: fn(&[f32]) -> f32,
+    /// `max x[i]` over non-NaN inputs (`NEG_INFINITY` when empty).
+    pub max: fn(&[f32]) -> f32,
+    /// `Σ (x[i] − mean)²` (canonical tree reduction).
+    pub sq_dev_sum: fn(&[f32], f32) -> f32,
+    /// `y[i] += alpha · x[i]`.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// `x[i] *= s`.
+    pub scale: fn(&mut [f32], f32),
+    /// `out[i] = ((x[i] − mean) · inv) · g[i] + b[i]`.
+    pub norm_affine: fn(&[f32], f32, f32, &[f32], &[f32], &mut [f32]),
+    /// GELU (tanh approximation) in place — shared scalar libm code on
+    /// every lane (no bit-reproducible vector `tanh` exists).
+    pub gelu: fn(&mut [f32]),
+    /// `out[j] = src[offset + j · stride]` — the top-k column gather.
+    pub gather_stride: fn(&[f32], usize, usize, &mut [f32]),
+}
+
+/// A selectable SIMD lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Spelled-out reference implementation of the canonical spec.
+    Scalar,
+    /// Autovectorization-friendly arch-independent implementation.
+    Portable,
+    /// AVX2 intrinsics (x86_64 with runtime `avx2` detection).
+    Avx2,
+    /// NEON intrinsics (aarch64; mandatory feature, always available).
+    Neon,
+}
+
+impl Lane {
+    /// Every lane, in preference-independent listing order.
+    pub const ALL: [Lane; 4] = [Lane::Scalar, Lane::Portable, Lane::Avx2, Lane::Neon];
+
+    /// The lane's `MITA_SIMD` spelling / telemetry name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Scalar => "scalar",
+            Lane::Portable => "portable",
+            Lane::Avx2 => "avx2",
+            Lane::Neon => "neon",
+        }
+    }
+}
+
+/// Null until first use; then always a `&'static SimdOps` cast to a raw
+/// pointer, so loads after initialization are branch-plus-deref cheap.
+static ACTIVE: AtomicPtr<SimdOps> = AtomicPtr::new(std::ptr::null_mut());
+
+/// The active dispatch table, initializing from `MITA_SIMD` (default
+/// `auto`) on first call. Reading it is lock-free; hot loops may also
+/// hoist individual function pointers out of the table.
+#[inline]
+pub fn ops() -> &'static SimdOps {
+    let p = ACTIVE.load(Ordering::Acquire);
+    if p.is_null() {
+        init_from_env()
+    } else {
+        // SAFETY: non-null values stored in ACTIVE are always &'static.
+        unsafe { &*p }
+    }
+}
+
+/// The name of the lane currently answering [`ops`] — the value surfaced
+/// in `/v1/metrics`, `native-check`, and the bench JSON.
+pub fn active_lane() -> &'static str {
+    ops().name
+}
+
+/// Force a lane, returning its table. **Test hook**: the bit-parity
+/// suite uses this to compare whole-model outputs across lanes in one
+/// process. Panics if the lane is unavailable on this host. Not for
+/// production paths — lanes are bit-identical, so there is never a
+/// correctness reason to switch at runtime.
+pub fn set_lane(lane: Lane) -> &'static SimdOps {
+    let t = lane_table(lane)
+        .unwrap_or_else(|| panic!("SIMD lane {:?} is not available on this host", lane));
+    install(t);
+    t
+}
+
+/// The dispatch table for `lane`, or `None` when this build/CPU cannot
+/// run it. Lets tests exercise a lane's functions directly without
+/// touching the global dispatch state.
+pub fn lane_table(lane: Lane) -> Option<&'static SimdOps> {
+    match lane {
+        Lane::Scalar => Some(&super::scalar::OPS),
+        Lane::Portable => Some(&super::portable::OPS),
+        Lane::Avx2 => avx2_table(),
+        Lane::Neon => neon_table(),
+    }
+}
+
+/// Every lane the current build + CPU can actually run.
+pub fn available_lanes() -> Vec<Lane> {
+    Lane::ALL.iter().copied().filter(|&l| lane_table(l).is_some()).collect()
+}
+
+fn install(t: &'static SimdOps) {
+    ACTIVE.store(t as *const SimdOps as *mut SimdOps, Ordering::Release);
+}
+
+/// Resolve `MITA_SIMD` (unset ⇒ `auto`). Forcing an unavailable lane or
+/// an unknown spelling panics — a silent fallback would make every
+/// recorded bench/telemetry lane name a lie.
+fn init_from_env() -> &'static SimdOps {
+    let spec = std::env::var("MITA_SIMD").unwrap_or_else(|_| "auto".to_string());
+    let lane = match spec.as_str() {
+        "auto" | "" => auto_lane(),
+        "scalar" => Lane::Scalar,
+        "portable" => Lane::Portable,
+        "avx2" => Lane::Avx2,
+        "neon" => Lane::Neon,
+        other => panic!(
+            "MITA_SIMD={other:?} is not one of scalar|portable|avx2|neon|auto"
+        ),
+    };
+    let t = lane_table(lane).unwrap_or_else(|| {
+        panic!(
+            "MITA_SIMD={spec:?} selects lane {:?}, which this host cannot run \
+             (available: {})",
+            lane,
+            available_lanes().iter().map(|l| l.name()).collect::<Vec<_>>().join(", ")
+        )
+    });
+    install(t);
+    t
+}
+
+/// The best lane for this host: a hand-written arch lane when the CPU
+/// has one, otherwise the portable baseline.
+pub fn auto_lane() -> Lane {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Lane::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Lane::Neon;
+    }
+    #[allow(unreachable_code)]
+    Lane::Portable
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_table() -> Option<&'static SimdOps> {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Some(&super::x86::OPS)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_table() -> Option<&'static SimdOps> {
+    None
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_table() -> Option<&'static SimdOps> {
+    Some(&super::neon::OPS)
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_table() -> Option<&'static SimdOps> {
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arch_independent_lanes_always_exist() {
+        assert!(lane_table(Lane::Scalar).is_some());
+        assert!(lane_table(Lane::Portable).is_some());
+        let avail = available_lanes();
+        assert!(avail.contains(&Lane::Scalar) && avail.contains(&Lane::Portable));
+        assert!(avail.contains(&auto_lane()), "auto must resolve to an available lane");
+    }
+
+    #[test]
+    fn ops_resolves_and_reports_a_known_lane() {
+        let name = active_lane();
+        assert!(
+            Lane::ALL.iter().any(|l| l.name() == name),
+            "active lane {name:?} is not a known lane name"
+        );
+    }
+
+    #[test]
+    fn scalar_and_portable_are_bit_identical_on_odd_lengths() {
+        // The cross-arch pair that exists everywhere; the arch lanes get
+        // the same treatment (plus forced-lane runs) in
+        // tests/simd_parity.rs.
+        let s = lane_table(Lane::Scalar).unwrap();
+        let p = lane_table(Lane::Portable).unwrap();
+        for n in [0usize, 1, 7, 8, 9, 31, 1007] {
+            let x: Vec<f32> = (0..n).map(|i| ((i * 37 % 19) as f32) * 0.37 - 3.0).collect();
+            let y: Vec<f32> = (0..n).map(|i| ((i * 53 % 29) as f32) * 0.21 - 2.0).collect();
+            assert_eq!(((s.dot)(&x, &y)).to_bits(), ((p.dot)(&x, &y)).to_bits(), "dot n={n}");
+            assert_eq!(((s.sum)(&x)).to_bits(), ((p.sum)(&x)).to_bits(), "sum n={n}");
+            if n > 0 {
+                assert_eq!(((s.max)(&x)).to_bits(), ((p.max)(&x)).to_bits(), "max n={n}");
+            }
+            assert_eq!(
+                ((s.sq_dev_sum)(&x, 0.25)).to_bits(),
+                ((p.sq_dev_sum)(&x, 0.25)).to_bits(),
+                "sq_dev_sum n={n}"
+            );
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Runtime-dispatched SIMD kernels for the native hot loops.
+//!
+//! Every dense primitive the attention kernels, the transformer, and the
+//! training backward run in their inner loops — dot products, axpy,
+//! scaling, row reductions, LayerNorm normalization, GELU, the top-k
+//! column gather — routes through one function-pointer table
+//! ([`SimdOps`]) selected **once** at startup by [`dispatch`]:
+//!
+//! - [`scalar`]: the spelled-out reference implementation of the
+//!   canonical reduction spec below. What you read here is the contract.
+//! - [`portable`]: the same spec written over `chunks_exact` windows, the
+//!   shape LLVM autovectorizes on any target. This is the default answer
+//!   on machines without a hand-written lane.
+//! - [`x86`] (x86_64 only): AVX2 `core::arch` intrinsics, installed only
+//!   after `is_x86_feature_detected!("avx2")` succeeds at runtime.
+//! - [`neon`] (aarch64 only): NEON intrinsics (mandatory on aarch64).
+//!
+//! ## The determinism contract
+//!
+//! This codebase pins results bit-for-bit across thread counts, steady
+//! vs. fresh workspaces, and forward vs. backward recomputation — so a
+//! SIMD lane is only admissible if it returns **bit-identical** results
+//! to every other lane. That is achieved by fixing one canonical
+//! reduction order, with [`W`] = 8 arch-independent accumulator lanes:
+//!
+//! 1. Full 8-wide chunks accumulate element-wise:
+//!    `acc[j] += x[8·i + j] · y[8·i + j]` (j = 0..8).
+//! 2. The 8 accumulators reduce through a fixed tree
+//!    ([`tree8_add`] / [`tree8_max`]):
+//!    `s_j = acc[j] + acc[j+4]`, `t_j = s_j + s_{j+2}`, `r = t_0 + t_1`.
+//! 3. The `len % 8` tail then folds **sequentially** into `r`.
+//!
+//! The AVX2 lane realizes exactly this tree with
+//! `_mm_add_ps(lo128, hi128)` → `movehl` → `shuffle`+`add_ss`; the NEON
+//! lane with two `float32x4` accumulators → `vaddq` → low/high `vadd` →
+//! lane 0 + lane 1. Three consequences worth knowing:
+//!
+//! - **No FMA.** `_mm256_fmadd_ps` / `vfmaq_f32` round once where
+//!   mul-then-add rounds twice; a fused lane could never be bit-identical
+//!   to the scalar spec, so every lane uses separate multiply and add
+//!   (and Rust never contracts `a * b + c` on its own).
+//! - **libm stays scalar.** `exp` (softmax) and `tanh` (GELU) have no
+//!   bit-reproducible vector form, so all lanes share the scalar
+//!   transcendental loops; only the max/scale/reduction parts of softmax
+//!   and LayerNorm are dispatched. Element-wise ops (axpy, scale,
+//!   normalize-affine) have no cross-lane reduction at all, so their
+//!   vector forms are trivially bit-identical.
+//! - **Reductions assume non-NaN inputs.** `_mm256_max_ps` and
+//!   `f32::max` agree on every non-NaN input (a ±0.0 disagreement cannot
+//!   leak through `v - max`); feeding NaN logits into softmax was
+//!   already undefined behavior-adjacent before this layer existed.
+//!
+//! The canonical order **replaces** the old `iter().sum()` sequential
+//! order as the single source of truth — existing parity tests keep
+//! their tolerances and pass against it unchanged; the new
+//! `tests/simd_parity.rs` additionally proves bit-equality across every
+//! lane the host can run.
+//!
+//! Lane selection is overridable with `MITA_SIMD=scalar|portable|avx2|
+//! neon|auto` (default `auto`); forcing a lane the host cannot run
+//! panics loudly instead of silently falling back. See `docs/PERF.md`.
+
+pub mod dispatch;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+pub mod portable;
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+pub use dispatch::{active_lane, available_lanes, lane_table, ops, set_lane, Lane, SimdOps};
+
+/// Canonical accumulator width: 8 lanes on every arch (one AVX2 vector,
+/// two NEON vectors, an 8-element array in scalar/portable code).
+pub const W: usize = 8;
+
+/// The fixed add-reduction tree over the 8 canonical accumulators.
+/// Matches AVX2's 128-bit fold (`lo+hi` → `movehl` → `shuffle`) and
+/// NEON's two-register fold exactly — change nothing here without
+/// changing every lane in lockstep.
+#[inline(always)]
+pub(crate) fn tree8_add(a: [f32; W]) -> f32 {
+    let s0 = a[0] + a[4];
+    let s1 = a[1] + a[5];
+    let s2 = a[2] + a[6];
+    let s3 = a[3] + a[7];
+    let t0 = s0 + s2;
+    let t1 = s1 + s3;
+    t0 + t1
+}
+
+/// [`tree8_add`]'s max-reduction twin (same shape, `max` for `+`).
+#[inline(always)]
+pub(crate) fn tree8_max(a: [f32; W]) -> f32 {
+    let s0 = a[0].max(a[4]);
+    let s1 = a[1].max(a[5]);
+    let s2 = a[2].max(a[6]);
+    let s3 = a[3].max(a[7]);
+    let t0 = s0.max(s2);
+    let t1 = s1.max(s3);
+    t0.max(t1)
+}

@@ -1,0 +1,219 @@
+//! The NEON lane (aarch64): two `float32x4` registers carry the 8
+//! canonical accumulators (lanes 0–3 and 4–7 of the spec).
+//!
+//! Bit-parity rules (see the module docs): multiply-then-add only —
+//! never `vfmaq_f32` (single rounding) and never `vaddvq_f32` (a
+//! different reduction tree). [`tree_add`] / [`tree_max`] realize the
+//! canonical tree exactly: `acc0 ⊕ acc1` gives `[a0⊕a4 … a3⊕a7]`, the
+//! low/high 64-bit halves fold lanes 2,3 onto 0,1, and the final scalar
+//! op folds lane 1 onto 0. NEON is mandatory on aarch64, so this lane
+//! needs no runtime detection.
+
+// Indexed tail loops keep the sequential-tail spec visible next to the
+// intrinsics; iterator rewrites would obscure it.
+#![allow(clippy::needless_range_loop)]
+
+use core::arch::aarch64::*;
+
+use super::dispatch::SimdOps;
+
+/// The NEON lane's dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    name: "neon",
+    dot,
+    sum,
+    max,
+    sq_dev_sum,
+    axpy,
+    scale,
+    norm_affine,
+    gelu: super::scalar::gelu,
+    gather_stride: super::scalar::gather_stride,
+};
+
+/// Canonical add-tree over the two accumulator registers.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn tree_add(a0: float32x4_t, a1: float32x4_t) -> f32 {
+    let s = vaddq_f32(a0, a1);
+    let t = vadd_f32(vget_low_f32(s), vget_high_f32(s));
+    vget_lane_f32::<0>(t) + vget_lane_f32::<1>(t)
+}
+
+/// Canonical max-tree over the two accumulator registers (non-NaN).
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn tree_max(a0: float32x4_t, a1: float32x4_t) -> f32 {
+    let s = vmaxq_f32(a0, a1);
+    let t = vmax_f32(vget_low_f32(s), vget_high_f32(s));
+    vget_lane_f32::<0>(t).max(vget_lane_f32::<1>(t))
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { dot_neon(x, y) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (xp, yp) = (x.as_ptr(), y.as_ptr());
+    let mut a0 = vdupq_n_f32(0.0);
+    let mut a1 = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let (px, py) = (xp.add(i * 8), yp.add(i * 8));
+        a0 = vaddq_f32(a0, vmulq_f32(vld1q_f32(px), vld1q_f32(py)));
+        a1 = vaddq_f32(a1, vmulq_f32(vld1q_f32(px.add(4)), vld1q_f32(py.add(4))));
+    }
+    let mut r = tree_add(a0, a1);
+    for i in chunks * 8..n {
+        r += x[i] * y[i];
+    }
+    r
+}
+
+pub fn sum(x: &[f32]) -> f32 {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { sum_neon(x) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sum_neon(x: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let mut a0 = vdupq_n_f32(0.0);
+    let mut a1 = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let p = xp.add(i * 8);
+        a0 = vaddq_f32(a0, vld1q_f32(p));
+        a1 = vaddq_f32(a1, vld1q_f32(p.add(4)));
+    }
+    let mut r = tree_add(a0, a1);
+    for i in chunks * 8..n {
+        r += x[i];
+    }
+    r
+}
+
+pub fn max(x: &[f32]) -> f32 {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { max_neon(x) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn max_neon(x: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let mut a0 = vdupq_n_f32(f32::NEG_INFINITY);
+    let mut a1 = vdupq_n_f32(f32::NEG_INFINITY);
+    for i in 0..chunks {
+        let p = xp.add(i * 8);
+        a0 = vmaxq_f32(a0, vld1q_f32(p));
+        a1 = vmaxq_f32(a1, vld1q_f32(p.add(4)));
+    }
+    let mut r = tree_max(a0, a1);
+    for i in chunks * 8..n {
+        r = r.max(x[i]);
+    }
+    r
+}
+
+pub fn sq_dev_sum(x: &[f32], mean: f32) -> f32 {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { sq_dev_sum_neon(x, mean) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sq_dev_sum_neon(x: &[f32], mean: f32) -> f32 {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let vm = vdupq_n_f32(mean);
+    let mut a0 = vdupq_n_f32(0.0);
+    let mut a1 = vdupq_n_f32(0.0);
+    for i in 0..chunks {
+        let p = xp.add(i * 8);
+        let d0 = vsubq_f32(vld1q_f32(p), vm);
+        let d1 = vsubq_f32(vld1q_f32(p.add(4)), vm);
+        a0 = vaddq_f32(a0, vmulq_f32(d0, d0));
+        a1 = vaddq_f32(a1, vmulq_f32(d1, d1));
+    }
+    let mut r = tree_add(a0, a1);
+    for i in chunks * 8..n {
+        let d = x[i] - mean;
+        r += d * d;
+    }
+    r
+}
+
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { axpy_neon(alpha, x, y) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let va = vdupq_n_f32(alpha);
+    for i in 0..chunks {
+        let p = yp.add(i * 4);
+        vst1q_f32(p, vaddq_f32(vld1q_f32(p), vmulq_f32(va, vld1q_f32(xp.add(i * 4)))));
+    }
+    for i in chunks * 4..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+pub fn scale(x: &mut [f32], s: f32) {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { scale_neon(x, s) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn scale_neon(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let chunks = n / 4;
+    let xp = x.as_mut_ptr();
+    let vs = vdupq_n_f32(s);
+    for i in 0..chunks {
+        let p = xp.add(i * 4);
+        vst1q_f32(p, vmulq_f32(vld1q_f32(p), vs));
+    }
+    for v in x[chunks * 4..].iter_mut() {
+        *v *= s;
+    }
+}
+
+pub fn norm_affine(x: &[f32], mean: f32, inv: f32, g: &[f32], b: &[f32], out: &mut [f32]) {
+    // SAFETY: NEON is a mandatory aarch64 feature.
+    unsafe { norm_affine_neon(x, mean, inv, g, b, out) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn norm_affine_neon(x: &[f32], mean: f32, inv: f32, g: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), b.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (xp, gp, bp) = (x.as_ptr(), g.as_ptr(), b.as_ptr());
+    let op = out.as_mut_ptr();
+    let vm = vdupq_n_f32(mean);
+    let vi = vdupq_n_f32(inv);
+    for i in 0..chunks {
+        let xhat = vmulq_f32(vsubq_f32(vld1q_f32(xp.add(i * 4)), vm), vi);
+        let scaled = vmulq_f32(xhat, vld1q_f32(gp.add(i * 4)));
+        vst1q_f32(op.add(i * 4), vaddq_f32(scaled, vld1q_f32(bp.add(i * 4))));
+    }
+    for i in chunks * 4..n {
+        out[i] = (x[i] - mean) * inv * g[i] + b[i];
+    }
+}

@@ -1,0 +1,155 @@
+//! The portable lane: the canonical spec written over `chunks_exact`
+//! windows and fixed-size array accumulators — the shape LLVM reliably
+//! autovectorizes on every target, without any `core::arch` intrinsics.
+//! Bit-identical to [`super::scalar`] by construction (same chunking,
+//! same [`tree8_add`] reduction, same sequential tail); this lane is the
+//! `auto` answer on hosts with no hand-written variant.
+
+// The fixed-width `for j in 0..W` window bodies mirror the canonical
+// spec; iterator rewrites would obscure the chunk/tail structure.
+#![allow(clippy::needless_range_loop)]
+
+use super::dispatch::SimdOps;
+use super::{tree8_add, tree8_max, W};
+
+/// The portable lane's dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    name: "portable",
+    dot,
+    sum,
+    max,
+    sq_dev_sum,
+    axpy,
+    scale,
+    norm_affine,
+    gelu: super::scalar::gelu,
+    gather_stride: super::scalar::gather_stride,
+};
+
+/// Canonical dot product over 8-wide windows.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; W];
+    let xc = x.chunks_exact(W);
+    let yc = y.chunks_exact(W);
+    let (xr, yr) = (xc.remainder(), yc.remainder());
+    for (xs, ys) in xc.zip(yc) {
+        for j in 0..W {
+            acc[j] += xs[j] * ys[j];
+        }
+    }
+    let mut r = tree8_add(acc);
+    for (a, b) in xr.iter().zip(yr) {
+        r += a * b;
+    }
+    r
+}
+
+/// Canonical sum over 8-wide windows.
+pub fn sum(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; W];
+    let xc = x.chunks_exact(W);
+    let xr = xc.remainder();
+    for xs in xc {
+        for j in 0..W {
+            acc[j] += xs[j];
+        }
+    }
+    let mut r = tree8_add(acc);
+    for v in xr {
+        r += v;
+    }
+    r
+}
+
+/// Canonical max fold over 8-wide windows (non-NaN inputs).
+pub fn max(x: &[f32]) -> f32 {
+    let mut acc = [f32::NEG_INFINITY; W];
+    let xc = x.chunks_exact(W);
+    let xr = xc.remainder();
+    for xs in xc {
+        for j in 0..W {
+            acc[j] = acc[j].max(xs[j]);
+        }
+    }
+    let mut r = tree8_max(acc);
+    for &v in xr {
+        r = r.max(v);
+    }
+    r
+}
+
+/// Canonical `Σ (x[i] − mean)²` over 8-wide windows.
+pub fn sq_dev_sum(x: &[f32], mean: f32) -> f32 {
+    let mut acc = [0.0f32; W];
+    let xc = x.chunks_exact(W);
+    let xr = xc.remainder();
+    for xs in xc {
+        for j in 0..W {
+            let d = xs[j] - mean;
+            acc[j] += d * d;
+        }
+    }
+    let mut r = tree8_add(acc);
+    for &v in xr {
+        let d = v - mean;
+        r += d * d;
+    }
+    r
+}
+
+/// `y += alpha · x` over 8-wide windows (element-wise, bit-identical to
+/// the scalar loop regardless of vectorization).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let yc = y.chunks_exact_mut(W);
+    let xc = x.chunks_exact(W);
+    let xr = xc.remainder();
+    let mut tail_start = 0;
+    for (ys, xs) in yc.zip(xc) {
+        for j in 0..W {
+            ys[j] += alpha * xs[j];
+        }
+        tail_start += W;
+    }
+    for (yi, xi) in y[tail_start..].iter_mut().zip(xr) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= s` over 8-wide windows.
+pub fn scale(x: &mut [f32], s: f32) {
+    let xc = x.chunks_exact_mut(W);
+    let mut tail_start = 0;
+    for xs in xc {
+        for j in 0..W {
+            xs[j] *= s;
+        }
+        tail_start += W;
+    }
+    for v in x[tail_start..].iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Normalize-affine over 8-wide windows (same association order as the
+/// scalar lane: `((x − mean) · inv) · g + b`).
+pub fn norm_affine(x: &[f32], mean: f32, inv: f32, g: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), b.len());
+    let oc = out.chunks_exact_mut(W);
+    let xc = x.chunks_exact(W);
+    let gc = g.chunks_exact(W);
+    let bc = b.chunks_exact(W);
+    let mut tail = 0;
+    for (((os, xs), gs), bs) in oc.zip(xc).zip(gc).zip(bc) {
+        for j in 0..W {
+            os[j] = (xs[j] - mean) * inv * gs[j] + bs[j];
+        }
+        tail += W;
+    }
+    for i in tail..x.len() {
+        out[i] = (x[i] - mean) * inv * g[i] + b[i];
+    }
+}

@@ -1,0 +1,151 @@
+//! The scalar reference lane: a spelled-out, index-by-index rendering of
+//! the canonical reduction spec (see the module docs of
+//! [`crate::kernels::simd`]). Every other lane must match this one
+//! bit-for-bit; when in doubt about what a primitive is defined to
+//! compute, read it here.
+
+// Indexed chunk/tail loops are the point of this file — they spell out
+// the canonical order. Iterator rewrites would obscure the spec.
+#![allow(clippy::needless_range_loop)]
+
+use super::dispatch::SimdOps;
+use super::{tree8_add, tree8_max, W};
+
+/// The scalar lane's dispatch table.
+pub static OPS: SimdOps = SimdOps {
+    name: "scalar",
+    dot,
+    sum,
+    max,
+    sq_dev_sum,
+    axpy,
+    scale,
+    norm_affine,
+    gelu,
+    gather_stride,
+};
+
+/// Canonical dot product: 8 accumulators over full chunks, fixed tree
+/// reduce, then a sequential tail.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let split = x.len() - x.len() % W;
+    let mut acc = [0.0f32; W];
+    let mut i = 0;
+    while i < split {
+        for j in 0..W {
+            acc[j] += x[i + j] * y[i + j];
+        }
+        i += W;
+    }
+    let mut r = tree8_add(acc);
+    for j in split..x.len() {
+        r += x[j] * y[j];
+    }
+    r
+}
+
+/// Canonical sum (same chunk/tree/tail order as [`dot`]).
+pub fn sum(x: &[f32]) -> f32 {
+    let split = x.len() - x.len() % W;
+    let mut acc = [0.0f32; W];
+    let mut i = 0;
+    while i < split {
+        for j in 0..W {
+            acc[j] += x[i + j];
+        }
+        i += W;
+    }
+    let mut r = tree8_add(acc);
+    for j in split..x.len() {
+        r += x[j];
+    }
+    r
+}
+
+/// Canonical max fold. Inputs must be non-NaN (see module docs); empty
+/// slices return `NEG_INFINITY`, matching the old `fold` identity.
+pub fn max(x: &[f32]) -> f32 {
+    let split = x.len() - x.len() % W;
+    let mut acc = [f32::NEG_INFINITY; W];
+    let mut i = 0;
+    while i < split {
+        for j in 0..W {
+            acc[j] = acc[j].max(x[i + j]);
+        }
+        i += W;
+    }
+    let mut r = tree8_max(acc);
+    for j in split..x.len() {
+        r = r.max(x[j]);
+    }
+    r
+}
+
+/// Canonical `Σ (x[i] − mean)²` — the LayerNorm variance numerator.
+pub fn sq_dev_sum(x: &[f32], mean: f32) -> f32 {
+    let split = x.len() - x.len() % W;
+    let mut acc = [0.0f32; W];
+    let mut i = 0;
+    while i < split {
+        for j in 0..W {
+            let d = x[i + j] - mean;
+            acc[j] += d * d;
+        }
+        i += W;
+    }
+    let mut r = tree8_add(acc);
+    for j in split..x.len() {
+        let d = x[j] - mean;
+        r += d * d;
+    }
+    r
+}
+
+/// `y[i] += alpha · x[i]`. Element-wise — no reduction, so any lane's
+/// vectorization of this exact expression is bit-identical.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x[i] *= s`, element-wise.
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// LayerNorm's normalize-affine: `out[i] = ((x[i] − mean) · inv) · g[i]
+/// + b[i]`, element-wise in exactly that association order.
+pub fn norm_affine(x: &[f32], mean: f32, inv: f32, g: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), b.len());
+    for (((o, &v), &gc), &bc) in out.iter_mut().zip(x).zip(g).zip(b) {
+        *o = (v - mean) * inv * gc + bc;
+    }
+}
+
+/// GELU (tanh approximation), in place. `tanh` is libm — there is no
+/// bit-reproducible vector form — so **every** lane's table points at
+/// this one scalar implementation. Constants are mirrored by
+/// [`crate::train::backward::gelu_backward`].
+pub fn gelu(x: &mut [f32]) {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    const A: f32 = 0.044_715;
+    for v in x.iter_mut() {
+        let u = *v;
+        *v = 0.5 * u * (1.0 + (C * (u + A * u * u * u)).tanh());
+    }
+}
+
+/// Strided gather: `out[j] = src[offset + j · stride]` — the top-k scan's
+/// column copy. A pure data movement, so lanes are trivially identical.
+pub fn gather_stride(src: &[f32], offset: usize, stride: usize, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = src[offset + j * stride];
+    }
+}

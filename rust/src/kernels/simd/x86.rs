@@ -1,0 +1,260 @@
+//! The AVX2 lane (x86_64): `core::arch` intrinsics realizing the
+//! canonical 8-accumulator spec with one 256-bit register.
+//!
+//! Bit-parity rules this lane obeys (see the module docs):
+//!
+//! - **Mul-then-add only** — never `_mm256_fmadd_ps`. FMA's single
+//!   rounding would diverge from the scalar spec's two roundings.
+//! - The horizontal reductions ([`hadd_tree`] / [`hmax_tree`]) realize
+//!   exactly the canonical tree: `lo128 ⊕ hi128` gives
+//!   `[a0⊕a4, a1⊕a5, a2⊕a6, a3⊕a7]`, `movehl` folds lanes 2,3 onto
+//!   0,1, and the final `shuffle` + scalar op folds lane 1 onto 0.
+//! - Tails fold sequentially *after* the tree, like every other lane.
+//!
+//! Safety: every public function here is a safe wrapper whose only
+//! caller contract is that this table is installed exclusively by
+//! [`super::dispatch`] after `is_x86_feature_detected!("avx2")` has
+//! succeeded on the running CPU.
+
+// Indexed tail loops keep the sequential-tail spec visible next to the
+// intrinsics; iterator rewrites would obscure it.
+#![allow(clippy::needless_range_loop)]
+
+use core::arch::x86_64::*;
+
+use super::dispatch::SimdOps;
+
+/// The AVX2 lane's dispatch table (installed only after runtime feature
+/// detection).
+pub static OPS: SimdOps = SimdOps {
+    name: "avx2",
+    dot,
+    sum,
+    max,
+    sq_dev_sum,
+    axpy,
+    scale,
+    norm_affine,
+    gelu: super::scalar::gelu,
+    gather_stride,
+};
+
+/// Canonical add-tree over one 256-bit accumulator.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hadd_tree(v: __m256) -> f32 {
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+    let t = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    _mm_cvtss_f32(_mm_add_ss(t, _mm_shuffle_ps(t, t, 1)))
+}
+
+/// Canonical max-tree over one 256-bit accumulator.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hmax_tree(v: __m256) -> f32 {
+    let s = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+    let t = _mm_max_ps(s, _mm_movehl_ps(s, s));
+    _mm_cvtss_f32(_mm_max_ss(t, _mm_shuffle_ps(t, t, 1)))
+}
+
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { dot_avx2(x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (xp, yp) = (x.as_ptr(), y.as_ptr());
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let xv = _mm256_loadu_ps(xp.add(i * 8));
+        let yv = _mm256_loadu_ps(yp.add(i * 8));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+    }
+    let mut r = hadd_tree(acc);
+    for i in chunks * 8..n {
+        r += x[i] * y[i];
+    }
+    r
+}
+
+pub fn sum(x: &[f32]) -> f32 {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { sum_avx2(x) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_avx2(x: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(xp.add(i * 8)));
+    }
+    let mut r = hadd_tree(acc);
+    for i in chunks * 8..n {
+        r += x[i];
+    }
+    r
+}
+
+pub fn max(x: &[f32]) -> f32 {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { max_avx2(x) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn max_avx2(x: &[f32]) -> f32 {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+    for i in 0..chunks {
+        acc = _mm256_max_ps(acc, _mm256_loadu_ps(xp.add(i * 8)));
+    }
+    let mut r = hmax_tree(acc);
+    for i in chunks * 8..n {
+        r = r.max(x[i]);
+    }
+    r
+}
+
+pub fn sq_dev_sum(x: &[f32], mean: f32) -> f32 {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { sq_dev_sum_avx2(x, mean) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sq_dev_sum_avx2(x: &[f32], mean: f32) -> f32 {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let vm = _mm256_set1_ps(mean);
+    let mut acc = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let d = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i * 8)), vm);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+    }
+    let mut r = hadd_tree(acc);
+    for i in chunks * 8..n {
+        let d = x[i] - mean;
+        r += d * d;
+    }
+    r
+}
+
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { axpy_avx2(alpha, x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let va = _mm256_set1_ps(alpha);
+    for i in 0..chunks {
+        let xv = _mm256_loadu_ps(xp.add(i * 8));
+        let yv = _mm256_loadu_ps(yp.add(i * 8));
+        _mm256_storeu_ps(yp.add(i * 8), _mm256_add_ps(yv, _mm256_mul_ps(va, xv)));
+    }
+    for i in chunks * 8..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+pub fn scale(x: &mut [f32], s: f32) {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { scale_avx2(x, s) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_avx2(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let chunks = n / 8;
+    let xp = x.as_mut_ptr();
+    let vs = _mm256_set1_ps(s);
+    for i in 0..chunks {
+        _mm256_storeu_ps(xp.add(i * 8), _mm256_mul_ps(_mm256_loadu_ps(xp.add(i * 8)), vs));
+    }
+    for v in x[chunks * 8..].iter_mut() {
+        *v *= s;
+    }
+}
+
+pub fn norm_affine(x: &[f32], mean: f32, inv: f32, g: &[f32], b: &[f32], out: &mut [f32]) {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { norm_affine_avx2(x, mean, inv, g, b, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn norm_affine_avx2(x: &[f32], mean: f32, inv: f32, g: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len(), g.len());
+    debug_assert_eq!(x.len(), b.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (xp, gp, bp) = (x.as_ptr(), g.as_ptr(), b.as_ptr());
+    let op = out.as_mut_ptr();
+    let vm = _mm256_set1_ps(mean);
+    let vi = _mm256_set1_ps(inv);
+    for i in 0..chunks {
+        let xhat = _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(xp.add(i * 8)), vm), vi);
+        let scaled = _mm256_mul_ps(xhat, _mm256_loadu_ps(gp.add(i * 8)));
+        _mm256_storeu_ps(op.add(i * 8), _mm256_add_ps(scaled, _mm256_loadu_ps(bp.add(i * 8))));
+    }
+    for i in chunks * 8..n {
+        out[i] = (x[i] - mean) * inv * g[i] + b[i];
+    }
+}
+
+pub fn gather_stride(src: &[f32], offset: usize, stride: usize, out: &mut [f32]) {
+    // SAFETY: table installed only after AVX2 runtime detection.
+    unsafe { gather_stride_avx2(src, offset, stride, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gather_stride_avx2(src: &[f32], offset: usize, stride: usize, out: &mut [f32]) {
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    let last = offset + (n - 1) * stride;
+    debug_assert!(last < src.len(), "gather_stride reads past src");
+    let chunks = n / 8;
+    // vgatherdps takes i32 indices; fall back to the scalar copy when the
+    // index range cannot be represented (or there is no full chunk).
+    if chunks == 0 || stride == 0 || last > i32::MAX as usize || stride > i32::MAX as usize / 8 {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = src[offset + j * stride];
+        }
+        return;
+    }
+    let (o, s) = (offset as i32, stride as i32);
+    let mut idx = _mm256_setr_epi32(
+        o,
+        o + s,
+        o + 2 * s,
+        o + 3 * s,
+        o + 4 * s,
+        o + 5 * s,
+        o + 6 * s,
+        o + 7 * s,
+    );
+    let step = _mm256_set1_epi32(8 * s);
+    let op = out.as_mut_ptr();
+    for i in 0..chunks {
+        _mm256_storeu_ps(op.add(i * 8), _mm256_i32gather_ps(src.as_ptr(), idx, 4));
+        idx = _mm256_add_epi32(idx, step);
+    }
+    for j in chunks * 8..n {
+        out[j] = src[offset + j * stride];
+    }
+}

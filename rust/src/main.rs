@@ -268,6 +268,7 @@ fn main() -> Result<()> {
             let mut gen =
                 |len: usize| (0..len).map(|_| rng.range_f32(-2.0, 2.0)).collect::<Vec<f32>>();
             let (q, k, v) = (gen(n * dim), gen(n * dim), gen(n * dim));
+            println!("simd_lane={} (override with MITA_SIMD)", mita::kernels::simd::active_lane());
 
             // 1) Degenerate full-attention parity: m = n, k = n must match
             //    the dense baseline exactly (within fp tolerance).
@@ -351,7 +352,10 @@ fn main() -> Result<()> {
                 side * side == seq,
                 "--seq-len {seq} must be a perfect square (image/pathfinder tasks)"
             );
-            println!("# model-check: dim={dim} heads={heads} depth={depth} seq_len={seq}");
+            println!(
+                "# model-check: dim={dim} heads={heads} depth={depth} seq_len={seq} simd_lane={}",
+                mita::kernels::simd::active_lane()
+            );
             let mut all_ok = true;
             for name in lra::TASK_NAMES {
                 let (_, vocab) = lra_task_defaults(name)?;
@@ -780,7 +784,7 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
             let lat = &m.request_latency_us;
             println!(
                 "requests={} shed={} errors={} shed_fraction={:.4} \
-                 p50={:.0}us p95={:.0}us p99={:.0}us",
+                 p50={:.0}us p95={:.0}us p99={:.0}us simd_lane={}",
                 m.serve_requests_total,
                 m.serve_shed_total,
                 m.serve_errors_total,
@@ -788,6 +792,7 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 lat.p50_us,
                 lat.p95_us,
                 lat.p99_us,
+                m.simd_lane,
             );
             for r in &m.replicas {
                 println!(

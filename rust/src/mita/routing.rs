@@ -4,6 +4,14 @@
 //! invariants can be property-tested without a Python runtime.
 //!
 //! Matrix convention: row-major `[n, d]` slices, matching kernels/ref.py.
+//!
+//! All dense inner loops (landmark pooling, landmark scores, routing
+//! logits, the top-k column gather) run through the dispatched SIMD ops
+//! of [`crate::kernels::simd`] — the same canonical reduction order the
+//! blocked kernels use, so the scalar definitions here and the blocked
+//! implementations in [`crate::kernels::mita`] stay bit-identical.
+
+use crate::kernels::linalg::{axpy, dot};
 
 /// `[m, n]` adaptive average-pooling matrix (PyTorch AdaptiveAvgPool1d
 /// windows): element r belongs to window i iff
@@ -41,10 +49,9 @@ pub fn landmarks_pool1d_into(q: &[f32], n: usize, d: usize, m: usize, out: &mut 
         let lo = i * n / m;
         let hi = (i + 1) * n / m;
         let w = 1.0 / (hi - lo) as f32;
+        let orow = &mut out[i * d..(i + 1) * d];
         for r in lo..hi {
-            for c in 0..d {
-                out[i * d + c] += w * q[r * d + c];
-            }
+            axpy(w, &q[r * d..(r + 1) * d], orow);
         }
     }
 }
@@ -56,12 +63,11 @@ pub fn scores(k: &[f32], q_land: &[f32], n: usize, d: usize, m: usize) -> Vec<f3
     let scale = 1.0 / (d as f32).sqrt();
     let mut s = vec![0.0f32; n * m];
     for r in 0..n {
+        let krow = &k[r * d..(r + 1) * d];
         for i in 0..m {
-            let mut acc = 0.0f32;
-            for c in 0..d {
-                acc += k[r * d + c] * q_land[i * d + c];
-            }
-            s[r * m + i] = acc * scale;
+            // Same dispatched dot (and therefore the same bits) as the
+            // blocked matmul_nt path in kernels/mita's select_experts.
+            s[r * m + i] = dot(krow, &q_land[i * d..(i + 1) * d]) * scale;
         }
     }
     s
@@ -70,38 +76,47 @@ pub fn scores(k: &[f32], q_land: &[f32], n: usize, d: usize, m: usize) -> Vec<f3
 /// Top-k row indices per expert column (Eq. 7): returns `[m, kk]` indices,
 /// each column's picks sorted by descending score (ties: lower index first).
 pub fn topk_indices(s: &[f32], n: usize, m: usize, kk: usize) -> Vec<usize> {
+    let mut col = vec![0.0f32; n];
     let mut order = vec![0usize; n];
     let mut out = vec![0usize; m * kk];
-    topk_indices_into(s, n, m, kk, &mut order, &mut out);
+    topk_indices_into(s, n, m, kk, &mut col, &mut order, &mut out);
     out
 }
 
-/// Allocation-free core of [`topk_indices`]: `order` is an `[n]` scratch
-/// buffer, `out` receives the `[m, kk]` picks. Selection uses an unstable
-/// partition + prefix sort — identical results to a full stable sort
-/// because the index tiebreak makes the comparator a total order, but
-/// O(n + k·log k) per expert instead of O(n·log n).
+/// Allocation-free core of [`topk_indices`]: `col` is an `[n]` f32
+/// scratch, `order` an `[n]` index scratch, `out` receives the `[m, kk]`
+/// picks. Each expert's score column is first gathered contiguous (the
+/// dispatched strided gather — AVX2 uses `vgatherdps`), so the selection
+/// comparator reads a dense cache-line-friendly buffer instead of
+/// striding through `[n, m]`. Selection uses an unstable partition +
+/// prefix sort — identical results to a full stable sort because the
+/// index tiebreak makes the comparator a total order, but O(n + k·log k)
+/// per expert instead of O(n·log n).
 pub fn topk_indices_into(
     s: &[f32],
     n: usize,
     m: usize,
     kk: usize,
+    col: &mut [f32],
     order: &mut [usize],
     out: &mut [usize],
 ) {
     assert!(kk <= n);
+    assert_eq!(col.len(), n);
     assert_eq!(order.len(), n);
     assert_eq!(out.len(), m * kk);
     if kk == 0 {
         return;
     }
+    let gather = crate::kernels::simd::ops().gather_stride;
     for i in 0..m {
+        gather(s, i, m, col);
         for (j, o) in order.iter_mut().enumerate() {
             *o = j;
         }
         let cmp = |a: &usize, b: &usize| {
-            s[b * m + i]
-                .partial_cmp(&s[a * m + i])
+            col[*b]
+                .partial_cmp(&col[*a])
                 .unwrap_or(std::cmp::Ordering::Equal)
                 .then(a.cmp(b))
         };
@@ -117,13 +132,14 @@ pub fn topk_indices_into(
 pub fn route_argmax(q: &[f32], q_land: &[f32], n: usize, d: usize, m: usize) -> Vec<usize> {
     let mut out = Vec::with_capacity(n);
     for r in 0..n {
+        let qrow = &q[r * d..(r + 1) * d];
         let mut best = 0usize;
         let mut best_v = f32::NEG_INFINITY;
         for i in 0..m {
-            let mut acc = 0.0f32;
-            for c in 0..d {
-                acc += q[r * d + c] * q_land[i * d + c];
-            }
+            // Dispatched dot ⇒ bit-identical logits to the blocked
+            // route_logits matmul in select_experts, so ties break the
+            // same way (lower expert id) on both paths.
+            let acc = dot(qrow, &q_land[i * d..(i + 1) * d]);
             if acc > best_v {
                 best_v = acc;
                 best = i;
@@ -286,9 +302,10 @@ mod tests {
         landmarks_pool1d_into(&q, n, d, m, &mut lands);
         assert_eq!(lands, landmarks_pool1d(&q, n, d, m));
 
+        let mut col = vec![0.0f32; n];
         let mut order = vec![0usize; n];
         let mut topk = vec![0usize; m * kk];
-        topk_indices_into(&s, n, m, kk, &mut order, &mut topk);
+        topk_indices_into(&s, n, m, kk, &mut col, &mut order, &mut topk);
         assert_eq!(topk, topk_indices(&s, n, m, kk));
 
         let assign: Vec<usize> = (0..n).map(|i| i * 3 % m).collect();

@@ -35,8 +35,9 @@ use crate::coordinator::checkpoint;
 use crate::kernels::api::{
     run_batched, AttentionKernel, AttnProblem, KernelRegistry, MitaStats, QkvData, QkvLayout,
 };
-use crate::kernels::linalg::{dot, matmul_nt, scale_in_place};
+use crate::kernels::linalg::{axpy, dot, matmul_nt, scale_in_place};
 use crate::kernels::par::par_chunks_mut;
+use crate::kernels::simd;
 use crate::kernels::workspace::WorkspacePool;
 use crate::model::config::ModelConfig;
 use crate::model::params::ModelParams;
@@ -48,37 +49,35 @@ pub(crate) const LN_EPS: f32 = 1e-5;
 
 /// Normalize each `[d]` row of `x` with scale `g` and shift `b`.
 /// `pub(crate)` so the training tape forward reuses the inference math
-/// bit-for-bit instead of re-deriving it.
+/// bit-for-bit instead of re-deriving it. Mean, variance, and the
+/// normalize-affine pass all run through the dispatched SIMD ops
+/// (canonical reduction order; [`crate::train::backward::layer_norm_backward`]
+/// recomputes with the same ops, so x̂ stays bit-identical).
 pub(crate) fn layer_norm_rows(x: &[f32], d: usize, g: &[f32], b: &[f32], out: &mut [f32]) {
     debug_assert_eq!(x.len(), out.len());
     debug_assert_eq!(x.len() % d, 0);
+    let ops = simd::ops();
     for (xrow, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
-        let mean = xrow.iter().sum::<f32>() / d as f32;
-        let var = xrow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let mean = (ops.sum)(xrow) / d as f32;
+        let var = (ops.sq_dev_sum)(xrow, mean) / d as f32;
         let inv = 1.0 / (var + LN_EPS).sqrt();
-        for ((o, &v), (&gc, &bc)) in orow.iter_mut().zip(xrow).zip(g.iter().zip(b)) {
-            *o = (v - mean) * inv * gc + bc;
-        }
+        (ops.norm_affine)(xrow, mean, inv, g, b, orow);
     }
 }
 
 /// `x[r, :] += bias` for row-major `[rows, len(bias)]`.
 pub(crate) fn add_bias_rows(x: &mut [f32], bias: &[f32]) {
     for row in x.chunks_exact_mut(bias.len()) {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v += b;
-        }
+        axpy(1.0, bias, row);
     }
 }
 
-/// GELU (tanh approximation), in place. Constants are mirrored by
+/// GELU (tanh approximation), in place. The implementation lives in
+/// [`crate::kernels::simd::scalar::gelu`] — `tanh` is libm, so every
+/// SIMD lane shares that one scalar body; constants are mirrored by
 /// [`crate::train::backward::gelu_backward`].
 pub(crate) fn gelu_in_place(x: &mut [f32]) {
-    const C: f32 = 0.797_884_6; // sqrt(2/π)
-    for v in x.iter_mut() {
-        let u = *v;
-        *v = 0.5 * u * (1.0 + (C * (u + 0.044715 * u * u * u)).tanh());
-    }
+    (simd::ops().gelu)(x)
 }
 
 /// Reusable activation buffers of one forward pass. Steady-state calls at
@@ -271,9 +270,7 @@ impl MitaModel {
                     let mut proj = ws.take_f32("model.proj", per);
                     matmul_nt(&attn[i * per..(i + 1) * per], &block.wo, n, d, d, &mut proj);
                     add_bias_rows(&mut proj, &block.bo);
-                    for (hv, &pv) in hex.iter_mut().zip(&proj) {
-                        *hv += pv;
-                    }
+                    axpy(1.0, &proj, hex);
                     ws.give_f32("model.proj", proj);
                 });
             }
@@ -290,9 +287,7 @@ impl MitaModel {
                 let mut mlp = ws.take_f32("model.mlp", per);
                 matmul_nt(&hidden, &block.w2, n, d, hid, &mut mlp);
                 add_bias_rows(&mut mlp, &block.b2);
-                for (hv, &mv) in hex.iter_mut().zip(&mlp) {
-                    *hv += mv;
-                }
+                axpy(1.0, &mlp, hex);
                 ws.give_f32("model.ln2", ln);
                 ws.give_f32("model.hidden", hidden);
                 ws.give_f32("model.mlp", mlp);
@@ -313,9 +308,7 @@ impl MitaModel {
                 let mut mean = ws.take_f32("model.pool", d);
                 mean.fill(0.0);
                 for row in ln.chunks_exact(d) {
-                    for (mc, &v) in mean.iter_mut().zip(row) {
-                        *mc += v;
-                    }
+                    axpy(1.0, row, &mut mean);
                 }
                 scale_in_place(&mut mean, 1.0 / n as f32);
                 let head = p.head_w.chunks_exact(d).zip(&p.head_b);

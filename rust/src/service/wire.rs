@@ -471,6 +471,7 @@ fn metrics_to_json(m: &MetricsSnapshot) -> Value {
         ("serve_errors_total", Value::num(m.serve_errors_total as f64)),
         ("request_latency_us", histogram_to_json(&m.request_latency_us)),
         ("replicas", Value::Arr(replicas)),
+        ("simd_lane", Value::str(m.simd_lane.as_str())),
     ])
 }
 
@@ -517,6 +518,7 @@ fn metrics_from_json(v: &Value) -> ServiceResult<MetricsSnapshot> {
             v.get("request_latency_us").map_err(bad)?,
         )?,
         replicas,
+        simd_lane: v.get("simd_lane").and_then(|x| x.as_str()).map_err(bad)?.to_string(),
     })
 }
 
@@ -978,6 +980,7 @@ mod tests {
                     load_imbalance: 1.0,
                 },
             ],
+            simd_lane: "avx2".into(),
         };
         let body = encode_response(&ServiceResponse::Metrics(snap.clone()));
         let text = body.render();

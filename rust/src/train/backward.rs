@@ -20,8 +20,9 @@
 //! overflow-fallback queries compute the same expert attention in the
 //! forward, so their gradients are the same expression too.
 
-use crate::kernels::linalg::{axpy, dot, gather_head, scale_in_place, scatter_head};
+use crate::kernels::linalg::{axpy, dot, gather_head, scatter_head};
 use crate::kernels::mita::MitaKernelConfig;
+use crate::kernels::simd;
 use crate::kernels::workspace::Workspace;
 use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
 use crate::model::transformer::LN_EPS;
@@ -113,11 +114,12 @@ pub fn layer_norm_backward(
     assert_eq!(g.len(), d);
     assert_eq!(dg.len(), d);
     assert_eq!(db.len(), d);
+    let ops = simd::ops();
     for ((xrow, dyrow), dxrow) in
         x.chunks_exact(d).zip(dy.chunks_exact(d)).zip(dx.chunks_exact_mut(d))
     {
-        let mean = xrow.iter().sum::<f32>() / d as f32;
-        let var = xrow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let mean = (ops.sum)(xrow) / d as f32;
+        let var = (ops.sq_dev_sum)(xrow, mean) / d as f32;
         let inv = 1.0 / (var + LN_EPS).sqrt();
         // a = dy·g (the x̂-gradient); s1 = mean(a), s2 = mean(a·x̂).
         let mut s1 = 0.0f32;
@@ -233,11 +235,11 @@ pub fn dense_attention_backward(
         let rows = QB.min(n - r0);
         let qblk = &q[r0 * d..(r0 + rows) * d];
         let doblk = &dout[r0 * d..(r0 + rows) * d];
-        // Recompute P = softmax(Q_blk Kᵀ · scale) like the forward.
+        // Recompute P = softmax(Q_blk Kᵀ · scale) exactly like the
+        // forward (scale folded into the softmax's exp pass there too).
         let pblk = &mut p[..rows * n];
         crate::kernels::linalg::matmul_nt(qblk, k, rows, n, d, pblk);
-        scale_in_place(pblk, scale);
-        crate::kernels::linalg::softmax_rows(pblk, rows, n);
+        crate::kernels::linalg::softmax_rows_scaled(pblk, rows, n, scale);
         // dP[i, j] = dot(dout_i, v_j).
         let dsblk = &mut ds[..rows * n];
         crate::kernels::linalg::matmul_nt(doblk, v, rows, n, d, dsblk);
@@ -307,6 +309,7 @@ pub fn mita_attention_backward(
     // inputs, same code ⇒ the same indices, by construction.
     let mut landmarks = ws.take_f32("mita.bwd.landmarks", m * d);
     let mut s = ws.take_f32("mita.bwd.scores", n * m);
+    let mut col = ws.take_f32("mita.bwd.topk_col", n);
     let mut order = ws.take_usize("mita.bwd.order", n);
     let mut topk = ws.take_usize("mita.bwd.topk", m * kk);
     let mut route_logits = ws.take_f32("mita.bwd.route", n * m);
@@ -319,6 +322,7 @@ pub fn mita_attention_backward(
         &cfg,
         &mut landmarks,
         &mut s,
+        &mut col,
         &mut order,
         &mut topk,
         &mut route_logits,
@@ -357,6 +361,7 @@ pub fn mita_attention_backward(
 
     ws.give_f32("mita.bwd.landmarks", landmarks);
     ws.give_f32("mita.bwd.scores", s);
+    ws.give_f32("mita.bwd.topk_col", col);
     ws.give_f32("mita.bwd.route", route_logits);
     ws.give_f32("mita.bwd.w", w);
     ws.give_f32("mita.bwd.dp", dp);

@@ -1,0 +1,221 @@
+//! Bit-parity gate for the runtime-dispatched SIMD lanes.
+//!
+//! The determinism contract (`rust/src/kernels/simd/mod.rs`) says every
+//! lane — scalar, portable, AVX2, NEON — returns **bit-identical**
+//! results for every dispatched primitive. This suite is the gate:
+//!
+//! - every primitive in the [`SimdOps`] table, swept over lengths that
+//!   straddle the 8-wide chunk boundary (1, W−1, W, W+1, 1000+7) plus
+//!   empty, on every lane the host can actually run;
+//! - the derived softmax / attention paths under each *forced* lane
+//!   (`set_lane`, the same mechanism `MITA_SIMD` uses);
+//! - whole-model logits, scalar lane vs the host's auto lane.
+//!
+//! Comparisons are `to_bits()` equality — no tolerances anywhere.
+//! Lanes unavailable on the build/CPU (e.g. AVX2 on aarch64) are simply
+//! absent from `available_lanes()` and skipped; scalar and portable
+//! exist everywhere, so the suite never degenerates to nothing.
+
+use std::sync::Mutex;
+
+use mita::data::lra;
+use mita::data::rng::Rng;
+use mita::data::Split;
+use mita::kernels::linalg::{softmax_in_place, softmax_rows_scaled};
+use mita::kernels::simd::dispatch::auto_lane;
+use mita::kernels::simd::{active_lane, available_lanes, lane_table, set_lane, Lane, SimdOps, W};
+use mita::kernels::{dense_attention, MitaStats, Workspace, WorkspacePool, OP_ATTN_MITA};
+use mita::model::{MitaModel, ModelConfig, ModelScratch};
+
+/// Lengths straddling every chunking edge: empty, single element, one
+/// short of a chunk, exactly one chunk, one past, and a long odd tail.
+const LENGTHS: [usize; 6] = [0, 1, W - 1, W, W + 1, 1007];
+
+/// Tests that flip the process-global lane (`set_lane`) serialize here so
+/// the per-table tests never observe a half-switched world.
+static LANE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lane_by_name(name: &str) -> Lane {
+    *Lane::ALL
+        .iter()
+        .find(|l| l.name() == name)
+        .unwrap_or_else(|| panic!("unknown lane name {name:?}"))
+}
+
+/// Deterministic input pair with signs, magnitudes, and no NaNs.
+fn vec_pair(n: usize, salt: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::derive(0x51D0, &[salt, n as u64]);
+    let x = (0..n).map(|_| rng.range_f32(-3.0, 3.0)).collect();
+    let y = (0..n).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    (x, y)
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}: bit mismatch at [{i}]: {g} vs {w}"
+        );
+    }
+}
+
+fn scalar_table() -> &'static SimdOps {
+    lane_table(Lane::Scalar).expect("scalar lane always exists")
+}
+
+#[test]
+fn reductions_bit_identical_across_all_available_lanes() {
+    let s = scalar_table();
+    for lane in available_lanes() {
+        let t = lane_table(lane).unwrap();
+        for n in LENGTHS {
+            let (x, y) = vec_pair(n, 1);
+            let tag = format!("{} n={n}", lane.name());
+            assert_eq!((t.dot)(&x, &y).to_bits(), (s.dot)(&x, &y).to_bits(), "dot {tag}");
+            assert_eq!((t.sum)(&x).to_bits(), (s.sum)(&x).to_bits(), "sum {tag}");
+            assert_eq!((t.max)(&x).to_bits(), (s.max)(&x).to_bits(), "max {tag}");
+            assert_eq!(
+                (t.sq_dev_sum)(&x, 0.125).to_bits(),
+                (s.sq_dev_sum)(&x, 0.125).to_bits(),
+                "sq_dev_sum {tag}"
+            );
+        }
+    }
+}
+
+#[test]
+fn elementwise_ops_bit_identical_across_all_available_lanes() {
+    let s = scalar_table();
+    for lane in available_lanes() {
+        let t = lane_table(lane).unwrap();
+        for n in LENGTHS {
+            let (x, y) = vec_pair(n, 2);
+            let tag = format!("{} n={n}", lane.name());
+
+            for alpha in [1.0f32, -0.73] {
+                let mut got = y.clone();
+                let mut want = y.clone();
+                (t.axpy)(alpha, &x, &mut got);
+                (s.axpy)(alpha, &x, &mut want);
+                assert_bits_eq(&got, &want, &format!("axpy a={alpha} {tag}"));
+            }
+
+            let mut got = x.clone();
+            let mut want = x.clone();
+            (t.scale)(&mut got, 0.311);
+            (s.scale)(&mut want, 0.311);
+            assert_bits_eq(&got, &want, &format!("scale {tag}"));
+
+            let (g, b) = vec_pair(n, 3);
+            let mut got = vec![0.0f32; n];
+            let mut want = vec![0.0f32; n];
+            (t.norm_affine)(&x, 0.21, 1.7, &g, &b, &mut got);
+            (s.norm_affine)(&x, 0.21, 1.7, &g, &b, &mut want);
+            assert_bits_eq(&got, &want, &format!("norm_affine {tag}"));
+
+            let mut got = x.clone();
+            let mut want = x.clone();
+            (t.gelu)(&mut got);
+            (s.gelu)(&mut want);
+            assert_bits_eq(&got, &want, &format!("gelu {tag}"));
+        }
+    }
+}
+
+#[test]
+fn gather_stride_bit_identical_across_all_available_lanes() {
+    let s = scalar_table();
+    // Column gathers shaped like the top-k scan: n rows × m experts,
+    // gathering column `off` with stride m. Covers sub-chunk, exact, and
+    // odd-tail row counts and a stride of 1 (contiguous degenerate case).
+    for lane in available_lanes() {
+        let t = lane_table(lane).unwrap();
+        for (n, m) in [(1usize, 3usize), (7, 13), (8, 13), (9, 13), (257, 31), (64, 1)] {
+            let (src, _) = vec_pair(n * m, 4);
+            for off in [0, m - 1, m / 2] {
+                let mut got = vec![0.0f32; n];
+                let mut want = vec![0.0f32; n];
+                (t.gather_stride)(&src, off, m, &mut got);
+                (s.gather_stride)(&src, off, m, &mut want);
+                assert_bits_eq(&got, &want, &format!("gather {} n={n} m={m} off={off}", lane.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn softmax_and_dense_attention_bit_identical_under_forced_lanes() {
+    let _guard = LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = lane_by_name(active_lane());
+
+    let (n, d) = (33, 16);
+    let (q, k) = vec_pair(n * d, 5);
+    let (v, logits) = vec_pair(n * d, 6);
+
+    // Reference pass under the scalar lane.
+    set_lane(Lane::Scalar);
+    let mut sm_ref = logits.clone();
+    softmax_rows_scaled(&mut sm_ref, n, d, 0.25);
+    let mut plain_ref = logits.clone();
+    softmax_in_place(&mut plain_ref);
+    let mut ws = Workspace::new();
+    let mut attn_ref = vec![0.0f32; n * d];
+    dense_attention(&q, &k, &v, n, d, &mut ws, &mut attn_ref);
+
+    for lane in available_lanes() {
+        set_lane(lane);
+        let mut sm = logits.clone();
+        softmax_rows_scaled(&mut sm, n, d, 0.25);
+        assert_bits_eq(&sm, &sm_ref, &format!("softmax_rows_scaled via {}", lane.name()));
+        let mut plain = logits.clone();
+        softmax_in_place(&mut plain);
+        assert_bits_eq(&plain, &plain_ref, &format!("softmax_in_place via {}", lane.name()));
+        let mut attn = vec![0.0f32; n * d];
+        dense_attention(&q, &k, &v, n, d, &mut ws, &mut attn);
+        assert_bits_eq(&attn, &attn_ref, &format!("dense_attention via {}", lane.name()));
+    }
+
+    set_lane(restore);
+}
+
+#[test]
+fn whole_model_logits_bit_identical_scalar_vs_auto() {
+    let _guard = LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let restore = lane_by_name(active_lane());
+
+    let (name, n, batch) = ("listops", 64usize, 3usize);
+    let vocab = lra::default_vocab(name).expect("known task");
+    let task = lra::by_name(name, n, vocab, 0x51D7);
+    let cfg = ModelConfig::for_task(task.as_ref(), 32, 2, 2, OP_ATTN_MITA);
+    let model = MitaModel::init(cfg, 11).expect("model init");
+    let registry = model.registry();
+    let pool = WorkspacePool::new();
+    let mut scratch = ModelScratch::default();
+    let mut stats = MitaStats::default();
+    let (tokens, _) = lra::batch_host(task.as_ref(), Split::Val, 0, batch);
+
+    let run = |lane: Lane, scratch: &mut ModelScratch, stats: &mut MitaStats| {
+        set_lane(lane);
+        model
+            .forward(&tokens, batch, batch, &registry, &pool, scratch, stats)
+            .expect("forward")
+    };
+
+    let want = run(Lane::Scalar, &mut scratch, &mut stats);
+    let auto = auto_lane();
+    let got = run(auto, &mut scratch, &mut stats);
+    assert_bits_eq(
+        &got,
+        &want,
+        &format!("model logits: scalar vs auto ({})", auto.name()),
+    );
+    // And every other lane the host can run, not just auto's pick.
+    for lane in available_lanes() {
+        let got = run(lane, &mut scratch, &mut stats);
+        assert_bits_eq(&got, &want, &format!("model logits: scalar vs {}", lane.name()));
+    }
+
+    set_lane(restore);
+}

@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Record a perf-trajectory point: run the two quick native benches under
+# the forced-scalar SIMD lane and then under the auto lane, and append
+# all four runs (bench × lane) to the committed trajectory files at the
+# repo root:
+#
+#   BENCH_attn_native.json   <- rust/benches/attn_microbench.rs
+#   BENCH_model_native.json  <- rust/benches/model_native.rs
+#
+# Each trajectory file is {"bench": ..., "entries": [...]} where every
+# entry is exactly the JSON one bench run wrote (its "simd_lane" field
+# tells scalar baseline and dispatched runs apart) plus "recorded_utc"
+# and the recording commit. Run from anywhere inside the repo; commit
+# the two root files afterwards to extend the trajectory. See
+# docs/PERF.md for how the trajectory is read.
+set -euo pipefail
+
+cd "$(git rev-parse --show-toplevel)"
+commit=$(git rev-parse --short HEAD)
+
+append() { # append <run-json> into <trajectory-json> tagged with commit
+    python3 - "$1" "$2" "$commit" <<'PY'
+import json, sys, datetime
+
+run_path, traj_path, commit = sys.argv[1:4]
+with open(run_path) as f:
+    entry = json.load(f)
+entry["recorded_utc"] = datetime.datetime.now(datetime.timezone.utc).isoformat(
+    timespec="seconds"
+)
+entry["commit"] = commit
+
+try:
+    with open(traj_path) as f:
+        traj = json.load(f)
+except FileNotFoundError:
+    traj = {"bench": entry.get("bench", "?"), "entries": []}
+traj.setdefault("entries", []).append(entry)
+traj.pop("note", None)  # drop the unpopulated-skeleton marker once real
+
+with open(traj_path, "w") as f:
+    json.dump(traj, f, indent=2)
+    f.write("\n")
+print(f"appended {run_path} (simd_lane={entry.get('simd_lane')}) -> {traj_path}")
+PY
+}
+
+for lane in scalar auto; do
+    echo "== attn_microbench --quick (MITA_SIMD=$lane) =="
+    (cd rust && MITA_SIMD=$lane cargo bench --bench attn_microbench -- --quick)
+    append rust/BENCH_attn_native.json BENCH_attn_native.json
+
+    echo "== model_native --quick (MITA_SIMD=$lane) =="
+    (cd rust && MITA_SIMD=$lane cargo bench --bench model_native -- --quick)
+    append rust/BENCH_model_native.json BENCH_model_native.json
+done
+
+echo
+echo "Trajectory updated; review and commit BENCH_attn_native.json and"
+echo "BENCH_model_native.json at the repo root."
