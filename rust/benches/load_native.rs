@@ -49,6 +49,13 @@ struct Row {
     p50_us: f64,
     p95_us: f64,
     p99_us: f64,
+    /// Stage breakdown from the per-ticket [`ExecProfile`] (the same
+    /// engine-side numbers `/v1/trace` exports): backend execute time,
+    /// and the queue component (completion wall time minus execute).
+    exec_p50_us: f64,
+    exec_p95_us: f64,
+    queue_p50_us: f64,
+    queue_p95_us: f64,
 }
 
 fn main() {
@@ -70,14 +77,15 @@ fn main() {
     let mut rows = Vec::new();
     println!(
         "\nreplicas, offered_x, offered req/s, completed/total, shed%, achieved req/s, \
-         p50 us, p95 us, p99 us"
+         p50 us, p95 us, p99 us, exec p50 us, queue p50 us"
     );
     for (ri, &replicas) in replica_counts.iter().enumerate() {
         for (fi, &factor) in factors.iter().enumerate() {
             let seed = 0x10AD + (ri * factors.len() + fi) as u64;
             let row = run_cell(replicas, factor, mu, requests, &payloads, seed);
             println!(
-                "{:8}, {:9.2}, {:13.0}, {:9}, {:5.1}, {:14.0}, {:6.0}, {:6.0}, {:6.0}",
+                "{:8}, {:9.2}, {:13.0}, {:9}, {:5.1}, {:14.0}, {:6.0}, {:6.0}, {:6.0}, \
+                 {:11.0}, {:12.0}",
                 row.replicas,
                 row.factor,
                 row.offered_rate,
@@ -87,6 +95,8 @@ fn main() {
                 row.p50_us,
                 row.p95_us,
                 row.p99_us,
+                row.exec_p50_us,
+                row.queue_p50_us,
             );
             rows.push(row);
         }
@@ -156,16 +166,26 @@ fn run_cell(
     let mut next = 0usize;
     let mut pending: Vec<(PoolTicket, Instant)> = Vec::new();
     let mut latencies_us: Vec<f64> = Vec::new();
+    let mut exec_us: Vec<f64> = Vec::new();
+    let mut queue_us: Vec<f64> = Vec::new();
     let (mut shed, mut errors) = (0u64, 0u64);
     loop {
-        // Settle whatever finished since the last poll.
+        // Settle whatever finished since the last poll, keeping the
+        // engine-side execute profile so the JSON rows carry the same
+        // stage breakdown `/v1/trace` reports.
         let mut i = 0;
         while i < pending.len() {
-            match pending[i].0.try_wait() {
-                Some(result) => {
+            match pending[i].0.try_wait_profiled() {
+                Some((result, profile)) => {
                     let (_ticket, issued) = pending.swap_remove(i);
                     match result {
-                        Ok(_) => latencies_us.push(issued.elapsed().as_secs_f64() * 1e6),
+                        Ok(_) => {
+                            let wall = issued.elapsed().as_secs_f64() * 1e6;
+                            let exec = profile.execute_ns as f64 / 1e3;
+                            latencies_us.push(wall);
+                            exec_us.push(exec);
+                            queue_us.push((wall - exec).max(0.0));
+                        }
                         Err(_) => errors += 1,
                     }
                 }
@@ -198,6 +218,8 @@ fn run_cell(
     pool.shutdown();
 
     latencies_us.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    exec_us.sort_by(|a, b| a.partial_cmp(b).expect("finite exec times"));
+    queue_us.sort_by(|a, b| a.partial_cmp(b).expect("finite queue times"));
     Row {
         replicas,
         factor,
@@ -211,6 +233,10 @@ fn run_cell(
         p50_us: percentile(&latencies_us, 50.0),
         p95_us: percentile(&latencies_us, 95.0),
         p99_us: percentile(&latencies_us, 99.0),
+        exec_p50_us: percentile(&exec_us, 50.0),
+        exec_p95_us: percentile(&exec_us, 95.0),
+        queue_p50_us: percentile(&queue_us, 50.0),
+        queue_p95_us: percentile(&queue_us, 95.0),
     }
 }
 
@@ -243,7 +269,9 @@ fn write_json(quick: bool, mu: f64, rows: &[Row]) {
             "    {{\"replicas\": {}, \"offered_factor\": {:.2}, \"offered_rate\": {:.2}, \
              \"requests\": {}, \"completed\": {}, \"shed\": {}, \"errors\": {}, \
              \"shed_fraction\": {:.4}, \"wall_secs\": {:.4}, \"throughput\": {:.2}, \
-             \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}}}{comma}",
+             \"p50_us\": {:.1}, \"p95_us\": {:.1}, \"p99_us\": {:.1}, \
+             \"exec_p50_us\": {:.1}, \"exec_p95_us\": {:.1}, \
+             \"queue_p50_us\": {:.1}, \"queue_p95_us\": {:.1}}}{comma}",
             r.replicas,
             r.factor,
             r.offered_rate,
@@ -257,6 +285,10 @@ fn write_json(quick: bool, mu: f64, rows: &[Row]) {
             r.p50_us,
             r.p95_us,
             r.p99_us,
+            r.exec_p50_us,
+            r.exec_p95_us,
+            r.queue_p50_us,
+            r.queue_p95_us,
         );
     }
     let _ = writeln!(json, "  ]");

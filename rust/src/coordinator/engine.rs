@@ -23,9 +23,11 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::kernels::api::BlockProfile;
 use crate::runtime::{BackendSpec, Tensor};
 use crate::service::{
     BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse, ServiceResult,
@@ -35,11 +37,27 @@ use crate::service::{
 /// (the engine-side name of [`crate::service::ServiceStats`]).
 pub type EngineStats = crate::service::ServiceStats;
 
+/// Execution-side profile of one job, measured by the engine thread —
+/// the only place that brackets `Backend::execute` — and carried back on
+/// the ticket's reply channel alongside the result. Observation-only:
+/// nothing about scheduling or execution reads it.
+#[derive(Debug, Clone, Default)]
+pub struct ExecProfile {
+    /// Wall time spent inside `Backend::execute`, nanoseconds.
+    pub execute_ns: u64,
+    /// Per-transformer-block profile of a model forward (empty for other
+    /// request classes and for backends without per-block recording).
+    pub blocks: Vec<BlockProfile>,
+}
+
+/// What travels back over a ticket's reply channel.
+type Reply = (ServiceResult<ServiceResponse>, ExecProfile);
+
 enum EngineMsg {
     /// Execute one typed request; the result travels back over the
     /// ticket's dedicated channel (the correlation id stays caller-side,
     /// on the [`Ticket`] — the engine has no use for it).
-    Job { req: ServiceRequest, reply: mpsc::Sender<ServiceResult<ServiceResponse>> },
+    Job { req: ServiceRequest, reply: mpsc::Sender<Reply> },
     /// Stop the engine loop (makes `shutdown` safe even while other
     /// EngineHandle clones are still alive).
     Shutdown,
@@ -50,7 +68,7 @@ enum EngineMsg {
 /// [`Ticket::wait`] (blocking) or [`Ticket::try_wait`] (polling).
 pub struct Ticket {
     id: u64,
-    rx: mpsc::Receiver<ServiceResult<ServiceResponse>>,
+    rx: mpsc::Receiver<Reply>,
 }
 
 impl Ticket {
@@ -62,12 +80,22 @@ impl Ticket {
 
     /// Block until this request completes.
     pub fn wait(self) -> ServiceResult<ServiceResponse> {
+        self.wait_profiled().0
+    }
+
+    /// Block until this request completes, returning the engine-side
+    /// [`ExecProfile`] alongside the result (the trace path's entry
+    /// point; [`Ticket::wait`] discards the profile).
+    pub fn wait_profiled(self) -> (ServiceResult<ServiceResponse>, ExecProfile) {
         match self.rx.recv() {
-            Ok(result) => result,
-            Err(_) => Err(ServiceError::Internal(format!(
-                "engine dropped reply for ticket {}",
-                self.id
-            ))),
+            Ok(reply) => reply,
+            Err(_) => (
+                Err(ServiceError::Internal(format!(
+                    "engine dropped reply for ticket {}",
+                    self.id
+                ))),
+                ExecProfile::default(),
+            ),
         }
     }
 
@@ -75,13 +103,21 @@ impl Ticket {
     /// still executing; once it returns `Some`, the result has been taken
     /// and later calls report an internal error.
     pub fn try_wait(&mut self) -> Option<ServiceResult<ServiceResponse>> {
+        self.try_wait_profiled().map(|(result, _)| result)
+    }
+
+    /// Polling variant of [`Ticket::wait_profiled`].
+    pub fn try_wait_profiled(&mut self) -> Option<(ServiceResult<ServiceResponse>, ExecProfile)> {
         match self.rx.try_recv() {
-            Ok(result) => Some(result),
+            Ok(reply) => Some(reply),
             Err(mpsc::TryRecvError::Empty) => None,
-            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServiceError::Internal(format!(
-                "engine dropped reply for ticket {}",
-                self.id
-            )))),
+            Err(mpsc::TryRecvError::Disconnected) => Some((
+                Err(ServiceError::Internal(format!(
+                    "engine dropped reply for ticket {}",
+                    self.id
+                ))),
+                ExecProfile::default(),
+            )),
         }
     }
 }
@@ -241,6 +277,7 @@ impl Engine {
                             // request. (Backend scratch is RefCell-based
                             // with no poisoning; borrows release on
                             // unwind, so the backend stays usable.)
+                            let t0 = Instant::now();
                             let result = std::panic::catch_unwind(
                                 std::panic::AssertUnwindSafe(|| backend.execute(req)),
                             )
@@ -252,9 +289,19 @@ impl Engine {
                                     .unwrap_or_else(|| "non-string panic payload".into());
                                 Err(ServiceError::Internal(format!("backend panicked: {msg}")))
                             });
+                            // Drain the per-block profile after every job
+                            // (a failed execute may leave a partial one
+                            // behind — draining keeps it from leaking into
+                            // the next request's trace) but attach it only
+                            // to the job that produced it successfully.
+                            let blocks = backend.take_block_profiles();
+                            let profile = ExecProfile {
+                                execute_ns: t0.elapsed().as_nanos() as u64,
+                                blocks: if result.is_ok() { blocks } else { Vec::new() },
+                            };
                             // A dropped reply receiver just means the
                             // caller stopped caring about this ticket.
-                            let _ = reply.send(result);
+                            let _ = reply.send((result, profile));
                         }
                     }
                 }
@@ -348,6 +395,51 @@ mod tests {
             }
         };
         assert_eq!(result.unwrap().into_tensor().unwrap().shape(), &[1, 16, 8]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn profiled_wait_carries_execute_time_and_model_blocks() {
+        use crate::kernels::OP_ATTN_MITA;
+        use crate::model::{ModelConfig, OP_MODEL_INIT};
+
+        let mcfg = ModelConfig::new(7, 12, 8, 2, 2, 16, 3, OP_ATTN_MITA);
+        let attn = NativeAttnConfig::for_shape(12, 8, 2).with_model(mcfg.clone());
+        let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+        let handle = engine.handle();
+
+        // Attention: non-zero execute time, no per-block profile.
+        let t = handle
+            .submit(ServiceRequest::Attention {
+                op: KernelId::Mita,
+                qkv: fused_batch(12, 8, 1),
+                valid_rows: None,
+            })
+            .unwrap();
+        let (result, prof) = t.wait_profiled();
+        result.unwrap();
+        assert!(prof.execute_ns > 0, "engine brackets every execute");
+        assert!(prof.blocks.is_empty(), "attention requests carry no block profile");
+
+        // Model forward: one BlockProfile per block rides the reply.
+        handle.bind_init("m", OP_MODEL_INIT, 3, 0).unwrap();
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..12).map(|_| rng.below(7) as i32).collect();
+        let t = handle
+            .submit(ServiceRequest::ModelForward {
+                binding: BindingId::from("m"),
+                tokens: Tensor::i32(&[1, 12], toks).unwrap(),
+                valid_rows: None,
+            })
+            .unwrap();
+        let (result, prof) = t.wait_profiled();
+        result.unwrap();
+        assert_eq!(prof.blocks.len(), mcfg.depth);
+        assert!(prof.blocks.iter().all(|b| b.stats.queries > 0 && b.attn_ns > 0));
+        assert!(
+            prof.execute_ns >= prof.blocks.iter().map(|b| b.attn_ns + b.mlp_ns).sum::<u64>(),
+            "execute wall time bounds the per-block spans"
+        );
         engine.shutdown();
     }
 

@@ -193,6 +193,15 @@ pub const METRIC_NAMES: &[&str] = &[
     "simd_lane",
 ];
 
+/// Per-layer MiTA routing series (Prometheus + JSON `blocks` arrays).
+/// Kept **out** of [`METRIC_NAMES`]: those names are asserted present in
+/// every `/v1/metrics` payload, while per-block series only exist once a
+/// model has served traffic.
+pub const METRIC_BLOCK_OVERFLOW: &str = "mita_block_overflow_fraction";
+/// Per-layer, per-expert routed-query counter (see
+/// [`METRIC_BLOCK_OVERFLOW`] for why it is not in `METRIC_NAMES`).
+pub const METRIC_EXPERT_QUERIES: &str = "mita_expert_queries_total";
+
 /// Pool-wide serving counters and the request-latency histogram. Shared
 /// (`Arc`) between the replica pool's routing path and the snapshot
 /// path; counters are lock-free, the histogram takes a short mutex only
@@ -277,6 +286,23 @@ pub struct HistogramSnapshot {
     pub buckets: Vec<(f64, u64)>,
 }
 
+/// Per-transformer-block MiTA routing series for one replica, derived
+/// from the backend's cumulative [`BlockProfile`](crate::kernels::api::BlockProfile)
+/// accumulators. Empty until the replica has served model-forward
+/// traffic (attention-only service has no block structure).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BlockSeries {
+    /// Block index (0-based, bottom of the stack first).
+    pub block: u64,
+    /// Overflow fraction for this block's MiTA routing.
+    pub overflow_fraction: f64,
+    /// Queries routed through this block since startup (or last reset).
+    pub queries: u64,
+    /// Queries landing on each expert of this block — the expert
+    /// occupancy histogram behind `mita_expert_queries_total`.
+    pub expert_queries: Vec<u64>,
+}
+
 /// Per-replica gauges sampled at snapshot time.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ReplicaSnapshot {
@@ -294,6 +320,8 @@ pub struct ReplicaSnapshot {
     /// Worst observed expert load imbalance (max/mean; 0 when
     /// unavailable).
     pub load_imbalance: f64,
+    /// Per-block MiTA routing series (empty until model traffic ran).
+    pub blocks: Vec<BlockSeries>,
 }
 
 /// The full `/v1/metrics` payload: pool counters, the latency histogram,
@@ -321,6 +349,183 @@ impl MetricsSnapshot {
             self.serve_shed_total as f64 / self.serve_requests_total as f64
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition (`GET /v1/metrics?format=prometheus`)
+// ---------------------------------------------------------------------------
+
+/// Format a sample value the Prometheus way: integers render without a
+/// fractional part, everything else as a plain float.
+fn prom_value(v: f64) -> String {
+    if v.is_finite() && v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a [`MetricsSnapshot`] as Prometheus text exposition format
+/// (version 0.0.4). Series names match the JSON payload's
+/// [`METRIC_NAMES`] contract; the latency histogram becomes cumulative
+/// `_bucket{le="..."}` samples plus `_sum`/`_count`; per-replica gauges
+/// carry a `replica` label; per-block MiTA series add `block` (and
+/// `expert`) labels.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut line = |s: String| {
+        out.push_str(&s);
+        out.push('\n');
+    };
+
+    line("# TYPE serve_requests_total counter".into());
+    line(format!("serve_requests_total {}", snap.serve_requests_total));
+    line("# TYPE serve_shed_total counter".into());
+    line(format!("serve_shed_total {}", snap.serve_shed_total));
+    line("# TYPE serve_errors_total counter".into());
+    line(format!("serve_errors_total {}", snap.serve_errors_total));
+
+    // Histogram: the snapshot's sparse (le_us, count) pairs carry
+    // per-bucket counts; Prometheus buckets are cumulative, ending in
+    // the mandatory `+Inf` = total count.
+    line("# TYPE request_latency_us histogram".into());
+    let h = &snap.request_latency_us;
+    let mut cumulative = 0u64;
+    for &(le_us, count) in &h.buckets {
+        cumulative += count;
+        line(format!("request_latency_us_bucket{{le=\"{}\"}} {cumulative}", prom_value(le_us)));
+    }
+    line(format!("request_latency_us_bucket{{le=\"+Inf\"}} {}", h.count));
+    line(format!("request_latency_us_sum {}", prom_value(h.sum_us)));
+    line(format!("request_latency_us_count {}", h.count));
+
+    line("# TYPE replica_requests_total counter".into());
+    for r in &snap.replicas {
+        line(format!(
+            "replica_requests_total{{replica=\"{}\"}} {}",
+            r.replica, r.replica_requests_total
+        ));
+    }
+    line("# TYPE replica_queue_depth gauge".into());
+    for r in &snap.replicas {
+        line(format!("replica_queue_depth{{replica=\"{}\"}} {}", r.replica, r.replica_queue_depth));
+    }
+    line("# TYPE overflow_fraction gauge".into());
+    for r in &snap.replicas {
+        line(format!(
+            "overflow_fraction{{replica=\"{}\"}} {}",
+            r.replica,
+            prom_value(r.overflow_fraction)
+        ));
+    }
+    line("# TYPE load_imbalance gauge".into());
+    for r in &snap.replicas {
+        line(format!(
+            "load_imbalance{{replica=\"{}\"}} {}",
+            r.replica,
+            prom_value(r.load_imbalance)
+        ));
+    }
+
+    // Per-layer MiTA routing introspection (absent until model traffic
+    // has run; scrapers must treat the series as optional).
+    if snap.replicas.iter().any(|r| !r.blocks.is_empty()) {
+        line(format!("# TYPE {METRIC_BLOCK_OVERFLOW} gauge"));
+        for r in &snap.replicas {
+            for b in &r.blocks {
+                line(format!(
+                    "{METRIC_BLOCK_OVERFLOW}{{replica=\"{}\",block=\"{}\"}} {}",
+                    r.replica,
+                    b.block,
+                    prom_value(b.overflow_fraction)
+                ));
+            }
+        }
+        line(format!("# TYPE {METRIC_EXPERT_QUERIES} counter"));
+        for r in &snap.replicas {
+            for b in &r.blocks {
+                for (e, &q) in b.expert_queries.iter().enumerate() {
+                    line(format!(
+                        "{METRIC_EXPERT_QUERIES}{{replica=\"{}\",block=\"{}\",expert=\"{e}\"}} {q}",
+                        r.replica, b.block
+                    ));
+                }
+            }
+        }
+    }
+
+    // The lane is categorical; expose it the Prometheus way — a 1-valued
+    // gauge with the category as a label.
+    line("# TYPE simd_lane gauge".into());
+    line(format!("simd_lane{{lane=\"{}\"}} 1", snap.simd_lane));
+    out
+}
+
+/// Validate a Prometheus text payload: every non-comment line must match
+/// the `name{labels} value` grammar, and every series in
+/// [`METRIC_NAMES`] must be present (as the exact sample name or as a
+/// `name_` prefix, covering `_bucket`/`_sum`/`_count` expansions).
+/// Returns the number of sample lines on success. This is the checker
+/// behind `mita client check-prometheus` and the CI loopback smoke.
+pub fn check_prometheus_text(text: &str) -> Result<usize, String> {
+    fn valid_name(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    fn valid_labels(s: &str) -> bool {
+        // `key="value",key="value"` — values may contain anything but an
+        // unescaped quote (we never emit escapes, so reject them too).
+        s.split(',').all(|pair| match pair.split_once('=') {
+            Some((k, v)) => {
+                valid_name(k)
+                    && v.len() >= 2
+                    && v.starts_with('"')
+                    && v.ends_with('"')
+                    && !v[1..v.len() - 1].contains('"')
+            }
+            None => false,
+        })
+    }
+
+    let mut samples = 0usize;
+    let mut seen: Vec<&str> = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {}: no value separator: {raw:?}", ln + 1))?;
+        if value.parse::<f64>().is_err() && value != "+Inf" && value != "-Inf" {
+            return Err(format!("line {}: unparsable value {value:?}", ln + 1));
+        }
+        let name = match series.split_once('{') {
+            Some((name, rest)) => {
+                let labels = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {}: unterminated labels: {raw:?}", ln + 1))?;
+                if !valid_labels(labels) {
+                    return Err(format!("line {}: malformed labels {labels:?}", ln + 1));
+                }
+                name
+            }
+            None => series,
+        };
+        if !valid_name(name) {
+            return Err(format!("line {}: malformed metric name {name:?}", ln + 1));
+        }
+        samples += 1;
+        seen.push(name);
+    }
+    for want in METRIC_NAMES {
+        let prefix = format!("{want}_");
+        if !seen.iter().any(|n| n == want || n.starts_with(&prefix)) {
+            return Err(format!("documented series {want:?} missing from exposition"));
+        }
+    }
+    Ok(samples)
 }
 
 /// Items-per-second throughput meter.
@@ -481,6 +686,69 @@ mod tests {
         };
         assert!((snap.shed_fraction() - 0.5).abs() < 1e-12);
         assert_eq!(MetricsSnapshot::default().shed_fraction(), 0.0);
+    }
+
+    #[test]
+    fn prometheus_rendering_roundtrips_the_checker() {
+        let m = ServeMetrics::new();
+        for us in [40u64, 90, 90, 4000] {
+            m.record_request();
+            m.record_latency(Duration::from_micros(us));
+        }
+        let snap = MetricsSnapshot {
+            serve_requests_total: m.requests_total(),
+            serve_shed_total: 0,
+            serve_errors_total: 0,
+            request_latency_us: m.latency_snapshot(),
+            replicas: vec![ReplicaSnapshot {
+                replica: 0,
+                replica_requests_total: 4,
+                replica_queue_depth: 0,
+                max_inflight: 8,
+                overflow_fraction: 0.25,
+                load_imbalance: 1.5,
+                blocks: vec![BlockSeries {
+                    block: 0,
+                    overflow_fraction: 0.125,
+                    queries: 64,
+                    expert_queries: vec![40, 24],
+                }],
+            }],
+            simd_lane: "scalar".into(),
+        };
+        let text = render_prometheus(&snap);
+
+        // Histogram: buckets are cumulative, +Inf equals the count.
+        assert!(text.contains("request_latency_us_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("request_latency_us_count 4"), "{text}");
+        let cum: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("request_latency_us_bucket"))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "cumulative buckets: {cum:?}");
+
+        // Per-replica and per-block series carry their labels.
+        assert!(text.contains("replica_requests_total{replica=\"0\"} 4"), "{text}");
+        assert!(text.contains("mita_block_overflow_fraction{replica=\"0\",block=\"0\"} 0.125"));
+        assert!(text.contains("mita_expert_queries_total{replica=\"0\",block=\"0\",expert=\"1\"} 24"));
+        assert!(text.contains("simd_lane{lane=\"scalar\"} 1"), "{text}");
+
+        // The whole payload passes the grammar + coverage checker.
+        let samples = check_prometheus_text(&text).unwrap();
+        assert!(samples >= 12, "sample lines: {samples}");
+    }
+
+    #[test]
+    fn prometheus_checker_rejects_malformed_and_missing() {
+        assert!(check_prometheus_text("serve_requests_total").is_err(), "no value");
+        assert!(check_prometheus_text("1bad_name 3").is_err(), "bad name");
+        assert!(check_prometheus_text("x{le=\"0.1} 3").is_err(), "unterminated label");
+        assert!(check_prometheus_text("x{le} 3").is_err(), "label without value");
+        assert!(check_prometheus_text("x{} y").is_err(), "unparsable value");
+        // Grammar-clean but missing documented series.
+        let err = check_prometheus_text("serve_requests_total 1\n").unwrap_err();
+        assert!(err.contains("missing"), "{err}");
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //! - [`netserver`]: the network edge — a TCP HTTP/1.1 + JSON loop
 //!   mapping wire requests onto the typed service API over a
 //!   [`ReplicaPool`], plus the matching loopback [`NetClient`].
+//! - [`trace`]: end-to-end request tracing — per-request stage spans
+//!   (admission → route → queue → execute) plus per-block model
+//!   profiles, retained in a fixed-capacity ring behind `GET /v1/trace`.
 //! - [`trainer`]: the **PJRT-artifact** train-step driver with
 //!   loss-curve tracking (native training lives in [`crate::train`]).
 //! - [`checkpoint`]: flat-parameter save/load.
@@ -29,15 +32,22 @@ pub mod metrics;
 pub mod netserver;
 pub mod replica;
 pub mod server;
+pub mod trace;
 pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
 pub use engine::{Engine, EngineHandle, EngineStats, Ticket};
-pub use metrics::{HistogramSnapshot, METRIC_NAMES, MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
+pub use metrics::{
+    check_prometheus_text, render_prometheus, BlockSeries, HistogramSnapshot, MetricsSnapshot,
+    ReplicaSnapshot, ServeMetrics, METRIC_BLOCK_OVERFLOW, METRIC_EXPERT_QUERIES, METRIC_NAMES,
+};
 pub use netserver::{NetClient, NetServer, NetServerConfig};
 pub use replica::{PoolTicket, ReplicaPool, ReplicaPoolConfig};
 pub use server::{
     serve, serve_model, serve_native, serve_workload, ModelServeConfig, NativeServeConfig,
     ServeConfig, ServeReport, Workload, WorkloadSpec, DEFAULT_MAX_INFLIGHT,
+};
+pub use trace::{
+    next_trace_id, TraceRecord, TraceRing, TraceSpans, TraceStart, DEFAULT_TRACE_CAPACITY,
 };
 pub use trainer::{eval_checkpoint, EvalResult, StepRecord, Trainer};

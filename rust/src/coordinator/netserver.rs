@@ -27,14 +27,15 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::metrics::MetricsSnapshot;
+use crate::coordinator::metrics::{render_prometheus, MetricsSnapshot};
 use crate::coordinator::replica::ReplicaPool;
+use crate::coordinator::trace::{next_trace_id, TraceStart};
 use crate::data::rng::splitmix64;
-use crate::service::wire::{self, EP_HEALTH, EP_METRICS, EP_SHUTDOWN};
+use crate::service::wire::{self, EP_HEALTH, EP_METRICS, EP_SHUTDOWN, EP_TRACE};
 use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult};
 use crate::util::json::Value;
 
@@ -52,6 +53,13 @@ const MAX_CONNECTIONS: usize = 256;
 /// isn't RST away with unread bytes pending; past this many concurrent
 /// rejections the connection is dropped outright.
 const MAX_REJECT_DRAINS: usize = 32;
+/// Default `limit` for `GET /v1/trace` when the query omits it.
+const DEFAULT_TRACE_LIMIT: usize = 32;
+
+/// JSON content type (every endpoint except the Prometheus exposition).
+const CT_JSON: &str = "application/json";
+/// Prometheus text exposition format version 0.0.4.
+const CT_PROMETHEUS: &str = "text/plain; version=0.0.4";
 
 /// Network front configuration.
 #[derive(Debug, Clone)]
@@ -166,7 +174,7 @@ fn reject_over_capacity(stream: TcpStream, retry_hint_ms: u64) -> Result<()> {
     let err = ServiceError::overloaded(format!("connection capacity reached ({MAX_CONNECTIONS})"))
         .with_retry_after(retry_hint_ms);
     let body = wire::encode_error(&err).render();
-    let _ = write_http_response(&mut writer, err.http_status(), &body, false);
+    let _ = write_http_response(&mut writer, err.http_status(), &body, CT_JSON, false);
     if let Some(head) = head {
         let _ = std::io::copy(
             &mut (&mut reader).take(head.content_length as u64),
@@ -202,7 +210,7 @@ fn serve_connection(
     let reject = |writer: &mut TcpStream, e: &anyhow::Error| {
         let err = ServiceError::BadRequest(format!("malformed HTTP request: {e}"));
         let body = wire::encode_error(&err).render();
-        let _ = write_http_response(writer, err.http_status(), &body, false);
+        let _ = write_http_response(writer, err.http_status(), &body, CT_JSON, false);
     };
     loop {
         let head = match read_http_head(&mut reader) {
@@ -213,6 +221,11 @@ fn serve_connection(
                 return Err(e);
             }
         };
+        // The trace window opens the moment the head is parsed; body
+        // read + JSON decode land in the admission span.
+        let t0 = Instant::now();
+        let (path, query) = split_query(&head.path);
+        let (path, query) = (path.to_string(), query.to_string());
         // Admission before the body: a rejected request's (possibly
         // large) body is never buffered — answer 503 and close. Engine
         // service requests are POSTs to *known* non-admin endpoints;
@@ -222,15 +235,15 @@ fn serve_connection(
         // admission but gets a tiny body cap, so nothing smuggles a
         // large upload past the in-flight accounting.
         let is_service = head.method == "POST"
-            && head.path != EP_SHUTDOWN
-            && head.path != EP_METRICS
-            && wire::known_endpoints().contains(&head.path.as_str());
+            && path != EP_SHUTDOWN
+            && path != EP_METRICS
+            && wire::known_endpoints().contains(&path.as_str());
         // Reject without buffering: write the typed error, then *discard*
         // the declared body to a sink (O(1) memory) so closing the socket
         // doesn't RST the response out from under the client.
         let refuse = |writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, e: ServiceError| {
             let body = wire::encode_error(&e).render();
-            let _ = write_http_response(writer, e.http_status(), &body, false);
+            let _ = write_http_response(writer, e.http_status(), &body, CT_JSON, false);
             let _ = std::io::copy(
                 &mut reader.take(head.content_length as u64),
                 &mut std::io::sink(),
@@ -251,8 +264,8 @@ fn serve_connection(
         } else {
             if head.content_length > MAX_LOCAL_BODY_BYTES {
                 let err = ServiceError::BadRequest(format!(
-                    "endpoint {} takes no request body of {} bytes",
-                    head.path, head.content_length
+                    "endpoint {path} takes no request body of {} bytes",
+                    head.content_length
                 ));
                 refuse(&mut writer, &mut reader, err);
                 return Ok(());
@@ -266,9 +279,10 @@ fn serve_connection(
                 return Err(e);
             }
         };
-        let (status, resp) = route(pool, shutdown, &head.method, &head.path, &body);
+        let (status, resp, content_type) =
+            route(pool, shutdown, &head.method, &path, &query, &body, t0);
         drop(slot); // request fully served engine-side; release admission
-        write_http_response(&mut writer, status, &resp.render(), head.keep_alive)?;
+        write_http_response(&mut writer, status, &resp, content_type, head.keep_alive)?;
         if shutdown.load(Ordering::Acquire) {
             // Wake the accept loop so `run` can return. An unspecified
             // listen address (0.0.0.0/[::]) is not connectable on every
@@ -291,47 +305,122 @@ fn serve_connection(
     }
 }
 
+/// Split the query string off an HTTP request target.
+fn split_query(target: &str) -> (&str, &str) {
+    match target.split_once('?') {
+        Some((path, query)) => (path, query),
+        None => (target, ""),
+    }
+}
+
+/// Look up one `key=value` pair in a query string (no percent-decoding —
+/// the protocol's query values are plain integers and idents).
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        (k == key).then_some(v)
+    })
+}
+
+/// Parse an optional non-negative integer query parameter; a present but
+/// malformed value is a typed `bad_request`, not a silent default.
+fn query_usize(query: &str, key: &str) -> ServiceResult<Option<usize>> {
+    query_param(query, key)
+        .map(|v| {
+            v.parse::<usize>().map_err(|_| {
+                ServiceError::BadRequest(format!("query param {key}={v:?} is not a non-negative integer"))
+            })
+        })
+        .transpose()
+}
+
 /// Map one wire request onto the typed service API (admission already
-/// handled by the caller, which holds the in-flight slot).
+/// handled by the caller, which holds the in-flight slot). Returns the
+/// status, the rendered body, and its content type — everything is JSON
+/// except the Prometheus exposition of the metrics surface.
 fn route(
     pool: &ReplicaPool,
     shutdown: &AtomicBool,
     method: &str,
     path: &str,
+    query: &str,
     body: &str,
-) -> (u16, Value) {
+    t0: Instant,
+) -> (u16, String, &'static str) {
+    let json = |status: u16, v: Value| (status, v.render(), CT_JSON);
     match (method, path) {
-        ("GET", EP_HEALTH) => (200, ok_body(&[("status", Value::str("ok"))])),
+        ("GET", EP_HEALTH) => json(200, ok_body(&[("status", Value::str("ok"))])),
         // Telemetry answers plain GET (curl-friendly, body-less) as well
-        // as the typed POST below.
-        ("GET", EP_METRICS) => {
-            (200, wire::encode_response(&ServiceResponse::Metrics(pool.snapshot())))
-        }
+        // as the typed POST below; `?format=prometheus` switches to text
+        // exposition for scrapers.
+        ("GET", EP_METRICS) => match query_param(query, "format") {
+            Some("prometheus") => (200, render_prometheus(&pool.snapshot()), CT_PROMETHEUS),
+            Some(other) => {
+                let e = ServiceError::BadRequest(format!(
+                    "unknown metrics format {other:?} (want \"prometheus\" or no format param)"
+                ));
+                json(e.http_status(), wire::encode_error(&e))
+            }
+            None => json(200, wire::encode_response(&ServiceResponse::Metrics(pool.snapshot()))),
+        },
+        ("GET", EP_TRACE) => match trace_body(pool, query) {
+            Ok(v) => json(200, v),
+            Err(e) => json(e.http_status(), wire::encode_error(&e)),
+        },
         ("POST", EP_SHUTDOWN) => {
             shutdown.store(true, Ordering::Release);
-            (200, ok_body(&[("status", Value::str("shutting down"))]))
+            json(200, ok_body(&[("status", Value::str("shutting down"))]))
         }
-        ("POST", _) => match handle_service(pool, path, body) {
-            Ok(resp) => (200, wire::encode_response(&resp)),
-            Err(e) => (e.http_status(), wire::encode_error(&e)),
+        ("POST", _) => match handle_service(pool, path, body, t0) {
+            Ok((resp, trace_id)) => {
+                json(200, wire::with_trace_id(wire::encode_response(&resp), trace_id))
+            }
+            Err(e) => json(e.http_status(), wire::encode_error(&e)),
         },
         (m, p) => {
             let e = ServiceError::BadRequest(format!(
                 "no route {m} {p} (endpoints: {})",
                 wire::known_endpoints().join(", ")
             ));
-            (e.http_status(), wire::encode_error(&e))
+            json(e.http_status(), wire::encode_error(&e))
         }
     }
 }
 
-fn handle_service(pool: &ReplicaPool, path: &str, body: &str) -> ServiceResult<ServiceResponse> {
+/// Assemble the `GET /v1/trace` payload: newest-first records from the
+/// pool's ring, filtered by the `limit` / `min_us` query params.
+fn trace_body(pool: &ReplicaPool, query: &str) -> ServiceResult<Value> {
+    let limit = query_usize(query, "limit")?.unwrap_or(DEFAULT_TRACE_LIMIT);
+    let min_us = query_usize(query, "min_us")?.unwrap_or(0) as u64;
+    let ring = pool.traces();
+    let traces: Vec<Value> = ring.export(limit, min_us).iter().map(|r| r.to_json()).collect();
+    Ok(ok_body(&[
+        ("traces", Value::Arr(traces)),
+        ("capacity", Value::num(ring.capacity() as f64)),
+        ("pushed", Value::num(ring.pushed() as f64)),
+    ]))
+}
+
+/// Parse + execute one service request. The trace id — client-supplied
+/// `trace_id` in the body, or freshly allocated — is returned so the
+/// caller can echo it; the [`TraceStart`] hands the id plus the
+/// admission span (head parse → typed request) to the pool, which
+/// records the full stage breakdown on settlement.
+fn handle_service(
+    pool: &ReplicaPool,
+    path: &str,
+    body: &str,
+    t0: Instant,
+) -> ServiceResult<(ServiceResponse, u64)> {
     let parsed = Value::parse(body)
         .map_err(|e| ServiceError::BadRequest(format!("malformed JSON body: {e}")))?;
     let req = wire::parse_request(path, &parsed)?;
-    let resp = pool.call(req)?;
+    let trace_id = wire::request_trace_id(&parsed).unwrap_or_else(next_trace_id);
+    let start =
+        TraceStart { trace_id, t0, admission_ns: t0.elapsed().as_nanos() as u64 };
+    let resp = pool.call_traced(req, Some(start))?;
     wire::check_encodable(&resp)?;
-    Ok(resp)
+    Ok((resp, trace_id))
 }
 
 fn ok_body(extra: &[(&str, Value)]) -> Value {
@@ -420,6 +509,7 @@ fn write_http_response(
     w: &mut impl Write,
     status: u16,
     body: &str,
+    content_type: &str,
     keep_alive: bool,
 ) -> Result<()> {
     let reason = match status {
@@ -432,7 +522,7 @@ fn write_http_response(
     };
     write!(
         w,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     )?;
@@ -528,6 +618,47 @@ impl NetClient {
             return Err(ServiceError::Unavailable(msg));
         }
         Ok(text)
+    }
+
+    /// Fetch `/v1/metrics?format=prometheus` as text exposition (status
+    /// checked; the caller validates the grammar if it cares).
+    pub fn metrics_prometheus(&self) -> ServiceResult<String> {
+        let (status, text) = self.http("GET", &format!("{EP_METRICS}?format=prometheus"), "")?;
+        if status != 200 {
+            if let Ok(parsed) = Value::parse(&text) {
+                wire::parse_response(&parsed)?;
+            }
+            return Err(ServiceError::Unavailable(format!("{}: HTTP {status}: {text}", self.addr)));
+        }
+        Ok(text)
+    }
+
+    /// Fetch `GET /v1/trace` as raw wire text. `limit`/`min_us` map to
+    /// the query params; `None` leaves the server defaults in place.
+    pub fn trace_raw(&self, limit: Option<usize>, min_us: Option<u64>) -> ServiceResult<String> {
+        let mut path = format!("{EP_TRACE}?");
+        if let Some(l) = limit {
+            path.push_str(&format!("limit={l}&"));
+        }
+        if let Some(t) = min_us {
+            path.push_str(&format!("min_us={t}&"));
+        }
+        let path = path.trim_end_matches(|c| c == '&' || c == '?');
+        let (status, text) = self.http("GET", path, "")?;
+        if status != 200 {
+            if let Ok(parsed) = Value::parse(&text) {
+                wire::parse_response(&parsed)?;
+            }
+            return Err(ServiceError::Unavailable(format!("{}: HTTP {status}: {text}", self.addr)));
+        }
+        Ok(text)
+    }
+
+    /// Raw HTTP access for tests and probes that need the unparsed body
+    /// (e.g. reading the echoed `trace_id`, which the typed decoder
+    /// deliberately ignores).
+    pub fn http_raw(&self, method: &str, path: &str, body: &str) -> ServiceResult<(u16, String)> {
+        self.http(method, path, body)
     }
 
     /// Liveness probe.
@@ -649,11 +780,33 @@ mod tests {
     #[test]
     fn http_response_format() {
         let mut buf = Vec::new();
-        write_http_response(&mut buf, 503, "{\"x\":1}", false).unwrap();
+        write_http_response(&mut buf, 503, "{\"x\":1}", CT_JSON, false).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Content-Type: application/json\r\n"));
         assert!(text.contains("Content-Length: 7\r\n"));
         assert!(text.contains("Connection: close"));
         assert!(text.ends_with("{\"x\":1}"));
+
+        // The Prometheus exposition goes out as versioned text/plain.
+        let mut buf = Vec::new();
+        write_http_response(&mut buf, 200, "up 1\n", CT_PROMETHEUS, true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4\r\n"));
+        assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn query_split_and_params() {
+        assert_eq!(split_query("/v1/trace?limit=5&min_us=100"), ("/v1/trace", "limit=5&min_us=100"));
+        assert_eq!(split_query("/v1/metrics"), ("/v1/metrics", ""));
+        let q = "limit=5&min_us=100&format=prometheus";
+        assert_eq!(query_param(q, "limit"), Some("5"));
+        assert_eq!(query_param(q, "format"), Some("prometheus"));
+        assert_eq!(query_param(q, "absent"), None);
+        assert_eq!(query_usize(q, "min_us").unwrap(), Some(100));
+        assert_eq!(query_usize("", "limit").unwrap(), None);
+        assert_eq!(query_usize("limit=-3", "limit").unwrap_err().code(), "bad_request");
+        assert_eq!(query_usize("limit=x", "limit").unwrap_err().code(), "bad_request");
     }
 }

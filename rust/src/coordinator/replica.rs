@@ -27,8 +27,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::coordinator::engine::{Engine, EngineHandle, Ticket};
-use crate::coordinator::metrics::{MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
+use crate::coordinator::engine::{Engine, EngineHandle, ExecProfile, Ticket};
+use crate::coordinator::metrics::{BlockSeries, MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
+use crate::coordinator::trace::{TraceRecord, TraceRing, TraceSpans, TraceStart};
+use crate::kernels::api::merge_block_profiles;
 use crate::kernels::MitaStats;
 use crate::runtime::BackendSpec;
 use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult, ServiceStats};
@@ -72,6 +74,9 @@ pub struct ReplicaPool {
     rr: AtomicUsize,
     cfg: ReplicaPoolConfig,
     metrics: Arc<ServeMetrics>,
+    /// Completed request traces, newest-overwrites-oldest; exported via
+    /// `GET /v1/trace`.
+    traces: TraceRing,
 }
 
 impl ReplicaPool {
@@ -100,6 +105,7 @@ impl ReplicaPool {
             rr: AtomicUsize::new(0),
             cfg,
             metrics: Arc::new(ServeMetrics::new()),
+            traces: TraceRing::default(),
         })
     }
 
@@ -144,15 +150,12 @@ impl ReplicaPool {
         for &i in &order {
             let r = &self.replicas[i];
             // Reserve atomically against the cap (depths move under us).
-            let reserved = r
-                .outstanding
-                .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |o| {
-                    (o < self.cfg.max_inflight).then_some(o + 1)
-                })
-                .is_ok();
-            if !reserved {
-                continue;
-            }
+            let depth = match r.outstanding.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |o| {
+                (o < self.cfg.max_inflight).then_some(o + 1)
+            }) {
+                Ok(prev) => prev + 1,
+                Err(_) => continue,
+            };
             let inner = match r.handle.submit(req) {
                 Ok(t) => t,
                 Err(e) => {
@@ -167,6 +170,7 @@ impl ReplicaPool {
             return Ok(PoolTicket {
                 inner: Some(inner),
                 replica: i,
+                depth_at_route: depth,
                 issued: Instant::now(),
                 outstanding: Arc::clone(&r.outstanding),
                 metrics: Arc::clone(&self.metrics),
@@ -192,6 +196,21 @@ impl ReplicaPool {
     ///   MiTA routing stats merged);
     /// - compute classes route through [`ReplicaPool::submit`].
     pub fn call(&self, req: ServiceRequest) -> ServiceResult<ServiceResponse> {
+        self.call_traced(req, None)
+    }
+
+    /// [`ReplicaPool::call`] with tracing: when `start` carries a
+    /// [`TraceStart`] from the network edge, a compute request's stage
+    /// spans (route / queue / execute, plus the admission span already
+    /// measured by the caller) and per-block profile are recorded into
+    /// the trace ring on settlement. Control-plane requests (binds,
+    /// stats, metrics) are never traced; tracing is observation-only and
+    /// does not alter routing, results, or metrics.
+    pub fn call_traced(
+        &self,
+        req: ServiceRequest,
+        start: Option<TraceStart>,
+    ) -> ServiceResult<ServiceResponse> {
         match req {
             ServiceRequest::Metrics => Ok(ServiceResponse::Metrics(self.snapshot())),
             ServiceRequest::BindCheckpoint { .. } | ServiceRequest::BindInit { .. } => {
@@ -216,12 +235,48 @@ impl ReplicaPool {
                             Some(acc) => acc.merge(&m),
                         }
                     }
+                    merge_block_profiles(&mut agg.blocks, &s.blocks);
                 }
                 agg.mita = mita;
                 Ok(ServiceResponse::Stats(agg))
             }
-            other => self.submit(other)?.wait(),
+            other => {
+                let kind = other.kind();
+                let route_t = Instant::now();
+                let ticket = self.submit(other)?;
+                let route_ns = route_t.elapsed().as_nanos() as u64;
+                let (replica, depth) = (ticket.replica(), ticket.depth_at_route());
+                let wait_t = Instant::now();
+                let (result, prof) = ticket.wait_profiled();
+                if let Some(s) = start {
+                    // Queue time is what the engine-side wait cost beyond
+                    // the execute itself (reply-channel hop included).
+                    let wait_ns = wait_t.elapsed().as_nanos() as u64;
+                    self.traces.push(TraceRecord {
+                        trace_id: s.trace_id,
+                        kind,
+                        replica,
+                        queue_depth: depth,
+                        ok: result.is_ok(),
+                        spans: TraceSpans {
+                            admission_ns: s.admission_ns,
+                            route_ns,
+                            queue_ns: wait_ns.saturating_sub(prof.execute_ns),
+                            batch_ns: 0,
+                            execute_ns: prof.execute_ns,
+                            total_ns: s.t0.elapsed().as_nanos() as u64,
+                        },
+                        blocks: prof.blocks,
+                    });
+                }
+                result
+            }
         }
+    }
+
+    /// The pool's trace ring (`GET /v1/trace` reads it through here).
+    pub fn traces(&self) -> &TraceRing {
+        &self.traces
     }
 
     /// Assemble the `/v1/metrics` payload: pool counters, the latency
@@ -233,13 +288,31 @@ impl ReplicaPool {
             .iter()
             .enumerate()
             .map(|(i, r)| {
-                let (overflow_fraction, load_imbalance) = r
-                    .handle
-                    .backend_stats()
-                    .ok()
-                    .and_then(|s| s.mita)
+                let stats = r.handle.backend_stats().ok();
+                let (overflow_fraction, load_imbalance) = stats
+                    .as_ref()
+                    .and_then(|s| s.mita.as_ref())
                     .map(|m| (m.overflow_fraction(), m.load_imbalance()))
                     .unwrap_or((0.0, 0.0));
+                let blocks = stats
+                    .map(|s| {
+                        s.blocks
+                            .iter()
+                            .enumerate()
+                            .map(|(bi, b)| BlockSeries {
+                                block: bi as u64,
+                                overflow_fraction: b.stats.overflow_fraction(),
+                                queries: b.stats.queries as u64,
+                                expert_queries: b
+                                    .stats
+                                    .expert_counts
+                                    .iter()
+                                    .map(|&c| c as u64)
+                                    .collect(),
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default();
                 ReplicaSnapshot {
                     replica: i as u64,
                     replica_requests_total: r.requests_total.load(Ordering::Relaxed),
@@ -247,6 +320,7 @@ impl ReplicaPool {
                     max_inflight: self.cfg.max_inflight as u64,
                     overflow_fraction,
                     load_imbalance,
+                    blocks,
                 }
             })
             .collect();
@@ -274,6 +348,9 @@ impl ReplicaPool {
 pub struct PoolTicket {
     inner: Option<Ticket>,
     replica: usize,
+    /// Replica queue depth right after this request reserved its slot
+    /// (so ≥ 1; includes the request itself).
+    depth_at_route: usize,
     issued: Instant,
     outstanding: Arc<AtomicUsize>,
     metrics: Arc<ServeMetrics>,
@@ -286,12 +363,26 @@ impl PoolTicket {
         self.replica
     }
 
+    /// The routed replica's outstanding depth at reservation time.
+    pub fn depth_at_route(&self) -> usize {
+        self.depth_at_route
+    }
+
     /// Block until the request completes.
     pub fn wait(mut self) -> ServiceResult<ServiceResponse> {
         let ticket = self.inner.take().expect("pool ticket already redeemed");
         let result = ticket.wait();
         self.settle(&result);
         result
+    }
+
+    /// [`PoolTicket::wait`] plus the engine-side [`ExecProfile`]
+    /// (execute wall time and, for model forwards, per-block timings).
+    pub fn wait_profiled(mut self) -> (ServiceResult<ServiceResponse>, ExecProfile) {
+        let ticket = self.inner.take().expect("pool ticket already redeemed");
+        let (result, profile) = ticket.wait_profiled();
+        self.settle(&result);
+        (result, profile)
     }
 
     /// Non-blocking completion check; `None` while still executing. Once
@@ -301,6 +392,16 @@ impl PoolTicket {
         self.inner = None;
         self.settle(&result);
         Some(result)
+    }
+
+    /// [`PoolTicket::try_wait`] plus the engine-side [`ExecProfile`] —
+    /// the polling-loop variant open-loop harnesses use to derive stage
+    /// breakdowns without blocking the arrival schedule.
+    pub fn try_wait_profiled(&mut self) -> Option<(ServiceResult<ServiceResponse>, ExecProfile)> {
+        let (result, profile) = self.inner.as_mut()?.try_wait_profiled()?;
+        self.inner = None;
+        self.settle(&result);
+        Some((result, profile))
     }
 
     fn settle(&mut self, result: &ServiceResult<ServiceResponse>) {
@@ -398,6 +499,74 @@ mod tests {
         assert_eq!(snap.replicas[0].replica_queue_depth, 0);
         assert_eq!(snap.serve_requests_total, 3);
         assert_eq!(snap.serve_shed_total, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn traced_calls_record_spans_and_per_block_series() {
+        use crate::kernels::OP_ATTN_MITA;
+        use crate::model::{ModelConfig, OP_MODEL_INIT};
+        use crate::service::BindingId;
+
+        let mcfg = ModelConfig::new(7, 16, 8, 2, 2, 16, 3, OP_ATTN_MITA);
+        let spec =
+            BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2).with_model(mcfg.clone()));
+        let cfg = ReplicaPoolConfig { replicas: 1, max_inflight: 4, retry_after_ms: 5 };
+        let p = ReplicaPool::spawn(spec, vec![], cfg).unwrap();
+        p.call(ServiceRequest::BindInit {
+            binding: BindingId::from("m"),
+            init_op: OP_MODEL_INIT.to_string(),
+            seed: 1,
+            param_count: 0,
+        })
+        .unwrap();
+
+        let mut rng = Rng::new(3);
+        let toks: Vec<i32> = (0..16).map(|_| rng.below(7) as i32).collect();
+        let forward = ServiceRequest::ModelForward {
+            binding: BindingId::from("m"),
+            tokens: Tensor::i32(&[1, 16], toks).unwrap(),
+            valid_rows: None,
+        };
+        let start = TraceStart::begin().admitted();
+        let forward_id = start.trace_id;
+        p.call_traced(forward, Some(start)).unwrap();
+        let start = TraceStart::begin().admitted();
+        let attn_id = start.trace_id;
+        p.call_traced(attn_request(1), Some(start)).unwrap();
+
+        let recs = p.traces().export(usize::MAX, 0);
+        assert_eq!(recs.len(), 2, "both traced requests recorded");
+        // Newest first: the attention request, with no block structure.
+        assert_eq!(recs[0].trace_id, attn_id);
+        assert_eq!(recs[0].kind, "attention");
+        assert!(recs[0].blocks.is_empty());
+        // The model forward carries spans + one profile per block.
+        let mf = &recs[1];
+        assert_eq!((mf.trace_id, mf.kind, mf.replica), (forward_id, "model_forward", 0));
+        assert_eq!(mf.queue_depth, 1, "only request outstanding at reservation");
+        assert!(mf.ok);
+        assert!(mf.spans.execute_ns > 0);
+        let staged = mf.spans.admission_ns
+            + mf.spans.route_ns
+            + mf.spans.queue_ns
+            + mf.spans.batch_ns
+            + mf.spans.execute_ns;
+        assert!(staged <= mf.spans.total_ns, "stages {staged} ≤ wall {}", mf.spans.total_ns);
+        assert_eq!(mf.blocks.len(), mcfg.depth);
+        assert!(mf.blocks.iter().all(|b| b.attn_ns > 0 && b.stats.queries > 0));
+
+        // The metrics snapshot now exposes per-block routing series, and
+        // their query counts partition the replica's MiTA totals.
+        let snap = p.snapshot();
+        assert_eq!(snap.replicas[0].blocks.len(), mcfg.depth);
+        let block_queries: u64 = snap.replicas[0].blocks.iter().map(|b| b.queries).sum();
+        assert!(block_queries > 0);
+        assert!(!snap.replicas[0].blocks[0].expert_queries.is_empty());
+
+        // Untraced calls leave the ring untouched.
+        p.call(attn_request(2)).unwrap();
+        assert_eq!(p.traces().pushed(), 2);
         p.shutdown();
     }
 

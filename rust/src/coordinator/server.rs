@@ -37,6 +37,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::{BatchPolicy, Batcher, Flush};
 use crate::coordinator::engine::{EngineHandle, Ticket};
 use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::trace::next_trace_id;
 use crate::data::rng::Rng;
 use crate::data::{lra, BatchSource, Split};
 use crate::kernels::MitaStats;
@@ -165,11 +166,18 @@ pub struct ServeReport {
     pub queue_mean_ms: f64,
     pub queue_p50_ms: f64,
     pub queue_p95_ms: f64,
+    pub queue_p99_ms: f64,
     /// Execute component (dispatch → completion): engine queue + backend
     /// execution of the request's batch.
     pub exec_mean_ms: f64,
     pub exec_p50_ms: f64,
     pub exec_p95_ms: f64,
+    pub exec_p99_ms: f64,
+    /// Trace id of the slowest completed request (end-to-end latency) in
+    /// this run's window — the id to look up under `GET /v1/trace` when
+    /// serving through the network edge, or to correlate with logs.
+    /// `None` when no request completed.
+    pub slowest_trace_id: Option<u64>,
     pub batches: u64,
     pub pad_fraction: f64,
     /// MiTA routing statistics accumulated over this run (native backend
@@ -181,7 +189,7 @@ pub struct ServeReport {
 impl ServeReport {
     pub fn row(&self) -> String {
         let mut row = format!(
-            "{:24} reqs={:5} rej={:4} thru={:8.1}/s mean={:7.2}ms p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms qwait={:6.2}/{:6.2}ms exec={:6.2}/{:6.2}ms batches={:5} pad={:4.1}%",
+            "{:24} reqs={:5} rej={:4} thru={:8.1}/s mean={:7.2}ms p50={:7.2}ms p95={:7.2}ms p99={:7.2}ms qwait={:6.2}/{:6.2}/{:6.2}ms exec={:6.2}/{:6.2}/{:6.2}ms batches={:5} pad={:4.1}%",
             self.bundle,
             self.completed,
             self.rejected,
@@ -192,11 +200,17 @@ impl ServeReport {
             self.p99_ms,
             self.queue_p50_ms,
             self.queue_p95_ms,
+            self.queue_p99_ms,
             self.exec_p50_ms,
             self.exec_p95_ms,
+            self.exec_p99_ms,
             self.batches,
             self.pad_fraction * 100.0
         );
+        if let Some(id) = self.slowest_trace_id {
+            // The slowest end-to-end request of the window, by trace id.
+            let _ = write!(row, " slow=#{id}");
+        }
         if let Some(m) = &self.mita {
             if m.queries > 0 {
                 // ovf: fraction of queries served by the capacity-overflow
@@ -216,6 +230,9 @@ impl ServeReport {
 struct Request {
     /// Example index into the pre-generated input pool.
     example: u64,
+    /// Trace id from the process-wide allocator — the same id space the
+    /// network edge uses, so report rows correlate with `/v1/trace`.
+    trace_id: u64,
     issued: Instant,
 }
 
@@ -299,6 +316,7 @@ fn settle(
     label: &str,
     hists: &mut Hists,
     completed: &mut usize,
+    slowest: &mut Option<(Duration, u64)>,
 ) -> Result<()> {
     let resp = result.with_context(|| format!("serving {label}"))?;
     let outs = resp.into_tensors();
@@ -311,9 +329,13 @@ fn settle(
     let finish = Instant::now();
     let exec = finish.duration_since(dispatched);
     for r in &members {
+        let total = finish.duration_since(r.issued);
         hists.queue.record(dispatched.duration_since(r.issued));
         hists.exec.record(exec);
-        hists.total.record(finish.duration_since(r.issued));
+        hists.total.record(total);
+        if slowest.map_or(true, |(worst, _)| total > worst) {
+            *slowest = Some((total, r.trace_id));
+        }
     }
     *completed += members.len();
     Ok(())
@@ -362,7 +384,9 @@ pub fn serve_workload(
                 continue;
             }
             gen_depth.fetch_add(1, Ordering::AcqRel);
-            if tx.send(Request { example: i as u64, issued: Instant::now() }).is_err() {
+            let req =
+                Request { example: i as u64, trace_id: next_trace_id(), issued: Instant::now() };
+            if tx.send(req).is_err() {
                 break;
             }
         }
@@ -378,6 +402,7 @@ pub fn serve_workload(
     };
     let mut inflight: VecDeque<InFlightBatch> = VecDeque::new();
     let mut completed = 0usize;
+    let mut slowest: Option<(Duration, u64)> = None;
     let t0 = Instant::now();
     let mut open = true;
 
@@ -390,7 +415,15 @@ pub fn serve_workload(
                 Some(result) => {
                     let InFlightBatch { dispatched, members, .. } =
                         inflight.pop_front().expect("front exists");
-                    settle(dispatched, members, result, spec.label, &mut hists, &mut completed)?;
+                    settle(
+                        dispatched,
+                        members,
+                        result,
+                        spec.label,
+                        &mut hists,
+                        &mut completed,
+                        &mut slowest,
+                    )?;
                 }
                 None => break,
             }
@@ -399,7 +432,15 @@ pub fn serve_workload(
         if inflight.len() >= spec.max_inflight {
             let InFlightBatch { ticket, dispatched, members } =
                 inflight.pop_front().expect("non-empty");
-            settle(dispatched, members, ticket.wait(), spec.label, &mut hists, &mut completed)?;
+            settle(
+                dispatched,
+                members,
+                ticket.wait(),
+                spec.label,
+                &mut hists,
+                &mut completed,
+                &mut slowest,
+            )?;
             continue;
         }
         match batcher.poll(Instant::now()) {
@@ -435,6 +476,7 @@ pub fn serve_workload(
                             spec.label,
                             &mut hists,
                             &mut completed,
+                            &mut slowest,
                         )?;
                     }
                     continue;
@@ -476,9 +518,12 @@ pub fn serve_workload(
         queue_mean_ms: hists.queue.mean() * 1e3,
         queue_p50_ms: hists.queue.percentile(50.0) * 1e3,
         queue_p95_ms: hists.queue.percentile(95.0) * 1e3,
+        queue_p99_ms: hists.queue.percentile(99.0) * 1e3,
         exec_mean_ms: hists.exec.mean() * 1e3,
         exec_p50_ms: hists.exec.percentile(50.0) * 1e3,
         exec_p95_ms: hists.exec.percentile(95.0) * 1e3,
+        exec_p99_ms: hists.exec.percentile(99.0) * 1e3,
+        slowest_trace_id: slowest.map(|(_, id)| id),
         batches: batcher.batches_emitted,
         pad_fraction: batcher.pad_fraction(),
         mita,
@@ -600,6 +645,41 @@ pub fn serve_model(engine: &EngineHandle, cfg: &ModelServeConfig) -> Result<Serv
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn report_row_prints_p99_and_slowest_trace_id() {
+        let report = ServeReport {
+            bundle: "native/attn.mita n=64".into(),
+            completed: 100,
+            rejected: 2,
+            elapsed_secs: 1.0,
+            throughput_rps: 100.0,
+            mean_ms: 4.0,
+            p50_ms: 3.0,
+            p95_ms: 8.0,
+            p99_ms: 12.5,
+            queue_mean_ms: 1.0,
+            queue_p50_ms: 0.5,
+            queue_p95_ms: 2.0,
+            queue_p99_ms: 3.5,
+            exec_mean_ms: 3.0,
+            exec_p50_ms: 2.5,
+            exec_p95_ms: 6.0,
+            exec_p99_ms: 9.0,
+            slowest_trace_id: Some(41),
+            batches: 13,
+            pad_fraction: 0.04,
+            mita: None,
+        };
+        let row = report.row();
+        assert!(row.contains("p99=  12.50ms"), "total p99 missing: {row}");
+        assert!(row.contains("qwait=  0.50/  2.00/  3.50ms"), "queue p50/p95/p99 missing: {row}");
+        assert!(row.contains("exec=  2.50/  6.00/  9.00ms"), "exec p50/p95/p99 missing: {row}");
+        assert!(row.contains("slow=#41"), "slowest trace id missing: {row}");
+
+        let anonymous = ServeReport { slowest_trace_id: None, ..report };
+        assert!(!anonymous.row().contains("slow="), "no trace id when nothing completed");
+    }
 
     #[test]
     fn pack_batch_pads_with_first_example() {

@@ -1,0 +1,316 @@
+//! End-to-end request tracing: stage spans + per-block model profiles.
+//!
+//! Every service request admitted over the network edge gets a unique
+//! `trace_id` (client-supplied or allocated at parse time). As the
+//! request moves through the fixed stages of the serving path —
+//! netserver admission, replica routing, engine queue wait, backend
+//! execute — each stage's wall time is recorded into a [`TraceSpans`].
+//! Model-forward requests additionally carry one
+//! [`BlockProfile`](crate::kernels::api::BlockProfile) per transformer
+//! block (attention vs MLP time, per-block MiTA routing stats).
+//!
+//! Completed traces land in a [`TraceRing`]: a fixed-capacity,
+//! oldest-first-evicting buffer owned by the replica pool and exported
+//! via `GET /v1/trace?limit=N&min_us=T`. Tracing is observation-only:
+//! it never changes routing, batching, or response payloads beyond the
+//! echoed `trace_id`.
+//!
+//! Design notes:
+//! - Slot allocation is lock-free (`fetch_add` on a cursor; slot =
+//!   seq % capacity), so concurrent completions never contend on a
+//!   global lock — only on the (distinct) slot they were assigned.
+//! - Spans are stored in nanoseconds and exported as microsecond
+//!   floats, matching the `*_us` convention of `/v1/metrics`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::kernels::api::BlockProfile;
+use crate::util::json::Value;
+
+/// Default number of completed traces retained by a [`TraceRing`].
+pub const DEFAULT_TRACE_CAPACITY: usize = 256;
+
+/// Process-wide trace-id allocator. Starts at 1 so 0 can mean "no
+/// trace" in contexts that need a sentinel.
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate the next unique trace id (process-wide, monotone).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The identity and admission timing the network edge captures before
+/// handing a request to the replica pool
+/// ([`ReplicaPool::call_traced`](crate::coordinator::replica::ReplicaPool::call_traced)).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceStart {
+    /// Client-supplied or freshly allocated id, echoed in the response.
+    pub trace_id: u64,
+    /// When the HTTP head finished parsing — the origin of `total_ns`.
+    pub t0: Instant,
+    /// Body read + JSON decode time up to the pool hand-off.
+    pub admission_ns: u64,
+}
+
+impl TraceStart {
+    /// Begin a trace window now with a fresh id; the admission span is
+    /// filled in by [`TraceStart::admitted`] once decode finishes.
+    pub fn begin() -> Self {
+        TraceStart { trace_id: next_trace_id(), t0: Instant::now(), admission_ns: 0 }
+    }
+
+    /// Close the admission span (head parse → typed request in hand).
+    pub fn admitted(mut self) -> Self {
+        self.admission_ns = self.t0.elapsed().as_nanos() as u64;
+        self
+    }
+
+    /// Adopt a client-supplied trace id (it still must be echoed).
+    pub fn with_id(mut self, trace_id: u64) -> Self {
+        self.trace_id = trace_id;
+        self
+    }
+}
+
+/// Wall time spent in each fixed stage of the serving path, in
+/// nanoseconds. Stages are disjoint, so their sum is ≤ `total_ns`
+/// (the remainder is unattributed glue: reply-channel hops, JSON
+/// encoding started after the span window closed, etc.).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceSpans {
+    /// Netserver: HTTP head+body read and JSON decode, up to the
+    /// moment the request is handed to the replica pool.
+    pub admission_ns: u64,
+    /// Replica pool: replica selection + admission-slot reservation.
+    pub route_ns: u64,
+    /// Engine: time the job sat in the engine's queue before the
+    /// backend picked it up (wait wall time minus execute time).
+    pub queue_ns: u64,
+    /// Batcher: time spent waiting for a batch to fill. Zero on the
+    /// TCP path, where requests are submitted individually.
+    pub batch_ns: u64,
+    /// Backend: the execute call itself, bracketed on the engine
+    /// thread.
+    pub execute_ns: u64,
+    /// End-to-end wall time over the span window (head parsed →
+    /// response settled).
+    pub total_ns: u64,
+}
+
+/// One completed, traced request.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceRecord {
+    /// Unique id, echoed to the client in the response body.
+    pub trace_id: u64,
+    /// Request kind (`ServiceRequest::kind()`: "attention",
+    /// "model_forward", ...).
+    pub kind: &'static str,
+    /// Replica index the request was routed to.
+    pub replica: usize,
+    /// That replica's outstanding-request depth at reservation time
+    /// (includes this request).
+    pub queue_depth: usize,
+    /// Whether the backend returned a success response.
+    pub ok: bool,
+    /// Per-stage wall times.
+    pub spans: TraceSpans,
+    /// Per-block attention/MLP timings + MiTA routing stats; empty
+    /// for non-model requests.
+    pub blocks: Vec<BlockProfile>,
+}
+
+impl TraceRecord {
+    /// Render as a JSON object with deterministic key order (the
+    /// renderer sorts keys). Spans come out as `*_us` floats.
+    pub fn to_json(&self) -> Value {
+        let us = |ns: u64| Value::Num(ns as f64 / 1000.0);
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (bi, b) in self.blocks.iter().enumerate() {
+            let experts: Vec<Value> =
+                b.stats.expert_counts.iter().map(|&c| Value::Num(c as f64)).collect();
+            blocks.push(Value::obj(vec![
+                ("block", Value::Num(bi as f64)),
+                ("attn_us", us(b.attn_ns)),
+                ("mlp_us", us(b.mlp_ns)),
+                ("queries", Value::Num(b.stats.queries as f64)),
+                ("overflow_fraction", Value::Num(b.stats.overflow_fraction())),
+                ("expert_queries", Value::Arr(experts)),
+            ]));
+        }
+        Value::obj(vec![
+            ("trace_id", Value::Num(self.trace_id as f64)),
+            ("kind", Value::str(self.kind)),
+            ("replica", Value::Num(self.replica as f64)),
+            ("queue_depth", Value::Num(self.queue_depth as f64)),
+            ("ok", Value::Bool(self.ok)),
+            (
+                "spans",
+                Value::obj(vec![
+                    ("admission_us", us(self.spans.admission_ns)),
+                    ("route_us", us(self.spans.route_ns)),
+                    ("queue_us", us(self.spans.queue_ns)),
+                    ("batch_us", us(self.spans.batch_ns)),
+                    ("execute_us", us(self.spans.execute_ns)),
+                    ("total_us", us(self.spans.total_ns)),
+                ]),
+            ),
+            ("blocks", Value::Arr(blocks)),
+        ])
+    }
+}
+
+/// Fixed-capacity ring of completed traces. Pushes allocate a slot
+/// with a single atomic `fetch_add`; once the cursor wraps, new
+/// records overwrite the oldest (eviction is oldest-first by
+/// construction). Export walks the slots, sorts by sequence number
+/// descending (newest first), and applies `min_us` / `limit` filters.
+#[derive(Debug)]
+pub struct TraceRing {
+    /// `(seq, record)` per slot; `seq` disambiguates wrap-around so
+    /// export can order records globally.
+    slots: Vec<Mutex<Option<(u64, TraceRecord)>>>,
+    cursor: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever pushed (not the retained count).
+    pub fn pushed(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Record a completed trace, evicting the oldest record once the
+    /// ring is full.
+    pub fn push(&self, record: TraceRecord) {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        *self.slots[slot].lock().unwrap() = Some((seq, record));
+    }
+
+    /// Snapshot retained traces, newest first. `min_us` drops records
+    /// whose total wall time is below the threshold; `limit` caps the
+    /// result length after filtering.
+    pub fn export(&self, limit: usize, min_us: u64) -> Vec<TraceRecord> {
+        let mut records: Vec<(u64, TraceRecord)> = self
+            .slots
+            .iter()
+            .filter_map(|slot| slot.lock().unwrap().clone())
+            .filter(|(_, r)| r.spans.total_ns / 1000 >= min_us)
+            .collect();
+        records.sort_by(|a, b| b.0.cmp(&a.0));
+        records.truncate(limit);
+        records.into_iter().map(|(_, r)| r).collect()
+    }
+
+    /// Render an export as the `GET /v1/trace` response body.
+    pub fn export_json(&self, limit: usize, min_us: u64) -> Value {
+        let traces: Vec<Value> = self.export(limit, min_us).iter().map(TraceRecord::to_json).collect();
+        Value::obj(vec![
+            ("traces", Value::Arr(traces)),
+            ("capacity", Value::Num(self.capacity() as f64)),
+            ("pushed", Value::Num(self.pushed() as f64)),
+        ])
+    }
+}
+
+impl Default for TraceRing {
+    fn default() -> Self {
+        Self::new(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(trace_id: u64, total_us: u64) -> TraceRecord {
+        TraceRecord {
+            trace_id,
+            kind: "attention",
+            replica: 0,
+            queue_depth: 1,
+            ok: true,
+            spans: TraceSpans { total_ns: total_us * 1000, ..TraceSpans::default() },
+            blocks: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_monotone() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        let c = next_trace_id();
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn ring_exports_newest_first_and_evicts_oldest() {
+        let ring = TraceRing::new(3);
+        for id in 1..=5 {
+            ring.push(record(id, 10));
+        }
+        // Capacity 3, pushed 5 → ids 1 and 2 were evicted (oldest
+        // first); export is newest-first.
+        let ids: Vec<u64> = ring.export(usize::MAX, 0).iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![5, 4, 3]);
+        assert_eq!(ring.pushed(), 5);
+
+        // `limit` caps after ordering: the newest records win.
+        let ids: Vec<u64> = ring.export(2, 0).iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![5, 4]);
+    }
+
+    #[test]
+    fn min_us_filters_on_total_wall_time() {
+        let ring = TraceRing::new(8);
+        ring.push(record(1, 5));
+        ring.push(record(2, 50));
+        ring.push(record(3, 500));
+        let ids: Vec<u64> = ring.export(usize::MAX, 50).iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![3, 2]);
+        assert!(ring.export(usize::MAX, 1_000_000).is_empty());
+    }
+
+    #[test]
+    fn record_renders_spans_as_microseconds() {
+        let mut rec = record(7, 0);
+        rec.spans = TraceSpans {
+            admission_ns: 1_500,
+            route_ns: 250,
+            queue_ns: 3_000,
+            batch_ns: 0,
+            execute_ns: 40_000,
+            total_ns: 50_000,
+        };
+        let text = rec.to_json().render();
+        assert!(text.contains("\"trace_id\":7"), "{text}");
+        assert!(text.contains("\"admission_us\":1.5"), "{text}");
+        assert!(text.contains("\"execute_us\":40"), "{text}");
+        assert!(text.contains("\"kind\":\"attention\""), "{text}");
+    }
+
+    #[test]
+    fn export_json_carries_ring_accounting() {
+        let ring = TraceRing::new(2);
+        ring.push(record(1, 10));
+        ring.push(record(2, 10));
+        ring.push(record(3, 10));
+        let text = ring.export_json(10, 0).render();
+        assert!(text.contains("\"capacity\":2"), "{text}");
+        assert!(text.contains("\"pushed\":3"), "{text}");
+        assert!(!text.contains("\"trace_id\":1"), "evicted record must not render: {text}");
+    }
+}

@@ -122,6 +122,44 @@ impl MitaStats {
     }
 }
 
+/// Per-transformer-block timing + routing profile of model forwards.
+///
+/// One entry per block: wall time split between the attention path and
+/// the MLP path, plus that block's own [`MitaStats`] (instead of the one
+/// merged accumulator the plain forward reports). Produced by
+/// `MitaModel::forward_profiled`, accumulated per backend, and surfaced
+/// through traces (`/v1/trace`) and per-layer metrics series.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BlockProfile {
+    /// Attention-path wall time (pre-LN + Q/K/V projection + kernel +
+    /// output projection + residual), nanoseconds.
+    pub attn_ns: u64,
+    /// MLP-path wall time (pre-LN + GELU MLP + residual), nanoseconds.
+    pub mlp_ns: u64,
+    /// Routing statistics of this block alone.
+    pub stats: MitaStats,
+}
+
+impl BlockProfile {
+    /// Fold another profile of the same block into this one.
+    pub fn merge(&mut self, other: &BlockProfile) {
+        self.attn_ns += other.attn_ns;
+        self.mlp_ns += other.mlp_ns;
+        self.stats.merge(&other.stats);
+    }
+}
+
+/// Merge per-block profiles element-wise (index = block), growing `into`
+/// if `add` covers more blocks.
+pub fn merge_block_profiles(into: &mut Vec<BlockProfile>, add: &[BlockProfile]) {
+    if into.len() < add.len() {
+        into.resize(add.len(), BlockProfile::default());
+    }
+    for (acc, b) in into.iter_mut().zip(add) {
+        acc.merge(b);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The kernel trait + registry
 // ---------------------------------------------------------------------------
@@ -565,6 +603,25 @@ mod tests {
         assert!((m.load_imbalance() - 2.0).abs() < 1e-12, "merge keeps the worst peak");
         m.reset();
         assert_eq!(m, MitaStats::default());
+    }
+
+    #[test]
+    fn block_profiles_merge_element_wise() {
+        let mut a = BlockProfile { attn_ns: 10, mlp_ns: 5, stats: MitaStats::default() };
+        a.stats.record(8, 1, &[3, 5]);
+        let mut b = BlockProfile { attn_ns: 7, mlp_ns: 2, stats: MitaStats::default() };
+        b.stats.record(8, 0, &[4, 4]);
+
+        let mut acc: Vec<BlockProfile> = Vec::new();
+        merge_block_profiles(&mut acc, &[a.clone()]);
+        assert_eq!(acc.len(), 1);
+        merge_block_profiles(&mut acc, &[b.clone(), a.clone()]);
+        assert_eq!(acc.len(), 2, "merging grows to the larger depth");
+        assert_eq!(acc[0].attn_ns, 17);
+        assert_eq!(acc[0].mlp_ns, 7);
+        assert_eq!(acc[0].stats.queries, 16);
+        assert_eq!(acc[0].stats.overflow, 1);
+        assert_eq!(acc[1], a, "new tail entries copy the addend");
     }
 
     #[test]

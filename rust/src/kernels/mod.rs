@@ -34,8 +34,8 @@ pub mod simd;
 pub mod workspace;
 
 pub use api::{
-    run_batched, AttentionKernel, AttnProblem, DenseKernel, KernelRegistry, MitaKernel, MitaStats,
-    OP_ATTN_DENSE, OP_ATTN_MITA, QkvData, QkvLayout,
+    merge_block_profiles, run_batched, AttentionKernel, AttnProblem, BlockProfile, DenseKernel,
+    KernelRegistry, MitaKernel, MitaStats, OP_ATTN_DENSE, OP_ATTN_MITA, QkvData, QkvLayout,
 };
 pub use dense::{dense_attention, dense_attention_mh};
 pub use mita::{mita_attention, mita_attention_mh, MitaKernelConfig};

@@ -9,8 +9,8 @@
 //!   train <bundle> [--steps N] [--seed S] [--checkpoint F] [--warm-start F]
 //!   eval <bundle> <checkpoint> [--batches N]
 //!   serve [<bundle>] [--workload bundle|attn|model] [--listen ADDR] [--replicas N] ...
-//!   client --addr ADDR <health|attention|model-forward|stats|metrics|shutdown>
-//!          [--retries N] ...
+//!   client --addr ADDR <health|attention|model-forward|stats|metrics|trace
+//!          |check-prometheus|shutdown> [--retries N] ...
 //!   native-check [--n N] [--dim D] [--heads H] [--m M] [--k K]
 //!   model-check [--seq-len N] [--dim D] [--heads H] [--depth L]
 //!   train-native [--task T] [--steps N] [--lr X] [--batch B] [--kernel mita|dense]
@@ -90,6 +90,9 @@ const VALUED_FLAGS: &[&str] = &[
     "batch",
     "replicas",
     "retries",
+    // tracing / observability
+    "limit",
+    "min-us",
     // native training subsystem
     "lr",
     "kernel",
@@ -766,6 +769,52 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 t0.elapsed().as_secs_f64() * 1e3
             );
         }
+        "trace" => {
+            // Raw wire text through the JSON parser, so the CI smoke
+            // exercises the exact exported schema (see
+            // docs/OBSERVABILITY.md for the field reference).
+            let limit = args.flag("limit").map(str::parse::<usize>).transpose()?;
+            let min_us = args.flag("min-us").map(str::parse::<u64>).transpose()?;
+            let body = mita::util::json::Value::parse(&client.trace_raw(limit, min_us)?)?;
+            let traces = body.get("traces")?.as_arr()?;
+            println!(
+                "{} trace(s) retained (ring capacity={} pushed={})",
+                traces.len(),
+                body.get("capacity")?.as_f64()? as u64,
+                body.get("pushed")?.as_f64()? as u64,
+            );
+            for t in traces {
+                let spans = t.get("spans")?;
+                let us = |key: &str| -> Result<f64> { spans.get(key)?.as_f64() };
+                println!(
+                    "  #{} {} replica={} depth={} ok={} total={:.1}us \
+                     (admission={:.1} route={:.1} queue={:.1} batch={:.1} execute={:.1}) \
+                     blocks={}",
+                    t.get("trace_id")?.as_f64()? as u64,
+                    t.get("kind")?.as_str()?,
+                    t.get("replica")?.as_f64()? as u64,
+                    t.get("queue_depth")?.as_f64()? as u64,
+                    t.get("ok")?.as_bool()?,
+                    us("total_us")?,
+                    us("admission_us")?,
+                    us("route_us")?,
+                    us("queue_us")?,
+                    us("batch_us")?,
+                    us("execute_us")?,
+                    t.get("blocks")?.as_arr()?.len(),
+                );
+            }
+        }
+        "check-prometheus" => {
+            // Fetch the text exposition and run the in-repo grammar +
+            // coverage checker over it (non-zero exit on violations) —
+            // the CI smoke's guard that the Prometheus surface stays
+            // scrapeable.
+            let text = client.metrics_prometheus()?;
+            let samples = mita::coordinator::check_prometheus_text(&text)
+                .map_err(|e| anyhow::anyhow!("prometheus exposition invalid: {e}"))?;
+            println!("{addr}: prometheus exposition ok ({samples} samples)");
+        }
         "metrics" => {
             // Probe the raw wire text first so a renamed series fails CI
             // even if the typed decoder were updated in lockstep; then
@@ -809,7 +858,7 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
         other => {
             bail!(
                 "unknown client action {other:?} \
-                 (health|attention|model-forward|stats|metrics|shutdown)"
+                 (health|attention|model-forward|stats|metrics|trace|check-prometheus|shutdown)"
             )
         }
     }
@@ -1022,12 +1071,17 @@ serving (one typed-request front; see docs/PROTOCOL.md + docs/SERVING.md):
            replicas with least-outstanding routing + typed shedding;
            runs until a client posts /v1/admin/shutdown
   client (--addr HOST:PORT | --addr-file F)
-         <health|attention|model-forward|stats|metrics|shutdown>
+         <health|attention|model-forward|stats|metrics|trace|
+          check-prometheus|shutdown>
          [--retries N] [--n N] [--dim D] [--batch B] [--valid V]
-         [--task T] [--binding K]
+         [--task T] [--binding K] [--limit N] [--min-us T]
            loopback wire client: sends one typed request and asserts the
            response shape (non-zero exit on protocol errors); metrics
            asserts every documented /v1/metrics series is present;
+           trace prints GET /v1/trace stage spans + per-block profiles
+           ([--limit N] [--min-us T]; docs/OBSERVABILITY.md);
+           check-prometheus validates /v1/metrics?format=prometheus
+           with the in-repo grammar + coverage checker;
            --retries N retries overloaded sheds per the server's
            retry_after_ms hint
 

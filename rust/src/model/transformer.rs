@@ -28,12 +28,14 @@
 //! order — a checkpoint is self-describing and loads without a config.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::checkpoint;
 use crate::kernels::api::{
-    run_batched, AttentionKernel, AttnProblem, KernelRegistry, MitaStats, QkvData, QkvLayout,
+    run_batched, AttentionKernel, AttnProblem, BlockProfile, KernelRegistry, MitaStats, QkvData,
+    QkvLayout,
 };
 use crate::kernels::linalg::{axpy, dot, matmul_nt, scale_in_place};
 use crate::kernels::par::par_chunks_mut;
@@ -95,6 +97,9 @@ pub struct ModelScratch {
     attn: Vec<f32>,
     /// Head-major staging buffer for `run_batched`.
     headout: Vec<f32>,
+    /// Per-block routing accumulator, reset before each block's kernel
+    /// run so per-block stats separate without per-call allocation.
+    block_stats: MitaStats,
 }
 
 /// A native MiTA transformer: config + parameters.
@@ -171,6 +176,42 @@ impl MitaModel {
         scratch: &mut ModelScratch,
         stats: &mut MitaStats,
     ) -> Result<Vec<f32>> {
+        self.forward_impl(tokens, batch, valid, registry, pool, scratch, stats, None)
+    }
+
+    /// Like [`MitaModel::forward`], additionally overwriting `profile`
+    /// with one [`BlockProfile`] per block for **this call**: attention
+    /// vs MLP wall time and that block's own routing stats. `stats`
+    /// still receives the merged totals, so the two entry points are
+    /// interchangeable for existing callers and outputs are
+    /// bit-identical (profiling only reads the clock).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_profiled(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        valid: usize,
+        registry: &KernelRegistry,
+        pool: &WorkspacePool,
+        scratch: &mut ModelScratch,
+        stats: &mut MitaStats,
+        profile: &mut Vec<BlockProfile>,
+    ) -> Result<Vec<f32>> {
+        self.forward_impl(tokens, batch, valid, registry, pool, scratch, stats, Some(profile))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_impl(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        valid: usize,
+        registry: &KernelRegistry,
+        pool: &WorkspacePool,
+        scratch: &mut ModelScratch,
+        stats: &mut MitaStats,
+        mut profile: Option<&mut Vec<BlockProfile>>,
+    ) -> Result<Vec<f32>> {
         let cfg = &self.cfg;
         let p = &self.params;
         let (n, d, heads, hid) = (cfg.seq_len, cfg.dim, cfg.heads, cfg.mlp_hidden);
@@ -225,7 +266,12 @@ impl MitaModel {
         scratch.y.resize(valid * per, 0.0);
         scratch.qkv.resize(valid * 3 * per, 0.0);
         scratch.attn.resize(valid * per, 0.0);
-        for (block, kernel) in p.blocks.iter().zip(&kernels) {
+        if let Some(prof) = profile.as_mut() {
+            prof.clear();
+            prof.resize(p.blocks.len(), BlockProfile::default());
+        }
+        for (bi, (block, kernel)) in p.blocks.iter().zip(&kernels).enumerate() {
+            let t_block = Instant::now();
             // Pre-LN.
             {
                 let h = &scratch.h;
@@ -252,6 +298,10 @@ impl MitaModel {
             // (example × head) work items over the shared pool.
             let prob = AttnProblem::new(valid, heads, n, d, QkvLayout::Fused);
             let data = QkvData::Fused(&scratch.qkv[..valid * 3 * per]);
+            // Routing stats go through the per-block accumulator and are
+            // merged into the caller's total, so profiled and plain
+            // forwards report identical aggregates.
+            scratch.block_stats.reset();
             run_batched(
                 *kernel,
                 &prob,
@@ -259,8 +309,9 @@ impl MitaModel {
                 pool,
                 &mut scratch.headout,
                 &mut scratch.attn[..valid * per],
-                stats,
+                &mut scratch.block_stats,
             );
+            stats.merge(&scratch.block_stats);
             // Output projection + residual.
             {
                 let attn = &scratch.attn;
@@ -274,6 +325,7 @@ impl MitaModel {
                     ws.give_f32("model.proj", proj);
                 });
             }
+            let t_attn_done = Instant::now();
             // Pre-LN GELU MLP + residual.
             par_chunks_mut(&mut scratch.h, per, |_, hex| {
                 let mut pooled = pool.acquire();
@@ -292,6 +344,12 @@ impl MitaModel {
                 ws.give_f32("model.hidden", hidden);
                 ws.give_f32("model.mlp", mlp);
             });
+            if let Some(prof) = profile.as_mut() {
+                let entry = &mut prof[bi];
+                entry.attn_ns = t_attn_done.duration_since(t_block).as_nanos() as u64;
+                entry.mlp_ns = t_attn_done.elapsed().as_nanos() as u64;
+                entry.stats.merge(&scratch.block_stats);
+            }
         }
 
         // Final LN → mean-pool over the sequence → classifier head.
@@ -402,6 +460,52 @@ mod tests {
             .forward(&tokens, batch, valid, &registry, &pool, &mut fresh, &mut stats)
             .unwrap();
         assert_eq!(a, c);
+    }
+
+    #[test]
+    fn forward_profiled_matches_forward_and_separates_blocks() {
+        let cfg = tiny_cfg();
+        let model = MitaModel::init(cfg.clone(), 5).unwrap();
+        let registry = model.registry();
+        let pool = WorkspacePool::new();
+        let mut scratch = ModelScratch::default();
+        let (batch, valid) = (3usize, 2usize);
+        let tokens = tokens_for(&cfg, batch, 7);
+
+        let mut plain_stats = MitaStats::default();
+        let plain = model
+            .forward(&tokens, batch, valid, &registry, &pool, &mut scratch, &mut plain_stats)
+            .unwrap();
+
+        let mut stats = MitaStats::default();
+        let mut profile = vec![BlockProfile { attn_ns: 99, ..Default::default() }];
+        let profiled = model
+            .forward_profiled(
+                &tokens,
+                batch,
+                valid,
+                &registry,
+                &pool,
+                &mut scratch,
+                &mut stats,
+                &mut profile,
+            )
+            .unwrap();
+
+        assert_eq!(plain, profiled, "profiling is observation-only");
+        assert_eq!(stats, plain_stats, "merged totals are unchanged");
+        assert_eq!(profile.len(), cfg.depth, "stale entries are overwritten");
+        let mut merged = MitaStats::default();
+        for (bi, bp) in profile.iter().enumerate() {
+            assert!(bp.attn_ns > 0, "block {bi} attention span must be non-zero");
+            assert!(bp.mlp_ns > 0, "block {bi} MLP span must be non-zero");
+            assert_eq!(bp.stats.calls, valid * cfg.heads, "block {bi} records its own calls");
+            assert_eq!(bp.stats.queries, valid * cfg.heads * cfg.seq_len);
+            merged.merge(&bp.stats);
+        }
+        assert_eq!(merged.queries, stats.queries, "per-block stats sum to the total");
+        assert_eq!(merged.overflow, stats.overflow);
+        assert_eq!(merged.expert_counts, stats.expert_counts);
     }
 
     #[test]

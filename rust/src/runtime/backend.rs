@@ -32,7 +32,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::kernels::api::{run_batched, AttnProblem, KernelRegistry, MitaStats};
+use crate::kernels::api::{
+    merge_block_profiles, run_batched, AttnProblem, BlockProfile, KernelRegistry, MitaStats,
+};
 use crate::kernels::workspace::WorkspacePool;
 use crate::kernels::MitaKernelConfig;
 use crate::model::{MitaModel, ModelConfig, ModelScratch};
@@ -76,6 +78,14 @@ pub trait Backend {
     /// with a stable code — callers (the engine, the network front) can
     /// surface it without string matching.
     fn execute(&mut self, req: ServiceRequest) -> ServiceResult<ServiceResponse>;
+
+    /// Drain the per-block profile of the most recent model-forward
+    /// execute, if the backend records one. Backends without per-block
+    /// instrumentation return an empty vec; the engine attaches the
+    /// result to the request's trace.
+    fn take_block_profiles(&mut self) -> Vec<BlockProfile> {
+        Vec::new()
+    }
 }
 
 /// Serializable description of a backend, safe to send to the engine
@@ -209,6 +219,7 @@ impl Backend for PjrtBackend {
             ServiceRequest::Stats { .. } => Ok(ServiceResponse::Stats(ServiceStats {
                 runtime: self.runtime.stats(),
                 mita: None,
+                blocks: Vec::new(),
             })),
             ServiceRequest::Metrics => Err(ServiceError::Unavailable(
                 "serving metrics are assembled by the replica pool, not a backend".into(),
@@ -273,6 +284,13 @@ pub struct NativeBackend {
     headout: RefCell<Vec<f32>>,
     stats: RefCell<RuntimeStats>,
     mita: RefCell<MitaStats>,
+    /// Cumulative per-block profile across model forwards (index =
+    /// block; reset together with `mita`). Feeds the per-layer metrics
+    /// series.
+    blocks: RefCell<Vec<BlockProfile>>,
+    /// Per-block profile of the most recent model forward, drained by
+    /// [`Backend::take_block_profiles`] into the request's trace.
+    last_blocks: RefCell<Vec<BlockProfile>>,
     /// Models bound by key. Each carries its own registry keyed by the
     /// checkpoint's MiTA params (the backend registry serves the raw
     /// attention ops, whose kernel config may differ).
@@ -302,6 +320,8 @@ impl NativeBackend {
             headout: RefCell::new(Vec::new()),
             stats: RefCell::new(RuntimeStats::default()),
             mita: RefCell::new(MitaStats::default()),
+            blocks: RefCell::new(Vec::new()),
+            last_blocks: RefCell::new(Vec::new()),
             models: HashMap::new(),
             model_scratch: RefCell::new(ModelScratch::default()),
         }
@@ -399,10 +419,22 @@ impl NativeBackend {
         let logits = {
             let mut scratch = self.model_scratch.borrow_mut();
             let mut mita = self.mita.borrow_mut();
-            bound
+            let mut last = self.last_blocks.borrow_mut();
+            let logits = bound
                 .model
-                .forward(toks, b, valid, &bound.registry, &self.pool, &mut scratch, &mut mita)
-                .map_err(ServiceError::internal)?
+                .forward_profiled(
+                    toks,
+                    b,
+                    valid,
+                    &bound.registry,
+                    &self.pool,
+                    &mut scratch,
+                    &mut mita,
+                    &mut last,
+                )
+                .map_err(ServiceError::internal)?;
+            merge_block_profiles(&mut self.blocks.borrow_mut(), &last);
+            logits
         };
         {
             let mut st = self.stats.borrow_mut();
@@ -413,15 +445,15 @@ impl NativeBackend {
     }
 
     fn take_stats(&self, reset: bool) -> ServiceStats {
-        let mita = if reset {
+        let (mita, blocks) = if reset {
             let mut mita = self.mita.borrow_mut();
             let snapshot = mita.clone();
             mita.reset();
-            snapshot
+            (snapshot, std::mem::take(&mut *self.blocks.borrow_mut()))
         } else {
-            self.mita.borrow().clone()
+            (self.mita.borrow().clone(), self.blocks.borrow().clone())
         };
-        ServiceStats { runtime: self.stats.borrow().clone(), mita: Some(mita) }
+        ServiceStats { runtime: self.stats.borrow().clone(), mita: Some(mita), blocks }
     }
 }
 
@@ -490,6 +522,10 @@ impl Backend for NativeBackend {
                 "serving metrics are assembled by the replica pool, not a backend".into(),
             )),
         }
+    }
+
+    fn take_block_profiles(&mut self) -> Vec<BlockProfile> {
+        std::mem::take(&mut *self.last_blocks.borrow_mut())
     }
 }
 
@@ -719,5 +755,41 @@ mod tests {
         assert_eq!(be.run_model(&m, &short, None).unwrap_err().code(), "bad_shape");
         let wrong = Tensor::f32(&[2, 10], vec![0.0; 20]).unwrap();
         assert_eq!(be.run_model(&m, &wrong, None).unwrap_err().code(), "bad_shape");
+    }
+
+    #[test]
+    fn model_forward_records_per_block_profiles() {
+        let mcfg = ModelConfig::new(7, 10, 8, 2, 2, 16, 3, OP_ATTN_MITA);
+        let attn = NativeAttnConfig::for_shape(10, 8, 2).with_model(mcfg.clone());
+        let mut be = NativeBackend::new(attn);
+        be.execute(ServiceRequest::BindInit {
+            binding: BindingId::from("m"),
+            init_op: OP_MODEL_INIT.into(),
+            seed: 3,
+            param_count: 0,
+        })
+        .unwrap();
+        assert!(be.take_block_profiles().is_empty(), "no model forward ran yet");
+
+        let mut rng = Rng::new(33);
+        let toks: Vec<i32> = (0..2 * 10).map(|_| rng.below(7) as i32).collect();
+        let tokens = Tensor::i32(&[2, 10], toks).unwrap();
+        be.run_model(&BindingId::from("m"), &tokens, None).unwrap();
+
+        // The last-request profile drains once; cumulative stats keep it.
+        let last = be.take_block_profiles();
+        assert_eq!(last.len(), mcfg.depth);
+        assert!(last.iter().all(|b| b.attn_ns > 0 && b.mlp_ns > 0));
+        assert!(be.take_block_profiles().is_empty(), "drain empties the last profile");
+        let stats = be.take_stats(false);
+        assert_eq!(stats.blocks, last, "cumulative profile covers the one run");
+        let per_block: usize = stats.blocks.iter().map(|b| b.stats.queries).sum();
+        assert_eq!(per_block, stats.mita.unwrap().queries, "blocks partition the total");
+
+        // A second run accumulates; reset clears the cumulative profile.
+        be.run_model(&BindingId::from("m"), &tokens, None).unwrap();
+        let stats = be.take_stats(true);
+        assert_eq!(stats.blocks[0].stats.queries, 2 * last[0].stats.queries);
+        assert!(be.take_stats(false).blocks.is_empty(), "reset drains block profiles");
     }
 }

@@ -31,7 +31,7 @@ pub mod wire;
 pub use error::{ServiceError, ServiceResult};
 
 use crate::coordinator::metrics::MetricsSnapshot;
-use crate::kernels::api::{QkvData, QkvLayout};
+use crate::kernels::api::{BlockProfile, QkvData, QkvLayout};
 use crate::kernels::{MitaStats, OP_ATTN_DENSE, OP_ATTN_MITA};
 use crate::runtime::client::RuntimeStats;
 use crate::runtime::tensor::Tensor;
@@ -322,6 +322,11 @@ pub struct ServiceStats {
     /// Native MiTA routing statistics, when the backend runs those
     /// kernels (None on artifact backends).
     pub mita: Option<MitaStats>,
+    /// Cumulative per-transformer-block profile of model forwards
+    /// (index = block; empty when no model ran or the backend does not
+    /// record per-block stats). The element-wise sum of `blocks[i].stats`
+    /// partitions the model-forward share of `mita`.
+    pub blocks: Vec<BlockProfile>,
 }
 
 /// The typed result of a [`ServiceRequest`].

@@ -35,6 +35,11 @@ pub const EP_STATS: &str = "/v1/stats";
 /// Endpoint of [`ServiceRequest::Metrics`] (also answers plain `GET`, and
 /// bypasses admission so telemetry stays readable under load).
 pub const EP_METRICS: &str = "/v1/metrics";
+/// Recent request traces (`GET`-only, answered from the pool's trace
+/// ring; query params `limit` and `min_us`). Deliberately **not** in
+/// [`known_endpoints`]: that list gates POST service routing, and the
+/// trace export never reaches the engine.
+pub const EP_TRACE: &str = "/v1/trace";
 /// Liveness probe (handled by the server, no engine round-trip).
 pub const EP_HEALTH: &str = "/v1/healthz";
 /// Clean-shutdown endpoint (handled by the server).
@@ -339,6 +344,62 @@ pub fn parse_request(path: &str, body: &Value) -> ServiceResult<ServiceRequest> 
 // Responses
 // ---------------------------------------------------------------------------
 
+/// Optional client-supplied trace id in a protocol-v2 request body.
+/// Unknown to v1 servers (which ignore extra keys), so sending it is
+/// always safe.
+pub fn request_trace_id(body: &Value) -> Option<u64> {
+    body.opt("trace_id").and_then(|v| v.as_usize().ok()).map(|v| v as u64)
+}
+
+/// Attach the echoed `trace_id` to an encoded response body (the
+/// network front calls this on every service response; clients that
+/// predate tracing ignore the extra key).
+pub fn with_trace_id(body: Value, trace_id: u64) -> Value {
+    match body {
+        Value::Obj(mut map) => {
+            map.insert("trace_id".into(), Value::num(trace_id as f64));
+            Value::Obj(map)
+        }
+        other => other,
+    }
+}
+
+fn mita_stats_to_json(m: &crate::kernels::MitaStats) -> Value {
+    Value::obj([
+        ("calls", Value::num(m.calls as f64)),
+        ("queries", Value::num(m.queries as f64)),
+        ("overflow", Value::num(m.overflow as f64)),
+        ("cap", Value::num(m.cap as f64)),
+        ("peak_imbalance_milli", Value::num(m.peak_imbalance_milli as f64)),
+        (
+            "expert_counts",
+            Value::Arr(m.expert_counts.iter().map(|&c| Value::num(c as f64)).collect()),
+        ),
+    ])
+}
+
+fn mita_stats_from_json(m: &Value) -> ServiceResult<crate::kernels::MitaStats> {
+    let bad = |e: anyhow::Error| ServiceError::BadRequest(format!("stats: {e}"));
+    Ok(crate::kernels::MitaStats {
+        calls: m.get("calls").and_then(|x| x.as_usize()).map_err(bad)?,
+        queries: m.get("queries").and_then(|x| x.as_usize()).map_err(bad)?,
+        overflow: m.get("overflow").and_then(|x| x.as_usize()).map_err(bad)?,
+        cap: m.get("cap").and_then(|x| x.as_usize()).map_err(bad)?,
+        peak_imbalance_milli: m
+            .get("peak_imbalance_milli")
+            .and_then(|x| x.as_usize())
+            .map_err(bad)?,
+        expert_counts: m
+            .get("expert_counts")
+            .and_then(|x| x.as_arr())
+            .map_err(bad)?
+            .iter()
+            .map(|c| c.as_usize())
+            .collect::<Result<_, _>>()
+            .map_err(bad)?,
+    })
+}
+
 fn stats_to_json(s: &ServiceStats) -> Value {
     let runtime = Value::obj([
         ("compiles", Value::num(s.runtime.compiles as f64)),
@@ -348,19 +409,21 @@ fn stats_to_json(s: &ServiceStats) -> Value {
     ]);
     let mita = match &s.mita {
         None => Value::Null,
-        Some(m) => Value::obj([
-            ("calls", Value::num(m.calls as f64)),
-            ("queries", Value::num(m.queries as f64)),
-            ("overflow", Value::num(m.overflow as f64)),
-            ("cap", Value::num(m.cap as f64)),
-            ("peak_imbalance_milli", Value::num(m.peak_imbalance_milli as f64)),
-            (
-                "expert_counts",
-                Value::Arr(m.expert_counts.iter().map(|&c| Value::num(c as f64)).collect()),
-            ),
-        ]),
+        Some(m) => mita_stats_to_json(m),
     };
-    Value::obj([("runtime", runtime), ("mita", mita)])
+    let blocks = Value::Arr(
+        s.blocks
+            .iter()
+            .map(|b| {
+                Value::obj([
+                    ("attn_ns", Value::num(b.attn_ns as f64)),
+                    ("mlp_ns", Value::num(b.mlp_ns as f64)),
+                    ("stats", mita_stats_to_json(&b.stats)),
+                ])
+            })
+            .collect(),
+    );
+    Value::obj([("runtime", runtime), ("mita", mita), ("blocks", blocks)])
 }
 
 fn stats_from_json(v: &Value) -> ServiceResult<ServiceStats> {
@@ -372,32 +435,26 @@ fn stats_from_json(v: &Value) -> ServiceResult<ServiceStats> {
         executions: rt.get("executions").and_then(|x| x.as_usize()).map_err(bad)?,
         execute_secs: rt.get("execute_secs").and_then(|x| x.as_f64()).map_err(bad)?,
     };
-    let mita = match v.opt("mita") {
-        None => None,
-        Some(m) => {
-            let mut stats = crate::kernels::MitaStats {
-                calls: m.get("calls").and_then(|x| x.as_usize()).map_err(bad)?,
-                queries: m.get("queries").and_then(|x| x.as_usize()).map_err(bad)?,
-                overflow: m.get("overflow").and_then(|x| x.as_usize()).map_err(bad)?,
-                cap: m.get("cap").and_then(|x| x.as_usize()).map_err(bad)?,
-                peak_imbalance_milli: m
-                    .get("peak_imbalance_milli")
-                    .and_then(|x| x.as_usize())
-                    .map_err(bad)?,
-                expert_counts: Vec::new(),
-            };
-            stats.expert_counts = m
-                .get("expert_counts")
-                .and_then(|x| x.as_arr())
+    let mita = v.opt("mita").map(mita_stats_from_json).transpose()?;
+    // v1 bodies have no `blocks`; absent parses as empty.
+    let blocks = v
+        .opt("blocks")
+        .map(|b| -> ServiceResult<Vec<crate::kernels::BlockProfile>> {
+            b.as_arr()
                 .map_err(bad)?
                 .iter()
-                .map(|c| c.as_usize())
-                .collect::<Result<_, _>>()
-                .map_err(bad)?;
-            Some(stats)
-        }
-    };
-    Ok(ServiceStats { runtime, mita })
+                .map(|p| {
+                    Ok(crate::kernels::BlockProfile {
+                        attn_ns: p.get("attn_ns").and_then(|x| x.as_usize()).map_err(bad)? as u64,
+                        mlp_ns: p.get("mlp_ns").and_then(|x| x.as_usize()).map_err(bad)? as u64,
+                        stats: mita_stats_from_json(p.get("stats").map_err(bad)?)?,
+                    })
+                })
+                .collect()
+        })
+        .transpose()?
+        .unwrap_or_default();
+    Ok(ServiceStats { runtime, mita, blocks })
 }
 
 fn histogram_to_json(h: &HistogramSnapshot) -> Value {
@@ -455,6 +512,27 @@ fn metrics_to_json(m: &MetricsSnapshot) -> Value {
         .replicas
         .iter()
         .map(|r| {
+            let blocks = Value::Arr(
+                r.blocks
+                    .iter()
+                    .map(|b| {
+                        Value::obj([
+                            ("block", Value::num(b.block as f64)),
+                            ("overflow_fraction", Value::num(b.overflow_fraction)),
+                            ("queries", Value::num(b.queries as f64)),
+                            (
+                                "expert_queries",
+                                Value::Arr(
+                                    b.expert_queries
+                                        .iter()
+                                        .map(|&q| Value::num(q as f64))
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            );
             Value::obj([
                 ("replica", Value::num(r.replica as f64)),
                 ("replica_requests_total", Value::num(r.replica_requests_total as f64)),
@@ -462,6 +540,7 @@ fn metrics_to_json(m: &MetricsSnapshot) -> Value {
                 ("max_inflight", Value::num(r.max_inflight as f64)),
                 ("overflow_fraction", Value::num(r.overflow_fraction)),
                 ("load_imbalance", Value::num(r.load_imbalance)),
+                ("blocks", blocks),
             ])
         })
         .collect();
@@ -500,6 +579,39 @@ fn metrics_from_json(v: &Value) -> ServiceResult<MetricsSnapshot> {
                     .and_then(|x| x.as_f64())
                     .map_err(bad)?,
                 load_imbalance: r.get("load_imbalance").and_then(|x| x.as_f64()).map_err(bad)?,
+                // Absent in pre-tracing payloads; parses as empty.
+                blocks: r
+                    .opt("blocks")
+                    .map(|bs| -> ServiceResult<Vec<crate::coordinator::metrics::BlockSeries>> {
+                        bs.as_arr()
+                            .map_err(bad)?
+                            .iter()
+                            .map(|b| {
+                                Ok(crate::coordinator::metrics::BlockSeries {
+                                    block: b.get("block").and_then(|x| x.as_usize()).map_err(bad)?
+                                        as u64,
+                                    overflow_fraction: b
+                                        .get("overflow_fraction")
+                                        .and_then(|x| x.as_f64())
+                                        .map_err(bad)?,
+                                    queries: b
+                                        .get("queries")
+                                        .and_then(|x| x.as_usize())
+                                        .map_err(bad)? as u64,
+                                    expert_queries: b
+                                        .get("expert_queries")
+                                        .and_then(|x| x.as_arr())
+                                        .map_err(bad)?
+                                        .iter()
+                                        .map(|q| q.as_usize().map(|q| q as u64))
+                                        .collect::<Result<_, _>>()
+                                        .map_err(bad)?,
+                                })
+                            })
+                            .collect()
+                    })
+                    .transpose()?
+                    .unwrap_or_default(),
             })
         })
         .collect::<ServiceResult<Vec<_>>>()?;
@@ -913,12 +1025,22 @@ mod tests {
                 m.record(8, 2, &[5, 3]);
                 m
             }),
+            blocks: vec![crate::kernels::BlockProfile {
+                attn_ns: 1200,
+                mlp_ns: 800,
+                stats: {
+                    let mut m = crate::kernels::MitaStats::default();
+                    m.record(8, 2, &[5, 3]);
+                    m
+                },
+            }],
         };
         let body = encode_response(&ServiceResponse::Stats(stats.clone()));
         match parse_response(&Value::parse(&body.render()).unwrap()).unwrap() {
             ServiceResponse::Stats(got) => {
                 assert_eq!(got.runtime.executions, 9);
                 assert_eq!(got.mita.unwrap(), stats.mita.unwrap());
+                assert_eq!(got.blocks, stats.blocks, "per-block profiles survive the wire");
             }
             other => panic!("wrong class {:?}", other.kind()),
         }
@@ -947,6 +1069,26 @@ mod tests {
     }
 
     #[test]
+    fn trace_id_reads_from_requests_and_attaches_to_responses() {
+        // A client-supplied id is visible to the server...
+        let body = Value::parse(r#"{"proto": 2, "trace_id": 41}"#).unwrap();
+        assert_eq!(request_trace_id(&body), Some(41));
+        // ...absent or malformed ids read as None (never an error)...
+        assert_eq!(request_trace_id(&Value::parse(r#"{"proto": 2}"#).unwrap()), None);
+        assert_eq!(
+            request_trace_id(&Value::parse(r#"{"proto": 2, "trace_id": "x"}"#).unwrap()),
+            None
+        );
+        // ...and the echo rides any response body without disturbing the
+        // typed parse (unknown keys are ignored by parse_response).
+        let resp = ServiceResponse::Stats(ServiceStats::default());
+        let body = with_trace_id(encode_response(&resp), 41);
+        let text = body.render();
+        assert!(text.contains("\"trace_id\":41"), "{text}");
+        parse_response(&Value::parse(&text).unwrap()).unwrap();
+    }
+
+    #[test]
     fn metrics_snapshot_roundtrips() {
         use crate::coordinator::metrics::{HistogramSnapshot, MetricsSnapshot, ReplicaSnapshot};
         let snap = MetricsSnapshot {
@@ -970,6 +1112,12 @@ mod tests {
                     max_inflight: 8,
                     overflow_fraction: 0.25,
                     load_imbalance: 1.5,
+                    blocks: vec![crate::coordinator::metrics::BlockSeries {
+                        block: 0,
+                        overflow_fraction: 0.125,
+                        queries: 64,
+                        expert_queries: vec![40, 24],
+                    }],
                 },
                 ReplicaSnapshot {
                     replica: 1,
@@ -978,6 +1126,7 @@ mod tests {
                     max_inflight: 8,
                     overflow_fraction: 0.0,
                     load_imbalance: 1.0,
+                    blocks: vec![],
                 },
             ],
             simd_lane: "avx2".into(),

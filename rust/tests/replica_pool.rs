@@ -63,18 +63,23 @@ fn spawn_loopback(
     replicas: usize,
     pool_cap: usize,
     transport_cap: usize,
-) -> (Arc<ReplicaPool>, NetClient, std::thread::JoinHandle<anyhow::Result<()>>) {
+) -> (
+    Arc<ReplicaPool>,
+    NetClient,
+    std::net::SocketAddr,
+    std::thread::JoinHandle<anyhow::Result<()>>,
+) {
     let pool = pool_with(replicas, pool_cap, false);
     let cfg = NetServerConfig { addr: "127.0.0.1:0".into(), max_inflight: transport_cap };
     let server = NetServer::bind(pool.clone(), &cfg).unwrap();
     let addr = server.local_addr().unwrap();
     let join = std::thread::spawn(move || server.run());
-    (pool, NetClient::new(addr.to_string()), join)
+    (pool, NetClient::new(addr.to_string()), addr, join)
 }
 
 #[test]
 fn requests_distribute_across_replicas_over_tcp() {
-    let (pool, client, join) = spawn_loopback(2, 8, 8);
+    let (pool, client, _addr, join) = spawn_loopback(2, 8, 8);
     for i in 0..8 {
         let out = client.call(&attn_request(i)).unwrap().into_tensor().unwrap();
         assert_eq!(out.shape(), &[1, N, DIM]);
@@ -98,7 +103,7 @@ fn requests_distribute_across_replicas_over_tcp() {
 #[test]
 fn saturated_pool_sheds_typed_overloaded_over_tcp() {
     // Pool caps at 0: the transport admits the request, the pool sheds it.
-    let (pool, client, join) = spawn_loopback(2, 0, 8);
+    let (pool, client, _addr, join) = spawn_loopback(2, 0, 8);
     let err = client.call(&attn_request(0)).unwrap_err();
     assert_eq!(err.code(), "overloaded");
     let hint = err.retry_after_ms().expect("pool sheds carry a retry hint over the wire");
@@ -158,7 +163,7 @@ fn bind_broadcasts_so_every_replica_serves_the_model() {
 #[test]
 fn metrics_list_documented_series_and_bypass_admission() {
     // Transport cap 0: every service POST sheds at the transport layer...
-    let (pool, client, join) = spawn_loopback(2, 4, 0);
+    let (pool, client, _addr, join) = spawn_loopback(2, 4, 0);
     let err = client.call(&attn_request(0)).unwrap_err();
     assert_eq!(err.code(), "overloaded");
     assert!(err.retry_after_ms().is_some(), "transport sheds carry a retry hint too");
@@ -178,8 +183,63 @@ fn metrics_list_documented_series_and_bypass_admission() {
 }
 
 #[test]
+fn transport_cap_sheds_independently_of_pool_counters() {
+    use std::io::{Read as _, Write as _};
+    // Transport cap 1, pool cap 4: saturate the *transport* layer while
+    // the pool still has plenty of room, so the shed below can only have
+    // come from `record_transport_shed` — the request never reaches a
+    // replica, and the per-replica counters must not move.
+    let (pool, client, addr, join) = spawn_loopback(1, 4, 1);
+
+    // Hold the single transport slot: hand-roll a service POST whose
+    // declared body arrives in two halves. After the head the server
+    // acquires the in-flight slot, then blocks reading the rest.
+    let (path, body) = mita::service::wire::encode_request(&attn_request(1));
+    let body = body.render();
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    let head = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    raw.write_all(head.as_bytes()).unwrap();
+    let split = body.len() / 2;
+    raw.write_all(&body.as_bytes()[..split]).unwrap();
+    raw.flush().unwrap();
+    // Give the handler thread a beat to parse the head and take the slot
+    // (it then parks in the body read until the second half arrives).
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    // The next service request refuses at the transport layer...
+    let err = client.call(&attn_request(2)).unwrap_err();
+    assert_eq!(err.code(), "overloaded");
+    assert!(err.retry_after_ms().is_some());
+    // ...moving the pool-wide shed counters but not the replica counters:
+    // the request was never routed.
+    let m = client.metrics().unwrap();
+    assert_eq!(m.serve_requests_total, 1);
+    assert_eq!(m.serve_shed_total, 1);
+    assert_eq!(m.replicas[0].replica_requests_total, 0, "transport sheds never reach a replica");
+
+    // Completing the held body releases the slot and the stalled request
+    // executes normally — both counters tell that story apart.
+    raw.write_all(&body.as_bytes()[split..]).unwrap();
+    raw.flush().unwrap();
+    let mut response = String::new();
+    raw.read_to_string(&mut response).unwrap();
+    assert!(response.contains("\"ok\":true"), "held request completes once its body lands: {response}");
+    let m = client.metrics().unwrap();
+    assert_eq!(m.serve_requests_total, 2);
+    assert_eq!(m.serve_shed_total, 1, "completion does not re-count the shed");
+    assert_eq!(m.replicas[0].replica_requests_total, 1);
+
+    client.shutdown().unwrap();
+    join.join().unwrap().unwrap();
+    shutdown(pool);
+}
+
+#[test]
 fn client_retries_honor_hint_then_exhaust_to_typed_overloaded() {
-    let (pool, client, join) = spawn_loopback(1, 0, 8);
+    let (pool, client, _addr, join) = spawn_loopback(1, 0, 8);
     let client = client.with_retries(2);
     let t0 = std::time::Instant::now();
     let err = client.call(&attn_request(0)).unwrap_err();

@@ -1,0 +1,164 @@
+//! End-to-end trace correctness over the full TCP path
+//! (docs/OBSERVABILITY.md):
+//!
+//! - every traced response echoes its `trace_id` — client-supplied ids
+//!   verbatim, server-allocated ids unique;
+//! - `GET /v1/trace` shows those ids with non-zero stage spans, the
+//!   spans are non-negative and their sum never exceeds the recorded
+//!   wall time (stages are disjoint);
+//! - model-forward traces carry one per-block profile per transformer
+//!   block, attention traces carry none;
+//! - `limit` and `min_us` filter the export as documented.
+//!
+//! Ring *eviction* order is pinned by the `trace.rs` unit tests (a
+//! loopback eviction test would need capacity+1 = 257 engine round
+//! trips); here the `pushed`/`capacity` accounting is checked instead.
+
+use std::sync::Arc;
+
+use mita::coordinator::{NetClient, NetServer, NetServerConfig, ReplicaPool, ReplicaPoolConfig};
+use mita::data::lra;
+use mita::data::rng::Rng;
+use mita::data::Split;
+use mita::model::{ModelConfig, OP_MODEL_INIT};
+use mita::runtime::{BackendSpec, NativeAttnConfig, Tensor};
+use mita::service::{wire, KernelId, QkvBatch, ServiceRequest};
+use mita::util::json::Value;
+
+const N: usize = 32;
+const DIM: usize = 16;
+const DEPTH: usize = 2;
+
+fn attn_request(seed: u64) -> ServiceRequest {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..3 * N * DIM).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    ServiceRequest::Attention {
+        op: KernelId::Mita,
+        qkv: QkvBatch::fused(Tensor::f32(&[1, 3, N, DIM], data).unwrap()).unwrap(),
+        valid_rows: None,
+    }
+}
+
+/// One model-capable replica behind the network front, model bound.
+fn spawn_loopback() -> (Arc<ReplicaPool>, NetClient, std::thread::JoinHandle<anyhow::Result<()>>)
+{
+    let task = lra::by_name("listops", N, 16, 7);
+    let mcfg = ModelConfig::for_task(task.as_ref(), DIM, 2, DEPTH, "attn.mita");
+    let attn = NativeAttnConfig::for_shape(N, DIM, 2).with_model(mcfg);
+    let cfg = ReplicaPoolConfig { replicas: 1, max_inflight: 8, retry_after_ms: 1 };
+    let pool =
+        Arc::new(ReplicaPool::spawn(BackendSpec::Native(attn), vec![], cfg).unwrap());
+    pool.call(ServiceRequest::BindInit {
+        binding: "model".into(),
+        init_op: OP_MODEL_INIT.to_string(),
+        seed: 7,
+        param_count: 0,
+    })
+    .unwrap();
+    let cfg = NetServerConfig { addr: "127.0.0.1:0".into(), max_inflight: 8 };
+    let server = NetServer::bind(pool.clone(), &cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let join = std::thread::spawn(move || server.run());
+    (pool, NetClient::new(addr.to_string()), join)
+}
+
+fn shutdown(pool: Arc<ReplicaPool>) {
+    if let Ok(pool) = Arc::try_unwrap(pool) {
+        pool.shutdown();
+    }
+}
+
+fn span(trace: &Value, key: &str) -> f64 {
+    trace.get("spans").unwrap().get(key).unwrap().as_f64().unwrap()
+}
+
+#[test]
+fn traces_echo_ids_and_export_consistent_spans() {
+    let (pool, client, join) = spawn_loopback();
+
+    // Client-supplied trace ids (well above anything the allocator hands
+    // out in this process) come back verbatim in each response body.
+    let explicit: Vec<u64> = vec![900_001, 900_002, 900_003];
+    for (i, &id) in explicit.iter().enumerate() {
+        let (path, body) = wire::encode_request(&attn_request(i as u64));
+        let body = wire::with_trace_id(body, id);
+        let (status, text) = client.http_raw("POST", path, &body.render()).unwrap();
+        assert_eq!(status, 200, "{text}");
+        assert!(
+            text.contains(&format!("\"trace_id\":{id}")),
+            "response must echo the supplied trace id {id}: {text}"
+        );
+    }
+
+    // Server-allocated ids: a model forward (per-block profiles) and an
+    // untagged attention request.
+    let task = lra::by_name("listops", N, 16, 7);
+    let (tokens, _) = task.sample(Split::Val, 0);
+    let tokens = Tensor::i32(&[1, N], tokens).unwrap();
+    client
+        .call(&ServiceRequest::ModelForward {
+            binding: "model".into(),
+            tokens,
+            valid_rows: None,
+        })
+        .unwrap();
+    client.call(&attn_request(9)).unwrap();
+
+    let body = Value::parse(&client.trace_raw(None, None).unwrap()).unwrap();
+    let traces = body.get("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 5, "all five compute requests were traced");
+    assert_eq!(body.get("pushed").unwrap().as_f64().unwrap() as u64, 5);
+    assert!(body.get("capacity").unwrap().as_f64().unwrap() as usize >= 5);
+
+    // Ids are unique and include every client-supplied one.
+    let mut ids: Vec<u64> =
+        traces.iter().map(|t| t.get("trace_id").unwrap().as_f64().unwrap() as u64).collect();
+    ids.sort_unstable();
+    let mut deduped = ids.clone();
+    deduped.dedup();
+    assert_eq!(ids, deduped, "trace ids must be unique");
+    for id in &explicit {
+        assert!(ids.contains(id), "supplied id {id} missing from /v1/trace export");
+    }
+
+    // Stage spans: non-negative, execute non-zero, and (stages being
+    // disjoint) their sum never exceeds the recorded wall time. The
+    // small epsilon absorbs ns → us float rounding.
+    for t in traces {
+        assert!(t.get("ok").unwrap().as_bool().unwrap());
+        let total = span(t, "total_us");
+        let staged = span(t, "admission_us")
+            + span(t, "route_us")
+            + span(t, "queue_us")
+            + span(t, "batch_us")
+            + span(t, "execute_us");
+        assert!(total > 0.0, "traced request has wall time");
+        assert!(span(t, "execute_us") > 0.0, "backend execute was bracketed");
+        assert!(
+            staged <= total + 1e-3,
+            "stage spans ({staged}us) exceed wall time ({total}us)"
+        );
+        let blocks = t.get("blocks").unwrap().as_arr().unwrap();
+        match t.get("kind").unwrap().as_str().unwrap() {
+            "model_forward" => {
+                assert_eq!(blocks.len(), DEPTH, "one profile per transformer block");
+                for b in blocks {
+                    assert!(b.get("attn_us").unwrap().as_f64().unwrap() > 0.0);
+                    assert!(b.get("queries").unwrap().as_f64().unwrap() > 0.0);
+                }
+            }
+            _ => assert!(blocks.is_empty(), "non-model traces carry no block profiles"),
+        }
+    }
+
+    // `limit` caps the export newest-first; `min_us` filters out
+    // everything when set absurdly high.
+    let body = Value::parse(&client.trace_raw(Some(2), None).unwrap()).unwrap();
+    assert_eq!(body.get("traces").unwrap().as_arr().unwrap().len(), 2);
+    let body = Value::parse(&client.trace_raw(None, Some(u64::MAX / 2)).unwrap()).unwrap();
+    assert!(body.get("traces").unwrap().as_arr().unwrap().is_empty());
+
+    client.shutdown().unwrap();
+    join.join().unwrap().unwrap();
+    shutdown(pool);
+}

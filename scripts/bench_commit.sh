@@ -9,26 +9,40 @@
 #
 # Each trajectory file is {"bench": ..., "entries": [...]} where every
 # entry is exactly the JSON one bench run wrote (its "simd_lane" field
-# tells scalar baseline and dispatched runs apart) plus "recorded_utc"
-# and the recording commit. Run from anywhere inside the repo; commit
+# tells scalar baseline and dispatched runs apart) plus "recorded_utc",
+# the recording commit (short SHA **and** `git describe --dirty`, so a
+# point recorded from an uncommitted tree is visibly tainted), and the
+# lane the run was forced to. Run from anywhere inside the repo; commit
 # the two root files afterwards to extend the trajectory. See
 # docs/PERF.md for how the trajectory is read.
 set -euo pipefail
 
 cd "$(git rev-parse --show-toplevel)"
 commit=$(git rev-parse --short HEAD)
+# --always: repos without tags fall back to the abbreviated SHA (still
+# carrying the -dirty suffix when the working tree has changes).
+describe=$(git describe --always --dirty)
 
-append() { # append <run-json> into <trajectory-json> tagged with commit
-    python3 - "$1" "$2" "$commit" <<'PY'
+append() { # append <run-json> <trajectory-json> <forced-lane>
+    python3 - "$1" "$2" "$3" "$commit" "$describe" <<'PY'
 import json, sys, datetime
 
-run_path, traj_path, commit = sys.argv[1:4]
+run_path, traj_path, lane, commit, describe = sys.argv[1:6]
 with open(run_path) as f:
     entry = json.load(f)
 entry["recorded_utc"] = datetime.datetime.now(datetime.timezone.utc).isoformat(
     timespec="seconds"
 )
 entry["commit"] = commit
+entry["describe"] = describe
+
+# The bench stamps the lane it actually dispatched; a mismatch with the
+# forced MITA_SIMD means the point would be attributed to the wrong
+# lane — refuse to record it.
+ran = entry.get("simd_lane")
+if ran is not None and lane != "auto" and ran != lane:
+    sys.exit(f"{run_path}: bench ran lane {ran!r} but {lane!r} was forced")
+entry.setdefault("simd_lane", lane)
 
 try:
     with open(traj_path) as f:
@@ -41,18 +55,21 @@ traj.pop("note", None)  # drop the unpopulated-skeleton marker once real
 with open(traj_path, "w") as f:
     json.dump(traj, f, indent=2)
     f.write("\n")
-print(f"appended {run_path} (simd_lane={entry.get('simd_lane')}) -> {traj_path}")
+print(
+    f"appended {run_path} (simd_lane={entry.get('simd_lane')}, "
+    f"describe={describe}) -> {traj_path}"
+)
 PY
 }
 
 for lane in scalar auto; do
     echo "== attn_microbench --quick (MITA_SIMD=$lane) =="
     (cd rust && MITA_SIMD=$lane cargo bench --bench attn_microbench -- --quick)
-    append rust/BENCH_attn_native.json BENCH_attn_native.json
+    append rust/BENCH_attn_native.json BENCH_attn_native.json "$lane"
 
     echo "== model_native --quick (MITA_SIMD=$lane) =="
     (cd rust && MITA_SIMD=$lane cargo bench --bench model_native -- --quick)
-    append rust/BENCH_model_native.json BENCH_model_native.json
+    append rust/BENCH_model_native.json BENCH_model_native.json "$lane"
 done
 
 echo
