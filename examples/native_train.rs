@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     trainer.model().save(&path)?;
     println!("checkpoint saved to {}", path.display());
 
-    // ...and reload it exactly the way `serve-model --checkpoint` does:
+    // ...and reload it exactly the way `serve --workload model --checkpoint` does:
     // BindCheckpoint on the native backend, then typed model-forward.
     let mut backend = NativeBackend::new(NativeAttnConfig::for_shape(seq, 32, 2));
     backend.execute(ServiceRequest::BindCheckpoint {

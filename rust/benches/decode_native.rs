@@ -1,0 +1,275 @@
+//! Bench: autoregressive decoding over the causal kernels — prefill
+//! throughput and per-token decode latency (see docs/DECODE.md).
+//!
+//! Two levels, matching how the subsystem is layered:
+//!
+//! - **model rows**: full greedy [`generate`] sessions (KV cache + the
+//!   single-token transformer forward) through incremental causal MiTA
+//!   vs causal dense, reporting prefill tokens/s and mean per-token
+//!   decode latency;
+//! - **state rows**: the attention core alone — the incremental
+//!   [`CausalMitaState`] `append_key` + `attend` loop vs the
+//!   full-recompute reference ([`recompute_attend`] per step), i.e. the
+//!   O(1)-amortized fast-weight update vs the O(n) re-routing it
+//!   replaces. The speedup column is the point of the subsystem.
+//!
+//! Everything lands in `BENCH_decode_native.json` so CI can archive the
+//! decode perf trajectory next to the attention/model/train ones
+//! (scripts/bench_commit.sh appends it to the repo-root trajectory).
+//!
+//! Quick mode for CI smoke runs: pass `--quick` after `--`, or set
+//! `MITA_BENCH_QUICK=1`.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use mita::data::rng::Rng;
+use mita::decode::generate::generate;
+use mita::decode::state::recompute_attend;
+use mita::decode::{CausalMitaState, DecodeKernel};
+use mita::kernels::MitaKernelConfig;
+use mita::model::{MitaModel, ModelConfig};
+
+/// Model shape shared by every model-level row.
+const VOCAB: usize = 32;
+const DIM: usize = 64;
+const HEADS: usize = 4;
+const DEPTH: usize = 2;
+const CLASSES: usize = 4;
+
+struct ModelRow {
+    variant: &'static str,
+    prompt: usize,
+    gen: usize,
+    prefill_ms: f64,
+    prefill_tok_per_s: f64,
+    decode_us_per_tok: f64,
+    decode_tok_per_s: f64,
+}
+
+struct StateRow {
+    n: usize,
+    d: usize,
+    m: usize,
+    k: usize,
+    inc_us_per_tok: f64,
+    rec_us_per_tok: f64,
+    speedup: f64,
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("MITA_BENCH_QUICK").is_ok_and(|v| v == "1");
+    let budget = if quick { 0.3 } else { 1.0 };
+    // (prompt, generated) per session; seq_len = prompt + gen.
+    let sessions: &[(usize, usize)] =
+        if quick { &[(32, 32)] } else { &[(32, 32), (128, 128), (256, 256)] };
+    // Key-stream lengths for the attention-core comparison.
+    let streams: &[usize] = if quick { &[128] } else { &[256, 512, 1024] };
+
+    println!(
+        "# decode_native — prefill + per-token decode (dim={DIM}, heads={HEADS}, \
+         depth={DEPTH}, quick={quick}, threads={}, simd_lane={})",
+        mita::kernels::par::num_threads(),
+        mita::kernels::simd::active_lane()
+    );
+
+    let mut model_rows = Vec::new();
+    for &(prompt, gen) in sessions {
+        for kernel in [DecodeKernel::Mita, DecodeKernel::Dense] {
+            model_rows.push(run_session(prompt, gen, kernel, budget));
+        }
+    }
+    println!("\nvariant, prompt, gen, prefill_ms, prefill_tok/s, decode_us/tok, decode_tok/s");
+    for r in &model_rows {
+        println!(
+            "{}, {}, {}, {:.3}, {:.0}, {:.2}, {:.0}",
+            r.variant,
+            r.prompt,
+            r.gen,
+            r.prefill_ms,
+            r.prefill_tok_per_s,
+            r.decode_us_per_tok,
+            r.decode_tok_per_s
+        );
+    }
+
+    let mut state_rows = Vec::new();
+    for &n in streams {
+        state_rows.push(run_stream(n, budget));
+    }
+    println!("\nn, d, m, k, incremental_us/tok, recompute_us/tok, speedup");
+    for r in &state_rows {
+        println!(
+            "{}, {}, {}, {}, {:.2}, {:.2}, x{:.2}",
+            r.n, r.d, r.m, r.k, r.inc_us_per_tok, r.rec_us_per_tok, r.speedup
+        );
+    }
+
+    write_json(quick, &model_rows, &state_rows);
+}
+
+/// Full greedy generation sessions under a wall-clock budget; prefill
+/// and decode wall times come from the [`generate`] outcome itself, so
+/// the split is exactly what the serving trace reports.
+fn run_session(prompt_len: usize, gen: usize, kernel: DecodeKernel, budget: f64) -> ModelRow {
+    let seq_len = prompt_len + gen;
+    let cfg =
+        ModelConfig::new(VOCAB, seq_len, DIM, HEADS, DEPTH, 2 * DIM, CLASSES, kernel.causal_op());
+    let model = MitaModel::init(cfg, 7).expect("model init");
+    let mut rng = Rng::new(0xDEC0);
+    let prompt: Vec<i32> = (0..prompt_len).map(|_| rng.below(VOCAB) as i32).collect();
+    let mut nop = |_: usize, _: i32, _: u64| {};
+
+    // Warm once (first call touches cold caches), then measure.
+    generate(&model, Some(kernel), &prompt, gen, &mut nop).expect("warmup");
+    let (mut prefill_ns, mut decode_ns, mut sessions) = (0u64, 0u64, 0u64);
+    let t0 = Instant::now();
+    loop {
+        let out = generate(&model, Some(kernel), &prompt, gen, &mut nop).expect("generate");
+        prefill_ns += out.prefill_ns;
+        decode_ns += out.decode_ns;
+        sessions += 1;
+        if t0.elapsed().as_secs_f64() >= budget {
+            break;
+        }
+    }
+    // Step 0 rides the prefill pass; the decode loop covers gen-1 steps.
+    let prefill_toks = (sessions * prompt_len as u64) as f64;
+    let decode_toks = (sessions * (gen as u64 - 1)) as f64;
+    let row = ModelRow {
+        variant: kernel.causal_op(),
+        prompt: prompt_len,
+        gen,
+        prefill_ms: prefill_ns as f64 / sessions as f64 / 1e6,
+        prefill_tok_per_s: prefill_toks / (prefill_ns as f64 / 1e9),
+        decode_us_per_tok: decode_ns as f64 / 1e3 / decode_toks,
+        decode_tok_per_s: decode_toks / (decode_ns as f64 / 1e9),
+    };
+    println!(
+        "  {} prompt={} gen={}: {} sessions in {:.2}s",
+        row.variant,
+        prompt_len,
+        gen,
+        sessions,
+        t0.elapsed().as_secs_f64()
+    );
+    row
+}
+
+/// The attention core alone over one synthetic (block, head) stream:
+/// incremental state maintenance vs per-step full recompute. Outputs are
+/// asserted bit-identical before timing — this bench never races ahead
+/// of the parity gate in tests/decode_native.rs.
+fn run_stream(n: usize, budget: f64) -> StateRow {
+    let d = DIM / HEADS;
+    let cfg = MitaKernelConfig::for_seq(n);
+    let mut rng = Rng::new(0xFA57);
+    let q: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let k: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let v: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut out = vec![0.0f32; d];
+
+    // Parity check once, outside the timed loops.
+    let mut st = CausalMitaState::new(n, d, &cfg);
+    for t in 0..n {
+        st.append_key(&k);
+        st.attend(&q[t * d..(t + 1) * d], &k, &v, &mut out);
+        let (_, reference) = recompute_attend(&q[t * d..(t + 1) * d], &k, &v, t, d, n, &cfg);
+        assert_eq!(out, reference, "incremental path diverged at step {t} (n={n})");
+    }
+
+    // Incremental: one full n-step stream per iteration.
+    let (mut inc_ns, mut inc_toks) = (0u64, 0u64);
+    let t0 = Instant::now();
+    loop {
+        let mut st = CausalMitaState::new(n, d, &cfg);
+        let it0 = Instant::now();
+        for t in 0..n {
+            st.append_key(&k);
+            st.attend(&q[t * d..(t + 1) * d], &k, &v, &mut out);
+        }
+        inc_ns += it0.elapsed().as_nanos() as u64;
+        inc_toks += n as u64;
+        if t0.elapsed().as_secs_f64() >= budget {
+            break;
+        }
+    }
+
+    // Full recompute: the same stream, re-deriving landmarks, experts,
+    // and routing from the whole key cache at every step.
+    let (mut rec_ns, mut rec_toks) = (0u64, 0u64);
+    let t0 = Instant::now();
+    loop {
+        let it0 = Instant::now();
+        for t in 0..n {
+            let (_, o) = recompute_attend(&q[t * d..(t + 1) * d], &k, &v, t, d, n, &cfg);
+            std::hint::black_box(&o);
+        }
+        rec_ns += it0.elapsed().as_nanos() as u64;
+        rec_toks += n as u64;
+        if t0.elapsed().as_secs_f64() >= budget {
+            break;
+        }
+    }
+
+    let inc = inc_ns as f64 / 1e3 / inc_toks as f64;
+    let rec = rec_ns as f64 / 1e3 / rec_toks as f64;
+    StateRow {
+        n,
+        d,
+        m: cfg.m,
+        k: cfg.k,
+        inc_us_per_tok: inc,
+        rec_us_per_tok: rec,
+        speedup: rec / inc,
+    }
+}
+
+/// JSON artifact for the CI perf trajectory (same envelope fields as
+/// the other native benches; scripts/bench_commit.sh stamps the lane).
+fn write_json(quick: bool, model_rows: &[ModelRow], state_rows: &[StateRow]) {
+    let mut json = String::new();
+    let _ = writeln!(json, "{{");
+    let _ = writeln!(json, "  \"bench\": \"decode_native\",");
+    let _ = writeln!(json, "  \"vocab\": {VOCAB},");
+    let _ = writeln!(json, "  \"dim\": {DIM},");
+    let _ = writeln!(json, "  \"heads\": {HEADS},");
+    let _ = writeln!(json, "  \"depth\": {DEPTH},");
+    let _ = writeln!(json, "  \"quick\": {quick},");
+    let _ = writeln!(json, "  \"threads\": {},", mita::kernels::par::num_threads());
+    let _ = writeln!(json, "  \"simd_lane\": \"{}\",", mita::kernels::simd::active_lane());
+    let _ = writeln!(json, "  \"model_rows\": [");
+    for (i, r) in model_rows.iter().enumerate() {
+        let comma = if i + 1 < model_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"variant\": \"{}\", \"prompt\": {}, \"gen\": {}, \"prefill_ms\": {:.4}, \
+             \"prefill_tok_per_s\": {:.1}, \"decode_us_per_tok\": {:.3}, \
+             \"decode_tok_per_s\": {:.1}}}{comma}",
+            r.variant,
+            r.prompt,
+            r.gen,
+            r.prefill_ms,
+            r.prefill_tok_per_s,
+            r.decode_us_per_tok,
+            r.decode_tok_per_s
+        );
+    }
+    let _ = writeln!(json, "  ],");
+    let _ = writeln!(json, "  \"state_rows\": [");
+    for (i, r) in state_rows.iter().enumerate() {
+        let comma = if i + 1 < state_rows.len() { "," } else { "" };
+        let _ = writeln!(
+            json,
+            "    {{\"n\": {}, \"d\": {}, \"m\": {}, \"k\": {}, \
+             \"incremental_us_per_tok\": {:.3}, \"recompute_us_per_tok\": {:.3}, \
+             \"speedup\": {:.3}}}{comma}",
+            r.n, r.d, r.m, r.k, r.inc_us_per_tok, r.rec_us_per_tok, r.speedup
+        );
+    }
+    let _ = writeln!(json, "  ]");
+    let _ = writeln!(json, "}}");
+    std::fs::write("BENCH_decode_native.json", json).expect("write BENCH_decode_native.json");
+    println!("\nwrote BENCH_decode_native.json");
+}

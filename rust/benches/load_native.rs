@@ -121,7 +121,12 @@ fn make_payloads() -> Vec<ServiceRequest> {
 
 fn spawn_pool(replicas: usize) -> ReplicaPool {
     let spec = BackendSpec::Native(NativeAttnConfig::for_shape(N, DIM, HEADS));
-    let cfg = ReplicaPoolConfig { replicas, max_inflight: MAX_INFLIGHT, retry_after_ms: 1 };
+    let cfg = ReplicaPoolConfig {
+        replicas,
+        max_inflight: MAX_INFLIGHT,
+        retry_after_ms: 1,
+        ..Default::default()
+    };
     ReplicaPool::spawn(spec, vec![], cfg).expect("replica pool")
 }
 

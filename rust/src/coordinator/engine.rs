@@ -31,6 +31,7 @@ use crate::kernels::api::BlockProfile;
 use crate::runtime::{BackendSpec, Tensor};
 use crate::service::{
     BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse, ServiceResult,
+    StepEvent,
 };
 
 /// Combined backend counters returned by [`EngineHandle::backend_stats`]
@@ -45,6 +46,10 @@ pub type EngineStats = crate::service::ServiceStats;
 pub struct ExecProfile {
     /// Wall time spent inside `Backend::execute`, nanoseconds.
     pub execute_ns: u64,
+    /// Of `execute_ns`, the wall time spent inside the decode loop (0 for
+    /// anything but a generate request). Lets traces split prefill from
+    /// token-by-token decoding.
+    pub decode_ns: u64,
     /// Per-transformer-block profile of a model forward (empty for other
     /// request classes and for backends without per-block recording).
     pub blocks: Vec<BlockProfile>,
@@ -56,8 +61,14 @@ type Reply = (ServiceResult<ServiceResponse>, ExecProfile);
 enum EngineMsg {
     /// Execute one typed request; the result travels back over the
     /// ticket's dedicated channel (the correlation id stays caller-side,
-    /// on the [`Ticket`] — the engine has no use for it).
-    Job { req: ServiceRequest, reply: mpsc::Sender<Reply> },
+    /// on the [`Ticket`] — the engine has no use for it). When `steps` is
+    /// present, per-token [`StepEvent`]s of a generate request stream
+    /// over it while the job runs (the channel closes with the job).
+    Job {
+        req: ServiceRequest,
+        reply: mpsc::Sender<Reply>,
+        steps: Option<mpsc::Sender<StepEvent>>,
+    },
     /// Stop the engine loop (makes `shutdown` safe even while other
     /// EngineHandle clones are still alive).
     Shutdown,
@@ -134,10 +145,30 @@ impl EngineHandle {
     /// Enqueue a request and return its [`Ticket`] without blocking on
     /// execution. Fails only if the engine thread is gone.
     pub fn submit(&self, req: ServiceRequest) -> ServiceResult<Ticket> {
+        self.submit_with_steps(req, None)
+    }
+
+    /// Like [`EngineHandle::submit`], but generate requests stream one
+    /// [`StepEvent`] per decoded token over `steps` while executing. The
+    /// sender is dropped when the job finishes, so a receiver loop ends
+    /// cleanly before [`Ticket::wait`] returns.
+    pub fn submit_streaming(
+        &self,
+        req: ServiceRequest,
+        steps: mpsc::Sender<StepEvent>,
+    ) -> ServiceResult<Ticket> {
+        self.submit_with_steps(req, Some(steps))
+    }
+
+    fn submit_with_steps(
+        &self,
+        req: ServiceRequest,
+        steps: Option<mpsc::Sender<StepEvent>>,
+    ) -> ServiceResult<Ticket> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(EngineMsg::Job { req, reply })
+            .send(EngineMsg::Job { req, reply, steps })
             .map_err(|_| ServiceError::Unavailable("engine thread terminated".into()))?;
         Ok(Ticket { id, rx })
     }
@@ -268,7 +299,7 @@ impl Engine {
                 while let Ok(msg) = rx.recv() {
                     match msg {
                         EngineMsg::Shutdown => break,
-                        EngineMsg::Job { req, reply } => {
+                        EngineMsg::Job { req, reply, steps } => {
                             // Panic isolation: the engine serves untrusted
                             // network input through the netserver front; a
                             // panicking backend must surface as a typed
@@ -279,7 +310,15 @@ impl Engine {
                             // unwind, so the backend stays usable.)
                             let t0 = Instant::now();
                             let result = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(|| backend.execute(req)),
+                                std::panic::AssertUnwindSafe(|| match &steps {
+                                    // A dropped step receiver means the
+                                    // caller stopped listening; decoding
+                                    // still completes for the ticket.
+                                    Some(tx) => backend.execute_streaming(req, &mut |ev| {
+                                        let _ = tx.send(ev);
+                                    }),
+                                    None => backend.execute(req),
+                                }),
                             )
                             .unwrap_or_else(|panic| {
                                 let msg = panic
@@ -295,10 +334,16 @@ impl Engine {
                             // the next request's trace) but attach it only
                             // to the job that produced it successfully.
                             let blocks = backend.take_block_profiles();
+                            let decode_ns = backend.take_decode_ns();
                             let profile = ExecProfile {
                                 execute_ns: t0.elapsed().as_nanos() as u64,
+                                decode_ns: if result.is_ok() { decode_ns } else { 0 },
                                 blocks: if result.is_ok() { blocks } else { Vec::new() },
                             };
+                            // Close the step channel before the reply so a
+                            // streaming caller's receive loop always ends
+                            // ahead of the ticket completing.
+                            drop(steps);
                             // A dropped reply receiver just means the
                             // caller stopped caring about this ticket.
                             let _ = reply.send((result, profile));
@@ -440,6 +485,60 @@ mod tests {
             prof.execute_ns >= prof.blocks.iter().map(|b| b.attn_ns + b.mlp_ns).sum::<u64>(),
             "execute wall time bounds the per-block spans"
         );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn streaming_submission_delivers_steps_before_completion() {
+        use crate::kernels::OP_ATTN_MITA;
+        use crate::model::{ModelConfig, OP_MODEL_INIT};
+        use crate::service::GenerateParams;
+
+        let mcfg = ModelConfig::new(7, 16, 8, 2, 1, 16, 3, OP_ATTN_MITA);
+        let attn = NativeAttnConfig::for_shape(16, 8, 2).with_model(mcfg);
+        let engine = Engine::spawn_backend(BackendSpec::Native(attn), vec![]).unwrap();
+        let handle = engine.handle();
+        handle.bind_init("m", OP_MODEL_INIT, 3, 0).unwrap();
+
+        let (tx, rx) = mpsc::channel();
+        let t = handle
+            .submit_streaming(
+                ServiceRequest::Generate {
+                    binding: BindingId::from("m"),
+                    prompt: Tensor::i32(&[3], vec![1, 2, 3]).unwrap(),
+                    max_tokens: 5,
+                    params: GenerateParams::default(),
+                },
+                tx,
+            )
+            .unwrap();
+        // The step channel closes before the ticket completes, so this
+        // drain never deadlocks against wait_profiled below.
+        let events: Vec<StepEvent> = rx.iter().collect();
+        let (result, prof) = t.wait_profiled();
+        let tokens = match result.unwrap() {
+            ServiceResponse::Generate { tokens, prefill_tokens } => {
+                assert_eq!(prefill_tokens, 3);
+                tokens
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        };
+        assert_eq!(events.len(), 5, "one event per emitted token");
+        let streamed: Vec<i32> = events.iter().map(|e| e.token).collect();
+        assert_eq!(streamed, tokens.as_i32().unwrap());
+        assert!(
+            prof.decode_ns > 0 && prof.decode_ns <= prof.execute_ns,
+            "decode time is a sub-span of execute time"
+        );
+
+        // Non-generate jobs down the streaming path emit nothing, close
+        // the channel, and report zero decode time.
+        let (tx, rx) = mpsc::channel();
+        let t = handle.submit_streaming(ServiceRequest::Stats { reset: false }, tx).unwrap();
+        assert!(rx.iter().next().is_none(), "stats jobs stream no steps");
+        let (result, prof) = t.wait_profiled();
+        result.unwrap();
+        assert_eq!(prof.decode_ns, 0);
         engine.shutdown();
     }
 

@@ -190,6 +190,9 @@ pub const METRIC_NAMES: &[&str] = &[
     "replica_queue_depth",
     "overflow_fraction",
     "load_imbalance",
+    "tokens_generated_total",
+    "prefill_tokens_total",
+    "decode_step_latency_us",
     "simd_lane",
 ];
 
@@ -217,12 +220,21 @@ pub const METRIC_EXPERT_QUERIES: &str = "mita_expert_queries_total";
 ///   returned an error (sheds are not double-counted here).
 /// - `request_latency_us` — submit→settle latency of successfully
 ///   executed requests, on the fixed log-spaced bucket grid.
+/// - `tokens_generated_total` — tokens emitted by successful generate
+///   requests; `prefill_tokens_total` — prompt tokens those requests
+///   prefilled (so generated/prefill ratios fall out of two counters).
+/// - `decode_step_latency_us` — per-token decode-step latency of
+///   streamed generate steps (step 0, the prefill tail, is not
+///   recorded), on the same fixed bucket grid.
 #[derive(Debug, Default)]
 pub struct ServeMetrics {
     requests_total: AtomicU64,
     shed_total: AtomicU64,
     errors_total: AtomicU64,
     latency: Mutex<LatencyHistogram>,
+    tokens_generated_total: AtomicU64,
+    prefill_tokens_total: AtomicU64,
+    decode_latency: Mutex<LatencyHistogram>,
 }
 
 impl ServeMetrics {
@@ -246,6 +258,19 @@ impl ServeMetrics {
         self.latency.lock().expect("latency lock").record(d);
     }
 
+    /// Count one settled generate request: its emitted tokens and the
+    /// prompt tokens it prefilled.
+    pub fn record_generate(&self, tokens: u64, prefill_tokens: u64) {
+        self.tokens_generated_total.fetch_add(tokens, Ordering::Relaxed);
+        self.prefill_tokens_total.fetch_add(prefill_tokens, Ordering::Relaxed);
+    }
+
+    /// Record one decode step's latency (callers skip step 0 — its
+    /// compute is the prefill tail, not a decode step).
+    pub fn record_decode_step(&self, d: Duration) {
+        self.decode_latency.lock().expect("decode latency lock").record(d);
+    }
+
     pub fn requests_total(&self) -> u64 {
         self.requests_total.load(Ordering::Relaxed)
     }
@@ -266,6 +291,18 @@ impl ServeMetrics {
 
     pub fn latency_snapshot(&self) -> HistogramSnapshot {
         self.latency.lock().expect("latency lock").snapshot()
+    }
+
+    pub fn tokens_generated_total(&self) -> u64 {
+        self.tokens_generated_total.load(Ordering::Relaxed)
+    }
+
+    pub fn prefill_tokens_total(&self) -> u64 {
+        self.prefill_tokens_total.load(Ordering::Relaxed)
+    }
+
+    pub fn decode_latency_snapshot(&self) -> HistogramSnapshot {
+        self.decode_latency.lock().expect("decode latency lock").snapshot()
     }
 }
 
@@ -332,6 +369,13 @@ pub struct MetricsSnapshot {
     pub serve_shed_total: u64,
     pub serve_errors_total: u64,
     pub request_latency_us: HistogramSnapshot,
+    /// Tokens emitted by successful generate requests (pool-wide).
+    pub tokens_generated_total: u64,
+    /// Prompt tokens prefilled by those requests.
+    pub prefill_tokens_total: u64,
+    /// Per-token decode-step latency histogram (streamed generate steps
+    /// past step 0).
+    pub decode_step_latency_us: HistogramSnapshot,
     pub replicas: Vec<ReplicaSnapshot>,
     /// SIMD lane the serving process dispatched its kernels to at
     /// startup (`scalar` | `portable` | `avx2` | `neon`; see
@@ -398,6 +442,26 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
     line(format!("request_latency_us_bucket{{le=\"+Inf\"}} {}", h.count));
     line(format!("request_latency_us_sum {}", prom_value(h.sum_us)));
     line(format!("request_latency_us_count {}", h.count));
+
+    line("# TYPE tokens_generated_total counter".into());
+    line(format!("tokens_generated_total {}", snap.tokens_generated_total));
+    line("# TYPE prefill_tokens_total counter".into());
+    line(format!("prefill_tokens_total {}", snap.prefill_tokens_total));
+    // Always emitted, even before any generate traffic (the registry
+    // contract asserts every documented series is present).
+    line("# TYPE decode_step_latency_us histogram".into());
+    let h = &snap.decode_step_latency_us;
+    let mut cumulative = 0u64;
+    for &(le_us, count) in &h.buckets {
+        cumulative += count;
+        line(format!(
+            "decode_step_latency_us_bucket{{le=\"{}\"}} {cumulative}",
+            prom_value(le_us)
+        ));
+    }
+    line(format!("decode_step_latency_us_bucket{{le=\"+Inf\"}} {}", h.count));
+    line(format!("decode_step_latency_us_sum {}", prom_value(h.sum_us)));
+    line(format!("decode_step_latency_us_count {}", h.count));
 
     line("# TYPE replica_requests_total counter".into());
     for r in &snap.replicas {
@@ -671,16 +735,25 @@ mod tests {
         m.record_shed();
         m.record_error();
         m.record_latency(Duration::from_millis(2));
+        m.record_generate(6, 4);
+        m.record_generate(2, 1);
+        m.record_decode_step(Duration::from_micros(80));
         assert_eq!(m.requests_total(), 2);
         assert_eq!(m.shed_total(), 1);
         assert_eq!(m.errors_total(), 1);
         assert!((m.mean_latency_ms() - 2.0).abs() < 1e-9);
         assert_eq!(m.latency_snapshot().count, 1);
+        assert_eq!(m.tokens_generated_total(), 8);
+        assert_eq!(m.prefill_tokens_total(), 5);
+        assert_eq!(m.decode_latency_snapshot().count, 1);
         let snap = MetricsSnapshot {
             serve_requests_total: m.requests_total(),
             serve_shed_total: m.shed_total(),
             serve_errors_total: m.errors_total(),
             request_latency_us: m.latency_snapshot(),
+            tokens_generated_total: m.tokens_generated_total(),
+            prefill_tokens_total: m.prefill_tokens_total(),
+            decode_step_latency_us: m.decode_latency_snapshot(),
             replicas: vec![],
             simd_lane: "scalar".into(),
         };
@@ -695,11 +768,16 @@ mod tests {
             m.record_request();
             m.record_latency(Duration::from_micros(us));
         }
+        m.record_generate(3, 2);
+        m.record_decode_step(Duration::from_micros(120));
         let snap = MetricsSnapshot {
             serve_requests_total: m.requests_total(),
             serve_shed_total: 0,
             serve_errors_total: 0,
             request_latency_us: m.latency_snapshot(),
+            tokens_generated_total: m.tokens_generated_total(),
+            prefill_tokens_total: m.prefill_tokens_total(),
+            decode_step_latency_us: m.decode_latency_snapshot(),
             replicas: vec![ReplicaSnapshot {
                 replica: 0,
                 replica_requests_total: 4,
@@ -733,6 +811,12 @@ mod tests {
         assert!(text.contains("mita_block_overflow_fraction{replica=\"0\",block=\"0\"} 0.125"));
         assert!(text.contains("mita_expert_queries_total{replica=\"0\",block=\"0\",expert=\"1\"} 24"));
         assert!(text.contains("simd_lane{lane=\"scalar\"} 1"), "{text}");
+
+        // Decode telemetry renders with its own counters + histogram.
+        assert!(text.contains("tokens_generated_total 3"), "{text}");
+        assert!(text.contains("prefill_tokens_total 2"), "{text}");
+        assert!(text.contains("decode_step_latency_us_count 1"), "{text}");
+        assert!(text.contains("decode_step_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
 
         // The whole payload passes the grammar + coverage checker.
         let samples = check_prometheus_text(&text).unwrap();

@@ -35,8 +35,8 @@ use crate::coordinator::metrics::{render_prometheus, MetricsSnapshot};
 use crate::coordinator::replica::ReplicaPool;
 use crate::coordinator::trace::{next_trace_id, TraceStart};
 use crate::data::rng::splitmix64;
-use crate::service::wire::{self, EP_HEALTH, EP_METRICS, EP_SHUTDOWN, EP_TRACE};
-use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult};
+use crate::service::wire::{self, EP_GENERATE, EP_HEALTH, EP_METRICS, EP_SHUTDOWN, EP_TRACE};
+use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult, StepEvent};
 use crate::util::json::Value;
 
 /// Largest accepted request body (tensors are JSON, so generous). The
@@ -279,6 +279,16 @@ fn serve_connection(
                 return Err(e);
             }
         };
+        if head.method == "POST" && path == EP_GENERATE {
+            // Streaming endpoint: the response goes out as chunked
+            // transfer encoding — one JSON line per decode step, then the
+            // terminal typed response — and the connection closes after
+            // the stream (no chunked re-framing across keep-alive
+            // requests on this endpoint).
+            let r = serve_generate(pool, &mut writer, &body, t0);
+            drop(slot);
+            return r;
+        }
         let (status, resp, content_type) =
             route(pool, shutdown, &head.method, &path, &query, &body, t0);
         drop(slot); // request fully served engine-side; release admission
@@ -421,6 +431,102 @@ fn handle_service(
     let resp = pool.call_traced(req, Some(start))?;
     wire::check_encodable(&resp)?;
     Ok((resp, trace_id))
+}
+
+/// Serve one `POST /v1/generate` request as a chunked stream. Bad
+/// requests (malformed JSON, unparseable body) answer as plain HTTP
+/// errors before any streaming starts. Once the first step event
+/// arrives, the 200 chunked header is already on the wire, so any
+/// later failure is reported as a typed error body in the terminal
+/// chunk instead of an HTTP status. If the request settles without
+/// streaming a single step (validation inside the engine, unbound
+/// binding, `max_tokens` 0), the response degrades to a plain HTTP
+/// response with the error's own status.
+fn serve_generate(
+    pool: &ReplicaPool,
+    writer: &mut TcpStream,
+    body: &str,
+    t0: Instant,
+) -> Result<()> {
+    let plain_error = |writer: &mut TcpStream, e: &ServiceError| {
+        let b = wire::encode_error(e).render();
+        write_http_response(writer, e.http_status(), &b, CT_JSON, false)
+    };
+    let parsed = match Value::parse(body) {
+        Ok(v) => v,
+        Err(e) => {
+            let err = ServiceError::BadRequest(format!("malformed JSON body: {e}"));
+            return plain_error(writer, &err);
+        }
+    };
+    let req = match wire::parse_request(EP_GENERATE, &parsed) {
+        Ok(r) => r,
+        Err(e) => return plain_error(writer, &e),
+    };
+    let trace_id = wire::request_trace_id(&parsed).unwrap_or_else(next_trace_id);
+    let start = TraceStart { trace_id, t0, admission_ns: t0.elapsed().as_nanos() as u64 };
+
+    // Lazily write the chunked header at the first step so pre-stream
+    // failures keep their HTTP status. A write failure mid-stream means
+    // the peer is gone: stop writing but keep draining step events so
+    // the request settles normally (and is traced/metered).
+    let mut started = false;
+    let mut peer_gone = false;
+    let result = pool.generate_streaming(req, Some(start), &mut |ev: StepEvent| {
+        if peer_gone {
+            return;
+        }
+        if !started {
+            if write_chunked_head(writer).is_err() {
+                peer_gone = true;
+                return;
+            }
+            started = true;
+        }
+        let line = format!("{}\n", wire::step_event_to_json(&ev).render());
+        if write_chunk(writer, &line).is_err() {
+            peer_gone = true;
+        }
+    });
+    let terminal = match &result {
+        Ok(resp) => match wire::check_encodable(resp) {
+            Ok(()) => wire::with_trace_id(wire::encode_response(resp), trace_id),
+            Err(e) => wire::encode_error(&e),
+        },
+        Err(e) => wire::encode_error(e),
+    };
+    if !started {
+        let status = match &result {
+            Ok(_) => 200,
+            Err(e) => e.http_status(),
+        };
+        return write_http_response(writer, status, &terminal.render(), CT_JSON, false);
+    }
+    if peer_gone {
+        return Ok(());
+    }
+    write_chunk(writer, &format!("{}\n", terminal.render()))?;
+    writer.write_all(b"0\r\n\r\n")?;
+    writer.flush()?;
+    Ok(())
+}
+
+/// Response head for the `/v1/generate` chunked stream.
+fn write_chunked_head(w: &mut impl Write) -> Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: {CT_JSON}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One chunk of a chunked response (hex size line, payload, CRLF),
+/// flushed immediately so steps reach the client as they happen.
+fn write_chunk(w: &mut impl Write, payload: &str) -> Result<()> {
+    write!(w, "{:x}\r\n{payload}\r\n", payload.len())?;
+    w.flush()?;
+    Ok(())
 }
 
 fn ok_body(extra: &[(&str, Value)]) -> Value {
@@ -601,6 +707,104 @@ impl NetClient {
         Duration::from_millis(base.saturating_add(jitter).min(2_000))
     }
 
+    /// POST `/v1/generate` and stream the response: `on_step` fires for
+    /// each decode-step chunk line as the server emits it. Returns the
+    /// terminal typed response plus the echoed `trace_id` when present.
+    /// Pre-stream failures (bad request, unbound binding) arrive as
+    /// plain JSON bodies and surface as their original typed error.
+    pub fn generate(
+        &self,
+        req: &ServiceRequest,
+        on_step: &mut dyn FnMut(StepEvent),
+    ) -> ServiceResult<(ServiceResponse, Option<u64>)> {
+        wire::check_request_encodable(req)?;
+        let (path, body) = wire::encode_request(req);
+        let rendered = body.render();
+        let io = |e: std::io::Error| {
+            ServiceError::Unavailable(format!("POST {}{path}: {e}", self.addr))
+        };
+        let mut stream = TcpStream::connect(&self.addr).map_err(io)?;
+        stream.set_read_timeout(Some(Duration::from_secs(120))).map_err(io)?;
+        write!(
+            stream,
+            "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{rendered}",
+            self.addr,
+            rendered.len(),
+        )
+        .map_err(io)?;
+        stream.flush().map_err(io)?;
+
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line).map_err(io)?;
+        let mut content_length = None;
+        let mut chunked = false;
+        loop {
+            let mut header = String::new();
+            if reader.read_line(&mut header).map_err(io)? == 0 {
+                break;
+            }
+            let header = header.trim_end();
+            if header.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = header.split_once(':') {
+                let value = value.trim();
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value.parse::<usize>().ok();
+                } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                    chunked = value.eq_ignore_ascii_case("chunked");
+                }
+            }
+        }
+        let parse_body = |text: &str| -> ServiceResult<Value> {
+            Value::parse(text)
+                .map_err(|e| ServiceError::Internal(format!("malformed response JSON: {e}")))
+        };
+        if !chunked {
+            // Pre-stream failure (or a stream that never started): one
+            // plain JSON body carrying the typed response or error.
+            let mut body = Vec::new();
+            match content_length {
+                Some(len) => {
+                    body.resize(len, 0);
+                    reader.read_exact(&mut body).map_err(io)?;
+                }
+                None => {
+                    reader.read_to_end(&mut body).map_err(io)?;
+                }
+            }
+            let text = String::from_utf8(body)
+                .map_err(|e| ServiceError::Internal(format!("response utf-8: {e}")))?;
+            let parsed = parse_body(&text)?;
+            let trace_id = wire::request_trace_id(&parsed);
+            return wire::parse_response(&parsed).map(|r| (r, trace_id));
+        }
+        // Chunked stream: each chunk is one JSON line — step events until
+        // the terminal typed response (which also ends the stream).
+        loop {
+            let chunk = match read_chunk(&mut reader).map_err(io)? {
+                Some(c) => c,
+                None => {
+                    return Err(ServiceError::Internal(
+                        "generate stream ended without a terminal response".into(),
+                    ))
+                }
+            };
+            let text = String::from_utf8(chunk)
+                .map_err(|e| ServiceError::Internal(format!("chunk utf-8: {e}")))?;
+            let parsed = parse_body(text.trim())?;
+            if wire::is_step_event(&parsed) {
+                on_step(wire::step_event_from_json(&parsed)?);
+                continue;
+            }
+            // The trace id rides response bodies under the same key the
+            // request helper reads, so reuse it for extraction.
+            let trace_id = wire::request_trace_id(&parsed);
+            return wire::parse_response(&parsed).map(|r| (r, trace_id));
+        }
+    }
+
     /// Fetch and parse the `/v1/metrics` telemetry snapshot.
     pub fn metrics(&self) -> ServiceResult<MetricsSnapshot> {
         self.call(&ServiceRequest::Metrics)?.into_metrics()
@@ -744,6 +948,31 @@ impl NetClient {
     }
 }
 
+/// Read one chunk of a chunked response body. `None` is the 0-size
+/// terminator (its trailing CRLF consumed). The server frames one JSON
+/// line per chunk, so each returned buffer parses standalone.
+fn read_chunk<R: BufRead>(r: &mut R) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::{Error, ErrorKind};
+    let mut size_line = String::new();
+    r.read_line(&mut size_line)?;
+    let size = usize::from_str_radix(size_line.trim(), 16).map_err(|_| {
+        Error::new(ErrorKind::InvalidData, format!("bad chunk size line {size_line:?}"))
+    })?;
+    if size > MAX_BODY_BYTES {
+        return Err(Error::new(ErrorKind::InvalidData, format!("chunk of {size} bytes")));
+    }
+    if size == 0 {
+        let mut end = String::new();
+        let _ = r.read_line(&mut end);
+        return Ok(None);
+    }
+    let mut buf = vec![0u8; size];
+    r.read_exact(&mut buf)?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)?;
+    Ok(Some(buf))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -794,6 +1023,31 @@ mod tests {
         let text = String::from_utf8(buf).unwrap();
         assert!(text.contains("Content-Type: text/plain; version=0.0.4\r\n"));
         assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn chunked_framing_roundtrips() {
+        let mut buf = Vec::new();
+        write_chunked_head(&mut buf).unwrap();
+        write_chunk(&mut buf, "{\"step\":0}\n").unwrap();
+        write_chunk(&mut buf, "{\"ok\":true}\n").unwrap();
+        buf.extend_from_slice(b"0\r\n\r\n");
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+
+        // Past the head, each chunk reads back as its exact payload and
+        // the zero-size terminator closes the stream.
+        let body_at = text.find("\r\n\r\n").unwrap() + 4;
+        let mut r = BufReader::new(&buf[body_at..]);
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"{\"step\":0}\n");
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"{\"ok\":true}\n");
+        assert!(read_chunk(&mut r).unwrap().is_none());
+
+        // Garbled size lines are data errors, not silent EOF.
+        let mut r = BufReader::new(&b"zz\r\n"[..]);
+        assert!(read_chunk(&mut r).is_err());
     }
 
     #[test]

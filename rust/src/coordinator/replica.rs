@@ -29,11 +29,15 @@ use anyhow::Result;
 
 use crate::coordinator::engine::{Engine, EngineHandle, ExecProfile, Ticket};
 use crate::coordinator::metrics::{BlockSeries, MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
-use crate::coordinator::trace::{TraceRecord, TraceRing, TraceSpans, TraceStart};
+use crate::coordinator::trace::{
+    TraceRecord, TraceRing, TraceSpans, TraceStart, DEFAULT_TRACE_CAPACITY,
+};
 use crate::kernels::api::merge_block_profiles;
 use crate::kernels::MitaStats;
 use crate::runtime::BackendSpec;
-use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult, ServiceStats};
+use crate::service::{
+    ServiceError, ServiceRequest, ServiceResponse, ServiceResult, ServiceStats, StepEvent,
+};
 
 /// Pool sizing and backpressure knobs.
 #[derive(Debug, Clone)]
@@ -47,11 +51,23 @@ pub struct ReplicaPoolConfig {
     /// Floor for the `retry_after_ms` hint on shed requests; the pool
     /// raises it to the observed mean request latency once it has one.
     pub retry_after_ms: u64,
+    /// Completed traces retained by the pool's [`TraceRing`] (the
+    /// `serve --trace-ring` knob). Values below 16 are floored to 16 so
+    /// a misconfigured ring still holds enough records to debug with.
+    pub trace_capacity: usize,
 }
+
+/// Smallest trace ring the pool will build, whatever the config says.
+pub const MIN_TRACE_CAPACITY: usize = 16;
 
 impl Default for ReplicaPoolConfig {
     fn default() -> Self {
-        ReplicaPoolConfig { replicas: 1, max_inflight: 64, retry_after_ms: 10 }
+        ReplicaPoolConfig {
+            replicas: 1,
+            max_inflight: 64,
+            retry_after_ms: 10,
+            trace_capacity: DEFAULT_TRACE_CAPACITY,
+        }
     }
 }
 
@@ -100,12 +116,13 @@ impl ReplicaPool {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        let traces = TraceRing::new(cfg.trace_capacity.max(MIN_TRACE_CAPACITY));
         Ok(ReplicaPool {
             replicas,
             rr: AtomicUsize::new(0),
             cfg,
             metrics: Arc::new(ServeMetrics::new()),
-            traces: TraceRing::default(),
+            traces,
         })
     }
 
@@ -140,6 +157,14 @@ impl ReplicaPool {
     /// slot, and submit. When every replica is at its cap, shed with a
     /// typed `overloaded` error carrying the retry hint — never block.
     pub fn submit(&self, req: ServiceRequest) -> ServiceResult<PoolTicket> {
+        self.submit_inner(req, None)
+    }
+
+    fn submit_inner(
+        &self,
+        req: ServiceRequest,
+        mut steps: Option<std::sync::mpsc::Sender<StepEvent>>,
+    ) -> ServiceResult<PoolTicket> {
         self.metrics.record_request();
         let n = self.replicas.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
@@ -156,7 +181,13 @@ impl ReplicaPool {
                 Ok(prev) => prev + 1,
                 Err(_) => continue,
             };
-            let inner = match r.handle.submit(req) {
+            // The first admitting replica consumes the request (and the
+            // step channel, when streaming) — later iterations only run
+            // when this one `continue`d before getting here.
+            let inner = match match steps.take() {
+                Some(tx) => r.handle.submit_streaming(req, tx),
+                None => r.handle.submit(req),
+            } {
                 Ok(t) => t,
                 Err(e) => {
                     // The engine thread is gone; release the slot and
@@ -248,6 +279,7 @@ impl ReplicaPool {
                 let (replica, depth) = (ticket.replica(), ticket.depth_at_route());
                 let wait_t = Instant::now();
                 let (result, prof) = ticket.wait_profiled();
+                self.record_generate_outcome(&result);
                 if let Some(s) = start {
                     // Queue time is what the engine-side wait cost beyond
                     // the execute itself (reply-channel hop included).
@@ -258,19 +290,89 @@ impl ReplicaPool {
                         replica,
                         queue_depth: depth,
                         ok: result.is_ok(),
-                        spans: TraceSpans {
-                            admission_ns: s.admission_ns,
-                            route_ns,
-                            queue_ns: wait_ns.saturating_sub(prof.execute_ns),
-                            batch_ns: 0,
-                            execute_ns: prof.execute_ns,
-                            total_ns: s.t0.elapsed().as_nanos() as u64,
-                        },
+                        spans: Self::compute_spans(&s, route_ns, wait_ns, &prof),
                         blocks: prof.blocks,
                     });
                 }
                 result
             }
+        }
+    }
+
+    /// Streaming variant of [`ReplicaPool::call_traced`] for generate
+    /// requests: per-token [`StepEvent`]s are forwarded to `on_step` as
+    /// the replica produces them, and each post-prefill step's latency
+    /// feeds the `decode_step_latency_us` histogram. The engine closes
+    /// the step channel before completing the ticket, so the drain loop
+    /// always terminates ahead of settlement. Routing, shedding, and
+    /// tracing behave exactly as in the non-streaming path.
+    pub fn generate_streaming(
+        &self,
+        req: ServiceRequest,
+        start: Option<TraceStart>,
+        on_step: &mut dyn FnMut(StepEvent),
+    ) -> ServiceResult<ServiceResponse> {
+        let kind = req.kind();
+        let route_t = Instant::now();
+        let (step_tx, step_rx) = std::sync::mpsc::channel();
+        let ticket = self.submit_inner(req, Some(step_tx))?;
+        let route_ns = route_t.elapsed().as_nanos() as u64;
+        let (replica, depth) = (ticket.replica(), ticket.depth_at_route());
+        let wait_t = Instant::now();
+        for ev in step_rx.iter() {
+            if ev.index > 0 {
+                // Step 0 is the prefill tail and carries latency 0 by
+                // contract; only true decode steps enter the histogram.
+                self.metrics
+                    .record_decode_step(std::time::Duration::from_nanos(ev.latency_ns));
+            }
+            on_step(ev);
+        }
+        let (result, prof) = ticket.wait_profiled();
+        self.record_generate_outcome(&result);
+        if let Some(s) = start {
+            let wait_ns = wait_t.elapsed().as_nanos() as u64;
+            self.traces.push(TraceRecord {
+                trace_id: s.trace_id,
+                kind,
+                replica,
+                queue_depth: depth,
+                ok: result.is_ok(),
+                spans: Self::compute_spans(&s, route_ns, wait_ns, &prof),
+                blocks: prof.blocks,
+            });
+        }
+        result
+    }
+
+    /// Stage spans for a compute-path trace. Decode time is split out of
+    /// the engine's execute span so the stages stay disjoint: for
+    /// generate requests `execute_ns` is the prefill-plus-glue remainder
+    /// and `decode_ns` the token loop; for everything else `decode_ns`
+    /// is zero and `execute_ns` is unchanged.
+    fn compute_spans(
+        s: &TraceStart,
+        route_ns: u64,
+        wait_ns: u64,
+        prof: &ExecProfile,
+    ) -> TraceSpans {
+        TraceSpans {
+            admission_ns: s.admission_ns,
+            route_ns,
+            queue_ns: wait_ns.saturating_sub(prof.execute_ns),
+            batch_ns: 0,
+            execute_ns: prof.execute_ns.saturating_sub(prof.decode_ns),
+            decode_ns: prof.decode_ns,
+            total_ns: s.t0.elapsed().as_nanos() as u64,
+        }
+    }
+
+    /// Bump the generation counters when a settled result is a
+    /// successful generate response (streaming or not).
+    fn record_generate_outcome(&self, result: &ServiceResult<ServiceResponse>) {
+        if let Ok(ServiceResponse::Generate { tokens, prefill_tokens }) = result {
+            let emitted = tokens.as_i32().map(|t| t.len()).unwrap_or(0) as u64;
+            self.metrics.record_generate(emitted, *prefill_tokens as u64);
         }
     }
 
@@ -329,6 +431,9 @@ impl ReplicaPool {
             serve_shed_total: self.metrics.shed_total(),
             serve_errors_total: self.metrics.errors_total(),
             request_latency_us: self.metrics.latency_snapshot(),
+            tokens_generated_total: self.metrics.tokens_generated_total(),
+            prefill_tokens_total: self.metrics.prefill_tokens_total(),
+            decode_step_latency_us: self.metrics.decode_latency_snapshot(),
             replicas,
             simd_lane: crate::kernels::simd::active_lane().to_string(),
         }
@@ -448,7 +553,8 @@ mod tests {
 
     fn pool(replicas: usize, max_inflight: usize) -> ReplicaPool {
         let spec = BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2));
-        let cfg = ReplicaPoolConfig { replicas, max_inflight, retry_after_ms: 5 };
+        let cfg =
+            ReplicaPoolConfig { replicas, max_inflight, retry_after_ms: 5, ..Default::default() };
         ReplicaPool::spawn(spec, vec![], cfg).unwrap()
     }
 
@@ -511,7 +617,12 @@ mod tests {
         let mcfg = ModelConfig::new(7, 16, 8, 2, 2, 16, 3, OP_ATTN_MITA);
         let spec =
             BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2).with_model(mcfg.clone()));
-        let cfg = ReplicaPoolConfig { replicas: 1, max_inflight: 4, retry_after_ms: 5 };
+        let cfg = ReplicaPoolConfig {
+            replicas: 1,
+            max_inflight: 4,
+            retry_after_ms: 5,
+            ..Default::default()
+        };
         let p = ReplicaPool::spawn(spec, vec![], cfg).unwrap();
         p.call(ServiceRequest::BindInit {
             binding: BindingId::from("m"),
@@ -567,6 +678,87 @@ mod tests {
         // Untraced calls leave the ring untouched.
         p.call(attn_request(2)).unwrap();
         assert_eq!(p.traces().pushed(), 2);
+        p.shutdown();
+    }
+
+    #[test]
+    fn trace_ring_capacity_is_configurable_with_floor() {
+        let spec = BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2));
+        let cfg = ReplicaPoolConfig { trace_capacity: 48, ..Default::default() };
+        let p = ReplicaPool::spawn(spec.clone(), vec![], cfg).unwrap();
+        assert_eq!(p.traces().capacity(), 48);
+        p.shutdown();
+
+        // Below the floor the ring still holds MIN_TRACE_CAPACITY records.
+        let cfg = ReplicaPoolConfig { trace_capacity: 3, ..Default::default() };
+        let p = ReplicaPool::spawn(spec, vec![], cfg).unwrap();
+        assert_eq!(p.traces().capacity(), MIN_TRACE_CAPACITY);
+        p.shutdown();
+    }
+
+    #[test]
+    fn streaming_generate_records_steps_metrics_and_decode_span() {
+        use crate::kernels::OP_ATTN_MITA;
+        use crate::model::{ModelConfig, OP_MODEL_INIT};
+        use crate::service::{BindingId, GenerateParams};
+
+        let mcfg = ModelConfig::new(7, 16, 8, 2, 1, 16, 3, OP_ATTN_MITA);
+        let spec =
+            BackendSpec::Native(NativeAttnConfig::for_shape(16, 8, 2).with_model(mcfg.clone()));
+        let p = ReplicaPool::spawn(spec, vec![], ReplicaPoolConfig::default()).unwrap();
+        p.call(ServiceRequest::BindInit {
+            binding: BindingId::from("m"),
+            init_op: OP_MODEL_INIT.to_string(),
+            seed: 7,
+            param_count: 0,
+        })
+        .unwrap();
+
+        let req = ServiceRequest::Generate {
+            binding: BindingId::from("m"),
+            prompt: Tensor::i32(&[3], vec![1, 2, 3]).unwrap(),
+            max_tokens: 5,
+            params: GenerateParams::default(),
+        };
+        let start = TraceStart::begin().admitted();
+        let trace_id = start.trace_id;
+        let mut streamed = Vec::new();
+        let resp = p
+            .generate_streaming(req, Some(start), &mut |ev| streamed.push(ev))
+            .unwrap();
+        let (tokens, prefill) = match resp {
+            ServiceResponse::Generate { tokens, prefill_tokens } => (tokens, prefill_tokens),
+            other => panic!("unexpected response {other:?}"),
+        };
+        assert_eq!(prefill, 3);
+        assert_eq!(streamed.len(), 5);
+        assert_eq!(
+            streamed.iter().map(|e| e.token).collect::<Vec<_>>(),
+            tokens.as_i32().unwrap().to_vec(),
+            "streamed tokens match the terminal response"
+        );
+
+        // Counters: five emitted tokens, three prefill tokens, and four
+        // decode-step samples (step 0 is the prefill tail, not sampled).
+        let snap = p.snapshot();
+        assert_eq!(snap.tokens_generated_total, 5);
+        assert_eq!(snap.prefill_tokens_total, 3);
+        assert_eq!(snap.decode_step_latency_us.count, 4);
+
+        // The trace splits decode out of execute and stays disjoint.
+        let recs = p.traces().export(usize::MAX, 0);
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!((r.trace_id, r.kind), (trace_id, "generate"));
+        assert!(r.ok);
+        assert!(r.spans.decode_ns > 0, "decode span recorded");
+        let staged = r.spans.admission_ns
+            + r.spans.route_ns
+            + r.spans.queue_ns
+            + r.spans.batch_ns
+            + r.spans.execute_ns
+            + r.spans.decode_ns;
+        assert!(staged <= r.spans.total_ns, "stages {staged} ≤ wall {}", r.spans.total_ns);
         p.shutdown();
     }
 

@@ -92,8 +92,13 @@ pub struct TraceSpans {
     /// TCP path, where requests are submitted individually.
     pub batch_ns: u64,
     /// Backend: the execute call itself, bracketed on the engine
-    /// thread.
+    /// thread. For generate requests this is the *prefill + glue*
+    /// remainder — the decode loop is split out into `decode_ns` so the
+    /// stages stay disjoint.
     pub execute_ns: u64,
+    /// Backend: wall time of the token-by-token decode loop of a
+    /// generate request (0 for every other request kind).
+    pub decode_ns: u64,
     /// End-to-end wall time over the span window (head parsed →
     /// response settled).
     pub total_ns: u64,
@@ -153,6 +158,7 @@ impl TraceRecord {
                     ("queue_us", us(self.spans.queue_ns)),
                     ("batch_us", us(self.spans.batch_ns)),
                     ("execute_us", us(self.spans.execute_ns)),
+                    ("decode_us", us(self.spans.decode_ns)),
                     ("total_us", us(self.spans.total_ns)),
                 ]),
             ),
@@ -293,12 +299,14 @@ mod tests {
             queue_ns: 3_000,
             batch_ns: 0,
             execute_ns: 40_000,
+            decode_ns: 32_000,
             total_ns: 50_000,
         };
         let text = rec.to_json().render();
         assert!(text.contains("\"trace_id\":7"), "{text}");
         assert!(text.contains("\"admission_us\":1.5"), "{text}");
         assert!(text.contains("\"execute_us\":40"), "{text}");
+        assert!(text.contains("\"decode_us\":32"), "{text}");
         assert!(text.contains("\"kind\":\"attention\""), "{text}");
     }
 

@@ -1,0 +1,437 @@
+//! KV-cached token-by-token generation over the native transformer.
+//!
+//! A [`DecodeSession`] advances one token at a time: the single-token
+//! forward mirrors the batched [`MitaModel`] block arithmetic operation
+//! for operation (`matmul_nt` with `p = 1` computes each output element
+//! with the same hoisted dispatched `dot` as a batch row, LayerNorm /
+//! bias / GELU reuse the exact `model::transformer` helpers), while
+//! attention reads the per-(block, head) K/V caches — incremental
+//! [`CausalMitaState`] for MiTA blocks, the shared
+//! [`causal_dense_row`](super::causal_dense_row) for dense blocks. All
+//! caches and scratch are preallocated at session start, so the
+//! steady-state decode loop never allocates.
+//!
+//! Generation is greedy through the **tied token embedding**: the
+//! classifier head is `[classes, d]` (too narrow to emit tokens), so
+//! next-token logits are `dot(lnf(h_t), tok_emb[v])` over the
+//! vocabulary, argmax with first-max-wins (the registry's deterministic
+//! tie-break: lowest index). Everything runs through the dispatched
+//! SIMD ops, so generated token streams are bit-identical across
+//! lanes and thread counts.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::kernels::api::BlockProfile;
+use crate::kernels::linalg::{axpy, dot, gather_head, matmul_nt, scatter_head};
+use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
+use crate::model::transformer::{add_bias_rows, gelu_in_place, layer_norm_rows};
+use crate::model::MitaModel;
+
+use super::state::CausalMitaState;
+use super::{causal_dense_row, OP_ATTN_DENSE_CAUSAL, OP_ATTN_MITA_CAUSAL};
+
+/// Which causal attention path a block decodes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeKernel {
+    /// Incremental causal MiTA (landmark/expert state updated per key).
+    Mita,
+    /// Full lower-triangle softmax attention.
+    Dense,
+}
+
+impl DecodeKernel {
+    /// Map a registry kernel name to its causal decode path. Both the
+    /// batch names (`attn.mita` / `attn.dense`) and the causal names
+    /// (`mita.causal` / `dense.causal`) are accepted, so existing
+    /// classification checkpoints decode without re-tagging blocks.
+    pub fn from_name(name: &str) -> Result<DecodeKernel> {
+        match name {
+            OP_ATTN_MITA | OP_ATTN_MITA_CAUSAL => Ok(DecodeKernel::Mita),
+            OP_ATTN_DENSE | OP_ATTN_DENSE_CAUSAL => Ok(DecodeKernel::Dense),
+            other => bail!("no causal decode path for attention kernel {other:?}"),
+        }
+    }
+
+    /// The causal registry name of this path.
+    pub fn causal_op(&self) -> &'static str {
+        match self {
+            DecodeKernel::Mita => OP_ATTN_MITA_CAUSAL,
+            DecodeKernel::Dense => OP_ATTN_DENSE_CAUSAL,
+        }
+    }
+}
+
+/// Result of one [`generate`] call.
+#[derive(Debug, Clone)]
+pub struct DecodeOutcome {
+    /// Prompt followed by the generated tokens (`prompt.len() + max_tokens`).
+    pub tokens: Vec<i32>,
+    /// Prompt length (the prefill-vs-decode split point).
+    pub prefill_tokens: usize,
+    /// Wall time of the prefill pass (prompt forwards + first argmax).
+    pub prefill_ns: u64,
+    /// Wall time of the decode loop (everything after the first token).
+    pub decode_ns: u64,
+    /// Per-block attention/MLP time + MiTA routing stats, accumulated
+    /// over every step of the session.
+    pub blocks: Vec<BlockProfile>,
+}
+
+/// One autoregressive decoding stream over a borrowed model: per-head
+/// K/V caches, per-head incremental MiTA states, and all single-token
+/// scratch, preallocated for `n_max` positions.
+pub struct DecodeSession<'m> {
+    model: &'m MitaModel,
+    /// Per-block causal attention path.
+    kernels: Vec<DecodeKernel>,
+    /// Positions this session can hold.
+    n_max: usize,
+    /// Tokens consumed so far (= the next position).
+    pos: usize,
+    /// Per-(block × head) key cache rows `[n_max, dh]`, filled to `pos`.
+    k_cache: Vec<Vec<f32>>,
+    /// Per-(block × head) value cache rows, same layout.
+    v_cache: Vec<Vec<f32>>,
+    /// Incremental MiTA state per (block × head); `None` on dense blocks.
+    states: Vec<Option<CausalMitaState>>,
+    /// Residual stream `[d]`.
+    h: Vec<f32>,
+    /// Pre-LN output `[d]`.
+    y: Vec<f32>,
+    /// Q/K/V projection rows `[d]` each.
+    qb: Vec<f32>,
+    kb: Vec<f32>,
+    vb: Vec<f32>,
+    /// Per-head query row and attention output row `[dh]`.
+    qh: Vec<f32>,
+    oh: Vec<f32>,
+    /// Merged attention row `[d]`, then projection/MLP scratch.
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    ln: Vec<f32>,
+    hidden: Vec<f32>,
+    mlp: Vec<f32>,
+    lnf: Vec<f32>,
+    /// Dense-row logit scratch `[n_max]`.
+    row_logits: Vec<f32>,
+    /// Per-block timing + routing accumulators.
+    profiles: Vec<BlockProfile>,
+}
+
+impl<'m> DecodeSession<'m> {
+    /// A fresh session holding at most `n_max` positions. `kernel`
+    /// overrides every block's decode path; `None` derives it per block
+    /// from the model config.
+    pub fn new(model: &'m MitaModel, kernel: Option<DecodeKernel>, n_max: usize) -> Result<Self> {
+        let cfg = &model.cfg;
+        cfg.validate()?;
+        anyhow::ensure!(n_max >= 1, "decode session needs at least one position");
+        anyhow::ensure!(
+            n_max <= cfg.seq_len,
+            "decode session wants {n_max} positions, model holds {} learned positions",
+            cfg.seq_len
+        );
+        let kernels: Vec<DecodeKernel> = match kernel {
+            Some(k) => vec![k; cfg.depth],
+            None => cfg
+                .block_kernels
+                .iter()
+                .map(|name| DecodeKernel::from_name(name))
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let (d, dh, heads, hid) = (cfg.dim, cfg.head_dim(), cfg.heads, cfg.mlp_hidden);
+        let slots = cfg.depth * heads;
+        let states = kernels
+            .iter()
+            .flat_map(|&k| std::iter::repeat(k).take(heads))
+            .map(|k| match k {
+                DecodeKernel::Mita => Some(CausalMitaState::new(n_max, dh, &cfg.mita)),
+                DecodeKernel::Dense => None,
+            })
+            .collect();
+        Ok(DecodeSession {
+            model,
+            kernels,
+            n_max,
+            pos: 0,
+            k_cache: vec![Vec::with_capacity(n_max * dh); slots],
+            v_cache: vec![Vec::with_capacity(n_max * dh); slots],
+            states,
+            h: vec![0.0; d],
+            y: vec![0.0; d],
+            qb: vec![0.0; d],
+            kb: vec![0.0; d],
+            vb: vec![0.0; d],
+            qh: vec![0.0; dh],
+            oh: vec![0.0; dh],
+            attn: vec![0.0; d],
+            proj: vec![0.0; d],
+            ln: vec![0.0; d],
+            hidden: vec![0.0; hid],
+            mlp: vec![0.0; d],
+            lnf: vec![0.0; d],
+            row_logits: vec![0.0; n_max],
+            profiles: vec![BlockProfile::default(); cfg.depth],
+        })
+    }
+
+    /// Positions consumed so far.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Advance one token: embed at the next position, run every block
+    /// with cached keys/values, and leave the residual stream in place
+    /// for [`DecodeSession::greedy_token`].
+    pub fn step(&mut self, tok: i32) -> Result<()> {
+        // Copy the `&'m` out so the config/params borrows don't pin
+        // `self` while the scratch fields are mutated below.
+        let model = self.model;
+        let cfg = &model.cfg;
+        let p = &model.params;
+        let (d, dh, heads, hid) = (cfg.dim, cfg.head_dim(), cfg.heads, cfg.mlp_hidden);
+        let t = self.pos;
+        anyhow::ensure!(t < self.n_max, "decode session is full ({} positions)", self.n_max);
+        anyhow::ensure!(
+            (0..cfg.vocab as i32).contains(&tok),
+            "token {tok} at position {t} outside vocab 0..{}",
+            cfg.vocab
+        );
+
+        // Token embedding + learned position (same elementwise add as the
+        // batched embedding pass).
+        let erow = &p.tok_emb[tok as usize * d..(tok as usize + 1) * d];
+        let prow = &p.pos_emb[t * d..(t + 1) * d];
+        for ((h, &e), &pv) in self.h.iter_mut().zip(erow).zip(prow) {
+            *h = e + pv;
+        }
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        for (bi, block) in p.blocks.iter().enumerate() {
+            let t_block = Instant::now();
+            // Pre-LN + Q/K/V projections (p = 1 rows of the batch GEMMs).
+            layer_norm_rows(&self.h, d, &block.ln1_g, &block.ln1_b, &mut self.y);
+            matmul_nt(&self.y, &block.wq, 1, d, d, &mut self.qb);
+            add_bias_rows(&mut self.qb, &block.bq);
+            matmul_nt(&self.y, &block.wk, 1, d, d, &mut self.kb);
+            add_bias_rows(&mut self.kb, &block.bk);
+            matmul_nt(&self.y, &block.wv, 1, d, d, &mut self.vb);
+            add_bias_rows(&mut self.vb, &block.bv);
+
+            for hh in 0..heads {
+                let slot = bi * heads + hh;
+                gather_head(&self.qb, 1, d, dh, hh, &mut self.qh);
+                gather_head(&self.kb, 1, d, dh, hh, &mut self.oh);
+                self.k_cache[slot].extend_from_slice(&self.oh);
+                gather_head(&self.vb, 1, d, dh, hh, &mut self.oh);
+                self.v_cache[slot].extend_from_slice(&self.oh);
+                match self.kernels[bi] {
+                    DecodeKernel::Mita => {
+                        let st = self.states[slot].as_mut().expect("MiTA block owns a state");
+                        st.append_key(&self.k_cache[slot]);
+                        st.attend(
+                            &self.qh,
+                            &self.k_cache[slot],
+                            &self.v_cache[slot],
+                            &mut self.oh,
+                        );
+                    }
+                    DecodeKernel::Dense => causal_dense_row(
+                        &self.qh,
+                        &self.k_cache[slot],
+                        &self.v_cache[slot],
+                        t,
+                        dh,
+                        scale,
+                        &mut self.row_logits[..t + 1],
+                        &mut self.oh,
+                    ),
+                }
+                scatter_head(&self.oh, 1, d, dh, hh, &mut self.attn);
+            }
+
+            // Output projection + residual.
+            matmul_nt(&self.attn, &block.wo, 1, d, d, &mut self.proj);
+            add_bias_rows(&mut self.proj, &block.bo);
+            axpy(1.0, &self.proj, &mut self.h);
+            let t_attn_done = Instant::now();
+
+            // Pre-LN GELU MLP + residual.
+            layer_norm_rows(&self.h, d, &block.ln2_g, &block.ln2_b, &mut self.ln);
+            matmul_nt(&self.ln, &block.w1, 1, hid, d, &mut self.hidden);
+            add_bias_rows(&mut self.hidden, &block.b1);
+            gelu_in_place(&mut self.hidden);
+            matmul_nt(&self.hidden, &block.w2, 1, d, hid, &mut self.mlp);
+            add_bias_rows(&mut self.mlp, &block.b2);
+            axpy(1.0, &self.mlp, &mut self.h);
+
+            let prof = &mut self.profiles[bi];
+            prof.attn_ns += t_attn_done.duration_since(t_block).as_nanos() as u64;
+            prof.mlp_ns += t_attn_done.elapsed().as_nanos() as u64;
+        }
+        self.pos = t + 1;
+        Ok(())
+    }
+
+    /// Greedy next token from the current residual stream: final LN,
+    /// then logits through the tied token embedding, argmax with
+    /// first-max-wins (lowest index on exact ties).
+    pub fn greedy_token(&mut self) -> i32 {
+        let model = self.model;
+        let (cfg, p) = (&model.cfg, &model.params);
+        let d = cfg.dim;
+        layer_norm_rows(&self.h, d, &p.lnf_g, &p.lnf_b, &mut self.lnf);
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (v, erow) in p.tok_emb.chunks_exact(d).enumerate() {
+            let s = dot(&self.lnf, erow);
+            if s > best_v {
+                best_v = s;
+                best = v;
+            }
+        }
+        best as i32
+    }
+
+    /// Close the session: fold each MiTA head's routing counts (and one
+    /// call per dense head, mirroring the batch kernel's accounting)
+    /// into the per-block profiles and return them.
+    pub fn finish(mut self) -> Vec<BlockProfile> {
+        let heads = self.model.cfg.heads;
+        for (bi, prof) in self.profiles.iter_mut().enumerate() {
+            for hh in 0..heads {
+                match &self.states[bi * heads + hh] {
+                    Some(st) => st.record_stats(&mut prof.stats),
+                    None => prof.stats.record(0, 0, &[]),
+                }
+            }
+        }
+        self.profiles
+    }
+}
+
+/// Generate `max_tokens` tokens greedily from `prompt`. `on_step(index,
+/// token, latency_ns)` fires once per generated token, in order; step 0
+/// reports zero latency because its compute is the tail of the prefill
+/// pass (counted in [`DecodeOutcome::prefill_ns`]), every later step
+/// reports the wall time of the forward that produced it. Requires
+/// `prompt.len() + max_tokens <= cfg.seq_len` (learned positions bound
+/// the horizon).
+pub fn generate(
+    model: &MitaModel,
+    kernel: Option<DecodeKernel>,
+    prompt: &[i32],
+    max_tokens: usize,
+    on_step: &mut dyn FnMut(usize, i32, u64),
+) -> Result<DecodeOutcome> {
+    let cfg = &model.cfg;
+    let p = prompt.len();
+    anyhow::ensure!(p >= 1, "generation needs a non-empty prompt");
+    anyhow::ensure!(max_tokens >= 1, "max_tokens must be at least 1");
+    anyhow::ensure!(
+        p + max_tokens <= cfg.seq_len,
+        "prompt ({p}) + max_tokens ({max_tokens}) exceeds the model's {} learned positions",
+        cfg.seq_len
+    );
+
+    // Positions actually consumed: p prompt tokens + max_tokens - 1
+    // generated feedbacks (the last token is emitted, never re-read).
+    let mut sess = DecodeSession::new(model, kernel, p + max_tokens - 1)?;
+    let t0 = Instant::now();
+    for &tok in prompt {
+        sess.step(tok)?;
+    }
+    let mut next = sess.greedy_token();
+    let prefill_ns = t0.elapsed().as_nanos() as u64;
+
+    let mut tokens = prompt.to_vec();
+    tokens.push(next);
+    on_step(0, next, 0);
+    let decode_t0 = Instant::now();
+    let mut t_prev = decode_t0;
+    for s in 1..max_tokens {
+        sess.step(next)?;
+        next = sess.greedy_token();
+        tokens.push(next);
+        let now = Instant::now();
+        on_step(s, next, now.duration_since(t_prev).as_nanos() as u64);
+        t_prev = now;
+    }
+    let decode_ns = decode_t0.elapsed().as_nanos() as u64;
+    Ok(DecodeOutcome {
+        tokens,
+        prefill_tokens: p,
+        prefill_ns,
+        decode_ns,
+        blocks: sess.finish(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    fn tiny_model(kernel: &str) -> MitaModel {
+        MitaModel::init(ModelConfig::new(13, 24, 16, 2, 2, 32, 3, kernel), 7).unwrap()
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_respects_bounds() {
+        let model = tiny_model(OP_ATTN_MITA);
+        let prompt = [1i32, 5, 2, 9];
+        let mut steps = Vec::new();
+        let out = generate(&model, None, &prompt, 6, &mut |i, t, _| steps.push((i, t))).unwrap();
+        assert_eq!(out.tokens.len(), prompt.len() + 6);
+        assert_eq!(&out.tokens[..4], &prompt);
+        assert_eq!(out.prefill_tokens, 4);
+        assert_eq!(steps.len(), 6);
+        assert!(steps.iter().enumerate().all(|(i, &(si, _))| i == si), "steps arrive in order");
+        assert!(out.tokens[4..].iter().all(|&t| (0..13).contains(&t)), "tokens stay in vocab");
+        assert_eq!(out.blocks.len(), 2);
+        // MiTA blocks report per-head routing calls; byte-for-byte rerun.
+        assert_eq!(out.blocks[0].stats.calls, model.cfg.heads);
+        let again = generate(&model, None, &prompt, 6, &mut |_, _, _| {}).unwrap();
+        assert_eq!(out.tokens, again.tokens, "greedy decode is deterministic");
+    }
+
+    #[test]
+    fn kernel_override_and_dense_path_work() {
+        let model = tiny_model(OP_ATTN_MITA);
+        let prompt = [3i32, 3, 7];
+        let dense = generate(&model, Some(DecodeKernel::Dense), &prompt, 4, &mut |_, _, _| {})
+            .unwrap();
+        assert_eq!(dense.tokens.len(), 7);
+        // Dense profiles carry call counts but no routed queries.
+        assert_eq!(dense.blocks[0].stats.calls, model.cfg.heads);
+        assert_eq!(dense.blocks[0].stats.queries, 0);
+        // The dense-tagged model derives the same path without override.
+        let dense_model = tiny_model(OP_ATTN_DENSE);
+        let derived = generate(&dense_model, None, &prompt, 4, &mut |_, _, _| {}).unwrap();
+        assert_eq!(derived.tokens.len(), 7);
+    }
+
+    #[test]
+    fn generate_rejects_bad_calls() {
+        let model = tiny_model(OP_ATTN_MITA);
+        let mut sink = |_: usize, _: i32, _: u64| {};
+        assert!(generate(&model, None, &[], 4, &mut sink).is_err(), "empty prompt");
+        assert!(generate(&model, None, &[1], 0, &mut sink).is_err(), "zero tokens");
+        let long: Vec<i32> = vec![1; 24];
+        assert!(generate(&model, None, &long, 1, &mut sink).is_err(), "horizon overflow");
+        assert!(generate(&model, None, &[99], 2, &mut sink).is_err(), "out-of-vocab prompt");
+    }
+
+    #[test]
+    fn decode_kernel_name_mapping() {
+        assert_eq!(DecodeKernel::from_name(OP_ATTN_MITA).unwrap(), DecodeKernel::Mita);
+        assert_eq!(DecodeKernel::from_name(OP_ATTN_MITA_CAUSAL).unwrap(), DecodeKernel::Mita);
+        assert_eq!(DecodeKernel::from_name(OP_ATTN_DENSE).unwrap(), DecodeKernel::Dense);
+        assert_eq!(DecodeKernel::from_name(OP_ATTN_DENSE_CAUSAL).unwrap(), DecodeKernel::Dense);
+        assert!(DecodeKernel::from_name("attn.other").is_err());
+        assert_eq!(DecodeKernel::Mita.causal_op(), OP_ATTN_MITA_CAUSAL);
+        assert_eq!(DecodeKernel::Dense.causal_op(), OP_ATTN_DENSE_CAUSAL);
+    }
+}

@@ -1,0 +1,261 @@
+//! L3-decode: the autoregressive decoding subsystem.
+//!
+//! Everything the repo served before this module is fixed-length
+//! classification; decode opens the token-by-token workload class. It
+//! has three floors:
+//!
+//! - [`state`] — [`CausalMitaState`]: incremental landmark pools,
+//!   per-landmark top-k expert membership, and argmax routing that are
+//!   *updated* as each key appends (the fast-weight-programmer
+//!   recurrent view) instead of recomputed per step, plus the exact
+//!   full-recompute reference that gates bit-parity at every step.
+//! - this file — causal variants of both attention kernels
+//!   ([`OP_ATTN_MITA_CAUSAL`] / [`OP_ATTN_DENSE_CAUSAL`]) behind the
+//!   existing [`AttentionKernel`] registry. The batch causal-MiTA
+//!   kernel drives the *same* incremental state row by row, so batch
+//!   row `t` is bit-identical to decode step `t` by construction, and
+//!   models configured with causal blocks train/serve/checkpoint
+//!   through every existing path.
+//! - [`generate`] — [`DecodeSession`]: a KV-cached single-token forward
+//!   that mirrors the batched transformer arithmetic, greedy decoding
+//!   through the tied token embedding, and per-step timing hooks for
+//!   the streaming service surface (`/v1/generate`).
+//!
+//! Bit-reproducibility discipline is unchanged from the batch kernels:
+//! all arithmetic goes through the dispatched SIMD ops, so every lane
+//! and thread count produces identical bits (`tests/decode_native.rs`).
+
+pub mod generate;
+pub mod state;
+
+pub use generate::{generate, DecodeKernel, DecodeOutcome, DecodeSession};
+pub use state::{chunk_width, CausalMitaState};
+
+use crate::kernels::api::{AttentionKernel, MitaStats};
+use crate::kernels::linalg::{dot, softmax_in_place_scaled, weighted_row_sum};
+use crate::kernels::mita::MitaKernelConfig;
+use crate::kernels::workspace::Workspace;
+
+/// Registry name of the causal incremental-MiTA kernel.
+pub const OP_ATTN_MITA_CAUSAL: &str = "mita.causal";
+/// Registry name of the causal dense (full lower-triangle) kernel.
+pub const OP_ATTN_DENSE_CAUSAL: &str = "dense.causal";
+
+/// One causal dense attention row: query `t` over key/value rows
+/// `0..=t`. `logits` must be the `t + 1` scratch slots; the 1/√d scale
+/// is folded into the softmax exp pass exactly like the batch dense
+/// kernel, and the weighted value sum runs over the contiguous row
+/// prefix. Shared by the batch kernel and the decode step so the two
+/// paths are the same arithmetic by construction.
+pub(crate) fn causal_dense_row(
+    qrow: &[f32],
+    k: &[f32],
+    v: &[f32],
+    t: usize,
+    d: usize,
+    scale: f32,
+    logits: &mut [f32],
+    orow: &mut [f32],
+) {
+    debug_assert_eq!(logits.len(), t + 1);
+    for (j, l) in logits.iter_mut().enumerate() {
+        *l = dot(qrow, &k[j * d..(j + 1) * d]);
+    }
+    softmax_in_place_scaled(logits, scale);
+    weighted_row_sum(logits, &v[..(t + 1) * d], d, orow);
+}
+
+/// Causal incremental-MiTA attention for one (example × head) work
+/// item: runs the decode-time [`CausalMitaState`] over the rows of a
+/// batch call, so batched prefill and step-by-step decode share one
+/// code path (and one set of bits). State buffers live in the
+/// workspace — zero allocations once the pool is warm.
+#[derive(Debug, Clone, Default)]
+pub struct CausalMitaKernel {
+    pub cfg: MitaKernelConfig,
+}
+
+impl AttentionKernel for CausalMitaKernel {
+    fn name(&self) -> &'static str {
+        OP_ATTN_MITA_CAUSAL
+    }
+
+    fn run(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        stats: &mut MitaStats,
+    ) {
+        assert_eq!(q.len(), n * d, "q must be [n, d]");
+        assert_eq!(k.len(), n * d, "k must be [n, d]");
+        assert_eq!(v.len(), n * d, "v must be [n, d]");
+        assert_eq!(out.len(), n * d, "out must be [n, d]");
+        if n == 0 || d == 0 {
+            return;
+        }
+        let mut st = CausalMitaState::from_workspace(ws, n, d, &self.cfg);
+        for t in 0..n {
+            st.append_key(k);
+            st.attend(&q[t * d..(t + 1) * d], k, v, &mut out[t * d..(t + 1) * d]);
+        }
+        st.record_stats(stats);
+        st.into_workspace(ws);
+    }
+}
+
+/// Causal dense attention: softmax over the full lower triangle, the
+/// exact baseline the causal-MiTA kernel approximates.
+#[derive(Debug, Clone, Default)]
+pub struct CausalDenseKernel;
+
+impl AttentionKernel for CausalDenseKernel {
+    fn name(&self) -> &'static str {
+        OP_ATTN_DENSE_CAUSAL
+    }
+
+    fn run(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        ws: &mut Workspace,
+        out: &mut [f32],
+        stats: &mut MitaStats,
+    ) {
+        assert_eq!(q.len(), n * d, "q must be [n, d]");
+        assert_eq!(k.len(), n * d, "k must be [n, d]");
+        assert_eq!(v.len(), n * d, "v must be [n, d]");
+        assert_eq!(out.len(), n * d, "out must be [n, d]");
+        if n == 0 || d == 0 {
+            return;
+        }
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut logits = ws.take_f32("dense.causal.logits", n);
+        for t in 0..n {
+            causal_dense_row(
+                &q[t * d..(t + 1) * d],
+                k,
+                v,
+                t,
+                d,
+                scale,
+                &mut logits[..t + 1],
+                &mut out[t * d..(t + 1) * d],
+            );
+        }
+        ws.give_f32("dense.causal.logits", logits);
+        // No routing structure to report; the call still counts so
+        // per-kernel telemetry sees causal dense traffic.
+        stats.record(0, 0, &[]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::kernels::linalg::softmax_in_place;
+
+    fn rows(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn causal_dense_row_is_masked_softmax_attention() {
+        let (n, d) = (6usize, 4usize);
+        let mut rng = Rng::new(3);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut logits = vec![0.0f32; n];
+        let mut orow = vec![0.0f32; d];
+        for t in 0..n {
+            let qrow = &q[t * d..(t + 1) * d];
+            causal_dense_row(qrow, &k, &v, t, d, scale, &mut logits[..t + 1], &mut orow);
+            // Naive reference: scale-then-softmax over j ≤ t only.
+            let mut want = vec![0.0f32; t + 1];
+            for (j, w) in want.iter_mut().enumerate() {
+                *w = dot(&q[t * d..(t + 1) * d], &k[j * d..(j + 1) * d]) * scale;
+            }
+            softmax_in_place(&mut want);
+            let mut oref = vec![0.0f32; d];
+            for (j, &w) in want.iter().enumerate() {
+                for x in 0..d {
+                    oref[x] += w * v[j * d + x];
+                }
+            }
+            for x in 0..d {
+                assert!((orow[x] - oref[x]).abs() < 1e-5, "row {t} dim {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn causal_dense_first_row_attends_only_itself() {
+        let (n, d) = (4usize, 4usize);
+        let mut rng = Rng::new(9);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+        let kern = CausalDenseKernel;
+        let mut ws = Workspace::new();
+        let mut stats = MitaStats::default();
+        let mut out = vec![0.0f32; n * d];
+        kern.run(&q, &k, &v, n, d, &mut ws, &mut out, &mut stats);
+        // Row 0 can only see key 0 → softmax of one logit → exactly v[0].
+        assert_eq!(&out[..d], &v[..d]);
+        assert_eq!(stats.calls, 1);
+    }
+
+    #[test]
+    fn causal_mita_first_row_attends_only_itself() {
+        let (n, d) = (9usize, 4usize);
+        let mut rng = Rng::new(11);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+        let cfg = MitaKernelConfig { m: 3, k: 2, cap_factor: 2, block_q: 4 };
+        let kern = CausalMitaKernel { cfg };
+        let mut ws = Workspace::new();
+        let mut stats = MitaStats::default();
+        let mut out = vec![0.0f32; n * d];
+        kern.run(&q, &k, &v, n, d, &mut ws, &mut out, &mut stats);
+        assert_eq!(&out[..d], &v[..d]);
+        assert_eq!(stats.calls, 1);
+        assert_eq!(stats.overflow, 0);
+    }
+
+    #[test]
+    fn causal_kernels_reuse_workspace_when_warm() {
+        let (n, d) = (16usize, 8usize);
+        let mut rng = Rng::new(17);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+        let mut out = vec![0.0f32; n * d];
+        for kern in [
+            Box::new(CausalMitaKernel::default()) as Box<dyn AttentionKernel>,
+            Box::new(CausalDenseKernel) as Box<dyn AttentionKernel>,
+        ] {
+            let mut ws = Workspace::new();
+            let mut stats = MitaStats::default();
+            kern.run(&q, &k, &v, n, d, &mut ws, &mut out, &mut stats);
+            let warm = (ws.f32_capacity(), ws.usize_capacity(), ws.buffer_count());
+            kern.run(&q, &k, &v, n, d, &mut ws, &mut out, &mut stats);
+            assert_eq!(
+                warm,
+                (ws.f32_capacity(), ws.usize_capacity(), ws.buffer_count()),
+                "{} grew its workspace on a warm call",
+                kern.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,617 @@
+//! Incremental causal-MiTA decode state: the fast-weight view of routing.
+//!
+//! The batch MiTA kernel recomputes its whole selection structure
+//! (landmarks → scores → top-k experts → routing) per call. Under
+//! autoregressive decoding that would be O(n) re-routing per generated
+//! token; [`CausalMitaState`] instead *maintains* the structure as keys
+//! append — exactly the recurrent fast-weight-programmer reading of
+//! attention (Schlag et al., PAPERS.md):
+//!
+//! - **Landmarks** are fixed-width chunks over the key sequence: with
+//!   `w = `[`chunk_width`]`(n_max, m)`, landmark `c` is the mean of key
+//!   rows `c·w .. (c+1)·w`. Each arriving key is `axpy`-accumulated into
+//!   a running chunk sum; when the chunk fills, the landmark freezes as
+//!   `sum · (1/w)`. Chunking (instead of the batch kernel's
+//!   window-relative pooling) is what makes landmarks *append-only*: a
+//!   new token never shifts an existing landmark, so all downstream
+//!   state stays valid.
+//! - **Expert membership** per completed landmark is the top-`k` keys by
+//!   score `dot(key, landmark) / √d` under the deterministic total order
+//!   (score desc, index asc). Maintained by streaming admission: a new
+//!   key enters iff its score strictly beats the current worst member
+//!   (minimum score, ties resolved to the *larger* index — so an
+//!   arriving key that ties never displaces an earlier one, matching the
+//!   sort order). When a landmark completes, its membership is built by
+//!   replaying all existing keys through the same admission rule.
+//! - **Routing**: query `t` goes to the completed landmark with the
+//!   largest `dot(q_t, landmark)`, first-max-wins — the same tie-break
+//!   as `mita::routing::route_argmax`. Its attended set is the expert's
+//!   members ∪ the tail keys not yet covered by a completed landmark
+//!   ∪ the query's own position (causal self-attention always sees the
+//!   recent past and itself). With no completed landmark yet, the query
+//!   attends over the full prefix.
+//!
+//! Every update is spelled so the incremental path is **bit-identical**
+//! to the full-recompute reference ([`recompute_landmarks`],
+//! [`recompute_members`], [`recompute_attend`]) at every step: same
+//! `axpy` accumulation order, same `dot · scale` expression, same pick
+//! order (ascending indices). `tests/decode_native.rs` gates this
+//! per step, per kernel, across thread counts and SIMD lanes.
+
+use crate::kernels::linalg::{axpy, dot, scale_in_place};
+use crate::kernels::mita::{attend_one, MitaKernelConfig};
+use crate::kernels::workspace::Workspace;
+use crate::kernels::MitaStats;
+
+/// Fixed landmark chunk width for a session of at most `n_max` keys and
+/// (at most) `m` landmarks: `max(1, ceil(n_max / m))`. The number of
+/// landmarks that ever complete is `n_max / w ≤ m`.
+pub fn chunk_width(n_max: usize, m: usize) -> usize {
+    n_max.div_ceil(m.max(1)).max(1)
+}
+
+/// Incremental landmark / expert-membership / routing state of one
+/// (block, head) causal-MiTA decode stream. See the module docs for the
+/// update rules; buffers are either owned (decode sessions) or checked
+/// out of a [`Workspace`] (the batch kernel), so steady-state appends
+/// never allocate.
+#[derive(Debug)]
+pub struct CausalMitaState {
+    /// Head dimension.
+    d: usize,
+    /// Landmark chunk width (fixed per session).
+    w: usize,
+    /// Expert membership size (top-k keys per landmark).
+    kk: usize,
+    /// Landmarks that can ever complete (`n_max / w`).
+    m_max: usize,
+    /// Maximum keys this session can hold.
+    n_max: usize,
+    /// Keys appended so far.
+    n_keys: usize,
+    /// Completed landmarks (`n_keys / w`).
+    m_cur: usize,
+    /// Frozen landmark rows `[m_max, d]` (rows `m_cur..` are garbage).
+    landmarks: Vec<f32>,
+    /// Running sum of the current (incomplete) chunk `[d]`.
+    chunk_sum: Vec<f32>,
+    /// Flat member key indices `[m_max, kk]` (per landmark, first
+    /// `member_len[c]` entries are live, in admission order).
+    members: Vec<usize>,
+    /// Scores of the corresponding members `[m_max, kk]`.
+    member_scores: Vec<f32>,
+    /// Live member count per landmark `[m_max]`.
+    member_len: Vec<usize>,
+    /// Attended-index scratch `[n_max]`.
+    picks: Vec<usize>,
+    /// Attention-logit scratch `[n_max]`.
+    logits: Vec<f32>,
+    /// Queries routed to each expert `[m_max]`.
+    route_counts: Vec<usize>,
+}
+
+/// Workspace buffer names of a pooled [`CausalMitaState`] (the batch
+/// kernel checks these out per call and returns them after).
+const WS_LANDMARKS: &str = "mita.causal.landmarks";
+const WS_CHUNK: &str = "mita.causal.chunk";
+const WS_MSCORES: &str = "mita.causal.mscores";
+const WS_LOGITS: &str = "mita.causal.logits";
+const WS_MEMBERS: &str = "mita.causal.members";
+const WS_MLEN: &str = "mita.causal.mlen";
+const WS_PICKS: &str = "mita.causal.picks";
+const WS_COUNTS: &str = "mita.causal.counts";
+
+impl CausalMitaState {
+    /// A fresh owned state for a session of at most `n_max` keys of
+    /// dimension `d`. `cfg.m` / `cfg.k` are clamped to `n_max` exactly
+    /// like the batch kernels clamp to their sequence length.
+    pub fn new(n_max: usize, d: usize, cfg: &MitaKernelConfig) -> Self {
+        let (_, kk, w, m_max) = Self::dims(n_max, cfg);
+        CausalMitaState {
+            d,
+            w,
+            kk,
+            m_max,
+            n_max,
+            n_keys: 0,
+            m_cur: 0,
+            landmarks: vec![0.0; m_max * d],
+            chunk_sum: vec![0.0; d],
+            members: vec![0; m_max * kk],
+            member_scores: vec![0.0; m_max * kk],
+            member_len: vec![0; m_max],
+            picks: vec![0; n_max],
+            logits: vec![0.0; n_max],
+            route_counts: vec![0; m_max],
+        }
+    }
+
+    /// Clamped (m, k), chunk width, and completable-landmark count.
+    fn dims(n_max: usize, cfg: &MitaKernelConfig) -> (usize, usize, usize, usize) {
+        let n = n_max.max(1);
+        let m = cfg.m.clamp(1, n);
+        let kk = cfg.k.clamp(1, n);
+        let w = chunk_width(n_max, m);
+        (m, kk, w, n_max / w)
+    }
+
+    /// Like [`CausalMitaState::new`], but every buffer comes out of `ws`
+    /// (zero-alloc once the workspace is warm). Balance with
+    /// [`CausalMitaState::into_workspace`].
+    pub fn from_workspace(
+        ws: &mut Workspace,
+        n_max: usize,
+        d: usize,
+        cfg: &MitaKernelConfig,
+    ) -> Self {
+        let (_, kk, w, m_max) = Self::dims(n_max, cfg);
+        let mut st = CausalMitaState {
+            d,
+            w,
+            kk,
+            m_max,
+            n_max,
+            n_keys: 0,
+            m_cur: 0,
+            landmarks: ws.take_f32(WS_LANDMARKS, m_max * d),
+            chunk_sum: ws.take_f32(WS_CHUNK, d),
+            members: ws.take_usize(WS_MEMBERS, m_max * kk),
+            member_scores: ws.take_f32(WS_MSCORES, m_max * kk),
+            member_len: ws.take_usize(WS_MLEN, m_max),
+            picks: ws.take_usize(WS_PICKS, n_max),
+            logits: ws.take_f32(WS_LOGITS, n_max),
+            route_counts: ws.take_usize(WS_COUNTS, m_max),
+        };
+        // Workspace contents are unspecified on take; zero exactly the
+        // buffers whose stale values the update rules would read.
+        st.chunk_sum.fill(0.0);
+        st.member_len.fill(0);
+        st.route_counts.fill(0);
+        st
+    }
+
+    /// Return every buffer of a [`CausalMitaState::from_workspace`]
+    /// state, parking capacities for the next call.
+    pub fn into_workspace(self, ws: &mut Workspace) {
+        ws.give_f32(WS_LANDMARKS, self.landmarks);
+        ws.give_f32(WS_CHUNK, self.chunk_sum);
+        ws.give_usize(WS_MEMBERS, self.members);
+        ws.give_f32(WS_MSCORES, self.member_scores);
+        ws.give_usize(WS_MLEN, self.member_len);
+        ws.give_usize(WS_PICKS, self.picks);
+        ws.give_f32(WS_LOGITS, self.logits);
+        ws.give_usize(WS_COUNTS, self.route_counts);
+    }
+
+    /// Keys appended so far.
+    pub fn num_keys(&self) -> usize {
+        self.n_keys
+    }
+
+    /// Completed landmarks so far.
+    pub fn num_landmarks(&self) -> usize {
+        self.m_cur
+    }
+
+    /// Landmark chunk width of this session.
+    pub fn width(&self) -> usize {
+        self.w
+    }
+
+    /// Frozen landmark rows `[num_landmarks, d]`.
+    pub fn landmarks(&self) -> &[f32] {
+        &self.landmarks[..self.m_cur * self.d]
+    }
+
+    /// Sorted member key indices of completed landmark `c`.
+    pub fn expert_members(&self, c: usize) -> Vec<usize> {
+        assert!(c < self.m_cur, "landmark {c} not completed ({} are)", self.m_cur);
+        let mut out = self.members[c * self.kk..c * self.kk + self.member_len[c]].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    /// Queries routed to each (completed) expert so far.
+    pub fn route_counts(&self) -> &[usize] {
+        &self.route_counts
+    }
+
+    /// Record this stream's routing outcome into `stats` (`cap` reports
+    /// the per-expert membership size; the causal kernel has no capacity
+    /// packing, so overflow is structurally zero).
+    pub fn record_stats(&self, stats: &mut MitaStats) {
+        stats.record(self.kk, 0, &self.route_counts);
+    }
+
+    /// Append key row `n_keys` of `kcache` (row-major `[≥ n_keys+1, d]`):
+    /// fold it into the running chunk sum, admit it into every completed
+    /// expert, and — if it completes a chunk — freeze the new landmark
+    /// and build its membership by replaying keys `0..=n_keys`.
+    pub fn append_key(&mut self, kcache: &[f32]) {
+        let (d, t) = (self.d, self.n_keys);
+        assert!(t < self.n_max, "decode state is full ({} keys)", self.n_max);
+        assert!(kcache.len() >= (t + 1) * d, "key cache misses row {t}");
+        let krow = &kcache[t * d..(t + 1) * d];
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // Stream the new key through every completed expert's admission.
+        for c in 0..self.m_cur {
+            let score = dot(krow, &self.landmarks[c * d..(c + 1) * d]) * scale;
+            self.admit(c, t, score);
+        }
+
+        axpy(1.0, krow, &mut self.chunk_sum);
+        self.n_keys = t + 1;
+        if self.n_keys % self.w == 0 && self.m_cur < self.m_max {
+            // Freeze landmark m_cur = chunk mean. The recompute reference
+            // accumulates the same rows with the same axpy order into a
+            // zeroed buffer, so the frozen bits are identical.
+            let c = self.m_cur;
+            let lm = &mut self.landmarks[c * d..(c + 1) * d];
+            lm.copy_from_slice(&self.chunk_sum);
+            scale_in_place(lm, 1.0 / self.w as f32);
+            self.chunk_sum.fill(0.0);
+            self.m_cur = c + 1;
+            // Replay every existing key (index order) through admission:
+            // streamed admission equals sort-based top-k under
+            // (score desc, index asc), so membership matches the
+            // reference as a set.
+            let lm = &self.landmarks[c * d..(c + 1) * d];
+            // Admission is inlined here (not `self.admit`) because `lm`
+            // holds a field borrow of `self.landmarks` across the loop.
+            for i in 0..self.n_keys {
+                let score = dot(&kcache[i * d..(i + 1) * d], lm) * scale;
+                let base = c * self.kk;
+                let len = self.member_len[c];
+                if len < self.kk {
+                    self.members[base + len] = i;
+                    self.member_scores[base + len] = score;
+                    self.member_len[c] = len + 1;
+                } else {
+                    let mut worst = 0usize;
+                    for j in 1..len {
+                        let (sj, sw) =
+                            (self.member_scores[base + j], self.member_scores[base + worst]);
+                        let later = self.members[base + j] > self.members[base + worst];
+                        if sj < sw || (sj == sw && later) {
+                            worst = j;
+                        }
+                    }
+                    if score > self.member_scores[base + worst] {
+                        self.members[base + worst] = i;
+                        self.member_scores[base + worst] = score;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Admission of key `i` (score `score`) into completed expert `c`:
+    /// push below capacity, else replace the worst member (minimum
+    /// score, ties to the larger index) iff strictly better.
+    fn admit(&mut self, c: usize, i: usize, score: f32) {
+        let base = c * self.kk;
+        let len = self.member_len[c];
+        if len < self.kk {
+            self.members[base + len] = i;
+            self.member_scores[base + len] = score;
+            self.member_len[c] = len + 1;
+            return;
+        }
+        let mut worst = 0usize;
+        for j in 1..len {
+            let (sj, sw) = (self.member_scores[base + j], self.member_scores[base + worst]);
+            if sj < sw || (sj == sw && self.members[base + j] > self.members[base + worst]) {
+                worst = j;
+            }
+        }
+        if score > self.member_scores[base + worst] {
+            self.members[base + worst] = i;
+            self.member_scores[base + worst] = score;
+        }
+    }
+
+    /// Attend query row `t = num_keys() - 1` over the causal prefix:
+    /// route to the best completed landmark (first-max-wins on raw
+    /// `dot(q, landmark)` logits), gather its members plus the
+    /// uncovered tail plus `t` itself (ascending, deduplicated), and run
+    /// the shared expert-attention row. Returns the routed expert id
+    /// (`None` while no landmark has completed — the query attended the
+    /// full prefix). `out` receives the `[d]` attention output.
+    pub fn attend(
+        &mut self,
+        qrow: &[f32],
+        kcache: &[f32],
+        vcache: &[f32],
+        out: &mut [f32],
+    ) -> Option<usize> {
+        let (d, n) = (self.d, self.n_keys);
+        assert!(n > 0, "attend before any key was appended");
+        let t = n - 1;
+        assert_eq!(qrow.len(), d, "q row must be [d]");
+        assert!(kcache.len() >= n * d && vcache.len() >= n * d, "k/v cache misses rows");
+        assert_eq!(out.len(), d, "out row must be [d]");
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // Route on raw landmark logits, first-max-wins (the scalar loop
+        // order of `routing::route_argmax`).
+        let routed = if self.m_cur == 0 {
+            None
+        } else {
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for c in 0..self.m_cur {
+                let v = dot(qrow, &self.landmarks[c * d..(c + 1) * d]);
+                if v > best_v {
+                    best_v = v;
+                    best = c;
+                }
+            }
+            self.route_counts[best] += 1;
+            Some(best)
+        };
+
+        // Attended set: expert members ∪ uncovered tail ∪ {t}, ascending.
+        let mut cnt = 0usize;
+        if let Some(e) = routed {
+            let base = e * self.kk;
+            for j in 0..self.member_len[e] {
+                self.picks[cnt] = self.members[base + j];
+                cnt += 1;
+            }
+        }
+        for i in self.m_cur * self.w..n {
+            self.picks[cnt] = i;
+            cnt += 1;
+        }
+        self.picks[cnt] = t;
+        cnt += 1;
+        let picks = &mut self.picks[..cnt];
+        picks.sort_unstable();
+        let mut uniq = 1usize;
+        for j in 1..cnt {
+            if picks[j] != picks[uniq - 1] {
+                picks[uniq] = picks[j];
+                uniq += 1;
+            }
+        }
+        attend_one(
+            qrow,
+            &self.picks[..uniq],
+            kcache,
+            vcache,
+            d,
+            scale,
+            &mut self.logits[..uniq],
+            out,
+        );
+        routed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full-recompute reference (the bit-parity gate)
+// ---------------------------------------------------------------------------
+
+/// Recompute every completed landmark from scratch for an `n`-key prefix:
+/// returns `[n / w, d]` landmark rows, accumulated with the same zeroed
+/// buffer + `axpy`-in-index-order + `1/w` scale the incremental path
+/// froze them with, so the bits must match exactly.
+pub fn recompute_landmarks(
+    kcache: &[f32],
+    n: usize,
+    d: usize,
+    n_max: usize,
+    cfg: &MitaKernelConfig,
+) -> Vec<f32> {
+    let (_, _, w, m_max) = CausalMitaState::dims(n_max, cfg);
+    let m_cur = (n / w).min(m_max);
+    let mut out = vec![0.0f32; m_cur * d];
+    for c in 0..m_cur {
+        let lm = &mut out[c * d..(c + 1) * d];
+        for i in c * w..(c + 1) * w {
+            axpy(1.0, &kcache[i * d..(i + 1) * d], lm);
+        }
+        scale_in_place(lm, 1.0 / w as f32);
+    }
+    out
+}
+
+/// Recompute each completed landmark's top-k membership from scratch:
+/// rank all `n` keys by `dot(key, landmark) · 1/√d` under
+/// (score desc, index asc) and keep the best `k`, returned ascending.
+pub fn recompute_members(
+    kcache: &[f32],
+    n: usize,
+    d: usize,
+    n_max: usize,
+    cfg: &MitaKernelConfig,
+) -> Vec<Vec<usize>> {
+    let (_, kk, _, _) = CausalMitaState::dims(n_max, cfg);
+    let landmarks = recompute_landmarks(kcache, n, d, n_max, cfg);
+    let scale = 1.0 / (d as f32).sqrt();
+    landmarks
+        .chunks_exact(d)
+        .map(|lm| {
+            let mut ranked: Vec<(f32, usize)> = (0..n)
+                .map(|i| (dot(&kcache[i * d..(i + 1) * d], lm) * scale, i))
+                .collect();
+            ranked.sort_by(|a, b| {
+                b.0.partial_cmp(&a.0).expect("finite scores").then(a.1.cmp(&b.1))
+            });
+            ranked.truncate(kk);
+            let mut idx: Vec<usize> = ranked.into_iter().map(|(_, i)| i).collect();
+            idx.sort_unstable();
+            idx
+        })
+        .collect()
+}
+
+/// Recompute query `t`'s routing + attention output from scratch (the
+/// step-`t` reference the incremental [`CausalMitaState::attend`] must
+/// match bit for bit). Returns `(routed expert, [d] output)`.
+#[allow(clippy::too_many_arguments)]
+pub fn recompute_attend(
+    qrow: &[f32],
+    kcache: &[f32],
+    vcache: &[f32],
+    t: usize,
+    d: usize,
+    n_max: usize,
+    cfg: &MitaKernelConfig,
+) -> (Option<usize>, Vec<f32>) {
+    let n = t + 1;
+    let (_, _, w, _) = CausalMitaState::dims(n_max, cfg);
+    let landmarks = recompute_landmarks(kcache, n, d, n_max, cfg);
+    let members = recompute_members(kcache, n, d, n_max, cfg);
+    let m_cur = members.len();
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let routed = if m_cur == 0 {
+        None
+    } else {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for c in 0..m_cur {
+            let v = dot(qrow, &landmarks[c * d..(c + 1) * d]);
+            if v > best_v {
+                best_v = v;
+                best = c;
+            }
+        }
+        Some(best)
+    };
+
+    let mut picks: Vec<usize> = match routed {
+        Some(e) => members[e].clone(),
+        None => Vec::new(),
+    };
+    picks.extend(m_cur * w..n);
+    picks.push(t);
+    picks.sort_unstable();
+    picks.dedup();
+
+    let mut logits = vec![0.0f32; picks.len()];
+    let mut out = vec![0.0f32; d];
+    attend_one(qrow, &picks, kcache, vcache, d, scale, &mut logits, &mut out);
+    (routed, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn rows(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        (0..n * d).map(|_| rng.range_f32(-1.5, 1.5)).collect()
+    }
+
+    #[test]
+    fn chunk_width_covers_the_session() {
+        assert_eq!(chunk_width(16, 4), 4);
+        assert_eq!(chunk_width(17, 4), 5);
+        assert_eq!(chunk_width(3, 8), 1);
+        assert_eq!(chunk_width(0, 4), 1);
+        // m_max · w ≤ n_max < (m_max + 1) · w never over-counts landmarks.
+        for n in 1..40usize {
+            for m in 1..10usize {
+                let w = chunk_width(n, m);
+                assert!(n / w <= m, "n={n} m={m} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_matches_recompute_at_every_step() {
+        let (n, d) = (37usize, 8usize);
+        let cfg = MitaKernelConfig { m: 5, k: 6, cap_factor: 2, block_q: 4 };
+        let mut rng = Rng::new(71);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+
+        let mut st = CausalMitaState::new(n, d, &cfg);
+        let mut out = vec![0.0f32; d];
+        for t in 0..n {
+            st.append_key(&k[..(t + 1) * d]);
+            let routed = st.attend(&q[t * d..(t + 1) * d], &k, &v, &mut out);
+
+            let lms = recompute_landmarks(&k, t + 1, d, n, &cfg);
+            assert_eq!(st.landmarks(), &lms[..], "step {t}: landmark bits diverge");
+            let members = recompute_members(&k, t + 1, d, n, &cfg);
+            assert_eq!(st.num_landmarks(), members.len(), "step {t}");
+            for (c, want) in members.iter().enumerate() {
+                assert_eq!(&st.expert_members(c), want, "step {t} expert {c} membership");
+            }
+            let qrow = &q[t * d..(t + 1) * d];
+            let (ref_route, ref_out) = recompute_attend(qrow, &k, &v, t, d, n, &cfg);
+            assert_eq!(routed, ref_route, "step {t}: routing diverges");
+            assert_eq!(out, ref_out[..], "step {t}: attention output bits diverge");
+        }
+        // Route counts cover every query that saw a completed landmark.
+        let routed_total: usize = st.route_counts().iter().sum();
+        let first_landmark_at = st.width(); // queries 0..w see none
+        assert_eq!(routed_total, n - first_landmark_at);
+    }
+
+    #[test]
+    fn workspace_state_matches_owned_state() {
+        let (n, d) = (24usize, 4usize);
+        let cfg = MitaKernelConfig { m: 4, k: 5, cap_factor: 1, block_q: 2 };
+        let mut rng = Rng::new(5);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+
+        let mut owned = CausalMitaState::new(n, d, &cfg);
+        let mut ws = Workspace::new();
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        // Two passes through the same workspace: the second starts from
+        // stale buffer contents and must still match the owned state.
+        for pass in 0..2 {
+            let mut pooled = CausalMitaState::from_workspace(&mut ws, n, d, &cfg);
+            for t in 0..n {
+                pooled.append_key(&k);
+                let rp = pooled.attend(&q[t * d..(t + 1) * d], &k, &v, &mut b);
+                if pass == 0 {
+                    owned.append_key(&k);
+                    let ro = owned.attend(&q[t * d..(t + 1) * d], &k, &v, &mut a);
+                    assert_eq!(ro, rp, "pass {pass} step {t}");
+                    assert_eq!(a, b, "pass {pass} step {t}");
+                }
+            }
+            pooled.into_workspace(&mut ws);
+        }
+        let warm = (ws.f32_capacity(), ws.usize_capacity(), ws.buffer_count());
+        let st = CausalMitaState::from_workspace(&mut ws, n, d, &cfg);
+        st.into_workspace(&mut ws);
+        assert_eq!(
+            warm,
+            (ws.f32_capacity(), ws.usize_capacity(), ws.buffer_count()),
+            "steady-state workspace reuse must not grow"
+        );
+    }
+
+    #[test]
+    fn stats_record_membership_capacity_and_routes() {
+        let (n, d) = (12usize, 4usize);
+        let cfg = MitaKernelConfig { m: 3, k: 4, cap_factor: 2, block_q: 2 };
+        let mut rng = Rng::new(13);
+        let q = rows(&mut rng, n, d);
+        let k = rows(&mut rng, n, d);
+        let v = rows(&mut rng, n, d);
+        let mut st = CausalMitaState::new(n, d, &cfg);
+        let mut out = vec![0.0f32; d];
+        for t in 0..n {
+            st.append_key(&k);
+            st.attend(&q[t * d..(t + 1) * d], &k, &v, &mut out);
+        }
+        let mut stats = MitaStats::default();
+        st.record_stats(&mut stats);
+        assert_eq!(stats.calls, 1);
+        assert_eq!(stats.cap, 4);
+        assert_eq!(stats.overflow, 0, "causal streaming admission never overflows");
+        assert_eq!(stats.queries, st.route_counts().iter().sum::<usize>());
+    }
+}

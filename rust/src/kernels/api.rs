@@ -262,6 +262,8 @@ impl KernelRegistry {
         let mut registry = KernelRegistry::new();
         registry.register(Box::new(MitaKernel { cfg }));
         registry.register(Box::new(DenseKernel));
+        registry.register(Box::new(crate::decode::CausalMitaKernel { cfg }));
+        registry.register(Box::new(crate::decode::CausalDenseKernel));
         registry
     }
 
@@ -552,7 +554,15 @@ mod tests {
     fn registry_lookup_replace_and_names() {
         let cfg = MitaKernelConfig::default();
         let mut r = KernelRegistry::with_defaults(cfg);
-        assert_eq!(r.names(), vec![OP_ATTN_MITA, OP_ATTN_DENSE]);
+        assert_eq!(
+            r.names(),
+            vec![
+                OP_ATTN_MITA,
+                OP_ATTN_DENSE,
+                crate::decode::OP_ATTN_MITA_CAUSAL,
+                crate::decode::OP_ATTN_DENSE_CAUSAL,
+            ]
+        );
         assert!(r.get(OP_ATTN_MITA).is_some());
         assert!(r.get("predict").is_none());
         assert!(r.resolve(OP_ATTN_MITA).is_ok());
@@ -562,7 +572,7 @@ mod tests {
         // Re-registering a name replaces in place (no duplicate entries).
         let custom = MitaKernelConfig { m: 2, k: 2, cap_factor: 1, block_q: 1 };
         r.register(Box::new(MitaKernel { cfg: custom }));
-        assert_eq!(r.names().len(), 2);
+        assert_eq!(r.names().len(), 4);
     }
 
     #[test]

@@ -122,9 +122,11 @@ pub(crate) fn select_experts(
 }
 
 /// One query row attending over an expert's gathered KV (indices into the
-/// original K/V, no copies). `orow` is overwritten.
+/// original K/V, no copies). `orow` is overwritten. `pub(crate)` so the
+/// causal decode path (`crate::decode`) runs the identical expert-row
+/// attention arithmetic instead of re-deriving it.
 #[allow(clippy::too_many_arguments)]
-fn attend_one(
+pub(crate) fn attend_one(
     qrow: &[f32],
     picks: &[usize],
     kmat: &[f32],

@@ -22,6 +22,11 @@
 //!   error taxonomy, parsed once at the service boundary — and the
 //!   network front that speaks it over HTTP/1.1 + JSON
 //!   (`docs/PROTOCOL.md`).
+//! - **L3-decode** (`decode`): the autoregressive workload — causal
+//!   variants of both kernels, incremental MiTA landmark/expert state
+//!   (per-step bit-parity against a full-recompute reference), KV-cached
+//!   single-token forwards, and streaming generation over `/v1/generate`
+//!   (`docs/DECODE.md`).
 //! - **L3-train** (`train`): exact hand-derived backward passes for
 //!   every model layer (dense softmax and straight-through MiTA
 //!   attention included), flat gradients + AdamW, and the
@@ -32,6 +37,7 @@
 
 pub mod coordinator;
 pub mod data;
+pub mod decode;
 pub mod flops;
 pub mod harness;
 pub mod kernels;

@@ -90,9 +90,13 @@ const VALUED_FLAGS: &[&str] = &[
     "batch",
     "replicas",
     "retries",
+    // streaming generation
+    "prompt",
+    "max-tokens",
     // tracing / observability
     "limit",
     "min-us",
+    "trace-ring",
     // native training subsystem
     "lr",
     "kernel",
@@ -196,12 +200,11 @@ fn main() -> Result<()> {
             );
         }
         // One serving front over the typed service API: `serve <bundle>`
-        // drives a compiled PJRT bundle, `--workload attn|model` the
-        // native backend (the `serve-native` / `serve-model` aliases
-        // preselect those), and `--listen ADDR` starts the network
+        // drives a compiled PJRT bundle, `--workload attn|model|generate`
+        // the native backend, and `--listen ADDR` starts the network
         // server instead of the load generator.
-        "serve" | "serve-native" | "serve-model" => {
-            cmd_serve(&args, args.subcommand.as_str(), &artifacts, &opts)?;
+        "serve" => {
+            cmd_serve(&args, &artifacts, &opts)?;
         }
         "client" => {
             cmd_client(&args, &opts)?;
@@ -389,33 +392,32 @@ fn main() -> Result<()> {
 }
 
 /// The single serving front. Dispatch: `--listen` starts the network
-/// server; otherwise the workload (bundle / attn / model — preselected by
-/// the `serve-native` / `serve-model` aliases, or `serve <bundle>` for
-/// the PJRT path) runs under the load-generator benchmark loop. All
-/// three produce typed `ServiceRequest` batches over the same engine.
-fn cmd_serve(args: &cli::Args, alias: &str, artifacts: &Path, opts: &Opts) -> Result<()> {
-    if alias != "serve" {
-        let workload = if alias == "serve-model" { "model" } else { "attn" };
-        eprintln!("warning: `{alias}` is deprecated; use `serve --workload {workload}`");
-    }
-    // The alias / --workload choice carries into --listen: a model
-    // workload must bind its (default listops) model before the network
-    // server starts, or every /v1/model/forward would be unbound_params.
-    let wants_model = alias == "serve-model" || args.flag("workload") == Some("model");
+/// server; otherwise the workload (bundle / attn / model, or `serve
+/// <bundle>` for the PJRT path) runs under the load-generator benchmark
+/// loop. All fronts produce typed `ServiceRequest` batches over the
+/// same engine.
+fn cmd_serve(args: &cli::Args, artifacts: &Path, opts: &Opts) -> Result<()> {
+    // The --workload choice carries into --listen: a model workload must
+    // bind its (default listops) model before the network server starts,
+    // or every /v1/model/forward would be unbound_params. `generate` is
+    // the same model workload, named for the streaming endpoint it
+    // exists to serve (`/v1/generate` works under either name).
+    let wants_model = matches!(args.flag("workload"), Some("model") | Some("generate"));
     if let Some(addr) = args.flag("listen") {
         return serve_listen(args, addr, opts, wants_model);
     }
-    let workload = match alias {
-        "serve-native" => "attn".to_string(),
-        "serve-model" => "model".to_string(),
-        _ if args.positionals.first().is_some() => "bundle".to_string(),
-        _ => args.flag_or("workload", "attn"),
+    let workload = if args.positionals.first().is_some() {
+        "bundle".to_string()
+    } else {
+        args.flag_or("workload", "attn")
     };
     match workload.as_str() {
         "bundle" => serve_bundle_front(args, artifacts),
         "attn" => serve_attn_front(args),
-        "model" => serve_model_front(args, opts),
-        other => bail!("unknown --workload {other:?} (expected bundle, attn, or model)"),
+        "model" | "generate" => serve_model_front(args, opts),
+        other => {
+            bail!("unknown --workload {other:?} (expected bundle, attn, model, or generate)")
+        }
     }
 }
 
@@ -619,12 +621,13 @@ fn spawn_model_engine(
 
 /// `serve --listen ADDR`: the network front. `--replicas N` spawns N
 /// native engine replicas from one spec behind least-outstanding routing
-/// (see docs/SERVING.md); with `--task` / `--checkpoint` (or a model
-/// workload alias) a model is bound under `--binding` (default "model")
-/// on **every** replica so `/v1/model/forward` is servable alongside
-/// `/v1/attention`. `--addr-file F` writes the bound address (useful
-/// with port 0 in scripts/CI). Runs until a client posts
-/// `/v1/admin/shutdown`.
+/// (see docs/SERVING.md); with `--task` / `--checkpoint` (or a model /
+/// generate workload) a model is bound under `--binding` (default
+/// "model") on **every** replica so `/v1/model/forward` and
+/// `/v1/generate` are servable alongside `/v1/attention`.
+/// `--trace-ring N` sizes the completed-request trace ring. `--addr-file
+/// F` writes the bound address (useful with port 0 in scripts/CI). Runs
+/// until a client posts `/v1/admin/shutdown`.
 fn serve_listen(args: &cli::Args, addr: &str, opts: &Opts, wants_model: bool) -> Result<()> {
     let binding = args.flag_or("binding", "model");
     let replicas = args.flag_parse("replicas", 1usize)?;
@@ -645,6 +648,8 @@ fn serve_listen(args: &cli::Args, addr: &str, opts: &Opts, wants_model: bool) ->
     let pool_cfg = ReplicaPoolConfig {
         replicas,
         max_inflight: max_inflight.div_ceil(replicas.max(1)).max(1),
+        trace_capacity: args
+            .flag_parse("trace-ring", ReplicaPoolConfig::default().trace_capacity)?,
         ..ReplicaPoolConfig::default()
     };
     let pool = Arc::new(ReplicaPool::spawn(spec, vec![], pool_cfg)?);
@@ -769,6 +774,68 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 t0.elapsed().as_secs_f64() * 1e3
             );
         }
+        "generate" => {
+            // Streamed decoding over /v1/generate: step chunk lines print
+            // as they arrive, then the terminal response is checked
+            // against the stream (token agreement + echoed trace_id) so
+            // the CI smoke step exercises the full chunked round-trip.
+            let binding = args.flag_or("binding", "model");
+            let max_tokens = args.flag_parse("max-tokens", 8usize)?;
+            let prompt: Vec<i32> = match args.flag("prompt") {
+                Some(spec) => spec
+                    .split(',')
+                    .map(|t| {
+                        t.trim()
+                            .parse::<i32>()
+                            .map_err(|e| anyhow::anyhow!("--prompt token {t:?}: {e}"))
+                    })
+                    .collect::<Result<_>>()?,
+                None => vec![1, 2, 3, 4],
+            };
+            anyhow::ensure!(!prompt.is_empty(), "--prompt wants at least one token");
+            let kernel = args.flag("kernel").map(KernelId::parse).transpose()?;
+            let req = ServiceRequest::Generate {
+                binding: binding.as_str().into(),
+                prompt: Tensor::i32(&[prompt.len()], prompt)?,
+                max_tokens,
+                params: mita::service::GenerateParams { kernel },
+            };
+            let t0 = Instant::now();
+            let mut steps = Vec::new();
+            let (resp, trace_id) = client.generate(&req, &mut |ev| {
+                println!(
+                    "  step {} token={} latency={}us",
+                    ev.index,
+                    ev.token,
+                    ev.latency_ns / 1_000
+                );
+                steps.push(ev);
+            })?;
+            let (tokens, prefill) = match resp {
+                mita::service::ServiceResponse::Generate { tokens, prefill_tokens } => {
+                    (tokens, prefill_tokens)
+                }
+                other => bail!("unexpected generate response {other:?}"),
+            };
+            let toks = tokens.as_i32()?.to_vec();
+            anyhow::ensure!(
+                steps.len() == toks.len(),
+                "streamed {} steps but the terminal response carries {} tokens",
+                steps.len(),
+                toks.len()
+            );
+            anyhow::ensure!(
+                steps.iter().map(|e| e.token).eq(toks.iter().copied()),
+                "streamed tokens diverge from the terminal response"
+            );
+            anyhow::ensure!(trace_id.is_some(), "terminal response did not echo a trace_id");
+            println!(
+                "generate: {prefill} prompt tokens -> {} new in {:.2}ms (trace #{}) tokens={toks:?}",
+                toks.len(),
+                t0.elapsed().as_secs_f64() * 1e3,
+                trace_id.unwrap_or(0),
+            );
+        }
         "trace" => {
             // Raw wire text through the JSON parser, so the CI smoke
             // exercises the exact exported schema (see
@@ -788,8 +855,8 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 let us = |key: &str| -> Result<f64> { spans.get(key)?.as_f64() };
                 println!(
                     "  #{} {} replica={} depth={} ok={} total={:.1}us \
-                     (admission={:.1} route={:.1} queue={:.1} batch={:.1} execute={:.1}) \
-                     blocks={}",
+                     (admission={:.1} route={:.1} queue={:.1} batch={:.1} execute={:.1} \
+                     decode={:.1}) blocks={}",
                     t.get("trace_id")?.as_f64()? as u64,
                     t.get("kind")?.as_str()?,
                     t.get("replica")?.as_f64()? as u64,
@@ -801,6 +868,7 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                     us("queue_us")?,
                     us("batch_us")?,
                     us("execute_us")?,
+                    us("decode_us")?,
                     t.get("blocks")?.as_arr()?.len(),
                 );
             }
@@ -858,7 +926,7 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
         other => {
             bail!(
                 "unknown client action {other:?} \
-                 (health|attention|model-forward|stats|metrics|trace|check-prometheus|shutdown)"
+                 (health|attention|model-forward|generate|stats|metrics|trace|check-prometheus|shutdown)"
             )
         }
     }
@@ -1060,24 +1128,31 @@ single runs:
 serving (one typed-request front; see docs/PROTOCOL.md + docs/SERVING.md):
   serve <bundle> [--requests N] [--rate R] [--max-wait-ms W] [--queue-cap C]
            load-generator benchmark over a compiled PJRT bundle
-  serve --workload attn|model [--op attn.mita|attn.dense] [--task T] ...
-           same benchmark over the native backend
+  serve --workload attn|model|generate [--op attn.mita|attn.dense] [--task T] ...
+           same benchmark over the native backend (model and generate
+           both bind a native model; generate names the streaming path)
   serve --listen ADDR [--replicas N] [--addr-file F] [--max-inflight C]
         [--task T [--seq-len N] [--dim D] [--heads H] [--depth L]]
-        [--checkpoint F] [--binding K]
+        [--checkpoint F] [--binding K] [--trace-ring N]
            network front: TCP HTTP/1.1 + JSON over the typed service API
-           (/v1/attention, /v1/model/forward, /v1/bind, /v1/stats,
-           /v1/metrics, ...); --replicas N routes across N engine
-           replicas with least-outstanding routing + typed shedding;
-           runs until a client posts /v1/admin/shutdown
+           (/v1/attention, /v1/model/forward, /v1/generate, /v1/bind,
+           /v1/stats, /v1/metrics, ...); --replicas N routes across N
+           engine replicas with least-outstanding routing + typed
+           shedding; --trace-ring N sizes the completed-request trace
+           ring (default 256, floor 16); runs until a client posts
+           /v1/admin/shutdown
   client (--addr HOST:PORT | --addr-file F)
-         <health|attention|model-forward|stats|metrics|trace|
+         <health|attention|model-forward|generate|stats|metrics|trace|
           check-prometheus|shutdown>
          [--retries N] [--n N] [--dim D] [--batch B] [--valid V]
          [--task T] [--binding K] [--limit N] [--min-us T]
+         [--prompt T1,T2,...] [--max-tokens N] [--kernel attn.mita|attn.dense]
            loopback wire client: sends one typed request and asserts the
            response shape (non-zero exit on protocol errors); metrics
            asserts every documented /v1/metrics series is present;
+           generate streams /v1/generate decode steps (chunked transfer
+           encoding) and checks the terminal response against the
+           stream (docs/DECODE.md);
            trace prints GET /v1/trace stage spans + per-block profiles
            ([--limit N] [--min-us T]; docs/OBSERVABILITY.md);
            check-prometheus validates /v1/metrics?format=prometheus
@@ -1100,8 +1175,8 @@ native training (exact backward passes + AdamW; see docs/TRAINING.md):
                [--kernel mita|dense] [--eval-every E] [--eval-batches B]
                [--checkpoint-out F] [--curve-out F] [--assert-improved]
            trains a native MiTA transformer on an LRA task end to end;
-           the best-eval checkpoint reloads unchanged into serve-model /
-           model-check / the network front
+           the best-eval checkpoint reloads unchanged into serve
+           --workload model / model-check / the network front
 
 paper reproduction (see DESIGN.md experiment index):
   table2   from-scratch image classification (attention varied only)

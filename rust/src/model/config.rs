@@ -23,7 +23,14 @@ use crate::runtime::Tensor;
 const CONFIG_VERSION: i32 = 1;
 
 /// Registry-name ↔ checkpoint-id mapping for per-block attention kernels.
-const KERNEL_IDS: &[(&str, i32)] = &[(OP_ATTN_MITA, 0), (OP_ATTN_DENSE, 1)];
+/// The causal decode variants are checkpointable too, so a model tagged
+/// for autoregressive serving round-trips like any other.
+const KERNEL_IDS: &[(&str, i32)] = &[
+    (OP_ATTN_MITA, 0),
+    (OP_ATTN_DENSE, 1),
+    (crate::decode::OP_ATTN_MITA_CAUSAL, 2),
+    (crate::decode::OP_ATTN_DENSE_CAUSAL, 3),
+];
 
 fn kernel_id(name: &str) -> Result<i32> {
     match KERNEL_IDS.iter().find(|(n, _)| *n == name) {

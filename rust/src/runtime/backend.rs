@@ -41,8 +41,8 @@ use crate::model::{MitaModel, ModelConfig, ModelScratch};
 use crate::runtime::client::{Runtime, RuntimeStats};
 use crate::runtime::tensor::Tensor;
 use crate::service::{
-    resolve_valid_rows, BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest,
-    ServiceResponse, ServiceResult, ServiceStats,
+    resolve_valid_rows, BindingId, GenerateParams, KernelId, QkvBatch, ServiceError,
+    ServiceRequest, ServiceResponse, ServiceResult, ServiceStats, StepEvent,
 };
 
 pub use crate::kernels::api::{OP_ATTN_DENSE, OP_ATTN_MITA};
@@ -79,12 +79,33 @@ pub trait Backend {
     /// surface it without string matching.
     fn execute(&mut self, req: ServiceRequest) -> ServiceResult<ServiceResponse>;
 
+    /// Execute one typed request, reporting incremental progress. Only
+    /// [`ServiceRequest::Generate`] produces step events (one per decoded
+    /// token, emitted *before* the final response); every other request
+    /// class — and any backend without streaming support — behaves
+    /// exactly like [`Backend::execute`].
+    fn execute_streaming(
+        &mut self,
+        req: ServiceRequest,
+        _on_step: &mut dyn FnMut(StepEvent),
+    ) -> ServiceResult<ServiceResponse> {
+        self.execute(req)
+    }
+
     /// Drain the per-block profile of the most recent model-forward
     /// execute, if the backend records one. Backends without per-block
     /// instrumentation return an empty vec; the engine attaches the
     /// result to the request's trace.
     fn take_block_profiles(&mut self) -> Vec<BlockProfile> {
         Vec::new()
+    }
+
+    /// Drain the decode-loop wall time of the most recent execute (0 for
+    /// anything but a [`ServiceRequest::Generate`], and for backends
+    /// without a decode path). The engine folds it into the request's
+    /// profile so traces can split prefill from decode.
+    fn take_decode_ns(&mut self) -> u64 {
+        0
     }
 }
 
@@ -224,13 +245,13 @@ impl Backend for PjrtBackend {
             ServiceRequest::Metrics => Err(ServiceError::Unavailable(
                 "serving metrics are assembled by the replica pool, not a backend".into(),
             )),
-            other @ (ServiceRequest::Attention { .. } | ServiceRequest::ModelForward { .. }) => {
-                Err(ServiceError::Unavailable(format!(
-                    "pjrt backend serves compiled artifacts; {:?} requests need the native \
-                     backend",
-                    other.kind()
-                )))
-            }
+            other @ (ServiceRequest::Attention { .. }
+            | ServiceRequest::ModelForward { .. }
+            | ServiceRequest::Generate { .. }) => Err(ServiceError::Unavailable(format!(
+                "pjrt backend serves compiled artifacts; {:?} requests need the native \
+                 backend",
+                other.kind()
+            ))),
         }
     }
 }
@@ -291,6 +312,9 @@ pub struct NativeBackend {
     /// Per-block profile of the most recent model forward, drained by
     /// [`Backend::take_block_profiles`] into the request's trace.
     last_blocks: RefCell<Vec<BlockProfile>>,
+    /// Decode-loop wall time of the most recent generate, drained by
+    /// [`Backend::take_decode_ns`] into the request's profile.
+    last_decode_ns: RefCell<u64>,
     /// Models bound by key. Each carries its own registry keyed by the
     /// checkpoint's MiTA params (the backend registry serves the raw
     /// attention ops, whose kernel config may differ).
@@ -322,6 +346,7 @@ impl NativeBackend {
             mita: RefCell::new(MitaStats::default()),
             blocks: RefCell::new(Vec::new()),
             last_blocks: RefCell::new(Vec::new()),
+            last_decode_ns: RefCell::new(0),
             models: HashMap::new(),
             model_scratch: RefCell::new(ModelScratch::default()),
         }
@@ -444,6 +469,74 @@ impl NativeBackend {
         Tensor::f32(&[b, cfg.classes], logits).map_err(ServiceError::internal)
     }
 
+    /// Execute a typed generate request against a bound model: greedy
+    /// autoregressive decoding through [`crate::decode::generate`], one
+    /// [`StepEvent`] per emitted token. Returns the emitted tokens as a
+    /// `[max_tokens]` i32 tensor plus the prompt length that was
+    /// prefilled.
+    pub fn run_generate(
+        &self,
+        binding: &BindingId,
+        prompt: &Tensor,
+        max_tokens: usize,
+        params: &GenerateParams,
+        on_step: &mut dyn FnMut(StepEvent),
+    ) -> ServiceResult<(Tensor, usize)> {
+        let bound = self.models.get(binding.as_str()).ok_or_else(|| {
+            let mut keys: Vec<&str> = self.models.keys().map(String::as_str).collect();
+            keys.sort_unstable();
+            ServiceError::UnboundParams(format!(
+                "no model bound under {binding:?} (bound models: [{}])",
+                keys.join(", ")
+            ))
+        })?;
+        let toks = prompt
+            .as_i32()
+            .map_err(|_| ServiceError::BadShape("generate prompt must be i32".into()))?;
+        match *prompt.shape() {
+            [_] | [1, _] => {}
+            ref s => {
+                return Err(ServiceError::BadShape(format!(
+                    "generate prompt must be [p] or [1, p], got {s:?}"
+                )))
+            }
+        }
+        // An explicit kernel override must name a decodable kernel
+        // (batch names map onto their causal variants).
+        let kernel = params
+            .kernel
+            .as_ref()
+            .map(|id| {
+                crate::decode::DecodeKernel::from_name(id.as_str())
+                    .map_err(|e| ServiceError::UnknownOp(format!("generate kernel: {e}")))
+            })
+            .transpose()?;
+
+        let t0 = Instant::now();
+        let mut step = |i: usize, tok: i32, ns: u64| {
+            on_step(StepEvent { index: i, token: tok, latency_ns: ns });
+        };
+        let outcome = crate::decode::generate(&bound.model, kernel, toks, max_tokens, &mut step)
+            .map_err(|e| ServiceError::BadShape(format!("generate: {e}")))?;
+        {
+            let mut mita = self.mita.borrow_mut();
+            for b in &outcome.blocks {
+                mita.merge(&b.stats);
+            }
+            merge_block_profiles(&mut self.blocks.borrow_mut(), &outcome.blocks);
+            *self.last_blocks.borrow_mut() = outcome.blocks;
+            *self.last_decode_ns.borrow_mut() = outcome.decode_ns;
+            let mut st = self.stats.borrow_mut();
+            st.executions += 1;
+            st.execute_secs += t0.elapsed().as_secs_f64();
+        }
+        // The response carries the generated suffix only; the caller already
+        // holds the prompt, and the step stream mirrors exactly these tokens.
+        let gen: Vec<i32> = outcome.tokens[outcome.prefill_tokens..].to_vec();
+        let tokens = Tensor::i32(&[gen.len()], gen).map_err(ServiceError::internal)?;
+        Ok((tokens, outcome.prefill_tokens))
+    }
+
     fn take_stats(&self, reset: bool) -> ServiceStats {
         let (mita, blocks) = if reset {
             let mut mita = self.mita.borrow_mut();
@@ -475,6 +568,11 @@ impl Backend for NativeBackend {
             ServiceRequest::ModelForward { binding, tokens, valid_rows } => {
                 let logits = self.run_model(&binding, &tokens, valid_rows)?;
                 Ok(ServiceResponse::ModelForward { logits })
+            }
+            ServiceRequest::Generate { binding, prompt, max_tokens, params } => {
+                let (tokens, prefill_tokens) =
+                    self.run_generate(&binding, &prompt, max_tokens, &params, &mut |_| {})?;
+                Ok(ServiceResponse::Generate { tokens, prefill_tokens })
             }
             // Bind a model checkpoint: the tensor list must be a
             // self-describing MitaModel flat form (config descriptor
@@ -524,8 +622,27 @@ impl Backend for NativeBackend {
         }
     }
 
+    fn execute_streaming(
+        &mut self,
+        req: ServiceRequest,
+        on_step: &mut dyn FnMut(StepEvent),
+    ) -> ServiceResult<ServiceResponse> {
+        match req {
+            ServiceRequest::Generate { binding, prompt, max_tokens, params } => {
+                let (tokens, prefill_tokens) =
+                    self.run_generate(&binding, &prompt, max_tokens, &params, on_step)?;
+                Ok(ServiceResponse::Generate { tokens, prefill_tokens })
+            }
+            other => self.execute(other),
+        }
+    }
+
     fn take_block_profiles(&mut self) -> Vec<BlockProfile> {
         std::mem::take(&mut *self.last_blocks.borrow_mut())
+    }
+
+    fn take_decode_ns(&mut self) -> u64 {
+        std::mem::take(&mut *self.last_decode_ns.borrow_mut())
     }
 }
 
@@ -675,7 +792,15 @@ mod tests {
         assert_eq!(err.code(), "unknown_op");
 
         assert!(be.warmup(OP_ATTN_MITA).is_ok());
-        assert_eq!(be.ops(), vec![OP_ATTN_MITA, OP_ATTN_DENSE]);
+        assert_eq!(
+            be.ops(),
+            vec![
+                OP_ATTN_MITA,
+                OP_ATTN_DENSE,
+                crate::decode::OP_ATTN_MITA_CAUSAL,
+                crate::decode::OP_ATTN_DENSE_CAUSAL,
+            ]
+        );
     }
 
     #[test]
@@ -755,6 +880,83 @@ mod tests {
         assert_eq!(be.run_model(&m, &short, None).unwrap_err().code(), "bad_shape");
         let wrong = Tensor::f32(&[2, 10], vec![0.0; 20]).unwrap();
         assert_eq!(be.run_model(&m, &wrong, None).unwrap_err().code(), "bad_shape");
+    }
+
+    #[test]
+    fn generate_streams_steps_and_reports_decode_time() {
+        let mcfg = ModelConfig::new(7, 24, 8, 2, 1, 16, 3, OP_ATTN_MITA);
+        let attn = NativeAttnConfig::for_shape(24, 8, 2).with_model(mcfg);
+        let mut be = NativeBackend::new(attn);
+        be.execute(ServiceRequest::BindInit {
+            binding: BindingId::from("m"),
+            init_op: OP_MODEL_INIT.into(),
+            seed: 5,
+            param_count: 0,
+        })
+        .unwrap();
+
+        let prompt = Tensor::i32(&[4], vec![1, 2, 3, 0]).unwrap();
+        let mut steps: Vec<StepEvent> = Vec::new();
+        let resp = be
+            .execute_streaming(
+                ServiceRequest::Generate {
+                    binding: BindingId::from("m"),
+                    prompt: prompt.clone(),
+                    max_tokens: 6,
+                    params: GenerateParams::default(),
+                },
+                &mut |ev| steps.push(ev),
+            )
+            .unwrap();
+        let (tokens, prefill) = match resp {
+            ServiceResponse::Generate { tokens, prefill_tokens } => (tokens, prefill_tokens),
+            other => panic!("wrong class {:?}", other.kind()),
+        };
+        assert_eq!(prefill, 4);
+        assert_eq!(tokens.shape(), &[6]);
+        assert_eq!(steps.len(), 6, "one step event per emitted token");
+        assert_eq!(steps[0].latency_ns, 0, "step 0 is the prefill tail");
+        let streamed: Vec<i32> = steps.iter().map(|s| s.token).collect();
+        assert_eq!(streamed, tokens.as_i32().unwrap());
+        assert!(be.take_decode_ns() > 0, "decode loop wall time recorded");
+        assert_eq!(be.take_decode_ns(), 0, "drain empties the decode time");
+        assert_eq!(be.take_block_profiles().len(), 1, "generate records block profiles");
+
+        // The plain execute path emits no steps but decodes identically
+        // (an explicit kernel override naming the bound kernel included).
+        let resp = be
+            .execute(ServiceRequest::Generate {
+                binding: BindingId::from("m"),
+                prompt,
+                max_tokens: 6,
+                params: GenerateParams { kernel: Some(KernelId::Mita) },
+            })
+            .unwrap();
+        match resp {
+            ServiceResponse::Generate { tokens: t2, .. } => assert_eq!(t2, tokens),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        // Taxonomy: undecodable kernel override / unbound binding.
+        let one = Tensor::i32(&[1], vec![0]).unwrap();
+        let err = be
+            .execute(ServiceRequest::Generate {
+                binding: BindingId::from("m"),
+                prompt: one.clone(),
+                max_tokens: 1,
+                params: GenerateParams { kernel: Some(KernelId::Custom("attn.nope".into())) },
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "unknown_op");
+        let err = be
+            .execute(ServiceRequest::Generate {
+                binding: BindingId::from("nope"),
+                prompt: one,
+                max_tokens: 1,
+                params: GenerateParams::default(),
+            })
+            .unwrap_err();
+        assert_eq!(err.code(), "unbound_params");
     }
 
     #[test]

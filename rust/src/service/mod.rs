@@ -12,6 +12,9 @@
 //!   expressed as a typed `valid_rows: Option<usize>` field.
 //! - [`ServiceRequest::ModelForward`] — token classification against a
 //!   model bound under a [`BindingId`].
+//! - [`ServiceRequest::Generate`] — autoregressive greedy decoding
+//!   against a bound model; per-token [`StepEvent`]s stream over the
+//!   netserver via chunked transfer encoding (`docs/DECODE.md`).
 //! - [`ServiceRequest::BindCheckpoint`] / [`ServiceRequest::BindInit`] —
 //!   parameter binding (checkpoint tensors or seeded init).
 //! - [`ServiceRequest::Artifact`] — compiled-artifact execution on the
@@ -278,6 +281,10 @@ pub enum ServiceRequest {
     /// against the model bound under `binding`. Output is
     /// `[b, classes]` logits; rows past `valid_rows` stay zero.
     ModelForward { binding: BindingId, tokens: Tensor, valid_rows: Option<usize> },
+    /// Autoregressive greedy generation: decode `max_tokens` tokens from
+    /// the `[p]` i32 `prompt` against the model bound under `binding`,
+    /// emitting one [`StepEvent`] per token. All fields are v2-additive.
+    Generate { binding: BindingId, prompt: Tensor, max_tokens: usize, params: GenerateParams },
     /// Bind parameters from host tensors (a loaded checkpoint).
     BindCheckpoint { binding: BindingId, params: Vec<Tensor> },
     /// Bind parameters by seeded init (`init_op` is backend-specific:
@@ -305,6 +312,7 @@ impl ServiceRequest {
         match self {
             ServiceRequest::Attention { .. } => "attention",
             ServiceRequest::ModelForward { .. } => "model_forward",
+            ServiceRequest::Generate { .. } => "generate",
             ServiceRequest::BindCheckpoint { .. } => "bind_checkpoint",
             ServiceRequest::BindInit { .. } => "bind_init",
             ServiceRequest::Artifact { .. } => "artifact",
@@ -312,6 +320,30 @@ impl ServiceRequest {
             ServiceRequest::Metrics => "metrics",
         }
     }
+}
+
+/// Decode-time options of a [`ServiceRequest::Generate`]. Every field
+/// has a wire default, so absent fields keep v1/v2 bodies parseable.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GenerateParams {
+    /// Override the causal attention path for every block (`attn.mita` /
+    /// `mita.causal` route causal MiTA, `attn.dense` / `dense.causal`
+    /// causal dense). `None` derives the path per block from the bound
+    /// model's kernel tags.
+    pub kernel: Option<KernelId>,
+}
+
+/// One generated token of a streaming [`ServiceRequest::Generate`]:
+/// emitted in `index` order over the chunked `/v1/generate` response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepEvent {
+    /// Zero-based position in the generated suffix.
+    pub index: usize,
+    /// The generated token id.
+    pub token: i32,
+    /// Wall time of the forward pass that produced this token (step 0
+    /// reports 0 — its compute is the tail of the prefill pass).
+    pub latency_ns: u64,
 }
 
 /// Combined backend counters returned by [`ServiceRequest::Stats`].
@@ -336,6 +368,9 @@ pub enum ServiceResponse {
     Attention { out: Tensor },
     /// `[b, classes]` classification logits.
     ModelForward { logits: Tensor },
+    /// `[generated]` i32 token ids — the suffix after the prompt (one
+    /// per step event), plus how many prompt tokens were prefilled.
+    Generate { tokens: Tensor, prefill_tokens: usize },
     /// The binding now exists backend-side.
     Bound { binding: BindingId },
     /// Raw artifact outputs, in artifact order.
@@ -352,6 +387,7 @@ impl ServiceResponse {
         match self {
             ServiceResponse::Attention { .. } => "attention",
             ServiceResponse::ModelForward { .. } => "model_forward",
+            ServiceResponse::Generate { .. } => "generate",
             ServiceResponse::Bound { .. } => "bound",
             ServiceResponse::Artifact { .. } => "artifact",
             ServiceResponse::Stats(_) => "stats",
@@ -365,6 +401,7 @@ impl ServiceResponse {
         match self {
             ServiceResponse::Attention { out } => vec![out],
             ServiceResponse::ModelForward { logits } => vec![logits],
+            ServiceResponse::Generate { tokens, .. } => vec![tokens],
             ServiceResponse::Artifact { outputs } => outputs.iter().collect(),
             ServiceResponse::Bound { .. }
             | ServiceResponse::Stats(_)
@@ -377,6 +414,7 @@ impl ServiceResponse {
         match self {
             ServiceResponse::Attention { out } => vec![out],
             ServiceResponse::ModelForward { logits } => vec![logits],
+            ServiceResponse::Generate { tokens, .. } => vec![tokens],
             ServiceResponse::Artifact { outputs } => outputs,
             ServiceResponse::Bound { .. }
             | ServiceResponse::Stats(_)

@@ -17,8 +17,8 @@
 use crate::coordinator::metrics::{HistogramSnapshot, MetricsSnapshot, ReplicaSnapshot};
 use crate::runtime::tensor::Tensor;
 use crate::service::{
-    BindingId, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse, ServiceResult,
-    ServiceStats, PROTOCOL_VERSION, PROTOCOL_VERSION_MIN,
+    BindingId, GenerateParams, KernelId, QkvBatch, ServiceError, ServiceRequest, ServiceResponse,
+    ServiceResult, ServiceStats, StepEvent, PROTOCOL_VERSION, PROTOCOL_VERSION_MIN,
 };
 use crate::util::json::Value;
 
@@ -26,6 +26,11 @@ use crate::util::json::Value;
 pub const EP_ATTENTION: &str = "/v1/attention";
 /// Endpoint of [`ServiceRequest::ModelForward`].
 pub const EP_MODEL_FORWARD: &str = "/v1/model/forward";
+/// Endpoint of [`ServiceRequest::Generate`]. The response streams over
+/// chunked transfer encoding: one [`StepEvent`] JSON line per generated
+/// token, then the standard response body as the final chunk
+/// (`docs/DECODE.md`).
+pub const EP_GENERATE: &str = "/v1/generate";
 /// Endpoint of [`ServiceRequest::BindCheckpoint`] / [`ServiceRequest::BindInit`].
 pub const EP_BIND: &str = "/v1/bind";
 /// Endpoint of [`ServiceRequest::Artifact`].
@@ -164,6 +169,15 @@ pub fn encode_request(req: &ServiceRequest) -> (&'static str, Value) {
             }
             EP_MODEL_FORWARD
         }
+        ServiceRequest::Generate { binding, prompt, max_tokens, params } => {
+            body.push(("binding".into(), Value::str(binding.as_str())));
+            body.push(("prompt".into(), tensor_to_json(prompt)));
+            body.push(("max_tokens".into(), Value::num(*max_tokens as f64)));
+            if let Some(k) = &params.kernel {
+                body.push(("kernel".into(), Value::str(k.as_str())));
+            }
+            EP_GENERATE
+        }
         ServiceRequest::BindCheckpoint { binding, params } => {
             body.push(("binding".into(), Value::str(binding.as_str())));
             body.push(("params".into(), Value::Arr(params.iter().map(tensor_to_json).collect())));
@@ -271,6 +285,30 @@ pub fn parse_request(path: &str, body: &Value) -> ServiceResult<ServiceRequest> 
             })?)?;
             Ok(ServiceRequest::ModelForward { binding, tokens, valid_rows: opt_valid_rows(body)? })
         }
+        EP_GENERATE => {
+            let binding = BindingId::new(req_str(body, "binding")?);
+            let prompt = tensor_from_json(
+                body.get("prompt").map_err(|e| ServiceError::BadRequest(e.to_string()))?,
+            )?;
+            let max_tokens = body
+                .get("max_tokens")
+                .and_then(|v| v.as_usize())
+                .map_err(|e| ServiceError::BadRequest(format!("max_tokens: {e}")))?;
+            let kernel = body
+                .opt("kernel")
+                .map(|k| {
+                    k.as_str()
+                        .map_err(|e| ServiceError::BadRequest(format!("kernel: {e}")))
+                        .and_then(KernelId::parse)
+                })
+                .transpose()?;
+            Ok(ServiceRequest::Generate {
+                binding,
+                prompt,
+                max_tokens,
+                params: GenerateParams { kernel },
+            })
+        }
         EP_BIND => {
             let binding = BindingId::new(req_str(body, "binding")?);
             match (body.opt("init"), body.opt("params")) {
@@ -362,6 +400,48 @@ pub fn with_trace_id(body: Value, trace_id: u64) -> Value {
         }
         other => other,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming step events (/v1/generate chunk lines)
+// ---------------------------------------------------------------------------
+
+/// Encode one generation step as a `/v1/generate` chunk line. Step
+/// latency rides the wire at microsecond granularity (sub-microsecond
+/// remainders are dropped); step 0 always reports 0 — its compute is the
+/// prefill tail (`docs/DECODE.md`).
+pub fn step_event_to_json(ev: &StepEvent) -> Value {
+    Value::obj([
+        ("proto", Value::num(PROTOCOL_VERSION as f64)),
+        ("step", Value::num(ev.index as f64)),
+        ("token", Value::num(ev.token as f64)),
+        ("latency_us", Value::num((ev.latency_ns / 1_000) as f64)),
+    ])
+}
+
+/// Whether a `/v1/generate` chunk line is a streamed step event (`step`
+/// key, no `ok`) rather than the terminal response/error body (which
+/// always carries `ok`).
+pub fn is_step_event(body: &Value) -> bool {
+    body.opt("step").is_some() && body.opt("ok").is_none()
+}
+
+/// Parse a streamed step-event chunk line back into a [`StepEvent`]
+/// (latency at the microsecond granularity the wire carries).
+pub fn step_event_from_json(body: &Value) -> ServiceResult<StepEvent> {
+    let bad = |e: anyhow::Error| ServiceError::BadRequest(format!("step event: {e}"));
+    let index = body.get("step").and_then(|v| v.as_usize()).map_err(bad)?;
+    let token = body.get("token").and_then(|v| v.as_f64()).map_err(bad)?;
+    if token.fract() != 0.0 || token < i32::MIN as f64 || token > i32::MAX as f64 {
+        return Err(ServiceError::BadRequest(format!("step token {token} is not an i32")));
+    }
+    let latency_us = body
+        .opt("latency_us")
+        .map(|v| v.as_usize())
+        .transpose()
+        .map_err(|e| ServiceError::BadRequest(format!("latency_us: {e}")))?
+        .unwrap_or(0);
+    Ok(StepEvent { index, token: token as i32, latency_ns: latency_us as u64 * 1_000 })
 }
 
 fn mita_stats_to_json(m: &crate::kernels::MitaStats) -> Value {
@@ -549,6 +629,9 @@ fn metrics_to_json(m: &MetricsSnapshot) -> Value {
         ("serve_shed_total", Value::num(m.serve_shed_total as f64)),
         ("serve_errors_total", Value::num(m.serve_errors_total as f64)),
         ("request_latency_us", histogram_to_json(&m.request_latency_us)),
+        ("tokens_generated_total", Value::num(m.tokens_generated_total as f64)),
+        ("prefill_tokens_total", Value::num(m.prefill_tokens_total as f64)),
+        ("decode_step_latency_us", histogram_to_json(&m.decode_step_latency_us)),
         ("replicas", Value::Arr(replicas)),
         ("simd_lane", Value::str(m.simd_lane.as_str())),
     ])
@@ -629,6 +712,24 @@ fn metrics_from_json(v: &Value) -> ServiceResult<MetricsSnapshot> {
         request_latency_us: histogram_from_json(
             v.get("request_latency_us").map_err(bad)?,
         )?,
+        // Absent in pre-decode payloads; parse as zeroed telemetry.
+        tokens_generated_total: v
+            .opt("tokens_generated_total")
+            .map(|x| x.as_usize())
+            .transpose()
+            .map_err(bad)?
+            .unwrap_or(0) as u64,
+        prefill_tokens_total: v
+            .opt("prefill_tokens_total")
+            .map(|x| x.as_usize())
+            .transpose()
+            .map_err(bad)?
+            .unwrap_or(0) as u64,
+        decode_step_latency_us: v
+            .opt("decode_step_latency_us")
+            .map(histogram_from_json)
+            .transpose()?
+            .unwrap_or_default(),
         replicas,
         simd_lane: v.get("simd_lane").and_then(|x| x.as_str()).map_err(bad)?.to_string(),
     })
@@ -645,6 +746,10 @@ pub fn encode_response(resp: &ServiceResponse) -> Value {
         ServiceResponse::Attention { out } => body.push(("out".into(), tensor_to_json(out))),
         ServiceResponse::ModelForward { logits } => {
             body.push(("logits".into(), tensor_to_json(logits)))
+        }
+        ServiceResponse::Generate { tokens, prefill_tokens } => {
+            body.push(("tokens".into(), tensor_to_json(tokens)));
+            body.push(("prefill_tokens".into(), Value::num(*prefill_tokens as f64)));
         }
         ServiceResponse::Bound { binding } => {
             body.push(("binding".into(), Value::str(binding.as_str())))
@@ -715,6 +820,13 @@ pub fn parse_response(body: &Value) -> ServiceResult<ServiceResponse> {
     match kind.as_str() {
         "attention" => Ok(ServiceResponse::Attention { out: get_tensor("out")? }),
         "model_forward" => Ok(ServiceResponse::ModelForward { logits: get_tensor("logits")? }),
+        "generate" => Ok(ServiceResponse::Generate {
+            tokens: get_tensor("tokens")?,
+            prefill_tokens: body
+                .get("prefill_tokens")
+                .and_then(|v| v.as_usize())
+                .map_err(|e| ServiceError::BadRequest(format!("prefill_tokens: {e}")))?,
+        }),
         "bound" => Ok(ServiceResponse::Bound {
             binding: BindingId::new(req_str(body, "binding")?),
         }),
@@ -750,6 +862,7 @@ pub fn known_endpoints() -> &'static [&'static str] {
     &[
         EP_ATTENTION,
         EP_MODEL_FORWARD,
+        EP_GENERATE,
         EP_BIND,
         EP_ARTIFACT,
         EP_STATS,
@@ -789,6 +902,7 @@ pub fn check_request_encodable(req: &ServiceRequest) -> ServiceResult<()> {
     let tensors: Vec<&Tensor> = match req {
         ServiceRequest::Attention { qkv, .. } => qkv.tensors(),
         ServiceRequest::ModelForward { tokens, .. } => vec![tokens],
+        ServiceRequest::Generate { prompt, .. } => vec![prompt],
         ServiceRequest::BindCheckpoint { params, .. } => params.iter().collect(),
         ServiceRequest::Artifact { inputs, .. } => inputs.iter().collect(),
         ServiceRequest::BindInit { .. }
@@ -903,6 +1017,36 @@ mod tests {
             other => panic!("wrong class {:?}", other.kind()),
         }
 
+        let prompt = Tensor::i32(&[4], vec![3, 1, 4, 1]).unwrap();
+        let req = ServiceRequest::Generate {
+            binding: BindingId::from("model"),
+            prompt: prompt.clone(),
+            max_tokens: 12,
+            params: GenerateParams { kernel: Some(KernelId::Mita) },
+        };
+        let (path, _) = encode_request(&req);
+        assert_eq!(path, EP_GENERATE);
+        match roundtrip_req(req) {
+            ServiceRequest::Generate { binding, prompt: p, max_tokens, params } => {
+                assert_eq!(binding.as_str(), "model");
+                assert_eq!(p, prompt);
+                assert_eq!(max_tokens, 12);
+                assert_eq!(params.kernel, Some(KernelId::Mita));
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+        // Absent kernel parses back as the binding's own per-block choice.
+        let req = ServiceRequest::Generate {
+            binding: BindingId::from("model"),
+            prompt,
+            max_tokens: 1,
+            params: GenerateParams::default(),
+        };
+        match roundtrip_req(req) {
+            ServiceRequest::Generate { params, .. } => assert_eq!(params.kernel, None),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
         match roundtrip_req(ServiceRequest::Stats { reset: true }) {
             ServiceRequest::Stats { reset } => assert!(reset),
             other => panic!("wrong class {:?}", other.kind()),
@@ -971,6 +1115,75 @@ mod tests {
     }
 
     #[test]
+    fn v1_request_bodies_still_parse() {
+        // Satellite of the v2 Generate addition: a protocol-v1 peer —
+        // legacy `"version"` proto spelling, no `trace_id`, none of the
+        // Generate fields — must keep parsing and round-tripping, so the
+        // decode surface stays strictly additive.
+        let body = Value::parse(
+            r#"{"version": 1, "binding": "m",
+                "tokens": {"dtype": "i32", "shape": [1, 3], "data": [5, 2, 7]}}"#,
+        )
+        .unwrap();
+        assert_eq!(request_trace_id(&body), None);
+        let req = parse_request(EP_MODEL_FORWARD, &body).unwrap();
+        match &req {
+            ServiceRequest::ModelForward { binding, tokens, valid_rows } => {
+                assert_eq!(binding.as_str(), "m");
+                assert_eq!(tokens.shape(), &[1, 3]);
+                assert_eq!(*valid_rows, None);
+            }
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+        // Re-encoding speaks v2 but stays parseable: the fields the v1
+        // body carried survive the round trip unchanged.
+        let (path, reencoded) = encode_request(&req);
+        assert_eq!(path, EP_MODEL_FORWARD);
+        let text = reencoded.render();
+        assert!(text.contains("\"proto\":2"), "{text}");
+        let back = parse_request(path, &Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.kind(), "model_forward");
+        // A v1 attention body (the other v1-era compute endpoint) parses
+        // too — Generate's new keys are never required of old bodies.
+        let body = Value::parse(
+            r#"{"version": 1, "op": "attn.dense",
+                "qkv": {"dtype": "f32", "shape": [1, 3, 2, 2], "data":
+                        [0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]}}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            parse_request(EP_ATTENTION, &body).unwrap(),
+            ServiceRequest::Attention { op: KernelId::Dense, .. }
+        ));
+    }
+
+    #[test]
+    fn step_events_roundtrip_and_classify() {
+        let ev = StepEvent { index: 3, token: -7, latency_ns: 1_234_567 };
+        let line = step_event_to_json(&ev).render();
+        assert!(line.contains("\"proto\":2"), "{line}");
+        let parsed = Value::parse(&line).unwrap();
+        assert!(is_step_event(&parsed));
+        let back = step_event_from_json(&parsed).unwrap();
+        // Microsecond wire granularity: ns floor to us.
+        assert_eq!((back.index, back.token, back.latency_ns), (3, -7, 1_234_000));
+        // The terminal body is not a step event, even with trace_id.
+        let resp = with_trace_id(
+            encode_response(&ServiceResponse::Generate {
+                tokens: Tensor::i32(&[2], vec![1, 2]).unwrap(),
+                prefill_tokens: 4,
+            }),
+            9,
+        );
+        assert!(!is_step_event(&Value::parse(&resp.render()).unwrap()));
+        // Malformed step lines are typed errors, not panics.
+        let bad = Value::parse(r#"{"proto": 2, "step": 1, "token": 0.5}"#).unwrap();
+        assert_eq!(step_event_from_json(&bad).unwrap_err().code(), "bad_request");
+        let bad = Value::parse(r#"{"proto": 2, "token": 3}"#).unwrap();
+        assert_eq!(step_event_from_json(&bad).unwrap_err().code(), "bad_request");
+    }
+
+    #[test]
     fn non_finite_tensors_are_not_encodable() {
         let ok = ServiceResponse::Attention { out: Tensor::f32(&[2], vec![1.0, 2.0]).unwrap() };
         assert!(check_encodable(&ok).is_ok());
@@ -1010,6 +1223,18 @@ mod tests {
         let body = encode_response(&ServiceResponse::Attention { out: out.clone() });
         match parse_response(&Value::parse(&body.render()).unwrap()).unwrap() {
             ServiceResponse::Attention { out: got } => assert_eq!(got, out),
+            other => panic!("wrong class {:?}", other.kind()),
+        }
+
+        let body = encode_response(&ServiceResponse::Generate {
+            tokens: Tensor::i32(&[3], vec![4, 4, 9]).unwrap(),
+            prefill_tokens: 5,
+        });
+        match parse_response(&Value::parse(&body.render()).unwrap()).unwrap() {
+            ServiceResponse::Generate { tokens, prefill_tokens } => {
+                assert_eq!(tokens.as_i32().unwrap(), &[4, 4, 9]);
+                assert_eq!(prefill_tokens, 5);
+            }
             other => panic!("wrong class {:?}", other.kind()),
         }
 
@@ -1103,6 +1328,17 @@ mod tests {
                 p95_us: 800.0,
                 p99_us: 890.0,
                 buckets: vec![(11.22, 2), (5011.87, 7)],
+            },
+            tokens_generated_total: 16,
+            prefill_tokens_total: 7,
+            decode_step_latency_us: HistogramSnapshot {
+                count: 15,
+                sum_us: 1800.0,
+                max_us: 240.0,
+                p50_us: 110.0,
+                p95_us: 220.0,
+                p99_us: 235.0,
+                buckets: vec![(125.89, 15)],
             },
             replicas: vec![
                 ReplicaSnapshot {

@@ -10,8 +10,9 @@
 //! serving executes — so a saved checkpoint reproduces the trainer's
 //! eval logits exactly when reloaded through
 //! `NativeBackend`/`BindCheckpoint`. Checkpoints go through
-//! [`crate::coordinator::checkpoint`]'s container, so `serve-model` and
-//! `model-check` consume training output unchanged.
+//! [`crate::coordinator::checkpoint`]'s container, so
+//! `serve --workload model` and `model-check` consume training output
+//! unchanged.
 //!
 //! Training history reuses [`StepRecord`] and evaluation reuses
 //! [`EvalResult`] from the coordinator layer, so reporting code works

@@ -44,7 +44,7 @@ fn pool_with(replicas: usize, max_inflight: usize, model: bool) -> Arc<ReplicaPo
     } else {
         NativeAttnConfig::for_shape(N, DIM, 2)
     };
-    let cfg = ReplicaPoolConfig { replicas, max_inflight, retry_after_ms: 1 };
+    let cfg = ReplicaPoolConfig { replicas, max_inflight, retry_after_ms: 1, ..Default::default() };
     Arc::new(ReplicaPool::spawn(BackendSpec::Native(attn), vec![], cfg).unwrap())
 }
 

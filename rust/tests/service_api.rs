@@ -43,7 +43,8 @@ fn spawn_loopback(
     let task = lra::by_name("listops", 32, 16, 7);
     let mcfg = ModelConfig::for_task(task.as_ref(), 16, 2, 1, "attn.mita");
     let attn = NativeAttnConfig::for_shape(32, 16, 2).with_model(mcfg);
-    let pool_cfg = ReplicaPoolConfig { replicas: 1, max_inflight, retry_after_ms: 5 };
+    let pool_cfg =
+        ReplicaPoolConfig { replicas: 1, max_inflight, retry_after_ms: 5, ..Default::default() };
     let pool = Arc::new(ReplicaPool::spawn(BackendSpec::Native(attn), vec![], pool_cfg).unwrap());
     pool.call(ServiceRequest::BindInit {
         binding: "model".into(),

@@ -45,7 +45,8 @@ fn spawn_loopback() -> (Arc<ReplicaPool>, NetClient, std::thread::JoinHandle<any
     let task = lra::by_name("listops", N, 16, 7);
     let mcfg = ModelConfig::for_task(task.as_ref(), DIM, 2, DEPTH, "attn.mita");
     let attn = NativeAttnConfig::for_shape(N, DIM, 2).with_model(mcfg);
-    let cfg = ReplicaPoolConfig { replicas: 1, max_inflight: 8, retry_after_ms: 1 };
+    let cfg =
+        ReplicaPoolConfig { replicas: 1, max_inflight: 8, retry_after_ms: 1, ..Default::default() };
     let pool =
         Arc::new(ReplicaPool::spawn(BackendSpec::Native(attn), vec![], cfg).unwrap());
     pool.call(ServiceRequest::BindInit {

@@ -1,11 +1,12 @@
 #!/usr/bin/env bash
-# Record a perf-trajectory point: run the two quick native benches under
-# the forced-scalar SIMD lane and then under the auto lane, and append
-# all four runs (bench × lane) to the committed trajectory files at the
-# repo root:
+# Record a perf-trajectory point: run the three quick native benches
+# under the forced-scalar SIMD lane and then under the auto lane, and
+# append all six runs (bench × lane) to the committed trajectory files
+# at the repo root:
 #
-#   BENCH_attn_native.json   <- rust/benches/attn_microbench.rs
-#   BENCH_model_native.json  <- rust/benches/model_native.rs
+#   BENCH_attn_native.json    <- rust/benches/attn_microbench.rs
+#   BENCH_model_native.json   <- rust/benches/model_native.rs
+#   BENCH_decode_native.json  <- rust/benches/decode_native.rs
 #
 # Each trajectory file is {"bench": ..., "entries": [...]} where every
 # entry is exactly the JSON one bench run wrote (its "simd_lane" field
@@ -70,8 +71,12 @@ for lane in scalar auto; do
     echo "== model_native --quick (MITA_SIMD=$lane) =="
     (cd rust && MITA_SIMD=$lane cargo bench --bench model_native -- --quick)
     append rust/BENCH_model_native.json BENCH_model_native.json "$lane"
+
+    echo "== decode_native --quick (MITA_SIMD=$lane) =="
+    (cd rust && MITA_SIMD=$lane cargo bench --bench decode_native -- --quick)
+    append rust/BENCH_decode_native.json BENCH_decode_native.json "$lane"
 done
 
 echo
-echo "Trajectory updated; review and commit BENCH_attn_native.json and"
-echo "BENCH_model_native.json at the repo root."
+echo "Trajectory updated; review and commit BENCH_attn_native.json,"
+echo "BENCH_model_native.json, and BENCH_decode_native.json at the repo root."
