@@ -260,6 +260,7 @@ fn write_json(quick: bool, mu: f64, rows: &[Row]) {
     let _ = writeln!(json, "{{");
     let _ = writeln!(json, "  \"bench\": \"load_native\",");
     let _ = writeln!(json, "  \"quick\": {quick},");
+    let _ = writeln!(json, "  \"simd_lane\": \"{}\",", mita::kernels::simd::active_lane());
     let _ = writeln!(json, "  \"n\": {N},");
     let _ = writeln!(json, "  \"dim\": {DIM},");
     let _ = writeln!(json, "  \"heads\": {HEADS},");

@@ -165,17 +165,52 @@ impl EngineHandle {
         req: ServiceRequest,
         steps: Option<mpsc::Sender<StepEvent>>,
     ) -> ServiceResult<Ticket> {
+        self.submit_recoverable(req, steps).map_err(|(e, _, _)| e)
+    }
+
+    /// Like [`EngineHandle::submit_streaming`], but a failed submission
+    /// hands the request (and step channel) back to the caller alongside
+    /// the typed error — an mpsc send failure returns the unsent message,
+    /// so a routing layer can retry the same request on another replica
+    /// instead of failing it.
+    pub fn submit_recoverable(
+        &self,
+        req: ServiceRequest,
+        steps: Option<mpsc::Sender<StepEvent>>,
+    ) -> Result<Ticket, (ServiceError, ServiceRequest, Option<mpsc::Sender<StepEvent>>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(EngineMsg::Job { req, reply, steps })
-            .map_err(|_| ServiceError::Unavailable("engine thread terminated".into()))?;
-        Ok(Ticket { id, rx })
+        match self.tx.send(EngineMsg::Job { req, reply, steps }) {
+            Ok(()) => Ok(Ticket { id, rx }),
+            Err(mpsc::SendError(msg)) => {
+                let err = ServiceError::Unavailable("engine thread terminated".into());
+                match msg {
+                    EngineMsg::Job { req, steps, .. } => Err((err, req, steps)),
+                    // The send error wraps exactly the Job sent above.
+                    EngineMsg::Shutdown => unreachable!("submit sends only Job messages"),
+                }
+            }
+        }
     }
 
     /// Submit and block for the result (the one-shot convenience).
     pub fn call(&self, req: ServiceRequest) -> ServiceResult<ServiceResponse> {
         self.submit(req)?.wait()
+    }
+
+    /// Stop the engine loop **without** joining its thread — the
+    /// fault-injection twin of [`Engine::shutdown`]. Later submissions
+    /// through any handle clone fail with `unavailable`, which is
+    /// exactly the replica-fault signal the pool's health machinery
+    /// classifies. Spins until the loop drops its receiver (a queued
+    /// shutdown alone would let a racing submit enqueue behind it and
+    /// die with a dropped reply instead of failing recoverably), so on
+    /// return every subsequent submit fails immediately; jobs queued
+    /// before the first shutdown message still complete.
+    pub fn terminate(&self) {
+        while self.tx.send(EngineMsg::Shutdown).is_ok() {
+            std::thread::yield_now();
+        }
     }
 
     /// Typed attention round-trip: `[b, n, dim]` output.
@@ -326,6 +361,12 @@ impl Engine {
                                     .map(|s| (*s).to_string())
                                     .or_else(|| panic.downcast_ref::<String>().cloned())
                                     .unwrap_or_else(|| "non-string panic payload".into());
+                                crate::coordinator::log::emit(
+                                    crate::coordinator::log::Level::Error,
+                                    "engine.panic",
+                                    None,
+                                    format!("backend panicked: {msg}"),
+                                );
                                 Err(ServiceError::Internal(format!("backend panicked: {msg}")))
                             });
                             // Drain the per-block profile after every job

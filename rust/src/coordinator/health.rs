@@ -1,0 +1,393 @@
+//! Replica health state machine + rolling SLO windows.
+//!
+//! **Health.** Each replica owns a [`ReplicaHealth`]: a sliding window
+//! of the last [`HEALTH_WINDOW`] settled outcomes, where an outcome is
+//! a *fault* when the replica itself failed (engine thread dead,
+//! backend panic → `internal` / `unavailable` errors) and *ok* when it
+//! produced any response at all — client-class errors (bad shapes,
+//! unbound bindings) are evidence of a live replica, not a sick one.
+//! The window derives a three-state machine:
+//!
+//! - `healthy` — fault rate below [`DEGRADED_FAULT_RATE`] (or too few
+//!   samples to judge: replicas start optimistic);
+//! - `degraded` — fault rate in `[DEGRADED_FAULT_RATE, UNHEALTHY_FAULT_RATE)`;
+//! - `unhealthy` — fault rate at or above [`UNHEALTHY_FAULT_RATE`].
+//!
+//! `ReplicaPool` routing consults the state: unhealthy replicas are
+//! skipped while any non-unhealthy candidate remains, which both drains
+//! traffic away from a dead engine and — because a fully-unhealthy pool
+//! still routes — keeps samples flowing so a recovered replica can climb
+//! back out. Eviction/respawn is a future PR; this provides its signal.
+//!
+//! **SLO windows.** [`SloWindows`] tracks request outcomes in
+//! [`SLO_SLICE_SECS`]-second slices over a short (1 min) and long
+//! (5 min) horizon and derives *burn rates*: the observed error rate
+//! (or fraction of requests slower than the latency target — the
+//! p99-vs-target proxy) divided by the budgeted rate. A burn rate of 1
+//! means the error budget is being consumed exactly as provisioned;
+//! sustained short-window burn ≫ long-window burn is the classic page
+//! signal. Slices are atomics stamped with their epoch, so recording is
+//! lock-free and stale slices are lazily recycled in place.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Settled outcomes considered when deriving a replica's health state.
+pub const HEALTH_WINDOW: usize = 16;
+/// Outcomes required before the state machine leaves `healthy` — fresh
+/// replicas are not judged on one bad request.
+pub const HEALTH_MIN_SAMPLES: usize = 4;
+/// Fault rate at which a replica is `degraded`.
+pub const DEGRADED_FAULT_RATE: f64 = 0.25;
+/// Fault rate at which a replica is `unhealthy` (skipped by routing).
+pub const UNHEALTHY_FAULT_RATE: f64 = 0.5;
+
+/// Three-state replica health.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum HealthState {
+    Healthy = 0,
+    Degraded = 1,
+    Unhealthy = 2,
+}
+
+impl HealthState {
+    /// Lowercase name, as exported in JSON and Prometheus labels.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Unhealthy => "unhealthy",
+        }
+    }
+
+    fn from_usize(v: usize) -> HealthState {
+        match v {
+            0 => HealthState::Healthy,
+            1 => HealthState::Degraded,
+            _ => HealthState::Unhealthy,
+        }
+    }
+}
+
+/// The sliding outcome window: newest outcome in bit 0, fault = 1.
+#[derive(Debug, Default)]
+struct OutcomeWindow {
+    bits: u64,
+    len: usize,
+}
+
+/// Per-replica rolling health accumulator. Shared (`Arc`) between the
+/// pool's routing loop and the in-flight tickets that settle outcomes.
+#[derive(Debug, Default)]
+pub struct ReplicaHealth {
+    window: Mutex<OutcomeWindow>,
+    /// Derived state, readable lock-free on the routing hot path.
+    state: AtomicUsize,
+    /// Lifetime fault count (monotone, for the metrics surface).
+    faults_total: AtomicU64,
+    /// Lifetime settled-outcome count (monotone).
+    results_total: AtomicU64,
+}
+
+impl ReplicaHealth {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current state (relaxed read; exact enough for routing).
+    pub fn state(&self) -> HealthState {
+        HealthState::from_usize(self.state.load(Ordering::Relaxed))
+    }
+
+    pub fn faults_total(&self) -> u64 {
+        self.faults_total.load(Ordering::Relaxed)
+    }
+
+    pub fn results_total(&self) -> u64 {
+        self.results_total.load(Ordering::Relaxed)
+    }
+
+    /// Record one settled outcome and re-derive the state. Returns the
+    /// `(old, new)` pair when the state changed, so the caller can log
+    /// the transition.
+    pub fn record(&self, fault: bool) -> Option<(HealthState, HealthState)> {
+        let mut w = self.window.lock().unwrap();
+        w.bits = (w.bits << 1) | fault as u64;
+        w.len = (w.len + 1).min(HEALTH_WINDOW);
+        self.results_total.fetch_add(1, Ordering::Relaxed);
+        if fault {
+            self.faults_total.fetch_add(1, Ordering::Relaxed);
+        }
+        let faults = (w.bits & ((1u64 << w.len) - 1)).count_ones() as f64;
+        let rate = faults / w.len as f64;
+        let new = if w.len < HEALTH_MIN_SAMPLES || rate < DEGRADED_FAULT_RATE {
+            HealthState::Healthy
+        } else if rate < UNHEALTHY_FAULT_RATE {
+            HealthState::Degraded
+        } else {
+            HealthState::Unhealthy
+        };
+        // Derive + publish under the window lock so transitions are
+        // reported exactly once even with concurrent settles.
+        let old = HealthState::from_usize(self.state.swap(new as usize, Ordering::Relaxed));
+        (old != new).then_some((old, new))
+    }
+}
+
+/// Width of one SLO accounting slice.
+pub const SLO_SLICE_SECS: u64 = 10;
+/// Slices retained — the long window (5 minutes).
+pub const SLO_SLICES: usize = 30;
+/// Slices in the short window (1 minute).
+pub const SLO_SHORT_SLICES: usize = 6;
+/// Budgeted error rate: 1% of requests may fail.
+pub const SLO_ERROR_BUDGET: f64 = 0.01;
+/// Budgeted slow rate: 1% of requests may exceed the latency target
+/// (i.e. the target is provisioned as a p99).
+pub const SLO_LATENCY_BUDGET: f64 = 0.01;
+/// Default latency target (the p99 objective), milliseconds.
+pub const DEFAULT_SLO_TARGET_MS: f64 = 250.0;
+
+#[derive(Debug)]
+struct SloSlice {
+    /// Which `SLO_SLICE_SECS` epoch this slice currently counts.
+    epoch: AtomicU64,
+    requests: AtomicU64,
+    errors: AtomicU64,
+    slow: AtomicU64,
+}
+
+impl SloSlice {
+    fn new() -> Self {
+        SloSlice {
+            epoch: AtomicU64::new(u64::MAX),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            slow: AtomicU64::new(0),
+        }
+    }
+}
+
+/// One exported SLO window.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloWindowSnapshot {
+    /// Window name: `"1m"` or `"5m"`.
+    pub window: String,
+    pub requests: u64,
+    pub errors: u64,
+    /// Requests slower than the latency target.
+    pub slow: u64,
+    /// `(errors / requests) / SLO_ERROR_BUDGET`; 0 when idle.
+    pub error_burn_rate: f64,
+    /// `(slow / requests) / SLO_LATENCY_BUDGET`; 0 when idle.
+    pub latency_burn_rate: f64,
+}
+
+/// The exported SLO block of `/v1/metrics`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SloSnapshot {
+    /// Latency target (p99 objective), milliseconds.
+    pub target_ms: f64,
+    /// Short then long window.
+    pub windows: Vec<SloWindowSnapshot>,
+}
+
+/// Rolling short/long SLO accounting. One per pool, fed from the same
+/// settle path as the serve counters.
+#[derive(Debug)]
+pub struct SloWindows {
+    start: Instant,
+    target_us: u64,
+    slices: Vec<SloSlice>,
+}
+
+impl Default for SloWindows {
+    fn default() -> Self {
+        SloWindows::new(DEFAULT_SLO_TARGET_MS)
+    }
+}
+
+impl SloWindows {
+    pub fn new(target_ms: f64) -> Self {
+        SloWindows {
+            start: Instant::now(),
+            target_us: (target_ms.max(0.0) * 1000.0) as u64,
+            slices: (0..SLO_SLICES).map(|_| SloSlice::new()).collect(),
+        }
+    }
+
+    pub fn target_ms(&self) -> f64 {
+        self.target_us as f64 / 1000.0
+    }
+
+    fn epoch_now(&self) -> u64 {
+        self.start.elapsed().as_secs() / SLO_SLICE_SECS
+    }
+
+    fn slice_at(&self, epoch: u64) -> &SloSlice {
+        let s = &self.slices[(epoch % SLO_SLICES as u64) as usize];
+        // Lazily recycle a slice left over from a previous lap. The
+        // reset races concurrent recorders in the same new epoch by at
+        // most a handful of samples — acceptable for telemetry, and the
+        // stale lap's counts never leak into the new epoch's window
+        // because the epoch stamp flips first.
+        if s.epoch.swap(epoch, Ordering::Relaxed) != epoch {
+            s.requests.store(0, Ordering::Relaxed);
+            s.errors.store(0, Ordering::Relaxed);
+            s.slow.store(0, Ordering::Relaxed);
+        }
+        s
+    }
+
+    /// Record one finished request. `latency_us` of `None` means the
+    /// request failed before a latency was measured (it still burns the
+    /// error budget, not the latency budget).
+    pub fn record(&self, error: bool, latency_us: Option<u64>) {
+        let s = self.slice_at(self.epoch_now());
+        s.requests.fetch_add(1, Ordering::Relaxed);
+        if error {
+            s.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(us) = latency_us {
+            if us > self.target_us {
+                s.slow.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn window(&self, name: &str, slices_back: usize) -> SloWindowSnapshot {
+        let now = self.epoch_now();
+        let oldest = now.saturating_sub(slices_back as u64 - 1);
+        let (mut requests, mut errors, mut slow) = (0u64, 0u64, 0u64);
+        for s in &self.slices {
+            let e = s.epoch.load(Ordering::Relaxed);
+            if e >= oldest && e <= now {
+                requests += s.requests.load(Ordering::Relaxed);
+                errors += s.errors.load(Ordering::Relaxed);
+                slow += s.slow.load(Ordering::Relaxed);
+            }
+        }
+        let rate = |n: u64, budget: f64| {
+            if requests == 0 {
+                0.0
+            } else {
+                (n as f64 / requests as f64) / budget
+            }
+        };
+        SloWindowSnapshot {
+            window: name.to_string(),
+            requests,
+            errors,
+            slow,
+            error_burn_rate: rate(errors, SLO_ERROR_BUDGET),
+            latency_burn_rate: rate(slow, SLO_LATENCY_BUDGET),
+        }
+    }
+
+    pub fn snapshot(&self) -> SloSnapshot {
+        SloSnapshot {
+            target_ms: self.target_ms(),
+            windows: vec![self.window("1m", SLO_SHORT_SLICES), self.window("5m", SLO_SLICES)],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_replicas_are_healthy_and_tolerant() {
+        let h = ReplicaHealth::new();
+        assert_eq!(h.state(), HealthState::Healthy);
+        // One early fault: below MIN_SAMPLES, still healthy.
+        assert_eq!(h.record(true), None);
+        assert_eq!(h.state(), HealthState::Healthy);
+        for _ in 0..8 {
+            h.record(false);
+        }
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert_eq!(h.faults_total(), 1);
+        assert_eq!(h.results_total(), 9);
+    }
+
+    #[test]
+    fn fault_rate_drives_the_state_machine() {
+        let h = ReplicaHealth::new();
+        // All faults: unhealthy as soon as MIN_SAMPLES is reached, with
+        // exactly one reported transition.
+        let mut transitions = Vec::new();
+        for _ in 0..HEALTH_MIN_SAMPLES {
+            if let Some(t) = h.record(true) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(h.state(), HealthState::Unhealthy);
+        assert_eq!(transitions, vec![(HealthState::Healthy, HealthState::Unhealthy)]);
+        // Recovery: successes wash the faults out of the window.
+        let mut saw_healthy = false;
+        for _ in 0..HEALTH_WINDOW {
+            if let Some((_, new)) = h.record(false) {
+                saw_healthy |= new == HealthState::Healthy;
+            }
+        }
+        assert!(saw_healthy);
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn degraded_sits_between_thresholds() {
+        let h = ReplicaHealth::new();
+        // 16-outcome window with 5 faults → rate 0.3125 ∈ [0.25, 0.5).
+        for i in 0..HEALTH_WINDOW {
+            h.record(i % 3 == 0 && i < 15);
+        }
+        let w_faults = 5.0 / HEALTH_WINDOW as f64;
+        assert!((DEGRADED_FAULT_RATE..UNHEALTHY_FAULT_RATE).contains(&w_faults));
+        assert_eq!(h.state(), HealthState::Degraded);
+    }
+
+    #[test]
+    fn slo_windows_accumulate_and_burn() {
+        let slo = SloWindows::new(1.0); // 1 ms target
+        for i in 0..100 {
+            // 2 errors, 4 slow among 100 requests.
+            let err = i < 2;
+            let lat = if err { None } else { Some(if i < 6 { 5_000 } else { 10 }) };
+            slo.record(err, lat);
+        }
+        let snap = slo.snapshot();
+        assert_eq!(snap.target_ms, 1.0);
+        assert_eq!(snap.windows.len(), 2);
+        for w in &snap.windows {
+            assert_eq!(w.requests, 100, "{}", w.window);
+            assert_eq!(w.errors, 2);
+            assert_eq!(w.slow, 4);
+            // 2% error rate against a 1% budget → burn rate 2.
+            assert!((w.error_burn_rate - 2.0).abs() < 1e-9);
+            assert!((w.latency_burn_rate - 4.0).abs() < 1e-9);
+        }
+        assert_eq!(snap.windows[0].window, "1m");
+        assert_eq!(snap.windows[1].window, "5m");
+    }
+
+    #[test]
+    fn idle_windows_report_zero_burn() {
+        let snap = SloWindows::default().snapshot();
+        for w in &snap.windows {
+            assert_eq!(w.requests, 0);
+            assert_eq!(w.error_burn_rate, 0.0);
+            assert_eq!(w.latency_burn_rate, 0.0);
+        }
+        assert_eq!(snap.target_ms, DEFAULT_SLO_TARGET_MS);
+    }
+
+    #[test]
+    fn state_names_are_stable() {
+        assert_eq!(HealthState::Healthy.as_str(), "healthy");
+        assert_eq!(HealthState::Degraded.as_str(), "degraded");
+        assert_eq!(HealthState::Unhealthy.as_str(), "unhealthy");
+    }
+}

@@ -1,0 +1,304 @@
+//! Structured event log: a process-wide, leveled, JSON-lines journal.
+//!
+//! The serving path already has a handful of *decision points* — the
+//! admission gate sheds a request, a bind broadcasts to every replica,
+//! an engine catches a backend panic, the pool marks a replica
+//! unhealthy, the server shuts down. Each of those now emits one
+//! [`LogRecord`] into a fixed-capacity ring modeled on
+//! [`TraceRing`](crate::coordinator::trace::TraceRing): slot allocation
+//! is a single `fetch_add` on a cursor, so concurrent emitters contend
+//! only on the distinct slot they were assigned, and once the ring
+//! wraps the oldest events are overwritten.
+//!
+//! Records carry a monotone sequence number, a wall-clock timestamp
+//! (unix milliseconds), a [`Level`], a stable dotted event name, an
+//! optional `trace_id` correlating the event to `GET /v1/trace`
+//! records, and a human-readable message. They are exported newest
+//! first via `GET /v1/logs?limit=N&level=L` and the `client logs`
+//! subcommand, one JSON object per event (JSON-lines when printed).
+//!
+//! Verbosity is a process-wide threshold: `MITA_LOG` (env) seeds it,
+//! `--log-level` on `serve` overrides it, and events below the
+//! threshold are dropped at the emission site before any formatting
+//! cost is paid by [`enabled`]-guarded callers.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Value;
+
+/// Default number of events retained by the process journal.
+pub const DEFAULT_LOG_CAPACITY: usize = 512;
+
+/// Event severity. Ordered: `Debug < Info < Warn < Error`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl Level {
+    /// Lowercase name, as rendered in JSON and accepted by [`Level::parse`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+
+    /// Parse a level name (case-insensitive). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "debug" => Some(Level::Debug),
+            "info" => Some(Level::Info),
+            "warn" | "warning" => Some(Level::Warn),
+            "error" => Some(Level::Error),
+            _ => None,
+        }
+    }
+
+    fn from_usize(v: usize) -> Level {
+        match v {
+            0 => Level::Debug,
+            1 => Level::Info,
+            2 => Level::Warn,
+            _ => Level::Error,
+        }
+    }
+}
+
+/// One structured event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LogRecord {
+    /// Process-wide monotone sequence number (journal order).
+    pub seq: u64,
+    /// Wall-clock emission time, milliseconds since the unix epoch.
+    pub unix_ms: u64,
+    pub level: Level,
+    /// Stable dotted event name (`admission.shed`, `engine.panic`, ...).
+    pub event: &'static str,
+    /// Correlates the event with a `/v1/trace` record, when the event
+    /// happened inside a traced request.
+    pub trace_id: Option<u64>,
+    /// Human-readable detail (free-form; the event name is the stable key).
+    pub message: String,
+}
+
+impl LogRecord {
+    /// Render as one JSON object (one line of the JSON-lines export).
+    pub fn to_json(&self) -> Value {
+        let trace = match self.trace_id {
+            Some(id) => Value::Num(id as f64),
+            None => Value::Null,
+        };
+        Value::obj(vec![
+            ("seq", Value::Num(self.seq as f64)),
+            ("unix_ms", Value::Num(self.unix_ms as f64)),
+            ("level", Value::str(self.level.as_str())),
+            ("event", Value::str(self.event)),
+            ("trace_id", trace),
+            ("message", Value::str(self.message.as_str())),
+        ])
+    }
+}
+
+/// Fixed-capacity event ring + level threshold. The process owns one
+/// (see [`global`]); tests construct their own.
+#[derive(Debug)]
+pub struct EventLog {
+    slots: Vec<Mutex<Option<LogRecord>>>,
+    cursor: AtomicU64,
+    level: AtomicUsize,
+}
+
+impl EventLog {
+    pub fn new(capacity: usize, level: Level) -> Self {
+        let capacity = capacity.max(1);
+        EventLog {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            cursor: AtomicU64::new(0),
+            level: AtomicUsize::new(level as usize),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events ever admitted (not the retained count; filtered
+    /// events are never admitted).
+    pub fn pushed(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Current threshold: events below it are dropped at emission.
+    pub fn level(&self) -> Level {
+        Level::from_usize(self.level.load(Ordering::Relaxed))
+    }
+
+    pub fn set_level(&self, level: Level) {
+        self.level.store(level as usize, Ordering::Relaxed);
+    }
+
+    /// Emit one event (if it clears the threshold). Timestamping and
+    /// sequencing happen here so call sites stay one-liners.
+    pub fn emit(&self, level: Level, event: &'static str, trace_id: Option<u64>, message: String) {
+        if (level as usize) < self.level.load(Ordering::Relaxed) {
+            return;
+        }
+        let unix_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = (seq % self.slots.len() as u64) as usize;
+        *self.slots[slot].lock().unwrap() =
+            Some(LogRecord { seq, unix_ms, level, event, trace_id, message });
+    }
+
+    /// Snapshot retained events, newest first. `min_level` drops events
+    /// below the given severity; `limit` caps the result length after
+    /// filtering.
+    pub fn export(&self, limit: usize, min_level: Level) -> Vec<LogRecord> {
+        let mut records: Vec<LogRecord> = self
+            .slots
+            .iter()
+            .filter_map(|slot| slot.lock().unwrap().clone())
+            .filter(|r| r.level >= min_level)
+            .collect();
+        records.sort_by(|a, b| b.seq.cmp(&a.seq));
+        records.truncate(limit);
+        records
+    }
+
+    /// Render an export as the `GET /v1/logs` response body.
+    pub fn export_json(&self, limit: usize, min_level: Level) -> Value {
+        let events: Vec<Value> =
+            self.export(limit, min_level).iter().map(LogRecord::to_json).collect();
+        Value::obj(vec![
+            ("events", Value::Arr(events)),
+            ("capacity", Value::Num(self.capacity() as f64)),
+            ("pushed", Value::Num(self.pushed() as f64)),
+            ("level", Value::str(self.level().as_str())),
+        ])
+    }
+}
+
+/// The process journal. Threshold seeds from `MITA_LOG` (default
+/// `info`); `serve --log-level` overrides it via [`set_level`].
+pub fn global() -> &'static EventLog {
+    static EVENTS: OnceLock<EventLog> = OnceLock::new();
+    EVENTS.get_or_init(|| {
+        let level = std::env::var("MITA_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        EventLog::new(DEFAULT_LOG_CAPACITY, level)
+    })
+}
+
+/// Emit into the process journal.
+pub fn emit(level: Level, event: &'static str, trace_id: Option<u64>, message: String) {
+    global().emit(level, event, trace_id, message);
+}
+
+/// Whether `level` clears the process threshold — guard for call sites
+/// whose message formatting is worth skipping.
+pub fn enabled(level: Level) -> bool {
+    level >= global().level()
+}
+
+/// Set the process threshold (the `--log-level` hook).
+pub fn set_level(level: Level) {
+    global().set_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log(capacity: usize, level: Level) -> EventLog {
+        EventLog::new(capacity, level)
+    }
+
+    #[test]
+    fn levels_parse_and_order() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+        assert!(Level::Debug < Level::Info && Level::Warn < Level::Error);
+        assert_eq!(Level::Error.as_str(), "error");
+    }
+
+    #[test]
+    fn threshold_filters_at_emission() {
+        let log = log(8, Level::Warn);
+        log.emit(Level::Info, "quiet.event", None, "dropped".into());
+        log.emit(Level::Warn, "loud.event", None, "kept".into());
+        log.emit(Level::Error, "bad.event", Some(7), "kept too".into());
+        assert_eq!(log.pushed(), 2, "filtered events are never admitted");
+        let events = log.export(10, Level::Debug);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].event, "bad.event");
+        assert_eq!(events[0].trace_id, Some(7));
+        assert_eq!(events[1].event, "loud.event");
+
+        log.set_level(Level::Debug);
+        log.emit(Level::Debug, "chatty.event", None, "now kept".into());
+        assert_eq!(log.pushed(), 3);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_exports_newest_first() {
+        let log = log(3, Level::Debug);
+        for i in 0..5u64 {
+            log.emit(Level::Info, "tick", Some(i), format!("tick {i}"));
+        }
+        let ids: Vec<Option<u64>> = log.export(10, Level::Debug).iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![Some(4), Some(3), Some(2)]);
+        // Export-side min_level filters retained records too.
+        log.emit(Level::Error, "boom", None, "x".into());
+        let errors = log.export(10, Level::Error);
+        assert_eq!(errors.len(), 1);
+        assert_eq!(errors[0].event, "boom");
+        // limit caps after ordering.
+        assert_eq!(log.export(1, Level::Debug)[0].event, "boom");
+    }
+
+    #[test]
+    fn records_render_as_json_lines() {
+        let log = log(4, Level::Debug);
+        log.emit(Level::Warn, "admission.shed", Some(42), "inflight full".into());
+        let rec = &log.export(1, Level::Debug)[0];
+        let text = rec.to_json().render();
+        assert!(text.contains("\"event\":\"admission.shed\""), "{text}");
+        assert!(text.contains("\"level\":\"warn\""), "{text}");
+        assert!(text.contains("\"trace_id\":42"), "{text}");
+        assert!(text.contains("\"message\":\"inflight full\""), "{text}");
+        assert!(text.contains("\"seq\":0"), "{text}");
+        // Untraced events render an explicit null trace_id.
+        log.emit(Level::Info, "server.bind", None, "0.0.0.0:0".into());
+        let text = log.export(1, Level::Debug)[0].to_json().render();
+        assert!(text.contains("\"trace_id\":null"), "{text}");
+    }
+
+    #[test]
+    fn export_json_carries_journal_accounting() {
+        let log = log(2, Level::Info);
+        log.emit(Level::Info, "a", None, "1".into());
+        log.emit(Level::Info, "b", None, "2".into());
+        log.emit(Level::Info, "c", None, "3".into());
+        let text = log.export_json(10, Level::Debug).render();
+        assert!(text.contains("\"capacity\":2"), "{text}");
+        assert!(text.contains("\"pushed\":3"), "{text}");
+        assert!(text.contains("\"level\":\"info\""), "{text}");
+        assert!(!text.contains("\"event\":\"a\""), "evicted event must not render: {text}");
+    }
+}

@@ -14,6 +14,18 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::health::{SloSnapshot, SloWindows};
+use crate::kernels::profile::OpSeries;
+
+/// Crate version baked into `serve_build_info{version=...}`.
+pub const BUILD_VERSION: &str = env!("CARGO_PKG_VERSION");
+/// Git revision baked into `serve_build_info{git=...}`: set
+/// `MITA_BUILD_GIT` at compile time (CI does), `unknown` otherwise.
+pub const BUILD_GIT: &str = match option_env!("MITA_BUILD_GIT") {
+    Some(rev) => rev,
+    None => "unknown",
+};
+
 /// Welford streaming mean/variance.
 #[derive(Debug, Clone, Default)]
 pub struct Streaming {
@@ -193,6 +205,13 @@ pub const METRIC_NAMES: &[&str] = &[
     "tokens_generated_total",
     "prefill_tokens_total",
     "decode_step_latency_us",
+    "replica_health",
+    "op_time_us_total",
+    "op_calls_total",
+    "slo_error_burn_rate",
+    "slo_latency_burn_rate",
+    "serve_build_info",
+    "uptime_seconds",
     "simd_lane",
 ];
 
@@ -226,7 +245,11 @@ pub const METRIC_EXPERT_QUERIES: &str = "mita_expert_queries_total";
 /// - `decode_step_latency_us` — per-token decode-step latency of
 ///   streamed generate steps (step 0, the prefill tail, is not
 ///   recorded), on the same fixed bucket grid.
-#[derive(Debug, Default)]
+/// - `slo_error_burn_rate` / `slo_latency_burn_rate` — rolling 1m/5m
+///   burn rates fed from the same settle path (`record_latency` /
+///   `record_error`; sheds never reach the SLO accounting).
+/// - `uptime_seconds` — seconds since these metrics (the pool) started.
+#[derive(Debug)]
 pub struct ServeMetrics {
     requests_total: AtomicU64,
     shed_total: AtomicU64,
@@ -235,6 +258,26 @@ pub struct ServeMetrics {
     tokens_generated_total: AtomicU64,
     prefill_tokens_total: AtomicU64,
     decode_latency: Mutex<LatencyHistogram>,
+    /// Rolling short/long SLO windows (error + latency burn).
+    slo: SloWindows,
+    /// Pool start, the origin of `uptime_seconds`.
+    started: Instant,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics {
+            requests_total: AtomicU64::new(0),
+            shed_total: AtomicU64::new(0),
+            errors_total: AtomicU64::new(0),
+            latency: Mutex::new(LatencyHistogram::new()),
+            tokens_generated_total: AtomicU64::new(0),
+            prefill_tokens_total: AtomicU64::new(0),
+            decode_latency: Mutex::new(LatencyHistogram::new()),
+            slo: SloWindows::default(),
+            started: Instant::now(),
+        }
+    }
 }
 
 impl ServeMetrics {
@@ -252,10 +295,12 @@ impl ServeMetrics {
 
     pub fn record_error(&self) {
         self.errors_total.fetch_add(1, Ordering::Relaxed);
+        self.slo.record(true, None);
     }
 
     pub fn record_latency(&self, d: Duration) {
         self.latency.lock().expect("latency lock").record(d);
+        self.slo.record(false, Some(d.as_micros() as u64));
     }
 
     /// Count one settled generate request: its emitted tokens and the
@@ -303,6 +348,16 @@ impl ServeMetrics {
 
     pub fn decode_latency_snapshot(&self) -> HistogramSnapshot {
         self.decode_latency.lock().expect("decode latency lock").snapshot()
+    }
+
+    /// Rolling-window SLO burn-rate export (1m + 5m windows).
+    pub fn slo_snapshot(&self) -> SloSnapshot {
+        self.slo.snapshot()
+    }
+
+    /// Seconds since these metrics (the pool) were created.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
     }
 }
 
@@ -357,6 +412,13 @@ pub struct ReplicaSnapshot {
     /// Worst observed expert load imbalance (max/mean; 0 when
     /// unavailable).
     pub load_imbalance: f64,
+    /// Health state name (`healthy` | `degraded` | `unhealthy`) from the
+    /// replica's rolling fault window.
+    pub health: String,
+    /// Lifetime replica-fault count behind the health window.
+    pub health_faults: u64,
+    /// Lifetime settled-outcome count behind the health window.
+    pub health_results: u64,
     /// Per-block MiTA routing series (empty until model traffic ran).
     pub blocks: Vec<BlockSeries>,
 }
@@ -377,6 +439,17 @@ pub struct MetricsSnapshot {
     /// past step 0).
     pub decode_step_latency_us: HistogramSnapshot,
     pub replicas: Vec<ReplicaSnapshot>,
+    /// Op-level profiler series (`kernels::profile::snapshot()`): every
+    /// profiled kernel phase / decode stage, zeros when idle.
+    pub ops: Vec<OpSeries>,
+    /// Rolling-window SLO burn rates (1m + 5m).
+    pub slo: SloSnapshot,
+    /// Seconds since the pool started.
+    pub uptime_seconds: f64,
+    /// Crate version ([`BUILD_VERSION`]), for `serve_build_info`.
+    pub build_version: String,
+    /// Build git revision ([`BUILD_GIT`]), for `serve_build_info`.
+    pub build_git: String,
     /// SIMD lane the serving process dispatched its kernels to at
     /// startup (`scalar` | `portable` | `avx2` | `neon`; see
     /// `docs/PERF.md`). A process-wide fact, so it lives at the pool
@@ -490,6 +563,13 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
             prom_value(r.load_imbalance)
         ));
     }
+    // Health is categorical per replica: a 1-valued gauge with the state
+    // as a label (the `simd_lane` idiom), so dashboards can group by
+    // state without a numeric encoding.
+    line("# TYPE replica_health gauge".into());
+    for r in &snap.replicas {
+        line(format!("replica_health{{replica=\"{}\",state=\"{}\"}} 1", r.replica, r.health));
+    }
 
     // Per-layer MiTA routing introspection (absent until model traffic
     // has run; scrapers must treat the series as optional).
@@ -517,6 +597,45 @@ pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
             }
         }
     }
+
+    // Op-level profiler: one time + one call series per profiled kernel
+    // phase / decode stage. Always present (zeros when idle) so the
+    // series set is stable across scrapes.
+    line("# TYPE op_time_us_total counter".into());
+    for o in &snap.ops {
+        line(format!("op_time_us_total{{op=\"{}\"}} {}", o.op, prom_value(o.time_us)));
+    }
+    line("# TYPE op_calls_total counter".into());
+    for o in &snap.ops {
+        line(format!("op_calls_total{{op=\"{}\"}} {}", o.op, o.calls));
+    }
+
+    // Rolling SLO burn rates over the short/long windows.
+    line("# TYPE slo_error_burn_rate gauge".into());
+    for w in &snap.slo.windows {
+        line(format!(
+            "slo_error_burn_rate{{window=\"{}\"}} {}",
+            w.window,
+            prom_value(w.error_burn_rate)
+        ));
+    }
+    line("# TYPE slo_latency_burn_rate gauge".into());
+    for w in &snap.slo.windows {
+        line(format!(
+            "slo_latency_burn_rate{{window=\"{}\"}} {}",
+            w.window,
+            prom_value(w.latency_burn_rate)
+        ));
+    }
+
+    // Build identity as an info-style series + process uptime.
+    line("# TYPE serve_build_info gauge".into());
+    line(format!(
+        "serve_build_info{{version=\"{}\",git=\"{}\",simd_lane=\"{}\"}} 1",
+        snap.build_version, snap.build_git, snap.simd_lane
+    ));
+    line("# TYPE uptime_seconds gauge".into());
+    line(format!("uptime_seconds {}", prom_value(snap.uptime_seconds)));
 
     // The lane is categorical; expose it the Prometheus way — a 1-valued
     // gauge with the category as a label.
@@ -746,6 +865,12 @@ mod tests {
         assert_eq!(m.tokens_generated_total(), 8);
         assert_eq!(m.prefill_tokens_total(), 5);
         assert_eq!(m.decode_latency_snapshot().count, 1);
+        // Settles feed the rolling SLO windows too: 1 error + 1 ok.
+        let slo = m.slo_snapshot();
+        assert_eq!(slo.windows.len(), 2);
+        assert_eq!(slo.windows[0].requests, 2);
+        assert_eq!(slo.windows[0].errors, 1);
+        assert!(m.uptime_seconds() >= 0.0);
         let snap = MetricsSnapshot {
             serve_requests_total: m.requests_total(),
             serve_shed_total: m.shed_total(),
@@ -755,6 +880,11 @@ mod tests {
             prefill_tokens_total: m.prefill_tokens_total(),
             decode_step_latency_us: m.decode_latency_snapshot(),
             replicas: vec![],
+            ops: crate::kernels::profile::snapshot(),
+            slo,
+            uptime_seconds: m.uptime_seconds(),
+            build_version: BUILD_VERSION.into(),
+            build_git: BUILD_GIT.into(),
             simd_lane: "scalar".into(),
         };
         assert!((snap.shed_fraction() - 0.5).abs() < 1e-12);
@@ -785,6 +915,9 @@ mod tests {
                 max_inflight: 8,
                 overflow_fraction: 0.25,
                 load_imbalance: 1.5,
+                health: "degraded".into(),
+                health_faults: 3,
+                health_results: 9,
                 blocks: vec![BlockSeries {
                     block: 0,
                     overflow_fraction: 0.125,
@@ -792,6 +925,11 @@ mod tests {
                     expert_queries: vec![40, 24],
                 }],
             }],
+            ops: crate::kernels::profile::snapshot(),
+            slo: m.slo_snapshot(),
+            uptime_seconds: 12.0,
+            build_version: BUILD_VERSION.into(),
+            build_git: BUILD_GIT.into(),
             simd_lane: "scalar".into(),
         };
         let text = render_prometheus(&snap);
@@ -818,6 +956,24 @@ mod tests {
         assert!(text.contains("decode_step_latency_us_count 1"), "{text}");
         assert!(text.contains("decode_step_latency_us_bucket{le=\"+Inf\"} 1"), "{text}");
 
+        // Health, profiler, SLO, and build-info series added by the
+        // observability layer all render with their labels.
+        assert!(text.contains("replica_health{replica=\"0\",state=\"degraded\"} 1"), "{text}");
+        for phase in crate::kernels::profile::OP_NAMES {
+            assert!(text.contains(&format!("op_time_us_total{{op=\"{phase}\"}}")), "{text}");
+            assert!(text.contains(&format!("op_calls_total{{op=\"{phase}\"}}")), "{text}");
+        }
+        for window in ["1m", "5m"] {
+            assert!(text.contains(&format!("slo_error_burn_rate{{window=\"{window}\"}}")), "{text}");
+            assert!(
+                text.contains(&format!("slo_latency_burn_rate{{window=\"{window}\"}}")),
+                "{text}"
+            );
+        }
+        assert!(text.contains("serve_build_info{version=\""), "{text}");
+        assert!(text.contains(&format!("git=\"{BUILD_GIT}\"")), "{text}");
+        assert!(text.contains("uptime_seconds 12"), "{text}");
+
         // The whole payload passes the grammar + coverage checker.
         let samples = check_prometheus_text(&text).unwrap();
         assert!(samples >= 12, "sample lines: {samples}");
@@ -833,6 +989,36 @@ mod tests {
         // Grammar-clean but missing documented series.
         let err = check_prometheus_text("serve_requests_total 1\n").unwrap_err();
         assert!(err.contains("missing"), "{err}");
+    }
+
+    #[test]
+    fn checker_coverage_includes_decode_and_observability_series() {
+        // The registry contract: decode (PR 9) and the health / profiler
+        // / SLO / build-info series are all *required* in every payload.
+        for name in [
+            "tokens_generated_total",
+            "prefill_tokens_total",
+            "decode_step_latency_us",
+            "replica_health",
+            "op_time_us_total",
+            "op_calls_total",
+            "slo_error_burn_rate",
+            "slo_latency_burn_rate",
+            "serve_build_info",
+            "uptime_seconds",
+        ] {
+            assert!(METRIC_NAMES.contains(&name), "{name} missing from METRIC_NAMES");
+        }
+        // A payload carrying everything *except* one of them fails
+        // coverage with the missing name in the error.
+        let mut full = String::new();
+        for name in METRIC_NAMES {
+            if *name != "op_time_us_total" {
+                full.push_str(&format!("{name} 1\n"));
+            }
+        }
+        let err = check_prometheus_text(&full).unwrap_err();
+        assert!(err.contains("op_time_us_total"), "{err}");
     }
 
     #[test]

@@ -19,6 +19,12 @@
 //! - [`trace`]: end-to-end request tracing — per-request stage spans
 //!   (admission → route → queue → execute) plus per-block model
 //!   profiles, retained in a fixed-capacity ring behind `GET /v1/trace`.
+//! - [`log`]: the structured event journal — leveled JSON-lines records
+//!   from the serving decision points (shed, bind, panic, health
+//!   transitions, shutdown), retained in a ring behind `GET /v1/logs`.
+//! - [`health`]: per-replica health state machine (healthy / degraded /
+//!   unhealthy from rolling fault rates) + rolling-window SLO burn-rate
+//!   accounting, surfaced via `GET /v1/readyz` and `/v1/metrics`.
 //! - [`trainer`]: the **PJRT-artifact** train-step driver with
 //!   loss-curve tracking (native training lives in [`crate::train`]).
 //! - [`checkpoint`]: flat-parameter save/load.
@@ -28,6 +34,8 @@
 pub mod batcher;
 pub mod checkpoint;
 pub mod engine;
+pub mod health;
+pub mod log;
 pub mod metrics;
 pub mod netserver;
 pub mod replica;
@@ -37,9 +45,15 @@ pub mod trainer;
 
 pub use batcher::{BatchPolicy, Batcher, Flush};
 pub use engine::{Engine, EngineHandle, EngineStats, Ticket};
+pub use health::{
+    HealthState, ReplicaHealth, SloSnapshot, SloWindowSnapshot, SloWindows,
+    DEFAULT_SLO_TARGET_MS,
+};
+pub use log::{EventLog, Level, LogRecord, DEFAULT_LOG_CAPACITY};
 pub use metrics::{
     check_prometheus_text, render_prometheus, BlockSeries, HistogramSnapshot, MetricsSnapshot,
-    ReplicaSnapshot, ServeMetrics, METRIC_BLOCK_OVERFLOW, METRIC_EXPERT_QUERIES, METRIC_NAMES,
+    ReplicaSnapshot, ServeMetrics, BUILD_GIT, BUILD_VERSION, METRIC_BLOCK_OVERFLOW,
+    METRIC_EXPERT_QUERIES, METRIC_NAMES,
 };
 pub use netserver::{NetClient, NetServer, NetServerConfig};
 pub use replica::{PoolTicket, ReplicaPool, ReplicaPoolConfig};

@@ -31,11 +31,15 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::log::{self, Level};
 use crate::coordinator::metrics::{render_prometheus, MetricsSnapshot};
 use crate::coordinator::replica::ReplicaPool;
 use crate::coordinator::trace::{next_trace_id, TraceStart};
 use crate::data::rng::splitmix64;
-use crate::service::wire::{self, EP_GENERATE, EP_HEALTH, EP_METRICS, EP_SHUTDOWN, EP_TRACE};
+use crate::service::wire::{
+    self, EP_GENERATE, EP_HEALTH, EP_LOGS, EP_METRICS, EP_PROFILE, EP_READYZ, EP_SHUTDOWN,
+    EP_TRACE,
+};
 use crate::service::{ServiceError, ServiceRequest, ServiceResponse, ServiceResult, StepEvent};
 use crate::util::json::Value;
 
@@ -55,6 +59,8 @@ const MAX_CONNECTIONS: usize = 256;
 const MAX_REJECT_DRAINS: usize = 32;
 /// Default `limit` for `GET /v1/trace` when the query omits it.
 const DEFAULT_TRACE_LIMIT: usize = 32;
+/// Default `limit` for `GET /v1/logs` when the query omits it.
+const DEFAULT_LOG_LIMIT: usize = 50;
 
 /// JSON content type (every endpoint except the Prometheus exposition).
 const CT_JSON: &str = "application/json";
@@ -95,6 +101,9 @@ impl NetServer {
     pub fn bind(pool: Arc<ReplicaPool>, cfg: &NetServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("bind {}", cfg.addr))?;
+        if let Ok(addr) = listener.local_addr() {
+            log::emit(Level::Info, "server.bind", None, format!("listening on {addr}"));
+        }
         Ok(NetServer {
             listener,
             pool,
@@ -253,10 +262,17 @@ fn serve_connection(
             if inflight.fetch_add(1, Ordering::AcqRel) >= max_inflight {
                 inflight.fetch_sub(1, Ordering::AcqRel);
                 pool.record_transport_shed();
+                let hint = pool.retry_hint_ms();
+                log::emit(
+                    Level::Warn,
+                    "admission.shed",
+                    None,
+                    format!("transport cap {max_inflight} reached, retry_after_ms={hint}"),
+                );
                 let err = ServiceError::overloaded(format!(
                     "admission cap reached ({max_inflight} requests in flight)"
                 ))
-                .with_retry_after(pool.retry_hint_ms());
+                .with_retry_after(hint);
                 refuse(&mut writer, &mut reader, err);
                 return Ok(());
             }
@@ -377,8 +393,44 @@ fn route(
             Ok(v) => json(200, v),
             Err(e) => json(e.http_status(), wire::encode_error(&e)),
         },
+        // Readiness is about the fleet, not the process: 200 while any
+        // replica can still take traffic (possibly degraded), 503 once
+        // every replica is unhealthy. Liveness (EP_HEALTH) stays 200
+        // either way.
+        ("GET", EP_READYZ) => {
+            let (healthy, degraded, unhealthy) = pool.readiness();
+            let ready = healthy + degraded > 0;
+            let status = if !ready {
+                "unready"
+            } else if degraded + unhealthy > 0 {
+                "degraded"
+            } else {
+                "ready"
+            };
+            let body = Value::obj(vec![
+                ("proto", Value::num(crate::service::PROTOCOL_VERSION as f64)),
+                ("ok", Value::Bool(ready)),
+                ("status", Value::str(status)),
+                ("replicas_healthy", Value::num(healthy as f64)),
+                ("replicas_degraded", Value::num(degraded as f64)),
+                ("replicas_unhealthy", Value::num(unhealthy as f64)),
+            ]);
+            json(if ready { 200 } else { 503 }, body)
+        }
+        ("GET", EP_PROFILE) => json(
+            200,
+            ok_body(&[
+                ("profile", crate::kernels::profile::profile_tree()),
+                ("uptime_seconds", Value::num(pool.uptime_seconds())),
+            ]),
+        ),
+        ("GET", EP_LOGS) => match logs_body(query) {
+            Ok(v) => json(200, v),
+            Err(e) => json(e.http_status(), wire::encode_error(&e)),
+        },
         ("POST", EP_SHUTDOWN) => {
             shutdown.store(true, Ordering::Release);
+            log::emit(Level::Info, "server.shutdown", None, "shutdown requested".to_string());
             json(200, ok_body(&[("status", Value::str("shutting down"))]))
         }
         ("POST", _) => match handle_service(pool, path, body, t0) {
@@ -395,6 +447,23 @@ fn route(
             json(e.http_status(), wire::encode_error(&e))
         }
     }
+}
+
+/// Assemble the `GET /v1/logs` payload: newest-first events from the
+/// process journal, filtered by the `limit` / `level` query params
+/// (`level` drops events below the named severity; default exports
+/// everything retained).
+fn logs_body(query: &str) -> ServiceResult<Value> {
+    let limit = query_usize(query, "limit")?.unwrap_or(DEFAULT_LOG_LIMIT);
+    let min_level = match query_param(query, "level") {
+        None => Level::Debug,
+        Some(name) => Level::parse(name).ok_or_else(|| {
+            ServiceError::BadRequest(format!(
+                "query param level={name:?} wants debug, info, warn, or error"
+            ))
+        })?,
+    };
+    Ok(log::global().export_json(limit, min_level))
 }
 
 /// Assemble the `GET /v1/trace` payload: newest-first records from the
@@ -856,6 +925,47 @@ impl NetClient {
             return Err(ServiceError::Unavailable(format!("{}: HTTP {status}: {text}", self.addr)));
         }
         Ok(text)
+    }
+
+    /// Fetch `GET /v1/logs` as raw wire text. `limit`/`level` map to the
+    /// query params; `None` leaves the server defaults in place.
+    pub fn logs_raw(&self, limit: Option<usize>, level: Option<&str>) -> ServiceResult<String> {
+        let mut path = format!("{EP_LOGS}?");
+        if let Some(l) = limit {
+            path.push_str(&format!("limit={l}&"));
+        }
+        if let Some(lv) = level {
+            path.push_str(&format!("level={lv}&"));
+        }
+        let path = path.trim_end_matches(|c| c == '&' || c == '?');
+        let (status, text) = self.http("GET", path, "")?;
+        if status != 200 {
+            if let Ok(parsed) = Value::parse(&text) {
+                wire::parse_response(&parsed)?;
+            }
+            return Err(ServiceError::Unavailable(format!("{}: HTTP {status}: {text}", self.addr)));
+        }
+        Ok(text)
+    }
+
+    /// Fetch `GET /v1/profile` (the op-level timing tree) as raw wire text.
+    pub fn profile_raw(&self) -> ServiceResult<String> {
+        let (status, text) = self.http("GET", EP_PROFILE, "")?;
+        if status != 200 {
+            if let Ok(parsed) = Value::parse(&text) {
+                wire::parse_response(&parsed)?;
+            }
+            return Err(ServiceError::Unavailable(format!("{}: HTTP {status}: {text}", self.addr)));
+        }
+        Ok(text)
+    }
+
+    /// Readiness probe: returns the HTTP status (200 ready / 503 unready)
+    /// plus the JSON body with the per-state replica counts — unlike
+    /// [`NetClient::healthz`], a 503 here is a *valid answer*, not a
+    /// transport failure, so the caller gets both.
+    pub fn readyz_raw(&self) -> ServiceResult<(u16, String)> {
+        self.http("GET", EP_READYZ, "")
     }
 
     /// Raw HTTP access for tests and probes that need the unparsed body

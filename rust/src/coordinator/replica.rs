@@ -20,6 +20,14 @@
 //! pool-wide counters, the request-latency histogram, and per-replica
 //! gauges including the MiTA routing stats (`overflow_fraction`,
 //! `load_imbalance`) read from each replica's kernels.
+//!
+//! Health-aware routing: each replica carries a [`ReplicaHealth`]
+//! machine fed by ticket settlement — replica-class faults (`internal`,
+//! `unavailable`) count against it, client-class errors do not. The
+//! routing scan skips `unhealthy` replicas while any non-unhealthy
+//! candidate remains, and a failed engine submission records a fault
+//! and moves on to the next candidate instead of failing the request,
+//! so a dead engine drains instead of poisoning the stream.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -28,7 +36,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::engine::{Engine, EngineHandle, ExecProfile, Ticket};
-use crate::coordinator::metrics::{BlockSeries, MetricsSnapshot, ReplicaSnapshot, ServeMetrics};
+use crate::coordinator::health::{HealthState, ReplicaHealth};
+use crate::coordinator::log::{self, Level};
+use crate::coordinator::metrics::{
+    BlockSeries, MetricsSnapshot, ReplicaSnapshot, ServeMetrics, BUILD_GIT, BUILD_VERSION,
+};
 use crate::coordinator::trace::{
     TraceRecord, TraceRing, TraceSpans, TraceStart, DEFAULT_TRACE_CAPACITY,
 };
@@ -79,6 +91,9 @@ struct Replica {
     outstanding: Arc<AtomicUsize>,
     /// Compute requests ever routed to this replica.
     requests_total: AtomicU64,
+    /// Rolling fault-rate health machine, fed by ticket settlement and
+    /// consulted by the routing scan.
+    health: Arc<ReplicaHealth>,
 }
 
 /// N engine replicas behind least-outstanding-tickets routing. Shared as
@@ -105,14 +120,16 @@ impl ReplicaPool {
             anyhow::bail!("replica pool wants at least 1 replica");
         }
         let replicas = (0..cfg.replicas)
-            .map(|_| -> Result<Replica> {
+            .map(|i| -> Result<Replica> {
                 let engine = Engine::spawn_backend(spec.clone(), warmup.clone())?;
                 let handle = engine.handle();
+                log::emit(Level::Info, "replica.spawn", None, format!("replica {i} up"));
                 Ok(Replica {
                     engine,
                     handle,
                     outstanding: Arc::new(AtomicUsize::new(0)),
                     requests_total: AtomicU64::new(0),
+                    health: Arc::new(ReplicaHealth::new()),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -172,8 +189,19 @@ impl ReplicaPool {
         // least-outstanding first, round-robin among equals.
         let mut order: Vec<usize> = (0..n).map(|i| (start + i) % n).collect();
         order.sort_by_key(|&i| self.replicas[i].outstanding.load(Ordering::Relaxed));
+        // Unhealthy replicas are skipped while any non-unhealthy
+        // candidate exists; a fully-unhealthy pool still routes, so
+        // recovery samples keep flowing.
+        let any_routable = order
+            .iter()
+            .any(|&i| self.replicas[i].health.state() != HealthState::Unhealthy);
+        let mut req = Some(req);
+        let mut last_err = None;
         for &i in &order {
             let r = &self.replicas[i];
+            if any_routable && r.health.state() == HealthState::Unhealthy {
+                continue;
+            }
             // Reserve atomically against the cap (depths move under us).
             let depth = match r.outstanding.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |o| {
                 (o < self.cfg.max_inflight).then_some(o + 1)
@@ -181,20 +209,30 @@ impl ReplicaPool {
                 Ok(prev) => prev + 1,
                 Err(_) => continue,
             };
-            // The first admitting replica consumes the request (and the
-            // step channel, when streaming) — later iterations only run
-            // when this one `continue`d before getting here.
-            let inner = match match steps.take() {
-                Some(tx) => r.handle.submit_streaming(req, tx),
-                None => r.handle.submit(req),
-            } {
+            // The first replica whose engine accepts the submission
+            // consumes the request (and the step channel, when
+            // streaming); a failed submission hands both back so the
+            // scan can retry the next candidate.
+            let this_req = req.take().expect("request consumed only by a successful submit");
+            let inner = match r.handle.submit_recoverable(this_req, steps.take()) {
                 Ok(t) => t,
-                Err(e) => {
-                    // The engine thread is gone; release the slot and
-                    // surface the typed error (not a shed).
+                Err((e, back_req, back_steps)) => {
+                    // The engine thread is gone: release the slot, score
+                    // the fault against this replica's health, and move
+                    // on — the request only fails when every candidate
+                    // does.
                     r.outstanding.fetch_sub(1, Ordering::SeqCst);
-                    self.metrics.record_error();
-                    return Err(e);
+                    Self::record_health(&r.health, i, true);
+                    log::emit(
+                        Level::Error,
+                        "replica.error",
+                        None,
+                        format!("replica {i} rejected submit: {e}"),
+                    );
+                    req = Some(back_req);
+                    steps = back_steps;
+                    last_err = Some(e);
+                    continue;
                 }
             };
             r.requests_total.fetch_add(1, Ordering::Relaxed);
@@ -205,15 +243,39 @@ impl ReplicaPool {
                 issued: Instant::now(),
                 outstanding: Arc::clone(&r.outstanding),
                 metrics: Arc::clone(&self.metrics),
+                health: Arc::clone(&r.health),
                 settled: false,
             });
         }
+        if let Some(e) = last_err {
+            self.metrics.record_error();
+            return Err(e);
+        }
         self.metrics.record_shed();
+        log::emit(
+            Level::Warn,
+            "pool.shed",
+            None,
+            format!("all {n} replicas at cap {}", self.cfg.max_inflight),
+        );
         Err(ServiceError::overloaded(format!(
             "all {n} replicas at their admission cap ({} tickets each)",
             self.cfg.max_inflight
         ))
         .with_retry_after(self.retry_hint_ms()))
+    }
+
+    /// Score one settled outcome against a replica's health machine and
+    /// journal the state transition, if any.
+    fn record_health(health: &ReplicaHealth, replica: usize, fault: bool) {
+        if let Some((old, new)) = health.record(fault) {
+            log::emit(
+                Level::Warn,
+                "replica.health",
+                None,
+                format!("replica {replica} {} -> {}", old.as_str(), new.as_str()),
+            );
+        }
     }
 
     /// Blocking request entry point — the pool-level twin of
@@ -245,6 +307,12 @@ impl ReplicaPool {
         match req {
             ServiceRequest::Metrics => Ok(ServiceResponse::Metrics(self.snapshot())),
             ServiceRequest::BindCheckpoint { .. } | ServiceRequest::BindInit { .. } => {
+                log::emit(
+                    Level::Info,
+                    "bind.broadcast",
+                    start.as_ref().map(|s| s.trace_id),
+                    format!("bind to {} replicas", self.replicas.len()),
+                );
                 let mut last = None;
                 for r in &self.replicas {
                     last = Some(r.handle.call(req.clone())?);
@@ -381,6 +449,41 @@ impl ReplicaPool {
         &self.traces
     }
 
+    /// Seconds since the pool's metrics registry was created (the
+    /// `uptime_seconds` gauge, without assembling a full snapshot).
+    pub fn uptime_seconds(&self) -> f64 {
+        self.metrics.uptime_seconds()
+    }
+
+    /// One replica's current health state.
+    pub fn replica_health(&self, replica: usize) -> HealthState {
+        self.replicas[replica].health.state()
+    }
+
+    /// Readiness counts for `GET /v1/readyz`: replicas currently
+    /// `(healthy, degraded, unhealthy)`. The pool is *ready* while any
+    /// replica is non-unhealthy — degraded capacity still serves.
+    pub fn readiness(&self) -> (usize, usize, usize) {
+        let mut counts = (0, 0, 0);
+        for r in &self.replicas {
+            match r.health.state() {
+                HealthState::Healthy => counts.0 += 1,
+                HealthState::Degraded => counts.1 += 1,
+                HealthState::Unhealthy => counts.2 += 1,
+            }
+        }
+        counts
+    }
+
+    /// Terminate one replica's engine loop **without** removing the
+    /// replica from the pool — the fault-injection hook behind the
+    /// health-aware routing tests. Subsequent submissions to it fail
+    /// with `unavailable`, which the health machine scores as faults
+    /// until routing drains away from it.
+    pub fn kill_replica(&self, replica: usize) {
+        self.replicas[replica].handle.terminate();
+    }
+
     /// Assemble the `/v1/metrics` payload: pool counters, the latency
     /// histogram, and per-replica gauges (queue depth sampled now, MiTA
     /// routing stats read from each replica's kernels).
@@ -422,6 +525,9 @@ impl ReplicaPool {
                     max_inflight: self.cfg.max_inflight as u64,
                     overflow_fraction,
                     load_imbalance,
+                    health: r.health.state().as_str().to_string(),
+                    health_faults: r.health.faults_total(),
+                    health_results: r.health.results_total(),
                     blocks,
                 }
             })
@@ -435,6 +541,11 @@ impl ReplicaPool {
             prefill_tokens_total: self.metrics.prefill_tokens_total(),
             decode_step_latency_us: self.metrics.decode_latency_snapshot(),
             replicas,
+            ops: crate::kernels::profile::snapshot(),
+            slo: self.metrics.slo_snapshot(),
+            uptime_seconds: self.metrics.uptime_seconds(),
+            build_version: BUILD_VERSION.to_string(),
+            build_git: BUILD_GIT.to_string(),
             simd_lane: crate::kernels::simd::active_lane().to_string(),
         }
     }
@@ -459,6 +570,7 @@ pub struct PoolTicket {
     issued: Instant,
     outstanding: Arc<AtomicUsize>,
     metrics: Arc<ServeMetrics>,
+    health: Arc<ReplicaHealth>,
     settled: bool,
 }
 
@@ -519,6 +631,14 @@ impl PoolTicket {
             Ok(_) => self.metrics.record_latency(self.issued.elapsed()),
             Err(_) => self.metrics.record_error(),
         }
+        // Health: only replica-class faults count against the machine.
+        // A client-class error (bad shape, unbound binding) is evidence
+        // of a live replica answering, so it scores as ok.
+        let fault = match result {
+            Ok(_) => false,
+            Err(e) => matches!(e.code(), "internal" | "unavailable"),
+        };
+        ReplicaPool::record_health(&self.health, self.replica, fault);
     }
 }
 
@@ -759,6 +879,32 @@ mod tests {
             + r.spans.execute_ns
             + r.spans.decode_ns;
         assert!(staged <= r.spans.total_ns, "stages {staged} ≤ wall {}", r.spans.total_ns);
+        p.shutdown();
+    }
+
+    #[test]
+    fn dead_replica_drains_and_routing_skips_it() {
+        use crate::coordinator::health::HEALTH_MIN_SAMPLES;
+
+        let p = pool(2, 8);
+        p.kill_replica(0);
+        // Every call still succeeds: a failed submission to the dead
+        // engine records a fault and retries on the live replica.
+        for i in 0..8 {
+            p.call(attn_request(i)).unwrap().into_tensor().unwrap();
+        }
+        let snap = p.snapshot();
+        assert_eq!(snap.serve_requests_total, 8);
+        assert_eq!(snap.serve_errors_total, 0, "retries hide the dead engine from callers");
+        assert_eq!(snap.serve_shed_total, 0);
+        assert_eq!(snap.replicas[0].replica_requests_total, 0);
+        assert_eq!(snap.replicas[1].replica_requests_total, 8, "all work landed on the live replica");
+        assert_eq!(snap.replicas[0].health, "unhealthy");
+        assert!(snap.replicas[0].health_faults >= HEALTH_MIN_SAMPLES as u64);
+        assert_eq!(snap.replicas[1].health, "healthy");
+        assert_eq!(p.replica_health(0), crate::coordinator::HealthState::Unhealthy);
+        let (healthy, _degraded, unhealthy) = p.readiness();
+        assert_eq!((healthy, unhealthy), (1, 1), "degraded-but-ready pool");
         p.shutdown();
     }
 

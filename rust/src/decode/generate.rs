@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::kernels::api::BlockProfile;
 use crate::kernels::linalg::{axpy, dot, gather_head, matmul_nt, scatter_head};
+use crate::kernels::profile::{self, Op};
 use crate::kernels::{OP_ATTN_DENSE, OP_ATTN_MITA};
 use crate::model::transformer::{add_bias_rows, gelu_in_place, layer_norm_rows};
 use crate::model::MitaModel;
@@ -345,6 +346,7 @@ pub fn generate(
     }
     let mut next = sess.greedy_token();
     let prefill_ns = t0.elapsed().as_nanos() as u64;
+    profile::record(Op::DecodePrefill, prefill_ns);
 
     let mut tokens = prompt.to_vec();
     tokens.push(next);
@@ -356,7 +358,9 @@ pub fn generate(
         next = sess.greedy_token();
         tokens.push(next);
         let now = Instant::now();
-        on_step(s, next, now.duration_since(t_prev).as_nanos() as u64);
+        let step_ns = now.duration_since(t_prev).as_nanos() as u64;
+        profile::record(Op::DecodeStep, step_ns);
+        on_step(s, next, step_ns);
         t_prev = now;
     }
     let decode_ns = decode_t0.elapsed().as_nanos() as u64;

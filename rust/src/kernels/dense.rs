@@ -4,9 +4,12 @@
 //! steady-state calls are allocation-free; parallelism lives one level up
 //! in the batched (example × head) executor of [`crate::kernels::api`].
 
+use std::time::Instant;
+
 use crate::kernels::linalg::{
     gather_head, matmul_nt, scatter_head, softmax_rows_scaled, weighted_row_sum,
 };
+use crate::kernels::profile::{self, Op};
 use crate::kernels::workspace::Workspace;
 
 /// Query rows per block; the score scratch is `min(QB, n) × n` floats.
@@ -30,6 +33,7 @@ pub fn dense_attention(
     if n == 0 || d == 0 {
         return;
     }
+    let t_attend = Instant::now();
     let scale = 1.0 / (d as f32).sqrt();
     let mut s = ws.take_f32("dense.scores", QB.min(n) * n);
     for r0 in (0..n).step_by(QB) {
@@ -44,6 +48,7 @@ pub fn dense_attention(
         }
     }
     ws.give_f32("dense.scores", s);
+    profile::record_since(Op::DenseAttend, t_attend);
 }
 
 /// Multi-head dense attention over model-dim layout: `[n, dim]` inputs

@@ -19,10 +19,13 @@
 //! unpacked per-query pass over the same expert KV, so the native output
 //! is exact for every query.
 
+use std::time::Instant;
+
 use crate::kernels::api::MitaStats;
 use crate::kernels::linalg::{
     axpy, dot, gather_head, matmul_nt, scale_in_place, scatter_head, softmax_in_place,
 };
+use crate::kernels::profile::{self, Op};
 use crate::kernels::workspace::Workspace;
 use crate::mita::routing;
 
@@ -102,13 +105,23 @@ pub(crate) fn select_experts(
     debug_assert_eq!(route_logits.len(), n * m);
     debug_assert_eq!(topk.len(), m * kk);
     let scale = 1.0 / (d as f32).sqrt();
+    // Profiler brackets time each phase without touching its arithmetic
+    // (the bit-parity contract with the training backward is on the
+    // computed values, which the clock reads cannot observe).
+    let t = Instant::now();
     routing::landmarks_pool1d_into(q, n, d, m, landmarks);
+    profile::record_since(Op::MitaLandmarks, t);
+    let t = Instant::now();
     matmul_nt(kmat, landmarks, n, m, d, s);
     // The positive scale is applied *before* top-k on purpose: dropping
     // it would be mathematically order-preserving but could collapse
     // near-equal scores differently after rounding and flip a tie-break.
     scale_in_place(s, scale);
+    profile::record_since(Op::MitaScores, t);
+    let t = Instant::now();
     routing::topk_indices_into(s, n, m, kk, col, order, topk);
+    profile::record_since(Op::MitaTopk, t);
+    let t = Instant::now();
     matmul_nt(q, landmarks, n, m, d, route_logits);
     for (a, row) in assign.iter_mut().zip(route_logits.chunks_exact(m)) {
         let mut best = 0usize;
@@ -119,6 +132,7 @@ pub(crate) fn select_experts(
         }
         *a = best;
     }
+    profile::record_since(Op::MitaRoute, t);
 }
 
 /// One query row attending over an expert's gathered KV (indices into the
@@ -199,6 +213,7 @@ pub fn mita_attention(
         &mut route_logits,
         &mut assign,
     );
+    let t_pack = Instant::now();
     let cap = routing::capacity(n, m, cfg.cap_factor, cfg.block_q);
     let mut counts = ws.take_usize("mita.counts", m);
     let mut slot = ws.take_usize("mita.slot", n);
@@ -214,6 +229,8 @@ pub fn mita_attention(
             packed_qi[sl] = qi;
         }
     }
+    profile::record_since(Op::MitaPack, t_pack);
+    let t_attend = Instant::now();
     let mut logits = ws.take_f32("mita.logits", kk);
     for e in 0..m {
         let picks = &topk[e * kk..(e + 1) * kk];
@@ -232,9 +249,14 @@ pub fn mita_attention(
         }
     }
 
+    profile::record_since(Op::MitaAttend, t_attend);
+
     // 6. Overflowed queries: unpacked fallback over the same expert KV, so
-    //    the native output stays exact under skewed routing.
+    //    the native output stays exact under skewed routing. The phase is
+    //    profiled only when it actually runs, so `op_calls_total` for
+    //    `mita.overflow` counts calls that overflowed.
     if overflow > 0 {
+        let t_overflow = Instant::now();
         for (qi, &sl) in slot.iter().enumerate() {
             if sl == routing::OVERFLOW {
                 let e = assign[qi];
@@ -251,6 +273,7 @@ pub fn mita_attention(
                 );
             }
         }
+        profile::record_since(Op::MitaOverflow, t_overflow);
     }
 
     stats.record(cap, overflow, &counts);

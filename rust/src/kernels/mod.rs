@@ -21,6 +21,9 @@
 //!   all parallelism.
 //! - [`par`]: scoped-thread parallel helpers (std-only rayon substitute)
 //!   that schedule those work items.
+//! - [`profile`]: the always-on op-level profiler — atomic `(ns, calls)`
+//!   accumulators the kernel phases and decode loop report into,
+//!   exported via `GET /v1/profile` and the `op_*_total` metric series.
 //!
 //! The [`crate::runtime::backend`] module exposes this stack behind the
 //! same `Backend` interface as the PJRT artifact path.
@@ -30,6 +33,7 @@ pub mod dense;
 pub mod linalg;
 pub mod mita;
 pub mod par;
+pub mod profile;
 pub mod simd;
 pub mod workspace;
 

@@ -1,0 +1,247 @@
+//! Continuous op-level profiler: always-on per-phase timing accumulators.
+//!
+//! Every native hot path (the MiTA kernel phases, the dense baseline,
+//! the decode prefill/step loop) brackets its work with an
+//! [`Instant`] pair and folds the elapsed nanoseconds into one of a
+//! fixed set of process-wide atomic accumulators — one `(ns, calls)`
+//! pair per [`Op`]. Recording is two relaxed `fetch_add`s plus a
+//! monotonic clock read, so the profiler can stay on in production;
+//! when nothing executes it costs nothing at all.
+//!
+//! The accumulators are process-global rather than per-replica by
+//! design: kernel work items run on the shared scoped-thread pool
+//! (`kernels::par`), where a worker has no replica identity — replica
+//! attribution lives one level up in `/v1/trace` and the per-replica
+//! series of `/v1/metrics`. The profile is exported two ways:
+//!
+//! - `GET /v1/profile` — a hierarchical timing tree (`mita.*`,
+//!   `dense.*`, `decode.*` groups) built by [`profile_tree`];
+//! - `op_time_us_total{op}` / `op_calls_total{op}` Prometheus series in
+//!   `GET /v1/metrics?format=prometheus`, fed from [`snapshot`].
+//!
+//! Timing only ever *brackets* phase calls — it never reorders or
+//! conditions the arithmetic, so bit-parity guarantees (shared
+//! `select_experts`, SIMD lane equivalence) are untouched.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Value;
+
+/// One profiled operation (a kernel phase or decode stage). The
+/// discriminant indexes the accumulator table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Op {
+    /// MiTA: adaptive-average landmark pooling over Q.
+    MitaLandmarks = 0,
+    /// MiTA: blocked landmark scores S = K·Q̃ᵀ/√d.
+    MitaScores = 1,
+    /// MiTA: top-k KV gather per landmark.
+    MitaTopk = 2,
+    /// MiTA: routing logits + argmax assignment per query.
+    MitaRoute = 3,
+    /// MiTA: capacity computation + expert packing.
+    MitaPack = 4,
+    /// MiTA: packed expert-grouped attention.
+    MitaAttend = 5,
+    /// MiTA: unpacked overflow fallback (recorded only when it runs).
+    MitaOverflow = 6,
+    /// Dense baseline: the full O(N²) attention body.
+    DenseAttend = 7,
+    /// Decode: prefill pass (prompt forwards + first argmax).
+    DecodePrefill = 8,
+    /// Decode: one steady-state token step.
+    DecodeStep = 9,
+}
+
+/// Number of profiled ops (length of [`OP_NAMES`] and the slot table).
+pub const OP_COUNT: usize = 10;
+
+/// Exported op names, indexed by `Op as usize`. Dotted so the profile
+/// tree can group them (`mita.*` / `dense.*` / `decode.*`).
+pub const OP_NAMES: [&str; OP_COUNT] = [
+    "mita.landmarks",
+    "mita.scores",
+    "mita.topk",
+    "mita.route",
+    "mita.pack",
+    "mita.attend",
+    "mita.overflow",
+    "dense.attend",
+    "decode.prefill",
+    "decode.step",
+];
+
+/// The MiTA phase names, in execution order — the set the profile
+/// acceptance probe asserts nonzero after a forward with overflow.
+pub const MITA_PHASES: [&str; 7] = [
+    "mita.landmarks",
+    "mita.scores",
+    "mita.topk",
+    "mita.route",
+    "mita.pack",
+    "mita.attend",
+    "mita.overflow",
+];
+
+struct OpSlot {
+    ns: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl OpSlot {
+    const fn new() -> Self {
+        OpSlot { ns: AtomicU64::new(0), calls: AtomicU64::new(0) }
+    }
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+static SLOTS: [OpSlot; OP_COUNT] = [
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+    OpSlot::new(),
+];
+
+/// Fold `ns` nanoseconds (one call) into `op`'s accumulator.
+#[inline]
+pub fn record(op: Op, ns: u64) {
+    let slot = &SLOTS[op as usize];
+    slot.ns.fetch_add(ns, Ordering::Relaxed);
+    slot.calls.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Fold the wall time since `t0` (one call) into `op`'s accumulator.
+#[inline]
+pub fn record_since(op: Op, t0: Instant) {
+    record(op, t0.elapsed().as_nanos() as u64);
+}
+
+/// One exported op series: cumulative microseconds + call count.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct OpSeries {
+    /// Dotted op name (see [`OP_NAMES`]).
+    pub op: String,
+    /// Cumulative wall time, microseconds (float: sub-µs ops still show).
+    pub time_us: f64,
+    /// Cumulative call count.
+    pub calls: u64,
+}
+
+/// Snapshot every op accumulator, in [`OP_NAMES`] order. Every op is
+/// always present (zeros when idle), so the exported series set is
+/// stable across scrapes.
+pub fn snapshot() -> Vec<OpSeries> {
+    OP_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, name)| OpSeries {
+            op: (*name).to_string(),
+            time_us: SLOTS[i].ns.load(Ordering::Relaxed) as f64 / 1000.0,
+            calls: SLOTS[i].calls.load(Ordering::Relaxed),
+        })
+        .collect()
+}
+
+/// Render the profile as a hierarchical timing tree: ops grouped by
+/// their dotted prefix, each leaf carrying `{time_us, calls, mean_us}`,
+/// each group carrying a `total_us` rollup. The `GET /v1/profile` body.
+pub fn profile_tree() -> Value {
+    let snap = snapshot();
+    let mut groups: Vec<(&str, Vec<(&str, &OpSeries)>)> = Vec::new();
+    for (i, s) in snap.iter().enumerate() {
+        let (group, leaf) = OP_NAMES[i].split_once('.').expect("op names are dotted");
+        match groups.iter_mut().find(|(g, _)| *g == group) {
+            Some((_, leaves)) => leaves.push((leaf, s)),
+            None => groups.push((group, vec![(leaf, s)])),
+        }
+    }
+    let mut out = Vec::with_capacity(groups.len());
+    for (group, leaves) in groups {
+        let total_us: f64 = leaves.iter().map(|(_, s)| s.time_us).sum();
+        let mut obj: Vec<(&str, Value)> = vec![("total_us", Value::Num(total_us))];
+        for (leaf, s) in leaves {
+            let mean = if s.calls > 0 { s.time_us / s.calls as f64 } else { 0.0 };
+            obj.push((
+                leaf,
+                Value::obj(vec![
+                    ("time_us", Value::Num(s.time_us)),
+                    ("calls", Value::Num(s.calls as f64)),
+                    ("mean_us", Value::Num(mean)),
+                ]),
+            ));
+        }
+        out.push((group, Value::obj(obj)));
+    }
+    Value::obj(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn series(snap: &[OpSeries], op: &str) -> OpSeries {
+        snap.iter().find(|s| s.op == op).cloned().expect("op present")
+    }
+
+    #[test]
+    fn snapshot_lists_every_op_exactly_once() {
+        let snap = snapshot();
+        assert_eq!(snap.len(), OP_COUNT);
+        for name in OP_NAMES {
+            assert_eq!(snap.iter().filter(|s| s.op == name).count(), 1, "{name}");
+        }
+    }
+
+    #[test]
+    fn record_accumulates_time_and_calls() {
+        // The table is process-global and tests run in parallel, so
+        // assert on deltas rather than absolute values.
+        let before = series(&snapshot(), "dense.attend");
+        record(Op::DenseAttend, 2_500);
+        record(Op::DenseAttend, 500);
+        let after = series(&snapshot(), "dense.attend");
+        assert!(after.calls >= before.calls + 2);
+        assert!(after.time_us >= before.time_us + 3.0 - 1e-9);
+    }
+
+    #[test]
+    fn record_since_uses_wall_time() {
+        let before = series(&snapshot(), "decode.prefill");
+        let t0 = Instant::now();
+        std::hint::black_box(0u64);
+        record_since(Op::DecodePrefill, t0);
+        let after = series(&snapshot(), "decode.prefill");
+        assert_eq!(after.calls, before.calls.max(after.calls));
+        assert!(after.calls > before.calls);
+    }
+
+    #[test]
+    fn profile_tree_groups_by_prefix_with_rollups() {
+        record(Op::MitaLandmarks, 1_000);
+        let text = profile_tree().render();
+        for group in ["mita", "dense", "decode"] {
+            assert!(text.contains(&format!("\"{group}\":")), "{text}");
+        }
+        for leaf in ["landmarks", "scores", "topk", "route", "pack", "attend", "overflow"] {
+            assert!(text.contains(&format!("\"{leaf}\":")), "{text}");
+        }
+        assert!(text.contains("\"total_us\":"), "{text}");
+        assert!(text.contains("\"mean_us\":"), "{text}");
+    }
+
+    #[test]
+    fn mita_phase_registry_matches_op_names() {
+        for phase in MITA_PHASES {
+            assert!(OP_NAMES.contains(&phase), "{phase} missing from OP_NAMES");
+        }
+        assert_eq!(MITA_PHASES.len(), OP_NAMES.iter().filter(|n| n.starts_with("mita.")).count());
+    }
+}

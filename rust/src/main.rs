@@ -97,6 +97,8 @@ const VALUED_FLAGS: &[&str] = &[
     "limit",
     "min-us",
     "trace-ring",
+    "level",
+    "log-level",
     // native training subsystem
     "lr",
     "kernel",
@@ -629,6 +631,13 @@ fn spawn_model_engine(
 /// F` writes the bound address (useful with port 0 in scripts/CI). Runs
 /// until a client posts `/v1/admin/shutdown`.
 fn serve_listen(args: &cli::Args, addr: &str, opts: &Opts, wants_model: bool) -> Result<()> {
+    // `--log-level` overrides the MITA_LOG env default for the process
+    // journal (docs/OBSERVABILITY.md); parse before anything can emit.
+    if let Some(name) = args.flag("log-level") {
+        let level = mita::coordinator::Level::parse(name)
+            .ok_or_else(|| anyhow::anyhow!("--log-level {name:?} wants debug|info|warn|error"))?;
+        mita::coordinator::log::set_level(level);
+    }
     let binding = args.flag_or("binding", "model");
     let replicas = args.flag_parse("replicas", 1usize)?;
     anyhow::ensure!(replicas >= 1, "--replicas {replicas} wants at least 1");
@@ -842,7 +851,12 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
             // docs/OBSERVABILITY.md for the field reference).
             let limit = args.flag("limit").map(str::parse::<usize>).transpose()?;
             let min_us = args.flag("min-us").map(str::parse::<u64>).transpose()?;
-            let body = mita::util::json::Value::parse(&client.trace_raw(limit, min_us)?)?;
+            let raw = client.trace_raw(limit, min_us)?;
+            if args.has("json") {
+                println!("{raw}");
+                return Ok(());
+            }
+            let body = mita::util::json::Value::parse(&raw)?;
             let traces = body.get("traces")?.as_arr()?;
             println!(
                 "{} trace(s) retained (ring capacity={} pushed={})",
@@ -900,8 +914,12 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
             let m = client.metrics()?;
             let lat = &m.request_latency_us;
             println!(
+                "build={} git={} uptime={:.0}s simd_lane={}",
+                m.build_version, m.build_git, m.uptime_seconds, m.simd_lane,
+            );
+            println!(
                 "requests={} shed={} errors={} shed_fraction={:.4} \
-                 p50={:.0}us p95={:.0}us p99={:.0}us simd_lane={}",
+                 p50={:.0}us p95={:.0}us p99={:.0}us",
                 m.serve_requests_total,
                 m.serve_shed_total,
                 m.serve_errors_total,
@@ -909,12 +927,19 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 lat.p50_us,
                 lat.p95_us,
                 lat.p99_us,
-                m.simd_lane,
             );
+            for w in &m.slo.windows {
+                println!(
+                    "  slo {}: requests={} errors={} slow={} error_burn={:.2} latency_burn={:.2}",
+                    w.window, w.requests, w.errors, w.slow, w.error_burn_rate,
+                    w.latency_burn_rate,
+                );
+            }
             for r in &m.replicas {
                 println!(
-                    "  replica {}: requests={} depth={}/{} ovf={:.1}% imb={:.2}",
+                    "  replica {}: health={} requests={} depth={}/{} ovf={:.1}% imb={:.2}",
                     r.replica,
+                    r.health,
                     r.replica_requests_total,
                     r.replica_queue_depth,
                     r.max_inflight,
@@ -923,10 +948,95 @@ fn cmd_client(args: &cli::Args, opts: &Opts) -> Result<()> {
                 );
             }
         }
+        "readyz" => {
+            // Unlike `health` (process liveness), readyz answers whether
+            // the pool can still route: 503 once every replica is
+            // unhealthy. The exit code follows the HTTP status so CI
+            // probes can gate on it directly.
+            let (status, body) = client.readyz_raw()?;
+            let v = mita::util::json::Value::parse(&body)?;
+            println!(
+                "{addr}: {} (HTTP {status}) replicas healthy={} degraded={} unhealthy={}",
+                v.get("status")?.as_str()?,
+                v.get("replicas_healthy")?.as_f64()? as u64,
+                v.get("replicas_degraded")?.as_f64()? as u64,
+                v.get("replicas_unhealthy")?.as_f64()? as u64,
+            );
+            anyhow::ensure!(status == 200, "{addr}: not ready (HTTP {status})");
+        }
+        "logs" => {
+            // GET /v1/logs: the structured event journal, newest first
+            // ([--limit N] [--level debug|info|warn|error]; --json dumps
+            // the raw wire body for scripts).
+            let limit = args.flag("limit").map(str::parse::<usize>).transpose()?;
+            let raw = client.logs_raw(limit, args.flag("level"))?;
+            if args.has("json") {
+                println!("{raw}");
+                return Ok(());
+            }
+            let body = mita::util::json::Value::parse(&raw)?;
+            let events = body.get("events")?.as_arr()?;
+            println!(
+                "{} event(s) retained (ring capacity={} pushed={} level={})",
+                events.len(),
+                body.get("capacity")?.as_f64()? as u64,
+                body.get("pushed")?.as_f64()? as u64,
+                body.get("level")?.as_str()?,
+            );
+            for e in events {
+                let trace = match e.opt("trace_id") {
+                    Some(t) => format!(" trace=#{}", t.as_f64()? as u64),
+                    None => String::new(),
+                };
+                println!(
+                    "  #{} [{}] {} unix_ms={}{}: {}",
+                    e.get("seq")?.as_f64()? as u64,
+                    e.get("level")?.as_str()?,
+                    e.get("event")?.as_str()?,
+                    e.get("unix_ms")?.as_f64()? as u64,
+                    trace,
+                    e.get("message")?.as_str()?,
+                );
+            }
+        }
+        "profile" => {
+            // GET /v1/profile: the continuous op-level timing tree
+            // (per-kernel phase accumulators; --json dumps the raw body).
+            let raw = client.profile_raw()?;
+            if args.has("json") {
+                println!("{raw}");
+                return Ok(());
+            }
+            let body = mita::util::json::Value::parse(&raw)?;
+            println!("uptime={:.0}s", body.get("uptime_seconds")?.as_f64()?);
+            let tree = body.get("profile")?.as_obj()?;
+            let mut groups: Vec<&String> = tree.keys().collect();
+            groups.sort();
+            for group in groups {
+                let node = tree.get(group.as_str()).expect("key from iteration");
+                println!("  {group}: total={:.1}us", node.get("total_us")?.as_f64()?);
+                let leaves = node.as_obj()?;
+                let mut names: Vec<&String> = leaves.keys().collect();
+                names.sort();
+                for name in names {
+                    if name == "total_us" {
+                        continue;
+                    }
+                    let leaf = leaves.get(name.as_str()).expect("key from iteration");
+                    println!(
+                        "    {name}: time={:.1}us calls={} mean={:.1}us",
+                        leaf.get("time_us")?.as_f64()?,
+                        leaf.get("calls")?.as_f64()? as u64,
+                        leaf.get("mean_us")?.as_f64()?,
+                    );
+                }
+            }
+        }
         other => {
             bail!(
                 "unknown client action {other:?} \
-                 (health|attention|model-forward|generate|stats|metrics|trace|check-prometheus|shutdown)"
+                 (health|readyz|attention|model-forward|generate|stats|metrics|trace|logs|\
+                  profile|check-prometheus|shutdown)"
             )
         }
     }
@@ -1134,6 +1244,7 @@ serving (one typed-request front; see docs/PROTOCOL.md + docs/SERVING.md):
   serve --listen ADDR [--replicas N] [--addr-file F] [--max-inflight C]
         [--task T [--seq-len N] [--dim D] [--heads H] [--depth L]]
         [--checkpoint F] [--binding K] [--trace-ring N]
+        [--log-level debug|info|warn|error]
            network front: TCP HTTP/1.1 + JSON over the typed service API
            (/v1/attention, /v1/model/forward, /v1/generate, /v1/bind,
            /v1/stats, /v1/metrics, ...); --replicas N routes across N
@@ -1142,19 +1253,26 @@ serving (one typed-request front; see docs/PROTOCOL.md + docs/SERVING.md):
            ring (default 256, floor 16); runs until a client posts
            /v1/admin/shutdown
   client (--addr HOST:PORT | --addr-file F)
-         <health|attention|model-forward|generate|stats|metrics|trace|
-          check-prometheus|shutdown>
+         <health|readyz|attention|model-forward|generate|stats|metrics|
+          trace|logs|profile|check-prometheus|shutdown>
          [--retries N] [--n N] [--dim D] [--batch B] [--valid V]
-         [--task T] [--binding K] [--limit N] [--min-us T]
+         [--task T] [--binding K] [--limit N] [--min-us T] [--level L] [--json]
          [--prompt T1,T2,...] [--max-tokens N] [--kernel attn.mita|attn.dense]
            loopback wire client: sends one typed request and asserts the
            response shape (non-zero exit on protocol errors); metrics
-           asserts every documented /v1/metrics series is present;
+           asserts every documented /v1/metrics series is present and
+           prints build info, uptime, SLO burn rates, and per-replica
+           health; readyz probes GET /v1/readyz (exit follows the HTTP
+           status: 200 while any replica can route, else 503);
            generate streams /v1/generate decode steps (chunked transfer
            encoding) and checks the terminal response against the
            stream (docs/DECODE.md);
            trace prints GET /v1/trace stage spans + per-block profiles
-           ([--limit N] [--min-us T]; docs/OBSERVABILITY.md);
+           ([--limit N] [--min-us T] [--json]; docs/OBSERVABILITY.md);
+           logs prints the GET /v1/logs structured event journal
+           ([--limit N] [--level debug|info|warn|error] [--json]);
+           profile prints the GET /v1/profile op-level timing tree
+           ([--json]);
            check-prometheus validates /v1/metrics?format=prometheus
            with the in-repo grammar + coverage checker;
            --retries N retries overloaded sheds per the server's

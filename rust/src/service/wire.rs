@@ -47,6 +47,18 @@ pub const EP_METRICS: &str = "/v1/metrics";
 pub const EP_TRACE: &str = "/v1/trace";
 /// Liveness probe (handled by the server, no engine round-trip).
 pub const EP_HEALTH: &str = "/v1/healthz";
+/// Readiness probe (`GET`-only): distinct from [`EP_HEALTH`] — liveness
+/// says the process answers, readiness says the replica fleet can serve
+/// (503 once every replica is unhealthy). Like [`EP_TRACE`], not in
+/// [`known_endpoints`]: it never reaches the engine.
+pub const EP_READYZ: &str = "/v1/readyz";
+/// Continuous op-level profile (`GET`-only): the hierarchical kernel
+/// timing tree from [`crate::kernels::profile`]. Not in [`known_endpoints`].
+pub const EP_PROFILE: &str = "/v1/profile";
+/// Structured event journal (`GET`-only; query params `limit` and
+/// `level`), answered from the process [`crate::coordinator::log`]
+/// ring. Not in [`known_endpoints`].
+pub const EP_LOGS: &str = "/v1/logs";
 /// Clean-shutdown endpoint (handled by the server).
 pub const EP_SHUTDOWN: &str = "/v1/admin/shutdown";
 
@@ -620,10 +632,44 @@ fn metrics_to_json(m: &MetricsSnapshot) -> Value {
                 ("max_inflight", Value::num(r.max_inflight as f64)),
                 ("overflow_fraction", Value::num(r.overflow_fraction)),
                 ("load_imbalance", Value::num(r.load_imbalance)),
+                ("replica_health", Value::str(r.health.as_str())),
+                ("health_faults", Value::num(r.health_faults as f64)),
+                ("health_results", Value::num(r.health_results as f64)),
                 ("blocks", blocks),
             ])
         })
         .collect();
+    // Op-series entries reuse the Prometheus series names as JSON keys,
+    // so the wire payload and the text exposition name every counter
+    // identically (the METRIC_NAMES contract).
+    let ops = Value::Arr(
+        m.ops
+            .iter()
+            .map(|o| {
+                Value::obj([
+                    ("op", Value::str(o.op.as_str())),
+                    ("op_time_us_total", Value::num(o.time_us)),
+                    ("op_calls_total", Value::num(o.calls as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let slo_windows = Value::Arr(
+        m.slo
+            .windows
+            .iter()
+            .map(|w| {
+                Value::obj([
+                    ("window", Value::str(w.window.as_str())),
+                    ("requests", Value::num(w.requests as f64)),
+                    ("errors", Value::num(w.errors as f64)),
+                    ("slow", Value::num(w.slow as f64)),
+                    ("slo_error_burn_rate", Value::num(w.error_burn_rate)),
+                    ("slo_latency_burn_rate", Value::num(w.latency_burn_rate)),
+                ])
+            })
+            .collect(),
+    );
     Value::obj([
         ("serve_requests_total", Value::num(m.serve_requests_total as f64)),
         ("serve_shed_total", Value::num(m.serve_shed_total as f64)),
@@ -633,6 +679,22 @@ fn metrics_to_json(m: &MetricsSnapshot) -> Value {
         ("prefill_tokens_total", Value::num(m.prefill_tokens_total as f64)),
         ("decode_step_latency_us", histogram_to_json(&m.decode_step_latency_us)),
         ("replicas", Value::Arr(replicas)),
+        ("ops", ops),
+        (
+            "slo",
+            Value::obj([
+                ("target_ms", Value::num(m.slo.target_ms)),
+                ("windows", slo_windows),
+            ]),
+        ),
+        ("uptime_seconds", Value::num(m.uptime_seconds)),
+        (
+            "serve_build_info",
+            Value::obj([
+                ("version", Value::str(m.build_version.as_str())),
+                ("git", Value::str(m.build_git.as_str())),
+            ]),
+        ),
         ("simd_lane", Value::str(m.simd_lane.as_str())),
     ])
 }
@@ -662,6 +724,26 @@ fn metrics_from_json(v: &Value) -> ServiceResult<MetricsSnapshot> {
                     .and_then(|x| x.as_f64())
                     .map_err(bad)?,
                 load_imbalance: r.get("load_imbalance").and_then(|x| x.as_f64()).map_err(bad)?,
+                // Health fields are absent in pre-observability payloads;
+                // an old replica parses as an unjudged (healthy) one.
+                health: r
+                    .opt("replica_health")
+                    .map(|x| x.as_str().map(str::to_string))
+                    .transpose()
+                    .map_err(bad)?
+                    .unwrap_or_else(|| "healthy".to_string()),
+                health_faults: r
+                    .opt("health_faults")
+                    .map(|x| x.as_usize())
+                    .transpose()
+                    .map_err(bad)?
+                    .unwrap_or(0) as u64,
+                health_results: r
+                    .opt("health_results")
+                    .map(|x| x.as_usize())
+                    .transpose()
+                    .map_err(bad)?
+                    .unwrap_or(0) as u64,
                 // Absent in pre-tracing payloads; parses as empty.
                 blocks: r
                     .opt("blocks")
@@ -731,6 +813,87 @@ fn metrics_from_json(v: &Value) -> ServiceResult<MetricsSnapshot> {
             .transpose()?
             .unwrap_or_default(),
         replicas,
+        // Everything below is absent in pre-observability payloads and
+        // parses as zeroed/empty telemetry.
+        ops: v
+            .opt("ops")
+            .map(|os| -> ServiceResult<Vec<crate::kernels::profile::OpSeries>> {
+                os.as_arr()
+                    .map_err(bad)?
+                    .iter()
+                    .map(|o| {
+                        Ok(crate::kernels::profile::OpSeries {
+                            op: o.get("op").and_then(|x| x.as_str()).map_err(bad)?.to_string(),
+                            time_us: o
+                                .get("op_time_us_total")
+                                .and_then(|x| x.as_f64())
+                                .map_err(bad)?,
+                            calls: o
+                                .get("op_calls_total")
+                                .and_then(|x| x.as_usize())
+                                .map_err(bad)? as u64,
+                        })
+                    })
+                    .collect()
+            })
+            .transpose()?
+            .unwrap_or_default(),
+        slo: v
+            .opt("slo")
+            .map(|s| -> ServiceResult<crate::coordinator::health::SloSnapshot> {
+                Ok(crate::coordinator::health::SloSnapshot {
+                    target_ms: s.get("target_ms").and_then(|x| x.as_f64()).map_err(bad)?,
+                    windows: s
+                        .get("windows")
+                        .and_then(|w| w.as_arr())
+                        .map_err(bad)?
+                        .iter()
+                        .map(|w| {
+                            Ok(crate::coordinator::health::SloWindowSnapshot {
+                                window: w
+                                    .get("window")
+                                    .and_then(|x| x.as_str())
+                                    .map_err(bad)?
+                                    .to_string(),
+                                requests: w
+                                    .get("requests")
+                                    .and_then(|x| x.as_usize())
+                                    .map_err(bad)? as u64,
+                                errors: w.get("errors").and_then(|x| x.as_usize()).map_err(bad)?
+                                    as u64,
+                                slow: w.get("slow").and_then(|x| x.as_usize()).map_err(bad)?
+                                    as u64,
+                                error_burn_rate: w
+                                    .get("slo_error_burn_rate")
+                                    .and_then(|x| x.as_f64())
+                                    .map_err(bad)?,
+                                latency_burn_rate: w
+                                    .get("slo_latency_burn_rate")
+                                    .and_then(|x| x.as_f64())
+                                    .map_err(bad)?,
+                            })
+                        })
+                        .collect::<ServiceResult<Vec<_>>>()?,
+                })
+            })
+            .transpose()?
+            .unwrap_or_default(),
+        uptime_seconds: v
+            .opt("uptime_seconds")
+            .map(|x| x.as_f64())
+            .transpose()
+            .map_err(bad)?
+            .unwrap_or(0.0),
+        build_version: v
+            .opt("serve_build_info")
+            .and_then(|b| b.opt("version"))
+            .and_then(|x| x.as_str().ok().map(str::to_string))
+            .unwrap_or_default(),
+        build_git: v
+            .opt("serve_build_info")
+            .and_then(|b| b.opt("git"))
+            .and_then(|x| x.as_str().ok().map(str::to_string))
+            .unwrap_or_default(),
         simd_lane: v.get("simd_lane").and_then(|x| x.as_str()).map_err(bad)?.to_string(),
     })
 }
@@ -1348,6 +1511,9 @@ mod tests {
                     max_inflight: 8,
                     overflow_fraction: 0.25,
                     load_imbalance: 1.5,
+                    health: "degraded".into(),
+                    health_faults: 3,
+                    health_results: 9,
                     blocks: vec![crate::coordinator::metrics::BlockSeries {
                         block: 0,
                         overflow_fraction: 0.125,
@@ -1362,9 +1528,48 @@ mod tests {
                     max_inflight: 8,
                     overflow_fraction: 0.0,
                     load_imbalance: 1.0,
+                    health: "healthy".into(),
+                    health_faults: 0,
+                    health_results: 5,
                     blocks: vec![],
                 },
             ],
+            ops: vec![
+                crate::kernels::profile::OpSeries {
+                    op: "mita.landmarks".into(),
+                    time_us: 42.5,
+                    calls: 7,
+                },
+                crate::kernels::profile::OpSeries {
+                    op: "dense.attend".into(),
+                    time_us: 11.0,
+                    calls: 2,
+                },
+            ],
+            slo: crate::coordinator::health::SloSnapshot {
+                target_ms: 250.0,
+                windows: vec![
+                    crate::coordinator::health::SloWindowSnapshot {
+                        window: "1m".into(),
+                        requests: 10,
+                        errors: 1,
+                        slow: 0,
+                        error_burn_rate: 10.0,
+                        latency_burn_rate: 0.0,
+                    },
+                    crate::coordinator::health::SloWindowSnapshot {
+                        window: "5m".into(),
+                        requests: 40,
+                        errors: 1,
+                        slow: 2,
+                        error_burn_rate: 2.5,
+                        latency_burn_rate: 5.0,
+                    },
+                ],
+            },
+            uptime_seconds: 33.5,
+            build_version: "0.1.0".into(),
+            build_git: "abc123".into(),
             simd_lane: "avx2".into(),
         };
         let body = encode_response(&ServiceResponse::Metrics(snap.clone()));
@@ -1377,5 +1582,23 @@ mod tests {
             ServiceResponse::Metrics(got) => assert_eq!(got, snap),
             other => panic!("wrong class {:?}", other.kind()),
         }
+
+        // A pre-observability payload — no health, ops, slo, uptime, or
+        // build-info keys — still parses, with the new telemetry zeroed.
+        let old = r#"{"serve_requests_total": 1, "serve_shed_total": 0,
+            "serve_errors_total": 0,
+            "request_latency_us": {"count": 0, "sum_us": 0, "max_us": 0,
+                "p50_us": 0, "p95_us": 0, "p99_us": 0, "buckets": []},
+            "replicas": [{"replica": 0, "replica_requests_total": 1,
+                "replica_queue_depth": 0, "max_inflight": 4,
+                "overflow_fraction": 0, "load_imbalance": 1}],
+            "simd_lane": "scalar"}"#;
+        let got = metrics_from_json(&Value::parse(old).unwrap()).unwrap();
+        assert_eq!(got.replicas[0].health, "healthy");
+        assert_eq!((got.replicas[0].health_faults, got.replicas[0].health_results), (0, 0));
+        assert!(got.ops.is_empty());
+        assert!(got.slo.windows.is_empty());
+        assert_eq!(got.uptime_seconds, 0.0);
+        assert_eq!((got.build_version.as_str(), got.build_git.as_str()), ("", ""));
     }
 }

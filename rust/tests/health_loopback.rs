@@ -1,0 +1,258 @@
+//! Health-aware routing + observability over the full TCP path
+//! (docs/OBSERVABILITY.md):
+//!
+//! - killing one replica of two drains routing to the survivor: every
+//!   request still succeeds, the dead replica's fault window flips its
+//!   `replica_health` gauge to `unhealthy`, and per-replica request
+//!   counters show the drain;
+//! - `GET /v1/readyz` stays 200 while any replica can route, reporting
+//!   `degraded` rather than `ready`;
+//! - the structured event journal records the `replica.error` /
+//!   `replica.health` decision points behind `GET /v1/logs`;
+//! - the continuous profiler shows nonzero `op_time_us_total` for every
+//!   MiTA kernel phase once a model forward and an overflowing
+//!   attention call have run, via `/v1/metrics` and `/v1/profile`;
+//! - every new Prometheus series passes the in-repo exposition checker.
+//!
+//! State-machine edges (degraded thresholds, window recycling) are
+//! pinned by the `health.rs` unit tests; this file proves the wiring.
+
+use std::sync::Arc;
+
+use mita::coordinator::health::HEALTH_MIN_SAMPLES;
+use mita::coordinator::{
+    check_prometheus_text, NetClient, NetServer, NetServerConfig, ReplicaPool, ReplicaPoolConfig,
+};
+use mita::data::lra;
+use mita::data::rng::Rng;
+use mita::kernels::profile::{self, MITA_PHASES};
+use mita::kernels::{mita_attention, MitaKernelConfig, MitaStats, Workspace};
+use mita::model::{ModelConfig, OP_MODEL_INIT};
+use mita::runtime::{BackendSpec, NativeAttnConfig, Tensor};
+use mita::service::{KernelId, QkvBatch, ServiceRequest};
+use mita::util::json::Value;
+
+const N: usize = 32;
+const DIM: usize = 16;
+const DEPTH: usize = 2;
+
+fn attn_request(seed: u64) -> ServiceRequest {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..3 * N * DIM).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    ServiceRequest::Attention {
+        op: KernelId::Mita,
+        qkv: QkvBatch::fused(Tensor::f32(&[1, 3, N, DIM], data).unwrap()).unwrap(),
+        valid_rows: None,
+    }
+}
+
+/// N model-capable replicas behind the network front, model bound on all.
+fn spawn_loopback(
+    replicas: usize,
+) -> (Arc<ReplicaPool>, NetClient, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let task = lra::by_name("listops", N, 16, 7);
+    let mcfg = ModelConfig::for_task(task.as_ref(), DIM, 2, DEPTH, "attn.mita");
+    let attn = NativeAttnConfig::for_shape(N, DIM, 2).with_model(mcfg);
+    let cfg = ReplicaPoolConfig {
+        replicas,
+        max_inflight: 8,
+        retry_after_ms: 1,
+        ..Default::default()
+    };
+    let pool = Arc::new(ReplicaPool::spawn(BackendSpec::Native(attn), vec![], cfg).unwrap());
+    pool.call(ServiceRequest::BindInit {
+        binding: "model".into(),
+        init_op: OP_MODEL_INIT.to_string(),
+        seed: 7,
+        param_count: 0,
+    })
+    .unwrap();
+    let cfg = NetServerConfig { addr: "127.0.0.1:0".into(), max_inflight: 16 };
+    let server = NetServer::bind(pool.clone(), &cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let join = std::thread::spawn(move || server.run());
+    (pool, NetClient::new(addr.to_string()), join)
+}
+
+fn shutdown(pool: Arc<ReplicaPool>) {
+    if let Ok(pool) = Arc::try_unwrap(pool) {
+        pool.shutdown();
+    }
+}
+
+#[test]
+fn dead_replica_drains_routing_and_readyz_reports_degraded() {
+    let (pool, client, join) = spawn_loopback(2);
+
+    // Fresh pool: ready, all replicas healthy.
+    let (status, body) = client.readyz_raw().unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "ready");
+    assert_eq!(v.get("replicas_healthy").unwrap().as_f64().unwrap() as usize, 2);
+
+    // Kill replica 0's engine out from under the pool, then drive enough
+    // requests that its fault window must cross the unhealthy threshold.
+    pool.kill_replica(0);
+    let before = client.metrics().unwrap();
+    let total = 8usize;
+    for i in 0..total {
+        client.call(&attn_request(i as u64)).unwrap();
+    }
+    let after = client.metrics().unwrap();
+
+    // Every request succeeded despite the dead replica: retries are
+    // internal, nothing shed, nothing surfaced as an error.
+    assert_eq!(
+        after.serve_requests_total - before.serve_requests_total,
+        total as u64,
+        "all requests served"
+    );
+    assert_eq!(after.serve_errors_total, before.serve_errors_total, "no client-visible errors");
+    assert_eq!(after.serve_shed_total, before.serve_shed_total, "nothing shed");
+
+    // The drain: replica 0 completed nothing new, replica 1 took it all.
+    let delta = |r: usize| {
+        after.replicas[r].replica_requests_total - before.replicas[r].replica_requests_total
+    };
+    assert_eq!(delta(0), 0, "dead replica completes nothing");
+    assert_eq!(delta(1), total as u64, "survivor absorbs the full load");
+
+    // Health accounting: the failed submits scored as faults until the
+    // state machine flipped to unhealthy, after which routing skips it.
+    let r0 = &after.replicas[0];
+    assert_eq!(r0.health, "unhealthy", "fault window crossed the threshold");
+    assert!(
+        r0.health_faults >= HEALTH_MIN_SAMPLES as u64,
+        "at least {HEALTH_MIN_SAMPLES} faults recorded, got {}",
+        r0.health_faults
+    );
+    assert_eq!(after.replicas[1].health, "healthy");
+
+    // Prometheus surface: the gauge flipped and the whole exposition —
+    // including every series added alongside health — still checks out.
+    let text = client.metrics_prometheus().unwrap();
+    assert!(
+        text.contains("replica_health{replica=\"0\",state=\"unhealthy\"} 1"),
+        "{text}"
+    );
+    assert!(
+        text.contains("replica_health{replica=\"1\",state=\"healthy\"} 1"),
+        "{text}"
+    );
+    check_prometheus_text(&text).expect("exposition stays scrapeable");
+
+    // Readyz: degraded but still ready — one replica can route.
+    let (status, body) = client.readyz_raw().unwrap();
+    assert_eq!(status, 200, "degraded pool is still ready: {body}");
+    let v = Value::parse(&body).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str().unwrap(), "degraded");
+    assert!(v.get("ok").unwrap().as_bool().unwrap());
+    assert_eq!(v.get("replicas_healthy").unwrap().as_f64().unwrap() as usize, 1);
+    assert_eq!(v.get("replicas_unhealthy").unwrap().as_f64().unwrap() as usize, 1);
+
+    // The journal recorded the decision points: failed submits and the
+    // health transition (the journal is process-global, so assert
+    // presence, not counts).
+    let logs = Value::parse(&client.logs_raw(None, Some("warn")).unwrap()).unwrap();
+    let events = logs.get("events").unwrap().as_arr().unwrap();
+    let has = |name: &str| {
+        events.iter().any(|e| e.get("event").unwrap().as_str().unwrap() == name)
+    };
+    assert!(has("replica.error"), "failed submits are journaled: {logs}");
+    assert!(has("replica.health"), "health transitions are journaled: {logs}");
+    let transition = events
+        .iter()
+        .find(|e| e.get("event").unwrap().as_str().unwrap() == "replica.health")
+        .unwrap();
+    assert!(
+        transition.get("message").unwrap().as_str().unwrap().contains("unhealthy"),
+        "{logs}"
+    );
+    // `level=error` filters the warn-level transition back out.
+    let errors_only = Value::parse(&client.logs_raw(None, Some("error")).unwrap()).unwrap();
+    assert!(errors_only
+        .get("events")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .all(|e| e.get("level").unwrap().as_str().unwrap() == "error"));
+
+    client.shutdown().unwrap();
+    join.join().unwrap().unwrap();
+    shutdown(pool);
+}
+
+#[test]
+fn profile_probe_covers_every_mita_phase() {
+    let (pool, client, join) = spawn_loopback(1);
+
+    // A model forward through the server exercises the routed MiTA
+    // phases (landmarks / scores / topk / route / pack / attend)...
+    let task = lra::by_name("listops", N, 16, 7);
+    let (tokens, _) = task.sample(mita::data::Split::Val, 0);
+    let tokens = Tensor::i32(&[1, N], tokens).unwrap();
+    client
+        .call(&ServiceRequest::ModelForward { binding: "model".into(), tokens, valid_rows: None })
+        .unwrap();
+
+    // ...and the overflow fallback phase is only recorded when overflow
+    // actually happens, so force it: identical queries all route to one
+    // expert with cap_factor 1 (the profiler is process-global, so this
+    // in-process call lands in the same accumulators the server exports).
+    let (n, d) = (24, 4);
+    let q = vec![0.7f32; n * d];
+    let mut rng = Rng::new(9);
+    let k: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let v: Vec<f32> = (0..n * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let cfg = MitaKernelConfig { m: 4, k: 8, cap_factor: 1, block_q: 1 };
+    let mut ws = Workspace::new();
+    let mut out = vec![0.0f32; n * d];
+    let mut stats = MitaStats::default();
+    mita_attention(&q, &k, &v, n, d, &cfg, &mut ws, &mut out, &mut stats);
+    assert!(stats.overflow > 0, "probe must exercise the overflow path");
+
+    // Every MiTA kernel phase is now nonzero — in the process snapshot,
+    // in the /v1/metrics op series, and in the /v1/profile tree.
+    let snap = profile::snapshot();
+    for phase in MITA_PHASES {
+        let s = snap.iter().find(|s| s.op == phase).expect("phase present in snapshot");
+        assert!(s.calls > 0, "{phase} has calls");
+        assert!(s.time_us > 0.0, "{phase} accumulated time");
+    }
+    let m = client.metrics().unwrap();
+    for phase in MITA_PHASES {
+        let s = m.ops.iter().find(|s| s.op == phase).expect("phase present in /v1/metrics");
+        assert!(s.calls > 0 && s.time_us > 0.0, "{phase} nonzero over the wire");
+    }
+    let body = Value::parse(&client.profile_raw().unwrap()).unwrap();
+    assert!(body.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    let mita_group = body.get("profile").unwrap().get("mita").unwrap();
+    assert!(mita_group.get("total_us").unwrap().as_f64().unwrap() > 0.0);
+    for phase in MITA_PHASES {
+        let leaf = phase.strip_prefix("mita.").unwrap();
+        let node = mita_group.get(leaf).unwrap();
+        assert!(node.get("calls").unwrap().as_f64().unwrap() > 0.0, "{phase} in tree");
+        assert!(node.get("time_us").unwrap().as_f64().unwrap() > 0.0, "{phase} in tree");
+        assert!(node.get("mean_us").unwrap().as_f64().unwrap() > 0.0, "{phase} in tree");
+    }
+
+    // The decode phases exist in the exported series (zero until a
+    // generate request runs; presence is the contract here).
+    for op in ["decode.prefill", "decode.step"] {
+        assert!(m.ops.iter().any(|s| s.op == op), "{op} series exported");
+    }
+
+    // And the Prometheus rendering of the same series stays scrapeable.
+    let text = client.metrics_prometheus().unwrap();
+    for phase in MITA_PHASES {
+        assert!(text.contains(&format!("op_time_us_total{{op=\"{phase}\"}}")), "{text}");
+        assert!(text.contains(&format!("op_calls_total{{op=\"{phase}\"}}")), "{text}");
+    }
+    check_prometheus_text(&text).expect("exposition stays scrapeable");
+
+    client.shutdown().unwrap();
+    join.join().unwrap().unwrap();
+    shutdown(pool);
+}

@@ -1,12 +1,13 @@
 #!/usr/bin/env bash
-# Record a perf-trajectory point: run the three quick native benches
+# Record a perf-trajectory point: run the four quick native benches
 # under the forced-scalar SIMD lane and then under the auto lane, and
-# append all six runs (bench × lane) to the committed trajectory files
+# append all eight runs (bench × lane) to the committed trajectory files
 # at the repo root:
 #
 #   BENCH_attn_native.json    <- rust/benches/attn_microbench.rs
 #   BENCH_model_native.json   <- rust/benches/model_native.rs
 #   BENCH_decode_native.json  <- rust/benches/decode_native.rs
+#   BENCH_load_native.json    <- rust/benches/load_native.rs
 #
 # Each trajectory file is {"bench": ..., "entries": [...]} where every
 # entry is exactly the JSON one bench run wrote (its "simd_lane" field
@@ -75,8 +76,13 @@ for lane in scalar auto; do
     echo "== decode_native --quick (MITA_SIMD=$lane) =="
     (cd rust && MITA_SIMD=$lane cargo bench --bench decode_native -- --quick)
     append rust/BENCH_decode_native.json BENCH_decode_native.json "$lane"
+
+    echo "== load_native --quick (MITA_SIMD=$lane) =="
+    (cd rust && MITA_SIMD=$lane cargo bench --bench load_native -- --quick)
+    append rust/BENCH_load_native.json BENCH_load_native.json "$lane"
 done
 
 echo
 echo "Trajectory updated; review and commit BENCH_attn_native.json,"
-echo "BENCH_model_native.json, and BENCH_decode_native.json at the repo root."
+echo "BENCH_model_native.json, BENCH_decode_native.json, and"
+echo "BENCH_load_native.json at the repo root."
